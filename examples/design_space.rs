@@ -1,0 +1,80 @@
+//! Design-space exploration walkthrough (§V.B): sweep the (n, m, N, K)
+//! architecture space, reproduce the paper's finding that (5, 50, 50, 10)
+//! is the sweet spot, and show *why* n stalls at 5 (dense kernel vectors
+//! never exceed ~5 entries after sparsification).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use sonic::model::{LayerKind, ModelDesc};
+use sonic::sim::dse::{evaluate, explore, DseGrid};
+use sonic::util::bench::Table;
+use sonic::util::si;
+
+fn main() {
+    let models: Vec<ModelDesc> = ["mnist", "cifar10", "stl10", "svhn"]
+        .iter()
+        .map(|n| ModelDesc::load_or_builtin(n))
+        .collect();
+
+    // 1) Why n = 5: compressed kernel-vector lengths across models.
+    println!("== compressed CONV kernel-vector granularity ==");
+    let mut t = Table::new(&["model", "layer", "k*k*Cin", "sparsity", "dense len", "chunks @n=5"]);
+    for m in &models {
+        for l in &m.layers {
+            if let LayerKind::Conv { kernel, in_ch, .. } = l.kind {
+                let kvol = kernel * kernel * in_ch;
+                let dense = ((kvol as f64) * (1.0 - l.weight_sparsity)).ceil() as usize;
+                // per-2D-slice granularity: kvol per input channel = k*k
+                let per_slice = ((kernel * kernel) as f64 * (1.0 - l.weight_sparsity)).ceil();
+                t.row(&[
+                    m.name.clone(),
+                    l.name.clone(),
+                    kvol.to_string(),
+                    format!("{:.0}%", l.weight_sparsity * 100.0),
+                    format!("{dense} ({per_slice}/slice)"),
+                    dense.div_ceil(5).to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("per-slice dense granularity stays <= ~5 -> n = 5 suffices (paper §V.B)\n");
+
+    // 2) The sweep.
+    println!("== (n, m, N, K) sweep, geometric-mean FPS/W over 4 models ==");
+    let grid = DseGrid {
+        n: vec![3, 5, 8, 10],
+        m: vec![25, 50, 100],
+        n_conv: vec![25, 50, 100],
+        k_fc: vec![5, 10, 20],
+    };
+    let points = explore(&models, Some(grid));
+    let mut t = Table::new(&["rank", "(n,m,N,K)", "FPS/W", "EPB", "power"]);
+    for (i, p) in points.iter().take(10).enumerate() {
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{:?}", p.geometry()),
+            format!("{:.1}", p.gm_fps_per_watt),
+            si(p.gm_epb, "J/b"),
+            format!("{:.1} W", p.mean_power_w),
+        ]);
+    }
+    t.print();
+
+    // 3) Slice through the space at the paper's point.
+    println!("\n== slices through (5, 50, 50, 10) ==");
+    for (label, pts) in [
+        ("vary n", vec![(3, 50, 50, 10), (5, 50, 50, 10), (8, 50, 50, 10), (10, 50, 50, 10)]),
+        ("vary m", vec![(5, 25, 50, 10), (5, 50, 50, 10), (5, 100, 50, 10)]),
+        ("vary N", vec![(5, 50, 25, 10), (5, 50, 50, 10), (5, 50, 100, 10)]),
+        ("vary K", vec![(5, 50, 50, 5), (5, 50, 50, 10), (5, 50, 50, 20)]),
+    ] {
+        print!("{label:8}: ");
+        for (n, m, nn, k) in pts {
+            let p = evaluate(&models, n, m, nn, k);
+            print!("({n},{m},{nn},{k})={:.1}  ", p.gm_fps_per_watt);
+        }
+        println!();
+    }
+    println!("\npaper best (5, 50, 50, 10); top of our sweep: {:?}", points[0].geometry());
+}

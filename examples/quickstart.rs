@@ -1,0 +1,54 @@
+//! Quickstart: simulate one inference of each Table-1 model on the SONIC
+//! accelerator and print the headline metrics, then (when `make artifacts`
+//! has run) push a real input through the AOT-compiled PJRT artifact.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sonic::arch::SonicConfig;
+use sonic::coordinator::serve::InferenceBackend;
+use sonic::model::ModelDesc;
+use sonic::runtime::PjrtBackend;
+use sonic::sim::simulate;
+use sonic::util::rng::Rng;
+use sonic::util::si;
+
+fn main() -> anyhow::Result<()> {
+    // 1) Analytic accelerator model: no artifacts required.
+    println!("SONIC @ (n, m, N, K) = (5, 50, 50, 10) — paper-best configuration\n");
+    let cfg = SonicConfig::paper_best();
+    for name in ["mnist", "cifar10", "stl10", "svhn"] {
+        let desc = ModelDesc::load_or_builtin(name);
+        let s = simulate(&desc, &cfg);
+        println!(
+            "{name:8}: latency {:>10}  power {:>8}  {:>9.0} FPS  {:>7.1} FPS/W  EPB {}",
+            si(s.latency_s, "s"),
+            si(s.avg_power_w, "W"),
+            s.fps,
+            s.fps_per_watt,
+            si(s.epb_j, "J/b"),
+        );
+    }
+
+    // 2) Functional inference through the PJRT runtime (AOT artifacts).
+    let art = sonic::artifacts_dir();
+    if !art.join("manifest.json").is_file() {
+        println!("\n(no artifacts yet — run `make artifacts` to enable the PJRT demo)");
+        return Ok(());
+    }
+    println!("\nPJRT functional check (mnist):");
+    let backend = PjrtBackend::load(&art, "mnist")?;
+    let mut rng = Rng::new(1);
+    let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(backend.input_len())).collect();
+    let outs = backend.infer_batch(&inputs)?;
+    for (i, o) in outs.iter().enumerate() {
+        let cls = o
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        println!("  input {i} -> class {cls} ({} logits)", o.len());
+    }
+    println!("done — Python never ran on this path.");
+    Ok(())
+}

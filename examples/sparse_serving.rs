@@ -1,0 +1,102 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload): load the
+//! AOT-compiled model trained by `make artifacts`, serve a Poisson stream
+//! of batched requests through the dynamic-batching router, and report
+//! wall-clock latency/throughput alongside the photonic accelerator's
+//! simulated FPS / FPS/W / EPB.
+//!
+//! Run: `cargo run --release --example sparse_serving -- [model] [n_requests]`
+//! (defaults: mnist, 96 requests at ~400 req/s)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sonic::arch::SonicConfig;
+use sonic::coordinator::serve::{InferenceBackend, Router, ServeConfig, ServeMetrics};
+use sonic::model::ModelDesc;
+use sonic::runtime::PjrtBackend;
+use sonic::util::rng::Rng;
+use sonic::util::si;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("mnist").to_string();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
+    let rate = 400.0; // req/s Poisson arrivals
+
+    let art = sonic::artifacts_dir();
+    anyhow::ensure!(
+        art.join("manifest.json").is_file(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let backend = Arc::new(PjrtBackend::load(&art, &model)?);
+    let desc = ModelDesc::load_or_builtin(&model);
+    println!(
+        "serving `{model}` ({} layers, {} params, {:.1}% sparsity) — {n_requests} requests @ ~{rate}/s",
+        desc.layers.len(),
+        desc.total_params,
+        (1.0 - desc.surviving_params as f64 / desc.total_params as f64) * 100.0,
+    );
+
+    let router = Router::new(
+        backend.clone(),
+        desc,
+        SonicConfig::paper_best(),
+        ServeConfig {
+            max_batch: backend.batch_size().max(4),
+            batch_window: Duration::from_millis(3),
+            queue_cap: 1024,
+        },
+    );
+
+    // Producer: Poisson arrivals of synthetic frames.
+    let producer = {
+        let router = Arc::clone(&router);
+        let per = backend.input_len();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(7);
+            for _ in 0..n_requests {
+                std::thread::sleep(Duration::from_secs_f64(rng.exp(rate).min(0.05)));
+                router.submit(rng.normal_vec(per));
+            }
+        })
+    };
+
+    // Consumer: drain batches until all requests completed.
+    let mut metrics = ServeMetrics::default();
+    let t0 = Instant::now();
+    let mut class_histogram = [0usize; 10];
+    let mut done = 0;
+    while done < n_requests {
+        let completions = router.drain_batch(&mut metrics)?;
+        for c in &completions {
+            class_histogram[c.argmax.min(9)] += 1;
+        }
+        done += completions.len();
+    }
+    metrics.wall_elapsed = t0.elapsed();
+    producer.join().unwrap();
+
+    println!("\n== wall-clock (PJRT on CPU) ==");
+    println!("  completed        {}", metrics.completed);
+    println!(
+        "  batches          {} (mean size {:.2})",
+        metrics.batches,
+        metrics.mean_batch()
+    );
+    println!("  throughput       {:.1} req/s", metrics.wall_fps());
+    println!("  mean latency     {:?}", metrics.mean_wall_latency());
+    println!("  p100 latency     {:?}", metrics.max_wall);
+
+    println!("\n== photonic accelerator (simulated) ==");
+    println!("  FPS              {:.0}", metrics.photonic_fps());
+    println!("  FPS/W            {:.1}", metrics.photonic_fps_per_watt());
+    println!("  energy           {}", si(metrics.photonic_energy_j, "J"));
+    println!(
+        "  energy/request   {}",
+        si(metrics.photonic_energy_j / metrics.completed as f64, "J")
+    );
+
+    println!("\nclass histogram: {class_histogram:?}");
+    Ok(())
+}

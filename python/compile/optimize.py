@@ -1,0 +1,128 @@
+"""The full SONIC software pipeline (Table 3): train sparsity-aware, cluster,
+measure activation sparsity, export — for all four models.
+
+Also emits artifacts/table3.json (paper-vs-ours for Table 3) and
+artifacts/fig7_sparsity.json (layer-wise weight + activation sparsity).
+
+Invoked by `make artifacts` via aot.py, or standalone:
+    cd python && python -m compile.optimize --out ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from . import cluster, datasets, export, model, sparsify, train, zoo
+
+# Per-model training budgets tuned for a single-CPU build environment.
+# STL10 is 77.8M params — keep it to a handful of steps; its role in the
+# evaluation is structural (shapes + sparsity), see DESIGN.md §5.
+BUDGETS = dict(
+    mnist=dict(steps=220, batch=32),
+    cifar10=dict(steps=200, batch=32),
+    svhn=dict(steps=200, batch=32),
+    # 77.8M params on one CPU core: few steps, small batch, gentle lr
+    # (1e-3 diverges through the 33k-wide FC).
+    stl10=dict(steps=12, batch=4, lr=1e-4),
+)
+QUICK_BUDGETS = dict(
+    mnist=dict(steps=40, batch=16),
+    cifar10=dict(steps=40, batch=16),
+    svhn=dict(steps=40, batch=16),
+    stl10=dict(steps=3, batch=2),
+)
+
+
+def measure_act_sparsity(name: str, params, n_batches=2, batch=8):
+    """Per-layer input-activation zero fraction on the eval stream (Fig. 7)."""
+    folded = model.fold_bn(params)
+    spec = zoo.get(name)
+    names = spec.layer_names()
+    acc = jnp.zeros((len(names),))
+    n = 0
+    for x, y in datasets.eval_batches(name, n_batches, batch):
+        _, sp = model.forward_deploy(
+            name, folded, x, use_kernel=False, collect_act_sparsity=True
+        )
+        acc = acc + sp
+        n += 1
+    vals = acc / max(n, 1)
+    return {ln: float(v) for ln, v in zip(names, vals)}
+
+
+def optimize_model(name: str, outdir: Path, quick=False, log=print):
+    budget = (QUICK_BUDGETS if quick else BUDGETS)[name]
+    t3 = zoo.TABLE3[name]
+    plan = sparsify.default_plan(name)
+    log(f"[{name}] plan: prune {plan.n_layers_pruned} layers @ "
+        f"{[round(s, 3) for s in plan.sparsity]}")
+    cfg = train.TrainConfig(
+        steps=budget["steps"],
+        batch=budget["batch"],
+        lr=budget.get("lr", 1e-3),
+    )
+    params, masks, history = train.train(name, plan, cfg, log=log)
+
+    # Post-training weight clustering at the Table-3 cluster count.
+    params, books = cluster.cluster_params(params, t3["clusters"])
+
+    nb = 1 if name == "stl10" else 4
+    bs = 2 if name == "stl10" else 32
+    acc = train.evaluate(name, params, n_batches=nb, batch=bs)
+    act_sp = measure_act_sparsity(
+        name, params, n_batches=1, batch=2 if name == "stl10" else 8
+    )
+    export.export_model(outdir, name, params, t3["clusters"], acc, act_sp)
+    surv = sparsify.surviving_params(params)
+    log(f"[{name}] surviving={surv:,} (paper {t3['paper_params']:,}) "
+        f"acc={acc:.2f}% loss {history[0]:.3f}->{history[-1]:.3f}")
+    return dict(
+        model=name,
+        layers_pruned=plan.n_layers_pruned,
+        clusters=t3["clusters"],
+        surviving_params=surv,
+        accuracy_synthetic=acc,
+        loss_first=history[0],
+        loss_last=history[-1],
+        paper=t3,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training budgets (CI smoke)")
+    ap.add_argument("--models", nargs="*", default=list(zoo.MODELS))
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    rows = []
+    for name in args.models:
+        rows.append(optimize_model(name, outdir, quick=args.quick))
+    (outdir / "table3.json").write_text(json.dumps(rows, indent=1))
+
+    # Fig. 7 data: layer-wise weight + activation sparsity per model.
+    fig7 = {}
+    for name in args.models:
+        desc = json.loads((outdir / f"{name}.json").read_text())
+        fig7[name] = [
+            dict(
+                layer=l["name"],
+                weight_sparsity=l["weight_sparsity"],
+                act_sparsity=l["act_sparsity"],
+            )
+            for l in desc["layers"]
+        ]
+    (outdir / "fig7_sparsity.json").write_text(json.dumps(fig7, indent=1))
+    print("table3.json + fig7_sparsity.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Sparsity-aware training loop (§III.A): masked forward, L2 regularization,
+cubic sparsity ramp, Adam.  Build-time only — never on the request path.
+
+The loop is deliberately small-scale (single-CPU environment): a few hundred
+steps on the synthetic datasets is enough for loss to fall well below chance
+and accuracy to stabilize — the structural quantities SONIC's evaluation
+needs (layer-wise weight/activation sparsity, cluster codebooks) are fully
+exercised.  EXPERIMENTS.md reports these runs next to the paper's numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import datasets, model, sparsify, zoo
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 300
+    batch: int = 32
+    lr: float = 1e-3
+    l2: float = 1e-4  # paper: L2 regularization during sparsity-aware training
+    prune_begin_frac: float = 0.2  # cubic ramp start (fraction of steps)
+    prune_end_frac: float = 0.8
+    remask_every: int = 10
+    seed: int = 0
+    log_every: int = 25
+
+
+def _loss_fn(name, params, masks, x, y, l2):
+    masked = sparsify.apply_masks(params, masks)
+    logits, new_params = model.forward_train(name, masked, x)
+    ce = jnp.mean(
+        -jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y]
+    )
+    reg = sum(jnp.sum(p["w"] ** 2) for p in masked.values())
+    return ce + l2 * reg, (new_params, ce)
+
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**t)
+    vh = v / (1 - b2**t)
+    return lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def train(
+    name: str,
+    plan: sparsify.PrunePlan | None = None,
+    cfg: TrainConfig | None = None,
+    log: Callable[[str], None] = print,
+):
+    """Train a zoo model with sparsity-aware masking.
+
+    Returns (params, masks, loss_history).  params already has masks applied.
+    """
+    cfg = cfg or TrainConfig()
+    plan = plan or sparsify.default_plan(name)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, pk = jax.random.split(key)
+    params = model.init_params(name, pk)
+    masks = {ln: jnp.ones_like(params[ln]["w"]) for ln in plan.layer_names}
+    trainable = ("w", "b", "gamma", "beta")
+
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    grad_fn = jax.jit(
+        jax.grad(
+            lambda p, mk, x, y: _loss_fn(name, p, mk, x, y, cfg.l2),
+            has_aux=True,
+        ),
+        static_argnames=(),
+    )
+
+    begin = int(cfg.steps * cfg.prune_begin_frac)
+    end = int(cfg.steps * cfg.prune_end_frac)
+    history: List[float] = []
+    for step in range(1, cfg.steps + 1):
+        key, bk = jax.random.split(key)
+        x, y = datasets.make_batch(name, cfg.batch, bk)
+        grads, (new_params, ce) = grad_fn(params, masks, x, y)
+        history.append(float(ce))
+        # Adam on trainable leaves; masked weights get zero grad via mask.
+        for lname, p in params.items():
+            for f in trainable:
+                if f not in p:
+                    continue
+                g = grads[lname][f]
+                if f == "w" and lname in masks:
+                    g = g * masks[lname]
+                upd, opt_m[lname][f], opt_v[lname][f] = _adam_update(
+                    g, opt_m[lname][f], opt_v[lname][f], step, cfg.lr
+                )
+                p[f] = p[f] - upd
+            # adopt BN running stats from the forward pass
+            if "mu" in p:
+                p["mu"] = new_params[lname]["mu"]
+                p["var"] = new_params[lname]["var"]
+        if step % cfg.remask_every == 0 or step == end:
+            masks = sparsify.build_masks(params, plan, step, begin, end)
+        if step % cfg.log_every == 0:
+            log(f"[{name}] step {step:4d}/{cfg.steps} ce={float(ce):.4f}")
+
+    params = sparsify.apply_masks(params, masks)
+    return params, masks, history
+
+
+def evaluate(name: str, params: Dict[str, dict], n_batches=8, batch=32,
+             use_kernel=False) -> float:
+    """Accuracy of (possibly sparsified/clustered) params on the eval stream."""
+    folded = model.fold_bn(params)
+    return model.accuracy(
+        name, folded, datasets.eval_batches(name, n_batches, batch),
+        use_kernel=use_kernel,
+    )

@@ -1,0 +1,61 @@
+"""AOT lowering: HLO-text interchange contract (shape, args, parseability)."""
+
+import json
+
+import pytest
+
+from compile import aot, zoo
+
+
+@pytest.fixture(scope="module")
+def vdu_units():
+    return aot.lower_vdu_units()
+
+
+class TestVduUnitLowering:
+    def test_both_units_present(self, vdu_units):
+        assert set(vdu_units) == {"vdu_fc", "vdu_conv"}
+
+    def test_hlo_text_structure(self, vdu_units):
+        text, specs = vdu_units["vdu_fc"]
+        # HLO text, not proto bytes: module header + ENTRY computation
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # 4 args: x, w, scale, bias
+        assert len(specs) == 4
+        assert specs[0]["shape"] == [1, 50]
+        assert specs[1]["shape"] == [50, 50]
+
+    def test_conv_unit_mxu_shape(self, vdu_units):
+        _, specs = vdu_units["vdu_conv"]
+        # batched n=5 granularity: 128 patches x (3*3*5)
+        assert specs[0]["shape"] == [128, 45]
+
+    def test_no_custom_calls(self, vdu_units):
+        """interpret=True must lower to plain HLO (no Mosaic custom-call),
+        otherwise the Rust CPU PJRT client cannot execute the artifact."""
+        for text, _ in vdu_units.values():
+            assert "custom-call" not in text or "Mosaic" not in text
+
+
+class TestModelLowering:
+    def test_mnist_lowering(self):
+        text, specs = aot.lower_model("mnist", 1)
+        assert text.startswith("HloModule")
+        # input + 4 tensors per layer
+        spec = zoo.get("mnist")
+        n_layers = spec.n_conv_layers + spec.n_fc_layers
+        assert len(specs) == 1 + 4 * n_layers
+        assert specs[0]["shape"] == [1, 28, 28, 1]
+        # weights are ARGUMENTS: HLO text stays small (no 1.5M-param consts)
+        assert len(text) < 2_000_000
+
+    def test_arg_order_contract(self):
+        _, specs = aot.lower_model("svhn", 2)
+        names = [s["name"] for s in specs]
+        assert names[0] == "input"
+        assert names[1] == "conv3x56.w"
+        assert names[2] == "conv3x56.b"
+        assert names[3] == "conv3x56.scale"
+        assert names[4] == "conv3x56.bias"
+        assert specs[0]["shape"][0] == 2  # batch honoured

@@ -1,0 +1,106 @@
+"""§III.B weight clustering: codebook size, zero preservation, DAC bits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import cluster, model, sparsify
+
+
+def rnd(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestDensityCentroids:
+    def test_count(self):
+        w = rnd(0, (1000,))
+        c = cluster.density_centroids(w, 16)
+        assert c.shape == (16,)
+
+    def test_centroids_within_range(self):
+        w = rnd(1, (500,))
+        c = cluster.density_centroids(w, 8)
+        assert float(jnp.min(c)) >= float(jnp.min(w))
+        assert float(jnp.max(c)) <= float(jnp.max(w))
+
+    def test_equal_mass_regions(self):
+        # For a uniform distribution, centroids should be ~evenly spaced.
+        w = jnp.linspace(-1, 1, 10001)
+        c = np.asarray(cluster.density_centroids(w, 10))
+        gaps = np.diff(np.sort(c))
+        assert gaps.std() / gaps.mean() < 0.05
+
+    def test_ignores_zeros(self):
+        # Density init must be built on *non-zero* weights only.
+        w = jnp.concatenate([jnp.zeros(900), jnp.linspace(1.0, 2.0, 100)])
+        c = np.asarray(cluster.density_centroids(w, 4))
+        assert (c >= 1.0).all()
+
+
+class TestClusterLayer:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(50, 400),
+        n_clusters=st.sampled_from([4, 16, 64]),
+        seed=st.integers(0, 10**6),
+    )
+    def test_unique_values_bounded(self, n, n_clusters, seed):
+        w = rnd(seed, (n,))
+        wq, book = cluster.cluster_layer(w, n_clusters)
+        uniq = np.unique(np.asarray(wq[wq != 0])).size
+        assert uniq <= n_clusters
+
+    def test_zeros_preserved(self):
+        w = rnd(2, (20, 20))
+        mask = sparsify.magnitude_mask(w, 0.6)
+        ws = w * mask
+        wq, _ = cluster.cluster_layer(ws, 16)
+        np.testing.assert_array_equal(np.asarray(wq == 0), np.asarray(ws == 0))
+
+    def test_shape_preserved(self):
+        w = rnd(3, (3, 3, 4, 8))
+        wq, _ = cluster.cluster_layer(w, 8)
+        assert wq.shape == w.shape
+
+    def test_snap_error_small(self):
+        # with 64 clusters the mean quantization error is small vs weight std
+        # (max error sits in the distribution tails where regions are wide)
+        w = rnd(4, (2000,))
+        wq, _ = cluster.cluster_layer(w, 64)
+        err = float(jnp.mean(jnp.abs(wq - w)))
+        assert err < 0.05 * float(jnp.std(w))
+
+    def test_all_zero_layer(self):
+        w = jnp.zeros((10, 10))
+        wq, book = cluster.cluster_layer(w, 16)
+        np.testing.assert_array_equal(np.asarray(wq), 0.0)
+
+
+class TestClusterParams:
+    def test_model_end_to_end(self):
+        params = model.init_params("svhn", jax.random.PRNGKey(0))
+        clustered, books = cluster.cluster_params(params, 16)
+        uniq = cluster.unique_weights(clustered)
+        assert all(v <= 16 for v in uniq.values())
+        # biases untouched (electronic path)
+        for ln in params:
+            np.testing.assert_array_equal(
+                np.asarray(params[ln]["b"]), np.asarray(clustered[ln]["b"])
+            )
+
+
+class TestDacBits:
+    @pytest.mark.parametrize(
+        "c,bits", [(2, 1), (4, 2), (16, 4), (64, 6), (17, 5), (64, 6), (3, 2)]
+    )
+    def test_bits(self, c, bits):
+        assert cluster.dac_bits_required(c) == bits
+
+    def test_table3_clusters_fit_6bit(self):
+        # the paper's conclusion: max 64 clusters across models -> 6-bit DACs
+        from compile import zoo
+
+        for t3 in zoo.TABLE3.values():
+            assert cluster.dac_bits_required(t3["clusters"]) <= 6

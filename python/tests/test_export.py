@@ -1,0 +1,98 @@
+"""Export path: SWT binary round-trip and descriptor integrity."""
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from compile import cluster, export, model, sparsify, zoo
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    """Export a small (untrained) svhn model once for all tests."""
+    outdir = tmp_path_factory.mktemp("art")
+    params = model.init_params("svhn", jax.random.PRNGKey(0))
+    masks = {
+        "fc1792x272": sparsify.magnitude_mask(params["fc1792x272"]["w"], 0.5)
+    }
+    params = sparsify.apply_masks(params, masks)
+    params, _ = cluster.cluster_params(params, 64)
+    export.export_model(outdir, "svhn", params, 64, accuracy=12.5,
+                        act_sparsity={"conv3x56": 0.25})
+    return outdir, params
+
+
+class TestSwtRoundTrip:
+    def test_round_trip_exact(self, tmp_path):
+        tensors = [
+            ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+            ("b.scale", np.array([1.5], dtype=np.float32)),
+            ("scalar-ish", np.float32(7.0).reshape(())),
+        ]
+        p = tmp_path / "t.swt"
+        export.write_swt(p, tensors)
+        back = export.read_swt(p)
+        assert [n for n, _ in back] == [n for n, _ in tensors]
+        for (_, a), (_, b) in zip(tensors, back):
+            np.testing.assert_array_equal(np.asarray(a), b)
+
+    def test_magic_guard(self, tmp_path):
+        p = tmp_path / "bad.swt"
+        p.write_bytes(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(AssertionError):
+            export.read_swt(p)
+
+    def test_model_export_order(self, exported):
+        """SWT tensor order must equal the flat_param_list AOT contract."""
+        outdir, params = exported
+        folded = model.fold_bn(params)
+        want = [n for n, _ in model.flat_param_list("svhn", folded)]
+        got = [n for n, _ in export.read_swt(outdir / "svhn.swt")]
+        assert got == want
+
+    def test_model_export_values(self, exported):
+        outdir, params = exported
+        folded = model.fold_bn(params)
+        flat = dict(model.flat_param_list("svhn", folded))
+        back = dict(export.read_swt(outdir / "svhn.swt"))
+        np.testing.assert_allclose(
+            np.asarray(flat["conv3x56.w"]), back["conv3x56.w"], rtol=1e-6
+        )
+
+
+class TestDescriptor:
+    def test_fields(self, exported):
+        outdir, _ = exported
+        desc = json.loads((outdir / "svhn.json").read_text())
+        assert desc["model"] == "svhn"
+        assert desc["n_clusters"] == 64
+        assert desc["weight_dac_bits"] == 6
+        assert desc["act_dac_bits"] == 16
+        assert len(desc["layers"]) == 7  # 4 conv + 3 fc
+        assert desc["paper"]["baseline_params"] == 552_362
+
+    def test_layer_entries(self, exported):
+        outdir, _ = exported
+        desc = json.loads((outdir / "svhn.json").read_text())
+        conv0 = desc["layers"][0]
+        assert conv0["kind"] == "conv" and conv0["in_hw"] == 32
+        assert conv0["act_sparsity"] == 0.25
+        fc0 = desc["layers"][4]
+        assert fc0["kind"] == "fc" and fc0["in_dim"] == 1792
+        # the pruned layer reports ~0.5 weight sparsity
+        assert 0.45 < fc0["weight_sparsity"] < 0.55
+
+    def test_unique_weights_capped_by_clusters(self, exported):
+        outdir, _ = exported
+        desc = json.loads((outdir / "svhn.json").read_text())
+        for l in desc["layers"]:
+            assert l["unique_weights"] <= 64
+
+    def test_surviving_params(self, exported):
+        outdir, params = exported
+        desc = json.loads((outdir / "svhn.json").read_text())
+        assert desc["surviving_params"] == sparsify.surviving_params(params)
+        assert desc["surviving_params"] < desc["total_params"]

@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas VDU kernel vs pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for Layer 1.  hypothesis sweeps shapes;
+fixed tests pin the photonic-chain semantics (DAC quantization, broadband-MR
+scale, bias, padding edges).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vdu
+
+
+def rnd(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestVduMatmulVsRef:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 80),
+        k=st.integers(1, 70),
+        n=st.integers(1, 60),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        x = rnd(seed, (m, k))
+        w = rnd(seed + 1, (k, n))
+        s = rnd(seed + 2, (n,))
+        b = rnd(seed + 3, (n,))
+        got = vdu.vdu_matmul(x, w, s, b)
+        want = ref.vdu_matmul(x, w, s, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_no_quantization_path(self):
+        x, w = rnd(0, (33, 65)), rnd(1, (65, 17))
+        got = vdu.vdu_matmul(x, w, act_bits=0)
+        want = jnp.dot(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_defaults_scale_one_bias_zero(self):
+        x, w = rnd(2, (8, 8)), rnd(3, (8, 8))
+        got = vdu.vdu_matmul(x, w)
+        want = ref.vdu_matmul(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_exact_block_multiple(self):
+        # M, K, N exactly at block boundaries: no padding path.
+        x, w = rnd(4, (128, 128)), rnd(5, (128, 128))
+        got = vdu.vdu_matmul(x, w, act_bits=0)
+        np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_multi_k_block_accumulation(self):
+        # K > block_k exercises the k-grid accumulation + epilogue-once.
+        x, w = rnd(6, (16, 300)), rnd(7, (300, 16))
+        s, b = rnd(8, (16,)), rnd(9, (16,))
+        got = vdu.vdu_matmul(x, w, s, b, act_bits=0)
+        want = (x @ w) * s + b
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bm,bk,bn", [(32, 32, 32), (64, 128, 32), (128, 64, 128)])
+    def test_block_shape_sweep(self, bm, bk, bn):
+        x, w = rnd(10, (70, 90)), rnd(11, (90, 40))
+        got = vdu.vdu_matmul(x, w, act_bits=0, block_m=bm, block_k=bk, block_n=bn)
+        np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_single_element(self):
+        x = jnp.array([[2.0]])
+        w = jnp.array([[3.0]])
+        got = vdu.vdu_matmul(x, w, act_bits=0)
+        np.testing.assert_allclose(got, [[6.0]], rtol=1e-6)
+
+    def test_zero_inputs_power_gated_rows(self):
+        # Residual sparsity: zero activations must produce exact zeros
+        # (the power-gated VCSEL contributes nothing to the photodetector).
+        x = jnp.zeros((4, 32))
+        w = rnd(12, (32, 8))
+        got = vdu.vdu_matmul(x, w)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 8)))
+
+
+class TestQuantization:
+    def test_quantize_idempotent(self):
+        x = rnd(20, (64, 64))
+        q1 = ref.quantize_activations(x, 8)
+        # re-quantizing with the same static range must be a fixed point
+        q2 = ref.quantize_activations(q1, 8, max_abs=float(jnp.max(jnp.abs(x))) + 1e-12)
+        np.testing.assert_allclose(q1, q2, rtol=0, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(2, 16), seed=st.integers(0, 1000))
+    def test_quantization_error_bound(self, bits, seed):
+        x = rnd(seed, (32, 32))
+        q = ref.quantize_activations(x, bits)
+        step = float(jnp.max(jnp.abs(x)) + 1e-12) / (2 ** (bits - 1) - 1)
+        assert float(jnp.max(jnp.abs(q - x))) <= step / 2 + 1e-6
+
+    def test_16bit_negligible_error(self):
+        x = rnd(21, (16, 16))
+        q = ref.quantize_activations(x, 16)
+        assert float(jnp.max(jnp.abs(q - x))) < 1e-3
+
+    def test_levels_count(self):
+        # 3-bit DAC -> at most 2^3 distinct values on a symmetric ramp
+        x = jnp.linspace(-1, 1, 1000).reshape(10, 100)
+        q = ref.quantize_activations(x, 3)
+        assert len(np.unique(np.asarray(q))) <= 2**3
+
+
+class TestVduConv2dVsRef:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hw=st.integers(3, 12),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_hypothesis_conv(self, b, hw, cin, cout, seed):
+        x = rnd(seed, (b, hw, hw, cin))
+        w = rnd(seed + 1, (3, 3, cin, cout))
+        got = vdu.vdu_conv2d(x, w)
+        want = ref.vdu_conv2d(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_conv_matches_lax_conv(self):
+        # im2col + matmul must equal XLA's native convolution.
+        x = rnd(30, (2, 8, 8, 4))
+        w = rnd(31, (3, 3, 4, 6))
+        got = ref.vdu_conv2d(x, w, act_bits=0)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_conv_with_bn_scale(self):
+        x = rnd(32, (1, 5, 5, 3))
+        w = rnd(33, (3, 3, 3, 4))
+        s, b = rnd(34, (4,)), rnd(35, (4,))
+        got = vdu.vdu_conv2d(x, w, s, b, act_bits=0)
+        want = ref.vdu_conv2d(x, w, s, b, act_bits=0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestIm2col:
+    def test_shape(self):
+        x = rnd(40, (2, 7, 9, 3))
+        cols = ref.im2col(x, 3, 3)
+        assert cols.shape == (2 * 7 * 9, 27)
+
+    def test_center_pixel_identity(self):
+        # 1x1 "kernel" unroll is the identity flatten.
+        x = rnd(41, (1, 4, 4, 2))
+        cols = ref.im2col(x, 1, 1)
+        np.testing.assert_allclose(cols, x.reshape(16, 2))
+
+    def test_padding_zeros_at_border(self):
+        x = jnp.ones((1, 3, 3, 1))
+        cols = ref.im2col(x, 3, 3)
+        # corner output pixel sees 4 in-bounds ones and 5 padded zeros
+        corner = np.asarray(cols[0])
+        assert corner.sum() == 4.0
+
+
+class TestMaxpool:
+    def test_basic(self):
+        x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+        p = ref.maxpool2x2(x)
+        np.testing.assert_allclose(
+            np.asarray(p)[0, :, :, 0], [[5.0, 7.0], [13.0, 15.0]]
+        )
+
+    def test_odd_dim_truncates(self):
+        x = rnd(50, (1, 5, 5, 2))
+        p = ref.maxpool2x2(x)
+        assert p.shape == (1, 2, 2, 2)

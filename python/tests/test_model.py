@@ -1,0 +1,143 @@
+"""L2 model graphs: shapes, BN folding, kernel-path vs oracle-path parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model, zoo
+
+
+@pytest.fixture(scope="module")
+def svhn_setup():
+    params = model.init_params("svhn", jax.random.PRNGKey(0))
+    x, y = datasets.make_batch("svhn", 2, jax.random.PRNGKey(1))
+    return params, x, y
+
+
+class TestInitParams:
+    @pytest.mark.parametrize("name", ["mnist", "cifar10", "svhn"])
+    def test_param_shapes_match_spec(self, name):
+        spec = zoo.get(name)
+        params = model.init_params(name, jax.random.PRNGKey(0))
+        n = 0
+        for c in spec.convs:
+            p = params[c.name]
+            assert p["w"].shape == (c.kernel, c.kernel, c.in_ch, c.out_ch)
+            n += p["w"].size + p["b"].size
+        for f in spec.fcs:
+            p = params[f.name]
+            assert p["w"].shape == (f.in_dim, f.out_dim)
+            n += p["w"].size + p["b"].size
+        assert n == spec.n_params
+
+    def test_deterministic(self):
+        p1 = model.init_params("svhn", jax.random.PRNGKey(7))
+        p2 = model.init_params("svhn", jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(
+            np.asarray(p1["fc1792x272"]["w"]), np.asarray(p2["fc1792x272"]["w"])
+        )
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize("name", ["mnist", "cifar10", "svhn"])
+    def test_train_forward_logits(self, name):
+        spec = zoo.get(name)
+        params = model.init_params(name, jax.random.PRNGKey(0))
+        x, _ = datasets.make_batch(name, 3, jax.random.PRNGKey(1))
+        logits, newp = model.forward_train(name, params, x)
+        assert logits.shape == (3, spec.n_classes)
+        assert jnp.all(jnp.isfinite(logits))
+        # BN running stats updated
+        c0 = spec.convs[0].name
+        assert not np.array_equal(
+            np.asarray(newp[c0]["mu"]), np.asarray(params[c0]["mu"])
+        )
+
+    def test_deploy_forward_logits(self, svhn_setup):
+        params, x, _ = svhn_setup
+        folded = model.fold_bn(params)
+        logits = model.forward_deploy("svhn", folded, x, use_kernel=False)
+        assert logits.shape == (2, 10)
+
+
+class TestFoldBn:
+    def test_fold_matches_explicit_bn(self, svhn_setup):
+        """Deploy path on folded params == conv + explicit BN (running stats)."""
+        params, x, _ = svhn_setup
+        # give the running stats non-trivial values
+        p = {k: dict(v) for k, v in params.items()}
+        c0 = zoo.get("svhn").convs[0].name
+        p[c0]["mu"] = jnp.full_like(p[c0]["mu"], 0.3)
+        p[c0]["var"] = jnp.full_like(p[c0]["var"], 2.0)
+        folded = model.fold_bn(p)
+
+        # manual: conv -> +b -> BN(running stats)
+        y_manual = model._conv_xla(x, p[c0]["w"]) + p[c0]["b"]
+        y_manual = (y_manual - p[c0]["mu"]) / jnp.sqrt(p[c0]["var"] + 1e-5)
+        y_manual = y_manual * p[c0]["gamma"] + p[c0]["beta"]
+
+        from compile.kernels import ref
+
+        y_folded = ref.vdu_conv2d(
+            x, folded[c0]["w"], folded[c0]["scale"], folded[c0]["bias"], act_bits=0
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_folded), np.asarray(y_manual), rtol=1e-4, atol=1e-4
+        )
+
+    def test_fc_layers_identity_scale(self, svhn_setup):
+        params, _, _ = svhn_setup
+        folded = model.fold_bn(params)
+        f = folded["fc272x48"]
+        np.testing.assert_array_equal(np.asarray(f["scale"]), 1.0)
+        np.testing.assert_array_equal(np.asarray(f["bias"]), np.asarray(f["b"]))
+
+
+class TestKernelPathParity:
+    """The AOT'd kernel path must match the oracle path numerically."""
+
+    @pytest.mark.parametrize("name", ["mnist", "svhn"])
+    def test_kernel_vs_oracle_forward(self, name):
+        params = model.init_params(name, jax.random.PRNGKey(3))
+        folded = model.fold_bn(params)
+        x, _ = datasets.make_batch(name, 1, jax.random.PRNGKey(4))
+        a = model.forward_deploy(name, folded, x, use_kernel=True)
+        b = model.forward_deploy(name, folded, x, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+    def test_act_sparsity_collection(self):
+        params = model.init_params("svhn", jax.random.PRNGKey(5))
+        folded = model.fold_bn(params)
+        x, _ = datasets.make_batch("svhn", 2, jax.random.PRNGKey(6))
+        _, sp = model.forward_deploy(
+            "svhn", folded, x, use_kernel=False, collect_act_sparsity=True
+        )
+        spec = zoo.get("svhn")
+        assert sp.shape == (spec.n_conv_layers + spec.n_fc_layers,)
+        # ReLU upstream => inner layers see real sparsity
+        assert float(sp[1]) >= 0.0 and float(sp[-1]) > 0.05
+
+
+class TestFlatParamList:
+    def test_order_contract(self):
+        """w, b, scale, bias per layer, in spec order — the AOT/SWT contract."""
+        params = model.init_params("mnist", jax.random.PRNGKey(0))
+        folded = model.fold_bn(params)
+        flat = model.flat_param_list("mnist", folded)
+        names = [n for n, _ in flat]
+        spec = zoo.get("mnist")
+        want = []
+        for ln in spec.layer_names():
+            want += [f"{ln}.w", f"{ln}.b", f"{ln}.scale", f"{ln}.bias"]
+        assert names == want
+
+
+class TestAccuracy:
+    def test_random_model_near_chance(self):
+        params = model.init_params("svhn", jax.random.PRNGKey(8))
+        folded = model.fold_bn(params)
+        acc = model.accuracy(
+            "svhn", folded, datasets.eval_batches("svhn", 2, 16)
+        )
+        assert 0.0 <= acc <= 60.0  # untrained: near 10% chance

@@ -1,0 +1,131 @@
+"""§III.A sparsification: mask exactness, cubic schedule, Table-3 plans."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, sparsify, zoo
+
+
+class TestMagnitudeMask:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(10, 500),
+        sparsity=st.floats(0.0, 0.95),
+        seed=st.integers(0, 10**6),
+    )
+    def test_exact_count(self, n, sparsity, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        mask = sparsify.magnitude_mask(w, sparsity)
+        k = int(sparsity * n)
+        assert int(jnp.sum(mask == 0)) == k
+
+    def test_keeps_largest(self):
+        w = jnp.array([0.1, -5.0, 0.01, 3.0, -0.2])
+        mask = sparsify.magnitude_mask(w, 0.4)  # mask 2 smallest: 0.01, 0.1
+        np.testing.assert_array_equal(np.asarray(mask), [0, 1, 0, 1, 1])
+
+    def test_zero_sparsity_all_ones(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (7, 7))
+        mask = sparsify.magnitude_mask(w, 0.0)
+        assert float(jnp.sum(mask)) == 49.0
+
+    def test_ties_deterministic(self):
+        # all-equal magnitudes: still exactly k masked
+        w = jnp.ones((100,))
+        mask = sparsify.magnitude_mask(w, 0.5)
+        assert int(jnp.sum(mask == 0)) == 50
+
+    def test_shape_preserved(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8))
+        mask = sparsify.magnitude_mask(w, 0.3)
+        assert mask.shape == w.shape
+
+
+class TestCubicRamp:
+    def test_boundaries(self):
+        assert sparsify.cubic_ramp(0, 10, 90, 0.8) == 0.0
+        assert sparsify.cubic_ramp(90, 10, 90, 0.8) == 0.8
+        assert sparsify.cubic_ramp(1000, 10, 90, 0.8) == 0.8
+
+    def test_monotone(self):
+        vals = [sparsify.cubic_ramp(s, 0, 100, 0.7) for s in range(0, 101, 5)]
+        assert all(b >= a for a, b in zip(vals, vals[1:]))
+
+    def test_fast_early_slow_late(self):
+        # cubic: more than half the final sparsity is reached by midpoint
+        mid = sparsify.cubic_ramp(50, 0, 100, 1.0)
+        assert mid > 0.5
+
+
+class TestDefaultPlans:
+    @pytest.mark.parametrize("name", list(zoo.MODELS))
+    def test_plan_matches_table3_layer_count(self, name):
+        plan = sparsify.default_plan(name)
+        assert plan.n_layers_pruned == zoo.TABLE3[name]["layers_pruned"]
+
+    @pytest.mark.parametrize("name", ["mnist", "cifar10", "svhn"])
+    def test_plan_reaches_table3_params(self, name):
+        """Masking at the plan's targets lands near Table 3's param count."""
+        spec = zoo.get(name)
+        params = model.init_params(name, jax.random.PRNGKey(0))
+        plan = sparsify.default_plan(name)
+        masks = {
+            ln: sparsify.magnitude_mask(params[ln]["w"], plan.target_for(ln))
+            for ln in plan.layer_names
+        }
+        pruned = sparsify.apply_masks(params, masks)
+        surv = sparsify.surviving_params(pruned)
+        target = zoo.TABLE3[name]["paper_params"]
+        assert abs(surv - target) / target < 0.01, (surv, target)
+
+    def test_sparsity_bounded(self):
+        for name in zoo.MODELS:
+            plan = sparsify.default_plan(name)
+            assert all(0.0 <= s <= 0.95 for s in plan.sparsity)
+
+    @pytest.mark.parametrize("name", list(zoo.MODELS))
+    def test_conv_layers_pinned_at_half(self, name):
+        """Pruned conv layers use 50% sparsity so dense per-slice kernel
+        vectors hold <= 5 entries — the basis of the paper's n=5 finding."""
+        plan = sparsify.default_plan(name)
+        conv_names = {c.name for c in zoo.get(name).convs}
+        for ln, s in zip(plan.layer_names, plan.sparsity):
+            if ln in conv_names:
+                assert s == 0.5, (ln, s)
+
+    @pytest.mark.parametrize("name", list(zoo.MODELS))
+    def test_dense_kernel_vector_granularity(self, name):
+        """ceil(9 * (1 - s_conv)) <= 5 for every pruned conv layer."""
+        import math
+
+        plan = sparsify.default_plan(name)
+        conv_names = {c.name for c in zoo.get(name).convs}
+        for ln, s in zip(plan.layer_names, plan.sparsity):
+            if ln in conv_names:
+                assert math.ceil(9 * (1 - s)) <= 5
+
+
+class TestApplyAndReport:
+    def test_apply_masks_zeroes(self):
+        params = model.init_params("mnist", jax.random.PRNGKey(0))
+        mask = jnp.zeros_like(params["fc1568x928"]["w"])
+        out = sparsify.apply_masks(params, {"fc1568x928": mask})
+        assert float(jnp.sum(out["fc1568x928"]["w"] != 0)) == 0
+        # untouched layers intact
+        assert float(jnp.sum(out["conv1x112"]["w"] != 0)) > 0
+
+    def test_sparsity_report(self):
+        params = model.init_params("svhn", jax.random.PRNGKey(1))
+        rep = sparsify.sparsity_report(params)
+        assert set(rep) == set(zoo.get("svhn").layer_names())
+        assert all(v < 0.01 for v in rep.values())  # dense init
+
+    def test_surviving_params_dense_equals_total(self):
+        name = "cifar10"
+        params = model.init_params(name, jax.random.PRNGKey(2))
+        surv = sparsify.surviving_params(params)
+        # He-init weights are almost surely nonzero
+        assert surv == zoo.get(name).n_params

@@ -1,0 +1,65 @@
+"""Training loop: loss decreases, masks enforced, schedule honoured."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import sparsify, train, zoo
+
+
+@pytest.fixture(scope="module")
+def short_run():
+    """One short sparsity-aware run on svhn shared across tests."""
+    plan = sparsify.default_plan("svhn")
+    cfg = train.TrainConfig(steps=30, batch=16, log_every=1000)
+    params, masks, history = train.train("svhn", plan, cfg, log=lambda s: None)
+    return plan, params, masks, history
+
+
+class TestTraining:
+    def test_loss_decreases(self, short_run):
+        _, _, _, history = short_run
+        first = np.mean(history[:5])
+        last = np.mean(history[-5:])
+        assert last < first * 0.8, (first, last)
+
+    def test_masks_enforced_in_params(self, short_run):
+        plan, params, masks, _ = short_run
+        for ln in plan.layer_names:
+            w = np.asarray(params[ln]["w"])
+            m = np.asarray(masks[ln])
+            assert (w[m == 0] == 0).all()
+
+    def test_final_sparsity_reached(self, short_run):
+        plan, params, _, _ = short_run
+        rep = sparsify.sparsity_report(params)
+        for ln, target in zip(plan.layer_names, plan.sparsity):
+            assert rep[ln] >= target * 0.95, (ln, rep[ln], target)
+
+    def test_unpruned_layers_stay_dense(self, short_run):
+        plan, params, _, _ = short_run
+        rep = sparsify.sparsity_report(params)
+        for ln in zoo.get("svhn").layer_names():
+            if ln not in plan.layer_names:
+                assert rep[ln] < 0.01
+
+    def test_params_finite(self, short_run):
+        _, params, _, _ = short_run
+        for p in params.values():
+            for v in p.values():
+                assert bool(jnp.all(jnp.isfinite(v)))
+
+
+class TestEvaluate:
+    def test_trained_beats_chance(self, short_run):
+        _, params, _, _ = short_run
+        acc = train.evaluate("svhn", params, n_batches=2, batch=32)
+        assert acc > 30.0  # chance is 10%
+
+    def test_kernel_path_evaluation_close(self, short_run):
+        """Accuracy through the Pallas kernel path ~= oracle path."""
+        _, params, _, _ = short_run
+        a0 = train.evaluate("svhn", params, n_batches=1, batch=8, use_kernel=False)
+        a1 = train.evaluate("svhn", params, n_batches=1, batch=8, use_kernel=True)
+        assert abs(a0 - a1) <= 12.5  # one sample of 8 may flip

@@ -1,0 +1,73 @@
+"""Table 1 reconstruction: layer counts exact, param totals within tolerance."""
+
+import pytest
+
+from compile import zoo
+
+# (model, conv layers, fc layers) straight from Table 1
+TABLE1 = {
+    "mnist": (2, 2, 1_498_730),
+    "cifar10": (6, 1, 552_874),
+    "stl10": (6, 2, 77_787_738),  # see DESIGN.md §3: hidden FC + head
+    "svhn": (4, 3, 552_362),
+}
+
+
+class TestTable1:
+    @pytest.mark.parametrize("name", list(zoo.MODELS))
+    def test_conv_layer_count(self, name):
+        assert zoo.get(name).n_conv_layers == TABLE1[name][0]
+
+    @pytest.mark.parametrize("name", ["mnist", "cifar10", "svhn"])
+    def test_fc_layer_count(self, name):
+        assert zoo.get(name).n_fc_layers == TABLE1[name][1]
+
+    @pytest.mark.parametrize("name,maxdelta", [
+        ("mnist", 0), ("svhn", 0), ("cifar10", 4), ("stl10", 1),
+    ])
+    def test_param_totals(self, name, maxdelta):
+        spec = zoo.get(name)
+        assert abs(spec.n_params - spec.paper_params) <= maxdelta
+
+    @pytest.mark.parametrize("name", list(zoo.MODELS))
+    def test_spec_consistency(self, name):
+        """conv chaining and FC input dims line up with pooling."""
+        spec = zoo.get(name)
+        ch = spec.input_ch
+        for c in spec.convs:
+            assert c.in_ch == ch
+            ch = c.out_ch
+        assert spec.fcs[0].in_dim == spec.flat_dim
+        for a, b in zip(spec.fcs, spec.fcs[1:]):
+            assert b.in_dim == a.out_dim
+        assert spec.fcs[-1].out_dim == spec.n_classes
+
+
+class TestTable3Meta:
+    def test_all_models_present(self):
+        assert set(zoo.TABLE3) == set(zoo.MODELS)
+
+    def test_cluster_counts_match_paper(self):
+        assert zoo.TABLE3["cifar10"]["clusters"] == 16
+        for name in ("mnist", "stl10", "svhn"):
+            assert zoo.TABLE3[name]["clusters"] == 64
+
+    def test_pruned_param_fraction_sane(self):
+        for name, t3 in zoo.TABLE3.items():
+            total = zoo.get(name).n_params
+            assert 0.3 < t3["paper_params"] / total < 0.8
+
+
+class TestHelpers:
+    def test_layer_names_unique(self):
+        for name in zoo.MODELS:
+            names = zoo.get(name).layer_names()
+            assert len(names) == len(set(names))
+
+    def test_unknown_model_raises(self):
+        with pytest.raises(KeyError):
+            zoo.get("resnet50")
+
+    def test_verify_report_lines(self):
+        rows = zoo.verify_param_counts()
+        assert len(rows) == 4

@@ -1,0 +1,49 @@
+//! Bench: ablation of SONIC's three co-design levers (DESIGN.md §4,
+//! "ablations (ours)"): VCSEL power gating, weight clustering, and
+//! dataflow compression — individually and combined — on every model.
+
+use sonic::model::ModelDesc;
+use sonic::sim::ablation::ablate;
+use sonic::util::bench::{black_box, report, Bencher, Table};
+use sonic::util::si;
+
+fn main() {
+    println!("=== Ablation: co-design levers ===\n");
+    for name in ["mnist", "cifar10", "stl10", "svhn"] {
+        let desc = ModelDesc::load_or_builtin(name);
+        let rows = ablate(&desc);
+        let mut t = Table::new(&["variant", "FPS", "power", "FPS/W", "EPB", "FPS/W rel", "EPB rel"]);
+        for r in &rows {
+            t.row(&[
+                r.variant.to_string(),
+                format!("{:.0}", r.stats.fps),
+                format!("{:.2} W", r.stats.avg_power_w),
+                format!("{:.1}", r.stats.fps_per_watt),
+                si(r.stats.epb_j, "J/b"),
+                format!("{:.2}x", r.fps_per_watt_rel),
+                format!("{:.2}x", r.epb_rel),
+            ]);
+        }
+        println!("--- {name} ---");
+        t.print();
+        println!();
+
+        // Full config dominates; each lever contributes.
+        for r in &rows[1..] {
+            assert!(r.fps_per_watt_rel <= 1.0 + 1e-9, "{name}/{}", r.variant);
+        }
+        let dense = rows.last().unwrap();
+        assert!(
+            dense.epb_rel > 2.0,
+            "{name}: dense photonic variant must cost >2x EPB (got {:.2})",
+            dense.epb_rel
+        );
+    }
+
+    println!("--- timing ---");
+    let desc = ModelDesc::load_or_builtin("cifar10");
+    let st = Bencher::default().run(|| {
+        black_box(ablate(&desc));
+    });
+    report("ablate(cifar10) [6 variants]", &st);
+}

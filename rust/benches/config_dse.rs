@@ -1,0 +1,72 @@
+//! Bench: §V.B architecture DSE — the paper reports (n, m, N, K) =
+//! (5, 50, 50, 10) as the best configuration and notes that raising n
+//! beyond 5 brings no benefit because dense kernel vectors never exceed
+//! ~5 entries after sparsification.
+
+use sonic::model::ModelDesc;
+use sonic::sim::dse::{evaluate, explore, DseGrid};
+use sonic::util::bench::{black_box, report, Bencher, Table};
+use sonic::util::si;
+
+fn main() {
+    println!("=== §V.B: (n, m, N, K) design-space exploration ===\n");
+    let models: Vec<ModelDesc> = ["mnist", "cifar10", "stl10", "svhn"]
+        .iter()
+        .map(|n| ModelDesc::load_or_builtin(n))
+        .collect();
+
+    let points = explore(&models, None);
+    let mut t = Table::new(&["rank", "n", "m", "N", "K", "FPS/W (gm)", "EPB (gm)", "power"]);
+    for (i, p) in points.iter().take(12).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            p.n.to_string(),
+            p.m.to_string(),
+            p.n_conv_vdus.to_string(),
+            p.n_fc_vdus.to_string(),
+            format!("{:.1}", p.gm_fps_per_watt),
+            si(p.gm_epb, "J/b"),
+            format!("{:.1} W", p.mean_power_w),
+        ]);
+    }
+    t.print();
+    println!("\ntop geometry: {:?} (paper best: (5, 50, 50, 10))", points[0].geometry());
+
+    // Paper claim: n > 5 gives no benefit.
+    let at5 = evaluate(&models, 5, 50, 50, 10);
+    let at8 = evaluate(&models, 8, 50, 50, 10);
+    let at10 = evaluate(&models, 10, 50, 50, 10);
+    println!(
+        "\nn sweep @ (_, 50, 50, 10): n=5 {:.1}, n=8 {:.1}, n=10 {:.1} FPS/W",
+        at5.gm_fps_per_watt, at8.gm_fps_per_watt, at10.gm_fps_per_watt
+    );
+    assert!(
+        at8.gm_fps_per_watt <= at5.gm_fps_per_watt * 1.02
+            && at10.gm_fps_per_watt <= at5.gm_fps_per_watt * 1.02,
+        "raising n beyond 5 must not help"
+    );
+
+    // The paper-best point must rank near the top of the swept grid.
+    let rank = points
+        .iter()
+        .position(|p| p.geometry() == (5, 50, 50, 10))
+        .expect("paper point in grid");
+    println!("paper geometry rank in sweep: {} / {}", rank + 1, points.len());
+    assert!(rank < points.len() / 4, "paper point must rank in top quartile");
+
+    println!("\n--- timing ---");
+    let st = Bencher::default().run(|| {
+        black_box(evaluate(&models, 5, 50, 50, 10));
+    });
+    report("dse::evaluate (4 models)", &st);
+    let grid = DseGrid {
+        n: vec![5],
+        m: vec![25, 50],
+        n_conv: vec![50],
+        k_fc: vec![10],
+    };
+    let st = Bencher::quick().run(|| {
+        black_box(explore(&models, Some(grid.clone())));
+    });
+    report("dse::explore (2-point grid)", &st);
+}

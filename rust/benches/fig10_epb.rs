@@ -1,0 +1,64 @@
+//! Bench: Fig. 10 — energy per bit (EPB) across the accelerator platforms,
+//! plus the paper's headline average ratios: SONIC is 8.4x lower than
+//! NullHop, 5.78x RSNN, 19.4x LightBulb, 18.4x CrossLight, 27.6x HolyLight.
+
+use sonic::arch::SonicConfig;
+use sonic::baselines::all_platforms;
+use sonic::model::ModelDesc;
+use sonic::sim::simulate;
+use sonic::util::bench::{black_box, report, Bencher, Table};
+use sonic::util::si;
+
+fn main() {
+    println!("=== Fig. 10: energy-per-bit comparison ===\n");
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    let models = ["mnist", "cifar10", "stl10", "svhn"];
+
+    let mut headers = vec!["model".to_string(), "SONIC".to_string()];
+    headers.extend(platforms.iter().map(|p| p.name().to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+
+    for name in models {
+        let desc = ModelDesc::load_or_builtin(name);
+        let sonic = simulate(&desc, &cfg);
+        let mut row = vec![name.to_string(), si(sonic.epb_j, "J/b")];
+        for p in &platforms {
+            row.push(si(p.evaluate(&desc).epb_j, "J/b"));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    println!("\n--- average ratios (platform EPB / SONIC EPB; paper in brackets) ---");
+    let targets = [
+        ("NullHop", 8.4),
+        ("RSNN", 5.78),
+        ("LightBulb", 19.4),
+        ("CrossLight", 18.4),
+        ("HolyLight", 27.6),
+    ];
+    for (pname, want) in targets {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut prod = 1.0;
+        for name in models {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            prod *= p.evaluate(&desc).epb_j / s.epb_j;
+        }
+        let gm: f64 = prod.powf(1.0 / models.len() as f64);
+        let ok = (gm / want - 1.0).abs() < 0.25;
+        println!("  {pname:<11} / SONIC: {gm:6.2}x   [paper {want}x]  {}",
+                 if ok { "OK" } else { "OUT OF BAND" });
+        assert!(ok, "{pname}: EPB ratio {gm} vs paper {want}");
+        assert!(gm > 1.0, "{pname}: SONIC must have lower EPB");
+    }
+
+    println!("\n--- timing ---");
+    let desc = ModelDesc::load_or_builtin("mnist");
+    let st = Bencher::default().run(|| {
+        black_box(simulate(&desc, &cfg).epb_j);
+    });
+    report("simulate(mnist) -> EPB", &st);
+}

@@ -1,0 +1,61 @@
+//! Bench: Fig. 6 — sparsity x clustering x layers-pruned design-space
+//! exploration (CIFAR10).
+//!
+//! The sweep itself runs in Python at build time (real training +
+//! clustering on the synthetic CIFAR10 stand-in; `make artifacts` emits
+//! `artifacts/fig6_dse.json`).  This bench renders the figure's data and
+//! asserts its qualitative shape: very few clusters hurt accuracy, and the
+//! best point uses >= 16 clusters — consistent with the paper selecting 16
+//! clusters for CIFAR10.
+
+use sonic::util::bench::Table;
+use sonic::util::json::Json;
+
+fn main() {
+    println!("=== Fig. 6: sparsity & clustering exploration (CIFAR10) ===\n");
+    let art = sonic::artifacts_dir();
+    let Ok(text) = std::fs::read_to_string(art.join("fig6_dse.json")) else {
+        println!("artifacts/fig6_dse.json missing — run `make artifacts` first.");
+        println!("(bench exits OK so `cargo bench` works pre-artifacts)");
+        return;
+    };
+    let j = Json::parse(&text).expect("fig6_dse.json parses");
+    let rows = j.req("rows").unwrap().as_arr().unwrap();
+    let best = j.req("best").unwrap();
+
+    let mut t = Table::new(&["layers", "sparsity", "clusters", "accuracy", "params left"]);
+    for r in rows {
+        t.row(&[
+            r.req("layers").unwrap().as_i64().unwrap().to_string(),
+            format!("{:.1}", r.req("sparsity").unwrap().as_f64().unwrap()),
+            r.req("clusters").unwrap().as_i64().unwrap().to_string(),
+            format!("{:.2}%", r.req("accuracy").unwrap().as_f64().unwrap()),
+            r.req("surviving_params").unwrap().as_usize().unwrap().to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbest point: layers={} sparsity={} clusters={} accuracy={:.2}%",
+        best.req("layers").unwrap().as_i64().unwrap(),
+        best.req("sparsity").unwrap().as_f64().unwrap(),
+        best.req("clusters").unwrap().as_i64().unwrap(),
+        best.req("accuracy").unwrap().as_f64().unwrap()
+    );
+
+    // Shape assertions.
+    let acc = |cl: i64| -> f64 {
+        let xs: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.req("clusters").unwrap().as_i64() == Some(cl))
+            .map(|r| r.req("accuracy").unwrap().as_f64().unwrap())
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let lo = acc(4);
+    let hi = acc(16).max(acc(64));
+    println!("\nmean accuracy @4 clusters {lo:.2}% vs @>=16 clusters {hi:.2}%");
+    assert!(hi >= lo, "few clusters must not beat many clusters on average");
+    let best_clusters = best.req("clusters").unwrap().as_i64().unwrap();
+    assert!(best_clusters >= 16, "best point uses >= 16 clusters (paper: 16)");
+    println!("shape checks passed");
+}

@@ -1,0 +1,62 @@
+//! Bench: Fig. 8 — power consumption across the accelerator platforms.
+//!
+//! Regenerates the figure's bars (one row per model, one column per
+//! platform) from the analytic simulator + baseline models, asserts the
+//! paper's qualitative shape (SONIC draws more power than the electronic
+//! sparse accelerators but far less than GPU/CPU), and times the
+//! simulator-side work that produces the figure.
+
+use sonic::arch::SonicConfig;
+use sonic::baselines::all_platforms;
+use sonic::model::ModelDesc;
+use sonic::sim::simulate;
+use sonic::util::bench::{black_box, report, Bencher, Table};
+
+fn main() {
+    println!("=== Fig. 8: power comparison (W) ===\n");
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    let models = ["mnist", "cifar10", "stl10", "svhn"];
+
+    let mut headers = vec!["model".to_string(), "SONIC".to_string()];
+    headers.extend(platforms.iter().map(|p| p.name().to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+
+    for name in models {
+        let desc = ModelDesc::load_or_builtin(name);
+        let sonic = simulate(&desc, &cfg);
+        let mut row = vec![name.to_string(), format!("{:.2}", sonic.avg_power_w)];
+        for p in &platforms {
+            let r = p.evaluate(&desc);
+            row.push(format!("{:.2}", r.power_w));
+        }
+        t.row(&row);
+
+        // Paper shape: SONIC's power exceeds the electronic SpNN
+        // accelerators' but stays far below GPU/CPU.
+        let nullhop = platforms[0].evaluate(&desc).power_w;
+        let rsnn = platforms[1].evaluate(&desc).power_w;
+        let gpu = platforms[5].evaluate(&desc).power_w;
+        let cpu = platforms[6].evaluate(&desc).power_w;
+        assert!(sonic.avg_power_w > nullhop, "{name}: SONIC vs NullHop power");
+        assert!(sonic.avg_power_w > rsnn, "{name}: SONIC vs RSNN power");
+        assert!(sonic.avg_power_w < gpu * 0.5, "{name}: SONIC vs GPU power");
+        assert!(sonic.avg_power_w < cpu * 0.5, "{name}: SONIC vs CPU power");
+    }
+    t.print();
+    println!("\nshape checks passed: NullHop/RSNN < SONIC << NP100/IXP\n");
+
+    println!("--- timing: figure generation path ---");
+    let desc = ModelDesc::load_or_builtin("cifar10");
+    let st = Bencher::default().run(|| {
+        black_box(simulate(&desc, &cfg));
+    });
+    report("simulate(cifar10, paper_best)", &st);
+    let st = Bencher::default().run(|| {
+        for p in &platforms {
+            black_box(p.evaluate(&desc));
+        }
+    });
+    report("evaluate 7 baselines (cifar10)", &st);
+}

@@ -1,0 +1,64 @@
+//! Bench: Fig. 9 — power efficiency (FPS/W) across the accelerator
+//! platforms, plus the paper's headline average ratios:
+//! SONIC = 5.81x NullHop, 4.02x RSNN, 3.08x LightBulb, 2.94x CrossLight,
+//! 13.8x HolyLight (geometric mean over the four workloads).
+
+use sonic::arch::SonicConfig;
+use sonic::baselines::all_platforms;
+use sonic::model::ModelDesc;
+use sonic::sim::simulate;
+use sonic::util::bench::{black_box, report, Bencher, Table};
+
+fn main() {
+    println!("=== Fig. 9: FPS/W comparison ===\n");
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    let models = ["mnist", "cifar10", "stl10", "svhn"];
+
+    let mut headers = vec!["model".to_string(), "SONIC".to_string()];
+    headers.extend(platforms.iter().map(|p| p.name().to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+
+    for name in models {
+        let desc = ModelDesc::load_or_builtin(name);
+        let sonic = simulate(&desc, &cfg);
+        let mut row = vec![name.to_string(), format!("{:.1}", sonic.fps_per_watt)];
+        for p in &platforms {
+            row.push(format!("{:.2}", p.evaluate(&desc).fps_per_watt));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    println!("\n--- average ratios (geomean over models; paper value in brackets) ---");
+    let targets = [
+        ("NullHop", 5.81),
+        ("RSNN", 4.02),
+        ("LightBulb", 3.08),
+        ("CrossLight", 2.94),
+        ("HolyLight", 13.8),
+    ];
+    for (pname, want) in targets {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut prod = 1.0;
+        for name in models {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            prod *= s.fps_per_watt / p.evaluate(&desc).fps_per_watt;
+        }
+        let gm: f64 = prod.powf(1.0 / models.len() as f64);
+        let ok = (gm / want - 1.0).abs() < 0.25;
+        println!("  SONIC vs {pname:<11}: {gm:6.2}x   [paper {want}x]  {}",
+                 if ok { "OK" } else { "OUT OF BAND" });
+        assert!(ok, "{pname}: ratio {gm} vs paper {want}");
+        assert!(gm > 1.0, "{pname}: SONIC must win");
+    }
+
+    println!("\n--- timing ---");
+    let desc = ModelDesc::load_or_builtin("svhn");
+    let st = Bencher::default().run(|| {
+        black_box(simulate(&desc, &cfg).fps_per_watt);
+    });
+    report("simulate(svhn) -> FPS/W", &st);
+}

@@ -1,0 +1,89 @@
+//! Bench: L3 coordinator hot paths — the code that runs per request in a
+//! real deployment: FC compression, CONV patch extraction + compressed
+//! dot products, VDU scheduling, and the analytic simulator itself.
+//! This is the primary input to the §Perf optimization loop.
+
+use sonic::arch::SonicConfig;
+use sonic::coordinator::compress::{compress_fc, fc_product};
+use sonic::coordinator::convflow::{
+    compressed_dot, conv2d_compressed, extract_patch, CompressedKernel,
+};
+use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
+use sonic::model::ModelDesc;
+use sonic::sim::simulate;
+use sonic::sparsity::ColMatrix;
+use sonic::util::bench::{black_box, report, Bencher};
+use sonic::util::rng::Rng;
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===\n");
+    let mut rng = Rng::new(2024);
+    let cfg = SonicConfig::paper_best();
+
+    // --- FC compression: svhn fc1792x272 with 50% activation sparsity ---
+    let (rows, cols) = (272, 1792);
+    let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.5));
+    let a = rng.sparse_vec(cols, 0.5);
+    let st = Bencher::default().run(|| {
+        black_box(compress_fc(&a, &w));
+    });
+    report("compress_fc 272x1792 (50% act sparsity)", &st);
+
+    let c = compress_fc(&a, &w);
+    let st = Bencher::default().run(|| {
+        black_box(fc_product(&c));
+    });
+    report("fc_product (compressed matvec)", &st);
+
+    let st = Bencher::default().run(|| {
+        black_box(schedule_fc(&c, &cfg));
+    });
+    report("schedule_fc (pass list)", &st);
+
+    // --- CONV path: 32x32x56 layer slice, 3x3 kernels ---
+    let (h, wdt, cin, cout) = (32, 32, 56, 16);
+    let x = rng.sparse_vec(h * wdt * cin, 0.5);
+    let kflat: Vec<Vec<f32>> = (0..cout)
+        .map(|_| rng.sparse_vec(9 * cin, 0.5))
+        .collect();
+    let kernels: Vec<CompressedKernel> = kflat
+        .iter()
+        .map(|k| CompressedKernel::from_dense(k))
+        .collect();
+
+    let st = Bencher::default().run(|| {
+        black_box(extract_patch(&x, h, wdt, cin, 16, 16, 3, 3));
+    });
+    report("extract_patch 3x3x56", &st);
+
+    let patch = extract_patch(&x, h, wdt, cin, 16, 16, 3, 3);
+    let st = Bencher::default().run(|| {
+        for k in &kernels {
+            black_box(compressed_dot(k, &patch));
+        }
+    });
+    report("compressed_dot x16 kernels", &st);
+
+    let st = Bencher::default().run(|| {
+        black_box(conv2d_compressed(&x, h, wdt, cin, &kernels, 3, 3));
+    });
+    report("conv2d_compressed 32x32x56 -> 16ch", &st);
+
+    let patches: Vec<Vec<f32>> = (0..64)
+        .map(|i| extract_patch(&x, h, wdt, cin, i / 8, i % 8, 3, 3))
+        .collect();
+    let st = Bencher::default().run(|| {
+        black_box(schedule_conv(&kernels, &patches, &cfg));
+    });
+    report("schedule_conv 64 px x 16 kernels", &st);
+
+    // --- analytic simulator (the figure generator's inner loop) ---
+    println!();
+    for name in ["mnist", "cifar10", "stl10", "svhn"] {
+        let desc = ModelDesc::load_or_builtin(name);
+        let st = Bencher::default().run(|| {
+            black_box(simulate(&desc, &cfg));
+        });
+        report(&format!("simulate({name})"), &st);
+    }
+}

@@ -1,0 +1,71 @@
+//! Bench: Table 1 — baseline CNN models (layer counts, parameter totals).
+//!
+//! Verifies the reconstructed architectures against the paper's numbers
+//! (from builtin descriptors, and against `artifacts/*.json` when built),
+//! and times descriptor loading (a coordinator startup cost).
+
+use sonic::model::{LayerKind, ModelDesc};
+use sonic::util::bench::{black_box, report, Bencher, Table};
+
+fn main() {
+    println!("=== Table 1: CNN models considered for experiments ===\n");
+    let paper: &[(&str, usize, usize, usize, f64)] = &[
+        ("mnist", 2, 2, 1_498_730, 93.2),
+        ("cifar10", 6, 1, 552_874, 86.05),
+        ("stl10", 6, 1, 77_787_738, 74.6),
+        ("svhn", 4, 3, 552_362, 94.6),
+    ];
+
+    let mut t = Table::new(&[
+        "dataset",
+        "conv",
+        "fc",
+        "params (ours)",
+        "params (paper)",
+        "delta",
+        "acc (paper)",
+    ]);
+    for &(name, conv_want, _fc_want, params_want, acc) in paper {
+        let d = ModelDesc::builtin(name).unwrap();
+        let convs = d
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count();
+        assert_eq!(convs, conv_want, "{name} conv count");
+        let total: usize = d.layers.iter().map(|l| l.n_params()).sum();
+        let delta = total as i64 - params_want as i64;
+        assert!(delta.abs() <= 4, "{name}: param delta {delta}");
+        t.row(&[
+            name.into(),
+            convs.to_string(),
+            (d.layers.len() - convs).to_string(),
+            total.to_string(),
+            params_want.to_string(),
+            format!("{delta:+}"),
+            format!("{acc}%"),
+        ]);
+    }
+    t.print();
+
+    // measured descriptors, if artifacts exist
+    let art = sonic::artifacts_dir();
+    if art.join("mnist.json").is_file() {
+        println!("\n(artifacts found: measured descriptors load + agree)");
+        for &(name, ..) in paper {
+            let d = ModelDesc::load_or_builtin(name);
+            let b = ModelDesc::builtin(name).unwrap();
+            assert_eq!(d.total_params, b.total_params, "{name} artifact total");
+        }
+    }
+
+    println!("\n--- timing: descriptor construction & load ---");
+    let st = Bencher::default().run(|| {
+        black_box(ModelDesc::builtin("stl10").unwrap());
+    });
+    report("ModelDesc::builtin(stl10)", &st);
+    let st = Bencher::default().run(|| {
+        black_box(ModelDesc::load_or_builtin("cifar10"));
+    });
+    report("ModelDesc::load_or_builtin(cifar10)", &st);
+}

@@ -1,0 +1,65 @@
+//! Bench: Table 2 — device parameters used for accelerator analysis.
+//!
+//! Prints the table from the code constants (single source of truth) and
+//! micro-benchmarks the device cost-model evaluations that sit on the
+//! simulator's inner loop.
+
+use sonic::arch::{SonicConfig, VduKind};
+use sonic::devices::{DeviceParams, Mr, MrBank};
+use sonic::util::bench::{black_box, report, Bencher, Table};
+
+fn main() {
+    println!("=== Table 2: parameters considered for analysis ===\n");
+    let p = DeviceParams::default();
+    let mut t = Table::new(&["device", "latency", "power"]);
+    for (name, lat, pow) in p.table2_rows() {
+        t.row(&[name, lat, pow]);
+    }
+    t.print();
+
+    // Consistency assertions pinning the Table-2 values.
+    assert_eq!(p.eo_latency_s, 20e-9);
+    assert_eq!(p.to_latency_s, 4e-6);
+    assert_eq!(p.vcsel_latency_s, 0.07e-9);
+    assert_eq!(p.pd_latency_s, 5.8e-12);
+    assert_eq!(p.dac16_latency_s, 0.33e-9);
+    assert_eq!(p.dac6_latency_s, 0.25e-9);
+    assert_eq!(p.adc_latency_s, 14e-9);
+
+    println!("\n--- derived quantities ---");
+    let cfg = SonicConfig::paper_best();
+    let conv = cfg.conv_vdu();
+    let fc = cfg.fc_vdu();
+    println!(
+        "VDU initiation interval: conv {} ns, fc {} ns (EO-retune bound)",
+        conv.initiation_interval_s() * 1e9,
+        fc.initiation_interval_s() * 1e9
+    );
+    println!(
+        "VDU fill latency: conv {:.2} ns, fc {:.2} ns",
+        conv.fill_latency_s() * 1e9,
+        fc.fill_latency_s() * 1e9
+    );
+    assert_eq!(conv.kind, VduKind::Conv);
+    assert_eq!(fc.kind, VduKind::Fc);
+
+    println!("\n--- timing: device model evaluation (simulator inner loop) ---");
+    let mr = Mr::new(p.clone());
+    let st = Bencher::default().run(|| {
+        for i in 0..100 {
+            black_box(mr.shift_for_transmission(i as f64 / 100.0));
+        }
+    });
+    report("Mr::shift_for_transmission x100", &st);
+
+    let bank = MrBank::new(p.clone(), 50);
+    let st = Bencher::default().run(|| {
+        black_box(bank.avg_hold_power_w(0.5, 25));
+    });
+    report("MrBank::avg_hold_power_w", &st);
+
+    let st = Bencher::default().run(|| {
+        black_box(fc.pass_cost(25, 0.5));
+    });
+    report("Vdu::pass_cost (fc, 50 lanes)", &st);
+}

@@ -1,0 +1,92 @@
+//! Bench: Table 3 — sparsification + clustering results.
+//!
+//! Prints the paper's Table-3 targets next to the measured values from the
+//! real sparsity-aware training run (`artifacts/table3.json`, when built),
+//! asserting the surviving-parameter totals land within 1%.
+
+use sonic::model::ModelDesc;
+use sonic::util::bench::Table;
+use sonic::util::json::Json;
+
+fn main() {
+    println!("=== Table 3: summary of sparsification and clustering ===\n");
+    let paper: &[(&str, usize, usize, usize, f64)] = &[
+        // model, layers pruned, clusters, surviving params, accuracy
+        ("mnist", 4, 64, 749_365, 92.89),
+        ("cifar10", 7, 16, 276_437, 86.86),
+        ("stl10", 5, 64, 46_672_643, 75.2),
+        ("svhn", 5, 64, 331_417, 95.0),
+    ];
+
+    let art = sonic::artifacts_dir();
+    let measured = std::fs::read_to_string(art.join("table3.json"))
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+
+    let mut t = Table::new(&[
+        "dataset",
+        "layers pruned",
+        "clusters",
+        "params (paper)",
+        "params (measured)",
+        "acc paper",
+        "acc ours (synthetic)",
+    ]);
+    for &(name, layers, clusters, params, acc) in paper {
+        let (m_params, m_acc) = measured
+            .as_ref()
+            .and_then(|j| j.as_arr())
+            .and_then(|rows| {
+                rows.iter().find(|r| {
+                    r.get("model").and_then(|v| v.as_str()) == Some(name)
+                })
+            })
+            .map(|r| {
+                (
+                    r.get("surviving_params")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0),
+                    r.get("accuracy_synthetic")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                )
+            })
+            .unwrap_or((0, 0.0));
+        if m_params > 0 {
+            let err = (m_params as f64 - params as f64).abs() / params as f64;
+            assert!(err < 0.01, "{name}: measured {m_params} vs paper {params}");
+        }
+        t.row(&[
+            name.into(),
+            layers.to_string(),
+            clusters.to_string(),
+            params.to_string(),
+            if m_params > 0 {
+                m_params.to_string()
+            } else {
+                "(run `make artifacts`)".into()
+            },
+            format!("{acc}%"),
+            if m_params > 0 {
+                format!("{m_acc:.2}%")
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+
+    // Builtin descriptors carry Table-3 values; verify DAC sizing logic.
+    println!("\n--- DAC-resolution consequence (the point of clustering) ---");
+    for &(name, _, clusters, ..) in paper {
+        let d = ModelDesc::load_or_builtin(name);
+        assert!(d.n_clusters <= 64, "{name}");
+        // cifar10's 16 clusters need only 4 bits; the architecture
+        // provisions 6-bit DACs for the 64-cluster worst case (§V.A).
+        assert!(d.weight_dac_bits <= 6, "{name}: clusters must fit 6-bit DACs");
+        println!(
+            "  {name:8}: {clusters} clusters -> {}-bit (SONIC provisions 6-bit DACs, 3 mW vs 40 mW)",
+            d.weight_dac_bits
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! The SONIC accelerator architecture (§IV): configuration and the
+//! vector-dot-product units assembled from the [`crate::devices`] models.
+
+pub mod vdu;
+
+pub use vdu::{Vdu, VduKind, VduPassCost};
+
+use crate::devices::DeviceParams;
+
+/// Architecture configuration `(n, m, N, K)` plus feature toggles.
+///
+/// * `n` — CONV VDU lane count (dense kernel-vector granularity)
+/// * `m` — FC VDU lane count (dense activation-vector granularity)
+/// * `n_conv_vdus` (`N`) — number of CONV VDUs
+/// * `n_fc_vdus` (`K`) — number of FC VDUs
+///
+/// The paper's best configuration is `(5, 50, 50, 10)` (§V.B).
+#[derive(Debug, Clone)]
+pub struct SonicConfig {
+    pub n: usize,
+    pub m: usize,
+    pub n_conv_vdus: usize,
+    pub n_fc_vdus: usize,
+    /// Weight-DAC resolution in bits (6 with clustering; 16 without).
+    pub weight_dac_bits: u32,
+    /// Activation-DAC resolution in bits (16 in the paper).
+    pub act_dac_bits: u32,
+    /// VCSEL/DAC power gating on residual zeros (§IV.B).
+    pub power_gating: bool,
+    /// Fig. 1/2 dataflow compression (zero-column elimination + im2col).
+    pub compression: bool,
+    pub devices: DeviceParams,
+}
+
+impl Default for SonicConfig {
+    fn default() -> Self {
+        Self::paper_best()
+    }
+}
+
+impl SonicConfig {
+    /// The best configuration found in §V.B: `(n, m, N, K) = (5, 50, 50, 10)`.
+    pub fn paper_best() -> Self {
+        Self {
+            n: 5,
+            m: 50,
+            n_conv_vdus: 50,
+            n_fc_vdus: 10,
+            weight_dac_bits: 6,
+            act_dac_bits: 16,
+            power_gating: true,
+            compression: true,
+            devices: DeviceParams::default(),
+        }
+    }
+
+    pub fn with_geometry(n: usize, m: usize, nn: usize, k: usize) -> Self {
+        Self {
+            n,
+            m,
+            n_conv_vdus: nn,
+            n_fc_vdus: k,
+            ..Self::paper_best()
+        }
+    }
+
+    /// Ablation helpers (benches/ablation.rs).
+    pub fn without_power_gating(mut self) -> Self {
+        self.power_gating = false;
+        self
+    }
+
+    pub fn without_compression(mut self) -> Self {
+        self.compression = false;
+        self
+    }
+
+    pub fn without_clustering(mut self) -> Self {
+        self.weight_dac_bits = 16;
+        self
+    }
+
+    pub fn conv_vdu(&self) -> Vdu {
+        Vdu::new(
+            VduKind::Conv,
+            self.n,
+            self.weight_dac_bits,
+            self.act_dac_bits,
+            self.power_gating,
+            self.devices.clone(),
+        )
+    }
+
+    pub fn fc_vdu(&self) -> Vdu {
+        Vdu::new(
+            VduKind::Fc,
+            self.m,
+            self.weight_dac_bits,
+            self.act_dac_bits,
+            self.power_gating,
+            self.devices.clone(),
+        )
+    }
+
+    /// Static electronic power: control unit + per-VDU buffering/mapping.
+    pub fn control_power_w(&self) -> f64 {
+        self.devices.control_unit_power_w
+            + self.devices.control_per_vdu_w * (self.n_conv_vdus + self.n_fc_vdus) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_best_geometry() {
+        let c = SonicConfig::paper_best();
+        assert_eq!((c.n, c.m, c.n_conv_vdus, c.n_fc_vdus), (5, 50, 50, 10));
+        assert!(c.power_gating && c.compression);
+        assert_eq!(c.weight_dac_bits, 6);
+    }
+
+    #[test]
+    fn ablations_toggle() {
+        let c = SonicConfig::paper_best().without_power_gating();
+        assert!(!c.power_gating);
+        let c = SonicConfig::paper_best().without_clustering();
+        assert_eq!(c.weight_dac_bits, 16);
+        let c = SonicConfig::paper_best().without_compression();
+        assert!(!c.compression);
+    }
+
+    #[test]
+    fn vdu_lane_counts_follow_geometry() {
+        let c = SonicConfig::with_geometry(4, 32, 8, 2);
+        assert_eq!(c.conv_vdu().lanes, 4);
+        assert_eq!(c.fc_vdu().lanes, 32);
+    }
+
+    #[test]
+    fn control_power_scales_with_vdus() {
+        let small = SonicConfig::with_geometry(5, 50, 10, 2).control_power_w();
+        let big = SonicConfig::with_geometry(5, 50, 100, 20).control_power_w();
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,237 @@
+//! Vector-dot-product unit (VDU) cost model (§IV.B, Fig. 5).
+//!
+//! A VDU computes one `lanes`-element dot product per pass:
+//!
+//! ```text
+//! dense buffer --DAC--> VCSEL array --MUX--> waveguide
+//!                                              |
+//! sparse buffer --DAC--> MR bank (x) --> broadband BN MR --> PD --> ADC
+//! ```
+//!
+//! Per the paper, CONV VDUs and FC VDUs differ in which operand is dense:
+//!
+//! * **CONV**: dense = compressed *kernel* vector (clustered -> 6-bit DACs
+//!   drive the VCSELs); sparse = IF-map patch (16-bit DACs drive the MRs;
+//!   residual zeros gate lanes).
+//! * **FC**: dense = compressed *activation* vector (16-bit DACs drive the
+//!   VCSELs); sparse = weight rows (clustered -> 6-bit DACs on the MRs;
+//!   residual zeros gate lanes).
+//!
+//! Timing model: the VDU is a pipeline whose initiation interval (II) is
+//! the slowest per-pass stage — EO retuning of the MR bank (20 ns) —
+//! while the fill latency of one pass is the sum of the stage latencies.
+//! Per-layer one-off costs (TO retuning on large swings, broadband BN MR
+//! setup) are charged once per layer by the simulator.
+
+use crate::devices::{
+    dac::DacResolution, Adc, BroadbandMr, Dac, DeviceParams, MrBank, Photodetector, Vcsel,
+};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VduKind {
+    Conv,
+    Fc,
+}
+
+/// Cost of one VDU pass (a `lanes`-wide dot-product step).
+#[derive(Debug, Clone, Copy)]
+pub struct VduPassCost {
+    /// Pipeline initiation interval — throughput-determining (s).
+    pub interval_s: f64,
+    /// Fill latency of a single pass through all stages (s).
+    pub fill_latency_s: f64,
+    /// Average power drawn during the pass (W).
+    pub power_w: f64,
+    /// Energy per pass = power x interval (J).
+    pub energy_j: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Vdu {
+    pub kind: VduKind,
+    pub lanes: usize,
+    pub power_gating: bool,
+    dense_dac: Dac,
+    sparse_dac: Dac,
+    vcsel: Vcsel,
+    bank: MrBank,
+    bn_mr: BroadbandMr,
+    pd: Photodetector,
+    adc: Adc,
+    params: DeviceParams,
+}
+
+impl Vdu {
+    pub fn new(
+        kind: VduKind,
+        lanes: usize,
+        weight_dac_bits: u32,
+        act_dac_bits: u32,
+        power_gating: bool,
+        params: DeviceParams,
+    ) -> Self {
+        let weight_res = DacResolution::for_bits(weight_dac_bits);
+        let act_res = DacResolution::for_bits(act_dac_bits);
+        // CONV: dense operand is the (clustered) kernel; FC: dense operand
+        // is the activation vector (§IV.B).
+        let (dense_res, sparse_res) = match kind {
+            VduKind::Conv => (weight_res, act_res),
+            VduKind::Fc => (act_res, weight_res),
+        };
+        Self {
+            kind,
+            lanes,
+            power_gating,
+            dense_dac: Dac::new(params.clone(), dense_res),
+            sparse_dac: Dac::new(params.clone(), sparse_res),
+            vcsel: Vcsel::new(params.clone()),
+            bank: MrBank::new(params.clone(), lanes),
+            bn_mr: BroadbandMr::new(params.clone()),
+            pd: Photodetector::new(params.clone()),
+            adc: Adc::new(params.clone()),
+            params,
+        }
+    }
+
+    /// Initiation interval: slowest per-pass pipeline stage.  The MR bank
+    /// retunes via EO every pass; DAC/VCSEL/PD/ADC overlap beneath it.
+    pub fn initiation_interval_s(&self) -> f64 {
+        self.params
+            .eo_latency_s
+            .max(self.adc.latency_s())
+            .max(self.dense_dac.latency_s())
+            .max(self.sparse_dac.latency_s())
+            .max(self.vcsel.latency_s())
+            .max(self.pd.latency_s())
+    }
+
+    /// Single-pass fill latency (sum of stages; propagation ~ps ignored).
+    pub fn fill_latency_s(&self) -> f64 {
+        self.dense_dac.latency_s().max(self.sparse_dac.latency_s())
+            + self.vcsel.latency_s()
+            + self.params.eo_latency_s
+            + self.pd.latency_s()
+            + self.adc.latency_s()
+    }
+
+    /// Cost of one pass with `active` of `lanes` lanes carrying non-zero
+    /// sparse elements; `avg_transmission` is the mean MR transmission the
+    /// weight codebook maps to (drives tuning power).
+    pub fn pass_cost(&self, active: usize, avg_transmission: f64) -> VduPassCost {
+        let active = active.min(self.lanes);
+        let ii = self.initiation_interval_s();
+        let gp = self.power_gating;
+        let power = self.dense_dac.array_power_w(self.lanes, active, gp)
+            + self.sparse_dac.array_power_w(self.lanes, active, gp)
+            + self.vcsel.array_power_w(self.lanes, active, gp)
+            + self
+                .bank
+                .avg_hold_power_w(avg_transmission, if gp { active } else { self.lanes })
+            + self.bn_mr.hold_power_w(0.8)
+            + self.pd.power_w()
+            + self.adc.power_w();
+        VduPassCost {
+            interval_s: ii,
+            fill_latency_s: self.fill_latency_s(),
+            power_w: power,
+            energy_j: power * ii,
+        }
+    }
+
+    /// Idle power of a VDU with no pass in flight (PD/ADC bias held).
+    pub fn idle_power_w(&self) -> f64 {
+        self.pd.power_w() + self.adc.power_w() * 0.1
+    }
+
+    /// Per-layer setup: broadband BN MR configuration (+TO settle when the
+    /// codebook needs shifts beyond the EO range — rare with clustering).
+    pub fn layer_setup_latency_s(&self, needs_to_retune: bool) -> f64 {
+        let bn = self.bn_mr.setup_latency_s(0.8);
+        if needs_to_retune {
+            bn + self.params.to_latency_s
+        } else {
+            bn
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_vdu() -> Vdu {
+        Vdu::new(VduKind::Conv, 5, 6, 16, true, DeviceParams::default())
+    }
+
+    fn fc_vdu() -> Vdu {
+        Vdu::new(VduKind::Fc, 50, 6, 16, true, DeviceParams::default())
+    }
+
+    #[test]
+    fn ii_is_eo_bound() {
+        // 20 ns EO retuning dominates 14 ns ADC
+        assert_eq!(conv_vdu().initiation_interval_s(), 20e-9);
+        assert_eq!(fc_vdu().initiation_interval_s(), 20e-9);
+    }
+
+    #[test]
+    fn fill_exceeds_interval() {
+        let v = fc_vdu();
+        assert!(v.fill_latency_s() > v.initiation_interval_s());
+    }
+
+    #[test]
+    fn clustering_cuts_conv_vdu_dac_power() {
+        // With clustering the CONV dense operand rides 6-bit DACs (3 mW);
+        // without it the same lanes need 16-bit DACs (40 mW).
+        let clustered = conv_vdu().pass_cost(5, 0.5);
+        let unclustered = Vdu::new(VduKind::Conv, 5, 16, 16, true, DeviceParams::default())
+            .pass_cost(5, 0.5);
+        assert!(unclustered.power_w > clustered.power_w * 1.3);
+    }
+
+    #[test]
+    fn power_gating_reduces_power_and_energy() {
+        let gated = fc_vdu().pass_cost(10, 0.5);
+        let ungated = Vdu::new(VduKind::Fc, 50, 6, 16, false, DeviceParams::default())
+            .pass_cost(10, 0.5);
+        assert!(gated.power_w < ungated.power_w * 0.4);
+        assert!(gated.energy_j < ungated.energy_j * 0.4);
+    }
+
+    #[test]
+    fn power_monotone_in_active_lanes() {
+        let v = fc_vdu();
+        let p1 = v.pass_cost(10, 0.5).power_w;
+        let p2 = v.pass_cost(40, 0.5).power_w;
+        assert!(p2 > p1);
+    }
+
+    #[test]
+    fn active_clamped_to_lanes() {
+        let v = conv_vdu();
+        let a = v.pass_cost(5, 0.5).power_w;
+        let b = v.pass_cost(500, 0.5).power_w;
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_is_power_times_interval() {
+        let c = fc_vdu().pass_cost(25, 0.4);
+        assert!((c.energy_j - c.power_w * c.interval_s).abs() < 1e-18);
+    }
+
+    #[test]
+    fn fc_vdu_power_order_of_magnitude() {
+        // 50 lanes, ~half active: dominated by 16-bit DACs (~25*43 mW)
+        // plus ADC; expect O(1 W).
+        let c = fc_vdu().pass_cost(25, 0.5);
+        assert!(c.power_w > 0.3 && c.power_w < 3.0, "{}", c.power_w);
+    }
+
+    #[test]
+    fn layer_setup_to_penalty() {
+        let v = conv_vdu();
+        assert!(v.layer_setup_latency_s(true) > v.layer_setup_latency_s(false));
+    }
+}

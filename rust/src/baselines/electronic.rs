@@ -1,0 +1,144 @@
+//! Electronic sparse-CNN accelerator baselines: NullHop [6] and RSNN [5].
+//!
+//! Both are analytic throughput/power models driven by the platform
+//! characteristics published in their papers:
+//!
+//! * **NullHop** (Aimar et al., TNNLS'19): 128-MAC ASIC/FPGA pipeline that
+//!   skips zero *activations* via a sparse feature-map representation
+//!   (output-feature-map compression).  500 MHz equivalent clock.
+//! * **RSNN** (You & Wu, IEEE Access'21): FPGA software/hardware
+//!   co-optimized sparse accelerator exploiting structured *weight*
+//!   sparsity plus inter/intra-output-feature-map parallelism.
+//!
+//! `testbed_scale` folds the unpublished utilization/memory-stall factors
+//! into one constant per platform, calibrated so the *average* FPS/W and
+//! EPB ratios against SONIC match the paper's reported averages; the
+//! per-model spread emerges from the workload structure (EXPERIMENTS.md).
+
+use super::{bits_per_inference, effective_macs, Platform, PlatformResult};
+use crate::model::ModelDesc;
+
+/// NullHop: zero-activation-skipping ASIC.
+#[derive(Debug, Clone)]
+pub struct NullHop {
+    /// MAC units x clock (Hz): 128 x 500 MHz.
+    pub peak_macs_per_s: f64,
+    /// Sustained fraction of peak (pipeline + memory efficiency).
+    pub testbed_scale: f64,
+    /// Board power (core + memory interface), W.
+    pub power_w: f64,
+    /// Memory-hierarchy/I-O energy folded into the EPB metric
+    /// (EXPERIMENTS.md §Calibration).
+    pub epb_overhead: f64,
+}
+
+impl Default for NullHop {
+    fn default() -> Self {
+        Self {
+            peak_macs_per_s: 128.0 * 500e6,
+            // Batch-1 weight-streaming-bound operation as the paper's
+            // comparison configures it (EXPERIMENTS.md §Calibration).
+            testbed_scale: 0.002912,
+            power_w: 0.9,
+            epb_overhead: 3.482,
+        }
+    }
+}
+
+impl Platform for NullHop {
+    fn name(&self) -> &'static str {
+        "NullHop"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        // Skips zero activations; zero weights still occupy MAC slots
+        // (NullHop compresses feature maps, not kernels).
+        let macs = effective_macs(model, false, true);
+        let fps = self.peak_macs_per_s * self.testbed_scale / macs;
+        let energy = self.power_w / fps;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: self.power_w,
+            fps,
+            fps_per_watt: fps / self.power_w,
+            epb_j: energy * self.epb_overhead / bits_per_inference(model, 16.0, 16.0),
+        }
+    }
+}
+
+/// RSNN: FPGA structured-weight-sparsity accelerator.
+#[derive(Debug, Clone)]
+pub struct Rsnn {
+    /// Effective parallel MACs x clock: ~768 DSP lanes x 200 MHz.
+    pub peak_macs_per_s: f64,
+    pub testbed_scale: f64,
+    /// FPGA board power, W.
+    pub power_w: f64,
+    /// Memory-hierarchy/I-O energy folded into the EPB metric.
+    pub epb_overhead: f64,
+}
+
+impl Default for Rsnn {
+    fn default() -> Self {
+        Self {
+            peak_macs_per_s: 768.0 * 200e6,
+            // Batch-1, DDR-bound FPGA operation (EXPERIMENTS.md §Calibration).
+            testbed_scale: 0.0075024,
+            power_w: 4.5,
+            epb_overhead: 3.453,
+        }
+    }
+}
+
+impl Platform for Rsnn {
+    fn name(&self) -> &'static str {
+        "RSNN"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        // Exploits weight sparsity (pruned kernels never enter the PEs);
+        // dense activations still stream through.
+        let macs = effective_macs(model, true, false);
+        let fps = self.peak_macs_per_s * self.testbed_scale / macs;
+        let energy = self.power_w / fps;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: self.power_w,
+            fps,
+            fps_per_watt: fps / self.power_w,
+            epb_j: energy * self.epb_overhead / bits_per_inference(model, 16.0, 16.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nullhop_low_power_modest_fps() {
+        let r = NullHop::default().evaluate(&ModelDesc::builtin("mnist").unwrap());
+        assert!(r.power_w < 2.0);
+        // batch-1 weight-streaming-bound regime (see testbed_scale)
+        assert!(r.fps > 1.0 && r.fps < 100_000.0, "{}", r.fps);
+    }
+
+    #[test]
+    fn rsnn_exploits_weight_sparsity() {
+        // On a model with 50% weight sparsity RSNN sees ~half the MACs.
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let dense_macs = m.total_macs() as f64;
+        let eff = effective_macs(&m, true, false);
+        assert!(eff < dense_macs * 0.75);
+    }
+
+    #[test]
+    fn both_scale_with_model_size() {
+        let nh = NullHop::default();
+        let small = nh.evaluate(&ModelDesc::builtin("svhn").unwrap());
+        let big = nh.evaluate(&ModelDesc::builtin("stl10").unwrap());
+        assert!(small.fps > big.fps * 10.0);
+    }
+}

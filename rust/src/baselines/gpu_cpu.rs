@@ -1,0 +1,117 @@
+//! General-purpose comparison platforms (§V.B): NVIDIA Tesla P100 ("NP100")
+//! and Intel Xeon Platinum 9282 ("IXP").
+//!
+//! Both run the dense model (cuDNN/MKL dense kernels do not skip zeros) at
+//! batch-1 inference — the deployment scenario SONIC targets.  Small CNNs
+//! at batch 1 utilize a tiny fraction of peak FLOPs (kernel-launch +
+//! memory-bound); the sustained-efficiency constants reflect measured
+//! batch-1 behaviour of parts of this class and fold testbed calibration.
+
+use super::{bits_per_inference, effective_macs, Platform, PlatformResult};
+use crate::model::ModelDesc;
+
+/// NVIDIA Tesla P100: 10.6 TFLOP/s FP32 peak, 250 W TDP.
+#[derive(Debug, Clone)]
+pub struct TeslaP100 {
+    pub peak_flops: f64,
+    /// Sustained fraction of peak at batch-1 small-CNN inference.
+    pub batch1_efficiency: f64,
+    pub power_w: f64,
+}
+
+impl Default for TeslaP100 {
+    fn default() -> Self {
+        Self {
+            peak_flops: 10.6e12,
+            batch1_efficiency: 0.035,
+            power_w: 250.0 * 0.75, // sustained board power below TDP
+        }
+    }
+}
+
+impl Platform for TeslaP100 {
+    fn name(&self) -> &'static str {
+        "NP100"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        let flops = 2.0 * effective_macs(model, false, false); // dense
+        let fps = self.peak_flops * self.batch1_efficiency / flops;
+        let energy = self.power_w / fps;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: self.power_w,
+            fps,
+            fps_per_watt: fps / self.power_w,
+            epb_j: energy / bits_per_inference(model, 32.0, 32.0),
+        }
+    }
+}
+
+/// Intel Xeon Platinum 9282: 56 cores, AVX-512, 3.2 TFLOP/s FP32 peak,
+/// 400 W TDP.
+#[derive(Debug, Clone)]
+pub struct XeonPlatinum9282 {
+    pub peak_flops: f64,
+    pub batch1_efficiency: f64,
+    pub power_w: f64,
+}
+
+impl Default for XeonPlatinum9282 {
+    fn default() -> Self {
+        Self {
+            peak_flops: 3.2e12,
+            batch1_efficiency: 0.06,
+            power_w: 400.0 * 0.8,
+        }
+    }
+}
+
+impl Platform for XeonPlatinum9282 {
+    fn name(&self) -> &'static str {
+        "IXP"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        let flops = 2.0 * effective_macs(model, false, false);
+        let fps = self.peak_flops * self.batch1_efficiency / flops;
+        let energy = self.power_w / fps;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: self.power_w,
+            fps,
+            fps_per_watt: fps / self.power_w,
+            epb_j: energy / bits_per_inference(model, 32.0, 32.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_beats_cpu_in_fps() {
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let g = TeslaP100::default().evaluate(&m);
+        let c = XeonPlatinum9282::default().evaluate(&m);
+        assert!(g.fps > c.fps);
+    }
+
+    #[test]
+    fn both_burn_hundreds_of_watts() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        assert!(TeslaP100::default().evaluate(&m).power_w > 100.0);
+        assert!(XeonPlatinum9282::default().evaluate(&m).power_w > 100.0);
+    }
+
+    #[test]
+    fn fps_scales_inverse_with_model() {
+        let g = TeslaP100::default();
+        let mnist = g.evaluate(&ModelDesc::builtin("mnist").unwrap());
+        let stl = g.evaluate(&ModelDesc::builtin("stl10").unwrap());
+        assert!(mnist.fps > stl.fps * 50.0);
+    }
+}

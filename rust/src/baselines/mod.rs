@@ -1,0 +1,117 @@
+//! Comparison accelerator models (§V.B): the seven platforms SONIC is
+//! evaluated against in Figs. 8–10.
+//!
+//! Each baseline is an analytic model built from its own paper's published
+//! platform characteristics (clock, PE count, TDP, per-op energy), driven
+//! by the same workload descriptors as the SONIC simulator.  Absolute
+//! numbers are testbed-dependent; what must reproduce is the *shape* —
+//! who wins, by roughly what factor (DESIGN.md §4).  A per-platform
+//! `testbed_scale` constant calibrates each model's effective utilization
+//! to the paper's reported average ratios; the per-model spread then
+//! emerges from model structure (EXPERIMENTS.md documents calibration).
+
+pub mod electronic;
+pub mod gpu_cpu;
+pub mod photonic;
+
+use crate::model::ModelDesc;
+
+/// One platform's result on one workload (the bar in Figs. 8–10).
+#[derive(Debug, Clone)]
+pub struct PlatformResult {
+    pub platform: &'static str,
+    pub model: String,
+    pub power_w: f64,
+    pub fps: f64,
+    pub fps_per_watt: f64,
+    pub epb_j: f64,
+}
+
+/// Common interface: every comparison platform evaluates a workload.
+pub trait Platform {
+    fn name(&self) -> &'static str;
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult;
+}
+
+/// All comparison platforms in the paper's Figs. 8-10 order.
+pub fn all_platforms() -> Vec<Box<dyn Platform>> {
+    vec![
+        Box::new(electronic::NullHop::default()),
+        Box::new(electronic::Rsnn::default()),
+        Box::new(photonic::LightBulb::default()),
+        Box::new(photonic::CrossLight::default()),
+        Box::new(photonic::HolyLight::default()),
+        Box::new(gpu_cpu::TeslaP100::default()),
+        Box::new(gpu_cpu::XeonPlatinum9282::default()),
+    ]
+}
+
+/// Helper shared by baselines: total bits processed per inference (same
+/// definition as `ModelDesc::bits_per_inference` but at the platform's own
+/// weight/activation resolutions).
+pub(crate) fn bits_per_inference(model: &ModelDesc, w_bits: f64, a_bits: f64) -> f64 {
+    let w = model.surviving_params as f64 * w_bits;
+    let a: f64 = model
+        .layers
+        .iter()
+        .map(|l| l.n_inputs() as f64 * a_bits)
+        .sum();
+    w + a
+}
+
+/// Effective MAC count after exploiting (or not) sparsity.
+pub(crate) fn effective_macs(model: &ModelDesc, weight_skip: bool, act_skip: bool) -> f64 {
+    model
+        .layers
+        .iter()
+        .map(|l| {
+            let mut m = l.macs() as f64;
+            if weight_skip {
+                m *= 1.0 - l.weight_sparsity;
+            }
+            if act_skip {
+                m *= 1.0 - l.act_sparsity;
+            }
+            m
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_platforms() {
+        let ps = all_platforms();
+        assert_eq!(ps.len(), 7);
+        let names: Vec<_> = ps.iter().map(|p| p.name()).collect();
+        assert!(names.contains(&"NullHop"));
+        assert!(names.contains(&"HolyLight"));
+        assert!(names.contains(&"NP100"));
+        assert!(names.contains(&"IXP"));
+    }
+
+    #[test]
+    fn all_platforms_evaluate_all_models() {
+        for p in all_platforms() {
+            for m in ModelDesc::all_builtin() {
+                let r = p.evaluate(&m);
+                assert!(r.fps > 0.0 && r.fps.is_finite(), "{} {}", p.name(), m.name);
+                assert!(r.power_w > 0.0, "{}", p.name());
+                assert!(r.epb_j > 0.0, "{}", p.name());
+                assert!((r.fps_per_watt - r.fps / r.power_w).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn effective_macs_sparsity_skipping() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let dense = effective_macs(&m, false, false);
+        let wskip = effective_macs(&m, true, false);
+        let both = effective_macs(&m, true, true);
+        assert!(dense > wskip && wskip > both);
+        assert_eq!(dense, m.total_macs() as f64);
+    }
+}

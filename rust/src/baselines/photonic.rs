@@ -1,0 +1,233 @@
+//! Photonic accelerator baselines: CrossLight [8], HolyLight [10], and
+//! LightBulb [23].
+//!
+//! All three are *dense* designs — none exploits sparsity or clustering —
+//! so they are modelled through the same VDU cost engine as SONIC with the
+//! sparsity/clustering/compression levers disabled, plus per-platform
+//! device adjustments from their papers:
+//!
+//! * **CrossLight**: non-coherent MR-based, with cross-layer device/circuit
+//!   optimizations that lower tuning power — the closest relative to SONIC.
+//! * **HolyLight**: microdisk-based datacenter design with deeper
+//!   electronic conversion chains (it shuttles partial sums through
+//!   ADC/DAC every stage), costing it the most energy per operation.
+//! * **LightBulb**: photonic *binary* ConvNet accelerator — XNOR-style
+//!   1-bit ops at high rate, cheap DACs, but needs many more 1-bit ops and
+//!   full-precision accumulation readout.
+//!
+//! `testbed_scale` calibrates each model's effective utilization to the
+//! paper's reported average FPS/W and EPB ratios (EXPERIMENTS.md §Figs 8-10).
+
+use super::{bits_per_inference, Platform, PlatformResult};
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
+use crate::sim::engine::simulate;
+
+/// Strip all sparsity awareness from a descriptor: dense photonic
+/// accelerators pay for every parameter and every activation.
+fn densified(model: &ModelDesc) -> ModelDesc {
+    let mut m = model.clone();
+    m.surviving_params = m.total_params;
+    for l in &mut m.layers {
+        l.weight_sparsity = 0.0;
+        l.act_sparsity = 0.0;
+    }
+    m
+}
+
+#[derive(Debug, Clone)]
+pub struct CrossLight {
+    /// Throughput scale vs the dense VDU pipeline: CrossLight's
+    /// cross-layer device optimizations support faster MR programming and
+    /// wider parallel banks (EXPERIMENTS.md §Calibration).
+    pub testbed_scale: f64,
+    /// Power adjustment from their cross-layer tuning optimizations.
+    pub power_scale: f64,
+    /// Conversion-chain/laser energy folded into the EPB metric.
+    pub epb_overhead: f64,
+}
+
+impl Default for CrossLight {
+    fn default() -> Self {
+        Self {
+            testbed_scale: 6.410,
+            power_scale: 0.9,
+            epb_overhead: 26.14,
+        }
+    }
+}
+
+impl Platform for CrossLight {
+    fn name(&self) -> &'static str {
+        "CrossLight"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        // Dense, unclustered (16-bit weight DACs), no gating/compression.
+        let cfg = SonicConfig::paper_best()
+            .without_power_gating()
+            .without_compression()
+            .without_clustering();
+        let dense = densified(model);
+        let s = simulate(&dense, &cfg);
+        let fps = s.fps * self.testbed_scale;
+        let power = s.avg_power_w * self.power_scale;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: power,
+            fps,
+            fps_per_watt: fps / power,
+            epb_j: (power / fps) * self.epb_overhead
+                / bits_per_inference(&dense, 16.0, 16.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HolyLight {
+    pub testbed_scale: f64,
+    pub power_scale: f64,
+    /// Per-stage O/E/O conversion energy folded into the EPB metric.
+    pub epb_overhead: f64,
+}
+
+impl Default for HolyLight {
+    fn default() -> Self {
+        Self {
+            // Microdisk design: wide wavelength parallelism, but per-stage
+            // O/E/O conversion raises power (EXPERIMENTS.md §Calibration).
+            testbed_scale: 2.051,
+            power_scale: 1.35,
+            epb_overhead: 8.341,
+        }
+    }
+}
+
+impl Platform for HolyLight {
+    fn name(&self) -> &'static str {
+        "HolyLight"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        let cfg = SonicConfig::paper_best()
+            .without_power_gating()
+            .without_compression()
+            .without_clustering();
+        let dense = densified(model);
+        let s = simulate(&dense, &cfg);
+        let fps = s.fps * self.testbed_scale;
+        let power = s.avg_power_w * self.power_scale;
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: power,
+            fps,
+            fps_per_watt: fps / power,
+            epb_j: (power / fps) * self.epb_overhead
+                / bits_per_inference(&dense, 16.0, 16.0),
+        }
+    }
+}
+
+/// LightBulb: photonic binary CNN accelerator.  Binarization gives it a
+/// high op rate with cheap converters, but every weight/activation is
+/// 1-bit, so the *useful bits* per inference collapse, hurting EPB; and
+/// batch-1 CNN inference still pays full-precision accumulation readout.
+#[derive(Debug, Clone)]
+pub struct LightBulb {
+    /// Sustained binary-op rate (XNOR-ops/s).
+    pub binary_ops_per_s: f64,
+    /// Ops multiplier: binary networks need wider layers to match accuracy.
+    pub binarization_overhead: f64,
+    pub power_w: f64,
+    /// Accumulation-readout energy folded into the EPB metric.
+    pub epb_overhead: f64,
+}
+
+impl Default for LightBulb {
+    fn default() -> Self {
+        Self {
+            // Sustained rate bounded by full-precision accumulation readout
+            // at batch 1 (EXPERIMENTS.md §Calibration).
+            binary_ops_per_s: 6.6874e10,
+            binarization_overhead: 6.0,
+            power_w: 18.0,
+            epb_overhead: 1.64,
+        }
+    }
+}
+
+impl Platform for LightBulb {
+    fn name(&self) -> &'static str {
+        "LightBulb"
+    }
+
+    fn evaluate(&self, model: &ModelDesc) -> PlatformResult {
+        let ops = model.total_macs() as f64 * self.binarization_overhead;
+        let fps = self.binary_ops_per_s / ops;
+        let energy = self.power_w / fps;
+        // 1-bit weights and activations in the EPB denominator.
+        let bits = bits_per_inference(&densified(model), 1.0, 1.0);
+        PlatformResult {
+            platform: self.name(),
+            model: model.name.clone(),
+            power_w: self.power_w,
+            fps,
+            fps_per_watt: fps / self.power_w,
+            epb_j: energy * self.epb_overhead / bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::simulate;
+
+    #[test]
+    fn dense_photonics_slower_than_sonic_per_watt() {
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let sonic = simulate(&m, &SonicConfig::paper_best());
+        for p in [
+            &CrossLight::default() as &dyn Platform,
+            &HolyLight::default(),
+        ] {
+            let r = p.evaluate(&m);
+            assert!(
+                sonic.fps_per_watt > r.fps_per_watt * 1.5,
+                "{}: sonic {} vs {}",
+                p.name(),
+                sonic.fps_per_watt,
+                r.fps_per_watt
+            );
+        }
+    }
+
+    #[test]
+    fn holylight_worst_photonic() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let hl = HolyLight::default().evaluate(&m);
+        let cl = CrossLight::default().evaluate(&m);
+        assert!(hl.fps_per_watt < cl.fps_per_watt);
+        assert!(hl.epb_j > cl.epb_j);
+    }
+
+    #[test]
+    fn lightbulb_high_epb_from_1bit_denominator() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let lb = LightBulb::default().evaluate(&m);
+        let cl = CrossLight::default().evaluate(&m);
+        // binarization collapses the bit denominator -> EPB comparable or
+        // worse than full-precision photonics despite high op rate
+        assert!(lb.epb_j > cl.epb_j * 0.5);
+    }
+
+    #[test]
+    fn densified_strips_sparsity() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let d = densified(&m);
+        assert_eq!(d.surviving_params, d.total_params);
+        assert!(d.layers.iter().all(|l| l.weight_sparsity == 0.0));
+    }
+}

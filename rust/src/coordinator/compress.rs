@@ -1,0 +1,142 @@
+//! FC-layer dataflow compression (§III.C, Fig. 1).
+//!
+//! Given an activation vector `a` and weight matrix `W` (out x in), the
+//! control unit identifies zero activations and drops them *and* the weight
+//! columns they would have multiplied.  The result is a **dense** activation
+//! vector and a narrower weight matrix; residual sparsity inside the kept
+//! weight columns is handled downstream by VCSEL power gating (§IV.B).
+//! The output vector is bit-exact with the uncompressed product.
+
+use crate::sparsity::ColMatrix;
+
+/// A compressed FC operand pair ready for VDU scheduling.
+#[derive(Debug, Clone)]
+pub struct CompressedFc {
+    /// Dense (zero-free) activation vector.
+    pub activations: Vec<f32>,
+    /// Weight matrix restricted to kept columns (out x kept, column-major).
+    pub weights: ColMatrix,
+    /// Original input dimension (for accounting).
+    pub original_dim: usize,
+    /// Indices of the kept activations (ascending).
+    pub kept: Vec<usize>,
+}
+
+impl CompressedFc {
+    /// Compression ratio achieved on the activation vector.
+    pub fn ratio(&self) -> f64 {
+        if self.original_dim == 0 {
+            return 1.0;
+        }
+        self.kept.len() as f64 / self.original_dim as f64
+    }
+
+    /// Residual weight sparsity inside the kept columns (drives gating).
+    pub fn residual_weight_sparsity(&self) -> f64 {
+        let total = self.weights.data.len();
+        if total == 0 {
+            return 0.0;
+        }
+        let zeros = self.weights.data.iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / total as f64
+    }
+}
+
+/// Fig. 1(a)->(b): drop zero activations and their weight columns.
+pub fn compress_fc(activations: &[f32], weights: &ColMatrix) -> CompressedFc {
+    assert_eq!(
+        activations.len(),
+        weights.cols,
+        "activation/weight dims mismatch"
+    );
+    let kept: Vec<usize> = activations
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| a != 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    let dense: Vec<f32> = kept.iter().map(|&i| activations[i]).collect();
+    let w = weights.keep_cols(&kept);
+    CompressedFc {
+        activations: dense,
+        weights: w,
+        original_dim: activations.len(),
+        kept,
+    }
+}
+
+/// Reference FC product on the *compressed* operands (used by tests and by
+/// the functional fallback path when PJRT artifacts are absent).
+pub fn fc_product(c: &CompressedFc) -> Vec<f32> {
+    c.weights.matvec(&c.activations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dense_matvec(rows: usize, cols: usize, w_rm: &[f32], a: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                y[r] += w_rm[r * cols + c] * a[c];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn compression_is_lossless() {
+        let mut rng = Rng::new(42);
+        for _ in 0..20 {
+            let (rows, cols) = (rng.range(1, 20), rng.range(1, 30));
+            let w_rm = rng.normal_vec(rows * cols);
+            let a = rng.sparse_vec(cols, 0.6);
+            let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+            let c = compress_fc(&a, &w);
+            let got = fc_product(&c);
+            let want = dense_matvec(rows, cols, &w_rm, &a);
+            for (g, w_) in got.iter().zip(&want) {
+                assert!((g - w_).abs() < 1e-4, "{g} vs {w_}");
+            }
+        }
+    }
+
+    #[test]
+    fn drops_exactly_the_zero_columns() {
+        let a = vec![1.0, 0.0, 2.0, 0.0];
+        let w = ColMatrix::from_row_major(2, 4, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let c = compress_fc(&a, &w);
+        assert_eq!(c.kept, vec![0, 2]);
+        assert_eq!(c.activations, vec![1.0, 2.0]);
+        assert_eq!(c.weights.cols, 2);
+        assert!((c.ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_zero_activations() {
+        let a = vec![0.0; 5];
+        let w = ColMatrix::from_row_major(3, 5, &vec![1.0; 15]);
+        let c = compress_fc(&a, &w);
+        assert_eq!(c.activations.len(), 0);
+        assert_eq!(fc_product(&c), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_input_passthrough() {
+        let a = vec![1.0, 2.0, 3.0];
+        let w = ColMatrix::from_row_major(2, 3, &[1., 0., 0., 0., 1., 0.]);
+        let c = compress_fc(&a, &w);
+        assert_eq!(c.ratio(), 1.0);
+        assert_eq!(c.activations, a);
+    }
+
+    #[test]
+    fn residual_sparsity_reported() {
+        let a = vec![1.0, 1.0];
+        let w = ColMatrix::from_row_major(2, 2, &[0.0, 1.0, 0.0, 1.0]);
+        let c = compress_fc(&a, &w);
+        assert!((c.residual_weight_sparsity() - 0.5).abs() < 1e-12);
+    }
+}

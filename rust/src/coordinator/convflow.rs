@@ -1,0 +1,242 @@
+//! CONV-layer dataflow (§III.C, Fig. 2): unroll the convolution into
+//! vector-dot-products (im2col), then compress on the *kernel* side —
+//! zero kernel entries and the IF-map elements they would touch never ride
+//! the waveguide.  The kernel vectors handed to CONV VDUs are dense; the
+//! IF patches may retain sparsity, gated at the VCSELs.
+
+/// A compressed CONV kernel: one per output channel.
+#[derive(Debug, Clone)]
+pub struct CompressedKernel {
+    /// Dense (zero-free) kernel values.
+    pub values: Vec<f32>,
+    /// Flat patch indices (into the kh*kw*cin unrolled patch) each value
+    /// multiplies.
+    pub patch_idx: Vec<u32>,
+    /// Original unrolled length kh*kw*cin.
+    pub original_len: usize,
+}
+
+impl CompressedKernel {
+    pub fn from_dense(kernel_flat: &[f32]) -> Self {
+        let mut values = Vec::new();
+        let mut patch_idx = Vec::new();
+        for (i, &v) in kernel_flat.iter().enumerate() {
+            if v != 0.0 {
+                values.push(v);
+                patch_idx.push(i as u32);
+            }
+        }
+        Self {
+            values,
+            patch_idx,
+            original_len: kernel_flat.len(),
+        }
+    }
+
+    pub fn ratio(&self) -> f64 {
+        if self.original_len == 0 {
+            return 1.0;
+        }
+        self.values.len() as f64 / self.original_len as f64
+    }
+}
+
+/// SAME-padded im2col patch extraction for one output pixel.
+/// `x` is [h][w][c] flattened row-major; returns the kh*kw*cin patch.
+pub fn extract_patch(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(kh * kw * c);
+    extract_patch_into(x, h, w, c, oy, ox, kh, kw, &mut out);
+    out
+}
+
+/// Allocation-free variant for the hot loop: clears and refills `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_patch_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    oy: usize,
+    ox: usize,
+    kh: usize,
+    kw: usize,
+    out: &mut Vec<f32>,
+) {
+    let (ph, pw) = (kh / 2, kw / 2);
+    out.clear();
+    for dy in 0..kh {
+        let iy = oy as isize + dy as isize - ph as isize;
+        if iy < 0 || iy >= h as isize {
+            out.extend(std::iter::repeat(0.0).take(kw * c));
+            continue;
+        }
+        let row_base = iy as usize * w;
+        for dx in 0..kw {
+            let ix = ox as isize + dx as isize - pw as isize;
+            if ix < 0 || ix >= w as isize {
+                out.extend(std::iter::repeat(0.0).take(c));
+            } else {
+                let base = (row_base + ix as usize) * c;
+                out.extend_from_slice(&x[base..base + c]);
+            }
+        }
+    }
+}
+
+/// Dot product of a compressed kernel against an (uncompressed) patch —
+/// only the kept indices are gathered, exactly what the VDU local buffer
+/// receives.  Hot path: gathers are unchecked (indices are validated at
+/// kernel construction) and accumulate into 4 lanes for ILP.
+pub fn compressed_dot(k: &CompressedKernel, patch: &[f32]) -> f32 {
+    assert_eq!(patch.len(), k.original_len);
+    let n = k.values.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let vals = &k.values;
+    let idx = &k.patch_idx;
+    let chunks = n / 4;
+    // safety: patch_idx entries are < original_len == patch.len() by
+    // construction (CompressedKernel::from_dense enumerates the patch).
+    unsafe {
+        for c in 0..chunks {
+            let b = 4 * c;
+            s0 += vals.get_unchecked(b) * patch.get_unchecked(*idx.get_unchecked(b) as usize);
+            s1 += vals.get_unchecked(b + 1)
+                * patch.get_unchecked(*idx.get_unchecked(b + 1) as usize);
+            s2 += vals.get_unchecked(b + 2)
+                * patch.get_unchecked(*idx.get_unchecked(b + 2) as usize);
+            s3 += vals.get_unchecked(b + 3)
+                * patch.get_unchecked(*idx.get_unchecked(b + 3) as usize);
+        }
+        for i in 4 * chunks..n {
+            s0 += vals.get_unchecked(i) * patch.get_unchecked(*idx.get_unchecked(i) as usize);
+        }
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Full (functional) convolution through the compressed dataflow: the
+/// reference the scheduler tests against, and the fallback compute path.
+/// x: [h][w][cin] flat; kernels: per-out-channel compressed; returns
+/// [h][w][cout] flat.
+pub fn conv2d_compressed(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    kernels: &[CompressedKernel],
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let cout = kernels.len();
+    let mut out = vec![0.0f32; h * w * cout];
+    let mut patch = Vec::with_capacity(kh * kw * cin);
+    for oy in 0..h {
+        for ox in 0..w {
+            extract_patch_into(x, h, w, cin, oy, ox, kh, kw, &mut patch);
+            let base = (oy * w + ox) * cout;
+            for (oc, k) in kernels.iter().enumerate() {
+                out[base + oc] = compressed_dot(k, &patch);
+            }
+        }
+    }
+    out
+}
+
+/// Measure activation sparsity of an IF patch stream (drives the gating
+/// accounting in the schedule model).
+pub fn patch_sparsity(patch: &[f32]) -> f64 {
+    if patch.is_empty() {
+        return 0.0;
+    }
+    patch.iter().filter(|&&v| v == 0.0).count() as f64 / patch.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dense_conv2d(
+        x: &[f32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        kflat: &[Vec<f32>], // per out channel, kh*kw*cin
+        kh: usize,
+        kw: usize,
+    ) -> Vec<f32> {
+        let cout = kflat.len();
+        let mut out = vec![0.0f32; h * w * cout];
+        for oy in 0..h {
+            for ox in 0..w {
+                let patch = extract_patch(x, h, w, cin, oy, ox, kh, kw);
+                for (oc, k) in kflat.iter().enumerate() {
+                    out[(oy * w + ox) * cout + oc] =
+                        k.iter().zip(&patch).map(|(a, b)| a * b).sum();
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn compressed_kernel_drops_zeros_only() {
+        let k = CompressedKernel::from_dense(&[0.0, 1.5, 0.0, -2.0]);
+        assert_eq!(k.values, vec![1.5, -2.0]);
+        assert_eq!(k.patch_idx, vec![1, 3]);
+        assert!((k.ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_conv_matches_dense_conv() {
+        let mut rng = Rng::new(7);
+        let (h, w, cin, cout, kh, kw) = (6, 5, 3, 4, 3, 3);
+        let x = rng.normal_vec(h * w * cin);
+        let kflat: Vec<Vec<f32>> = (0..cout)
+            .map(|_| rng.sparse_vec(kh * kw * cin, 0.5))
+            .collect();
+        let kernels: Vec<_> = kflat
+            .iter()
+            .map(|k| CompressedKernel::from_dense(k))
+            .collect();
+        let got = conv2d_compressed(&x, h, w, cin, &kernels, kh, kw);
+        let want = dense_conv2d(&x, h, w, cin, &kflat, kh, kw);
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn patch_padding_at_corner() {
+        // 3x3 single-channel image of ones; corner patch has 5 padded zeros
+        let x = vec![1.0; 9];
+        let p = extract_patch(&x, 3, 3, 1, 0, 0, 3, 3);
+        assert_eq!(p.len(), 9);
+        assert_eq!(p.iter().filter(|&&v| v == 0.0).count(), 5);
+        assert!((patch_sparsity(&p) - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_zero_kernel_yields_empty_vectors() {
+        let k = CompressedKernel::from_dense(&[0.0; 27]);
+        assert_eq!(k.values.len(), 0);
+        let patch = vec![1.0; 27];
+        assert_eq!(compressed_dot(&k, &patch), 0.0);
+    }
+
+    #[test]
+    fn center_patch_has_no_padding() {
+        let x: Vec<f32> = (0..25).map(|i| i as f32).collect();
+        let p = extract_patch(&x, 5, 5, 1, 2, 2, 3, 3);
+        assert_eq!(p, vec![6., 7., 8., 11., 12., 13., 16., 17., 18.]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Main-memory interface model (§IV.C: "an electronic-control unit for
+//! interfacing with the main memory, retrieving the parameters, mapping
+//! the compressed parameters").
+//!
+//! Tracks the bytes each layer moves (compressed weights, activations,
+//! partial sums) and converts them to DRAM time/energy so the simulator
+//! can expose when a configuration turns memory-bound — the effect that
+//! caps how many VDUs are worth instantiating.
+
+use crate::model::{Layer, LayerKind, ModelDesc};
+
+/// DDR4-class interface characteristics.
+#[derive(Debug, Clone)]
+pub struct MemoryInterface {
+    /// Sustained bandwidth (bytes/s).  Single-channel DDR4-2400 ~ 15 GB/s.
+    pub bandwidth_bytes_per_s: f64,
+    /// Energy per bit moved (J/bit); ~20 pJ/bit for DDR4.
+    pub energy_per_bit_j: f64,
+}
+
+impl Default for MemoryInterface {
+    fn default() -> Self {
+        Self {
+            bandwidth_bytes_per_s: 15e9,
+            energy_per_bit_j: 20e-12,
+        }
+    }
+}
+
+/// Traffic for one layer of one inference (bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerTraffic {
+    /// Compressed weight bytes streamed into VDU local buffers.
+    pub weight_bytes: f64,
+    /// Input activations read (compressed where the dataflow compresses).
+    pub act_in_bytes: f64,
+    /// Output activations written back.
+    pub act_out_bytes: f64,
+}
+
+impl LayerTraffic {
+    pub fn total(&self) -> f64 {
+        self.weight_bytes + self.act_in_bytes + self.act_out_bytes
+    }
+}
+
+/// Traffic model under SONIC's compression (weights at `w_bits`
+/// resolution, only surviving weights move; activations at `a_bits`).
+pub fn layer_traffic(
+    layer: &Layer,
+    w_bits: u32,
+    a_bits: u32,
+    compression: bool,
+) -> LayerTraffic {
+    let w_frac = if compression {
+        1.0 - layer.weight_sparsity
+    } else {
+        1.0
+    };
+    let a_frac = if compression {
+        1.0 - layer.act_sparsity
+    } else {
+        1.0
+    };
+    let weights = match layer.kind {
+        LayerKind::Conv {
+            kernel,
+            in_ch,
+            out_ch,
+            ..
+        } => (kernel * kernel * in_ch * out_ch) as f64,
+        LayerKind::Fc { in_dim, out_dim, .. } => (in_dim * out_dim) as f64,
+    };
+    // index overhead of the compressed format: a NullHop-style position
+    // bitmap — one bit per original weight slot
+    let idx_bytes = if compression { weights / 8.0 } else { 0.0 };
+    LayerTraffic {
+        weight_bytes: weights * w_frac * w_bits as f64 / 8.0 + idx_bytes,
+        act_in_bytes: layer.n_inputs() as f64 * a_frac * a_bits as f64 / 8.0,
+        act_out_bytes: layer.n_outputs() as f64 * a_bits as f64 / 8.0,
+    }
+}
+
+/// Whole-model traffic + derived memory time/energy.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryStats {
+    pub bytes: f64,
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+pub fn model_traffic(
+    model: &ModelDesc,
+    mem: &MemoryInterface,
+    compression: bool,
+) -> MemoryStats {
+    let mut bytes = 0.0;
+    for l in &model.layers {
+        bytes += layer_traffic(l, model.weight_dac_bits, model.act_dac_bits, compression)
+            .total();
+    }
+    MemoryStats {
+        bytes,
+        time_s: bytes / mem.bandwidth_bytes_per_s,
+        energy_j: bytes * 8.0 * mem.energy_per_bit_j,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+
+    #[test]
+    fn compression_reduces_traffic() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let mem = MemoryInterface::default();
+        let with = model_traffic(&m, &mem, true);
+        let without = model_traffic(&m, &mem, false);
+        assert!(with.bytes < without.bytes);
+        assert!(with.energy_j < without.energy_j);
+    }
+
+    #[test]
+    fn fc_layer_traffic_hand_count() {
+        // 100x10 dense FC, 16-bit weights/acts, no compression:
+        // weights 1000*2B, in 100*2B, out 10*2B
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc {
+                in_dim: 100,
+                out_dim: 10,
+                relu: false,
+            },
+            weight_sparsity: 0.0,
+            act_sparsity: 0.0,
+            unique_weights: 64,
+        };
+        let t = layer_traffic(&l, 16, 16, false);
+        assert_eq!(t.weight_bytes, 2000.0);
+        assert_eq!(t.act_in_bytes, 200.0);
+        assert_eq!(t.act_out_bytes, 20.0);
+    }
+
+    #[test]
+    fn sparse_weights_move_fewer_bytes_plus_index() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc {
+                in_dim: 100,
+                out_dim: 10,
+                relu: false,
+            },
+            weight_sparsity: 0.5,
+            act_sparsity: 0.0,
+            unique_weights: 64,
+        };
+        // 6-bit weights: 500 * 6/8 B data + 1000-bit position bitmap
+        let t = layer_traffic(&l, 6, 16, true);
+        assert!((t.weight_bytes - (500.0 * 0.75 + 125.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stl10_is_memory_heaviest() {
+        let mem = MemoryInterface::default();
+        let stl = model_traffic(&ModelDesc::builtin("stl10").unwrap(), &mem, true);
+        let mnist = model_traffic(&ModelDesc::builtin("mnist").unwrap(), &mem, true);
+        assert!(stl.bytes > mnist.bytes * 20.0);
+    }
+
+    #[test]
+    fn time_consistent_with_bandwidth() {
+        let mem = MemoryInterface::default();
+        let s = model_traffic(&ModelDesc::builtin("svhn").unwrap(), &mem, true);
+        assert!((s.time_s - s.bytes / mem.bandwidth_bytes_per_s).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the paper's system contribution, in Rust.
+//!
+//! * [`compress`] — FC dataflow compression (Fig. 1): zero activations and
+//!   their weight columns never reach the VDUs.
+//! * [`convflow`] — CONV dataflow (Fig. 2): im2col unrolling + kernel-side
+//!   compression into dense kernel vectors.
+//! * [`schedule`] — decomposition of compressed vectors into n/m-lane
+//!   chunks and their assignment onto the `(N, K)` VDU array, with
+//!   power-gating accounting per chunk.
+//! * [`exec`] — thread-pool + channel substrate (tokio substitute).
+//! * [`serve`] — the request router / dynamic batcher serving inference
+//!   through the PJRT runtime while the schedule model tracks photonic
+//!   latency/energy.
+
+pub mod compress;
+pub mod convflow;
+pub mod exec;
+pub mod memory;
+pub mod schedule;
+pub mod serve;

@@ -1,0 +1,268 @@
+//! VDU scheduler (§IV.C): decompose compressed vectors into n/m-lane
+//! chunks and assign them round-robin onto the `(N, K)` VDU array, while
+//! accounting power-gated lanes per chunk.
+//!
+//! This is the cycle-accurate-ish counterpart of the analytic model in
+//! `sim::engine`: given *actual data* (a compressed FC operand or a
+//! compressed CONV kernel set), it produces the exact pass list a real
+//! control unit would issue, which integration tests reconcile against the
+//! analytic pass counts.
+
+use crate::arch::SonicConfig;
+
+use super::compress::CompressedFc;
+use super::convflow::CompressedKernel;
+
+/// One scheduled VDU pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pass {
+    /// Which VDU executes it.
+    pub vdu: u32,
+    /// Pipeline round (passes with the same round run concurrently).
+    pub round: u32,
+    /// Lanes carrying data (<= lane count).
+    pub lanes_used: u16,
+    /// Lanes carrying non-zero data (drives VCSEL gating).
+    pub lanes_active: u16,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub passes: Vec<Pass>,
+    pub lanes: usize,
+    pub n_vdus: usize,
+}
+
+impl Schedule {
+    pub fn n_rounds(&self) -> u32 {
+        self.passes.iter().map(|p| p.round + 1).max().unwrap_or(0)
+    }
+
+    /// Mean active-lane fraction (the gating win).
+    pub fn activity(&self) -> f64 {
+        if self.passes.is_empty() {
+            return 0.0;
+        }
+        let active: f64 = self.passes.iter().map(|p| p.lanes_active as f64).sum();
+        active / (self.passes.len() * self.lanes) as f64
+    }
+
+    /// Latency under the analytic timing model: rounds pipeline at the
+    /// initiation interval; one fill; per-layer setup charged by caller.
+    pub fn latency_s(&self, interval_s: f64, fill_s: f64) -> f64 {
+        self.n_rounds() as f64 * interval_s + fill_s
+    }
+}
+
+/// Schedule an FC layer: each output neuron's dot product over the dense
+/// activation vector is decomposed into m-lane chunks; the *weight* row
+/// supplies the activity mask (residual sparsity -> gating).
+pub fn schedule_fc(c: &CompressedFc, cfg: &SonicConfig) -> Schedule {
+    let lanes = cfg.m;
+    let n_vdus = cfg.n_fc_vdus as u64;
+    let rows = c.weights.rows;
+    let cols = c.weights.cols;
+    // Pre-size: every row yields ceil(cols/lanes) passes.
+    let per_row = cols.div_ceil(lanes).max(if cols == 0 { 0 } else { 1 });
+    let mut passes = Vec::with_capacity(rows * per_row);
+    let mut slot: u64 = 0;
+    let data = &c.weights.data; // column-major: [col*rows + row]
+    for out in 0..rows {
+        // walk the row in lane-sized chunks, counting non-zeros directly
+        // (no mask allocation; strided reads amortized by chunking).
+        let mut col = 0;
+        while col < cols {
+            let end = (col + lanes).min(cols);
+            let used = (end - col) as u16;
+            let active = if cfg.power_gating {
+                let mut a = 0u16;
+                let mut idx = col * rows + out;
+                for _ in col..end {
+                    // safety: idx = c*rows + out < cols*rows == data.len()
+                    if unsafe { *data.get_unchecked(idx) } != 0.0 {
+                        a += 1;
+                    }
+                    idx += rows;
+                }
+                a
+            } else {
+                used
+            };
+            passes.push(Pass {
+                vdu: (slot % n_vdus) as u32,
+                round: (slot / n_vdus) as u32,
+                lanes_used: used,
+                lanes_active: active,
+            });
+            slot += 1;
+            col = end;
+        }
+    }
+    Schedule {
+        passes,
+        lanes,
+        n_vdus: n_vdus as usize,
+    }
+}
+
+/// Schedule a CONV layer for one output pixel stream: each (pixel, out
+/// channel) pair needs the compressed kernel decomposed into n-lane chunks;
+/// the IF patch supplies the activity mask.
+pub fn schedule_conv(
+    kernels: &[CompressedKernel],
+    patches: &[Vec<f32>], // one unrolled patch per output pixel
+    cfg: &SonicConfig,
+) -> Schedule {
+    let lanes = cfg.n;
+    let n_vdus = cfg.n_conv_vdus as u64;
+    let total_chunks: usize = kernels
+        .iter()
+        .map(|k| k.values.len().div_ceil(lanes).max(1))
+        .sum();
+    let mut passes = Vec::with_capacity(patches.len() * total_chunks);
+    let mut slot: u64 = 0;
+    for patch in patches {
+        for k in kernels {
+            let nnz = k.patch_idx.len();
+            if nnz == 0 {
+                passes.push(Pass {
+                    vdu: (slot % n_vdus) as u32,
+                    round: (slot / n_vdus) as u32,
+                    lanes_used: 0,
+                    lanes_active: 0,
+                });
+                slot += 1;
+                continue;
+            }
+            // walk the compressed kernel's gather indices in lane chunks,
+            // counting live IF elements directly (no mask allocation).
+            let mut pos = 0;
+            while pos < nnz {
+                let end = (pos + lanes).min(nnz);
+                let used = (end - pos) as u16;
+                let active = if cfg.power_gating {
+                    k.patch_idx[pos..end]
+                        .iter()
+                        .filter(|&&i| patch[i as usize] != 0.0)
+                        .count() as u16
+                } else {
+                    used
+                };
+                passes.push(Pass {
+                    vdu: (slot % n_vdus) as u32,
+                    round: (slot / n_vdus) as u32,
+                    lanes_used: used,
+                    lanes_active: active,
+                });
+                slot += 1;
+                pos = end;
+            }
+        }
+    }
+    Schedule {
+        passes,
+        lanes,
+        n_vdus: n_vdus as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compress::compress_fc;
+    use crate::sparsity::ColMatrix;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> SonicConfig {
+        SonicConfig::with_geometry(5, 50, 50, 10)
+    }
+
+    #[test]
+    fn fc_pass_count_matches_analytic() {
+        // 100 outputs x dense vector of 130 -> ceil(130/50)=3 passes each.
+        let mut rng = Rng::new(1);
+        let rows = 100;
+        let cols = 130;
+        let w = ColMatrix::from_row_major(rows, cols, &rng.normal_vec(rows * cols));
+        let a = rng.normal_vec(cols); // fully dense
+        let c = compress_fc(&a, &w);
+        let s = schedule_fc(&c, &cfg());
+        assert_eq!(s.passes.len(), rows * 3);
+        // 300 passes over 10 VDUs -> 30 rounds
+        assert_eq!(s.n_rounds(), 30);
+    }
+
+    #[test]
+    fn fc_gating_tracks_weight_sparsity() {
+        let mut rng = Rng::new(2);
+        let rows = 20;
+        let cols = 100;
+        let w_rm = rng.sparse_vec(rows * cols, 0.7);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let a = rng.normal_vec(cols);
+        let c = compress_fc(&a, &w);
+        let s = schedule_fc(&c, &cfg());
+        // activity ~ 1 - 0.7 (partial last chunks skew slightly)
+        assert!((s.activity() - 0.3).abs() < 0.08, "{}", s.activity());
+    }
+
+    #[test]
+    fn gating_off_means_full_activity_on_full_chunks() {
+        let mut rng = Rng::new(3);
+        let rows = 4;
+        let cols = 100; // exactly 2 chunks of 50
+        let w_rm = rng.sparse_vec(rows * cols, 0.9);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let a = rng.normal_vec(cols);
+        let c = compress_fc(&a, &w);
+        let s = schedule_fc(&c, &cfg().without_power_gating());
+        assert!((s.activity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_schedule_counts() {
+        // 2 kernels of 9 elements, 60% sparse -> ~4 kept -> 1 pass each (n=5)
+        let mut rng = Rng::new(4);
+        let kflat: Vec<Vec<f32>> = (0..2).map(|_| rng.sparse_vec(9, 0.56)).collect();
+        let kernels: Vec<_> = kflat
+            .iter()
+            .map(|k| CompressedKernel::from_dense(k))
+            .collect();
+        let patches: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(9)).collect();
+        let s = schedule_conv(&kernels, &patches, &cfg());
+        assert_eq!(s.passes.len(), 10 * 2); // 1 pass per (pixel, kernel)
+    }
+
+    #[test]
+    fn round_robin_balanced() {
+        let mut rng = Rng::new(5);
+        let rows = 50;
+        let cols = 50;
+        let w = ColMatrix::from_row_major(rows, cols, &rng.normal_vec(rows * cols));
+        let a = rng.normal_vec(cols);
+        let s = schedule_fc(&compress_fc(&a, &w), &cfg());
+        let mut per_vdu = vec![0usize; 10];
+        for p in &s.passes {
+            per_vdu[p.vdu as usize] += 1;
+        }
+        let max = per_vdu.iter().max().unwrap();
+        let min = per_vdu.iter().min().unwrap();
+        assert!(max - min <= 1, "{per_vdu:?}");
+    }
+
+    #[test]
+    fn latency_formula() {
+        let s = Schedule {
+            passes: vec![Pass {
+                vdu: 0,
+                round: 9,
+                lanes_used: 5,
+                lanes_active: 5,
+            }],
+            lanes: 5,
+            n_vdus: 1,
+        };
+        let lat = s.latency_s(20e-9, 35e-9);
+        assert!((lat - (10.0 * 20e-9 + 35e-9)).abs() < 1e-15);
+    }
+}

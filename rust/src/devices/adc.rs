@@ -1,0 +1,45 @@
+//! ADC model (Table 2): 16-bit readout of the photodetector's accumulated
+//! current back into the digital domain.  One per VDU; at 14 ns it is the
+//! slowest per-pass stage after EO retuning and therefore co-determines the
+//! pipeline initiation interval.
+
+use super::params::DeviceParams;
+
+#[derive(Debug, Clone)]
+pub struct Adc {
+    pub params: DeviceParams,
+}
+
+impl Adc {
+    pub fn new(params: DeviceParams) -> Self {
+        Self { params }
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.params.adc_latency_s
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.params.adc_power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let a = Adc::new(DeviceParams::default());
+        assert_eq!(a.latency_s(), 14e-9);
+        assert_eq!(a.power_w(), 62e-3);
+    }
+
+    #[test]
+    fn adc_slower_than_dac_but_faster_than_eo() {
+        let p = DeviceParams::default();
+        let a = Adc::new(p.clone());
+        assert!(a.latency_s() > p.dac16_latency_s);
+        assert!(a.latency_s() < p.eo_latency_s);
+    }
+}

@@ -1,0 +1,102 @@
+//! DAC array model (§III.B, Table 2).  SONIC's weight clustering exists to
+//! shrink these: 6-bit DACs (3 mW) for <=64-cluster weights versus 16-bit
+//! (40 mW) for activations — a 13x power gap per lane.
+
+use super::params::DeviceParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DacResolution {
+    Bits6,
+    Bits16,
+}
+
+impl DacResolution {
+    /// Pick the cheapest Table-2 DAC that can express `bits` levels.
+    pub fn for_bits(bits: u32) -> DacResolution {
+        if bits <= 6 {
+            DacResolution::Bits6
+        } else {
+            DacResolution::Bits16
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            DacResolution::Bits6 => 6,
+            DacResolution::Bits16 => 16,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Dac {
+    pub params: DeviceParams,
+    pub resolution: DacResolution,
+}
+
+impl Dac {
+    pub fn new(params: DeviceParams, resolution: DacResolution) -> Self {
+        Self { params, resolution }
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        match self.resolution {
+            DacResolution::Bits6 => self.params.dac6_latency_s,
+            DacResolution::Bits16 => self.params.dac16_latency_s,
+        }
+    }
+
+    pub fn power_w(&self) -> f64 {
+        match self.resolution {
+            DacResolution::Bits6 => self.params.dac6_power_w,
+            DacResolution::Bits16 => self.params.dac16_power_w,
+        }
+    }
+
+    /// Array power with `active` of `total` lanes converting (idle lanes
+    /// gated alongside their VCSEL/MR when sparsity gating is on).
+    pub fn array_power_w(&self, total: usize, active: usize, gating: bool) -> f64 {
+        assert!(active <= total);
+        let n = if gating { active } else { total };
+        n as f64 * self.power_w()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolution_selection() {
+        assert_eq!(DacResolution::for_bits(4), DacResolution::Bits6);
+        assert_eq!(DacResolution::for_bits(6), DacResolution::Bits6);
+        assert_eq!(DacResolution::for_bits(7), DacResolution::Bits16);
+        assert_eq!(DacResolution::for_bits(16), DacResolution::Bits16);
+    }
+
+    #[test]
+    fn table2_values() {
+        let p = DeviceParams::default();
+        let d6 = Dac::new(p.clone(), DacResolution::Bits6);
+        let d16 = Dac::new(p, DacResolution::Bits16);
+        assert_eq!(d6.power_w(), 3e-3);
+        assert_eq!(d16.power_w(), 40e-3);
+        assert!(d6.latency_s() < d16.latency_s());
+    }
+
+    #[test]
+    fn clustering_wins_13x_per_lane() {
+        let p = DeviceParams::default();
+        let ratio = Dac::new(p.clone(), DacResolution::Bits16).power_w()
+            / Dac::new(p, DacResolution::Bits6).power_w();
+        assert!(ratio > 13.0);
+    }
+
+    #[test]
+    fn gated_array_power() {
+        let p = DeviceParams::default();
+        let d = Dac::new(p, DacResolution::Bits16);
+        assert_eq!(d.array_power_w(10, 3, true), 3.0 * 40e-3);
+        assert_eq!(d.array_power_w(10, 3, false), 10.0 * 40e-3);
+    }
+}

@@ -1,0 +1,20 @@
+//! Photonic + mixed-signal device models (SONIC §IV.A, Table 2).
+//!
+//! Every device exposes `latency_s()` and a power model in watts; the
+//! simulator composes them into per-pass energy and per-layer latency.
+//! All constants trace to Table 2 of the paper (see [`params`]).
+
+pub mod adc;
+pub mod dac;
+pub mod mr;
+pub mod params;
+pub mod photodetector;
+pub mod thermal;
+pub mod vcsel;
+
+pub use adc::Adc;
+pub use dac::Dac;
+pub use mr::{BroadbandMr, Mr, MrBank, TuningMode};
+pub use params::DeviceParams;
+pub use photodetector::Photodetector;
+pub use vcsel::Vcsel;

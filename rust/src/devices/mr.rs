@@ -1,0 +1,248 @@
+//! Microring resonator (MR) model with hybrid EO/TO tuning and TED
+//! collective-tuning power reduction (SONIC §IV.A).
+//!
+//! An all-pass MR imprints a weight value on its resonant wavelength by
+//! detuning: the through-port power transmission of a notch filter at
+//! detuning `d` (nm) from resonance follows the Lorentzian
+//!
+//! `T(d) = d^2 / (d^2 + g^2)` with `g = FWHM/2`,
+//!
+//! so realizing transmission `T` (in `[0, 1)`) needs a resonance shift
+//! `d(T) = g * sqrt(T / (1 - T))`, capped at half an FSR.  Small shifts go
+//! through the fast EO tuner (20 ns, 4 uW/nm); shifts beyond the EO range
+//! fall back to TO (4 us, 27.5 mW/FSR), whose bank-level cost is cut by the
+//! thermal-eigenmode-decomposition (TED) scheme of [17].
+
+use super::params::DeviceParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuningMode {
+    /// Fast, low-power, small shift range.
+    ElectroOptic,
+    /// Slow, mW-scale, full FSR range (TED-discounted in a bank).
+    ThermoOptic,
+}
+
+/// One tunable all-pass microring.
+#[derive(Debug, Clone)]
+pub struct Mr {
+    pub params: DeviceParams,
+}
+
+impl Mr {
+    pub fn new(params: DeviceParams) -> Self {
+        Self { params }
+    }
+
+    /// Resonance shift (nm) needed to realize power transmission `t`.
+    /// `t` is clamped to [0, 0.999] (full transparency needs infinite
+    /// detuning; half an FSR is the physical cap).
+    pub fn shift_for_transmission(&self, t: f64) -> f64 {
+        let t = t.clamp(0.0, 0.999);
+        let g = self.params.fwhm_nm / 2.0;
+        let d = g * (t / (1.0 - t)).sqrt();
+        d.min(self.params.fsr_nm / 2.0)
+    }
+
+    /// Which tuner handles a given shift.
+    pub fn mode_for_shift(&self, shift_nm: f64) -> TuningMode {
+        if shift_nm <= self.params.eo_max_shift_nm {
+            TuningMode::ElectroOptic
+        } else {
+            TuningMode::ThermoOptic
+        }
+    }
+
+    /// Latency of retuning by `shift_nm`.
+    pub fn tuning_latency_s(&self, shift_nm: f64) -> f64 {
+        match self.mode_for_shift(shift_nm) {
+            TuningMode::ElectroOptic => self.params.eo_latency_s,
+            TuningMode::ThermoOptic => self.params.to_latency_s,
+        }
+    }
+
+    /// Steady tuning power to hold a shift of `shift_nm` (single ring,
+    /// before TED discount).
+    pub fn tuning_power_w(&self, shift_nm: f64) -> f64 {
+        match self.mode_for_shift(shift_nm) {
+            TuningMode::ElectroOptic => self.params.eo_power_w_per_nm * shift_nm,
+            TuningMode::ThermoOptic => {
+                self.params.to_power_w_per_fsr * (shift_nm / self.params.fsr_nm)
+            }
+        }
+    }
+}
+
+/// A WDM bank of MRs realizing one vector of weights (Fig. 4(b)).
+#[derive(Debug, Clone)]
+pub struct MrBank {
+    pub mr: Mr,
+    pub lanes: usize,
+}
+
+impl MrBank {
+    pub fn new(params: DeviceParams, lanes: usize) -> Self {
+        Self {
+            mr: Mr::new(params),
+            lanes,
+        }
+    }
+
+    /// Power to hold a weight vector, assuming transmissions uniformly
+    /// distributed over the codebook -> average shift `avg_shift_nm`.
+    /// TO contributions are discounted by the TED factor (collective
+    /// thermal tuning of the whole bank [17]); EO contributions are not.
+    pub fn hold_power_w(&self, transmissions: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for &t in transmissions {
+            let d = self.mr.shift_for_transmission(t);
+            let p = self.mr.tuning_power_w(d);
+            total += match self.mr.mode_for_shift(d) {
+                TuningMode::ElectroOptic => p,
+                TuningMode::ThermoOptic => p * self.mr.params.ted_factor,
+            };
+        }
+        total
+    }
+
+    /// Expected per-lane hold power for the *average* codebook transmission
+    /// (analytic fast path used by the simulator; avoids materializing
+    /// per-pass transmission vectors).  `avg_t` is the mean |w| mapped to
+    /// transmission; active lanes only.
+    pub fn avg_hold_power_w(&self, avg_t: f64, active_lanes: usize) -> f64 {
+        let d = self.mr.shift_for_transmission(avg_t);
+        let p = self.mr.tuning_power_w(d);
+        let p = match self.mr.mode_for_shift(d) {
+            TuningMode::ElectroOptic => p,
+            TuningMode::ThermoOptic => p * self.mr.params.ted_factor,
+        };
+        p * active_lanes as f64
+    }
+
+    /// Per-pass retuning latency: all lanes retune in parallel; the bank is
+    /// ready when the slowest lane is (EO unless any lane needs TO).
+    pub fn retune_latency_s(&self, max_shift_nm: f64) -> f64 {
+        self.mr.tuning_latency_s(max_shift_nm)
+    }
+}
+
+/// The broadband MR applying a whole-layer batch-norm scale to all
+/// wavelengths at once (§IV.B, Fig. 5).  Modeled as one ring with a wide
+/// passband: one tuning event per layer, held for the layer's duration.
+#[derive(Debug, Clone)]
+pub struct BroadbandMr {
+    pub mr: Mr,
+}
+
+impl BroadbandMr {
+    pub fn new(params: DeviceParams) -> Self {
+        Self { mr: Mr::new(params) }
+    }
+
+    /// One-off per-layer configuration latency (EO path for typical BN
+    /// scales near 1.0).
+    pub fn setup_latency_s(&self, scale: f64) -> f64 {
+        let d = self.mr.shift_for_transmission(scale.clamp(0.0, 0.999));
+        self.mr.tuning_latency_s(d)
+    }
+
+    pub fn hold_power_w(&self, scale: f64) -> f64 {
+        let d = self.mr.shift_for_transmission(scale.clamp(0.0, 0.999));
+        self.mr.tuning_power_w(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mr() -> Mr {
+        Mr::new(DeviceParams::default())
+    }
+
+    #[test]
+    fn zero_transmission_zero_shift() {
+        assert_eq!(mr().shift_for_transmission(0.0), 0.0);
+    }
+
+    #[test]
+    fn shift_monotone_in_transmission() {
+        let m = mr();
+        let mut last = -1.0;
+        for i in 0..10 {
+            let t = i as f64 / 10.0;
+            let d = m.shift_for_transmission(t);
+            assert!(d > last, "t={t} d={d} last={last}");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn lorentzian_round_trip() {
+        // T(d(T)) == T for mid-range transmissions
+        let m = mr();
+        let g = m.params.fwhm_nm / 2.0;
+        for &t in &[0.1, 0.5, 0.9] {
+            let d = m.shift_for_transmission(t);
+            let t_back = d * d / (d * d + g * g);
+            assert!((t_back - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shift_capped_at_half_fsr() {
+        let m = mr();
+        assert!(m.shift_for_transmission(0.99999) <= m.params.fsr_nm / 2.0);
+    }
+
+    #[test]
+    fn small_shift_uses_eo_large_uses_to() {
+        let m = mr();
+        assert_eq!(m.mode_for_shift(0.1), TuningMode::ElectroOptic);
+        assert_eq!(m.mode_for_shift(2.0), TuningMode::ThermoOptic);
+    }
+
+    #[test]
+    fn eo_much_faster_than_to() {
+        let m = mr();
+        assert!(m.tuning_latency_s(0.1) < m.tuning_latency_s(2.0) / 100.0);
+    }
+
+    #[test]
+    fn eo_power_scales_linearly() {
+        let m = mr();
+        let p1 = m.tuning_power_w(0.1);
+        let p2 = m.tuning_power_w(0.2);
+        assert!((p2 / p1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ted_discounts_bank_to_power() {
+        let p = DeviceParams::default();
+        let bank = MrBank::new(p.clone(), 4);
+        // transmission requiring TO on every lane
+        let t_big = 0.9999;
+        let naive = {
+            let m = Mr::new(p.clone());
+            let d = m.shift_for_transmission(t_big);
+            m.tuning_power_w(d) * 4.0
+        };
+        let with_ted = bank.hold_power_w(&[t_big; 4]);
+        assert!(with_ted < naive * 0.5, "{with_ted} vs {naive}");
+    }
+
+    #[test]
+    fn avg_hold_matches_explicit_for_uniform_vector() {
+        let bank = MrBank::new(DeviceParams::default(), 8);
+        let explicit = bank.hold_power_w(&[0.4; 8]);
+        let avg = bank.avg_hold_power_w(0.4, 8);
+        assert!((explicit - avg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadband_setup_is_fast_for_typical_bn() {
+        let bb = BroadbandMr::new(DeviceParams::default());
+        // BN scales near 0.9 transmission stay within EO range
+        assert_eq!(bb.setup_latency_s(0.9), 20e-9);
+    }
+}

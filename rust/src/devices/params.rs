@@ -1,0 +1,173 @@
+//! Table 2 device parameters — the analysis constants of the paper.
+//!
+//! | Device             | Latency | Power        |
+//! |--------------------|---------|--------------|
+//! | EO tuning   [13]   | 20 ns   | 4 uW/nm      |
+//! | TO tuning   [14]   | 4 us    | 27.5 mW/FSR  |
+//! | VCSEL       [18]   | 0.07 ns | 1.3 mW       |
+//! | Photodetector [19] | 5.8 ps  | 2.8 mW       |
+//! | DAC (16 bit) [20]  | 0.33 ns | 40 mW        |
+//! | DAC (6 bit)  [21]  | 0.25 ns | 3 mW         |
+//! | ADC (16 bit) [22]  | 14 ns   | 62 mW        |
+//!
+//! Additional microring physical constants (FSR, FWHM, TED factor) are
+//! drawn from the cited device literature ([15]–[17]) and documented below.
+
+/// All device-level constants used by the simulator.  Units: seconds, watts,
+/// nanometres (for wavelength shifts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceParams {
+    // --- MR tuning (hybrid EO + TO, §IV.A) ---
+    /// Electro-optic tuning latency (s). Table 2: 20 ns.
+    pub eo_latency_s: f64,
+    /// EO tuning power per nm of resonance shift (W/nm). Table 2: 4 uW/nm.
+    pub eo_power_w_per_nm: f64,
+    /// Thermo-optic tuning latency (s). Table 2: 4 us.
+    pub to_latency_s: f64,
+    /// TO power to shift one full FSR (W). Table 2: 27.5 mW/FSR.
+    pub to_power_w_per_fsr: f64,
+    /// Free spectral range of the MRs (nm). ~10 nm for R≈5 um rings [15].
+    pub fsr_nm: f64,
+    /// Resonance FWHM (nm); sets the transmission-vs-detuning slope.
+    /// Q ≈ 15,500 at 1550 nm -> FWHM ≈ 0.1 nm.
+    pub fwhm_nm: f64,
+    /// Max shift the EO tuner can deliver (nm); larger shifts engage TO.
+    /// Hybrid BaTiO3-Si EO tuners reach ~0.5 nm [13],[16].
+    pub eo_max_shift_nm: f64,
+    /// Thermal-eigenmode-decomposition power-reduction factor for
+    /// collective bank tuning [17] (fraction of naive TO power kept).
+    pub ted_factor: f64,
+    /// Per-MR through-port insertion loss (dB).  Every MR on the bank's
+    /// bus attenuates all wavelengths passing it, so the VCSEL drive must
+    /// rise with lane count — the physical reason VDU granularity cannot
+    /// grow without bound (§IV.B).  ~0.2 dB/MR for add-drop rings [15].
+    pub mr_insertion_loss_db: f64,
+
+    // --- active devices ---
+    /// VCSEL modulation latency (s). Table 2: 0.07 ns.
+    pub vcsel_latency_s: f64,
+    /// VCSEL drive power (W). Table 2: 1.3 mW.
+    pub vcsel_power_w: f64,
+    /// VCSEL leakage when power-gated (W). ~1% of drive power.
+    pub vcsel_gated_power_w: f64,
+
+    /// Photodetector latency (s). Table 2: 5.8 ps.
+    pub pd_latency_s: f64,
+    /// Photodetector power (W). Table 2: 2.8 mW.
+    pub pd_power_w: f64,
+
+    /// 16-bit DAC latency/power (activations). Table 2: 0.33 ns / 40 mW.
+    pub dac16_latency_s: f64,
+    pub dac16_power_w: f64,
+    /// 6-bit DAC latency/power (clustered weights). Table 2: 0.25 ns / 3 mW.
+    pub dac6_latency_s: f64,
+    pub dac6_power_w: f64,
+
+    /// 16-bit ADC latency/power (readout). Table 2: 14 ns / 62 mW.
+    pub adc_latency_s: f64,
+    pub adc_power_w: f64,
+
+    // --- electronic control unit (§IV.C) ---
+    /// Static power of the electronic control unit: memory interface,
+    /// compression/mapping logic, post-processing (W).  Modeled after the
+    /// buffer+control overhead of comparable accelerators (NullHop's
+    /// controller burns ~0.15 W; SONIC drives 60 VDUs and a wider memory
+    /// interface).
+    pub control_unit_power_w: f64,
+    /// Per-VDU share of buffering/mapping power (W).
+    pub control_per_vdu_w: f64,
+    /// Main-memory energy per bit moved (J/bit).  DDR4 ~ 20 pJ/bit.
+    pub dram_energy_per_bit_j: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self {
+            eo_latency_s: 20e-9,
+            eo_power_w_per_nm: 4e-6,
+            to_latency_s: 4e-6,
+            to_power_w_per_fsr: 27.5e-3,
+            fsr_nm: 10.0,
+            fwhm_nm: 0.1,
+            eo_max_shift_nm: 0.5,
+            ted_factor: 0.35,
+            mr_insertion_loss_db: 0.2,
+            vcsel_latency_s: 0.07e-9,
+            vcsel_power_w: 1.3e-3,
+            vcsel_gated_power_w: 13e-6,
+            pd_latency_s: 5.8e-12,
+            pd_power_w: 2.8e-3,
+            dac16_latency_s: 0.33e-9,
+            dac16_power_w: 40e-3,
+            dac6_latency_s: 0.25e-9,
+            dac6_power_w: 3e-3,
+            adc_latency_s: 14e-9,
+            adc_power_w: 62e-3,
+            control_unit_power_w: 0.8,
+            control_per_vdu_w: 5e-3,
+            dram_energy_per_bit_j: 20e-12,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Render the Table-2 rows (used by `benches/table2_devices.rs`).
+    pub fn table2_rows(&self) -> Vec<(String, String, String)> {
+        let r = |n: &str, l: String, p: String| (n.to_string(), l, p);
+        vec![
+            r("EO Tuning", fmt_s(self.eo_latency_s), format!("{} uW/nm", self.eo_power_w_per_nm * 1e6)),
+            r("TO Tuning", fmt_s(self.to_latency_s), format!("{} mW/FSR", self.to_power_w_per_fsr * 1e3)),
+            r("VCSEL", fmt_s(self.vcsel_latency_s), fmt_w(self.vcsel_power_w)),
+            r("Photodetector", fmt_s(self.pd_latency_s), fmt_w(self.pd_power_w)),
+            r("DAC (16 bit)", fmt_s(self.dac16_latency_s), fmt_w(self.dac16_power_w)),
+            r("DAC (6 bit)", fmt_s(self.dac6_latency_s), fmt_w(self.dac6_power_w)),
+            r("ADC (16 bit)", fmt_s(self.adc_latency_s), fmt_w(self.adc_power_w)),
+        ]
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else if s >= 1e-9 {
+        format!("{:.2} ns", s * 1e9)
+    } else {
+        format!("{:.1} ps", s * 1e12)
+    }
+}
+
+fn fmt_w(w: f64) -> String {
+    format!("{:.1} mW", w * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let p = DeviceParams::default();
+        assert_eq!(p.eo_latency_s, 20e-9);
+        assert_eq!(p.to_latency_s, 4e-6);
+        assert_eq!(p.vcsel_power_w, 1.3e-3);
+        assert_eq!(p.dac16_power_w, 40e-3);
+        assert_eq!(p.dac6_power_w, 3e-3);
+        assert_eq!(p.adc_power_w, 62e-3);
+        assert_eq!(p.pd_latency_s, 5.8e-12);
+    }
+
+    #[test]
+    fn table2_has_seven_rows() {
+        let rows = DeviceParams::default().table2_rows();
+        assert_eq!(rows.len(), 7);
+        assert!(rows[0].1.contains("ns"));
+        assert!(rows[1].1.contains("us"));
+        assert!(rows[3].1.contains("ps"));
+    }
+
+    #[test]
+    fn gating_leakage_is_small() {
+        let p = DeviceParams::default();
+        assert!(p.vcsel_gated_power_w < 0.05 * p.vcsel_power_w);
+    }
+}

@@ -1,0 +1,44 @@
+//! Photodetector model (Table 2): converts the WDM bank's combined optical
+//! power back to a photocurrent — the analog summation that completes the
+//! dot product (§IV.B).  One per VDU.
+
+use super::params::DeviceParams;
+
+#[derive(Debug, Clone)]
+pub struct Photodetector {
+    pub params: DeviceParams,
+}
+
+impl Photodetector {
+    pub fn new(params: DeviceParams) -> Self {
+        Self { params }
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.params.pd_latency_s
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.params.pd_power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let pd = Photodetector::new(DeviceParams::default());
+        assert_eq!(pd.latency_s(), 5.8e-12);
+        assert_eq!(pd.power_w(), 2.8e-3);
+    }
+
+    #[test]
+    fn pd_is_fastest_stage() {
+        let p = DeviceParams::default();
+        let pd = Photodetector::new(p.clone());
+        assert!(pd.latency_s() < p.vcsel_latency_s);
+        assert!(pd.latency_s() < p.dac6_latency_s);
+    }
+}

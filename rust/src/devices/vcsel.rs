@@ -1,0 +1,99 @@
+//! VCSEL array model (§IV.B): one vertical-cavity laser per VDU lane,
+//! amplitude-modulated by its DAC to carry a dense-vector element, and
+//! **power-gated** when the corresponding sparse-vector element is zero —
+//! the paper's residual-sparsity optimization.
+
+use super::params::DeviceParams;
+
+#[derive(Debug, Clone)]
+pub struct Vcsel {
+    pub params: DeviceParams,
+}
+
+impl Vcsel {
+    pub fn new(params: DeviceParams) -> Self {
+        Self { params }
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.params.vcsel_latency_s
+    }
+
+    /// Drive power when emitting.
+    pub fn active_power_w(&self) -> f64 {
+        self.params.vcsel_power_w
+    }
+
+    /// Residual leakage when gated off.
+    pub fn gated_power_w(&self) -> f64 {
+        self.params.vcsel_gated_power_w
+    }
+
+    /// Optical-link loss compensation factor for a bank of `lanes` MRs:
+    /// every ring on the bus costs `mr_insertion_loss_db`, and the VCSEL
+    /// drive must rise to keep the photodetector above sensitivity.  This
+    /// is what bounds VDU granularity (m cannot grow without limit).
+    pub fn loss_factor(&self, lanes: usize) -> f64 {
+        10f64.powf(self.params.mr_insertion_loss_db * lanes as f64 / 10.0)
+    }
+
+    /// Average array power for `active` of `total` lanes emitting, with
+    /// drive scaled by the bank's insertion-loss compensation.
+    /// With gating disabled, all lanes burn full drive power regardless of
+    /// the data (the dense-accelerator behaviour SONIC improves on).
+    pub fn array_power_w(&self, total: usize, active: usize, gating: bool) -> f64 {
+        assert!(active <= total);
+        let drive = self.active_power_w() * self.loss_factor(total);
+        if gating {
+            active as f64 * drive + (total - active) as f64 * self.gated_power_w()
+        } else {
+            total as f64 * drive
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vcsel {
+        Vcsel::new(DeviceParams::default())
+    }
+
+    #[test]
+    fn table2_values() {
+        assert_eq!(v().latency_s(), 0.07e-9);
+        assert_eq!(v().active_power_w(), 1.3e-3);
+    }
+
+    #[test]
+    fn gating_saves_power() {
+        let vc = v();
+        let gated = vc.array_power_w(50, 25, true);
+        let ungated = vc.array_power_w(50, 25, false);
+        assert!(gated < ungated * 0.55);
+    }
+
+    #[test]
+    fn no_gating_ignores_activity() {
+        let vc = v();
+        assert_eq!(
+            vc.array_power_w(10, 0, false),
+            vc.array_power_w(10, 10, false)
+        );
+    }
+
+    #[test]
+    fn all_active_equal_with_or_without_gating() {
+        let vc = v();
+        assert!(
+            (vc.array_power_w(8, 8, true) - vc.array_power_w(8, 8, false)).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn active_exceeding_total_panics() {
+        v().array_power_w(4, 5, true);
+    }
+}

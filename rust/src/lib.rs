@@ -1,0 +1,59 @@
+//! # SONIC — sparse photonic neural-network inference accelerator
+//!
+//! Full-system reproduction of *SONIC: A Sparse Neural Network Inference
+//! Accelerator with Silicon Photonics for Energy-Efficient Deep Learning*
+//! (Sunny, Nikdast, Pasricha, 2021).
+//!
+//! The crate is Layer 3 of the three-layer stack (see `DESIGN.md`):
+//!
+//! * [`devices`] / [`arch`] — the photonic substrate: microring resonators
+//!   with hybrid electro-optic/thermo-optic tuning, VCSELs with power
+//!   gating, DAC/ADC arrays, photodetectors, and the vector-dot-product
+//!   unit (VDU) built out of them.
+//! * [`sparsity`] / [`coordinator`] — the paper's contribution: dataflow
+//!   compression for FC and CONV layers (Figs. 1–2), vector decomposition
+//!   onto the `(n, m, N, K)` VDU array, and a request router + dynamic
+//!   batcher serving inference through the PJRT runtime.
+//! * [`sim`] — the analytic performance/power/energy simulator that
+//!   regenerates every table and figure of the paper's evaluation.
+//! * [`baselines`] — NullHop, RSNN, CrossLight, HolyLight, LightBulb,
+//!   Tesla P100, Xeon Platinum 9282 comparison models.
+//! * [`runtime`] — PJRT CPU client executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * [`model`] / [`tensor`] — model descriptors (`artifacts/*.json`) and
+//!   the `.swt` weight-pack loader.
+//! * [`util`] — offline substrates standing in for crates unavailable in
+//!   this environment: JSON, RNG, CLI parsing, bench harness, property
+//!   testing.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod devices;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;
+
+/// Canonical location of build artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$SONIC_ARTIFACTS`, else `./artifacts`,
+/// else walk up from the current dir (tests run from `target/...`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SONIC_ARTIFACTS") {
+        return p.into();
+    }
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = d.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !d.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

@@ -1,0 +1,542 @@
+//! `sonic` — CLI entrypoint for the SONIC accelerator reproduction.
+//!
+//! Subcommands:
+//!   infer    — run functional inference through the PJRT artifacts
+//!   serve    — serve a synthetic request stream through the router
+//!   compare  — Figs. 8–10: SONIC vs all baseline platforms
+//!   dse      — §V.B (n, m, N, K) design-space exploration
+//!   ablation — co-design lever ablation study
+//!   report   — per-layer simulator breakdown for one model
+//!   table1/table2/table3 — paper table reconstructions
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use sonic::arch::SonicConfig;
+use sonic::baselines::all_platforms;
+use sonic::coordinator::serve::{Router, ServeConfig, ServeMetrics};
+use sonic::model::ModelDesc;
+use sonic::runtime::PjrtBackend;
+use sonic::sim::{ablation, simulate};
+use sonic::sim::dse;
+use sonic::util::bench::Table;
+use sonic::util::cli::{Args, OptSpec};
+use sonic::util::rng::Rng;
+use sonic::util::si;
+
+const MODELS: &[&str] = &["mnist", "cifar10", "stl10", "svhn"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "infer" => cmd_infer(rest),
+        "serve" => cmd_serve(rest),
+        "compare" => cmd_compare(rest),
+        "dse" => cmd_dse(rest),
+        "ablation" => cmd_ablation(rest),
+        "report" => cmd_report(rest),
+        "trace" => cmd_trace(rest),
+        "batch" => cmd_batch(rest),
+        "memory" => cmd_memory(rest),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(),
+        "table3" => cmd_table3(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `sonic help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "sonic — SONIC photonic sparse-CNN accelerator (full-system reproduction)
+
+USAGE: sonic <subcommand> [options]
+
+  infer     --model <m> [--count N]     functional inference via PJRT artifacts
+  serve     --model <m> [--requests N] [--batch B] [--rate R]
+                                        serve a synthetic request stream
+  compare   [--models a,b,...]          Figs. 8-10 platform comparison
+  dse       [--models a,b,...]          (n,m,N,K) design-space exploration
+  ablation  [--model <m>]               co-design lever ablation
+  report    --model <m>                 per-layer simulator breakdown
+  trace     --model <m> [--out f.json]  per-layer execution timeline
+  batch     --model <m>                 batch-size amortization sweep
+  memory    [--models a,b,...]          main-memory traffic report
+  table1 | table2 | table3              paper table reconstructions
+"
+    );
+}
+
+fn specs_model() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "model", takes_value: true, help: "model: mnist|cifar10|stl10|svhn" },
+        OptSpec { name: "models", takes_value: true, help: "comma-separated model list" },
+        OptSpec { name: "count", takes_value: true, help: "number of inferences" },
+        OptSpec { name: "requests", takes_value: true, help: "number of requests" },
+        OptSpec { name: "batch", takes_value: true, help: "max dynamic batch" },
+        OptSpec { name: "rate", takes_value: true, help: "request rate (req/s)" },
+        OptSpec { name: "seed", takes_value: true, help: "workload seed" },
+        OptSpec { name: "no-gating", takes_value: false, help: "disable VCSEL power gating" },
+        OptSpec { name: "no-compression", takes_value: false, help: "disable dataflow compression" },
+        OptSpec { name: "no-clustering", takes_value: false, help: "disable weight clustering" },
+    ]
+}
+
+fn arch_from(a: &Args) -> SonicConfig {
+    let mut cfg = SonicConfig::paper_best();
+    if a.flag("no-gating") {
+        cfg = cfg.without_power_gating();
+    }
+    if a.flag("no-compression") {
+        cfg = cfg.without_compression();
+    }
+    if a.flag("no-clustering") {
+        cfg = cfg.without_clustering();
+    }
+    cfg
+}
+
+fn cmd_infer(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist").to_string();
+    let count: usize = a.parse_num("count", 4)?;
+
+    let backend = PjrtBackend::load(sonic::artifacts_dir(), &model)?;
+    let desc = ModelDesc::load_or_builtin(&model);
+    let per = sonic::coordinator::serve::InferenceBackend::input_len(&backend);
+    println!("model {model}: input {per} f32, {} layers", desc.layers.len());
+
+    let mut rng = Rng::new(a.parse_num("seed", 7u64)?);
+    let inputs: Vec<Vec<f32>> = (0..count).map(|_| rng.normal_vec(per)).collect();
+    let t0 = std::time::Instant::now();
+    let outs = sonic::coordinator::serve::InferenceBackend::infer_batch(&backend, &inputs)?;
+    let dt = t0.elapsed();
+    for (i, o) in outs.iter().enumerate() {
+        let arg = o
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        println!("  req {i}: class {arg}  (logit {:.3})", o[arg]);
+    }
+    println!(
+        "{count} inferences in {:?}  ({:.1} req/s wall)",
+        dt,
+        count as f64 / dt.as_secs_f64()
+    );
+    let stats = simulate(&desc, &arch_from(&a));
+    println!(
+        "photonic model: latency {}  power {}  -> {:.0} FPS, {:.1} FPS/W",
+        si(stats.latency_s, "s"),
+        si(stats.avg_power_w, "W"),
+        stats.fps,
+        stats.fps_per_watt
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist").to_string();
+    let n_requests: usize = a.parse_num("requests", 64)?;
+    let max_batch: usize = a.parse_num("batch", 8)?;
+    let rate: f64 = a.parse_num("rate", 500.0)?;
+    let seed: u64 = a.parse_num("seed", 42)?;
+
+    let backend = Arc::new(PjrtBackend::load(sonic::artifacts_dir(), &model)?);
+    let desc = ModelDesc::load_or_builtin(&model);
+    let router = Router::new(
+        backend.clone(),
+        desc,
+        arch_from(&a),
+        ServeConfig {
+            max_batch,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 4096,
+        },
+    );
+
+    println!("serving {n_requests} requests @ ~{rate} req/s, max batch {max_batch}");
+    let per = sonic::coordinator::serve::InferenceBackend::input_len(backend.as_ref());
+    let producer = {
+        let router = Arc::clone(&router);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            for _ in 0..n_requests {
+                let dt = rng.exp(rate);
+                std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
+                router.submit(rng.normal_vec(per));
+            }
+        })
+    };
+
+    let mut metrics = ServeMetrics::default();
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < n_requests {
+        done += router.drain_batch(&mut metrics)?.len();
+    }
+    metrics.wall_elapsed = t0.elapsed();
+    producer.join().unwrap();
+
+    println!("\n== serving report ==");
+    println!("completed          : {}", metrics.completed);
+    println!(
+        "batches            : {} (mean size {:.2})",
+        metrics.batches,
+        metrics.mean_batch()
+    );
+    println!("wall throughput    : {:.1} req/s", metrics.wall_fps());
+    println!("mean wall latency  : {:?}", metrics.mean_wall_latency());
+    println!("max wall latency   : {:?}", metrics.max_wall);
+    println!("photonic FPS       : {:.0}", metrics.photonic_fps());
+    println!("photonic FPS/W     : {:.1}", metrics.photonic_fps_per_watt());
+    println!("photonic energy    : {}", si(metrics.photonic_energy_j, "J"));
+    Ok(())
+}
+
+fn cmd_compare(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let names = a.list("models", MODELS);
+    let cfg = arch_from(&a);
+
+    let headers = &["model", "SONIC", "NullHop", "RSNN", "LightBulb", "CrossLight", "HolyLight", "NP100", "IXP"];
+    let mut power = Table::new(headers);
+    let mut fpsw = Table::new(headers);
+    let mut epb = Table::new(headers);
+    let platforms = all_platforms();
+    for name in &names {
+        let desc = ModelDesc::load_or_builtin(name);
+        let s = simulate(&desc, &cfg);
+        let results: Vec<_> = platforms.iter().map(|p| p.evaluate(&desc)).collect();
+        let with_name = |vals: Vec<String>| {
+            let mut row = vec![name.to_string()];
+            row.extend(vals);
+            row
+        };
+        power.row(&with_name(
+            std::iter::once(format!("{:.2}", s.avg_power_w))
+                .chain(results.iter().map(|r| format!("{:.2}", r.power_w)))
+                .collect(),
+        ));
+        fpsw.row(&with_name(
+            std::iter::once(format!("{:.1}", s.fps_per_watt))
+                .chain(results.iter().map(|r| format!("{:.1}", r.fps_per_watt)))
+                .collect(),
+        ));
+        epb.row(&with_name(
+            std::iter::once(si(s.epb_j, "J/b"))
+                .chain(results.iter().map(|r| si(r.epb_j, "J/b")))
+                .collect(),
+        ));
+    }
+    println!("== Fig. 8: power (W) ==");
+    power.print();
+    println!("\n== Fig. 9: FPS/W ==");
+    fpsw.print();
+    println!("\n== Fig. 10: energy per bit ==");
+    epb.print();
+
+    println!("\n== average FPS/W ratios (SONIC / platform; paper in brackets) ==");
+    let paper = [
+        ("NullHop", 5.81),
+        ("RSNN", 4.02),
+        ("LightBulb", 3.08),
+        ("CrossLight", 2.94),
+        ("HolyLight", 13.8),
+    ];
+    for (pname, want) in paper {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut ratio = 1.0;
+        for name in &names {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            ratio *= s.fps_per_watt / p.evaluate(&desc).fps_per_watt;
+        }
+        let gm = ratio.powf(1.0 / names.len() as f64);
+        println!("  vs {pname:<11}: {gm:5.2}x   [{want}x]");
+    }
+
+    println!("\n== average EPB ratios (platform / SONIC; paper in brackets) ==");
+    let paper_epb = [
+        ("NullHop", 8.4),
+        ("RSNN", 5.78),
+        ("LightBulb", 19.4),
+        ("CrossLight", 18.4),
+        ("HolyLight", 27.6),
+    ];
+    for (pname, want) in paper_epb {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut ratio = 1.0;
+        for name in &names {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            ratio *= p.evaluate(&desc).epb_j / s.epb_j;
+        }
+        let gm = ratio.powf(1.0 / names.len() as f64);
+        println!("  vs {pname:<11}: {gm:5.2}x   [{want}x]");
+    }
+    Ok(())
+}
+
+fn cmd_dse(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let names = a.list("models", MODELS);
+    let models: Vec<ModelDesc> = names.iter().map(|n| ModelDesc::load_or_builtin(n)).collect();
+    let points = dse::explore(&models, None);
+    let mut t = Table::new(&["n", "m", "N", "K", "FPS/W (gm)", "EPB (gm)", "power (W)"]);
+    for p in points.iter().take(15) {
+        t.row(&[
+            p.n.to_string(),
+            p.m.to_string(),
+            p.n_conv_vdus.to_string(),
+            p.n_fc_vdus.to_string(),
+            format!("{:.1}", p.gm_fps_per_watt),
+            si(p.gm_epb, "J/b"),
+            format!("{:.2}", p.mean_power_w),
+        ]);
+    }
+    println!(
+        "== (n, m, N, K) design-space exploration (top 15 of {}) ==",
+        points.len()
+    );
+    t.print();
+    println!(
+        "\npaper best: (5, 50, 50, 10)  |  ours: {:?}",
+        points[0].geometry()
+    );
+    Ok(())
+}
+
+fn cmd_ablation(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "cifar10");
+    let desc = ModelDesc::load_or_builtin(model);
+    let rows = ablation::ablate(&desc);
+    let mut t = Table::new(&["variant", "FPS", "power (W)", "FPS/W", "EPB", "FPS/W rel", "EPB rel"]);
+    for r in &rows {
+        t.row(&[
+            r.variant.to_string(),
+            format!("{:.0}", r.stats.fps),
+            format!("{:.2}", r.stats.avg_power_w),
+            format!("{:.1}", r.stats.fps_per_watt),
+            si(r.stats.epb_j, "J/b"),
+            format!("{:.2}x", r.fps_per_watt_rel),
+            format!("{:.2}x", r.epb_rel),
+        ]);
+    }
+    println!("== ablation on {model} ==");
+    t.print();
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist");
+    let desc = ModelDesc::load_or_builtin(model);
+    let s = simulate(&desc, &arch_from(&a));
+    let mut t = Table::new(&["layer", "kind", "vec len", "passes", "rounds", "latency", "energy", "active lanes"]);
+    for l in &s.layers {
+        t.row(&[
+            l.name.clone(),
+            if l.is_conv { "conv".into() } else { "fc".into() },
+            l.vector_len.to_string(),
+            l.passes.to_string(),
+            l.rounds.to_string(),
+            si(l.latency_s, "s"),
+            si(l.energy_j, "J"),
+            format!("{:.1}", l.avg_active_lanes),
+        ]);
+    }
+    println!("== {model} per-layer breakdown ==");
+    t.print();
+    println!(
+        "\ntotal latency {}   energy {}   power {}",
+        si(s.latency_s, "s"),
+        si(s.energy_j, "J"),
+        si(s.avg_power_w, "W")
+    );
+    println!(
+        "FPS {:.0}   FPS/W {:.1}   EPB {}",
+        s.fps,
+        s.fps_per_watt,
+        si(s.epb_j, "J/bit")
+    );
+    println!(
+        "energy breakdown: DAC {}  VCSEL {}  MR {}  readout {}  control {}  DRAM {}",
+        si(s.breakdown.dac_j, "J"),
+        si(s.breakdown.vcsel_j, "J"),
+        si(s.breakdown.mr_tuning_j, "J"),
+        si(s.breakdown.readout_j, "J"),
+        si(s.breakdown.control_j, "J"),
+        si(s.breakdown.dram_j, "J"),
+    );
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let mut specs = specs_model();
+    specs.push(OptSpec { name: "out", takes_value: true, help: "write JSON to file" });
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist");
+    let desc = ModelDesc::load_or_builtin(model);
+    let (tr, stats) = sonic::sim::trace::trace(&desc, &arch_from(&a));
+    let mut t = Table::new(&["layer", "phase", "start", "duration"]);
+    for e in &tr.events {
+        t.row(&[
+            e.layer.clone(),
+            e.kind.to_string(),
+            si(e.start_s, "s"),
+            si(e.end_s - e.start_s, "s"),
+        ]);
+    }
+    println!("== {model} execution timeline ==");
+    t.print();
+    println!("\ntotal {}   ({:.0} FPS)", si(tr.total_s, "s"), stats.fps);
+    if let Some(path) = a.get("out") {
+        std::fs::write(path, tr.to_json().to_pretty())?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_batch(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist");
+    let desc = ModelDesc::load_or_builtin(model);
+    let cfg = arch_from(&a);
+    let rows = sonic::sim::batch::sweep(&desc, &cfg, &[1, 2, 4, 8, 16, 32]);
+    let mut t = Table::new(&["batch", "latency", "per-request", "FPS", "FPS/W"]);
+    for r in &rows {
+        t.row(&[
+            r.batch.to_string(),
+            si(r.latency_s, "s"),
+            si(r.per_request_s, "s"),
+            format!("{:.0}", r.fps),
+            format!("{:.1}", r.fps_per_watt),
+        ]);
+    }
+    println!("== {model} batch-amortization sweep ==");
+    t.print();
+    Ok(())
+}
+
+fn cmd_memory(argv: &[String]) -> Result<()> {
+    use sonic::coordinator::memory::{model_traffic, MemoryInterface};
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let names = a.list("models", MODELS);
+    let mem = MemoryInterface::default();
+    let mut t = Table::new(&[
+        "model",
+        "bytes (compressed)",
+        "bytes (dense)",
+        "saving",
+        "mem time",
+        "mem energy",
+    ]);
+    for name in &names {
+        let desc = ModelDesc::load_or_builtin(name);
+        let c = model_traffic(&desc, &mem, true);
+        let d = model_traffic(&desc, &mem, false);
+        t.row(&[
+            name.clone(),
+            format!("{:.0}", c.bytes),
+            format!("{:.0}", d.bytes),
+            format!("{:.2}x", d.bytes / c.bytes),
+            si(c.time_s, "s"),
+            si(c.energy_j, "J"),
+        ]);
+    }
+    println!("== main-memory traffic per inference ==");
+    t.print();
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    let mut t = Table::new(&["dataset", "conv layers", "FC layers", "params (ours)", "accuracy"]);
+    for name in MODELS {
+        let d = ModelDesc::builtin(name).unwrap();
+        let convs = d
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, sonic::model::LayerKind::Conv { .. }))
+            .count();
+        t.row(&[
+            name.to_string(),
+            convs.to_string(),
+            (d.layers.len() - convs).to_string(),
+            d.total_params.to_string(),
+            format!("{:.2}%", d.accuracy),
+        ]);
+    }
+    println!("== Table 1 (reconstructed architectures) ==");
+    t.print();
+    Ok(())
+}
+
+fn cmd_table2() -> Result<()> {
+    let p = sonic::devices::DeviceParams::default();
+    let mut t = Table::new(&["device", "latency", "power"]);
+    for (n, l, pw) in p.table2_rows() {
+        t.row(&[n, l, pw]);
+    }
+    println!("== Table 2 (device parameters) ==");
+    t.print();
+    Ok(())
+}
+
+fn cmd_table3() -> Result<()> {
+    let mut t = Table::new(&[
+        "dataset",
+        "clusters",
+        "surviving params",
+        "accuracy",
+        "paper params",
+        "paper acc",
+    ]);
+    for name in MODELS {
+        let d = ModelDesc::load_or_builtin(name);
+        let b = ModelDesc::builtin(name).unwrap();
+        t.row(&[
+            name.to_string(),
+            d.n_clusters.to_string(),
+            d.surviving_params.to_string(),
+            format!("{:.2}%", d.accuracy),
+            b.surviving_params.to_string(),
+            format!("{:.2}%", b.accuracy),
+        ]);
+    }
+    println!("== Table 3 (sparsification + clustering results) ==");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! Model descriptors: the workload definition the simulator and coordinator
+//! consume.  Loaded from `artifacts/<name>.json` (measured sparsity from the
+//! actual sparsity-aware training run) when present, with builtin fallbacks
+//! carrying the paper's Table-1/Table-3 values so benches and tests run
+//! before `make artifacts`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        kernel: usize,
+        in_ch: usize,
+        out_ch: usize,
+        in_hw: usize,
+        pool: bool,
+    },
+    Fc {
+        in_dim: usize,
+        out_dim: usize,
+        relu: bool,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Fraction of zero weights after sparsification.
+    pub weight_sparsity: f64,
+    /// Fraction of zero input activations observed at this layer.
+    pub act_sparsity: f64,
+    /// Distinct non-zero weight values (<= cluster count).
+    pub unique_weights: usize,
+}
+
+impl Layer {
+    /// Number of weight parameters (weights + biases).
+    pub fn n_params(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv {
+                kernel,
+                in_ch,
+                out_ch,
+                ..
+            } => kernel * kernel * in_ch * out_ch + out_ch,
+            LayerKind::Fc { in_dim, out_dim, .. } => in_dim * out_dim + out_dim,
+        }
+    }
+
+    /// MAC count for one inference through this layer (dense).
+    pub fn macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv {
+                kernel,
+                in_ch,
+                out_ch,
+                in_hw,
+                ..
+            } => in_hw * in_hw * kernel * kernel * in_ch * out_ch,
+            LayerKind::Fc { in_dim, out_dim, .. } => in_dim * out_dim,
+        }
+    }
+
+    /// Input activation element count.
+    pub fn n_inputs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, in_hw, .. } => in_hw * in_hw * in_ch,
+            LayerKind::Fc { in_dim, .. } => in_dim,
+        }
+    }
+
+    /// Output element count.
+    pub fn n_outputs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, in_hw, .. } => in_hw * in_hw * out_ch,
+            LayerKind::Fc { out_dim, .. } => out_dim,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub n_classes: usize,
+    pub total_params: usize,
+    pub surviving_params: usize,
+    pub n_clusters: usize,
+    pub weight_dac_bits: u32,
+    pub act_dac_bits: u32,
+    pub accuracy: f64,
+    pub layers: Vec<Layer>,
+}
+
+impl ModelDesc {
+    /// Load from an artifact descriptor JSON.
+    pub fn load(path: &Path) -> Result<ModelDesc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Load `artifacts/<name>.json` if present; otherwise the builtin
+    /// paper-parameter descriptor.
+    pub fn load_or_builtin(name: &str) -> ModelDesc {
+        let p = crate::artifacts_dir().join(format!("{name}.json"));
+        if p.is_file() {
+            if let Ok(d) = Self::load(&p) {
+                return d;
+            }
+        }
+        Self::builtin(name).expect("unknown model")
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelDesc> {
+        let get_f = |k: &str| -> Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .with_context(|| format!("field {k} not a number"))
+        };
+        let mut layers = Vec::new();
+        for l in j.req("layers")?.as_arr().context("layers not an array")? {
+            let name = l.req("name")?.as_str().context("name")?.to_string();
+            let kind_s = l.req("kind")?.as_str().context("kind")?;
+            let kind = match kind_s {
+                "conv" => LayerKind::Conv {
+                    kernel: l.req("kernel")?.as_usize().context("kernel")?,
+                    in_ch: l.req("in_ch")?.as_usize().context("in_ch")?,
+                    out_ch: l.req("out_ch")?.as_usize().context("out_ch")?,
+                    in_hw: l.req("in_hw")?.as_usize().context("in_hw")?,
+                    pool: l.req("pool")?.as_bool().context("pool")?,
+                },
+                "fc" => LayerKind::Fc {
+                    in_dim: l.req("in_dim")?.as_usize().context("in_dim")?,
+                    out_dim: l.req("out_dim")?.as_usize().context("out_dim")?,
+                    relu: l.req("relu")?.as_bool().context("relu")?,
+                },
+                other => bail!("unknown layer kind {other}"),
+            };
+            layers.push(Layer {
+                name,
+                kind,
+                weight_sparsity: l.req("weight_sparsity")?.as_f64().context("ws")?,
+                act_sparsity: l.req("act_sparsity")?.as_f64().context("as")?,
+                unique_weights: l.req("unique_weights")?.as_usize().context("uw")?,
+            });
+        }
+        Ok(ModelDesc {
+            name: j.req("model")?.as_str().context("model")?.to_string(),
+            input_hw: j.req("input_hw")?.as_usize().context("input_hw")?,
+            input_ch: j.req("input_ch")?.as_usize().context("input_ch")?,
+            n_classes: j.req("n_classes")?.as_usize().context("n_classes")?,
+            total_params: j.req("total_params")?.as_usize().context("tp")?,
+            surviving_params: j.req("surviving_params")?.as_usize().context("sp")?,
+            n_clusters: j.req("n_clusters")?.as_usize().context("nc")?,
+            weight_dac_bits: get_f("weight_dac_bits")? as u32,
+            act_dac_bits: get_f("act_dac_bits")? as u32,
+            accuracy: j
+                .get("accuracy_synthetic")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            layers,
+        })
+    }
+
+    /// Total MACs for one dense inference.
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Bits moved per inference: surviving weights at weight resolution +
+    /// every layer's input activations at activation resolution.  This is
+    /// the denominator of the paper's energy-per-bit metric.
+    pub fn bits_per_inference(&self) -> f64 {
+        let w_bits = self.surviving_params as f64 * self.weight_dac_bits as f64;
+        let a_bits: f64 = self
+            .layers
+            .iter()
+            .map(|l| l.n_inputs() as f64 * self.act_dac_bits as f64)
+            .sum();
+        w_bits + a_bits
+    }
+
+    /// The four paper models with Table-1 geometry and Table-3 optimization
+    /// results (average layer sparsity derived from the params drop;
+    /// activation sparsity at the ReLU-typical 50%).
+    pub fn builtin(name: &str) -> Option<ModelDesc> {
+        let spec: &[(&str, usize, usize, &[(usize, usize, bool)], &[(usize, usize, bool)], usize, usize, usize, f64)] = &[
+            // name, hw, ch, convs[(in,out,pool)], fcs[(in,out,relu)], total, surviving, clusters, acc
+            (
+                "mnist",
+                28,
+                1,
+                &[(1, 112, true), (112, 32, true)],
+                &[(1568, 928, true), (928, 10, false)],
+                1_498_730,
+                749_365,
+                64,
+                92.89,
+            ),
+            (
+                "cifar10",
+                32,
+                3,
+                &[
+                    (3, 20, false),
+                    (20, 20, true),
+                    (20, 38, false),
+                    (38, 38, true),
+                    (38, 216, false),
+                    (216, 216, true),
+                ],
+                &[(3456, 10, false)],
+                552_870,
+                276_437,
+                16,
+                86.86,
+            ),
+            (
+                "stl10",
+                96,
+                3,
+                &[
+                    (3, 80, false),
+                    (80, 80, true),
+                    (80, 160, false),
+                    (160, 160, true),
+                    (160, 232, false),
+                    (232, 232, true),
+                ],
+                &[(33408, 2291, true), (2291, 10, false)],
+                77_787_739,
+                46_672_643,
+                64,
+                75.2,
+            ),
+            (
+                "svhn",
+                32,
+                3,
+                &[
+                    (3, 56, false),
+                    (56, 56, true),
+                    (56, 28, false),
+                    (28, 28, true),
+                ],
+                &[(1792, 272, true), (272, 48, true), (48, 10, false)],
+                552_362,
+                331_417,
+                64,
+                95.0,
+            ),
+        ];
+        let &(n, hw, ch, convs, fcs, total, surviving, clusters, acc) =
+            spec.iter().find(|s| s.0 == name)?;
+        // Table 3 layer counts: how many layers the paper pruned per model.
+        let layers_pruned: usize = match name {
+            "mnist" => 4,
+            "cifar10" => 7,
+            "stl10" => 5,
+            "svhn" => 5,
+            _ => unreachable!(),
+        };
+        // Mirror python/compile/sparsify.default_plan: prune the largest
+        // layers first, protecting the first conv and final head when the
+        // budget allows; one uniform sparsity level solves Table 3's
+        // surviving-parameter total over the chosen layers' weights.
+        let n_layers = convs.len() + fcs.len();
+        let weight_count = |i: usize| -> usize {
+            if i < convs.len() {
+                let (ic, oc, _) = convs[i];
+                9 * ic * oc
+            } else {
+                let (id, od, _) = fcs[i - convs.len()];
+                id * od
+            }
+        };
+        let mut order: Vec<usize> = (0..n_layers).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(weight_count(i)));
+        let mut chosen: Vec<usize> = if layers_pruned < n_layers {
+            let protected = [0usize, n_layers - 1];
+            let mut c: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|i| !protected.contains(i))
+                .take(layers_pruned)
+                .collect();
+            if c.len() < layers_pruned {
+                c.extend(
+                    order
+                        .iter()
+                        .copied()
+                        .filter(|i| protected.contains(i))
+                        .take(layers_pruned - c.len()),
+                );
+            }
+            c
+        } else {
+            order.clone()
+        };
+        chosen.sort_unstable();
+        // CONV layers prune to 50% (dense per-slice kernel vectors hold
+        // <= 5 entries, §V.B's n=5 finding); FC layers absorb the rest of
+        // the Table-3 budget (mirrors python/compile/sparsify.default_plan).
+        let conv_s = 0.5;
+        let conv_pruned: f64 = chosen
+            .iter()
+            .filter(|&&i| i < convs.len())
+            .map(|&i| weight_count(i) as f64 * conv_s)
+            .sum();
+        let fc_prunable: usize = chosen
+            .iter()
+            .filter(|&&i| i >= convs.len())
+            .map(|&i| weight_count(i))
+            .sum();
+        let budget = (total - surviving) as f64 - conv_pruned;
+        let fc_s = if fc_prunable > 0 {
+            (budget / fc_prunable as f64).clamp(0.0, 0.95)
+        } else {
+            0.0
+        };
+
+        let mut layers = Vec::new();
+        let mut cur_hw = hw;
+        for (i, &(ic, oc, pool)) in convs.iter().enumerate() {
+            let pruned = chosen.contains(&i);
+            layers.push(Layer {
+                name: format!("conv{ic}x{oc}"),
+                kind: LayerKind::Conv {
+                    kernel: 3,
+                    in_ch: ic,
+                    out_ch: oc,
+                    in_hw: cur_hw,
+                    pool,
+                },
+                weight_sparsity: if pruned { conv_s } else { 0.0 },
+                act_sparsity: if i == 0 { 0.0 } else { 0.5 },
+                unique_weights: clusters,
+            });
+            if pool {
+                cur_hw /= 2;
+            }
+        }
+        for (j, &(id, od, relu)) in fcs.iter().enumerate() {
+            let i = convs.len() + j;
+            let pruned = chosen.contains(&i);
+            layers.push(Layer {
+                name: format!("fc{id}x{od}"),
+                kind: LayerKind::Fc {
+                    in_dim: id,
+                    out_dim: od,
+                    relu,
+                },
+                weight_sparsity: if pruned { fc_s } else { 0.0 },
+                act_sparsity: 0.5,
+                unique_weights: clusters,
+            });
+        }
+        Some(ModelDesc {
+            name: n.to_string(),
+            input_hw: hw,
+            input_ch: ch,
+            n_classes: 10,
+            total_params: total,
+            surviving_params: surviving,
+            n_clusters: clusters,
+            weight_dac_bits: if clusters <= 64 { 6 } else { 16 },
+            act_dac_bits: 16,
+            accuracy: acc,
+            layers,
+        })
+    }
+
+    pub fn all_builtin() -> Vec<ModelDesc> {
+        ["mnist", "cifar10", "stl10", "svhn"]
+            .iter()
+            .map(|n| Self::builtin(n).unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_param_totals_match_table1() {
+        for (name, want) in [
+            ("mnist", 1_498_730usize),
+            ("cifar10", 552_870),
+            ("stl10", 77_787_739),
+            ("svhn", 552_362),
+        ] {
+            let d = ModelDesc::builtin(name).unwrap();
+            let total: usize = d.layers.iter().map(|l| l.n_params()).sum();
+            assert_eq!(total, want, "{name}");
+            assert_eq!(d.total_params, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn builtin_layer_counts_match_table1() {
+        let counts = |d: &ModelDesc| {
+            let c = d
+                .layers
+                .iter()
+                .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+                .count();
+            (c, d.layers.len() - c)
+        };
+        assert_eq!(counts(&ModelDesc::builtin("mnist").unwrap()), (2, 2));
+        assert_eq!(counts(&ModelDesc::builtin("cifar10").unwrap()), (6, 1));
+        assert_eq!(counts(&ModelDesc::builtin("svhn").unwrap()), (4, 3));
+        assert_eq!(counts(&ModelDesc::builtin("stl10").unwrap()), (6, 2));
+    }
+
+    #[test]
+    fn unknown_builtin_none() {
+        assert!(ModelDesc::builtin("alexnet").is_none());
+    }
+
+    #[test]
+    fn macs_positive_and_conv_dominated_for_cifar() {
+        let d = ModelDesc::builtin("cifar10").unwrap();
+        let conv_macs: usize = d
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .map(|l| l.macs())
+            .sum();
+        assert!(conv_macs > d.total_macs() / 2);
+    }
+
+    #[test]
+    fn bits_per_inference_scales_with_model() {
+        let small = ModelDesc::builtin("svhn").unwrap().bits_per_inference();
+        let big = ModelDesc::builtin("stl10").unwrap().bits_per_inference();
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn from_json_round_trip_via_descriptor_shape() {
+        let src = r#"{
+            "model": "tiny", "input_hw": 8, "input_ch": 1, "n_classes": 2,
+            "total_params": 100, "surviving_params": 60, "n_clusters": 16,
+            "weight_dac_bits": 4, "act_dac_bits": 16, "accuracy_synthetic": 88.5,
+            "layers": [
+              {"name": "c0", "kind": "conv", "kernel": 3, "in_ch": 1,
+               "out_ch": 4, "in_hw": 8, "pool": true,
+               "weight_sparsity": 0.5, "act_sparsity": 0.0, "unique_weights": 16},
+              {"name": "f0", "kind": "fc", "in_dim": 64, "out_dim": 2,
+               "relu": false, "weight_sparsity": 0.4, "act_sparsity": 0.6,
+               "unique_weights": 16}
+            ]
+        }"#;
+        let d = ModelDesc::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(d.name, "tiny");
+        assert_eq!(d.layers.len(), 2);
+        assert_eq!(d.layers[0].n_params(), 3 * 3 * 4 + 4);
+        assert_eq!(d.layers[1].n_inputs(), 64);
+        assert!((d.accuracy - 88.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_kind() {
+        let src = r#"{"model":"x","input_hw":1,"input_ch":1,"n_classes":2,
+          "total_params":1,"surviving_params":1,"n_clusters":2,
+          "weight_dac_bits":6,"act_dac_bits":16,
+          "layers":[{"name":"l","kind":"lstm","weight_sparsity":0,
+          "act_sparsity":0,"unique_weights":1}]}"#;
+        assert!(ModelDesc::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn sparsity_in_builtin_consistent_with_table3() {
+        let d = ModelDesc::builtin("mnist").unwrap();
+        assert!((d.surviving_params as f64 / d.total_params as f64 - 0.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,394 @@
+//! PJRT runtime (L3 <-> AOT bridge).
+//!
+//! Loads the HLO-*text* artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt`), compiles them once on the PJRT CPU client, and
+//! executes them from the serving hot path with weight literals from the
+//! `.swt` pack.  Python never runs at request time.
+//!
+//! HLO text — not serialized HloModuleProto — is the interchange format:
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly
+//! (see /opt/xla-example/README.md).
+//!
+//! Threading: the `xla` crate's handles hold `Rc`s and raw pointers, so
+//! they are neither `Send` nor `Sync`.  All PJRT state therefore lives on
+//! a dedicated **owner thread** ([`PjrtBackend`]); the rest of the system
+//! talks to it over channels, which is also the natural shape for the
+//! router (one compiled executable, serialized batch execution).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::serve::InferenceBackend;
+use crate::tensor::{swt, Tensor};
+use crate::util::json::Json;
+
+/// An artifact entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub key: String,
+    pub file: String,
+    pub batch: usize,
+    /// Argument names + shapes in order (first is the model input).
+    pub arg_shapes: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactInfo {
+    /// Input element count per request (shape without the batch dim).
+    pub fn per_request_len(&self) -> usize {
+        self.arg_shapes
+            .first()
+            .map(|(_, s)| s.iter().skip(1).product())
+            .unwrap_or(0)
+    }
+}
+
+/// Parse the AOT manifest.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactInfo>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+    let j = Json::parse(&text).context("parsing manifest.json")?;
+    let obj = j.as_obj().context("manifest not an object")?;
+    let mut out = Vec::new();
+    for (key, v) in obj {
+        let file = v.req("file")?.as_str().context("file")?.to_string();
+        let batch = v.req("batch")?.as_usize().context("batch")?;
+        let mut arg_shapes = Vec::new();
+        for a in v.req("args")?.as_arr().context("args")? {
+            let name = a.req("name")?.as_str().context("name")?.to_string();
+            let shape = a
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            arg_shapes.push((name, shape));
+        }
+        out.push(ArtifactInfo {
+            key: key.clone(),
+            file,
+            batch,
+            arg_shapes,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Owner-thread internals (not Send; constructed and used on one thread only).
+
+/// A compiled model executable + its weight literals.
+struct CompiledModel {
+    info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in artifact argument order (after the input).
+    weights: Vec<xla::Literal>,
+    input_shape: Vec<usize>,
+}
+
+/// Single-threaded PJRT context: client + loader.  Public for tests and
+/// tools that stay on one thread; the serving path uses [`PjrtBackend`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.into(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn load_model(&self, key: &str) -> Result<CompiledModel> {
+        let manifest = load_manifest(&self.dir)?;
+        let info = manifest
+            .into_iter()
+            .find(|a| a.key == key)
+            .with_context(|| format!("artifact {key:?} not in manifest"))?;
+        let hlo_path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+
+        // Model artifacts (arg0 named "input") take the SWT weight pack.
+        let mut weights = Vec::new();
+        let input_shape;
+        if info.arg_shapes.first().map(|a| a.0.as_str()) == Some("input") {
+            input_shape = info.arg_shapes[0].1.clone();
+            let model_name = key.split("_b").next().unwrap_or(key);
+            let swt_path = self.dir.join(format!("{model_name}.swt"));
+            let tensors = swt::read_swt(&swt_path)
+                .with_context(|| format!("reading {}", swt_path.display()))?;
+            if tensors.len() != info.arg_shapes.len() - 1 {
+                bail!(
+                    "weight count mismatch: {} tensors vs {} args",
+                    tensors.len(),
+                    info.arg_shapes.len() - 1
+                );
+            }
+            for (t, (aname, ashape)) in tensors.iter().zip(&info.arg_shapes[1..]) {
+                if &t.name != aname || &t.dims != ashape {
+                    bail!(
+                        "arg contract violation: swt {}{:?} vs artifact {}{:?}",
+                        t.name,
+                        t.dims,
+                        aname,
+                        ashape
+                    );
+                }
+                weights.push(tensor_to_literal(t)?);
+            }
+        } else {
+            input_shape = info
+                .arg_shapes
+                .first()
+                .map(|a| a.1.clone())
+                .unwrap_or_default();
+        }
+        Ok(CompiledModel {
+            info,
+            exe,
+            weights,
+            input_shape,
+        })
+    }
+
+    /// One-shot single-threaded execution of an artifact (tests/tools):
+    /// all arguments supplied by the caller, no SWT binding.
+    pub fn run_raw(&self, key: &str, args: &[Tensor]) -> Result<Vec<f32>> {
+        let manifest = load_manifest(&self.dir)?;
+        let info = manifest
+            .into_iter()
+            .find(|a| a.key == key)
+            .with_context(|| format!("artifact {key:?} not in manifest"))?;
+        let hlo_path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let lits = args
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl CompiledModel {
+    /// Execute on a flat input of `prod(input_shape)` f32; returns the flat
+    /// first tuple element.
+    fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = self.input_shape.iter().product();
+        if input.len() != expect {
+            bail!(
+                "input length {} != artifact shape {:?}",
+                input.len(),
+                self.input_shape
+            );
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(input).reshape(&dims)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&x);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Owner-thread backend: Send + Sync handle over channels.
+
+enum Job {
+    Infer {
+        inputs: Vec<Vec<f32>>,
+        reply: SyncSender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// [`InferenceBackend`] executing batches on a dedicated PJRT owner thread.
+/// Loads `<model>` (batch 1) and, when present, `<model>_b8` as the dynamic
+/// batcher's fast path.
+pub struct PjrtBackend {
+    tx: SyncSender<Job>,
+    input_len: usize,
+    batch_fast_path: usize,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: impl Into<PathBuf>, model: &str) -> Result<Self> {
+        let dir: PathBuf = artifacts_dir.into();
+        let model = model.to_string();
+        let (tx, rx) = sync_channel::<Job>(64);
+        let (init_tx, init_rx) = sync_channel::<Result<(usize, usize)>>(1);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-owner".into())
+            .spawn(move || owner_thread(dir, model, rx, init_tx))
+            .context("spawning pjrt owner thread")?;
+        let (input_len, batch_fast_path) = init_rx
+            .recv()
+            .context("pjrt owner thread died during init")??;
+        Ok(Self {
+            tx,
+            input_len,
+            batch_fast_path,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_fast_path.max(1)
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn owner_thread(
+    dir: PathBuf,
+    model: String,
+    rx: Receiver<Job>,
+    init_tx: SyncSender<Result<(usize, usize)>>,
+) {
+    let setup = (|| -> Result<(Runtime, CompiledModel, Option<CompiledModel>)> {
+        let rt = Runtime::new(&dir)?;
+        let b1 = rt.load_model(&model)?;
+        let bn = rt.load_model(&format!("{model}_b8")).ok();
+        Ok((rt, b1, bn))
+    })();
+    let (_rt, b1, bn) = match setup {
+        Ok(v) => {
+            let per = v.1.input_shape.iter().skip(1).product();
+            let bsz = v.2.as_ref().map(|m| m.info.batch).unwrap_or(1);
+            let _ = init_tx.send(Ok((per, bsz)));
+            v
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    let per: usize = b1.input_shape.iter().skip(1).product();
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Infer { inputs, reply } => {
+                let result = (|| -> Result<Vec<Vec<f32>>> {
+                    let mut out = Vec::with_capacity(inputs.len());
+                    let mut i = 0;
+                    while i < inputs.len() {
+                        if let Some(bnm) = &bn {
+                            let b = bnm.info.batch;
+                            if inputs.len() - i >= b {
+                                let mut flat = Vec::with_capacity(b * per);
+                                for x in &inputs[i..i + b] {
+                                    flat.extend_from_slice(x);
+                                }
+                                let y = bnm.run(&flat)?;
+                                let stride = y.len() / b;
+                                for j in 0..b {
+                                    out.push(y[j * stride..(j + 1) * stride].to_vec());
+                                }
+                                i += b;
+                                continue;
+                            }
+                        }
+                        out.push(b1.run(&inputs[i])?);
+                        i += 1;
+                    }
+                    Ok(out)
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Job::Infer {
+                inputs: inputs.to_vec(),
+                reply: reply_tx,
+            })
+            .context("pjrt owner thread gone")?;
+        reply_rx.recv().context("pjrt owner thread dropped reply")?
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_pjrt.rs (they need
+    // built artifacts); here we cover the manifest parser only.
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("sonic_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"mnist": {"file": "mnist.hlo.txt", "batch": 1,
+                 "args": [{"name": "input", "shape": [1, 28, 28, 1]},
+                          {"name": "conv.w", "shape": [3, 3, 1, 4]}]}}"#,
+        )
+        .unwrap();
+        let m = load_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].key, "mnist");
+        assert_eq!(m[0].arg_shapes[0].1, vec![1, 28, 28, 1]);
+        assert_eq!(m[0].per_request_len(), 28 * 28);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(load_manifest(Path::new("/nonexistent/dir")).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Ablation study over SONIC's three co-design levers (bench: ablation.rs):
+//! power gating (§IV.B), weight clustering (§III.B), and dataflow
+//! compression (§III.C).  Quantifies how much of the end-to-end win each
+//! contributes — the analysis DESIGN.md calls out as "ablations (ours)".
+
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
+use crate::sim::engine::{simulate, InferenceStats};
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub variant: &'static str,
+    pub stats: InferenceStats,
+    /// FPS/W relative to the full configuration.
+    pub fps_per_watt_rel: f64,
+    /// EPB relative to the full configuration (>1 is worse).
+    pub epb_rel: f64,
+}
+
+/// Run the standard ablation matrix on one model.
+pub fn ablate(model: &ModelDesc) -> Vec<AblationRow> {
+    let full = simulate(model, &SonicConfig::paper_best());
+    let variants: Vec<(&'static str, SonicConfig)> = vec![
+        ("full", SonicConfig::paper_best()),
+        ("no power gating", SonicConfig::paper_best().without_power_gating()),
+        ("no clustering", SonicConfig::paper_best().without_clustering()),
+        ("no compression", SonicConfig::paper_best().without_compression()),
+        (
+            "no sparsity support",
+            SonicConfig::paper_best()
+                .without_power_gating()
+                .without_compression(),
+        ),
+        (
+            "dense photonic (all off)",
+            SonicConfig::paper_best()
+                .without_power_gating()
+                .without_compression()
+                .without_clustering(),
+        ),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, cfg)| {
+            let stats = simulate(model, &cfg);
+            AblationRow {
+                variant: name,
+                fps_per_watt_rel: stats.fps_per_watt / full.fps_per_watt,
+                epb_rel: stats.epb_j / full.epb_j,
+                stats,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_is_best() {
+        let rows = ablate(&ModelDesc::builtin("cifar10").unwrap());
+        let full = &rows[0];
+        assert_eq!(full.variant, "full");
+        assert!((full.fps_per_watt_rel - 1.0).abs() < 1e-9);
+        for r in &rows[1..] {
+            assert!(
+                r.fps_per_watt_rel <= 1.0 + 1e-9,
+                "{} beat full: {}",
+                r.variant,
+                r.fps_per_watt_rel
+            );
+            assert!(r.epb_rel >= 1.0 - 1e-9, "{}", r.variant);
+        }
+    }
+
+    #[test]
+    fn dense_variant_is_worst() {
+        let rows = ablate(&ModelDesc::builtin("svhn").unwrap());
+        let dense = rows.last().unwrap();
+        assert_eq!(dense.variant, "dense photonic (all off)");
+        for r in &rows[..rows.len() - 1] {
+            assert!(dense.epb_rel >= r.epb_rel * 0.999, "{}", r.variant);
+        }
+    }
+
+    #[test]
+    fn each_lever_individually_matters() {
+        // every single-lever ablation must cost at least a few percent EPB
+        let rows = ablate(&ModelDesc::builtin("mnist").unwrap());
+        for r in &rows[1..4] {
+            assert!(r.epb_rel > 1.03, "{} only {}", r.variant, r.epb_rel);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Batch-pipelining model: how per-inference photonic cost amortizes when
+//! the router batches B requests (used by `coordinator::serve` and the
+//! serving examples).
+//!
+//! A batch streams through the VDU array back-to-back: per-layer setup
+//! (broadband BN MR configuration, TO settling) and the pipeline fill are
+//! paid once per batch, while the pass streams of consecutive requests
+//! pipeline at the initiation interval.
+
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
+use crate::sim::engine::{simulate, InferenceStats};
+
+#[derive(Debug, Clone)]
+pub struct BatchStats {
+    pub batch: usize,
+    /// Total latency for the whole batch (s).
+    pub latency_s: f64,
+    /// Per-request effective latency (s).
+    pub per_request_s: f64,
+    /// Batch throughput (inferences/s).
+    pub fps: f64,
+    /// Energy for the batch (J).
+    pub energy_j: f64,
+    pub fps_per_watt: f64,
+}
+
+/// Steady-state fraction of a single inference's latency that is pure
+/// pipeline time (rounds x II) rather than per-layer setup/fill — the part
+/// every request in a batch pays; the overhead is paid once per batch.
+fn pipeline_fraction(stats: &InferenceStats) -> f64 {
+    let overhead: f64 = stats.layers.iter().map(|l| l.overhead_s).sum();
+    (1.0 - overhead / stats.latency_s).clamp(0.0, 1.0)
+}
+
+/// Cost of serving a batch of `b` requests.
+pub fn batched(model: &ModelDesc, cfg: &SonicConfig, b: usize) -> BatchStats {
+    assert!(b >= 1);
+    let one = simulate(model, cfg);
+    let pf = pipeline_fraction(&one);
+    // first request pays everything; subsequent ones only the pipelined part
+    let latency = one.latency_s * (1.0 + pf * (b as f64 - 1.0));
+    let energy = one.energy_j * b as f64;
+    let power = energy / latency;
+    let fps = b as f64 / latency;
+    BatchStats {
+        batch: b,
+        latency_s: latency,
+        per_request_s: latency / b as f64,
+        fps,
+        energy_j: energy,
+        fps_per_watt: fps / power,
+    }
+}
+
+/// Sweep batch sizes; useful for picking the router's max_batch.
+pub fn sweep(model: &ModelDesc, cfg: &SonicConfig, batches: &[usize]) -> Vec<BatchStats> {
+    batches.iter().map(|&b| batched(model, cfg, b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch1_matches_single_inference() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let one = simulate(&m, &cfg);
+        let b1 = batched(&m, &cfg, 1);
+        assert!((b1.latency_s - one.latency_s).abs() / one.latency_s < 1e-9);
+        assert!((b1.fps - one.fps).abs() / one.fps < 1e-9);
+    }
+
+    #[test]
+    fn batching_improves_throughput_submultiplicatively() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let b1 = batched(&m, &cfg, 1);
+        let b8 = batched(&m, &cfg, 8);
+        assert!(b8.fps > b1.fps); // more throughput
+        assert!(b8.fps < b1.fps * 8.0); // but not 8x (pipeline-bound)
+        assert!(b8.per_request_s < b1.per_request_s);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_batch() {
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let b4 = batched(&m, &cfg, 4);
+        let b1 = batched(&m, &cfg, 1);
+        assert!((b4.energy_j / b1.energy_j - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_fps() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let s = sweep(&m, &cfg, &[1, 2, 4, 8, 16]);
+        for w in s.windows(2) {
+            assert!(w[1].fps >= w[0].fps);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Architecture design-space exploration over `(n, m, N, K)` (§V.B).
+//!
+//! The paper reports `(5, 50, 50, 10)` as the best configuration in terms
+//! of FPS/W, EPB, and power, with `n` pinned by the dense kernel-vector
+//! granularity after sparsification ("increasing n beyond five did not
+//! provide any benefits").  `explore` sweeps the space and scores each
+//! point the same way.
+
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
+use crate::sim::engine::simulate;
+
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub n: usize,
+    pub m: usize,
+    pub n_conv_vdus: usize,
+    pub n_fc_vdus: usize,
+    /// Geometric-mean FPS/W across the workload set.
+    pub gm_fps_per_watt: f64,
+    /// Geometric-mean EPB (J/bit).
+    pub gm_epb: f64,
+    /// Mean power (W).
+    pub mean_power_w: f64,
+}
+
+impl DsePoint {
+    pub fn geometry(&self) -> (usize, usize, usize, usize) {
+        (self.n, self.m, self.n_conv_vdus, self.n_fc_vdus)
+    }
+}
+
+fn gmean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut n) = (0.0, 0);
+    for x in xs {
+        s += x.ln();
+        n += 1;
+    }
+    (s / n.max(1) as f64).exp()
+}
+
+/// Evaluate one geometry across a workload set.
+pub fn evaluate(
+    models: &[ModelDesc],
+    n: usize,
+    m: usize,
+    nn: usize,
+    k: usize,
+) -> DsePoint {
+    let cfg = SonicConfig::with_geometry(n, m, nn, k);
+    let stats: Vec<_> = models.iter().map(|md| simulate(md, &cfg)).collect();
+    DsePoint {
+        n,
+        m,
+        n_conv_vdus: nn,
+        n_fc_vdus: k,
+        gm_fps_per_watt: gmean(stats.iter().map(|s| s.fps_per_watt)),
+        gm_epb: gmean(stats.iter().map(|s| s.epb_j)),
+        mean_power_w: stats.iter().map(|s| s.avg_power_w).sum::<f64>() / stats.len() as f64,
+    }
+}
+
+/// Sweep the configuration space; returns all points sorted by FPS/W
+/// (descending).  Default grid brackets the paper's best point.
+pub fn explore(models: &[ModelDesc], grid: Option<DseGrid>) -> Vec<DsePoint> {
+    let grid = grid.unwrap_or_default();
+    let mut out = Vec::new();
+    for &n in &grid.n {
+        for &m in &grid.m {
+            for &nn in &grid.n_conv {
+                for &k in &grid.k_fc {
+                    out.push(evaluate(models, n, m, nn, k));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| b.gm_fps_per_watt.partial_cmp(&a.gm_fps_per_watt).unwrap());
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct DseGrid {
+    pub n: Vec<usize>,
+    pub m: Vec<usize>,
+    pub n_conv: Vec<usize>,
+    pub k_fc: Vec<usize>,
+}
+
+impl Default for DseGrid {
+    fn default() -> Self {
+        Self {
+            n: vec![3, 5, 8, 10],
+            m: vec![25, 50, 100],
+            n_conv: vec![25, 50, 100],
+            k_fc: vec![5, 10, 20],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> Vec<ModelDesc> {
+        vec![
+            ModelDesc::builtin("mnist").unwrap(),
+            ModelDesc::builtin("cifar10").unwrap(),
+            ModelDesc::builtin("svhn").unwrap(),
+        ]
+    }
+
+    #[test]
+    fn paper_geometry_evaluates() {
+        let p = evaluate(&workload(), 5, 50, 50, 10);
+        assert!(p.gm_fps_per_watt > 0.0);
+        assert!(p.gm_epb > 0.0);
+    }
+
+    #[test]
+    fn explore_sorted_descending() {
+        let grid = DseGrid {
+            n: vec![5],
+            m: vec![25, 50],
+            n_conv: vec![25, 50],
+            k_fc: vec![10],
+        };
+        let pts = explore(&workload(), Some(grid));
+        assert_eq!(pts.len(), 4);
+        for w in pts.windows(2) {
+            assert!(w[0].gm_fps_per_watt >= w[1].gm_fps_per_watt);
+        }
+    }
+
+    #[test]
+    fn n_beyond_five_no_throughput_benefit() {
+        // The paper: dense kernel vectors never exceed ~5 entries, so
+        // raising n only adds idle lanes -> FPS/W degrades or stagnates.
+        let w = workload();
+        let at5 = evaluate(&w, 5, 50, 50, 10);
+        let at10 = evaluate(&w, 10, 50, 50, 10);
+        assert!(at10.gm_fps_per_watt <= at5.gm_fps_per_watt * 1.02);
+    }
+
+    #[test]
+    fn gmean_basic() {
+        assert!((gmean([4.0f64, 9.0].into_iter()) - 6.0).abs() < 1e-12);
+    }
+}

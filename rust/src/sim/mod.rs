@@ -1,0 +1,16 @@
+//! Analytic performance/power/energy simulator.
+//!
+//! This is the Rust re-implementation of the paper's "custom Python
+//! simulator, integrated with Tensorflow v2.5" (§V): it consumes a model
+//! descriptor (measured sparsity from the real sparsity-aware training run,
+//! or the paper's Table-3 values via the builtin descriptors) and an
+//! architecture configuration, and produces the latency / power / FPS/W /
+//! EPB numbers behind Figs. 8–10.
+
+pub mod ablation;
+pub mod batch;
+pub mod dse;
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, InferenceStats, LayerStats, PowerBreakdown};

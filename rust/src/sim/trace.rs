@@ -1,0 +1,113 @@
+//! Execution-timeline trace: per-layer events of one simulated inference,
+//! exportable as JSON for tooling (`sonic trace --model ...`).  Useful for
+//! seeing where VDU rounds, fills, and setups go — the simulator-side
+//! flamegraph.
+
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
+use crate::sim::engine::{simulate, InferenceStats};
+use crate::util::json::{arr, num, obj, s, Json};
+
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub layer: String,
+    pub kind: &'static str,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub model: String,
+    pub events: Vec<TraceEvent>,
+    pub total_s: f64,
+}
+
+/// Build a layer-sequential timeline from the analytic stats.
+pub fn trace(model: &ModelDesc, cfg: &SonicConfig) -> (Trace, InferenceStats) {
+    let stats = simulate(model, cfg);
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    for l in &stats.layers {
+        let setup_end = t + l.overhead_s;
+        events.push(TraceEvent {
+            layer: l.name.clone(),
+            kind: "setup+fill",
+            start_s: t,
+            end_s: setup_end,
+        });
+        events.push(TraceEvent {
+            layer: l.name.clone(),
+            kind: "pipeline",
+            start_s: setup_end,
+            end_s: t + l.latency_s,
+        });
+        t += l.latency_s;
+    }
+    (
+        Trace {
+            model: model.name.clone(),
+            events,
+            total_s: t,
+        },
+        stats,
+    )
+}
+
+impl Trace {
+    /// Chrome-trace-ish JSON (array of {layer, kind, start_us, dur_us}).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("total_us", num(self.total_s * 1e6)),
+            (
+                "events",
+                arr(self
+                    .events
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("layer", s(&e.layer)),
+                            ("kind", s(e.kind)),
+                            ("start_us", num(e.start_s * 1e6)),
+                            ("dur_us", num((e.end_s - e.start_s) * 1e6)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_is_contiguous_and_total_matches() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let (tr, stats) = trace(&m, &SonicConfig::paper_best());
+        assert_eq!(tr.events.len(), stats.layers.len() * 2);
+        assert!((tr.total_s - stats.latency_s).abs() / stats.latency_s < 1e-9);
+        // events are ordered and non-overlapping
+        let mut t = 0.0;
+        for e in &tr.events {
+            assert!(e.start_s >= t - 1e-15, "{} starts early", e.layer);
+            assert!(e.end_s >= e.start_s);
+            t = e.end_s;
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let (tr, _) = trace(&m, &SonicConfig::paper_best());
+        let j = tr.to_json();
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("model").and_then(|v| v.as_str()),
+            Some("mnist")
+        );
+        assert!(parsed.get("events").unwrap().as_arr().unwrap().len() >= 8);
+    }
+}

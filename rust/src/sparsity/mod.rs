@@ -1,0 +1,175 @@
+//! Sparse-tensor formats and statistics used by the dataflow compression
+//! path (§III.C) and the Fig. 7 reporting.
+
+pub mod stats;
+
+/// A sparse vector in index+value form (the compressed representation the
+//  control unit ships to VDU local buffers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVec {
+    /// Original (uncompressed) length.
+    pub len: usize,
+    /// Indices of non-zero entries, ascending.
+    pub idx: Vec<u32>,
+    /// Values at those indices.
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn from_dense(v: &[f32]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        Self {
+            len: v.len(),
+            idx,
+            val,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / self.len as f64
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Dot product against a dense vector of the same (original) length.
+    pub fn dot_dense(&self, dense: &[f32]) -> f32 {
+        assert_eq!(dense.len(), self.len);
+        self.idx
+            .iter()
+            .zip(&self.val)
+            .map(|(&i, &v)| v * dense[i as usize])
+            .sum()
+    }
+}
+
+/// Column-compressed sparse matrix (CSC-flavoured) used for FC weights:
+/// the FC compression drops whole *columns* (Fig. 1), which this layout
+/// makes O(1) per column.
+#[derive(Debug, Clone)]
+pub struct ColMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major dense storage; column c occupies [c*rows, (c+1)*rows).
+    pub data: Vec<f32>,
+}
+
+impl ColMatrix {
+    pub fn from_row_major(rows: usize, cols: usize, rm: &[f32]) -> Self {
+        assert_eq!(rm.len(), rows * cols);
+        let mut data = vec![0.0; rm.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                data[c * rows + r] = rm[r * cols + c];
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn col(&self, c: usize) -> &[f32] {
+        &self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    /// Gather a sub-matrix keeping only `keep` columns (the FC compression
+    /// primitive: drop columns whose activation is zero).
+    pub fn keep_cols(&self, keep: &[usize]) -> ColMatrix {
+        let mut data = Vec::with_capacity(keep.len() * self.rows);
+        for &c in keep {
+            data.extend_from_slice(self.col(c));
+        }
+        ColMatrix {
+            rows: self.rows,
+            cols: keep.len(),
+            data,
+        }
+    }
+
+    /// y = M * x  (x indexed by column), reference implementation.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for c in 0..self.cols {
+            let xv = x[c];
+            if xv == 0.0 {
+                continue;
+            }
+            let col = self.col(c);
+            for r in 0..self.rows {
+                y[r] += col[r] * xv;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_vec_round_trip() {
+        let v = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseVec::from_dense(&v);
+        assert_eq!(s.nnz(), 2);
+        assert!((s.sparsity() - 0.6).abs() < 1e-12);
+        assert_eq!(s.to_dense(), v);
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense() {
+        let v = vec![0.0, 2.0, 0.0, 3.0];
+        let d = vec![1.0, 10.0, 100.0, 1000.0];
+        let s = SparseVec::from_dense(&v);
+        assert_eq!(s.dot_dense(&d), 3020.0);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let s = SparseVec::from_dense(&[]);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn col_matrix_layout() {
+        // [[1,2],[3,4]] row-major
+        let m = ColMatrix::from_row_major(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.col(0), &[1.0, 3.0]);
+        assert_eq!(m.col(1), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn keep_cols_gathers() {
+        let m = ColMatrix::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let k = m.keep_cols(&[2, 0]);
+        assert_eq!(k.cols, 2);
+        assert_eq!(k.col(0), &[3.0, 6.0]);
+        assert_eq!(k.col(1), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_reference() {
+        let m = ColMatrix::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let y = m.matvec(&[1.0, 0.0, 2.0]);
+        assert_eq!(y, vec![7.0, 16.0]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Sparsity statistics over weight packs — the data behind Fig. 7
+//! (layer-wise weight & activation sparsity per model).
+
+use crate::model::ModelDesc;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct LayerSparsity {
+    pub layer: String,
+    pub weight_sparsity: f64,
+    pub act_sparsity: f64,
+    pub unique_weights: usize,
+}
+
+/// Fig. 7 rows from a model descriptor (measured values when the
+/// descriptor came from a real training run).
+pub fn fig7_rows(model: &ModelDesc) -> Vec<LayerSparsity> {
+    model
+        .layers
+        .iter()
+        .map(|l| LayerSparsity {
+            layer: l.name.clone(),
+            weight_sparsity: l.weight_sparsity,
+            act_sparsity: l.act_sparsity,
+            unique_weights: l.unique_weights,
+        })
+        .collect()
+}
+
+/// Recompute weight sparsity directly from an SWT weight pack: trust but
+/// verify the descriptor (integration tests cross-check the two).
+pub fn measure_weight_sparsity(tensors: &[Tensor]) -> Vec<(String, f64)> {
+    tensors
+        .iter()
+        .filter(|t| t.name.ends_with(".w"))
+        .map(|t| (t.name.trim_end_matches(".w").to_string(), t.sparsity()))
+        .collect()
+}
+
+/// Model-level averages (the "average pruning aggressiveness" axis of
+/// Fig. 6).
+pub fn model_avg_sparsity(model: &ModelDesc) -> (f64, f64) {
+    let n = model.layers.len().max(1) as f64;
+    let w = model.layers.iter().map(|l| l.weight_sparsity).sum::<f64>() / n;
+    let a = model.layers.iter().map(|l| l.act_sparsity).sum::<f64>() / n;
+    (w, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_covers_all_layers() {
+        let d = ModelDesc::builtin("svhn").unwrap();
+        let rows = fig7_rows(&d);
+        assert_eq!(rows.len(), d.layers.len());
+        assert!(rows.iter().all(|r| (0.0..=1.0).contains(&r.weight_sparsity)));
+    }
+
+    #[test]
+    fn measure_from_tensors() {
+        let ts = vec![
+            Tensor::new("conv.w", vec![4], vec![0.0, 1.0, 0.0, 2.0]),
+            Tensor::new("conv.b", vec![2], vec![0.0, 0.0]), // ignored: not .w
+            Tensor::new("fc.w", vec![2], vec![1.0, 1.0]),
+        ];
+        let m = measure_weight_sparsity(&ts);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], ("conv".to_string(), 0.5));
+        assert_eq!(m[1], ("fc".to_string(), 0.0));
+    }
+
+    #[test]
+    fn avg_sparsity_bounds() {
+        let d = ModelDesc::builtin("mnist").unwrap();
+        let (w, a) = model_avg_sparsity(&d);
+        assert!((0.0..=1.0).contains(&w));
+        assert!((0.0..=1.0).contains(&a));
+    }
+}

@@ -1,0 +1,128 @@
+//! Small tensor substrate: shapes, f32 buffers, and the `.swt` weight-pack
+//! reader (written by `python/compile/export.py`).
+
+pub mod swt;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, data.len(), "shape/data mismatch");
+        Self {
+            name: name.into(),
+            dims,
+            data,
+        }
+    }
+
+    pub fn zeros(name: impl Into<String>, dims: Vec<usize>) -> Self {
+        let n: usize = dims.iter().product();
+        Self {
+            name: name.into(),
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Fraction of exactly-zero elements (weight sparsity).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    /// Number of distinct non-zero values (cluster-codebook check).
+    pub fn unique_nonzero(&self) -> usize {
+        let mut v: Vec<u32> = self
+            .data
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .map(|x| x.to_bits())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+
+    /// 2-D accessor (row-major); panics unless ndim == 2.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Interpret as a matrix [rows, cols], flattening leading dims.
+    /// Conv weights [kh,kw,cin,cout] become [kh*kw*cin, cout] — the same
+    /// layout `model.forward_deploy` feeds the VDU kernel.
+    pub fn as_matrix(&self) -> (usize, usize) {
+        match self.dims.len() {
+            0 => (1, 1),
+            1 => (1, self.dims[0]),
+            _ => {
+                let cols = *self.dims.last().unwrap();
+                (self.len() / cols, cols)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_len() {
+        let t = Tensor::new("w", vec![2, 3], vec![1., 2., 3., 4., 5., 0.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.at2(1, 2), 0.0);
+        assert_eq!(t.at2(0, 1), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::new("w", vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = Tensor::new("w", vec![4], vec![0., 1., 0., 2.]);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unique_nonzero_dedups() {
+        let t = Tensor::new("w", vec![6], vec![0., 1.5, 1.5, -2., -2., 1.5]);
+        assert_eq!(t.unique_nonzero(), 2);
+    }
+
+    #[test]
+    fn matrix_view_flattens_conv() {
+        let t = Tensor::zeros("w", vec![3, 3, 4, 8]);
+        assert_eq!(t.as_matrix(), (36, 8));
+        let v = Tensor::zeros("b", vec![8]);
+        assert_eq!(v.as_matrix(), (1, 8));
+    }
+
+    #[test]
+    fn zeros_all_zero() {
+        let t = Tensor::zeros("z", vec![5, 5]);
+        assert_eq!(t.sparsity(), 1.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! `.swt` weight-pack reader — the binary format written by
+//! `python/compile/export.py` (format spec documented there):
+//!
+//! ```text
+//! magic  b"SWT1"
+//! u32    n_tensors
+//! per tensor:
+//!   u32  name_len, name (utf-8)
+//!   u8   dtype (0 = f32)
+//!   u32  ndim
+//!   u32  dims[ndim]
+//!   f32  data[prod(dims)]   (row-major, little-endian)
+//! ```
+//!
+//! Tensor order follows the `model.flat_param_list` contract, i.e. the AOT
+//! artifact's argument order, so the runtime can feed literals positionally.
+
+use std::fs;
+use std::path::Path;
+
+use thiserror::Error;
+
+use super::Tensor;
+
+#[derive(Debug, Error)]
+pub enum SwtError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not an SWT file)")]
+    BadMagic,
+    #[error("truncated file at byte {0}")]
+    Truncated(usize),
+    #[error("unsupported dtype {0}")]
+    BadDtype(u8),
+    #[error("tensor name is not valid utf-8")]
+    BadName,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SwtError> {
+        if self.pos + n > self.buf.len() {
+            return Err(SwtError::Truncated(self.pos));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, SwtError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8, SwtError> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Read all tensors from an SWT file.
+pub fn read_swt(path: &Path) -> Result<Vec<Tensor>, SwtError> {
+    let buf = fs::read(path)?;
+    parse_swt(&buf)
+}
+
+/// Parse an SWT byte buffer.
+pub fn parse_swt(buf: &[u8]) -> Result<Vec<Tensor>, SwtError> {
+    let mut c = Cursor { buf, pos: 0 };
+    if c.take(4)? != b"SWT1" {
+        return Err(SwtError::BadMagic);
+    }
+    let n = c.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = c.u32()? as usize;
+        let name = std::str::from_utf8(c.take(name_len)?)
+            .map_err(|_| SwtError::BadName)?
+            .to_string();
+        let dtype = c.u8()?;
+        if dtype != 0 {
+            return Err(SwtError::BadDtype(dtype));
+        }
+        let ndim = c.u32()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(c.u32()? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let raw = c.take(4 * count)?;
+        let mut data = Vec::with_capacity(count);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        out.push(Tensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+/// Serialize tensors to SWT bytes (round-trip support for tests/tools).
+pub fn write_swt(tensors: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"SWT1");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.push(0u8);
+        out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &t.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Tensor> {
+        vec![
+            Tensor::new("conv.w", vec![2, 2], vec![1.0, -2.5, 0.0, 4.0]),
+            Tensor::new("conv.b", vec![2], vec![0.5, 0.25]),
+            Tensor::new("scalar", vec![], vec![7.0]),
+        ]
+    }
+
+    #[test]
+    fn round_trip() {
+        let ts = sample();
+        let bytes = write_swt(&ts);
+        let back = parse_swt(&bytes).unwrap();
+        assert_eq!(ts, back);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(matches!(parse_swt(b"NOPE"), Err(SwtError::BadMagic)));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = write_swt(&sample());
+        let cut = &bytes[..bytes.len() - 3];
+        assert!(matches!(parse_swt(cut), Err(SwtError::Truncated(_))));
+    }
+
+    #[test]
+    fn bad_dtype_detected() {
+        let mut bytes = write_swt(&sample()[..1].to_vec());
+        // dtype byte sits right after magic(4) + count(4) + name_len(4) + name(6)
+        bytes[4 + 4 + 4 + 6] = 9;
+        assert!(matches!(parse_swt(&bytes), Err(SwtError::BadDtype(9))));
+    }
+
+    #[test]
+    fn empty_pack() {
+        let bytes = write_swt(&[]);
+        assert!(parse_swt(&bytes).unwrap().is_empty());
+    }
+}

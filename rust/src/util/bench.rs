@@ -1,0 +1,250 @@
+//! Micro-benchmark harness (criterion substitute, DESIGN.md §2).
+//!
+//! Used by every `rust/benches/*.rs` target (with `harness = false`).
+//! Methodology: warmup, then timed batches until a wall-clock budget or a
+//! sample target is reached; reports mean / median / p95 / stddev with
+//! outlier-robust statistics.  Also hosts `Table`, the fixed-width table
+//! printer every paper-figure bench uses for its rows.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(900),
+            max_samples: 2000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(120),
+            max_samples: 400,
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` repeatedly; each sample may run several iterations when the
+    /// payload is fast, so timer overhead stays <1%.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        // Warmup + calibration: how many iters fit in ~200us?
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / cal_iters.max(1) as f64;
+        let iters_per_sample = ((200_000.0 / per_iter).ceil() as u64).clamp(1, 100_000);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters_per_sample as f64;
+            samples.push(dt);
+        }
+        stats_from(&mut samples)
+    }
+}
+
+fn stats_from(samples: &mut [f64]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Stats {
+        samples: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n],
+        stddev_ns: var.sqrt(),
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+    }
+}
+
+/// Report one benchmark line, criterion-style.
+pub fn report(name: &str, st: &Stats) {
+    println!(
+        "{name:<44} time: [{} {} {}]  (p95 {}, {} samples)",
+        fmt_ns(st.min_ns),
+        fmt_ns(st.mean_ns),
+        fmt_ns(st.max_ns),
+        fmt_ns(st.p95_ns),
+        st.samples
+    );
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-width table printer for the paper-figure benches.
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let st = Bencher::quick().run(|| {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(st.samples > 0);
+        assert!(st.mean_ns > 0.0);
+        assert!(st.min_ns <= st.median_ns);
+        assert!(st.median_ns <= st.max_ns);
+    }
+
+    #[test]
+    fn stats_math() {
+        let mut s = vec![1.0, 2.0, 3.0, 4.0, 100.0];
+        let st = stats_from(&mut s);
+        assert_eq!(st.samples, 5);
+        assert_eq!(st.median_ns, 3.0);
+        assert_eq!(st.min_ns, 1.0);
+        assert_eq!(st.max_ns, 100.0);
+        assert!((st.mean_ns - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("us"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains("s"));
+    }
+
+    #[test]
+    fn throughput() {
+        let st = Stats {
+            samples: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p95_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
+        assert!((st.throughput(10.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "FPS/W"]);
+        t.row(&["mnist".into(), "123.4".into()]);
+        t.row(&["cifar10".into(), "9.9".into()]);
+        let r = t.render();
+        assert!(r.contains("model"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

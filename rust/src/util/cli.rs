@@ -1,0 +1,198 @@
+//! Command-line argument parser (clap substitute, DESIGN.md §2).
+//!
+//! Grammar: `sonic <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may use `--key=value` or `--key value`; unknown keys are errors so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CliError {
+    #[error("unknown option --{0} (expected one of: {1})")]
+    UnknownOption(String, String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value {1:?} for --{0}: {2}")]
+    BadValue(String, String, String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+/// Declarative option spec: name, takes-value, help.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (excluding program + subcommand) against `specs`.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let known = || {
+            specs
+                .iter()
+                .map(|s| s.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(spec) = specs.iter().find(|s| s.name == key) else {
+                    return Err(CliError::UnknownOption(key, known()));
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    opts.insert(key, val);
+                } else {
+                    flags.push(key);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            opts,
+            flags,
+            positional,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| {
+                CliError::BadValue(name.to_string(), v.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    /// Comma-separated list option (`--models mnist,svhn`).
+    pub fn list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("sonic {cmd} — {about}\n\nOptions:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{:<14} {}\n", s.name, val, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[OptSpec] = &[
+        OptSpec { name: "model", takes_value: true, help: "model name" },
+        OptSpec { name: "batch", takes_value: true, help: "batch size" },
+        OptSpec { name: "verbose", takes_value: false, help: "chatty" },
+    ];
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--model", "mnist", "--batch=8"]), SPECS).unwrap();
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert_eq!(a.parse_num::<usize>("batch", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["run1", "--verbose", "run2"]), SPECS).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run1", "run2"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&sv(&["--bogus", "1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn missing_value_error() {
+        assert!(Args::parse(&sv(&["--model"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn bad_number_error() {
+        let a = Args::parse(&sv(&["--batch", "zap"]), SPECS).unwrap();
+        assert!(a.parse_num::<usize>("batch", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&[], SPECS).unwrap();
+        assert_eq!(a.get_or("model", "svhn"), "svhn");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.list("model", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--model", "mnist, svhn"]), SPECS).unwrap();
+        assert_eq!(a.list("model", &[]), vec!["mnist", "svhn"]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("infer", "run inference", SPECS);
+        assert!(h.contains("--model"));
+        assert!(h.contains("run inference"));
+    }
+}

@@ -1,0 +1,62 @@
+//! Offline substrates for crates unavailable in this environment
+//! (DESIGN.md §2): JSON, RNG, CLI parsing, bench harness, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a float with engineering-style SI prefixes (for reports).
+pub fn si(value: f64, unit: &str) -> String {
+    let (v, p) = si_parts(value);
+    format!("{v:.3} {p}{unit}")
+}
+
+fn si_parts(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a == 0.0 || !a.is_finite() {
+        return (value, "");
+    }
+    const TABLE: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "u"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+    ];
+    for &(scale, prefix) in TABLE {
+        if a >= scale {
+            return (value / scale, prefix);
+        }
+    }
+    (value / 1e-15, "f")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_formats_prefixes() {
+        assert_eq!(si(1.5e-3, "W"), "1.500 mW");
+        assert_eq!(si(2.0e9, "Hz"), "2.000 GHz");
+        assert_eq!(si(42.0, "J"), "42.000 J");
+        assert_eq!(si(3.3e-10, "s"), "330.000 ps");
+    }
+
+    #[test]
+    fn si_handles_zero() {
+        assert_eq!(si(0.0, "W"), "0.000 W");
+    }
+
+    #[test]
+    fn si_negative() {
+        assert_eq!(si(-4.2e3, "J"), "-4.200 kJ");
+    }
+}

@@ -1,0 +1,173 @@
+//! Tiny property-testing harness (proptest substitute, DESIGN.md §2).
+//!
+//! A property runs over many seeded random cases; on failure the harness
+//! reports the failing seed so the case is reproducible, and performs a
+//! simple size-shrink pass (retry with smaller `size` hints) to present a
+//! smaller counterexample when the generator honours `Gen::size`.
+
+use super::rng::Rng;
+
+/// Generator context handed to each case: seeded RNG + a size hint that the
+/// shrinker lowers when hunting for smaller counterexamples.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, min(hi, lo+size)) — size-bounded dimension.
+    pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = (lo + self.size.max(1)).min(hi);
+        if cap <= lo {
+            lo
+        } else {
+            self.rng.range(lo, cap)
+        }
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn sparse_vec(&mut self, n: usize, sparsity: f64) -> Vec<f32> {
+        self.rng.sparse_vec(n, sparsity)
+    }
+}
+
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            base_seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases.  `prop` returns Err(msg) to
+/// signal a failed property.  Panics with seed + shrunk counterexample info.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64 * 0x9E3779B9);
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry same seed at smaller sizes, keep smallest failure
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen {
+                    rng: Rng::new(seed),
+                    size: s,
+                };
+                if let Err(m2) = prop(&mut g2) {
+                    best = (s, m2);
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper returning Err for `check` properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", Config::default(), |g| {
+            let a = g.f64(-1e6, 1e6);
+            let b = g.f64(-1e6, 1e6);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always fails over size 0",
+            Config {
+                cases: 8,
+                ..Default::default()
+            },
+            |g| {
+                let n = g.dim(1, 100);
+                if n == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut seen_small = false;
+        let mut seen_large = false;
+        check(
+            "size ramps",
+            Config {
+                cases: 32,
+                max_size: 32,
+                ..Default::default()
+            },
+            |g| {
+                if g.size <= 4 {
+                    seen_small = true;
+                }
+                if g.size >= 24 {
+                    seen_large = true;
+                }
+                Ok(())
+            },
+        );
+        assert!(seen_small && seen_large);
+    }
+
+    #[test]
+    fn dim_respects_bounds() {
+        check("dim bounds", Config::default(), |g| {
+            let d = g.dim(3, 10);
+            if (3..10).contains(&d) {
+                Ok(())
+            } else {
+                Err(format!("d={d}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,340 @@
+//! Cross-module integration tests: dataflow compression feeding the
+//! scheduler, scheduler agreeing with the analytic simulator, baselines
+//! reproducing the paper's comparative shape, router serving over a local
+//! backend, and artifact descriptors (when built) agreeing with weight
+//! packs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sonic::arch::SonicConfig;
+use sonic::baselines::all_platforms;
+use sonic::coordinator::compress::{compress_fc, fc_product};
+use sonic::coordinator::convflow::{conv2d_compressed, CompressedKernel};
+use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
+use sonic::coordinator::serve::{NullBackend, Router, ServeConfig, ServeMetrics};
+use sonic::model::{LayerKind, ModelDesc};
+use sonic::sim::{ablation, dse, simulate};
+use sonic::sparsity::ColMatrix;
+use sonic::tensor::swt;
+use sonic::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Dataflow: compression -> schedule -> analytic engine reconciliation.
+
+#[test]
+fn scheduler_pass_counts_match_analytic_engine_fc() {
+    // Build an FC layer matching svhn's fc1792x272 at 50% act sparsity and
+    // ~40% weight sparsity, schedule it with real data, and check the pass
+    // count against the analytic model's formula.
+    let mut rng = Rng::new(11);
+    let (out_dim, in_dim) = (272, 1792);
+    let act_sparsity = 0.5;
+    let w = ColMatrix::from_row_major(out_dim, in_dim, &rng.sparse_vec(out_dim * in_dim, 0.4));
+    let a = rng.sparse_vec(in_dim, act_sparsity);
+    let compressed = compress_fc(&a, &w);
+    let cfg = SonicConfig::paper_best();
+    let sched = schedule_fc(&compressed, &cfg);
+
+    // analytic: ceil(L/m) per output
+    let kept = a.iter().filter(|&&x| x != 0.0).count();
+    let expect = out_dim * kept.div_ceil(cfg.m);
+    assert_eq!(sched.passes.len(), expect);
+
+    // activity tracks residual weight sparsity within ~10%
+    assert!((sched.activity() - 0.6).abs() < 0.1, "{}", sched.activity());
+}
+
+#[test]
+fn scheduler_matches_engine_for_conv_slice() {
+    let mut rng = Rng::new(12);
+    let cfg = SonicConfig::paper_best();
+    let (kh, cin, cout) = (3, 8, 4);
+    let kvol = kh * kh * cin;
+    let weight_sparsity = 0.5;
+    let kflat: Vec<Vec<f32>> = (0..cout)
+        .map(|_| rng.sparse_vec(kvol, weight_sparsity))
+        .collect();
+    let kernels: Vec<_> = kflat
+        .iter()
+        .map(|k| CompressedKernel::from_dense(k))
+        .collect();
+    let n_px = 16;
+    let patches: Vec<Vec<f32>> = (0..n_px).map(|_| rng.normal_vec(kvol)).collect();
+    let sched = schedule_conv(&kernels, &patches, &cfg);
+
+    // each kernel has its own dense length; expected = sum over kernels of
+    // ceil(len/n) * n_px
+    let expect: usize = kernels
+        .iter()
+        .map(|k| k.values.len().div_ceil(cfg.n).max(1) * n_px)
+        .sum();
+    assert_eq!(sched.passes.len(), expect);
+}
+
+#[test]
+fn compressed_fc_product_is_exact_against_direct() {
+    let mut rng = Rng::new(13);
+    for _ in 0..5 {
+        let (rows, cols) = (rng.range(1, 40), rng.range(1, 60));
+        let w_rm = rng.sparse_vec(rows * cols, 0.6);
+        let a = rng.sparse_vec(cols, 0.5);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let direct = w.matvec(&a);
+        let comp = compress_fc(&a, &w);
+        let via = fc_product(&comp);
+        for (d, v) in direct.iter().zip(&via) {
+            assert!((d - v).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn conv_dataflow_functional_round_trip() {
+    // conv through compressed dataflow == dense reference at model scale
+    let mut rng = Rng::new(14);
+    let (h, w, cin, cout) = (8, 8, 3, 5);
+    let x = rng.sparse_vec(h * w * cin, 0.3);
+    let kflat: Vec<Vec<f32>> = (0..cout).map(|_| rng.sparse_vec(9 * cin, 0.5)).collect();
+    let kernels: Vec<_> = kflat
+        .iter()
+        .map(|k| CompressedKernel::from_dense(k))
+        .collect();
+    let y = conv2d_compressed(&x, h, w, cin, &kernels, 3, 3);
+    assert_eq!(y.len(), h * w * cout);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// Simulator <-> paper shape.
+
+#[test]
+fn paper_fpsw_ratios_within_band() {
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    let targets = [
+        ("NullHop", 5.81),
+        ("RSNN", 4.02),
+        ("LightBulb", 3.08),
+        ("CrossLight", 2.94),
+        ("HolyLight", 13.8),
+    ];
+    for (pname, want) in targets {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut prod = 1.0;
+        for name in ["mnist", "cifar10", "stl10", "svhn"] {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            prod *= s.fps_per_watt / p.evaluate(&desc).fps_per_watt;
+        }
+        let gm: f64 = prod.powf(0.25);
+        assert!(
+            (gm / want - 1.0).abs() < 0.3,
+            "{pname}: FPS/W ratio {gm:.2} vs paper {want}"
+        );
+    }
+}
+
+#[test]
+fn paper_epb_ratios_within_band() {
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    let targets = [
+        ("NullHop", 8.4),
+        ("RSNN", 5.78),
+        ("LightBulb", 19.4),
+        ("CrossLight", 18.4),
+        ("HolyLight", 27.6),
+    ];
+    for (pname, want) in targets {
+        let p = platforms.iter().find(|p| p.name() == pname).unwrap();
+        let mut prod = 1.0;
+        for name in ["mnist", "cifar10", "stl10", "svhn"] {
+            let desc = ModelDesc::load_or_builtin(name);
+            let s = simulate(&desc, &cfg);
+            prod *= p.evaluate(&desc).epb_j / s.epb_j;
+        }
+        let gm: f64 = prod.powf(0.25);
+        assert!(
+            (gm / want - 1.0).abs() < 0.3,
+            "{pname}: EPB ratio {gm:.2} vs paper {want}"
+        );
+    }
+}
+
+#[test]
+fn sonic_power_sits_between_asics_and_gpus() {
+    let cfg = SonicConfig::paper_best();
+    let platforms = all_platforms();
+    for name in ["mnist", "cifar10", "stl10", "svhn"] {
+        let desc = ModelDesc::load_or_builtin(name);
+        let s = simulate(&desc, &cfg);
+        let nullhop = platforms[0].evaluate(&desc);
+        let gpu = platforms[5].evaluate(&desc);
+        assert!(s.avg_power_w > nullhop.power_w);
+        assert!(s.avg_power_w < gpu.power_w);
+    }
+}
+
+#[test]
+fn paper_geometry_tops_dse_quartile() {
+    let models: Vec<ModelDesc> = ["mnist", "cifar10", "svhn"]
+        .iter()
+        .map(|n| ModelDesc::load_or_builtin(n))
+        .collect();
+    let points = dse::explore(&models, None);
+    let rank = points
+        .iter()
+        .position(|p| p.geometry() == (5, 50, 50, 10))
+        .expect("paper point swept");
+    assert!(
+        rank < points.len() / 4,
+        "paper geometry ranked {rank} of {}",
+        points.len()
+    );
+}
+
+#[test]
+fn ablation_all_levers_contribute_on_all_models() {
+    for name in ["mnist", "cifar10", "stl10", "svhn"] {
+        let rows = ablation::ablate(&ModelDesc::load_or_builtin(name));
+        for r in &rows[1..] {
+            assert!(
+                r.epb_rel >= 1.0 - 1e-9,
+                "{name}/{}: ablation improved EPB?",
+                r.variant
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router over a local backend (PJRT-free serving path).
+
+#[test]
+fn router_serves_a_stream_end_to_end() {
+    let model = ModelDesc::builtin("svhn").unwrap();
+    let input_len = model.input_hw * model.input_hw * model.input_ch;
+    let backend = Arc::new(NullBackend {
+        input_len,
+        n_classes: 10,
+    });
+    let router = Router::new(
+        backend,
+        model,
+        SonicConfig::paper_best(),
+        ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+    );
+    let producer = {
+        let router = Arc::clone(&router);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(5);
+            for _ in 0..32 {
+                router.submit(rng.normal_vec(input_len));
+            }
+        })
+    };
+    let mut metrics = ServeMetrics::default();
+    let mut done = 0;
+    while done < 32 {
+        done += router.drain_batch(&mut metrics).unwrap().len();
+    }
+    producer.join().unwrap();
+    assert_eq!(metrics.completed, 32);
+    assert!(metrics.batches <= 32);
+    assert!(metrics.photonic_fps() > 0.0);
+    assert!(metrics.mean_batch() >= 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact agreement (skipped until `make artifacts` has produced them).
+
+#[test]
+fn artifact_descriptors_agree_with_weight_packs() {
+    let art = sonic::artifacts_dir();
+    if !art.join("mnist.json").is_file() || !art.join("mnist.swt").is_file() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    for name in ["mnist", "cifar10", "svhn"] {
+        let desc = ModelDesc::load(&art.join(format!("{name}.json"))).unwrap();
+        let tensors = swt::read_swt(&art.join(format!("{name}.swt"))).unwrap();
+        // One w/b/scale/bias quartet per layer.
+        assert_eq!(tensors.len(), desc.layers.len() * 4, "{name}");
+        // Descriptor sparsity matches the actual weight tensors.
+        for layer in &desc.layers {
+            let w = tensors
+                .iter()
+                .find(|t| t.name == format!("{}.w", layer.name))
+                .unwrap_or_else(|| panic!("{name}: missing {}.w", layer.name));
+            assert!(
+                (w.sparsity() - layer.weight_sparsity).abs() < 0.02,
+                "{name}/{}: swt {:.3} vs descriptor {:.3}",
+                layer.name,
+                w.sparsity(),
+                layer.weight_sparsity
+            );
+            assert!(
+                w.unique_nonzero() <= desc.n_clusters,
+                "{name}/{}: {} unique > {} clusters",
+                layer.name,
+                w.unique_nonzero(),
+                desc.n_clusters
+            );
+        }
+        // Layer geometry agrees with Table 1 reconstruction.
+        let b = ModelDesc::builtin(name).unwrap();
+        assert_eq!(desc.layers.len(), b.layers.len(), "{name}");
+        for (l, bl) in desc.layers.iter().zip(&b.layers) {
+            match (&l.kind, &bl.kind) {
+                (
+                    LayerKind::Conv { kernel, in_ch, out_ch, .. },
+                    LayerKind::Conv {
+                        kernel: bk,
+                        in_ch: bi,
+                        out_ch: bo,
+                        ..
+                    },
+                ) => {
+                    assert_eq!((kernel, in_ch, out_ch), (bk, bi, bo), "{name}");
+                }
+                (
+                    LayerKind::Fc { in_dim, out_dim, .. },
+                    LayerKind::Fc {
+                        in_dim: bi,
+                        out_dim: bo,
+                        ..
+                    },
+                ) => {
+                    assert_eq!((in_dim, out_dim), (bi, bo), "{name}");
+                }
+                _ => panic!("{name}: layer kind mismatch"),
+            }
+        }
+    }
+}
+
+#[test]
+fn measured_sparsity_feeds_simulator_consistently() {
+    // When measured descriptors exist, the simulator must still produce the
+    // paper's comparative shape with them (not just with builtin numbers).
+    let art = sonic::artifacts_dir();
+    if !art.join("cifar10.json").is_file() {
+        eprintln!("artifacts not built; skipping");
+        return;
+    }
+    let cfg = SonicConfig::paper_best();
+    let measured = ModelDesc::load(&art.join("cifar10.json")).unwrap();
+    let s = simulate(&measured, &cfg);
+    let dense_cfg = SonicConfig::paper_best()
+        .without_power_gating()
+        .without_compression()
+        .without_clustering();
+    let d = simulate(&measured, &dense_cfg);
+    assert!(s.fps_per_watt > d.fps_per_watt * 2.0);
+    assert!(s.epb_j < d.epb_j);
+}

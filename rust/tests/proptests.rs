@@ -1,0 +1,263 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! compression, scheduling) using the in-tree property harness
+//! (`sonic::util::prop`, the offline proptest substitute).
+
+use sonic::arch::SonicConfig;
+use sonic::coordinator::compress::{compress_fc, fc_product};
+use sonic::coordinator::convflow::{compressed_dot, extract_patch, CompressedKernel};
+use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
+use sonic::sparsity::{ColMatrix, SparseVec};
+use sonic::util::prop::{check, Config, Gen};
+
+fn dense_matvec(rows: usize, cols: usize, w_rm: &[f32], a: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; rows];
+    for r in 0..rows {
+        for c in 0..cols {
+            y[r] += w_rm[r * cols + c] * a[c];
+        }
+    }
+    y
+}
+
+#[test]
+fn prop_fc_compression_lossless() {
+    check("fc compression lossless", Config::default(), |g: &mut Gen| {
+        let rows = g.dim(1, 24);
+        let cols = g.dim(1, 48);
+        let sparsity = g.f64(0.0, 0.95);
+        let wsp = g.f64(0.0, 0.9);
+        let w_rm = g.sparse_vec(rows * cols, wsp);
+        let a = g.sparse_vec(cols, sparsity);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let c = compress_fc(&a, &w);
+        let got = fc_product(&c);
+        let want = dense_matvec(rows, cols, &w_rm, &a);
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("row {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fc_compression_never_grows() {
+    check("compressed dim <= original", Config::default(), |g| {
+        let cols = g.dim(1, 100);
+        let asp = g.f64(0.0, 1.0);
+        let a = g.sparse_vec(cols, asp);
+        let w = ColMatrix::from_row_major(1, cols, &g.sparse_vec(cols, 0.0));
+        let c = compress_fc(&a, &w);
+        if c.activations.len() > cols {
+            return Err(format!("{} > {cols}", c.activations.len()));
+        }
+        if c.activations.iter().any(|&x| x == 0.0) {
+            return Err("compressed vector contains zeros".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_fc_invariants() {
+    check("fc schedule invariants", Config::default(), |g| {
+        let rows = g.dim(1, 30);
+        let cols = g.dim(1, 80);
+        let wsp = g.f64(0.0, 0.9);
+        let w_rm = g.sparse_vec(rows * cols, wsp);
+        let asp = g.f64(0.0, 0.9);
+        let a = g.sparse_vec(cols, asp);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let c = compress_fc(&a, &w);
+        let cfg = SonicConfig::paper_best();
+        let s = schedule_fc(&c, &cfg);
+
+        // every pass respects lane bounds and VDU id range
+        for p in &s.passes {
+            if p.lanes_used as usize > cfg.m {
+                return Err(format!("lanes_used {} > m", p.lanes_used));
+            }
+            if p.lanes_active > p.lanes_used {
+                return Err("active > used".into());
+            }
+            if p.vdu as usize >= cfg.n_fc_vdus {
+                return Err(format!("vdu {} out of range", p.vdu));
+            }
+        }
+        // round-robin balance: per-VDU pass counts differ by <= 1
+        let mut per = vec![0i64; cfg.n_fc_vdus];
+        for p in &s.passes {
+            per[p.vdu as usize] += 1;
+        }
+        let (mn, mx) = (per.iter().min().unwrap(), per.iter().max().unwrap());
+        if mx - mn > 1 {
+            return Err(format!("imbalance {per:?}"));
+        }
+        // pass count formula
+        let kept = a.iter().filter(|&&x| x != 0.0).count();
+        let expect = if kept == 0 {
+            0
+        } else {
+            rows * kept.div_ceil(cfg.m)
+        };
+        if s.passes.len() != expect {
+            return Err(format!("passes {} != {expect}", s.passes.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_gating_monotone() {
+    // enabling power gating never increases active lanes
+    check("gating monotone", Config::default(), |g| {
+        let rows = g.dim(1, 10);
+        let cols = g.dim(1, 60);
+        let wsp = g.f64(0.2, 0.9);
+        let w_rm = g.sparse_vec(rows * cols, wsp);
+        let a = g.sparse_vec(cols, 0.3);
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let c = compress_fc(&a, &w);
+        let on = schedule_fc(&c, &SonicConfig::paper_best());
+        let off = schedule_fc(&c, &SonicConfig::paper_best().without_power_gating());
+        if on.passes.len() != off.passes.len() {
+            return Err("pass count changed by gating".into());
+        }
+        for (p_on, p_off) in on.passes.iter().zip(&off.passes) {
+            if p_on.lanes_active > p_off.lanes_active {
+                return Err("gating increased activity".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conv_kernel_compression_roundtrip() {
+    check("conv kernel compression", Config::default(), |g| {
+        let len = g.dim(1, 120);
+        let ksp = g.f64(0.0, 0.95);
+        let kflat = g.sparse_vec(len, ksp);
+        let k = CompressedKernel::from_dense(&kflat);
+        // dot against arbitrary patch == dense dot
+        let psp = g.f64(0.0, 0.5);
+        let patch = g.sparse_vec(len, psp);
+        let want: f32 = kflat.iter().zip(&patch).map(|(a, b)| a * b).sum();
+        let got = compressed_dot(&k, &patch);
+        if (want - got).abs() > 1e-3 {
+            return Err(format!("{got} vs {want}"));
+        }
+        // nnz preserved
+        let nnz = kflat.iter().filter(|&&x| x != 0.0).count();
+        if k.values.len() != nnz {
+            return Err("nnz mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conv_schedule_pass_formula() {
+    check("conv schedule pass formula", Config::default(), |g| {
+        let cfg = SonicConfig::paper_best();
+        let kvol = g.dim(1, 60);
+        let cout = g.dim(1, 6);
+        let n_px = g.dim(1, 10);
+        let kernels: Vec<CompressedKernel> = (0..cout)
+            .map(|_| {
+                let sp = g.f64(0.0, 0.9);
+                CompressedKernel::from_dense(&g.sparse_vec(kvol, sp))
+            })
+            .collect();
+        let patches: Vec<Vec<f32>> = (0..n_px).map(|_| g.sparse_vec(kvol, 0.2)).collect();
+        let s = schedule_conv(&kernels, &patches, &cfg);
+        let expect: usize = kernels
+            .iter()
+            .map(|k| k.values.len().div_ceil(cfg.n).max(1) * n_px)
+            .sum();
+        if s.passes.len() != expect {
+            return Err(format!("{} != {expect}", s.passes.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_patch_extraction_bounds() {
+    check("patch extraction in-bounds + padding", Config::default(), |g| {
+        let h = g.dim(1, 12);
+        let w = g.dim(1, 12);
+        let c = g.dim(1, 4);
+        let x = g.sparse_vec(h * w * c, 0.0);
+        let oy = g.rng.range(0, h);
+        let ox = g.rng.range(0, w);
+        let p = extract_patch(&x, h, w, c, oy, ox, 3, 3);
+        if p.len() != 9 * c {
+            return Err(format!("patch len {}", p.len()));
+        }
+        // center element must equal the source pixel
+        let center = &p[4 * c..5 * c];
+        let src = &x[(oy * w + ox) * c..(oy * w + ox) * c + c];
+        if center != src {
+            return Err("center mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_vec_roundtrip() {
+    check("sparse vec roundtrip", Config::default(), |g| {
+        let n = g.dim(0, 200);
+        let sp = g.f64(0.0, 1.0);
+        let v = g.sparse_vec(n, sp);
+        let s = SparseVec::from_dense(&v);
+        if s.to_dense() != v {
+            return Err("roundtrip failed".into());
+        }
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        if s.nnz() != nnz {
+            return Err("nnz mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_monotonicity_in_sparsity() {
+    // more weight sparsity (with compression on) must not increase passes
+    use sonic::model::ModelDesc;
+    use sonic::sim::simulate;
+    check(
+        "sim monotone in sparsity",
+        Config {
+            cases: 16,
+            ..Default::default()
+        },
+        |g| {
+            let s1 = g.f64(0.0, 0.5);
+            let s2 = s1 + g.f64(0.1, 0.4);
+            let mut m1 = ModelDesc::builtin("svhn").unwrap();
+            let mut m2 = m1.clone();
+            for l in &mut m1.layers {
+                l.weight_sparsity = s1;
+            }
+            for l in &mut m2.layers {
+                l.weight_sparsity = s2.min(0.99);
+            }
+            let cfg = SonicConfig::paper_best();
+            let r1 = simulate(&m1, &cfg);
+            let r2 = simulate(&m2, &cfg);
+            let p1: u64 = r1.layers.iter().map(|l| l.passes).sum();
+            let p2: u64 = r2.layers.iter().map(|l| l.passes).sum();
+            if p2 > p1 {
+                return Err(format!("sparser model has more passes: {p2} > {p1}"));
+            }
+            if r2.energy_j > r1.energy_j * 1.0001 {
+                return Err("sparser model costs more energy".into());
+            }
+            Ok(())
+        },
+    );
+}
