@@ -9,10 +9,11 @@ use sonic::coordinator::serve::InferenceBackend;
 use sonic::model::ModelDesc;
 use sonic::runtime::PjrtBackend;
 use sonic::sim::simulate;
+use sonic::util::err::Result;
 use sonic::util::rng::Rng;
 use sonic::util::si;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1) Analytic accelerator model: no artifacts required.
     println!("SONIC @ (n, m, N, K) = (5, 50, 50, 10) — paper-best configuration\n");
     let cfg = SonicConfig::paper_best();

@@ -14,23 +14,35 @@ use sonic::arch::SonicConfig;
 use sonic::coordinator::serve::{InferenceBackend, Router, ServeConfig, ServeMetrics};
 use sonic::model::ModelDesc;
 use sonic::runtime::PjrtBackend;
+use sonic::plan::PlanBackend;
+use sonic::util::err::Result;
 use sonic::util::rng::Rng;
 use sonic::util::si;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().map(|s| s.as_str()).unwrap_or("mnist").to_string();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
     let rate = 400.0; // req/s Poisson arrivals
 
-    let art = sonic::artifacts_dir();
-    anyhow::ensure!(
-        art.join("manifest.json").is_file(),
-        "artifacts missing — run `make artifacts` first"
-    );
-
-    let backend = Arc::new(PjrtBackend::load(&art, &model)?);
     let desc = ModelDesc::load_or_builtin(&model);
+
+    // Prefer the AOT-compiled PJRT artifacts; fall back to executing the
+    // compiled plan directly (batched sparse kernels over synthetic weights
+    // honouring the descriptor's sparsity) so the serving demo always runs.
+    let art = sonic::artifacts_dir();
+    let backend: Arc<dyn InferenceBackend> = if art.join("manifest.json").is_file() {
+        match PjrtBackend::load(&art, &model) {
+            Ok(b) => Arc::new(b),
+            Err(e) => {
+                println!("PJRT unavailable ({e}); falling back to plan execution");
+                Arc::new(PlanBackend::synthetic(&desc, 7))
+            }
+        }
+    } else {
+        println!("artifacts missing — serving through the compiled plan instead");
+        Arc::new(PlanBackend::synthetic(&desc, 7))
+    };
     println!(
         "serving `{model}` ({} layers, {} params, {:.1}% sparsity) — {n_requests} requests @ ~{rate}/s",
         desc.layers.len(),
@@ -43,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         desc,
         SonicConfig::paper_best(),
         ServeConfig {
-            max_batch: backend.batch_size().max(4),
+            max_batch: 8,
             batch_window: Duration::from_millis(3),
             queue_cap: 1024,
         },

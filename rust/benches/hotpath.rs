@@ -1,44 +1,61 @@
 //! Bench: L3 coordinator hot paths — the code that runs per request in a
 //! real deployment: FC compression, CONV patch extraction + compressed
-//! dot products, VDU scheduling, and the analytic simulator itself.
-//! This is the primary input to the §Perf optimization loop.
+//! dot products, VDU scheduling, plan compilation/caching, and the
+//! analytic simulator itself.  This is the primary input to the §Perf
+//! optimization loop.
+//!
+//! The headline comparison is **plan-cached vs re-planned serving**: the
+//! re-planned path rebuilds the FC dataflow compression for every request
+//! (gathering kept weight columns into a fresh matrix — what the serving
+//! loop did before the `LayerPlan` IR); the plan-cached path executes the
+//! precompiled `FcExec` layout with the batched sparse matvec kernel,
+//! streaming the weights once per batch.  Results are also written to
+//! `BENCH_hotpath.json` for the perf trajectory (CI uploads it).
 
 use sonic::arch::SonicConfig;
 use sonic::coordinator::compress::{compress_fc, fc_product};
 use sonic::coordinator::convflow::{
     compressed_dot, conv2d_compressed, extract_patch, CompressedKernel,
 };
-use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
+use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
+use sonic::plan::{cached, FcExec, ModelPlan};
 use sonic::sim::simulate;
 use sonic::sparsity::ColMatrix;
-use sonic::util::bench::{black_box, report, Bencher};
+use sonic::util::bench::{black_box, report, Bencher, Stats};
+use sonic::util::json::{arr, num, obj, s};
 use sonic::util::rng::Rng;
+
+/// Report one line and remember it for the JSON artifact.
+fn run(results: &mut Vec<(String, Stats)>, name: &str, f: impl FnMut()) -> Stats {
+    let st = Bencher::default().run(f);
+    report(name, &st);
+    results.push((name.to_string(), st.clone()));
+    st
+}
 
 fn main() {
     println!("=== L3 hot-path microbenchmarks ===\n");
     let mut rng = Rng::new(2024);
     let cfg = SonicConfig::paper_best();
+    let mut results: Vec<(String, Stats)> = Vec::new();
 
     // --- FC compression: svhn fc1792x272 with 50% activation sparsity ---
     let (rows, cols) = (272, 1792);
     let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.5));
     let a = rng.sparse_vec(cols, 0.5);
-    let st = Bencher::default().run(|| {
+    run(&mut results, "compress_fc 272x1792 (50% act sparsity)", || {
         black_box(compress_fc(&a, &w));
     });
-    report("compress_fc 272x1792 (50% act sparsity)", &st);
 
     let c = compress_fc(&a, &w);
-    let st = Bencher::default().run(|| {
+    run(&mut results, "fc_product (compressed matvec)", || {
         black_box(fc_product(&c));
     });
-    report("fc_product (compressed matvec)", &st);
 
-    let st = Bencher::default().run(|| {
+    run(&mut results, "schedule_fc (pass list)", || {
         black_box(schedule_fc(&c, &cfg));
     });
-    report("schedule_fc (pass list)", &st);
 
     // --- CONV path: 32x32x56 layer slice, 3x3 kernels ---
     let (h, wdt, cin, cout) = (32, 32, 56, 16);
@@ -51,39 +68,115 @@ fn main() {
         .map(|k| CompressedKernel::from_dense(k))
         .collect();
 
-    let st = Bencher::default().run(|| {
+    run(&mut results, "extract_patch 3x3x56", || {
         black_box(extract_patch(&x, h, wdt, cin, 16, 16, 3, 3));
     });
-    report("extract_patch 3x3x56", &st);
 
     let patch = extract_patch(&x, h, wdt, cin, 16, 16, 3, 3);
-    let st = Bencher::default().run(|| {
+    run(&mut results, "compressed_dot x16 kernels", || {
         for k in &kernels {
             black_box(compressed_dot(k, &patch));
         }
     });
-    report("compressed_dot x16 kernels", &st);
 
-    let st = Bencher::default().run(|| {
+    run(&mut results, "conv2d_compressed 32x32x56 -> 16ch", || {
         black_box(conv2d_compressed(&x, h, wdt, cin, &kernels, 3, 3));
     });
-    report("conv2d_compressed 32x32x56 -> 16ch", &st);
 
     let patches: Vec<Vec<f32>> = (0..64)
         .map(|i| extract_patch(&x, h, wdt, cin, i / 8, i % 8, 3, 3))
         .collect();
-    let st = Bencher::default().run(|| {
+    run(&mut results, "schedule_conv 64 px x 16 kernels", || {
         black_box(schedule_conv(&kernels, &patches, &cfg));
     });
-    report("schedule_conv 64 px x 16 kernels", &st);
+
+    // --- plan compilation, caching, and plan-driven scheduling ---
+    println!();
+    let svhn = ModelDesc::load_or_builtin("svhn");
+    run(&mut results, "ModelPlan::compile (svhn, re-planned)", || {
+        black_box(ModelPlan::compile(&svhn, &cfg));
+    });
+    run(&mut results, "plan::cached (svhn, cache hit)", || {
+        black_box(cached(&svhn, &cfg));
+    });
+    let plan = cached(&svhn, &cfg);
+    let fc_plan = plan
+        .layers
+        .iter()
+        .find(|l| !l.is_conv)
+        .expect("svhn has FC layers");
+    run(&mut results, "schedule_layer (from compiled plan)", || {
+        black_box(schedule_layer(fc_plan));
+    });
+
+    // --- plan-cached vs re-planned serving on the FC workload ----------
+    //
+    // A batch of 16 requests through svhn's fc1792x272.  Re-planned: each
+    // request rebuilds the compression (kept set + column gather) before
+    // the matvec.  Plan-cached: the precompiled FcExec streams the weight
+    // matrix once for the whole batch.
+    println!();
+    const BATCH: usize = 16;
+    let batch: Vec<Vec<f32>> = (0..BATCH).map(|_| rng.sparse_vec(cols, 0.5)).collect();
+    let replanned = run(
+        &mut results,
+        "serve FC batch=16 (re-planned per request)",
+        || {
+            for x in &batch {
+                let c = compress_fc(x, &w);
+                black_box(fc_product(&c));
+            }
+        },
+    );
+    let exec = FcExec::new(w.clone(), false, 0.0);
+    let plan_cached = run(
+        &mut results,
+        "serve FC batch=16 (plan-cached batched kernel)",
+        || {
+            black_box(exec.forward_batch(&batch).unwrap());
+        },
+    );
+    let speedup = replanned.mean_ns / plan_cached.mean_ns;
+    println!(
+        "\nplan-cached serving speedup on FC workload: {speedup:.2}x \
+         (target >= 2x){}",
+        if speedup >= 2.0 { "" } else { "  ** BELOW TARGET **" }
+    );
 
     // --- analytic simulator (the figure generator's inner loop) ---
     println!();
     for name in ["mnist", "cifar10", "stl10", "svhn"] {
         let desc = ModelDesc::load_or_builtin(name);
-        let st = Bencher::default().run(|| {
+        run(&mut results, &format!("simulate({name})"), || {
             black_box(simulate(&desc, &cfg));
         });
-        report(&format!("simulate({name})"), &st);
+    }
+
+    // --- JSON artifact for the perf trajectory --------------------------
+    let json = obj(vec![
+        ("bench", s("hotpath")),
+        ("plan_cached_fc_speedup", num(speedup)),
+        ("batch", num(BATCH as f64)),
+        (
+            "results",
+            arr(results
+                .iter()
+                .map(|(name, st)| {
+                    obj(vec![
+                        ("name", s(name)),
+                        ("mean_ns", num(st.mean_ns)),
+                        ("median_ns", num(st.median_ns)),
+                        ("p95_ns", num(st.p95_ns)),
+                        ("samples", num(st.samples as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    let out = std::env::var("SONIC_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match std::fs::write(&out, json.to_pretty()) {
+        Ok(()) => println!("\nresults written to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
     }
 }

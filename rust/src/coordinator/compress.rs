@@ -43,16 +43,31 @@ impl CompressedFc {
 }
 
 /// Fig. 1(a)->(b): drop zero activations and their weight columns.
+/// Exact-zero contract: an activation is dropped iff it `== 0.0` (so
+/// `-0.0` is dropped, denormals are kept — same rule as
+/// [`crate::sparsity::SparseVec::from_dense`]).
 pub fn compress_fc(activations: &[f32], weights: &ColMatrix) -> CompressedFc {
+    compress_fc_thresh(activations, weights, 0.0)
+}
+
+/// Thresholded variant: activations failing
+/// [`crate::sparsity::keep_nonzero`] are treated as zero and compressed
+/// away (lossy for `eps > 0`; `eps == 0.0` is exactly the contract above).
+/// This is the per-request (re-planned) path's thresholded entry; the
+/// compile-once counterpart applies the same predicate to *weights* at
+/// plan-compile time ([`crate::plan::FcExec::new`],
+/// [`crate::plan::ConvExec::new`]).
+pub fn compress_fc_thresh(activations: &[f32], weights: &ColMatrix, eps: f32) -> CompressedFc {
     assert_eq!(
         activations.len(),
         weights.cols,
         "activation/weight dims mismatch"
     );
+    assert!(eps >= 0.0, "negative threshold");
     let kept: Vec<usize> = activations
         .iter()
         .enumerate()
-        .filter(|(_, &a)| a != 0.0)
+        .filter(|(_, &a)| crate::sparsity::keep_nonzero(a, eps))
         .map(|(i, _)| i)
         .collect();
     let dense: Vec<f32> = kept.iter().map(|&i| activations[i]).collect();
@@ -138,5 +153,27 @@ mod tests {
         let w = ColMatrix::from_row_major(2, 2, &[0.0, 1.0, 0.0, 1.0]);
         let c = compress_fc(&a, &w);
         assert!((c.residual_weight_sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thresh_variant_drops_small_activations() {
+        let a = vec![1.0, 0.005, -0.5, -0.001];
+        let w = ColMatrix::from_row_major(1, 4, &[1., 1., 1., 1.]);
+        let c = compress_fc_thresh(&a, &w, 0.01);
+        assert_eq!(c.kept, vec![0, 2]);
+        let exact = compress_fc(&a, &w);
+        assert_eq!(exact.kept, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn thresh_zero_eps_keeps_exact_contract() {
+        // -0.0 dropped, denormal kept — identical to compress_fc.
+        let denormal = f32::from_bits(3);
+        let a = vec![-0.0, denormal, 2.0];
+        let w = ColMatrix::from_row_major(2, 3, &[1.; 6]);
+        let c0 = compress_fc_thresh(&a, &w, 0.0);
+        let ce = compress_fc(&a, &w);
+        assert_eq!(c0.kept, ce.kept);
+        assert_eq!(c0.kept, vec![1, 2]);
     }
 }

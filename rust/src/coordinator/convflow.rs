@@ -18,18 +18,25 @@ pub struct CompressedKernel {
 
 impl CompressedKernel {
     pub fn from_dense(kernel_flat: &[f32]) -> Self {
-        let mut values = Vec::new();
-        let mut patch_idx = Vec::new();
-        for (i, &v) in kernel_flat.iter().enumerate() {
-            if v != 0.0 {
-                values.push(v);
-                patch_idx.push(i as u32);
-            }
-        }
+        Self::from_sparse(&crate::sparsity::SparseVec::from_dense(kernel_flat))
+    }
+
+    /// Thresholded compression (see [`crate::sparsity::SparseVec::from_dense_thresh`]):
+    /// kernel entries with `|w| <= eps` never ride the waveguide.
+    pub fn from_dense_thresh(kernel_flat: &[f32], eps: f32) -> Self {
+        Self::from_sparse(&crate::sparsity::SparseVec::from_dense_thresh(
+            kernel_flat,
+            eps,
+        ))
+    }
+
+    /// Adopt an already-compressed sparse vector (the plan compiler's
+    /// path: compress once at model-load time, reuse per request).
+    pub fn from_sparse(s: &crate::sparsity::SparseVec) -> Self {
         Self {
-            values,
-            patch_idx,
-            original_len: kernel_flat.len(),
+            values: s.val.clone(),
+            patch_idx: s.idx.clone(),
+            original_len: s.len,
         }
     }
 

@@ -36,7 +36,14 @@ impl Pool {
                     };
                     match job {
                         Ok(j) => {
-                            j();
+                            // A panicking job must not leak `in_flight`
+                            // (that would wedge `drain` and starve the
+                            // backpressure accounting) nor kill the
+                            // worker: catch the unwind, then decrement
+                            // unconditionally.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(j),
+                            );
                             inf.fetch_sub(1, Ordering::SeqCst);
                         }
                         Err(_) => break, // channel closed
@@ -147,6 +154,45 @@ mod tests {
         let pool = Pool::new(2, 4);
         pool.submit(|| {});
         drop(pool); // must not hang
+    }
+
+    /// Run `f` with panic reports silenced, restoring the previous hook
+    /// even when `f` itself panics (a failing assertion must not leave the
+    /// process-wide hook silenced for the rest of the test run).
+    fn with_silenced_panics<R>(f: impl FnOnce() -> R) -> R {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        std::panic::set_hook(prev);
+        match result {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+
+    #[test]
+    fn panicking_job_does_not_leak_in_flight_or_kill_workers() {
+        // Note: the hook is process-global, so other tests' panic output is
+        // briefly silenced too — cosmetic only, and bounded by this scope.
+        with_silenced_panics(|| {
+            let pool = Pool::new(2, 8);
+            for _ in 0..4 {
+                pool.submit(|| panic!("job blew up"));
+            }
+            pool.drain(); // would spin forever if a panic leaked the counter
+            assert_eq!(pool.pending(), 0);
+
+            // Workers survived and still execute jobs.
+            let counter = Arc::new(AtomicU64::new(0));
+            for _ in 0..8 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.drain();
+            assert_eq!(counter.load(Ordering::SeqCst), 8);
+        });
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!   power-gating accounting per chunk.
 //! * [`exec`] — thread-pool + channel substrate (tokio substitute).
 //! * [`serve`] — the request router / dynamic batcher serving inference
-//!   through the PJRT runtime while the schedule model tracks photonic
+//!   through the PJRT runtime (or [`crate::plan::PlanBackend`]) while the
+//!   compile-once [`crate::plan::ModelPlan`] tracks photonic
 //!   latency/energy.
 
 pub mod compress;

@@ -9,6 +9,7 @@
 //! analytic pass counts.
 
 use crate::arch::SonicConfig;
+use crate::plan::LayerPlan;
 
 use super::compress::CompressedFc;
 use super::convflow::CompressedKernel;
@@ -51,6 +52,45 @@ impl Schedule {
     /// initiation interval; one fill; per-layer setup charged by caller.
     pub fn latency_s(&self, interval_s: f64, fill_s: f64) -> f64 {
         self.n_rounds() as f64 * interval_s + fill_s
+    }
+}
+
+/// Synthesize the pass list a compiled [`LayerPlan`] implies — the same
+/// round-robin `(vdu, round)` assignment the data-driven schedulers below
+/// produce, with the plan's analytic gating expectation standing in for
+/// per-pass activity masks.  One dataflow decomposition, two views: this
+/// reconciles the plan against `schedule_fc`/`schedule_conv` in tests and
+/// gives tooling a pass list without shipping real operands.
+///
+/// Materializes `plan.passes` entries — intended for FC layers and small
+/// CONV slices, not the multi-million-pass CONV layers of stl10.
+pub fn schedule_layer(plan: &LayerPlan) -> Schedule {
+    let lanes = plan.lanes;
+    let n_vdus = plan.n_vdus as u64;
+    let mut passes = Vec::with_capacity(plan.passes as usize);
+    let mut slot: u64 = 0;
+    let live_fraction = 1.0 - plan.residual_sparsity;
+    for _out in 0..plan.outputs {
+        let mut col = 0;
+        while col < plan.vector_len {
+            let end = (col + lanes).min(plan.vector_len);
+            let used = (end - col) as u16;
+            let active = ((used as f64 * live_fraction).round() as u16)
+                .clamp(1, used);
+            passes.push(Pass {
+                vdu: (slot % n_vdus) as u32,
+                round: (slot / n_vdus) as u32,
+                lanes_used: used,
+                lanes_active: active,
+            });
+            slot += 1;
+            col = end;
+        }
+    }
+    Schedule {
+        passes,
+        lanes,
+        n_vdus: plan.n_vdus,
     }
 }
 
@@ -248,6 +288,35 @@ mod tests {
         let max = per_vdu.iter().max().unwrap();
         let min = per_vdu.iter().min().unwrap();
         assert!(max - min <= 1, "{per_vdu:?}");
+    }
+
+    #[test]
+    fn plan_schedule_reconciles_with_analytic_counts() {
+        use crate::model::ModelDesc;
+        use crate::plan::ModelPlan;
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let plan = ModelPlan::compile(&m, &SonicConfig::paper_best());
+        for lp in plan.layers.iter().filter(|l| !l.is_conv) {
+            let s = schedule_layer(lp);
+            assert_eq!(s.passes.len() as u64, lp.passes, "{}", lp.name);
+            assert_eq!(s.n_rounds() as u64, lp.rounds, "{}", lp.name);
+            // round-robin balance holds for the synthesized list too
+            let mut per = vec![0u64; lp.n_vdus];
+            for p in &s.passes {
+                per[p.vdu as usize] += 1;
+            }
+            let (mn, mx) = (per.iter().min().unwrap(), per.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{}: {per:?}", lp.name);
+            // activity tracks the plan's gating expectation (which folds
+            // in both residual sparsity and partial-last-chunk lane util)
+            let want = lp.avg_active_lanes / lp.lanes as f64;
+            assert!(
+                (s.activity() - want).abs() < 0.06,
+                "{}: {} vs {want}",
+                lp.name,
+                s.activity()
+            );
+        }
     }
 
     #[test]

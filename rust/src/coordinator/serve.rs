@@ -15,11 +15,11 @@ use std::time::{Duration, Instant};
 
 use crate::arch::SonicConfig;
 use crate::model::ModelDesc;
-use crate::sim::engine::simulate;
+use crate::util::err::Result;
 
 /// Functional compute interface: batch of flat inputs -> batch of logits.
 pub trait InferenceBackend: Send + Sync {
-    fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>>;
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
     /// Input element count per request.
     fn input_len(&self) -> usize;
 }
@@ -117,6 +117,12 @@ impl ServeMetrics {
 }
 
 /// The router: synchronous submission API over an internal batcher.
+///
+/// At construction the model is compiled **once** into a
+/// [`crate::plan::ModelPlan`] (via the global plan cache), and every batch
+/// drained afterwards is charged against that precompiled plan — the same
+/// IR the analytic simulator consumes, so served and simulated photonic
+/// numbers cannot drift.
 pub struct Router {
     backend: Arc<dyn InferenceBackend>,
     cfg: ServeConfig,
@@ -125,8 +131,8 @@ pub struct Router {
     queue: Mutex<VecDeque<PendingReq>>,
     notify: Condvar,
     next_id: Mutex<u64>,
-    /// Per-inference photonic cost (amortized over batch in `drain_batch`).
-    photonic_per_inf: (f64, f64), // (latency_s, energy_j)
+    /// Compile-once photonic plan (shared with sim via the plan cache).
+    plan: Arc<crate::plan::ModelPlan>,
 }
 
 impl Router {
@@ -136,7 +142,7 @@ impl Router {
         arch: SonicConfig,
         cfg: ServeConfig,
     ) -> Arc<Self> {
-        let stats = simulate(&model, &arch);
+        let plan = crate::plan::cached(&model, &arch);
         Arc::new(Self {
             backend,
             cfg,
@@ -145,7 +151,7 @@ impl Router {
             queue: Mutex::new(VecDeque::new()),
             notify: Condvar::new(),
             next_id: Mutex::new(0),
-            photonic_per_inf: (stats.latency_s, stats.energy_j),
+            plan,
         })
     }
 
@@ -155,6 +161,11 @@ impl Router {
 
     pub fn arch(&self) -> &SonicConfig {
         &self.arch
+    }
+
+    /// The precompiled photonic plan this router charges batches against.
+    pub fn plan(&self) -> &Arc<crate::plan::ModelPlan> {
+        &self.plan
     }
 
     /// Enqueue one request; returns its id.  Blocks when the queue is full
@@ -189,7 +200,7 @@ impl Router {
 
     /// Drain one batch (up to max_batch, waiting batch_window for more) and
     /// execute it.  Returns completions; empty when the queue stayed empty.
-    pub fn drain_batch(&self, metrics: &mut ServeMetrics) -> anyhow::Result<Vec<Completion>> {
+    pub fn drain_batch(&self, metrics: &mut ServeMetrics) -> Result<Vec<Completion>> {
         let mut batch = Vec::new();
         {
             let mut q = self.queue.lock().unwrap();
@@ -234,12 +245,12 @@ impl Router {
         let done = Instant::now();
 
         // Photonic accounting: a batch of B pipelines through the VDU array;
-        // fills/setups amortize, modelled as full cost for the first + pure
-        // pipeline cost for the rest (95% of per-inference latency).
-        let (lat1, en1) = self.photonic_per_inf;
+        // fills/setups amortize (paid once per batch).  The amortization
+        // factor comes from the precompiled plan — the same pipeline/overhead
+        // split `sim::batch` uses — not a serving-side constant.
         let b = batch.len() as f64;
-        let batch_latency = lat1 * (1.0 + 0.95 * (b - 1.0));
-        let batch_energy = en1 * b;
+        let batch_latency = self.plan.batch_latency_s(batch.len());
+        let batch_energy = self.plan.batch_energy_j(batch.len());
         metrics.photonic_time_s += batch_latency;
         metrics.photonic_energy_j += batch_energy;
         metrics.batches += 1;
@@ -275,7 +286,7 @@ pub struct NullBackend {
 }
 
 impl InferenceBackend for NullBackend {
-    fn infer_batch(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         Ok(inputs
             .iter()
             .map(|x| {

@@ -14,23 +14,37 @@
 //!   compression for FC and CONV layers (Figs. 1–2), vector decomposition
 //!   onto the `(n, m, N, K)` VDU array, and a request router + dynamic
 //!   batcher serving inference through the PJRT runtime.
+//! * [`plan`] — the compile-once `LayerPlan`/`ModelPlan` IR (see
+//!   `src/plan/README.md`): every `(model, SonicConfig)` pair is compiled
+//!   exactly once into per-layer VDU decompositions, EO-vs-TO retune
+//!   classification, and timing/energy coefficients, cached globally, and
+//!   consumed by the simulator, the batch model, and the serving router —
+//!   so simulated and served numbers derive from one source.  Also hosts
+//!   the functional plan executor (batched sparse kernels) serving without
+//!   PJRT.
 //! * [`sim`] — the analytic performance/power/energy simulator that
-//!   regenerates every table and figure of the paper's evaluation.
+//!   regenerates every table and figure of the paper's evaluation — a view
+//!   over the compiled plan.
 //! * [`baselines`] — NullHop, RSNN, CrossLight, HolyLight, LightBulb,
 //!   Tesla P100, Xeon Platinum 9282 comparison models.
 //! * [`runtime`] — PJRT CPU client executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at request time.
+//!   Gated behind the `pjrt` cargo feature (the `xla` crate is a vendored
+//!   native dependency); offline builds get failing stubs and serve via
+//!   [`plan::PlanBackend`] instead.
 //! * [`model`] / [`tensor`] — model descriptors (`artifacts/*.json`) and
-//!   the `.swt` weight-pack loader.
+//!   the `.swt` weight-pack loader, which validate and produce the plan
+//!   compiler's inputs directly.
 //! * [`util`] — offline substrates standing in for crates unavailable in
 //!   this environment: JSON, RNG, CLI parsing, bench harness, property
-//!   testing.
+//!   testing, and the `anyhow`-style error substrate ([`util::err`]).
 
 pub mod arch;
 pub mod baselines;
 pub mod coordinator;
 pub mod devices;
 pub mod model;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod sparsity;

@@ -12,7 +12,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use sonic::bail;
+use sonic::util::err::Result;
 
 use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
@@ -53,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "dse" => cmd_dse(rest),
         "ablation" => cmd_ablation(rest),
         "report" => cmd_report(rest),
+        "plan" => cmd_plan(rest),
         "trace" => cmd_trace(rest),
         "batch" => cmd_batch(rest),
         "memory" => cmd_memory(rest),
@@ -80,6 +82,7 @@ USAGE: sonic <subcommand> [options]
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
   report    --model <m>                 per-layer simulator breakdown
+  plan      --model <m>                 compiled LayerPlan IR (passes, retunes, coefficients)
   trace     --model <m> [--out f.json]  per-layer execution timeline
   batch     --model <m>                 batch-size amortization sweep
   memory    [--models a,b,...]          main-memory traffic report
@@ -398,6 +401,49 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         si(s.breakdown.readout_j, "J"),
         si(s.breakdown.control_j, "J"),
         si(s.breakdown.dram_j, "J"),
+    );
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let model = a.get_or("model", "mnist");
+    let desc = ModelDesc::load_or_builtin(model);
+    let cfg = arch_from(&a);
+    let plan = sonic::plan::cached(&desc, &cfg);
+    let mut t = Table::new(&[
+        "layer", "kind", "vec len", "outputs", "passes", "rounds", "II", "overhead",
+        "TO frac", "pass E",
+    ]);
+    for l in &plan.layers {
+        t.row(&[
+            l.name.clone(),
+            if l.is_conv { "conv".into() } else { "fc".into() },
+            l.vector_len.to_string(),
+            l.outputs.to_string(),
+            l.passes.to_string(),
+            l.rounds.to_string(),
+            si(l.interval_s, "s"),
+            si(l.overhead_s, "s"),
+            format!("{:.3}", l.to_retune_fraction),
+            si(l.pass_energy_j, "J"),
+        ]);
+    }
+    println!("== {model} compiled LayerPlan IR ==");
+    t.print();
+    println!(
+        "\ntotals: latency {}  energy {}  overhead {}  pipeline fraction {:.4}",
+        si(plan.latency_s, "s"),
+        si(plan.energy_j, "J"),
+        si(plan.overhead_s, "s"),
+        plan.pipeline_fraction(),
+    );
+    println!(
+        "cache key: (model {:#018x}, config {:#018x})  |  {} plan(s) cached",
+        plan.model_key,
+        plan.config_key,
+        sonic::plan::cache_len(),
     );
     Ok(())
 }

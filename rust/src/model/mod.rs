@@ -6,8 +6,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::util::err::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -79,6 +79,21 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { out_ch, in_hw, .. } => in_hw * in_hw * out_ch,
             LayerKind::Fc { out_dim, .. } => out_dim,
+        }
+    }
+
+    /// Weight-tensor dims under the `export.py` contract: conv
+    /// `[kh, kw, cin, cout]`, fc `[in, out]` — the shape the `.swt` pack
+    /// stores and the plan compiler consumes.
+    pub fn weight_dims(&self) -> Vec<usize> {
+        match self.kind {
+            LayerKind::Conv {
+                kernel,
+                in_ch,
+                out_ch,
+                ..
+            } => vec![kernel, kernel, in_ch, out_ch],
+            LayerKind::Fc { in_dim, out_dim, .. } => vec![in_dim, out_dim],
         }
     }
 }
@@ -173,6 +188,37 @@ impl ModelDesc {
     /// Total MACs for one dense inference.
     pub fn total_macs(&self) -> usize {
         self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Flat input element count per request (`hw * hw * ch`).
+    pub fn input_len(&self) -> usize {
+        self.input_hw * self.input_hw * self.input_ch
+    }
+
+    /// Load the `.swt` weight pack that pairs with this descriptor and
+    /// validate the plan-input contract: one `<layer>.w` tensor per layer
+    /// with the dims [`Layer::weight_dims`] promises.  Extra tensors
+    /// (biases, BN scale/shift) are passed through untouched.
+    pub fn load_weights(&self, path: &Path) -> Result<Vec<crate::tensor::Tensor>> {
+        let tensors = crate::tensor::swt::read_swt(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for layer in &self.layers {
+            let wname = format!("{}.w", layer.name);
+            let t = tensors
+                .iter()
+                .find(|t| t.name == wname)
+                .with_context(|| format!("{}: missing {wname}", path.display()))?;
+            let want = layer.weight_dims();
+            if t.dims != want {
+                bail!(
+                    "{}: {wname} dims {:?} != descriptor {:?}",
+                    path.display(),
+                    t.dims,
+                    want
+                );
+            }
+        }
+        Ok(tensors)
     }
 
     /// Bits moved per inference: surviving weights at weight resolution +

@@ -1,0 +1,586 @@
+//! Functional execution against the compiled plan: static weight
+//! compression done **once at model-load time**, then batched sparse
+//! kernels that stream the compiled layout once per *batch*.
+//!
+//! This replaces the per-request pipeline (`compress_fc` gathering kept
+//! weight columns into a fresh matrix for every single request) on the
+//! serving hot path:
+//!
+//! * [`FcExec`] keeps the weight matrix in the column-major layout the FC
+//!   compression needs (dropping a column is skipping it) and applies each
+//!   column to every request in the batch whose activation is non-zero —
+//!   the Fig. 1 compression happens implicitly, with zero gather copies.
+//! * [`ConvExec`] compiles each output channel's kernel into the dense
+//!   value + gather-index form (`CompressedKernel`) exactly once; requests
+//!   reuse it instead of re-compressing static weights.
+//!
+//! `benches/hotpath.rs` measures this against the re-planned path; the
+//! plan-cached form is the one the router serves from.
+
+use crate::bail;
+use crate::coordinator::convflow::{conv2d_compressed, CompressedKernel};
+use crate::coordinator::serve::InferenceBackend;
+use crate::model::{LayerKind, ModelDesc};
+use crate::sparsity::{ColMatrix, SparseVec};
+use crate::tensor::Tensor;
+use crate::util::err::Result;
+use crate::util::rng::Rng;
+
+/// Compiled FC layer: full weight matrix in column-major (CSC-flavoured)
+/// layout + per-column non-zero counts (the static side of the gating
+/// masks).  The dynamic activation sparsity is applied per request by
+/// *skipping* columns — no gather, no copy.
+#[derive(Debug, Clone)]
+pub struct FcExec {
+    /// out x in, column-major — column `c` is the weights multiplying
+    /// activation `c`.
+    pub weights: ColMatrix,
+    /// Non-zeros per column (drives the analytic gating expectation).
+    pub col_nnz: Vec<u32>,
+    pub relu: bool,
+}
+
+impl FcExec {
+    /// Compile from a column-major weight matrix.  `eps` is a compile-time
+    /// *weight* threshold: entries failing
+    /// [`crate::sparsity::keep_nonzero`] are squashed to `0.0` in the
+    /// executed layout (the CONV analogue drops them from the kernel
+    /// vectors), so the gating accounting (`col_nnz`, `weight_sparsity`)
+    /// and `forward_batch`'s math always describe the same weights.
+    /// `eps == 0.0` leaves the matrix untouched (exact contract).
+    pub fn new(mut weights: ColMatrix, relu: bool, eps: f32) -> Self {
+        if eps > 0.0 {
+            for v in weights.data.iter_mut() {
+                if !crate::sparsity::keep_nonzero(*v, eps) {
+                    *v = 0.0;
+                }
+            }
+        }
+        let col_nnz = (0..weights.cols)
+            .map(|c| {
+                weights
+                    .col(c)
+                    .iter()
+                    .filter(|&&x| crate::sparsity::keep_nonzero(x, 0.0))
+                    .count() as u32
+            })
+            .collect();
+        Self {
+            weights,
+            col_nnz,
+            relu,
+        }
+    }
+
+    /// Residual weight sparsity (fraction of zero entries) — what the
+    /// analytic plan power-gates.
+    pub fn weight_sparsity(&self) -> f64 {
+        let total = (self.weights.rows * self.weights.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let nnz: u64 = self.col_nnz.iter().map(|&n| n as u64).sum();
+        1.0 - nnz as f64 / total
+    }
+
+    /// Batched sparse matvec: iterate the compiled layout once per batch.
+    /// Every weight column is read exactly once and applied to each request
+    /// whose activation at that column is non-zero; requests with a zero
+    /// activation skip the column — the dataflow compression of Fig. 1
+    /// without rebuilding a compressed matrix per request.
+    pub fn forward_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let rows = self.weights.rows;
+        let cols = self.weights.cols;
+        for x in inputs {
+            if x.len() != cols {
+                bail!("fc input length {} != {cols}", x.len());
+            }
+        }
+        let mut out = vec![vec![0.0f32; rows]; inputs.len()];
+        for c in 0..cols {
+            let col = self.weights.col(c);
+            for (b, x) in inputs.iter().enumerate() {
+                let xv = x[c];
+                if xv == 0.0 {
+                    continue; // compressed away for this request
+                }
+                let y = &mut out[b];
+                for r in 0..rows {
+                    y[r] += col[r] * xv;
+                }
+            }
+        }
+        if self.relu {
+            for y in &mut out {
+                for v in y.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Compiled CONV layer: per-output-channel compressed kernels (built once)
+/// plus the geometry needed to run the im2col dataflow.
+#[derive(Debug, Clone)]
+pub struct ConvExec {
+    pub kernels: Vec<CompressedKernel>,
+    pub kernel: usize,
+    pub in_ch: usize,
+    pub in_hw: usize,
+    pub pool: bool,
+}
+
+impl ConvExec {
+    /// Compile from per-output-channel flattened kernels (`kh*kw*cin`
+    /// each), compressing through [`SparseVec::from_dense_thresh`].
+    pub fn new(
+        kflat: &[Vec<f32>],
+        kernel: usize,
+        in_ch: usize,
+        in_hw: usize,
+        pool: bool,
+        eps: f32,
+    ) -> Self {
+        let kernels = kflat
+            .iter()
+            .map(|k| CompressedKernel::from_sparse(&SparseVec::from_dense_thresh(k, eps)))
+            .collect();
+        Self {
+            kernels,
+            kernel,
+            in_ch,
+            in_hw,
+            pool,
+        }
+    }
+
+    /// Output spatial size after the optional 2x2 pool.
+    pub fn out_hw(&self) -> usize {
+        if self.pool {
+            self.in_hw / 2
+        } else {
+            self.in_hw
+        }
+    }
+
+    /// One request through conv -> ReLU -> optional 2x2 max-pool.
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let (h, c) = (self.in_hw, self.in_ch);
+        if x.len() != h * h * c {
+            bail!("conv input length {} != {}", x.len(), h * h * c);
+        }
+        let mut y = conv2d_compressed(x, h, h, c, &self.kernels, self.kernel, self.kernel);
+        let cout = self.kernels.len();
+        for v in y.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        if !self.pool {
+            return Ok(y);
+        }
+        let oh = h / 2;
+        let mut p = vec![0.0f32; oh * oh * cout];
+        for py in 0..oh {
+            for px in 0..oh {
+                for ch in 0..cout {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = y[((2 * py + dy) * h + 2 * px + dx) * cout + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    p[(py * oh + px) * cout + ch] = m;
+                }
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// One compiled layer of the functional model.
+#[derive(Debug, Clone)]
+pub enum LayerExec {
+    Fc(FcExec),
+    Conv(ConvExec),
+}
+
+/// The compiled functional model: every layer's static compression done at
+/// load time, executed batch-at-a-time.
+#[derive(Debug, Clone)]
+pub struct PlanExecutor {
+    pub model: String,
+    layers: Vec<LayerExec>,
+    input_len: usize,
+}
+
+impl PlanExecutor {
+    /// Compile from an `.swt`-style weight pack: one `<layer>.w` tensor per
+    /// layer (conv `[kh, kw, cin, cout]`, fc `[in, out]`, both row-major —
+    /// the `export.py` contract).
+    pub fn from_weights(desc: &ModelDesc, weights: &[Tensor], eps: f32) -> Result<Self> {
+        let mut layers = Vec::with_capacity(desc.layers.len());
+        for layer in &desc.layers {
+            let wname = format!("{}.w", layer.name);
+            let t = match weights.iter().find(|t| t.name == wname) {
+                Some(t) => t,
+                None => bail!("weight pack missing {wname}"),
+            };
+            layers.push(compile_exec_layer(layer, t, eps)?);
+        }
+        Ok(Self {
+            model: desc.name.clone(),
+            layers,
+            input_len: desc.input_len(),
+        })
+    }
+
+    /// Compile straight from the descriptor's `.swt` weight pack: loads
+    /// and contract-checks through [`ModelDesc::load_weights`], then
+    /// compiles each layer's static compression.
+    pub fn load_swt(desc: &ModelDesc, path: &std::path::Path, eps: f32) -> Result<Self> {
+        let tensors = desc.load_weights(path)?;
+        Self::from_weights(desc, &tensors, eps)
+    }
+
+    /// Compile with synthetic weights honouring the descriptor's per-layer
+    /// weight sparsity — the PJRT-free functional path for tests, benches,
+    /// and the serving fallback.
+    pub fn synthetic(desc: &ModelDesc, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let layers = desc
+            .layers
+            .iter()
+            .map(|layer| match layer.kind {
+                LayerKind::Conv {
+                    kernel,
+                    in_ch,
+                    out_ch,
+                    in_hw,
+                    pool,
+                } => {
+                    let kvol = kernel * kernel * in_ch;
+                    let kflat: Vec<Vec<f32>> = (0..out_ch)
+                        .map(|_| {
+                            let mut k = rng.sparse_vec(kvol, layer.weight_sparsity);
+                            // scale down so deep stacks stay finite
+                            for v in k.iter_mut() {
+                                *v *= 0.1;
+                            }
+                            k
+                        })
+                        .collect();
+                    LayerExec::Conv(ConvExec::new(&kflat, kernel, in_ch, in_hw, pool, 0.0))
+                }
+                LayerKind::Fc {
+                    in_dim,
+                    out_dim,
+                    relu,
+                } => {
+                    let mut rm = rng.sparse_vec(out_dim * in_dim, layer.weight_sparsity);
+                    for v in rm.iter_mut() {
+                        *v *= 0.1;
+                    }
+                    let w = ColMatrix::from_row_major(out_dim, in_dim, &rm);
+                    LayerExec::Fc(FcExec::new(w, relu, 0.0))
+                }
+            })
+            .collect();
+        Self {
+            model: desc.name.clone(),
+            layers,
+            input_len: desc.input_len(),
+        }
+    }
+
+    pub fn layers(&self) -> &[LayerExec] {
+        &self.layers
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Execute a batch through every compiled layer.  FC layers run the
+    /// batched sparse matvec (weights streamed once per batch); CONV layers
+    /// reuse the once-compiled kernels per request.
+    pub fn forward_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut cur: Vec<Vec<f32>> = inputs.to_vec();
+        for layer in &self.layers {
+            cur = match layer {
+                LayerExec::Fc(fc) => fc.forward_batch(&cur)?,
+                LayerExec::Conv(cv) => {
+                    let mut out = Vec::with_capacity(cur.len());
+                    for x in &cur {
+                        out.push(cv.forward(x)?);
+                    }
+                    out
+                }
+            };
+        }
+        Ok(cur)
+    }
+}
+
+fn compile_exec_layer(
+    layer: &crate::model::Layer,
+    t: &Tensor,
+    eps: f32,
+) -> Result<LayerExec> {
+    let want = layer.weight_dims();
+    if t.dims != want {
+        bail!("{}: weight dims {:?} != {:?}", t.name, t.dims, want);
+    }
+    match layer.kind {
+        LayerKind::Conv {
+            kernel,
+            in_ch,
+            out_ch,
+            in_hw,
+            pool,
+        } => {
+            // [kh, kw, cin, cout] row-major -> per-out-channel flat kernels
+            // in the same [dy][dx][c] order extract_patch produces.
+            let kvol = kernel * kernel * in_ch;
+            let kflat: Vec<Vec<f32>> = (0..out_ch)
+                .map(|oc| (0..kvol).map(|i| t.data[i * out_ch + oc]).collect())
+                .collect();
+            Ok(LayerExec::Conv(ConvExec::new(
+                &kflat, kernel, in_ch, in_hw, pool, eps,
+            )))
+        }
+        LayerKind::Fc {
+            in_dim,
+            out_dim,
+            relu,
+        } => {
+            // [in, out] row-major is exactly the column-major layout of the
+            // (out x in) matrix ColMatrix wants: entry [c_in*out + r_out].
+            let w = ColMatrix {
+                rows: out_dim,
+                cols: in_dim,
+                data: t.data.clone(),
+            };
+            Ok(LayerExec::Fc(FcExec::new(w, relu, eps)))
+        }
+    }
+}
+
+/// [`InferenceBackend`] over a [`PlanExecutor`]: functional serving through
+/// the compiled plan, no PJRT required.
+pub struct PlanBackend {
+    exec: PlanExecutor,
+}
+
+impl PlanBackend {
+    pub fn new(exec: PlanExecutor) -> Self {
+        Self { exec }
+    }
+
+    /// Synthetic-weight backend for a descriptor (see
+    /// [`PlanExecutor::synthetic`]).
+    pub fn synthetic(desc: &ModelDesc, seed: u64) -> Self {
+        Self {
+            exec: PlanExecutor::synthetic(desc, seed),
+        }
+    }
+
+    pub fn executor(&self) -> &PlanExecutor {
+        &self.exec
+    }
+}
+
+impl InferenceBackend for PlanBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.exec.forward_batch(inputs)
+    }
+
+    fn input_len(&self) -> usize {
+        self.exec.input_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compress::{compress_fc, fc_product};
+
+    fn small_fc() -> FcExec {
+        let mut rng = Rng::new(21);
+        let (rows, cols) = (17, 33);
+        let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.4));
+        FcExec::new(w, false, 0.0)
+    }
+
+    #[test]
+    fn batched_matvec_matches_per_request_compression() {
+        let fc = small_fc();
+        let mut rng = Rng::new(22);
+        let batch: Vec<Vec<f32>> = (0..7).map(|_| rng.sparse_vec(33, 0.5)).collect();
+        let got = fc.forward_batch(&batch).unwrap();
+        for (x, y) in batch.iter().zip(&got) {
+            let want = fc_product(&compress_fc(x, &fc.weights));
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fc_rejects_bad_input_len() {
+        let fc = small_fc();
+        assert!(fc.forward_batch(&[vec![0.0; 5]]).is_err());
+    }
+
+    #[test]
+    fn col_nnz_tracks_sparsity() {
+        let w = ColMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let fc = FcExec::new(w, false, 0.0);
+        assert_eq!(fc.col_nnz, vec![1, 0, 2]);
+        assert!((fc.weight_sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fc_eps_squashes_compute_and_accounting_together() {
+        // eps applies to the executed weights, not just the gating stats.
+        let w = ColMatrix::from_row_major(1, 2, &[0.005, 1.0]);
+        let fc = FcExec::new(w, false, 0.01);
+        assert_eq!(fc.col_nnz, vec![0, 1]);
+        assert!((fc.weight_sparsity() - 0.5).abs() < 1e-12);
+        let y = fc.forward_batch(&[vec![1.0, 1.0]]).unwrap();
+        assert_eq!(y[0], vec![1.0]); // sub-threshold weight contributed nothing
+    }
+
+    #[test]
+    fn conv_exec_pools_and_relus() {
+        // 1 channel 4x4 input, one all-ones 3x3 kernel, pool -> 2x2 output
+        let kflat = vec![vec![1.0f32; 9]];
+        let cv = ConvExec::new(&kflat, 3, 1, 4, true, 0.0);
+        let x = vec![1.0f32; 16];
+        let y = cv.forward(&x).unwrap();
+        assert_eq!(y.len(), 2 * 2);
+        // interior pixels see all 9 ones -> max-pool output >= 4 everywhere
+        assert!(y.iter().all(|&v| v >= 4.0));
+    }
+
+    #[test]
+    fn executor_runs_all_builtin_models_small_batch() {
+        for name in ["mnist", "svhn"] {
+            let desc = ModelDesc::builtin(name).unwrap();
+            let ex = PlanExecutor::synthetic(&desc, 3);
+            let mut rng = Rng::new(4);
+            let batch: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(ex.input_len())).collect();
+            let out = ex.forward_batch(&batch).unwrap();
+            assert_eq!(out.len(), 2, "{name}");
+            assert_eq!(out[0].len(), desc.n_classes, "{name}");
+            assert!(
+                out.iter().flatten().all(|v| v.is_finite()),
+                "{name}: non-finite logits"
+            );
+        }
+    }
+
+    #[test]
+    fn executor_from_weights_matches_synthetic_layout() {
+        // build a tiny 2-layer model + matching weight pack by hand
+        let desc = tiny_desc();
+        let mut rng = Rng::new(9);
+        let conv_w = Tensor::new(
+            "c0.w",
+            vec![3, 3, 1, 2],
+            rng.sparse_vec(9 * 2, 0.5),
+        );
+        let fc_w = Tensor::new("f0.w", vec![8, 3], rng.sparse_vec(24, 0.3));
+        let ex = PlanExecutor::from_weights(&desc, &[conv_w, fc_w], 0.0).unwrap();
+        let out = ex
+            .forward_batch(&[vec![0.5; desc.input_len()]])
+            .unwrap();
+        assert_eq!(out[0].len(), 3);
+    }
+
+    #[test]
+    fn load_swt_contract_checks_then_executes() {
+        use crate::tensor::swt::write_swt;
+        let desc = tiny_desc();
+        let mut rng = Rng::new(10);
+        let tensors = vec![
+            Tensor::new("c0.w", vec![3, 3, 1, 2], rng.sparse_vec(18, 0.5)),
+            Tensor::new("f0.w", vec![8, 3], rng.sparse_vec(24, 0.3)),
+        ];
+        let dir = std::env::temp_dir().join("sonic_load_swt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.swt");
+        std::fs::write(&path, write_swt(&tensors)).unwrap();
+        let ex = PlanExecutor::load_swt(&desc, &path, 0.0).unwrap();
+        let out = ex
+            .forward_batch(&[vec![0.25; desc.input_len()]])
+            .unwrap();
+        assert_eq!(out[0].len(), 3);
+
+        // wrong dims must be rejected by the descriptor contract check
+        let bad = vec![
+            Tensor::new("c0.w", vec![3, 3, 2, 1], rng.sparse_vec(18, 0.5)),
+            Tensor::new("f0.w", vec![8, 3], rng.sparse_vec(24, 0.3)),
+        ];
+        std::fs::write(&path, write_swt(&bad)).unwrap();
+        assert!(PlanExecutor::load_swt(&desc, &path, 0.0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn executor_missing_weight_errors() {
+        let desc = tiny_desc();
+        let e = PlanExecutor::from_weights(&desc, &[], 0.0).unwrap_err();
+        assert!(e.to_string().contains("c0.w"), "{e}");
+    }
+
+    fn tiny_desc() -> ModelDesc {
+        use crate::model::Layer;
+        ModelDesc {
+            name: "tiny".into(),
+            input_hw: 4,
+            input_ch: 1,
+            n_classes: 3,
+            total_params: 42,
+            surviving_params: 21,
+            n_clusters: 16,
+            weight_dac_bits: 6,
+            act_dac_bits: 16,
+            accuracy: 0.0,
+            layers: vec![
+                Layer {
+                    name: "c0".into(),
+                    kind: LayerKind::Conv {
+                        kernel: 3,
+                        in_ch: 1,
+                        out_ch: 2,
+                        in_hw: 4,
+                        pool: true,
+                    },
+                    weight_sparsity: 0.5,
+                    act_sparsity: 0.0,
+                    unique_weights: 16,
+                },
+                Layer {
+                    name: "f0".into(),
+                    kind: LayerKind::Fc {
+                        in_dim: 8,
+                        out_dim: 3,
+                        relu: false,
+                    },
+                    weight_sparsity: 0.3,
+                    act_sparsity: 0.5,
+                    unique_weights: 16,
+                },
+            ],
+        }
+    }
+}

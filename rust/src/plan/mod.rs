@@ -1,0 +1,549 @@
+//! Compile-once `LayerPlan` IR (see `README.md` in this directory).
+//!
+//! SONIC's pipeline — dataflow compression (§III.C) followed by vector
+//! decomposition onto the `(n, m, N, K)` VDU array (§IV.C) — used to be
+//! re-derived from the [`ModelDesc`] on every call site: the coordinator
+//! rebuilt compression per request, the scheduler recomputed pass counts,
+//! and `sim::engine` re-implemented the same ceil-division dataflow math.
+//! This module makes that pipeline a first-class, compile-once IR:
+//!
+//! * [`LayerPlan`] — one layer's precompiled VDU decomposition (passes,
+//!   rounds, lane utilization, power-gating expectation), EO-vs-TO retune
+//!   classification, and per-pass timing/energy coefficients.
+//! * [`ModelPlan`] — the per-model collection plus whole-inference totals
+//!   (latency, energy, power breakdown, batch-amortization split).
+//! * [`cached`] — the global plan cache, keyed by *(model fingerprint,
+//!   config fingerprint)*, so the serving hot path and repeated simulation
+//!   sweeps compile each `(model, SonicConfig)` pair exactly once.
+//! * [`exec`] — functional execution against the compiled plan: static
+//!   weight compression + batched sparse kernels that iterate the plan
+//!   once per **batch**, not once per request.
+//!
+//! The analytic simulator ([`crate::sim::engine::simulate`]), the batch
+//! amortization model ([`crate::sim::batch`]), and the serving router
+//! ([`crate::coordinator::serve::Router`]) all consume this IR, so their
+//! numbers derive from one source and cannot drift.
+
+pub mod exec;
+
+pub use exec::{ConvExec, FcExec, LayerExec, PlanBackend, PlanExecutor};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::{SonicConfig, Vdu};
+use crate::model::{Layer, LayerKind, ModelDesc};
+use crate::sim::engine::{InferenceStats, LayerStats, PowerBreakdown};
+
+/// Fraction of passes that fall back to TO retuning without clustering
+/// (large arbitrary-precision weight swings exceeding the EO range).
+pub const TO_FRACTION_UNCLUSTERED: f64 = 0.02;
+/// Average MR transmission the clustered codebook maps to.
+pub const AVG_TRANSMISSION: f64 = 0.5;
+
+/// Ceil division for u64.
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// One layer's compiled dataflow: the compressed-vector geometry, its VDU
+/// decomposition, and the timing/energy coefficients of every pass.
+///
+/// Invariants (checked by `tests/integration.rs` reconciliation tests):
+///
+/// * `passes == outputs * passes_per_output`
+/// * `passes_per_output == ceil(vector_len / lanes)`
+/// * `rounds == ceil(passes / n_vdus)`
+/// * `overhead_s == fill_s + setup_s` and `latency_s == rounds * interval_s
+///   + overhead_s`
+/// * `energy_j == passes * pass_energy_j + other_idle_w * latency_s`
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub name: String,
+    pub is_conv: bool,
+    /// Compressed dot-product length fed to the VDUs.
+    pub vector_len: usize,
+    /// Dot products per inference: `(pixels x out_ch x in_ch)` slices for
+    /// CONV, `out_dim` for FC.
+    pub outputs: u64,
+    /// VDU passes per dot product: `ceil(vector_len / lanes)`.
+    pub passes_per_output: u64,
+    /// Total VDU passes for this layer (one inference).
+    pub passes: u64,
+    /// Pipeline rounds = ceil(passes / n_vdus).
+    pub rounds: u64,
+    /// Lane count of the VDU kind this layer maps to (n CONV / m FC).
+    pub lanes: usize,
+    /// VDUs of that kind (N CONV / K FC).
+    pub n_vdus: usize,
+    /// Residual sparsity inside the kept operand (power-gates lanes).
+    pub residual_sparsity: f64,
+    /// Expected live lanes per pass after power gating (the gating mask's
+    /// analytic expectation).
+    pub avg_active_lanes: f64,
+    /// EO-vs-TO classification: fraction of passes needing a slow TO
+    /// retune (0 when the clustered codebook fits the EO range).
+    pub to_retune_fraction: f64,
+    /// Initiation interval including the TO-retune stretch (s).
+    pub interval_s: f64,
+    /// Pipeline fill latency (s) — paid once per batch.
+    pub fill_s: f64,
+    /// Per-layer setup: BN MR configuration (+TO settle unclustered) (s).
+    pub setup_s: f64,
+    /// `fill_s + setup_s` — the non-pipelined share of `latency_s`.
+    pub overhead_s: f64,
+    /// Single-inference latency of this layer (s).
+    pub latency_s: f64,
+    /// Energy of one pass at the stretched interval (J).
+    pub pass_energy_j: f64,
+    /// Idle power of the opposite-kind VDUs while this layer runs (W).
+    pub other_idle_w: f64,
+    /// Layer energy for one inference (busy + opposite-kind idle) (J).
+    pub energy_j: f64,
+    /// Per-device-class energy attribution for one inference.
+    pub breakdown: PowerBreakdown,
+}
+
+impl LayerPlan {
+    /// View as the simulator's per-layer stats record.
+    pub fn layer_stats(&self) -> LayerStats {
+        LayerStats {
+            name: self.name.clone(),
+            is_conv: self.is_conv,
+            vector_len: self.vector_len,
+            passes: self.passes,
+            rounds: self.rounds,
+            latency_s: self.latency_s,
+            overhead_s: self.overhead_s,
+            energy_j: self.energy_j,
+            avg_active_lanes: self.avg_active_lanes,
+            breakdown: self.breakdown.clone(),
+        }
+    }
+}
+
+/// A whole model compiled against one [`SonicConfig`]: per-layer plans plus
+/// the inference-level totals every consumer needs.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub model: String,
+    pub layers: Vec<LayerPlan>,
+    /// Single-inference latency (s).
+    pub latency_s: f64,
+    /// Sum of per-layer overheads — amortized across a batch.
+    pub overhead_s: f64,
+    /// Single-inference energy including control + DRAM (J).
+    pub energy_j: f64,
+    /// Electronic-control energy over one inference (J).
+    pub control_j: f64,
+    /// Main-memory traffic energy over one inference (J).
+    pub dram_j: f64,
+    /// Bits moved per inference (the paper's EPB denominator).
+    pub bits_per_inference: f64,
+    pub breakdown: PowerBreakdown,
+    /// Fingerprints this plan was compiled under (the cache key).
+    pub model_key: u64,
+    pub config_key: u64,
+}
+
+impl ModelPlan {
+    /// Compile `model` for `cfg`.  This is the *only* place in the crate
+    /// where the dataflow math (compression lengths, pass counts, retune
+    /// classification, timing/energy coefficients) is derived.
+    pub fn compile(model: &ModelDesc, cfg: &SonicConfig) -> ModelPlan {
+        let conv_vdu = cfg.conv_vdu();
+        let fc_vdu = cfg.fc_vdu();
+        let mut layers = Vec::with_capacity(model.layers.len());
+        let mut total_latency = 0.0;
+        let mut overhead = 0.0;
+        let mut breakdown = PowerBreakdown::default();
+
+        for layer in &model.layers {
+            let lp = compile_layer(layer, cfg, &conv_vdu, &fc_vdu);
+            total_latency += lp.latency_s;
+            overhead += lp.overhead_s;
+            breakdown.add(&lp.breakdown);
+            layers.push(lp);
+        }
+
+        // Electronic control: static power over the whole inference.
+        let control_j = cfg.control_power_w() * total_latency;
+        breakdown.control_j += control_j;
+
+        // Main-memory traffic: surviving weights + activations once per
+        // inference at their respective resolutions.
+        let bits = model.bits_per_inference();
+        let dram_j = bits * cfg.devices.dram_energy_per_bit_j;
+        breakdown.dram_j += dram_j;
+
+        let energy: f64 =
+            layers.iter().map(|l| l.energy_j).sum::<f64>() + control_j + dram_j;
+
+        ModelPlan {
+            model: model.name.clone(),
+            layers,
+            latency_s: total_latency,
+            overhead_s: overhead,
+            energy_j: energy,
+            control_j,
+            dram_j,
+            bits_per_inference: bits,
+            breakdown,
+            model_key: model_fingerprint(model),
+            config_key: config_fingerprint(cfg),
+        }
+    }
+
+    /// The simulator's inference-level report, derived from the plan.
+    pub fn inference_stats(&self) -> InferenceStats {
+        let avg_power = self.energy_j / self.latency_s;
+        let fps = 1.0 / self.latency_s;
+        InferenceStats {
+            model: self.model.clone(),
+            latency_s: self.latency_s,
+            energy_j: self.energy_j,
+            avg_power_w: avg_power,
+            fps,
+            fps_per_watt: fps / avg_power,
+            epb_j: self.energy_j / self.bits_per_inference,
+            layers: self.layers.iter().map(|l| l.layer_stats()).collect(),
+            breakdown: self.breakdown.clone(),
+        }
+    }
+
+    /// Steady-state fraction of one inference that is pure pipeline time
+    /// (rounds x II) rather than setup/fill — the part every request in a
+    /// batch pays; the overhead is paid once per batch.
+    pub fn pipeline_fraction(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.overhead_s / self.latency_s).clamp(0.0, 1.0)
+    }
+
+    /// Latency of a batch of `b` back-to-back requests: the first pays
+    /// everything, the rest only the pipelined share.
+    pub fn batch_latency_s(&self, b: usize) -> f64 {
+        assert!(b >= 1);
+        self.latency_s * (1.0 + self.pipeline_fraction() * (b as f64 - 1.0))
+    }
+
+    /// Energy of a batch of `b` requests (photonic energy is per-pass, so
+    /// it scales linearly).
+    pub fn batch_energy_j(&self, b: usize) -> f64 {
+        self.energy_j * b as f64
+    }
+
+    /// Total VDU passes for one inference.
+    pub fn total_passes(&self) -> u64 {
+        self.layers.iter().map(|l| l.passes).sum()
+    }
+}
+
+/// Compile one layer — the math previously duplicated between
+/// `coordinator::schedule` and `sim::engine::simulate_layer`.
+fn compile_layer(
+    layer: &Layer,
+    cfg: &SonicConfig,
+    conv_vdu: &Vdu,
+    fc_vdu: &Vdu,
+) -> LayerPlan {
+    let clustered = cfg.weight_dac_bits <= 6;
+    let (vdu, n_vdus, vector_len, outputs, residual_sparsity) = match layer.kind {
+        LayerKind::Conv {
+            kernel,
+            in_ch,
+            out_ch,
+            in_hw,
+            ..
+        } => {
+            // Kernels decompose per 2-D slice (k*k weights per input
+            // channel); compression removes that slice's zero entries
+            // (Fig. 2), producing the <=5-entry dense kernel vectors the
+            // paper's n=5 finding rests on.  Per-slice partial sums
+            // accumulate electronically.
+            let kk = kernel * kernel;
+            let len = if cfg.compression {
+                ((kk as f64 * (1.0 - layer.weight_sparsity)).ceil() as usize).max(1)
+            } else {
+                kk
+            };
+            // one dot product per (pixel, out channel, input-channel slice)
+            let outputs = (in_hw * in_hw * out_ch * in_ch) as u64;
+            (
+                conv_vdu,
+                cfg.n_conv_vdus as u64,
+                len,
+                outputs,
+                layer.act_sparsity, // residual zeros in the IF patch
+            )
+        }
+        LayerKind::Fc {
+            in_dim, out_dim, ..
+        } => {
+            let len = if cfg.compression {
+                ((in_dim as f64 * (1.0 - layer.act_sparsity)).ceil() as usize).max(1)
+            } else {
+                in_dim
+            };
+            (
+                fc_vdu,
+                cfg.n_fc_vdus as u64,
+                len,
+                out_dim as u64,
+                layer.weight_sparsity, // residual zeros in the weight rows
+            )
+        }
+    };
+
+    let lanes = vdu.lanes as u64;
+    let passes_per_output = ceil_div(vector_len as u64, lanes);
+    let passes = outputs * passes_per_output;
+    let rounds = ceil_div(passes, n_vdus);
+
+    // Lane utilization: the last chunk of each output's vector is partial.
+    let lane_util = vector_len as f64 / (passes_per_output * lanes) as f64;
+    let active = (lanes as f64 * lane_util * (1.0 - residual_sparsity)).max(1.0);
+    let cost = vdu.pass_cost(active.round() as usize, AVG_TRANSMISSION);
+
+    // EO-vs-TO retune classification: with an unclustered codebook a
+    // fraction of passes needs slow TO retunes, stretching the II.
+    let to_fraction = if clustered { 0.0 } else { TO_FRACTION_UNCLUSTERED };
+    let ii = cost.interval_s + to_fraction * cfg.devices.to_latency_s;
+
+    let setup = vdu.layer_setup_latency_s(!clustered);
+    let fill = cost.fill_latency_s;
+    let overhead = fill + setup;
+    let latency = rounds as f64 * ii + overhead;
+
+    // Energy: every pass pays its energy; VDUs of the *other* kind idle.
+    let pass_energy = cost.power_w * ii;
+    let busy_j = passes as f64 * pass_energy;
+    let other_idle_w = match layer.kind {
+        LayerKind::Conv { .. } => cfg.fc_vdu().idle_power_w() * cfg.n_fc_vdus as f64,
+        LayerKind::Fc { .. } => cfg.conv_vdu().idle_power_w() * cfg.n_conv_vdus as f64,
+    };
+    let idle_j = other_idle_w * latency;
+    let energy = busy_j + idle_j;
+
+    // Component attribution (approximate: split pass power by device class).
+    let gp = cfg.power_gating;
+    let a = active.round() as usize;
+    let dac_w = {
+        // dense + sparse DAC arrays (see Vdu::pass_cost)
+        let dense = match layer.kind {
+            LayerKind::Conv { .. } => cfg.devices.dac6_power_w,
+            LayerKind::Fc { .. } => cfg.devices.dac16_power_w,
+        };
+        let sparse = match layer.kind {
+            LayerKind::Conv { .. } => cfg.devices.dac16_power_w,
+            LayerKind::Fc { .. } => cfg.devices.dac6_power_w,
+        };
+        let dense = if cfg.weight_dac_bits > 6 && matches!(layer.kind, LayerKind::Conv { .. })
+        {
+            cfg.devices.dac16_power_w
+        } else {
+            dense
+        };
+        let n_active = if gp { a } else { vdu.lanes };
+        (dense + sparse) * n_active as f64
+    };
+    let vcsel_w = {
+        let n_active = if gp { a } else { vdu.lanes };
+        n_active as f64 * cfg.devices.vcsel_power_w
+    };
+    let readout_w = cfg.devices.pd_power_w + cfg.devices.adc_power_w;
+    let mr_w = (cost.power_w - dac_w - vcsel_w - readout_w).max(0.0);
+    let scale = passes as f64 * ii;
+    let breakdown = PowerBreakdown {
+        dac_j: dac_w * scale,
+        vcsel_j: vcsel_w * scale,
+        mr_tuning_j: mr_w * scale,
+        readout_j: readout_w * scale + idle_j,
+        control_j: 0.0,
+        dram_j: 0.0,
+    };
+
+    LayerPlan {
+        name: layer.name.clone(),
+        is_conv: matches!(layer.kind, LayerKind::Conv { .. }),
+        vector_len,
+        outputs,
+        passes_per_output,
+        passes,
+        rounds,
+        lanes: vdu.lanes,
+        n_vdus: n_vdus as usize,
+        residual_sparsity,
+        avg_active_lanes: active,
+        to_retune_fraction: to_fraction,
+        interval_s: ii,
+        fill_s: fill,
+        setup_s: setup,
+        overhead_s: overhead,
+        latency_s: latency,
+        pass_energy_j: pass_energy,
+        other_idle_w,
+        energy_j: energy,
+        breakdown,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan cache: compile each (model, config) pair once per process.
+
+/// FNV-1a over a byte string — deterministic, dependency-free fingerprint.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fingerprint of everything in the descriptor a plan depends on.  Uses
+/// the `Debug` rendering, which covers every field (layer geometry,
+/// sparsity fractions, DAC resolutions); descriptors mutated in place
+/// (e.g. sparsity sweeps) therefore fingerprint differently even when the
+/// model name is unchanged.
+pub fn model_fingerprint(model: &ModelDesc) -> u64 {
+    fnv1a(format!("{model:?}").as_bytes())
+}
+
+/// Fingerprint of the architecture configuration, including device
+/// parameters and feature toggles.
+pub fn config_fingerprint(cfg: &SonicConfig) -> u64 {
+    fnv1a(format!("{cfg:?}").as_bytes())
+}
+
+type PlanCache = Mutex<HashMap<(u64, u64), Arc<ModelPlan>>>;
+
+fn cache() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Get the compiled plan for `(model, cfg)`, compiling at most once per
+/// process.  Returns a shared handle; callers on the serving hot path hold
+/// the `Arc` so repeated requests never re-plan.
+pub fn cached(model: &ModelDesc, cfg: &SonicConfig) -> Arc<ModelPlan> {
+    let key = (model_fingerprint(model), config_fingerprint(cfg));
+    if let Some(hit) = cache().lock().unwrap().get(&key) {
+        return Arc::clone(hit);
+    }
+    // Compile outside the lock: plans for large models take a while and
+    // concurrent misses for *different* keys shouldn't serialize.
+    let plan = Arc::new(ModelPlan::compile(model, cfg));
+    Arc::clone(
+        cache()
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(plan),
+    )
+}
+
+/// Number of plans currently cached (test/diagnostic hook).
+pub fn cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(name: &str) -> ModelPlan {
+        ModelPlan::compile(
+            &ModelDesc::builtin(name).unwrap(),
+            &SonicConfig::paper_best(),
+        )
+    }
+
+    #[test]
+    fn invariants_hold_for_all_builtin_models() {
+        for name in ["mnist", "cifar10", "stl10", "svhn"] {
+            let p = plan(name);
+            for l in &p.layers {
+                assert_eq!(l.passes, l.outputs * l.passes_per_output, "{name}/{}", l.name);
+                assert_eq!(
+                    l.passes_per_output,
+                    (l.vector_len as u64).div_ceil(l.lanes as u64),
+                    "{name}/{}",
+                    l.name
+                );
+                assert_eq!(l.rounds, l.passes.div_ceil(l.n_vdus as u64), "{name}/{}", l.name);
+                assert!((l.overhead_s - (l.fill_s + l.setup_s)).abs() < 1e-18);
+                let lat = l.rounds as f64 * l.interval_s + l.overhead_s;
+                assert!((l.latency_s - lat).abs() / lat < 1e-12, "{name}/{}", l.name);
+                let en = l.passes as f64 * l.pass_energy_j + l.other_idle_w * l.latency_s;
+                assert!((l.energy_j - en).abs() / en < 1e-12, "{name}/{}", l.name);
+            }
+            let lat_sum: f64 = p.layers.iter().map(|l| l.latency_s).sum();
+            assert!((p.latency_s - lat_sum).abs() / p.latency_s < 1e-12);
+        }
+    }
+
+    #[test]
+    fn clustered_plans_have_no_to_retunes() {
+        let p = plan("mnist");
+        assert!(p.layers.iter().all(|l| l.to_retune_fraction == 0.0));
+        let un = ModelPlan::compile(
+            &ModelDesc::builtin("mnist").unwrap(),
+            &SonicConfig::paper_best().without_clustering(),
+        );
+        assert!(un.layers.iter().all(|l| l.to_retune_fraction > 0.0));
+        // TO stretch lengthens the II
+        for (c, u) in p.layers.iter().zip(&un.layers) {
+            assert!(u.interval_s > c.interval_s);
+        }
+    }
+
+    #[test]
+    fn batch_math_amortizes_overhead_only() {
+        let p = plan("svhn");
+        let b1 = p.batch_latency_s(1);
+        assert!((b1 - p.latency_s).abs() / p.latency_s < 1e-12);
+        let b8 = p.batch_latency_s(8);
+        assert!(b8 < 8.0 * p.latency_s);
+        assert!(b8 > p.latency_s);
+        assert!((p.batch_energy_j(8) - 8.0 * p.energy_j).abs() / p.energy_j < 1e-9);
+    }
+
+    #[test]
+    fn cache_hits_return_same_plan() {
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let a = cached(&m, &cfg);
+        let b = cached(&m, &cfg);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cache_distinguishes_configs_and_mutated_models() {
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let a = cached(&m, &SonicConfig::paper_best());
+        let b = cached(&m, &SonicConfig::paper_best().without_compression());
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(b.total_passes() > a.total_passes());
+
+        let mut m2 = m.clone();
+        for l in &mut m2.layers {
+            l.weight_sparsity = (l.weight_sparsity + 0.2).min(0.95);
+        }
+        let c = cached(&m2, &SonicConfig::paper_best());
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn fingerprints_are_stable_within_process() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        assert_eq!(model_fingerprint(&m), model_fingerprint(&m.clone()));
+        let cfg = SonicConfig::paper_best();
+        assert_eq!(config_fingerprint(&cfg), config_fingerprint(&cfg.clone()));
+        assert_ne!(
+            config_fingerprint(&cfg),
+            config_fingerprint(&cfg.clone().without_power_gating())
+        );
+    }
+}

@@ -15,14 +15,26 @@
 //! a dedicated **owner thread** ([`PjrtBackend`]); the rest of the system
 //! talks to it over channels, which is also the natural shape for the
 //! router (one compiled executable, serialized batch execution).
+//!
+//! ## Feature gating
+//!
+//! The `xla` crate is a vendored native dependency that cannot be fetched
+//! in offline builds, so everything touching it sits behind the `pjrt`
+//! cargo feature.  The default build gets API-compatible stubs whose
+//! constructors return a descriptive error — serving then runs through
+//! [`crate::plan::PlanBackend`] (compiled-plan execution) or
+//! [`crate::coordinator::serve::NullBackend`] instead.  Manifest parsing
+//! ([`load_manifest`]) has no native dependency and is always available.
+//!
+//! Turning the feature on is a two-step act: `--features pjrt` *and* an
+//! `xla = { path = ... }` entry in Cargo.toml pointing at the vendored
+//! crate.  The feature alone fails to compile (unresolved `xla`) — that
+//! is deliberate, so a vendoring mistake cannot silently fall back to
+//! stubs that error at runtime.
 
-use std::path::{Path, PathBuf};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
-use crate::coordinator::serve::InferenceBackend;
-use crate::tensor::{swt, Tensor};
+use crate::util::err::{Context, Result};
 use crate::util::json::Json;
 
 /// An artifact entry from `artifacts/manifest.json`.
@@ -77,289 +89,365 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactInfo>> {
     Ok(out)
 }
 
-// ---------------------------------------------------------------------------
-// Owner-thread internals (not Send; constructed and used on one thread only).
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    //! The real PJRT bridge (requires the vendored `xla` crate).
 
-/// A compiled model executable + its weight literals.
-struct CompiledModel {
-    info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-    /// Weight literals in artifact argument order (after the input).
-    weights: Vec<xla::Literal>,
-    input_shape: Vec<usize>,
-}
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
-/// Single-threaded PJRT context: client + loader.  Public for tests and
-/// tools that stay on one thread; the serving path uses [`PjrtBackend`].
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
+    use super::{load_manifest, ArtifactInfo};
+    use crate::bail;
+    use crate::coordinator::serve::InferenceBackend;
+    use crate::tensor::{swt, Tensor};
+    use crate::util::err::{Context, Result};
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            dir: artifacts_dir.into(),
-        })
+    /// A compiled model executable + its weight literals.
+    struct CompiledModel {
+        info: ArtifactInfo,
+        exe: xla::PjRtLoadedExecutable,
+        /// Weight literals in artifact argument order (after the input).
+        weights: Vec<xla::Literal>,
+        input_shape: Vec<usize>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Single-threaded PJRT context: client + loader.  Public for tests and
+    /// tools that stay on one thread; the serving path uses [`PjrtBackend`].
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
     }
 
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
+    impl Runtime {
+        pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                dir: artifacts_dir.into(),
+            })
+        }
 
-    fn load_model(&self, key: &str) -> Result<CompiledModel> {
-        let manifest = load_manifest(&self.dir)?;
-        let info = manifest
-            .into_iter()
-            .find(|a| a.key == key)
-            .with_context(|| format!("artifact {key:?} not in manifest"))?;
-        let hlo_path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-        // Model artifacts (arg0 named "input") take the SWT weight pack.
-        let mut weights = Vec::new();
-        let input_shape;
-        if info.arg_shapes.first().map(|a| a.0.as_str()) == Some("input") {
-            input_shape = info.arg_shapes[0].1.clone();
-            let model_name = key.split("_b").next().unwrap_or(key);
-            let swt_path = self.dir.join(format!("{model_name}.swt"));
-            let tensors = swt::read_swt(&swt_path)
-                .with_context(|| format!("reading {}", swt_path.display()))?;
-            if tensors.len() != info.arg_shapes.len() - 1 {
-                bail!(
-                    "weight count mismatch: {} tensors vs {} args",
-                    tensors.len(),
-                    info.arg_shapes.len() - 1
-                );
-            }
-            for (t, (aname, ashape)) in tensors.iter().zip(&info.arg_shapes[1..]) {
-                if &t.name != aname || &t.dims != ashape {
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        fn load_model(&self, key: &str) -> Result<CompiledModel> {
+            let manifest = load_manifest(&self.dir)?;
+            let info = manifest
+                .into_iter()
+                .find(|a| a.key == key)
+                .with_context(|| format!("artifact {key:?} not in manifest"))?;
+            let hlo_path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+
+            // Model artifacts (arg0 named "input") take the SWT weight pack.
+            let mut weights = Vec::new();
+            let input_shape;
+            if info.arg_shapes.first().map(|a| a.0.as_str()) == Some("input") {
+                input_shape = info.arg_shapes[0].1.clone();
+                let model_name = key.split("_b").next().unwrap_or(key);
+                let swt_path = self.dir.join(format!("{model_name}.swt"));
+                let tensors = swt::read_swt(&swt_path)
+                    .with_context(|| format!("reading {}", swt_path.display()))?;
+                if tensors.len() != info.arg_shapes.len() - 1 {
                     bail!(
-                        "arg contract violation: swt {}{:?} vs artifact {}{:?}",
-                        t.name,
-                        t.dims,
-                        aname,
-                        ashape
+                        "weight count mismatch: {} tensors vs {} args",
+                        tensors.len(),
+                        info.arg_shapes.len() - 1
                     );
                 }
-                weights.push(tensor_to_literal(t)?);
-            }
-        } else {
-            input_shape = info
-                .arg_shapes
-                .first()
-                .map(|a| a.1.clone())
-                .unwrap_or_default();
-        }
-        Ok(CompiledModel {
-            info,
-            exe,
-            weights,
-            input_shape,
-        })
-    }
-
-    /// One-shot single-threaded execution of an artifact (tests/tools):
-    /// all arguments supplied by the caller, no SWT binding.
-    pub fn run_raw(&self, key: &str, args: &[Tensor]) -> Result<Vec<f32>> {
-        let manifest = load_manifest(&self.dir)?;
-        let info = manifest
-            .into_iter()
-            .find(|a| a.key == key)
-            .with_context(|| format!("artifact {key:?} not in manifest"))?;
-        let hlo_path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let lits = args
-            .iter()
-            .map(tensor_to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let refs: Vec<&xla::Literal> = lits.iter().collect();
-        let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
-    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
-
-impl CompiledModel {
-    /// Execute on a flat input of `prod(input_shape)` f32; returns the flat
-    /// first tuple element.
-    fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let expect: usize = self.input_shape.iter().product();
-        if input.len() != expect {
-            bail!(
-                "input length {} != artifact shape {:?}",
-                input.len(),
-                self.input_shape
-            );
-        }
-        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
-        let x = xla::Literal::vec1(input).reshape(&dims)?;
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
-        args.push(&x);
-        for w in &self.weights {
-            args.push(w);
-        }
-        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True -> 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Owner-thread backend: Send + Sync handle over channels.
-
-enum Job {
-    Infer {
-        inputs: Vec<Vec<f32>>,
-        reply: SyncSender<Result<Vec<Vec<f32>>>>,
-    },
-    Shutdown,
-}
-
-/// [`InferenceBackend`] executing batches on a dedicated PJRT owner thread.
-/// Loads `<model>` (batch 1) and, when present, `<model>_b8` as the dynamic
-/// batcher's fast path.
-pub struct PjrtBackend {
-    tx: SyncSender<Job>,
-    input_len: usize,
-    batch_fast_path: usize,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
-impl PjrtBackend {
-    pub fn load(artifacts_dir: impl Into<PathBuf>, model: &str) -> Result<Self> {
-        let dir: PathBuf = artifacts_dir.into();
-        let model = model.to_string();
-        let (tx, rx) = sync_channel::<Job>(64);
-        let (init_tx, init_rx) = sync_channel::<Result<(usize, usize)>>(1);
-        let handle = std::thread::Builder::new()
-            .name("pjrt-owner".into())
-            .spawn(move || owner_thread(dir, model, rx, init_tx))
-            .context("spawning pjrt owner thread")?;
-        let (input_len, batch_fast_path) = init_rx
-            .recv()
-            .context("pjrt owner thread died during init")??;
-        Ok(Self {
-            tx,
-            input_len,
-            batch_fast_path,
-            handle: Some(handle),
-        })
-    }
-
-    pub fn batch_size(&self) -> usize {
-        self.batch_fast_path.max(1)
-    }
-}
-
-impl Drop for PjrtBackend {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn owner_thread(
-    dir: PathBuf,
-    model: String,
-    rx: Receiver<Job>,
-    init_tx: SyncSender<Result<(usize, usize)>>,
-) {
-    let setup = (|| -> Result<(Runtime, CompiledModel, Option<CompiledModel>)> {
-        let rt = Runtime::new(&dir)?;
-        let b1 = rt.load_model(&model)?;
-        let bn = rt.load_model(&format!("{model}_b8")).ok();
-        Ok((rt, b1, bn))
-    })();
-    let (_rt, b1, bn) = match setup {
-        Ok(v) => {
-            let per = v.1.input_shape.iter().skip(1).product();
-            let bsz = v.2.as_ref().map(|m| m.info.batch).unwrap_or(1);
-            let _ = init_tx.send(Ok((per, bsz)));
-            v
-        }
-        Err(e) => {
-            let _ = init_tx.send(Err(e));
-            return;
-        }
-    };
-    let per: usize = b1.input_shape.iter().skip(1).product();
-
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Shutdown => break,
-            Job::Infer { inputs, reply } => {
-                let result = (|| -> Result<Vec<Vec<f32>>> {
-                    let mut out = Vec::with_capacity(inputs.len());
-                    let mut i = 0;
-                    while i < inputs.len() {
-                        if let Some(bnm) = &bn {
-                            let b = bnm.info.batch;
-                            if inputs.len() - i >= b {
-                                let mut flat = Vec::with_capacity(b * per);
-                                for x in &inputs[i..i + b] {
-                                    flat.extend_from_slice(x);
-                                }
-                                let y = bnm.run(&flat)?;
-                                let stride = y.len() / b;
-                                for j in 0..b {
-                                    out.push(y[j * stride..(j + 1) * stride].to_vec());
-                                }
-                                i += b;
-                                continue;
-                            }
-                        }
-                        out.push(b1.run(&inputs[i])?);
-                        i += 1;
+                for (t, (aname, ashape)) in tensors.iter().zip(&info.arg_shapes[1..]) {
+                    if &t.name != aname || &t.dims != ashape {
+                        bail!(
+                            "arg contract violation: swt {}{:?} vs artifact {}{:?}",
+                            t.name,
+                            t.dims,
+                            aname,
+                            ashape
+                        );
                     }
-                    Ok(out)
-                })();
-                let _ = reply.send(result);
+                    weights.push(tensor_to_literal(t)?);
+                }
+            } else {
+                input_shape = info
+                    .arg_shapes
+                    .first()
+                    .map(|a| a.1.clone())
+                    .unwrap_or_default();
             }
+            Ok(CompiledModel {
+                info,
+                exe,
+                weights,
+                input_shape,
+            })
+        }
+
+        /// One-shot single-threaded execution of an artifact (tests/tools):
+        /// all arguments supplied by the caller, no SWT binding.
+        pub fn run_raw(&self, key: &str, args: &[Tensor]) -> Result<Vec<f32>> {
+            let manifest = load_manifest(&self.dir)?;
+            let info = manifest
+                .into_iter()
+                .find(|a| a.key == key)
+                .with_context(|| format!("artifact {key:?} not in manifest"))?;
+            let hlo_path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let lits = args
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            let result = exe.execute::<&xla::Literal>(&refs)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&t.data);
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    impl CompiledModel {
+        /// Execute on a flat input of `prod(input_shape)` f32; returns the
+        /// flat first tuple element.
+        fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+            let expect: usize = self.input_shape.iter().product();
+            if input.len() != expect {
+                bail!(
+                    "input length {} != artifact shape {:?}",
+                    input.len(),
+                    self.input_shape
+                );
+            }
+            let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+            let x = xla::Literal::vec1(input).reshape(&dims)?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+            args.push(&x);
+            for w in &self.weights {
+                args.push(w);
+            }
+            let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True -> 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    enum Job {
+        Infer {
+            inputs: Vec<Vec<f32>>,
+            reply: SyncSender<Result<Vec<Vec<f32>>>>,
+        },
+        Shutdown,
+    }
+
+    /// [`InferenceBackend`] executing batches on a dedicated PJRT owner
+    /// thread.  Loads `<model>` (batch 1) and, when present, `<model>_b8`
+    /// as the dynamic batcher's fast path.
+    pub struct PjrtBackend {
+        tx: SyncSender<Job>,
+        input_len: usize,
+        batch_fast_path: usize,
+        handle: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl PjrtBackend {
+        pub fn load(artifacts_dir: impl Into<PathBuf>, model: &str) -> Result<Self> {
+            let dir: PathBuf = artifacts_dir.into();
+            let model = model.to_string();
+            let (tx, rx) = sync_channel::<Job>(64);
+            let (init_tx, init_rx) = sync_channel::<Result<(usize, usize)>>(1);
+            let handle = std::thread::Builder::new()
+                .name("pjrt-owner".into())
+                .spawn(move || owner_thread(dir, model, rx, init_tx))
+                .context("spawning pjrt owner thread")?;
+            let (input_len, batch_fast_path) = init_rx
+                .recv()
+                .context("pjrt owner thread died during init")??;
+            Ok(Self {
+                tx,
+                input_len,
+                batch_fast_path,
+                handle: Some(handle),
+            })
+        }
+
+        pub fn batch_size(&self) -> usize {
+            self.batch_fast_path.max(1)
+        }
+    }
+
+    impl Drop for PjrtBackend {
+        fn drop(&mut self) {
+            let _ = self.tx.send(Job::Shutdown);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    fn owner_thread(
+        dir: PathBuf,
+        model: String,
+        rx: Receiver<Job>,
+        init_tx: SyncSender<Result<(usize, usize)>>,
+    ) {
+        let setup = (|| -> Result<(Runtime, CompiledModel, Option<CompiledModel>)> {
+            let rt = Runtime::new(&dir)?;
+            let b1 = rt.load_model(&model)?;
+            let bn = rt.load_model(&format!("{model}_b8")).ok();
+            Ok((rt, b1, bn))
+        })();
+        let (_rt, b1, bn) = match setup {
+            Ok(v) => {
+                let per = v.1.input_shape.iter().skip(1).product();
+                let bsz = v.2.as_ref().map(|m| m.info.batch).unwrap_or(1);
+                let _ = init_tx.send(Ok((per, bsz)));
+                v
+            }
+            Err(e) => {
+                let _ = init_tx.send(Err(e));
+                return;
+            }
+        };
+        let per: usize = b1.input_shape.iter().skip(1).product();
+
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Shutdown => break,
+                Job::Infer { inputs, reply } => {
+                    let result = (|| -> Result<Vec<Vec<f32>>> {
+                        let mut out = Vec::with_capacity(inputs.len());
+                        let mut i = 0;
+                        while i < inputs.len() {
+                            if let Some(bnm) = &bn {
+                                let b = bnm.info.batch;
+                                if inputs.len() - i >= b {
+                                    let mut flat = Vec::with_capacity(b * per);
+                                    for x in &inputs[i..i + b] {
+                                        flat.extend_from_slice(x);
+                                    }
+                                    let y = bnm.run(&flat)?;
+                                    let stride = y.len() / b;
+                                    for j in 0..b {
+                                        out.push(y[j * stride..(j + 1) * stride].to_vec());
+                                    }
+                                    i += b;
+                                    continue;
+                                }
+                            }
+                            out.push(b1.run(&inputs[i])?);
+                            i += 1;
+                        }
+                        Ok(out)
+                    })();
+                    let _ = reply.send(result);
+                }
+            }
+        }
+    }
+
+    impl InferenceBackend for PjrtBackend {
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let (reply_tx, reply_rx) = sync_channel(1);
+            self.tx
+                .send(Job::Infer {
+                    inputs: inputs.to_vec(),
+                    reply: reply_tx,
+                })
+                .context("pjrt owner thread gone")?;
+            reply_rx.recv().context("pjrt owner thread dropped reply")?
+        }
+
+        fn input_len(&self) -> usize {
+            self.input_len
         }
     }
 }
 
-impl InferenceBackend for PjrtBackend {
-    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .send(Job::Infer {
-                inputs: inputs.to_vec(),
-                reply: reply_tx,
-            })
-            .context("pjrt owner thread gone")?;
-        reply_rx.recv().context("pjrt owner thread dropped reply")?
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{PjrtBackend, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    //! Offline stand-ins: same API surface, constructors fail loudly.
+
+    use std::path::PathBuf;
+
+    use crate::coordinator::serve::InferenceBackend;
+    use crate::tensor::Tensor;
+    use crate::util::err::{Error, Result};
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` \
+         feature (vendored `xla` crate); use plan::PlanBackend for functional serving";
+
+    /// Stub [`Runtime`]: construction always fails in offline builds.
+    pub struct Runtime {
+        _private: (),
     }
 
-    fn input_len(&self) -> usize {
-        self.input_len
+    impl Runtime {
+        pub fn new(_artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn run_raw(&self, _key: &str, _args: &[Tensor]) -> Result<Vec<f32>> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+    }
+
+    /// Stub [`PjrtBackend`]: loading always fails in offline builds.
+    pub struct PjrtBackend {
+        _private: (),
+    }
+
+    impl PjrtBackend {
+        pub fn load(_artifacts_dir: impl Into<PathBuf>, _model: &str) -> Result<Self> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn batch_size(&self) -> usize {
+            1
+        }
+
+        pub fn input_len(&self) -> usize {
+            0
+        }
+    }
+
+    impl InferenceBackend for PjrtBackend {
+        fn infer_batch(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        fn input_len(&self) -> usize {
+            0
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::{PjrtBackend, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -390,5 +478,13 @@ mod tests {
     #[test]
     fn manifest_missing_dir_errors() {
         assert!(load_manifest(Path::new("/nonexistent/dir")).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_fails_loudly() {
+        let e = PjrtBackend::load("/tmp", "mnist").err().unwrap();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+        assert!(Runtime::new("/tmp").is_err());
     }
 }

@@ -9,7 +9,6 @@
 
 use crate::arch::SonicConfig;
 use crate::model::ModelDesc;
-use crate::sim::engine::{simulate, InferenceStats};
 
 #[derive(Debug, Clone)]
 pub struct BatchStats {
@@ -25,22 +24,16 @@ pub struct BatchStats {
     pub fps_per_watt: f64,
 }
 
-/// Steady-state fraction of a single inference's latency that is pure
-/// pipeline time (rounds x II) rather than per-layer setup/fill — the part
-/// every request in a batch pays; the overhead is paid once per batch.
-fn pipeline_fraction(stats: &InferenceStats) -> f64 {
-    let overhead: f64 = stats.layers.iter().map(|l| l.overhead_s).sum();
-    (1.0 - overhead / stats.latency_s).clamp(0.0, 1.0)
-}
-
-/// Cost of serving a batch of `b` requests.
+/// Cost of serving a batch of `b` requests.  The pipeline/overhead split
+/// comes from the compiled [`crate::plan::ModelPlan`] — the same numbers
+/// the serving router charges, so the sweep and the served metrics agree
+/// by construction.
 pub fn batched(model: &ModelDesc, cfg: &SonicConfig, b: usize) -> BatchStats {
     assert!(b >= 1);
-    let one = simulate(model, cfg);
-    let pf = pipeline_fraction(&one);
+    let plan = crate::plan::cached(model, cfg);
     // first request pays everything; subsequent ones only the pipelined part
-    let latency = one.latency_s * (1.0 + pf * (b as f64 - 1.0));
-    let energy = one.energy_j * b as f64;
+    let latency = plan.batch_latency_s(b);
+    let energy = plan.batch_energy_j(b);
     let power = energy / latency;
     let fps = b as f64 / latency;
     BatchStats {
@@ -61,6 +54,7 @@ pub fn sweep(model: &ModelDesc, cfg: &SonicConfig, batches: &[usize]) -> Vec<Bat
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::engine::simulate;
 
     #[test]
     fn batch1_matches_single_inference() {

@@ -1,31 +1,20 @@
 //! The per-layer -> per-inference cost engine (DESIGN.md §2 "energy model").
 //!
-//! Dataflow model (§III.C + §IV.C):
+//! Since the `LayerPlan` refactor this module owns only the *reporting*
+//! types ([`LayerStats`], [`InferenceStats`], [`PowerBreakdown`]); the
+//! dataflow math itself — compression lengths, VDU pass decomposition,
+//! EO-vs-TO retune classification, timing and energy coefficients — lives
+//! in exactly one place, [`crate::plan::ModelPlan::compile`], which this
+//! engine, the batch model, and the serving router all consume.  See
+//! `src/plan/README.md` for the model itself (§III.C + §IV.C dataflow,
+//! pipelined II timing, power-gated energy).
 //!
-//! * **CONV layer**: im2col unrolls each output pixel's receptive field;
-//!   compression removes zero *kernel* entries, producing dense kernel
-//!   vectors of length `kvol * (1 - s_w)`.  Each output element needs
-//!   `ceil(L / n)` passes on a CONV VDU; residual IF-map sparsity `s_a`
-//!   power-gates lanes.
-//! * **FC layer**: compression removes zero *activations* and their weight
-//!   columns, producing dense activation vectors of length
-//!   `D * (1 - s_a)`.  Each output neuron needs `ceil(L / m)` passes on an
-//!   FC VDU; residual weight sparsity `s_w` power-gates lanes.
-//!
-//! Timing: passes pipeline at the VDU initiation interval (EO retuning,
-//! 20 ns); a layer's latency is `ceil(passes / #VDUs) * II + fill + setup`.
-//! Without clustering, a fraction of passes needs slow TO retunes because
-//! 16-bit weight swings exceed the EO range — clustering's second benefit
-//! beyond DAC power.
+//! [`simulate`] goes through the global plan cache: sweeping callers (DSE,
+//! ablations, benches) re-simulating the same `(model, config)` pair pay
+//! for compilation once.
 
-use crate::arch::{SonicConfig, Vdu};
-use crate::model::{Layer, LayerKind, ModelDesc};
-
-/// Fraction of passes that fall back to TO retuning without clustering
-/// (large arbitrary-precision weight swings exceeding the EO range).
-const TO_FRACTION_UNCLUSTERED: f64 = 0.02;
-/// Average MR transmission the clustered codebook maps to.
-const AVG_TRANSMISSION: f64 = 0.5;
+use crate::arch::SonicConfig;
+use crate::model::ModelDesc;
 
 #[derive(Debug, Clone, Default)]
 pub struct PowerBreakdown {
@@ -43,7 +32,7 @@ impl PowerBreakdown {
             + self.dram_j
     }
 
-    fn add(&mut self, other: &PowerBreakdown) {
+    pub fn add(&mut self, other: &PowerBreakdown) {
         self.dac_j += other.dac_j;
         self.vcsel_j += other.vcsel_j;
         self.mr_tuning_j += other.mr_tuning_j;
@@ -89,184 +78,10 @@ pub struct InferenceStats {
     pub breakdown: PowerBreakdown,
 }
 
-/// Ceil division for u64.
-fn ceil_div(a: u64, b: u64) -> u64 {
-    a.div_ceil(b)
-}
-
-/// Simulate one inference of `model` on `cfg`.
+/// Simulate one inference of `model` on `cfg` — a view over the compiled
+/// (and cached) [`crate::plan::ModelPlan`].
 pub fn simulate(model: &ModelDesc, cfg: &SonicConfig) -> InferenceStats {
-    let conv_vdu = cfg.conv_vdu();
-    let fc_vdu = cfg.fc_vdu();
-    let mut layers = Vec::with_capacity(model.layers.len());
-    let mut total_latency = 0.0;
-    let mut breakdown = PowerBreakdown::default();
-
-    for layer in &model.layers {
-        let st = simulate_layer(layer, cfg, &conv_vdu, &fc_vdu);
-        total_latency += st.latency_s;
-        breakdown.add(&st.breakdown);
-        layers.push(st);
-    }
-
-    // Electronic control: static power over the whole inference.
-    let control_j = cfg.control_power_w() * total_latency;
-    breakdown.control_j += control_j;
-
-    // Main-memory traffic: surviving weights + activations once per
-    // inference at their respective resolutions.
-    let dram_j = model.bits_per_inference() * cfg.devices.dram_energy_per_bit_j;
-    breakdown.dram_j += dram_j;
-
-    let energy: f64 = layers.iter().map(|l| l.energy_j).sum::<f64>() + control_j + dram_j;
-    let avg_power = energy / total_latency;
-    let fps = 1.0 / total_latency;
-    InferenceStats {
-        model: model.name.clone(),
-        latency_s: total_latency,
-        energy_j: energy,
-        avg_power_w: avg_power,
-        fps,
-        fps_per_watt: fps / avg_power,
-        epb_j: energy / model.bits_per_inference(),
-        layers,
-        breakdown,
-    }
-}
-
-fn simulate_layer(
-    layer: &Layer,
-    cfg: &SonicConfig,
-    conv_vdu: &Vdu,
-    fc_vdu: &Vdu,
-) -> LayerStats {
-    let clustered = cfg.weight_dac_bits <= 6;
-    let (vdu, n_vdus, vector_len, outputs, residual_sparsity) = match layer.kind {
-        LayerKind::Conv {
-            kernel,
-            in_ch,
-            out_ch,
-            in_hw,
-            ..
-        } => {
-            // Kernels decompose per 2-D slice (k*k weights per input
-            // channel); compression removes that slice's zero entries
-            // (Fig. 2), producing the <=5-entry dense kernel vectors the
-            // paper's n=5 finding rests on.  Per-slice partial sums
-            // accumulate electronically.
-            let kk = kernel * kernel;
-            let len = if cfg.compression {
-                ((kk as f64 * (1.0 - layer.weight_sparsity)).ceil() as usize).max(1)
-            } else {
-                kk
-            };
-            // one dot product per (pixel, out channel, input-channel slice)
-            let outputs = (in_hw * in_hw * out_ch * in_ch) as u64;
-            (
-                conv_vdu,
-                cfg.n_conv_vdus as u64,
-                len,
-                outputs,
-                layer.act_sparsity, // residual zeros in the IF patch
-            )
-        }
-        LayerKind::Fc {
-            in_dim, out_dim, ..
-        } => {
-            let len = if cfg.compression {
-                ((in_dim as f64 * (1.0 - layer.act_sparsity)).ceil() as usize).max(1)
-            } else {
-                in_dim
-            };
-            (
-                fc_vdu,
-                cfg.n_fc_vdus as u64,
-                len,
-                out_dim as u64,
-                layer.weight_sparsity, // residual zeros in the weight rows
-            )
-        }
-    };
-
-    let lanes = vdu.lanes as u64;
-    let passes_per_output = ceil_div(vector_len as u64, lanes);
-    let passes = outputs * passes_per_output;
-    let rounds = ceil_div(passes, n_vdus);
-
-    // Lane utilization: the last chunk of each output's vector is partial.
-    let lane_util = vector_len as f64 / (passes_per_output * lanes) as f64;
-    let active = (lanes as f64 * lane_util * (1.0 - residual_sparsity)).max(1.0);
-    let cost = vdu.pass_cost(active.round() as usize, AVG_TRANSMISSION);
-
-    // Initiation interval, stretched by occasional TO retunes when the
-    // weight codebook is unclustered.
-    let to_fraction = if clustered { 0.0 } else { TO_FRACTION_UNCLUSTERED };
-    let ii = cost.interval_s + to_fraction * cfg.devices.to_latency_s;
-
-    let setup = vdu.layer_setup_latency_s(!clustered);
-    let overhead = cost.fill_latency_s + setup;
-    let latency = rounds as f64 * ii + overhead;
-
-    // Energy: every pass pays its energy; VDUs of the *other* kind idle.
-    let pass_energy = cost.power_w * ii;
-    let busy_j = passes as f64 * pass_energy;
-    let other_idle_w = match layer.kind {
-        LayerKind::Conv { .. } => cfg.fc_vdu().idle_power_w() * cfg.n_fc_vdus as f64,
-        LayerKind::Fc { .. } => cfg.conv_vdu().idle_power_w() * cfg.n_conv_vdus as f64,
-    };
-    let idle_j = other_idle_w * latency;
-    let energy = busy_j + idle_j;
-
-    // Component attribution (approximate: split pass power by device class).
-    let gp = cfg.power_gating;
-    let a = active.round() as usize;
-    let dac_w = {
-        // dense + sparse DAC arrays (see Vdu::pass_cost)
-        let dense = match layer.kind {
-            LayerKind::Conv { .. } => cfg.devices.dac6_power_w,
-            LayerKind::Fc { .. } => cfg.devices.dac16_power_w,
-        };
-        let sparse = match layer.kind {
-            LayerKind::Conv { .. } => cfg.devices.dac16_power_w,
-            LayerKind::Fc { .. } => cfg.devices.dac6_power_w,
-        };
-        let dense = if cfg.weight_dac_bits > 6 && matches!(layer.kind, LayerKind::Conv { .. })
-        {
-            cfg.devices.dac16_power_w
-        } else {
-            dense
-        };
-        let n_active = if gp { a } else { vdu.lanes };
-        (dense + sparse) * n_active as f64
-    };
-    let vcsel_w = {
-        let n_active = if gp { a } else { vdu.lanes };
-        n_active as f64 * cfg.devices.vcsel_power_w
-    };
-    let readout_w = cfg.devices.pd_power_w + cfg.devices.adc_power_w;
-    let mr_w = (cost.power_w - dac_w - vcsel_w - readout_w).max(0.0);
-    let scale = passes as f64 * ii;
-    let breakdown = PowerBreakdown {
-        dac_j: dac_w * scale,
-        vcsel_j: vcsel_w * scale,
-        mr_tuning_j: mr_w * scale,
-        readout_j: readout_w * scale + idle_j,
-        control_j: 0.0,
-        dram_j: 0.0,
-    };
-
-    LayerStats {
-        name: layer.name.clone(),
-        is_conv: matches!(layer.kind, LayerKind::Conv { .. }),
-        vector_len,
-        passes,
-        rounds,
-        latency_s: latency,
-        overhead_s: overhead,
-        energy_j: energy,
-        avg_active_lanes: active,
-        breakdown,
-    }
+    crate::plan::cached(model, cfg).inference_stats()
 }
 
 #[cfg(test)]
@@ -380,5 +195,22 @@ mod tests {
         let fc = s.layers.iter().find(|l| l.name == "fc1792x272").unwrap();
         assert_eq!(fc.vector_len, 896);
         assert_eq!(fc.passes, 272 * 18);
+    }
+
+    #[test]
+    fn simulate_matches_plan_view_exactly() {
+        // The engine is a view over the plan: identical numbers, no drift.
+        let m = ModelDesc::builtin("cifar10").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let s = simulate(&m, &cfg);
+        let p = crate::plan::ModelPlan::compile(&m, &cfg);
+        assert_eq!(s.latency_s, p.latency_s);
+        assert_eq!(s.energy_j, p.energy_j);
+        for (ls, lp) in s.layers.iter().zip(&p.layers) {
+            assert_eq!(ls.passes, lp.passes);
+            assert_eq!(ls.rounds, lp.rounds);
+            assert_eq!(ls.latency_s, lp.latency_s);
+            assert_eq!(ls.energy_j, lp.energy_j);
+        }
     }
 }

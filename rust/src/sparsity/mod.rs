@@ -3,6 +3,21 @@
 
 pub mod stats;
 
+/// The single compression keep-predicate every path shares (FC activation
+/// compression, CONV kernel compression, [`SparseVec::from_dense_thresh`],
+/// the plan executor's gating masks): keep `x` iff it is non-zero beyond
+/// `eps`.  `eps == 0.0` is the exact contract — IEEE `!= 0.0`, so `-0.0`
+/// drops, denormals and `NaN` stay; `eps > 0.0` treats `|x| <= eps` as
+/// zero (`NaN` drops there, since no ordering with NaN holds).
+#[inline]
+pub fn keep_nonzero(x: f32, eps: f32) -> bool {
+    if eps == 0.0 {
+        x != 0.0
+    } else {
+        x.abs() > eps
+    }
+}
+
 /// A sparse vector in index+value form (the compressed representation the
 //  control unit ships to VDU local buffers).
 #[derive(Debug, Clone, PartialEq)]
@@ -16,11 +31,40 @@ pub struct SparseVec {
 }
 
 impl SparseVec {
+    /// Exact-zero compression contract: an element is dropped iff it
+    /// compares equal to `0.0` under IEEE `==`.  Consequences, pinned by
+    /// tests below:
+    ///
+    /// * `-0.0` is **dropped** (IEEE: `-0.0 == 0.0`), so a round trip
+    ///   canonicalizes it to `+0.0`;
+    /// * denormals are **kept** — there is no epsilon, however tiny the
+    ///   magnitude;
+    /// * `NaN` is kept (`NaN != 0.0`).
     pub fn from_dense(v: &[f32]) -> Self {
         let mut idx = Vec::new();
         let mut val = Vec::new();
         for (i, &x) in v.iter().enumerate() {
             if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        Self {
+            len: v.len(),
+            idx,
+            val,
+        }
+    }
+
+    /// Thresholded variant used by the compression path: elements failing
+    /// [`keep_nonzero`] are treated as zero.  `from_dense_thresh(v, 0.0)`
+    /// is exactly [`Self::from_dense`] (same predicate, including NaN).
+    pub fn from_dense_thresh(v: &[f32], eps: f32) -> Self {
+        assert!(eps >= 0.0, "negative threshold");
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if keep_nonzero(x, eps) {
                 idx.push(i as u32);
                 val.push(x);
             }
@@ -147,6 +191,47 @@ mod tests {
         let s = SparseVec::from_dense(&[]);
         assert_eq!(s.nnz(), 0);
         assert_eq!(s.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn from_dense_contract_negative_zero_dropped_denormals_kept() {
+        // The epsilon-free contract: IEEE `== 0.0` decides, nothing else.
+        let denormal = f32::from_bits(1); // smallest positive subnormal
+        assert!(denormal > 0.0 && denormal < f32::MIN_POSITIVE);
+        let v = vec![-0.0f32, denormal, f32::MIN_POSITIVE, 0.0, -1.0e-38];
+        let s = SparseVec::from_dense(&v);
+        // -0.0 and 0.0 dropped; both denormal-range values and the tiny
+        // normal kept.
+        assert_eq!(s.idx, vec![1, 2, 4]);
+        assert_eq!(s.val, vec![denormal, f32::MIN_POSITIVE, -1.0e-38]);
+        // round trip canonicalizes -0.0 to +0.0 but stays `==`-equal
+        let back = s.to_dense();
+        assert_eq!(back, v); // -0.0 == 0.0 under IEEE comparison
+        assert_eq!(back[0].to_bits(), 0.0f32.to_bits()); // ...canonicalized
+    }
+
+    #[test]
+    fn from_dense_thresh_zero_eps_matches_exact() {
+        let denormal = f32::from_bits(7);
+        let v = vec![0.5, -0.0, denormal, 0.0, -3.0, 1e-30];
+        let exact = SparseVec::from_dense(&v);
+        let thresh = SparseVec::from_dense_thresh(&v, 0.0);
+        assert_eq!(exact, thresh);
+    }
+
+    #[test]
+    fn from_dense_thresh_drops_below_threshold() {
+        let v = vec![0.5, 0.01, -0.5, -0.01, 0.011];
+        let s = SparseVec::from_dense_thresh(&v, 0.01);
+        assert_eq!(s.idx, vec![0, 2, 4]); // |x| <= eps treated as zero
+        assert_eq!(s.nnz(), 3);
+        assert!((s.sparsity() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative threshold")]
+    fn from_dense_thresh_rejects_negative_eps() {
+        SparseVec::from_dense_thresh(&[1.0], -0.5);
     }
 
     #[test]

@@ -15,25 +15,46 @@
 //! Tensor order follows the `model.flat_param_list` contract, i.e. the AOT
 //! artifact's argument order, so the runtime can feed literals positionally.
 
+use std::fmt;
 use std::fs;
 use std::path::Path;
 
-use thiserror::Error;
-
 use super::Tensor;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SwtError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic (not an SWT file)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("truncated file at byte {0}")]
     Truncated(usize),
-    #[error("unsupported dtype {0}")]
     BadDtype(u8),
-    #[error("tensor name is not valid utf-8")]
     BadName,
+}
+
+impl fmt::Display for SwtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SwtError::Io(e) => write!(f, "io: {e}"),
+            SwtError::BadMagic => write!(f, "bad magic (not an SWT file)"),
+            SwtError::Truncated(p) => write!(f, "truncated file at byte {p}"),
+            SwtError::BadDtype(d) => write!(f, "unsupported dtype {d}"),
+            SwtError::BadName => write!(f, "tensor name is not valid utf-8"),
+        }
+    }
+}
+
+impl std::error::Error for SwtError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SwtError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SwtError {
+    fn from(e: std::io::Error) -> Self {
+        SwtError::Io(e)
+    }
 }
 
 struct Cursor<'a> {

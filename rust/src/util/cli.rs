@@ -5,20 +5,32 @@
 //! typos fail loudly.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0} (expected one of: {1})")]
     UnknownOption(String, String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value {1:?} for --{0}: {2}")]
     BadValue(String, String, String),
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownOption(k, known) => {
+                write!(f, "unknown option --{k} (expected one of: {known})")
+            }
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue(k, v, why) => {
+                write!(f, "invalid value {v:?} for --{k}: {why}")
+            }
+            CliError::MissingRequired(k) => write!(f, "missing required option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative option spec: name, takes-value, help.
 pub struct OptSpec {

@@ -5,9 +5,8 @@
 //! held as `f64`; integer accessors check exactness.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::fmt::Write as _;
-
-use thiserror::Error;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -19,23 +18,36 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape \\{0} at byte {1}")]
     BadEscape(char, usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("missing key {0:?}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(p) => write!(f, "unexpected end of input at byte {p}"),
+            JsonError::Unexpected(c, p) => {
+                write!(f, "unexpected character {c:?} at byte {p}")
+            }
+            JsonError::BadNumber(p) => write!(f, "invalid number at byte {p}"),
+            JsonError::BadEscape(c, p) => write!(f, "invalid escape \\{c} at byte {p}"),
+            JsonError::Trailing(p) => write!(f, "trailing garbage at byte {p}"),
+            JsonError::Type { expected, path } => {
+                write!(f, "type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(k) => write!(f, "missing key {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

@@ -1,8 +1,10 @@
 //! Offline substrates for crates unavailable in this environment
-//! (DESIGN.md §2): JSON, RNG, CLI parsing, bench harness, property testing.
+//! (DESIGN.md §2): JSON, RNG, CLI parsing, bench harness, property testing,
+//! and the `anyhow`-style error substrate ([`err`]).
 
 pub mod bench;
 pub mod cli;
+pub mod err;
 pub mod json;
 pub mod prop;
 pub mod rng;

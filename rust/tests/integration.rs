@@ -11,10 +11,13 @@ use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
 use sonic::coordinator::compress::{compress_fc, fc_product};
 use sonic::coordinator::convflow::{conv2d_compressed, CompressedKernel};
-use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
-use sonic::coordinator::serve::{NullBackend, Router, ServeConfig, ServeMetrics};
+use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
+use sonic::coordinator::serve::{
+    InferenceBackend, NullBackend, Router, ServeConfig, ServeMetrics,
+};
 use sonic::model::{LayerKind, ModelDesc};
-use sonic::sim::{ablation, dse, simulate};
+use sonic::plan::{cached, ModelPlan, PlanBackend, PlanExecutor};
+use sonic::sim::{ablation, batch, dse, simulate};
 use sonic::sparsity::ColMatrix;
 use sonic::tensor::swt;
 use sonic::util::rng::Rng;
@@ -204,6 +207,131 @@ fn ablation_all_levers_contribute_on_all_models() {
                 "{name}/{}: ablation improved EPB?",
                 r.variant
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerPlan IR: one compiled source feeding sim, scheduler, and serving.
+
+#[test]
+fn plan_engine_and_scheduler_derive_identical_pass_counts() {
+    // The acceptance bar for the refactor: sim, plan, and the data-free
+    // scheduler views agree exactly on the dataflow decomposition.
+    let cfg = SonicConfig::paper_best();
+    for name in ["mnist", "cifar10", "svhn"] {
+        let m = ModelDesc::load_or_builtin(name);
+        let plan = ModelPlan::compile(&m, &cfg);
+        let stats = simulate(&m, &cfg);
+        for (lp, ls) in plan.layers.iter().zip(&stats.layers) {
+            assert_eq!(lp.passes, ls.passes, "{name}/{}", lp.name);
+            assert_eq!(lp.rounds, ls.rounds, "{name}/{}", lp.name);
+            assert_eq!(lp.vector_len, ls.vector_len, "{name}/{}", lp.name);
+            if !lp.is_conv {
+                let sched = schedule_layer(lp);
+                assert_eq!(sched.passes.len() as u64, lp.passes, "{name}/{}", lp.name);
+                assert_eq!(sched.n_rounds() as u64, lp.rounds, "{name}/{}", lp.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn served_photonic_accounting_matches_plan_and_batch_model_exactly() {
+    let model = ModelDesc::builtin("mnist").unwrap();
+    let cfg = SonicConfig::paper_best();
+    let plan = cached(&model, &cfg);
+    let backend = Arc::new(NullBackend {
+        input_len: 784,
+        n_classes: 10,
+    });
+    let router = Router::new(
+        backend,
+        model.clone(),
+        cfg.clone(),
+        ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 16,
+        },
+    );
+    for _ in 0..4 {
+        router.submit(vec![1.0; 784]);
+    }
+    let mut m = ServeMetrics::default();
+    let done = router.drain_batch(&mut m).unwrap();
+    assert_eq!(done.len(), 4);
+
+    // served == plan == sim::batch, bit-for-bit: no drift possible.
+    assert_eq!(m.photonic_time_s, plan.batch_latency_s(4));
+    assert_eq!(m.photonic_energy_j, plan.batch_energy_j(4));
+    let bs = batch::batched(&model, &cfg, 4);
+    assert_eq!(bs.latency_s, plan.batch_latency_s(4));
+    assert_eq!(bs.energy_j, plan.batch_energy_j(4));
+}
+
+#[test]
+fn plan_cache_shared_between_router_and_simulator() {
+    let model = ModelDesc::builtin("svhn").unwrap();
+    let cfg = SonicConfig::paper_best();
+    let direct = cached(&model, &cfg);
+    let backend = Arc::new(NullBackend {
+        input_len: model.input_len(),
+        n_classes: 10,
+    });
+    let router = Router::new(backend, model, cfg, ServeConfig::default());
+    assert!(Arc::ptr_eq(router.plan(), &direct));
+}
+
+#[test]
+fn router_serves_through_plan_backend() {
+    // Functional serving with zero PJRT: batched sparse kernels over the
+    // compiled plan layout.
+    let desc = ModelDesc::builtin("mnist").unwrap();
+    let backend = Arc::new(PlanBackend::synthetic(&desc, 11));
+    let input_len = backend.input_len();
+    assert_eq!(input_len, desc.input_len());
+    let n_classes = desc.n_classes;
+    let router = Router::new(
+        backend,
+        desc,
+        SonicConfig::paper_best(),
+        ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 64,
+        },
+    );
+    let mut rng = Rng::new(13);
+    for _ in 0..8 {
+        router.submit(rng.normal_vec(input_len));
+    }
+    let mut metrics = ServeMetrics::default();
+    let mut done = 0;
+    while done < 8 {
+        let completions = router.drain_batch(&mut metrics).unwrap();
+        for c in &completions {
+            assert_eq!(c.logits.len(), n_classes);
+            assert!(c.logits.iter().all(|v| v.is_finite()));
+        }
+        done += completions.len();
+    }
+    assert_eq!(metrics.completed, 8);
+    assert!(metrics.photonic_fps() > 0.0);
+}
+
+#[test]
+fn plan_executor_batch_equals_one_by_one() {
+    // Batched execution must be a pure reordering of per-request work.
+    let desc = ModelDesc::builtin("svhn").unwrap();
+    let ex = PlanExecutor::synthetic(&desc, 17);
+    let mut rng = Rng::new(18);
+    let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(ex.input_len())).collect();
+    let batched = ex.forward_batch(&inputs).unwrap();
+    for (x, want) in inputs.iter().zip(&batched) {
+        let single = ex.forward_batch(std::slice::from_ref(x)).unwrap();
+        for (a, b) in single[0].iter().zip(want) {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "{a} vs {b}");
         }
     }
 }

@@ -7,6 +7,8 @@ use sonic::coordinator::compress::{compress_fc, fc_product};
 use sonic::coordinator::convflow::{compressed_dot, extract_patch, CompressedKernel};
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc};
 use sonic::sparsity::{ColMatrix, SparseVec};
+use sonic::tensor::swt::{parse_swt, write_swt};
+use sonic::tensor::Tensor;
 use sonic::util::prop::{check, Config, Gen};
 
 fn dense_matvec(rows: usize, cols: usize, w_rm: &[f32], a: &[f32]) -> Vec<f32> {
@@ -222,6 +224,88 @@ fn prop_sparse_vec_roundtrip() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_swt_pack_write_read_write_byte_identical() {
+    // The export.py contract: any pack survives write -> read -> write with
+    // byte-identical output.  Every case exercises a 0-dim (scalar) tensor
+    // and an empty tensor (a zero-sized dim) alongside random-rank ones.
+    check("swt byte-identical roundtrip", Config::default(), |g: &mut Gen| {
+        let mut tensors = vec![
+            Tensor::new("scalar", vec![], vec![g.rng.f32()]),
+            Tensor::new("empty", vec![3, 0], vec![]),
+            Tensor::new("empty0", vec![0], vec![]),
+        ];
+        let extra = g.dim(0, 5);
+        for t in 0..extra {
+            let rank = g.rng.range(0, 4);
+            let mut dims = Vec::new();
+            for _ in 0..rank {
+                dims.push(if g.rng.bool(0.1) { 0 } else { g.dim(1, 6) });
+            }
+            let count: usize = dims.iter().product();
+            tensors.push(Tensor::new(
+                format!("t{t}.w"),
+                dims,
+                g.sparse_vec(count, 0.3),
+            ));
+        }
+        let bytes1 = write_swt(&tensors);
+        let back = match parse_swt(&bytes1) {
+            Ok(b) => b,
+            Err(e) => return Err(format!("parse failed: {e}")),
+        };
+        if back != tensors {
+            return Err("tensors changed across roundtrip".into());
+        }
+        let bytes2 = write_swt(&back);
+        if bytes2 != bytes1 {
+            return Err(format!(
+                "bytes differ: {} vs {}",
+                bytes1.len(),
+                bytes2.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_batch_latency_monotone_and_bounded() {
+    use sonic::model::ModelDesc;
+    use sonic::plan::cached;
+    check(
+        "plan batch math",
+        Config {
+            cases: 24,
+            ..Default::default()
+        },
+        |g| {
+            let name = ["mnist", "cifar10", "svhn"][g.rng.range(0, 3)];
+            let mut m = ModelDesc::builtin(name).unwrap();
+            let ws = g.f64(0.0, 0.9);
+            for l in &mut m.layers {
+                l.weight_sparsity = ws;
+            }
+            let plan = cached(&m, &SonicConfig::paper_best());
+            let mut prev = 0.0;
+            for b in [1usize, 2, 4, 8, 17, 32] {
+                let lat = plan.batch_latency_s(b);
+                if lat < prev {
+                    return Err(format!("batch {b} latency decreased"));
+                }
+                if lat < plan.latency_s - 1e-15 || lat > plan.latency_s * b as f64 + 1e-15 {
+                    return Err(format!("batch {b} latency out of bounds"));
+                }
+                prev = lat;
+            }
+            if (plan.batch_latency_s(1) - plan.latency_s).abs() > 1e-15 {
+                return Err("batch 1 != single inference".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -17,6 +17,10 @@ use sonic::tensor::Tensor;
 use sonic::util::rng::Rng;
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("built without the `pjrt` feature; skipping PJRT test");
+        return None;
+    }
     let dir = sonic::artifacts_dir();
     if dir.join("manifest.json").is_file() {
         Some(dir)
