@@ -1,13 +1,13 @@
 //! Quickstart: simulate one inference of each Table-1 model on the SONIC
-//! accelerator and print the headline metrics, then (when `make artifacts`
-//! has run) push a real input through the AOT-compiled PJRT artifact.
+//! accelerator and print the headline metrics, then push a few real
+//! inputs through the serving engine (PJRT artifacts when `make
+//! artifacts` has run, compiled-plan execution otherwise).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use sonic::arch::SonicConfig;
-use sonic::coordinator::serve::InferenceBackend;
 use sonic::model::ModelDesc;
-use sonic::runtime::PjrtBackend;
+use sonic::serve::{BackendChoice, Engine};
 use sonic::sim::simulate;
 use sonic::util::err::Result;
 use sonic::util::rng::Rng;
@@ -30,26 +30,26 @@ fn main() -> Result<()> {
         );
     }
 
-    // 2) Functional inference through the PJRT runtime (AOT artifacts).
-    let art = sonic::artifacts_dir();
-    if !art.join("manifest.json").is_file() {
-        println!("\n(no artifacts yet — run `make artifacts` to enable the PJRT demo)");
-        return Ok(());
-    }
-    println!("\nPJRT functional check (mnist):");
-    let backend = PjrtBackend::load(&art, "mnist")?;
+    // 2) Functional inference through the serving engine.  `Auto` picks the
+    //    AOT-compiled PJRT artifacts when they load and falls back to the
+    //    compiled-plan executor, so this section runs in every build.
+    let engine = Engine::builder()
+        .model("mnist", BackendChoice::Auto)
+        .build()?;
+    println!(
+        "\nfunctional check (mnist, {} backend):",
+        engine.backend_kind("mnist")?
+    );
+    let per = engine.input_len("mnist")?;
     let mut rng = Rng::new(1);
-    let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(backend.input_len())).collect();
-    let outs = backend.infer_batch(&inputs)?;
-    for (i, o) in outs.iter().enumerate() {
-        let cls = o
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
-        println!("  input {i} -> class {cls} ({} logits)", o.len());
+    let tickets: Vec<_> = (0..3)
+        .map(|_| engine.submit("mnist", rng.normal_vec(per)))
+        .collect::<Result<_>>()?;
+    for (i, t) in tickets.into_iter().enumerate() {
+        let c = t.wait()?;
+        println!("  input {i} -> class {} ({} logits)", c.argmax, c.logits.len());
     }
+    engine.shutdown();
     println!("done — Python never ran on this path.");
     Ok(())
 }

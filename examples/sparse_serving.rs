@@ -1,23 +1,18 @@
-//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload): load the
-//! AOT-compiled model trained by `make artifacts`, serve a Poisson stream
-//! of batched requests through the dynamic-batching router, and report
-//! wall-clock latency/throughput alongside the photonic accelerator's
-//! simulated FPS / FPS/W / EPB.
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E workload): build a
+//! `sonic::serve::Engine`, let it resolve the backend (AOT-compiled PJRT
+//! artifacts when present, compiled-plan execution otherwise), serve a
+//! Poisson stream of requests, and report wall-clock p50/p95/p99
+//! latency/throughput alongside the photonic accelerator's simulated
+//! FPS / FPS/W / EPB.
 //!
 //! Run: `cargo run --release --example sparse_serving -- [model] [n_requests]`
 //! (defaults: mnist, 96 requests at ~400 req/s)
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use sonic::arch::SonicConfig;
-use sonic::coordinator::serve::{InferenceBackend, Router, ServeConfig, ServeMetrics};
-use sonic::model::ModelDesc;
-use sonic::runtime::PjrtBackend;
-use sonic::plan::PlanBackend;
+use sonic::serve::workload::{print_report, PoissonWorkload};
+use sonic::serve::{BackendChoice, Engine, ServeConfig};
 use sonic::util::err::Result;
-use sonic::util::rng::Rng;
-use sonic::util::si;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,90 +20,65 @@ fn main() -> Result<()> {
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
     let rate = 400.0; // req/s Poisson arrivals
 
-    let desc = ModelDesc::load_or_builtin(&model);
+    // One engine, two models: the requested one plus a sidecar, to show a
+    // single engine serving heterogeneous traffic.  `Auto` is the library's
+    // backend policy — PJRT artifacts when they load, compiled-plan
+    // execution (batched sparse kernels over synthetic weights honouring
+    // the descriptor's sparsity) otherwise — so this demo always runs.
+    let sidecar = if model == "svhn" { "mnist" } else { "svhn" };
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 8,
+            // window sized to the ~2.5ms mean inter-arrival at 400 req/s
+            // so the dynamic batcher actually forms multi-request batches
+            batch_window: Duration::from_millis(3),
+            queue_cap: 1024,
+        })
+        .model(&model, BackendChoice::Auto)
+        .model(sidecar, BackendChoice::Auto)
+        .build()?;
 
-    // Prefer the AOT-compiled PJRT artifacts; fall back to executing the
-    // compiled plan directly (batched sparse kernels over synthetic weights
-    // honouring the descriptor's sparsity) so the serving demo always runs.
-    let art = sonic::artifacts_dir();
-    let backend: Arc<dyn InferenceBackend> = if art.join("manifest.json").is_file() {
-        match PjrtBackend::load(&art, &model) {
-            Ok(b) => Arc::new(b),
-            Err(e) => {
-                println!("PJRT unavailable ({e}); falling back to plan execution");
-                Arc::new(PlanBackend::synthetic(&desc, 7))
-            }
-        }
-    } else {
-        println!("artifacts missing — serving through the compiled plan instead");
-        Arc::new(PlanBackend::synthetic(&desc, 7))
-    };
+    let desc = engine.model_desc(&model)?;
     println!(
-        "serving `{model}` ({} layers, {} params, {:.1}% sparsity) — {n_requests} requests @ ~{rate}/s",
+        "serving `{model}` ({} layers, {} params, {:.1}% sparsity) via {} backend — \
+         {n_requests} requests @ ~{rate}/s (+ {} on model `{sidecar}`)",
         desc.layers.len(),
         desc.total_params,
         (1.0 - desc.surviving_params as f64 / desc.total_params as f64) * 100.0,
+        engine.backend_kind(&model)?,
+        n_requests / 4,
     );
 
-    let router = Router::new(
-        backend.clone(),
-        desc,
-        SonicConfig::paper_best(),
-        ServeConfig {
-            max_batch: 8,
-            batch_window: Duration::from_millis(3),
-            queue_cap: 1024,
-        },
-    );
-
-    // Producer: Poisson arrivals of synthetic frames.
-    let producer = {
-        let router = Arc::clone(&router);
-        let per = backend.input_len();
-        std::thread::spawn(move || {
-            let mut rng = Rng::new(7);
-            for _ in 0..n_requests {
-                std::thread::sleep(Duration::from_secs_f64(rng.exp(rate).min(0.05)));
-                router.submit(rng.normal_vec(per));
-            }
-        })
+    // Sidecar traffic from a second submitter thread: the engine routes by
+    // model name, so the two streams batch independently.
+    let main_wl = PoissonWorkload {
+        requests: n_requests,
+        rate,
+        seed: 7,
     };
-
-    // Consumer: drain batches until all requests completed.
-    let mut metrics = ServeMetrics::default();
-    let t0 = Instant::now();
+    let side_wl = PoissonWorkload {
+        requests: n_requests / 4,
+        rate: rate / 4.0,
+        seed: 11,
+    };
     let mut class_histogram = [0usize; 10];
-    let mut done = 0;
-    while done < n_requests {
-        let completions = router.drain_batch(&mut metrics)?;
+    std::thread::scope(|s| -> Result<()> {
+        let side = s.spawn(|| side_wl.drive(&engine, sidecar));
+        let completions = main_wl.drive(&engine, &model)?;
         for c in &completions {
             class_histogram[c.argmax.min(9)] += 1;
         }
-        done += completions.len();
-    }
-    metrics.wall_elapsed = t0.elapsed();
-    producer.join().unwrap();
+        side.join().expect("sidecar thread panicked")?;
+        Ok(())
+    })?;
+    engine.shutdown();
 
-    println!("\n== wall-clock (PJRT on CPU) ==");
-    println!("  completed        {}", metrics.completed);
-    println!(
-        "  batches          {} (mean size {:.2})",
-        metrics.batches,
-        metrics.mean_batch()
-    );
-    println!("  throughput       {:.1} req/s", metrics.wall_fps());
-    println!("  mean latency     {:?}", metrics.mean_wall_latency());
-    println!("  p100 latency     {:?}", metrics.max_wall);
+    let metrics = engine.metrics();
+    println!();
+    print_report(metrics.model(&model).expect("main model registered"));
+    println!();
+    print_report(metrics.model(sidecar).expect("sidecar model registered"));
 
-    println!("\n== photonic accelerator (simulated) ==");
-    println!("  FPS              {:.0}", metrics.photonic_fps());
-    println!("  FPS/W            {:.1}", metrics.photonic_fps_per_watt());
-    println!("  energy           {}", si(metrics.photonic_energy_j, "J"));
-    println!(
-        "  energy/request   {}",
-        si(metrics.photonic_energy_j / metrics.completed as f64, "J")
-    );
-
-    println!("\nclass histogram: {class_histogram:?}");
+    println!("\nclass histogram ({model}): {class_histogram:?}");
     Ok(())
 }

@@ -9,8 +9,14 @@
 //! (gathering kept weight columns into a fresh matrix — what the serving
 //! loop did before the `LayerPlan` IR); the plan-cached path executes the
 //! precompiled `FcExec` layout with the batched sparse matvec kernel,
-//! streaming the weights once per batch.  Results are also written to
-//! `BENCH_hotpath.json` for the perf trajectory (CI uploads it).
+//! streaming the weights once per batch.  A second serving comparison
+//! tracks the `serve::Engine` facade's cost over the raw backend call
+//! (ticketing + queue hand-off + dynamic batching).  Results are also
+//! written to `BENCH_hotpath.json` for the perf trajectory (CI uploads
+//! it).
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use sonic::arch::SonicConfig;
 use sonic::coordinator::compress::{compress_fc, fc_product};
@@ -19,7 +25,8 @@ use sonic::coordinator::convflow::{
 };
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
-use sonic::plan::{cached, FcExec, ModelPlan};
+use sonic::plan::{cached, FcExec, ModelPlan, PlanBackend};
+use sonic::serve::{BackendChoice, Engine, InferenceBackend, ServeConfig};
 use sonic::sim::simulate;
 use sonic::sparsity::ColMatrix;
 use sonic::util::bench::{black_box, report, Bencher, Stats};
@@ -143,6 +150,52 @@ fn main() {
         if speedup >= 2.0 { "" } else { "  ** BELOW TARGET **" }
     );
 
+    // --- engine facade overhead vs the raw backend ----------------------
+    //
+    // The `serve::Engine` adds per-request machinery on top of the bare
+    // backend call: ticket slot allocation, queue hand-off to a worker
+    // thread, dynamic-batch formation, and completion notification.  Track
+    // that cost from day one: one iteration pushes 8 requests through the
+    // engine (submit + wait) vs one direct `infer_batch` of the same 8
+    // inputs on the identical backend (the raw path the Router used to
+    // expose to callers).
+    println!();
+    let mnist = ModelDesc::load_or_builtin("mnist");
+    let backend: Arc<PlanBackend> = Arc::new(PlanBackend::synthetic(&mnist, 7));
+    let serve_batch: Vec<Vec<f32>> = {
+        let mut rng = Rng::new(31);
+        (0..8).map(|_| rng.normal_vec(backend.input_len())).collect()
+    };
+    let raw = run(&mut results, "serve batch=8 (raw backend infer_batch)", || {
+        black_box(backend.infer_batch(&serve_batch).unwrap());
+    });
+    let batch_window = Duration::from_micros(50);
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 8,
+            batch_window,
+            queue_cap: 1024,
+        })
+        .model_desc(mnist.clone(), BackendChoice::Custom(backend.clone()))
+        .build()
+        .expect("engine build");
+    let eng = run(&mut results, "serve batch=8 (engine submit+wait)", || {
+        let tickets: Vec<_> = serve_batch
+            .iter()
+            .map(|x| engine.submit("mnist", x.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    engine.shutdown();
+    let engine_overhead = eng.mean_ns / raw.mean_ns;
+    println!(
+        "\nengine facade cost on an 8-request burst: {engine_overhead:.2}x the raw \
+         backend call (includes the {}us batch window)",
+        batch_window.as_micros()
+    );
+
     // --- analytic simulator (the figure generator's inner loop) ---
     println!();
     for name in ["mnist", "cifar10", "stl10", "svhn"] {
@@ -156,6 +209,7 @@ fn main() {
     let json = obj(vec![
         ("bench", s("hotpath")),
         ("plan_cached_fc_speedup", num(speedup)),
+        ("engine_overhead_vs_raw", num(engine_overhead)),
         ("batch", num(BATCH as f64)),
         (
             "results",

@@ -8,14 +8,14 @@
 //!   chunks and their assignment onto the `(N, K)` VDU array, with
 //!   power-gating accounting per chunk.
 //! * [`exec`] — thread-pool + channel substrate (tokio substitute).
-//! * [`serve`] — the request router / dynamic batcher serving inference
-//!   through the PJRT runtime (or [`crate::plan::PlanBackend`]) while the
-//!   compile-once [`crate::plan::ModelPlan`] tracks photonic
-//!   latency/energy.
+//!
+//! Serving (the request router / dynamic batcher) lives in
+//! [`crate::serve`]: the public [`crate::serve::Engine`] facade over the
+//! internal router, with the compile-once [`crate::plan::ModelPlan`]
+//! tracking photonic latency/energy.
 
 pub mod compress;
 pub mod convflow;
 pub mod exec;
 pub mod memory;
 pub mod schedule;
-pub mod serve;

@@ -11,14 +11,25 @@
 //!   gating, DAC/ADC arrays, photodetectors, and the vector-dot-product
 //!   unit (VDU) built out of them.
 //! * [`sparsity`] / [`coordinator`] — the paper's contribution: dataflow
-//!   compression for FC and CONV layers (Figs. 1–2), vector decomposition
-//!   onto the `(n, m, N, K)` VDU array, and a request router + dynamic
-//!   batcher serving inference through the PJRT runtime.
+//!   compression for FC and CONV layers (Figs. 1–2) and vector
+//!   decomposition onto the `(n, m, N, K)` VDU array.
+//! * [`serve`] — the public serving API (see `src/serve/README.md`).  One
+//!   [`serve::Engine`], built via `Engine::builder()`, registers any
+//!   number of models, resolves each model's functional backend
+//!   ([`serve::BackendChoice`]: PJRT artifacts, compiled-plan execution,
+//!   or auto-fallback between them), and drains its dynamic batcher on
+//!   background worker threads.  `submit(model, input)` returns a
+//!   [`serve::Ticket`] completion handle (`wait()`/`try_wait()`); the
+//!   engine owns the metrics lifecycle, reporting per-model wall-latency
+//!   p50/p95/p99 next to the photonic FPS / FPS/W / EPB charged against
+//!   the compiled plan.  The request router + dynamic batcher of earlier
+//!   revisions (`Router`/`drain_batch`) is a `pub(crate)` internal of
+//!   this module — the engine is the only way to serve.
 //! * [`plan`] — the compile-once `LayerPlan`/`ModelPlan` IR (see
 //!   `src/plan/README.md`): every `(model, SonicConfig)` pair is compiled
 //!   exactly once into per-layer VDU decompositions, EO-vs-TO retune
 //!   classification, and timing/energy coefficients, cached globally, and
-//!   consumed by the simulator, the batch model, and the serving router —
+//!   consumed by the simulator, the batch model, and the serving engine —
 //!   so simulated and served numbers derive from one source.  Also hosts
 //!   the functional plan executor (batched sparse kernels) serving without
 //!   PJRT.
@@ -46,6 +57,7 @@ pub mod devices;
 pub mod model;
 pub mod plan;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sparsity;
 pub mod tensor;

@@ -1,15 +1,14 @@
 //! `sonic` — CLI entrypoint for the SONIC accelerator reproduction.
 //!
 //! Subcommands:
-//!   infer    — run functional inference through the PJRT artifacts
-//!   serve    — serve a synthetic request stream through the router
+//!   infer    — run functional inference through the serve engine
+//!   serve    — serve a synthetic request stream through the serve engine
 //!   compare  — Figs. 8–10: SONIC vs all baseline platforms
 //!   dse      — §V.B (n, m, N, K) design-space exploration
 //!   ablation — co-design lever ablation study
 //!   report   — per-layer simulator breakdown for one model
 //!   table1/table2/table3 — paper table reconstructions
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use sonic::bail;
@@ -17,9 +16,9 @@ use sonic::util::err::Result;
 
 use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
-use sonic::coordinator::serve::{Router, ServeConfig, ServeMetrics};
 use sonic::model::ModelDesc;
-use sonic::runtime::PjrtBackend;
+use sonic::serve::workload::{print_report, PoissonWorkload};
+use sonic::serve::{BackendChoice, Engine, ServeConfig};
 use sonic::sim::{ablation, simulate};
 use sonic::sim::dse;
 use sonic::util::bench::Table;
@@ -75,8 +74,9 @@ fn print_usage() {
 
 USAGE: sonic <subcommand> [options]
 
-  infer     --model <m> [--count N]     functional inference via PJRT artifacts
-  serve     --model <m> [--requests N] [--batch B] [--rate R]
+  infer     --model <m> [--count N] [--backend auto|pjrt|plan]
+                                        functional inference via the serve engine
+  serve     --model <m> [--requests N] [--batch B] [--rate R] [--backend auto|pjrt|plan]
                                         serve a synthetic request stream
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
@@ -100,6 +100,7 @@ fn specs_model() -> Vec<OptSpec> {
         OptSpec { name: "batch", takes_value: true, help: "max dynamic batch" },
         OptSpec { name: "rate", takes_value: true, help: "request rate (req/s)" },
         OptSpec { name: "seed", takes_value: true, help: "workload seed" },
+        OptSpec { name: "backend", takes_value: true, help: "backend: auto|pjrt|plan" },
         OptSpec { name: "no-gating", takes_value: false, help: "disable VCSEL power gating" },
         OptSpec { name: "no-compression", takes_value: false, help: "disable dataflow compression" },
         OptSpec { name: "no-clustering", takes_value: false, help: "disable weight clustering" },
@@ -125,25 +126,36 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist").to_string();
     let count: usize = a.parse_num("count", 4)?;
+    let backend = BackendChoice::parse(a.get_or("backend", "auto"))?;
 
-    let backend = PjrtBackend::load(sonic::artifacts_dir(), &model)?;
-    let desc = ModelDesc::load_or_builtin(&model);
-    let per = sonic::coordinator::serve::InferenceBackend::input_len(&backend);
-    println!("model {model}: input {per} f32, {} layers", desc.layers.len());
+    let engine = Engine::builder()
+        .arch(arch_from(&a))
+        .model(&model, backend)
+        .build()?;
+    let per = engine.input_len(&model)?;
+    let desc = engine.model_desc(&model)?.clone();
+    println!(
+        "model {model}: input {per} f32, {} layers ({} backend)",
+        desc.layers.len(),
+        engine.backend_kind(&model)?,
+    );
 
     let mut rng = Rng::new(a.parse_num("seed", 7u64)?);
-    let inputs: Vec<Vec<f32>> = (0..count).map(|_| rng.normal_vec(per)).collect();
     let t0 = std::time::Instant::now();
-    let outs = sonic::coordinator::serve::InferenceBackend::infer_batch(&backend, &inputs)?;
+    let tickets: Vec<_> = (0..count)
+        .map(|_| engine.submit(&model, rng.normal_vec(per)))
+        .collect::<Result<_>>()?;
+    let completions: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait())
+        .collect::<Result<_>>()?;
     let dt = t0.elapsed();
-    for (i, o) in outs.iter().enumerate() {
-        let arg = o
-            .iter()
-            .enumerate()
-            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap_or(0);
-        println!("  req {i}: class {arg}  (logit {:.3})", o[arg]);
+    engine.shutdown();
+    for (i, c) in completions.iter().enumerate() {
+        println!(
+            "  req {i}: class {}  (logit {:.3})",
+            c.argmax, c.logits[c.argmax]
+        );
     }
     println!(
         "{count} inferences in {:?}  ({:.1} req/s wall)",
@@ -169,56 +181,34 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let max_batch: usize = a.parse_num("batch", 8)?;
     let rate: f64 = a.parse_num("rate", 500.0)?;
     let seed: u64 = a.parse_num("seed", 42)?;
+    let backend = BackendChoice::parse(a.get_or("backend", "auto"))?;
 
-    let backend = Arc::new(PjrtBackend::load(sonic::artifacts_dir(), &model)?);
-    let desc = ModelDesc::load_or_builtin(&model);
-    let router = Router::new(
-        backend.clone(),
-        desc,
-        arch_from(&a),
-        ServeConfig {
+    let engine = Engine::builder()
+        .arch(arch_from(&a))
+        .serve_config(ServeConfig {
             max_batch,
             batch_window: Duration::from_millis(2),
             queue_cap: 4096,
-        },
-    );
-
-    println!("serving {n_requests} requests @ ~{rate} req/s, max batch {max_batch}");
-    let per = sonic::coordinator::serve::InferenceBackend::input_len(backend.as_ref());
-    let producer = {
-        let router = Arc::clone(&router);
-        std::thread::spawn(move || {
-            let mut rng = Rng::new(seed);
-            for _ in 0..n_requests {
-                let dt = rng.exp(rate);
-                std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
-                router.submit(rng.normal_vec(per));
-            }
         })
-    };
+        .model(&model, backend)
+        .build()?;
 
-    let mut metrics = ServeMetrics::default();
-    let t0 = std::time::Instant::now();
-    let mut done = 0;
-    while done < n_requests {
-        done += router.drain_batch(&mut metrics)?.len();
-    }
-    metrics.wall_elapsed = t0.elapsed();
-    producer.join().unwrap();
-
-    println!("\n== serving report ==");
-    println!("completed          : {}", metrics.completed);
     println!(
-        "batches            : {} (mean size {:.2})",
-        metrics.batches,
-        metrics.mean_batch()
+        "serving {n_requests} requests @ ~{rate} req/s, max batch {max_batch} \
+         ({} backend)",
+        engine.backend_kind(&model)?
     );
-    println!("wall throughput    : {:.1} req/s", metrics.wall_fps());
-    println!("mean wall latency  : {:?}", metrics.mean_wall_latency());
-    println!("max wall latency   : {:?}", metrics.max_wall);
-    println!("photonic FPS       : {:.0}", metrics.photonic_fps());
-    println!("photonic FPS/W     : {:.1}", metrics.photonic_fps_per_watt());
-    println!("photonic energy    : {}", si(metrics.photonic_energy_j, "J"));
+    let workload = PoissonWorkload {
+        requests: n_requests,
+        rate,
+        seed,
+    };
+    workload.drive(&engine, &model)?;
+    engine.shutdown();
+
+    let metrics = engine.metrics();
+    println!();
+    print_report(metrics.model(&model).expect("registered model"));
     Ok(())
 }
 

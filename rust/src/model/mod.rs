@@ -123,15 +123,25 @@ impl ModelDesc {
     }
 
     /// Load `artifacts/<name>.json` if present; otherwise the builtin
-    /// paper-parameter descriptor.
-    pub fn load_or_builtin(name: &str) -> ModelDesc {
+    /// paper-parameter descriptor.  `Err` on an unknown model name, and
+    /// on a *corrupt* measured descriptor — silently substituting the
+    /// builtin there would compute plans for shapes that don't match the
+    /// weights actually served.
+    pub fn try_load_or_builtin(name: &str) -> Result<ModelDesc> {
         let p = crate::artifacts_dir().join(format!("{name}.json"));
         if p.is_file() {
-            if let Ok(d) = Self::load(&p) {
-                return d;
-            }
+            return Self::load(&p)
+                .with_context(|| format!("loading measured descriptor for {name:?}"));
         }
-        Self::builtin(name).expect("unknown model")
+        Self::builtin(name).with_context(|| {
+            format!("unknown model {name:?} (no artifacts/{name}.json and no builtin)")
+        })
+    }
+
+    /// Panicking form of [`ModelDesc::try_load_or_builtin`] for call sites
+    /// that only ever pass the four paper models.
+    pub fn load_or_builtin(name: &str) -> ModelDesc {
+        Self::try_load_or_builtin(name).expect("unknown model")
     }
 
     pub fn from_json(j: &Json) -> Result<ModelDesc> {

@@ -19,7 +19,7 @@
 
 use crate::bail;
 use crate::coordinator::convflow::{conv2d_compressed, CompressedKernel};
-use crate::coordinator::serve::InferenceBackend;
+use crate::serve::InferenceBackend;
 use crate::model::{LayerKind, ModelDesc};
 use crate::sparsity::{ColMatrix, SparseVec};
 use crate::tensor::Tensor;

@@ -21,7 +21,7 @@
 //!
 //! The analytic simulator ([`crate::sim::engine::simulate`]), the batch
 //! amortization model ([`crate::sim::batch`]), and the serving router
-//! ([`crate::coordinator::serve::Router`]) all consume this IR, so their
+//! ([`crate::serve::Engine`]) all consume this IR, so their
 //! numbers derive from one source and cannot drift.
 
 pub mod exec;

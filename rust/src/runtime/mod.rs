@@ -23,7 +23,7 @@
 //! cargo feature.  The default build gets API-compatible stubs whose
 //! constructors return a descriptive error — serving then runs through
 //! [`crate::plan::PlanBackend`] (compiled-plan execution) or
-//! [`crate::coordinator::serve::NullBackend`] instead.  Manifest parsing
+//! [`crate::serve::NullBackend`] instead.  Manifest parsing
 //! ([`load_manifest`]) has no native dependency and is always available.
 //!
 //! Turning the feature on is a two-step act: `--features pjrt` *and* an
@@ -98,7 +98,7 @@ mod pjrt_impl {
 
     use super::{load_manifest, ArtifactInfo};
     use crate::bail;
-    use crate::coordinator::serve::InferenceBackend;
+    use crate::serve::InferenceBackend;
     use crate::tensor::{swt, Tensor};
     use crate::util::err::{Context, Result};
 
@@ -390,7 +390,7 @@ mod pjrt_stub {
 
     use std::path::PathBuf;
 
-    use crate::coordinator::serve::InferenceBackend;
+    use crate::serve::InferenceBackend;
     use crate::tensor::Tensor;
     use crate::util::err::{Error, Result};
 

@@ -1,0 +1,654 @@
+//! The `Engine` facade: the one public way to serve inference.
+//!
+//! An [`Engine`] is built once via [`Engine::builder`], owns backend
+//! resolution ([`BackendChoice`]), registers any number of models (one
+//! internal router + cached photonic plan each), and runs its own worker
+//! threads that drain the dynamic batcher.  Submission is asynchronous:
+//! [`Engine::submit`] returns a [`Ticket`] whose [`Ticket::wait`] /
+//! [`Ticket::try_wait`] deliver that request's [`Completion`] — callers
+//! never run a drain loop or stamp metrics themselves.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::arch::SonicConfig;
+use crate::bail;
+use crate::model::ModelDesc;
+use crate::plan::{ModelPlan, PlanBackend};
+use crate::runtime::PjrtBackend;
+use crate::util::err::{Context, Error, Result};
+
+use super::metrics::{EngineMetrics, LatencyHistogram, ModelMetrics};
+use super::router::{Completion, InferenceBackend, Router, ServeConfig, ServeMetrics};
+
+/// How the engine resolves the functional backend for one model.
+///
+/// `Auto` is the library-policy version of what every caller used to
+/// copy-paste: prefer the AOT-compiled PJRT artifacts when a manifest is
+/// present and they load, otherwise fall back to executing the compiled
+/// plan directly (batched sparse kernels over synthetic weights honouring
+/// the descriptor's sparsity) so serving always works offline.
+#[derive(Clone)]
+pub enum BackendChoice {
+    /// PJRT if the artifacts load, else the plan executor.
+    Auto,
+    /// PJRT artifacts only; building the engine fails if they don't load.
+    Pjrt,
+    /// Compiled-plan execution (no PJRT, works offline).
+    Plan,
+    /// Caller-supplied backend (tests, remote executors, ...).
+    Custom(Arc<dyn InferenceBackend>),
+}
+
+impl std::fmt::Debug for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendChoice::Auto => "Auto",
+            BackendChoice::Pjrt => "Pjrt",
+            BackendChoice::Plan => "Plan",
+            BackendChoice::Custom(_) => "Custom(..)",
+        })
+    }
+}
+
+impl BackendChoice {
+    /// Parse a CLI `--backend` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            "plan" => Ok(BackendChoice::Plan),
+            other => bail!("unknown backend {other:?} (want auto|pjrt|plan)"),
+        }
+    }
+}
+
+/// What a submitted request resolves to.  Cheap to clone (one `Arc`).
+#[derive(Clone)]
+pub struct Ticket {
+    id: u64,
+    model: String,
+    slot: Arc<Slot>,
+}
+
+enum SlotState {
+    Pending,
+    Done(Completion),
+    Failed(String),
+}
+
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, r: Result<Completion, String>) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, SlotState::Pending) {
+            *st = match r {
+                Ok(c) => SlotState::Done(c),
+                Err(e) => SlotState::Failed(e),
+            };
+        }
+        self.cv.notify_all();
+    }
+}
+
+impl Ticket {
+    /// The request id (unique per model within one engine).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The model this request was routed to.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Block until the request completes; returns its [`Completion`].
+    /// Errors if the backend failed the batch or the engine shut down
+    /// before serving it.
+    pub fn wait(&self) -> Result<Completion> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Done(c) => return Ok(c.clone()),
+                SlotState::Failed(e) => {
+                    return Err(Error::msg(format!("request {}: {e}", self.id)))
+                }
+                SlotState::Pending => {}
+            }
+            st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while still in flight.
+    pub fn try_wait(&self) -> Result<Option<Completion>> {
+        let st = self.slot.state.lock().unwrap();
+        match &*st {
+            SlotState::Pending => Ok(None),
+            SlotState::Done(c) => Ok(Some(c.clone())),
+            SlotState::Failed(e) => Err(Error::msg(format!("request {}: {e}", self.id))),
+        }
+    }
+}
+
+/// Per-model mutable serving state shared with the worker threads.
+struct ModelShared {
+    stats: Mutex<(ServeMetrics, LatencyHistogram)>,
+    slots: Mutex<HashMap<u64, Arc<Slot>>>,
+}
+
+impl ModelShared {
+    fn complete(&self, id: u64, r: Result<Completion, String>) {
+        let slot = self.slots.lock().unwrap().remove(&id);
+        if let Some(slot) = slot {
+            slot.fill(r);
+        }
+    }
+}
+
+struct ModelEntry {
+    router: Arc<Router>,
+    shared: Arc<ModelShared>,
+    next_id: AtomicU64,
+    backend_kind: &'static str,
+}
+
+/// Multi-model serving engine.  See the module docs and
+/// `src/serve/README.md` for the full lifecycle.
+pub struct Engine {
+    models: HashMap<String, ModelEntry>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    stopping: Arc<AtomicBool>,
+    /// Serializes shutdown: a second concurrent caller blocks until the
+    /// first finishes draining, so "shutdown then read final metrics" is
+    /// safe from any thread.
+    shutdown_lock: Mutex<()>,
+    /// Serving clock: stamped once at the first *accepted* submit (not at
+    /// build, which includes plan compilation and backend loading), so
+    /// wall_fps measures the serving interval like the pre-engine drain
+    /// loops did.  OnceLock: a plain atomic load after initialization —
+    /// no cross-model lock on the submit hot path.
+    started: OnceLock<Instant>,
+    stopped_elapsed: Mutex<Option<std::time::Duration>>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    fn entry(&self, model: &str) -> Result<&ModelEntry> {
+        self.models.get(model).with_context(|| {
+            let mut known: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+            known.sort_unstable();
+            format!("model {model:?} not registered (have {known:?})")
+        })
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Input element count the named model expects per request.
+    pub fn input_len(&self, model: &str) -> Result<usize> {
+        Ok(self.entry(model)?.router.input_len())
+    }
+
+    /// The descriptor a model was registered with.
+    pub fn model_desc(&self, model: &str) -> Result<&ModelDesc> {
+        Ok(self.entry(model)?.router.model())
+    }
+
+    /// The compile-once photonic plan a model's batches are charged to
+    /// (shared with the analytic simulator via the global plan cache).
+    pub fn plan(&self, model: &str) -> Result<Arc<ModelPlan>> {
+        Ok(Arc::clone(self.entry(model)?.router.plan()))
+    }
+
+    /// Which backend the engine resolved for a model
+    /// (`"pjrt"`, `"plan"`, or `"custom"`).
+    pub fn backend_kind(&self, model: &str) -> Result<&'static str> {
+        Ok(self.entry(model)?.backend_kind)
+    }
+
+    /// Submit one request to the named model.  Returns a [`Ticket`];
+    /// **blocks** while the model's queue is full (backpressure), and
+    /// errors on an unknown model, a bad input length, or after
+    /// [`Engine::shutdown`].
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<Ticket> {
+        match self.submit_inner(model, input, true)? {
+            Some(t) => Ok(t),
+            None => bail!("blocking submit returned without a ticket"),
+        }
+    }
+
+    /// Non-blocking submit: `Ok(None)` when the model's queue is full.
+    pub fn try_submit(&self, model: &str, input: Vec<f32>) -> Result<Option<Ticket>> {
+        self.submit_inner(model, input, false)
+    }
+
+    fn submit_inner(&self, model: &str, input: Vec<f32>, block: bool) -> Result<Option<Ticket>> {
+        if self.stopping.load(Ordering::SeqCst) {
+            bail!("engine is shut down");
+        }
+        let entry = self.entry(model)?;
+        // Input length is validated by the router's submit_with_id; its
+        // Err path below withdraws the just-registered slot.
+        let id = entry.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = Arc::new(Slot::new());
+        // Register the completion slot before the request can possibly be
+        // drained, so the worker never completes an unknown id.
+        entry
+            .shared
+            .slots
+            .lock()
+            .unwrap()
+            .insert(id, Arc::clone(&slot));
+        match entry.router.submit_with_id(id, input, block) {
+            Ok(true) => {
+                // Close the race with a concurrent shutdown(): if the
+                // request is still queued it may never be served (workers
+                // could already be gone) — retract it and report the
+                // shutdown.  If a worker already popped it, it will be
+                // executed and the ticket resolves normally.
+                if self.stopping.load(Ordering::SeqCst) && entry.router.retract(id) {
+                    entry.shared.slots.lock().unwrap().remove(&id);
+                    bail!("engine is shut down");
+                }
+                self.started.get_or_init(Instant::now);
+                Ok(Some(Ticket {
+                    id,
+                    model: model.to_string(),
+                    slot,
+                }))
+            }
+            Ok(false) => {
+                entry.shared.slots.lock().unwrap().remove(&id);
+                Ok(None)
+            }
+            Err(e) => {
+                entry.shared.slots.lock().unwrap().remove(&id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Duration of the serving interval so far: first submit to now (or
+    /// to shutdown).  Zero when nothing was ever submitted.
+    fn serving_elapsed(&self) -> std::time::Duration {
+        self.started
+            .get()
+            .map(|s| s.elapsed())
+            .unwrap_or(std::time::Duration::ZERO)
+    }
+
+    /// Snapshot every model's counters and latency percentiles.
+    pub fn metrics(&self) -> EngineMetrics {
+        let elapsed = self
+            .stopped_elapsed
+            .lock()
+            .unwrap()
+            .unwrap_or_else(|| self.serving_elapsed());
+        let mut models: Vec<ModelMetrics> = self
+            .models
+            .iter()
+            .map(|(name, entry)| {
+                let (mut serve, hist) = {
+                    let st = entry.shared.stats.lock().unwrap();
+                    (st.0.clone(), st.1.clone())
+                };
+                serve.wall_elapsed = elapsed;
+                let bits = entry.router.plan().bits_per_inference;
+                let photonic_epb_j = if serve.completed == 0 || bits == 0.0 {
+                    0.0
+                } else {
+                    serve.photonic_energy_j / (serve.completed as f64 * bits)
+                };
+                ModelMetrics {
+                    model: name.clone(),
+                    backend: entry.backend_kind.to_string(),
+                    p50: hist.quantile(0.50),
+                    p95: hist.quantile(0.95),
+                    p99: hist.quantile(0.99),
+                    photonic_epb_j,
+                    serve,
+                }
+            })
+            .collect();
+        models.sort_by(|a, b| a.model.cmp(&b.model));
+        EngineMetrics {
+            wall_elapsed: elapsed,
+            models,
+        }
+    }
+
+    /// Graceful shutdown: stop accepting new requests, drain every queued
+    /// request through the backends, join the workers, and fail any ticket
+    /// that could no longer be served.  Idempotent.
+    pub fn shutdown(&self) {
+        // Hold the lock for the whole drain: a concurrent second caller
+        // blocks here until shutdown has fully completed, then sees the
+        // stopping flag and returns with the metrics frozen.
+        let _guard = self.shutdown_lock.lock().unwrap();
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return; // another caller already completed shutdown
+        }
+        for entry in self.models.values() {
+            entry.router.close();
+        }
+        let workers: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in workers {
+            let _ = h.join();
+        }
+        *self.stopped_elapsed.lock().unwrap() = Some(self.serving_elapsed());
+        // Any slot still pending was never picked up (e.g. submitted by a
+        // thread that slipped past the drain); fail it so wait() returns.
+        for entry in self.models.values() {
+            let slots: Vec<Arc<Slot>> =
+                entry.shared.slots.lock().unwrap().drain().map(|(_, s)| s).collect();
+            for slot in slots {
+                slot.fill(Err("engine shut down before request was served".into()));
+            }
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Worker loop: drain batches for one model until shutdown *and* the
+/// queue is empty, filling completion slots as batches finish.
+fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<AtomicBool>) {
+    loop {
+        let batch = router.pop_batch();
+        if batch.is_empty() {
+            if stopping.load(Ordering::SeqCst) && router.queue_depth() == 0 {
+                return;
+            }
+            continue;
+        }
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        // Execute outside the stats lock (the backend call can be slow),
+        // then merge this batch's counters in one critical section.  A
+        // panicking backend must not kill the worker: catch it and fail
+        // the batch's tickets, keeping the model serviceable (the same
+        // containment coordinator::exec::Pool applies to its jobs).
+        let mut local = ServeMetrics::default();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            router.execute_batch(batch, &mut local)
+        }));
+        match result {
+            Ok(Ok(completions)) => {
+                {
+                    let mut st = shared.stats.lock().unwrap();
+                    st.0.merge(&local);
+                    for c in &completions {
+                        st.1.record(c.wall_latency);
+                    }
+                }
+                for c in completions {
+                    let id = c.id;
+                    shared.complete(id, Ok(c));
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("backend error: {e}");
+                for id in ids {
+                    shared.complete(id, Err(msg.clone()));
+                }
+            }
+            Err(panic) => {
+                let what = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                let msg = format!("backend panicked: {what}");
+                for id in ids {
+                    shared.complete(id, Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// A registered model awaiting [`EngineBuilder::build`]: either a bare
+/// name (resolved fallibly at build time) or an explicit descriptor.
+enum ModelSpec {
+    Named(String),
+    Desc(ModelDesc),
+}
+
+/// Builder for [`Engine`]: accumulate models + configuration, then
+/// [`EngineBuilder::build`] resolves backends, compiles plans (via the
+/// global plan cache), and spawns the worker threads.
+pub struct EngineBuilder {
+    arch: SonicConfig,
+    serve_cfg: ServeConfig,
+    artifacts_dir: Option<PathBuf>,
+    synthetic_seed: u64,
+    workers_per_model: usize,
+    models: Vec<(ModelSpec, BackendChoice)>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            arch: SonicConfig::paper_best(),
+            serve_cfg: ServeConfig::default(),
+            artifacts_dir: None,
+            synthetic_seed: 7,
+            workers_per_model: 1,
+            models: Vec::new(),
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Photonic architecture the serving plans are compiled against.
+    pub fn arch(mut self, cfg: SonicConfig) -> Self {
+        self.arch = cfg;
+        self
+    }
+
+    /// Batching knobs applied to every registered model.
+    pub fn serve_config(mut self, cfg: ServeConfig) -> Self {
+        self.serve_cfg = cfg;
+        self
+    }
+
+    /// Where PJRT artifacts live (defaults to [`crate::artifacts_dir`]).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Seed for synthetic plan-backend weights (default 7).
+    pub fn synthetic_seed(mut self, seed: u64) -> Self {
+        self.synthetic_seed = seed;
+        self
+    }
+
+    /// Drain worker threads per model (default 1; PJRT execution is
+    /// serialized on its owner thread anyway).
+    pub fn workers_per_model(mut self, n: usize) -> Self {
+        self.workers_per_model = n.max(1);
+        self
+    }
+
+    /// Register a model by name.  The descriptor is resolved at
+    /// [`EngineBuilder::build`] (artifact json, else builtin), so a typo
+    /// surfaces as a build `Err` rather than a panic.
+    pub fn model(mut self, name: &str, choice: BackendChoice) -> Self {
+        self.models.push((ModelSpec::Named(name.to_string()), choice));
+        self
+    }
+
+    /// Register a model from an explicit descriptor.
+    pub fn model_desc(mut self, desc: ModelDesc, choice: BackendChoice) -> Self {
+        self.models.push((ModelSpec::Desc(desc), choice));
+        self
+    }
+
+    /// `name` is the registered (requested) model name — PJRT artifacts
+    /// are keyed by it on disk, while `desc.name` may be an internal
+    /// label from a measured artifact json.
+    fn resolve_backend(
+        &self,
+        name: &str,
+        desc: &ModelDesc,
+        choice: &BackendChoice,
+        art: &std::path::Path,
+    ) -> Result<(Arc<dyn InferenceBackend>, &'static str)> {
+        match choice {
+            BackendChoice::Custom(b) => Ok((Arc::clone(b), "custom")),
+            BackendChoice::Plan => {
+                let b: Arc<dyn InferenceBackend> =
+                    Arc::new(PlanBackend::synthetic(desc, self.synthetic_seed));
+                Ok((b, "plan"))
+            }
+            BackendChoice::Pjrt => {
+                let loaded = PjrtBackend::load(art, name)
+                    .with_context(|| format!("loading PJRT backend for {name:?}"))?;
+                let b: Arc<dyn InferenceBackend> = Arc::new(loaded);
+                Ok((b, "pjrt"))
+            }
+            BackendChoice::Auto => {
+                if art.join("manifest.json").is_file() {
+                    match PjrtBackend::load(art, name) {
+                        Ok(loaded) => {
+                            let b: Arc<dyn InferenceBackend> = Arc::new(loaded);
+                            return Ok((b, "pjrt"));
+                        }
+                        // Artifacts exist but won't load: fall back, but
+                        // say why, or a broken install silently serves
+                        // synthetic weights.
+                        Err(e) => eprintln!(
+                            "PJRT unavailable for {name:?} ({e}); serving through \
+                             the compiled plan instead"
+                        ),
+                    }
+                } else {
+                    eprintln!(
+                        "artifacts missing for {name:?} — serving through the \
+                         compiled plan (synthetic weights)"
+                    );
+                }
+                let b: Arc<dyn InferenceBackend> =
+                    Arc::new(PlanBackend::synthetic(desc, self.synthetic_seed));
+                Ok((b, "plan"))
+            }
+        }
+    }
+
+    /// Resolve every model's backend, compile its plan, and start the
+    /// engine's worker threads.
+    pub fn build(self) -> Result<Engine> {
+        if self.models.is_empty() {
+            bail!("engine needs at least one registered model");
+        }
+        let art = self
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(crate::artifacts_dir);
+        let stopping = Arc::new(AtomicBool::new(false));
+        // Phase 1: validate the whole registration list and resolve every
+        // backend before any thread exists, so a failing model (e.g.
+        // `Pjrt` with missing artifacts) can't leak live workers for the
+        // models registered before it.
+        let mut models = HashMap::new();
+        for (spec, choice) in &self.models {
+            // Register under the name the caller will submit with.  A
+            // measured artifact json may carry a different internal
+            // "model" field; routing must still work by requested name.
+            let (key, desc) = match spec {
+                ModelSpec::Desc(d) => (d.name.clone(), d.clone()),
+                ModelSpec::Named(n) => (n.clone(), ModelDesc::try_load_or_builtin(n)?),
+            };
+            if models.contains_key(&key) {
+                bail!("model {key:?} registered twice");
+            }
+            let (backend, backend_kind) = self.resolve_backend(&key, &desc, choice, &art)?;
+            let router = Router::new(
+                backend,
+                desc.clone(),
+                self.arch.clone(),
+                self.serve_cfg.clone(),
+            );
+            let shared = Arc::new(ModelShared {
+                stats: Mutex::new((ServeMetrics::default(), LatencyHistogram::default())),
+                slots: Mutex::new(HashMap::new()),
+            });
+            models.insert(
+                key,
+                ModelEntry {
+                    router,
+                    shared,
+                    next_id: AtomicU64::new(0),
+                    backend_kind,
+                },
+            );
+        }
+        // Phase 2: spawn workers.  If the OS refuses a thread, unwind the
+        // ones already started (close + join) instead of leaking them.
+        let mut workers = Vec::new();
+        let mut spawn_err = None;
+        'spawn: for (name, entry) in &models {
+            for i in 0..self.workers_per_model {
+                let (r, s, stop) = (
+                    Arc::clone(&entry.router),
+                    Arc::clone(&entry.shared),
+                    Arc::clone(&stopping),
+                );
+                match std::thread::Builder::new()
+                    .name(format!("serve-{name}-{i}"))
+                    .spawn(move || worker_loop(r, s, stop))
+                {
+                    Ok(h) => workers.push(h),
+                    Err(e) => {
+                        spawn_err = Some(Error::msg(format!("spawning serve worker: {e}")));
+                        break 'spawn;
+                    }
+                }
+            }
+        }
+        if let Some(e) = spawn_err {
+            stopping.store(true, Ordering::SeqCst);
+            for entry in models.values() {
+                entry.router.close();
+            }
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(Engine {
+            models,
+            workers: Mutex::new(workers),
+            stopping,
+            shutdown_lock: Mutex::new(()),
+            started: OnceLock::new(),
+            stopped_elapsed: Mutex::new(None),
+        })
+    }
+}

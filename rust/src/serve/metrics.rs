@@ -1,0 +1,159 @@
+//! Engine-level metrics: per-model serving counters plus a log-bucketed
+//! wall-latency histogram giving p50/p95/p99 without storing every sample.
+
+use std::time::Duration;
+
+use super::router::ServeMetrics;
+
+/// Histogram geometry: log-spaced buckets from 100 ns upward with 30%
+/// growth per bucket — ~±15% relative error on reported quantiles, which
+/// is far below the run-to-run noise of wall latency.
+const BASE_NS: f64 = 100.0;
+const GROWTH: f64 = 1.3;
+const N_BUCKETS: usize = 128;
+
+/// Fixed-size log-bucketed latency histogram (HdrHistogram-flavoured).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; N_BUCKETS],
+            count: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= BASE_NS {
+            return 0;
+        }
+        let idx = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()).ceil() as usize;
+        idx.min(N_BUCKETS - 1)
+    }
+
+    /// Upper latency bound of bucket `i` in nanoseconds.
+    fn bucket_upper_ns(i: usize) -> f64 {
+        BASE_NS * GROWTH.powi(i as i32)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Latency at quantile `q` in [0, 1]: the geometric midpoint of the
+    /// bucket containing the rank-`ceil(q * count)` sample (the unbiased
+    /// estimate for log-spaced buckets — worst-case error half a bucket,
+    /// the header's ~±15%), clamped to the exact observed min/max.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let est = (Self::bucket_upper_ns(i) / GROWTH.sqrt()) as u64;
+                return Duration::from_nanos(est.clamp(self.min_ns, self.max_ns));
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+}
+
+/// Snapshot of one model's serving state inside an Engine.
+#[derive(Debug, Clone)]
+pub struct ModelMetrics {
+    pub model: String,
+    /// Which backend the engine resolved for this model
+    /// (`"pjrt"`, `"plan"`, or `"custom"`).
+    pub backend: String,
+    /// Wall + photonic counters (same shape the old Router exposed).
+    pub serve: ServeMetrics,
+    /// Wall-latency percentiles over every completed request.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Served photonic energy-per-bit: total photonic energy over the bits
+    /// this model's completions moved (from the compiled plan).
+    pub photonic_epb_j: f64,
+}
+
+/// Snapshot of a whole Engine: one [`ModelMetrics`] per registered model,
+/// sorted by model name.
+#[derive(Debug, Clone)]
+pub struct EngineMetrics {
+    /// Serving interval: first submit to snapshot time (frozen at
+    /// shutdown); zero if nothing was submitted.
+    pub wall_elapsed: Duration,
+    pub models: Vec<ModelMetrics>,
+}
+
+impl EngineMetrics {
+    pub fn model(&self, name: &str) -> Option<&ModelMetrics> {
+        self.models.iter().find(|m| m.model == name)
+    }
+
+    /// Requests completed across every model.
+    pub fn completed(&self) -> u64 {
+        self.models.iter().map(|m| m.serve.completed).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = LatencyHistogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bounded() {
+        let mut h = LatencyHistogram::default();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.len(), 1000);
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        assert!(p99 <= Duration::from_micros(1000));
+        // log buckets: p50 within ~30% of the true median 500us
+        let mid = p50.as_nanos() as f64 / 500_000.0;
+        assert!((0.7..=1.3).contains(&mid), "p50 {p50:?} vs true 500us");
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse_to_it() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(3));
+        assert_eq!(h.quantile(0.5), h.quantile(0.99));
+        // clamped to exact observed max
+        assert_eq!(h.quantile(0.99), Duration::from_millis(3));
+    }
+}

@@ -1,0 +1,78 @@
+//! `sonic::serve` — the public serving API.
+//!
+//! One [`Engine`] is the single way to serve inference in this crate:
+//!
+//! ```no_run
+//! use sonic::serve::{BackendChoice, Engine};
+//!
+//! let engine = Engine::builder()
+//!     .model("mnist", BackendChoice::Auto)
+//!     .model("svhn", BackendChoice::Plan)
+//!     .build()?;
+//! let ticket = engine.submit("mnist", vec![0.0; 28 * 28])?;
+//! let completion = ticket.wait()?;
+//! println!("class {}", completion.argmax);
+//! engine.shutdown();
+//! # Ok::<(), sonic::util::err::Error>(())
+//! ```
+//!
+//! The engine owns what every call site used to hand-roll:
+//!
+//! * **Backend resolution** ([`BackendChoice`]): `Auto` prefers the PJRT
+//!   artifacts and falls back to compiled-plan execution, `Pjrt`/`Plan`
+//!   force one, `Custom` injects any [`InferenceBackend`].
+//! * **Multi-model routing**: each registered model gets its own internal
+//!   router + compile-once photonic plan; `submit` routes by model name.
+//! * **Worker threads**: batches are drained in the background; `submit`
+//!   returns a [`Ticket`] (`wait()` / `try_wait()`) instead of a bare id.
+//! * **Metrics**: [`Engine::metrics`] snapshots per-model counters,
+//!   wall-latency p50/p95/p99, and served photonic FPS / FPS/W / EPB;
+//!   [`Engine::shutdown`] drains in-flight requests and freezes the clock.
+//!
+//! The former `coordinator::serve::Router` / `drain_batch` pair is now a
+//! `pub(crate)` implementation detail of this module ([`router`]); see
+//! `src/serve/README.md` for the full lifecycle and backend table.
+
+mod engine;
+mod metrics;
+pub(crate) mod router;
+pub mod workload;
+
+pub use engine::{BackendChoice, Engine, EngineBuilder, Ticket};
+pub use metrics::{EngineMetrics, LatencyHistogram, ModelMetrics};
+pub use router::{Completion, InferenceBackend, NullBackend, ServeConfig, ServeMetrics};
+
+/// NaN-safe argmax over logits: the index of the largest value, with NaN
+/// treated as negative infinity (a poisoned logit can never win, and —
+/// unlike `partial_cmp(..).unwrap()` — can never panic the batch).
+/// Returns 0 for an empty slice.
+pub fn argmax(logits: &[f32]) -> usize {
+    let key = |v: f32| if v.is_nan() { f32::NEG_INFINITY } else { v };
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| key(*a.1).total_cmp(&key(*b.1)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+
+    #[test]
+    fn argmax_ignores_nan() {
+        // regression for the NaN-poisoning panic: NaN logits lose, never crash
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.9]), 2);
+        assert_eq!(argmax(&[f32::NAN, 0.5]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 1); // all-NaN: stable, no panic
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]), 1);
+    }
+}

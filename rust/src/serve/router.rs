@@ -1,0 +1,574 @@
+//! Request router + dynamic batcher — the **internal** serving core.
+//!
+//! Since the `sonic::serve` Engine redesign this type is `pub(crate)`:
+//! the public surface is [`crate::serve::Engine`], which owns one router
+//! per registered model and runs the drain loop on its own worker
+//! threads.  Nothing outside `rust/src/serve/` constructs a `Router` or
+//! calls `drain_batch` anymore.
+//!
+//! Requests enter a bounded queue; the batcher drains up to `max_batch`
+//! requests or waits `batch_window` for stragglers (vLLM-router-style
+//! dynamic batching), executes the batch on an [`InferenceBackend`]
+//! (PJRT artifacts in production, the compiled-plan executor offline),
+//! and attributes per-request latency.  Alongside the functional
+//! results, the batch is charged to the precompiled photonic plan so the
+//! serving report carries FPS, FPS/W and EPB.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::SonicConfig;
+use crate::bail;
+use crate::model::ModelDesc;
+use crate::util::err::Result;
+
+use super::argmax;
+
+/// Functional compute interface: batch of flat inputs -> batch of logits.
+pub trait InferenceBackend: Send + Sync {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Input element count per request.
+    fn input_len(&self) -> usize;
+}
+
+/// Per-model batching knobs (queue capacity, batch size, batch window).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_window: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            queue_cap: 1024,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct PendingReq {
+    pub(crate) id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+}
+
+/// One finished request: logits, argmax, and its latency attribution.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// Wall-clock latency through the router (queueing + execution).
+    pub wall_latency: Duration,
+    /// Photonic-model latency for this request's share of the batch (s).
+    pub photonic_latency_s: f64,
+}
+
+/// Cumulative serving counters for one model (wall + photonic).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub completed: u64,
+    pub batches: u64,
+    pub total_wall: Duration,
+    pub max_wall: Duration,
+    /// Photonic simulated totals.
+    pub photonic_time_s: f64,
+    pub photonic_energy_j: f64,
+    pub wall_elapsed: Duration,
+}
+
+impl ServeMetrics {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_wall_latency(&self) -> Duration {
+        if self.completed == 0 {
+            Duration::ZERO
+        } else {
+            self.total_wall / self.completed as u32
+        }
+    }
+
+    /// Simulated photonic throughput (inferences/s of the accelerator).
+    pub fn photonic_fps(&self) -> f64 {
+        if self.photonic_time_s == 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.photonic_time_s
+        }
+    }
+
+    pub fn photonic_fps_per_watt(&self) -> f64 {
+        if self.photonic_energy_j == 0.0 {
+            return 0.0;
+        }
+        let power = self.photonic_energy_j / self.photonic_time_s.max(1e-12);
+        self.photonic_fps() / power
+    }
+
+    /// Fold another counter set into this one (worker threads accumulate
+    /// per-batch metrics locally, then merge under the engine's lock).
+    /// `wall_elapsed` is engine-owned — stamped by `Engine::metrics` from
+    /// the serving clock, never merged.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.total_wall += other.total_wall;
+        self.max_wall = self.max_wall.max(other.max_wall);
+        self.photonic_time_s += other.photonic_time_s;
+        self.photonic_energy_j += other.photonic_energy_j;
+    }
+
+    /// Wall-clock serving throughput (requests/s through the engine).
+    pub fn wall_fps(&self) -> f64 {
+        let secs = self.wall_elapsed.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+}
+
+/// The router: synchronous submission API over an internal batcher.
+///
+/// At construction the model is compiled **once** into a
+/// [`crate::plan::ModelPlan`] (via the global plan cache), and every batch
+/// drained afterwards is charged against that precompiled plan — the same
+/// IR the analytic simulator consumes, so served and simulated photonic
+/// numbers cannot drift.
+pub(crate) struct Router {
+    backend: Arc<dyn InferenceBackend>,
+    cfg: ServeConfig,
+    model: ModelDesc,
+    queue: Mutex<VecDeque<PendingReq>>,
+    notify: Condvar,
+    /// Set at engine shutdown: pop_batch stops waiting for work or
+    /// stragglers and drains whatever is queued.
+    closed: AtomicBool,
+    /// Compile-once photonic plan (shared with sim via the plan cache).
+    plan: Arc<crate::plan::ModelPlan>,
+}
+
+impl Router {
+    pub(crate) fn new(
+        backend: Arc<dyn InferenceBackend>,
+        model: ModelDesc,
+        arch: SonicConfig,
+        cfg: ServeConfig,
+    ) -> Arc<Self> {
+        let plan = crate::plan::cached(&model, &arch);
+        Arc::new(Self {
+            backend,
+            cfg,
+            model,
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            closed: AtomicBool::new(false),
+            plan,
+        })
+    }
+
+    pub(crate) fn model(&self) -> &ModelDesc {
+        &self.model
+    }
+
+    /// The precompiled photonic plan this router charges batches against.
+    pub(crate) fn plan(&self) -> &Arc<crate::plan::ModelPlan> {
+        &self.plan
+    }
+
+    /// Input element count per request (from the backend contract).
+    pub(crate) fn input_len(&self) -> usize {
+        self.backend.input_len()
+    }
+
+    /// Enqueue a request under a caller-allocated id (the Engine owns id
+    /// allocation so it can register the completion slot first).  With
+    /// `block`, waits for queue space (backpressure); otherwise returns
+    /// `Ok(false)` when the queue is full.
+    pub(crate) fn submit_with_id(&self, id: u64, input: Vec<f32>, block: bool) -> Result<bool> {
+        if input.len() != self.backend.input_len() {
+            bail!(
+                "bad input length {} (model {:?} wants {})",
+                input.len(),
+                self.model.name,
+                self.backend.input_len()
+            );
+        }
+        let mut q = self.queue.lock().unwrap();
+        while q.len() >= self.cfg.queue_cap {
+            // Re-check on every wake: after close() no worker will ever
+            // pop again, so a submitter blocked on a full queue must bail
+            // out instead of waiting forever.
+            if self.closed.load(Ordering::SeqCst) {
+                bail!("engine is shut down");
+            }
+            if !block {
+                return Ok(false);
+            }
+            q = self.notify.wait(q).unwrap();
+        }
+        q.push_back(PendingReq {
+            id,
+            input,
+            enqueued: Instant::now(),
+        });
+        self.notify.notify_all();
+        Ok(true)
+    }
+
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Remove a still-queued request (shutdown racing a submit).  `false`
+    /// means a worker already popped it — it will be executed and its
+    /// completion slot filled normally.
+    pub(crate) fn retract(&self, id: u64) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if let Some(pos) = q.iter().position(|r| r.id == id) {
+            q.remove(pos);
+            self.notify.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Mark the router closed (engine shutdown) and wake every thread
+    /// blocked on the queue: idle workers return from `pop_batch` and
+    /// drain whatever is left without straggler waits.
+    pub(crate) fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _q = self.queue.lock().unwrap();
+        self.notify.notify_all();
+    }
+
+    /// Pop one batch (up to max_batch, waiting batch_window for
+    /// stragglers).  While the queue is empty this **blocks** on the
+    /// condvar — an idle engine burns no CPU — until a submission or
+    /// [`Router::close`] arrives; after close it returns an empty vec
+    /// once the queue is drained.
+    pub(crate) fn pop_batch(&self) -> Vec<PendingReq> {
+        let mut batch = Vec::new();
+        let mut q = self.queue.lock().unwrap();
+        while q.is_empty() && !self.closed.load(Ordering::SeqCst) {
+            q = self.notify.wait(q).unwrap();
+        }
+        let deadline = Instant::now() + self.cfg.batch_window;
+        loop {
+            while batch.len() < self.cfg.max_batch {
+                match q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            if batch.len() >= self.cfg.max_batch
+                || batch.is_empty()
+                || self.closed.load(Ordering::SeqCst)
+                || Instant::now() >= deadline
+            {
+                break;
+            }
+            let (guard, timeout) = self
+                .notify
+                .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
+                .unwrap();
+            q = guard;
+            if timeout.timed_out() && q.is_empty() {
+                break;
+            }
+        }
+        self.notify.notify_all();
+        batch
+    }
+
+    /// Execute one popped batch on the backend and charge it to the
+    /// photonic plan, attributing per-request latency.
+    pub(crate) fn execute_batch(
+        &self,
+        batch: Vec<PendingReq>,
+        metrics: &mut ServeMetrics,
+    ) -> Result<Vec<Completion>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Move the input vectors out of the batch (no hot-path copies);
+        // keep (id, enqueue time) for latency attribution.
+        let (metas, inputs): (Vec<(u64, Instant)>, Vec<Vec<f32>>) = batch
+            .into_iter()
+            .map(|r| ((r.id, r.enqueued), r.input))
+            .unzip();
+        let outputs = self.backend.infer_batch(&inputs)?;
+        if outputs.len() != metas.len() {
+            bail!(
+                "backend returned {} outputs for {} inputs",
+                outputs.len(),
+                metas.len()
+            );
+        }
+        let done = Instant::now();
+
+        // Photonic accounting: a batch of B pipelines through the VDU array;
+        // fills/setups amortize (paid once per batch).  The amortization
+        // factor comes from the precompiled plan — the same pipeline/overhead
+        // split `sim::batch` uses — not a serving-side constant.
+        let b = metas.len() as f64;
+        let batch_latency = self.plan.batch_latency_s(metas.len());
+        let batch_energy = self.plan.batch_energy_j(metas.len());
+        metrics.photonic_time_s += batch_latency;
+        metrics.photonic_energy_j += batch_energy;
+        metrics.batches += 1;
+
+        let mut out = Vec::with_capacity(metas.len());
+        for ((id, enqueued), logits) in metas.into_iter().zip(outputs) {
+            let wall = done.duration_since(enqueued);
+            metrics.completed += 1;
+            metrics.total_wall += wall;
+            metrics.max_wall = metrics.max_wall.max(wall);
+            let argmax = argmax(&logits);
+            out.push(Completion {
+                id,
+                logits,
+                argmax,
+                wall_latency: wall,
+                photonic_latency_s: batch_latency / b,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Pop one batch and execute it.  Returns completions; empty when the
+    /// queue stayed empty.  (Kept for the in-crate unit tests; the Engine
+    /// drives `pop_batch`/`execute_batch` separately so it can fail the
+    /// affected tickets when the backend errors.)
+    #[cfg(test)]
+    pub(crate) fn drain_batch(&self, metrics: &mut ServeMetrics) -> Result<Vec<Completion>> {
+        let batch = self.pop_batch();
+        self.execute_batch(batch, metrics)
+    }
+}
+
+/// Test/fallback backend: a trivial linear model computed locally.
+pub struct NullBackend {
+    pub input_len: usize,
+    pub n_classes: usize,
+}
+
+impl InferenceBackend for NullBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(inputs
+            .iter()
+            .map(|x| {
+                (0..self.n_classes)
+                    .map(|c| {
+                        x.iter()
+                            .enumerate()
+                            .filter(|(i, _)| i % self.n_classes == c)
+                            .map(|(_, v)| v)
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(max_batch: usize) -> Arc<Router> {
+        let model = ModelDesc::builtin("mnist").unwrap();
+        let backend = Arc::new(NullBackend {
+            input_len: 28 * 28,
+            n_classes: 10,
+        });
+        Router::new(
+            backend,
+            model,
+            SonicConfig::paper_best(),
+            ServeConfig {
+                max_batch,
+                batch_window: Duration::from_millis(5),
+                queue_cap: 64,
+            },
+        )
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let r = router(4);
+        r.submit_with_id(1, vec![1.0; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].logits.len(), 10);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        let r = router(8);
+        for i in 0..8 {
+            r.submit_with_id(i + 1, vec![0.5; 784], true).unwrap();
+        }
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 8);
+        assert_eq!(m.batches, 1);
+        assert!((m.mean_batch() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_capped_at_max() {
+        let r = router(4);
+        for i in 0..10 {
+            r.submit_with_id(i + 1, vec![0.0; 784], true).unwrap();
+        }
+        let mut m = ServeMetrics::default();
+        let first = r.drain_batch(&mut m).unwrap();
+        assert_eq!(first.len(), 4);
+        assert_eq!(r.queue_depth(), 6);
+    }
+
+    #[test]
+    fn closed_empty_queue_returns_empty() {
+        // pop_batch blocks while idle; after close() it returns empty
+        let r = router(4);
+        r.close();
+        let mut m = ServeMetrics::default();
+        assert!(r.drain_batch(&mut m).unwrap().is_empty());
+    }
+
+    #[test]
+    fn photonic_accounting_accumulates() {
+        let r = router(2);
+        r.submit_with_id(1, vec![0.1; 784], true).unwrap();
+        r.submit_with_id(2, vec![0.2; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        r.drain_batch(&mut m).unwrap();
+        assert!(m.photonic_time_s > 0.0);
+        assert!(m.photonic_energy_j > 0.0);
+        assert!(m.photonic_fps() > 0.0);
+        assert!(m.photonic_fps_per_watt() > 0.0);
+    }
+
+    #[test]
+    fn batch_amortizes_photonic_latency() {
+        // 2-request batch must cost < 2x single-request photonic latency
+        let r1 = router(1);
+        r1.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        let mut m1 = ServeMetrics::default();
+        r1.drain_batch(&mut m1).unwrap();
+
+        let r2 = router(2);
+        r2.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        r2.submit_with_id(2, vec![0.0; 784], true).unwrap();
+        let mut m2 = ServeMetrics::default();
+        r2.drain_batch(&mut m2).unwrap();
+
+        assert!(m2.photonic_time_s < 2.0 * m1.photonic_time_s);
+    }
+
+    #[test]
+    fn wrong_input_length_is_an_error_not_a_panic() {
+        let e = router(1)
+            .submit_with_id(1, vec![0.0; 3], true)
+            .unwrap_err();
+        assert!(e.to_string().contains("bad input length"), "{e}");
+    }
+
+    #[test]
+    fn nonblocking_submit_reports_full_queue() {
+        let model = ModelDesc::builtin("mnist").unwrap();
+        let backend = Arc::new(NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        });
+        let r = Router::new(
+            backend,
+            model,
+            SonicConfig::paper_best(),
+            ServeConfig {
+                max_batch: 4,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 2,
+            },
+        );
+        assert!(r.submit_with_id(1, vec![0.0; 784], false).unwrap());
+        assert!(r.submit_with_id(2, vec![0.0; 784], false).unwrap());
+        // queue full: non-blocking submit must refuse rather than wait
+        assert!(!r.submit_with_id(3, vec![0.0; 784], false).unwrap());
+    }
+
+    #[test]
+    fn nan_logit_does_not_poison_argmax() {
+        // regression: partial_cmp(..).unwrap() used to panic on NaN logits
+        struct NanBackend;
+        impl InferenceBackend for NanBackend {
+            fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                Ok(inputs
+                    .iter()
+                    .map(|_| vec![0.1, f32::NAN, 0.9, 0.2])
+                    .collect())
+            }
+            fn input_len(&self) -> usize {
+                784
+            }
+        }
+        let model = ModelDesc::builtin("mnist").unwrap();
+        let r = Router::new(
+            Arc::new(NanBackend),
+            model,
+            SonicConfig::paper_best(),
+            ServeConfig::default(),
+        );
+        r.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].argmax, 2, "NaN treated as -inf");
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let r = router(8);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let rc = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5u64 {
+                    rc.submit_with_id(t * 5 + i + 1, vec![0.3; 784], true)
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut m = ServeMetrics::default();
+        let mut total = 0;
+        while total < 20 {
+            total += r.drain_batch(&mut m).unwrap().len();
+        }
+        assert_eq!(m.completed, 20);
+    }
+}

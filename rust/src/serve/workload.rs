@@ -1,0 +1,78 @@
+//! Synthetic serving workloads + report printing, shared by the CLI
+//! (`sonic serve`) and `examples/sparse_serving.rs` so the Poisson
+//! producer and the serving report exist exactly once.
+
+use std::time::Duration;
+
+use crate::util::err::Result;
+use crate::util::rng::Rng;
+use crate::util::si;
+
+use super::engine::Engine;
+use super::metrics::ModelMetrics;
+use super::router::Completion;
+
+/// A seeded Poisson request stream: exponential inter-arrival times at
+/// `rate` req/s (sleeps capped at 50 ms so low rates stay responsive),
+/// submitting `requests` random normal frames.
+#[derive(Debug, Clone)]
+pub struct PoissonWorkload {
+    pub requests: usize,
+    /// Mean arrival rate in requests/second.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl Default for PoissonWorkload {
+    fn default() -> Self {
+        Self {
+            requests: 96,
+            rate: 400.0,
+            seed: 7,
+        }
+    }
+}
+
+impl PoissonWorkload {
+    /// Drive the stream against one model of a running engine and wait for
+    /// every completion.  Batching happens in the engine's workers while
+    /// the producer sleeps between arrivals, exactly as the hand-rolled
+    /// producer/consumer threads used to behave.
+    pub fn drive(&self, engine: &Engine, model: &str) -> Result<Vec<Completion>> {
+        let per = engine.input_len(model)?;
+        let mut rng = Rng::new(self.seed);
+        let mut tickets = Vec::with_capacity(self.requests);
+        for _ in 0..self.requests {
+            let dt = rng.exp(self.rate);
+            std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
+            tickets.push(engine.submit(model, rng.normal_vec(per))?);
+        }
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+}
+
+/// Print the canonical serving report for one model: wall-clock section
+/// (throughput, mean/p50/p95/p99/max latency) and the photonic section
+/// (FPS, FPS/W, EPB, energy) — shared by `sonic serve` and the examples.
+pub fn print_report(m: &ModelMetrics) {
+    println!("== serving report: {} ({} backend) ==", m.model, m.backend);
+    println!("  completed          {}", m.serve.completed);
+    println!(
+        "  batches            {} (mean size {:.2})",
+        m.serve.batches,
+        m.serve.mean_batch()
+    );
+    println!("  wall throughput    {:.1} req/s", m.serve.wall_fps());
+    println!("  mean wall latency  {:?}", m.serve.mean_wall_latency());
+    println!("  p50 wall latency   {:?}", m.p50);
+    println!("  p95 wall latency   {:?}", m.p95);
+    println!("  p99 wall latency   {:?}", m.p99);
+    println!("  max wall latency   {:?}", m.serve.max_wall);
+    println!("  photonic FPS       {:.0}", m.serve.photonic_fps());
+    println!("  photonic FPS/W     {:.1}", m.serve.photonic_fps_per_watt());
+    println!("  photonic EPB       {}", si(m.photonic_epb_j, "J/b"));
+    println!(
+        "  photonic energy    {}",
+        si(m.serve.photonic_energy_j, "J")
+    );
+}

@@ -1,5 +1,5 @@
 //! Batch-pipelining model: how per-inference photonic cost amortizes when
-//! the router batches B requests (used by `coordinator::serve` and the
+//! the router batches B requests (used by `crate::serve` and the
 //! serving examples).
 //!
 //! A batch streams through the VDU array back-to-back: per-layer setup

@@ -1,0 +1,422 @@
+//! `sonic::serve::Engine` integration tests: handle-based submission,
+//! multi-model routing, backpressure, graceful shutdown, and per-model
+//! photonic accounting agreeing with the compiled plan.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use sonic::arch::SonicConfig;
+use sonic::model::ModelDesc;
+use sonic::plan::cached;
+use sonic::serve::{
+    BackendChoice, Engine, InferenceBackend, NullBackend, ServeConfig,
+};
+use sonic::util::err::Result;
+
+fn null_backend(input_len: usize) -> Arc<NullBackend> {
+    Arc::new(NullBackend {
+        input_len,
+        n_classes: 10,
+    })
+}
+
+/// Backend whose batches block while the test holds `gate` — makes
+/// queue-full and in-flight states deterministic.
+struct GatedBackend {
+    gate: Arc<Mutex<()>>,
+    inner: NullBackend,
+}
+
+impl InferenceBackend for GatedBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let _g = self.gate.lock().unwrap();
+        self.inner.infer_batch(inputs)
+    }
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+}
+
+#[test]
+fn ticket_wait_returns_the_matching_requests_logits() {
+    // NullBackend: logits[c] = sum of x[i] with i % 10 == c.  A one-hot
+    // input at position j therefore yields exactly logits[j % 10] == 1.0,
+    // so each ticket proves it carried *its* request through the batcher.
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            queue_cap: 64,
+        })
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(null_backend(784)),
+        )
+        .build()
+        .unwrap();
+    let tickets: Vec<_> = (0..20)
+        .map(|j| {
+            let mut x = vec![0.0f32; 784];
+            x[j] = 1.0;
+            engine.submit("mnist", x).unwrap()
+        })
+        .collect();
+    for (j, t) in tickets.into_iter().enumerate() {
+        let c = t.wait().unwrap();
+        assert_eq!(c.argmax, j % 10, "ticket {j} got another request's logits");
+        assert!((c.logits[j % 10] - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn concurrent_submitters_across_two_models() {
+    let mnist = ModelDesc::builtin("mnist").unwrap();
+    let svhn = ModelDesc::builtin("svhn").unwrap();
+    let svhn_len = svhn.input_len();
+    let engine = Arc::new(
+        Engine::builder()
+            .serve_config(ServeConfig {
+                max_batch: 8,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 256,
+            })
+            .model_desc(mnist, BackendChoice::Custom(null_backend(784)))
+            .model_desc(svhn, BackendChoice::Custom(null_backend(svhn_len)))
+            .build()
+            .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for w in 0..4 {
+        let engine = Arc::clone(&engine);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let (model, len) = if (w + i) % 2 == 0 {
+                    ("mnist", 784)
+                } else {
+                    ("svhn", svhn_len)
+                };
+                let c = engine.submit(model, vec![0.5; len]).unwrap().wait().unwrap();
+                assert_eq!(c.logits.len(), 10);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = engine.metrics();
+    assert_eq!(m.completed(), 40);
+    assert_eq!(m.model("mnist").unwrap().serve.completed, 20);
+    assert_eq!(m.model("svhn").unwrap().serve.completed, 20);
+}
+
+#[test]
+fn per_model_photonic_metrics_match_cached_plans() {
+    // Acceptance: one engine serving two models concurrently, each model's
+    // photonic accounting equal to its own compiled plan's numbers.
+    // max_batch = 1 makes every batch size-1, so the expected totals are
+    // an exact fold of plan.batch_latency_s(1) / batch_energy_j(1).
+    let cfg = SonicConfig::paper_best();
+    let mnist = ModelDesc::builtin("mnist").unwrap();
+    let svhn = ModelDesc::builtin("svhn").unwrap();
+    let svhn_len = svhn.input_len();
+    let engine = Arc::new(
+        Engine::builder()
+            .arch(cfg.clone())
+            .serve_config(ServeConfig {
+                max_batch: 1,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 256,
+            })
+            .model_desc(mnist.clone(), BackendChoice::Custom(null_backend(784)))
+            .model_desc(svhn.clone(), BackendChoice::Custom(null_backend(svhn_len)))
+            .build()
+            .unwrap(),
+    );
+    let (n_mnist, n_svhn) = (12u64, 7u64);
+    let t1 = {
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let tickets: Vec<_> = (0..n_mnist)
+                .map(|_| engine.submit("mnist", vec![1.0; 784]).unwrap())
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+        })
+    };
+    let tickets: Vec<_> = (0..n_svhn)
+        .map(|_| engine.submit("svhn", vec![1.0; svhn_len]).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    t1.join().unwrap();
+    engine.shutdown();
+
+    let m = engine.metrics();
+    for (name, desc, n) in [("mnist", &mnist, n_mnist), ("svhn", &svhn, n_svhn)] {
+        let plan = cached(desc, &cfg);
+        assert!(Arc::ptr_eq(&engine.plan(name).unwrap(), &plan));
+        let mm = m.model(name).unwrap();
+        assert_eq!(mm.serve.completed, n, "{name}");
+        assert_eq!(mm.serve.batches, n, "{name}: max_batch=1");
+        let expect_t = (0..n).fold(0.0, |acc, _| acc + plan.batch_latency_s(1));
+        let expect_e = (0..n).fold(0.0, |acc, _| acc + plan.batch_energy_j(1));
+        assert_eq!(mm.serve.photonic_time_s, expect_t, "{name}");
+        assert_eq!(mm.serve.photonic_energy_j, expect_e, "{name}");
+        // EPB in the snapshot is energy over bits moved for this model
+        let want_epb =
+            mm.serve.photonic_energy_j / (n as f64 * plan.bits_per_inference);
+        assert!((mm.photonic_epb_j - want_epb).abs() < want_epb * 1e-12, "{name}");
+    }
+}
+
+#[test]
+fn shutdown_completes_all_in_flight_tickets() {
+    let gate = Arc::new(Mutex::new(()));
+    let backend = Arc::new(GatedBackend {
+        gate: Arc::clone(&gate),
+        inner: NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        },
+    });
+    let engine = Arc::new(
+        Engine::builder()
+            .serve_config(ServeConfig {
+                max_batch: 4,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 64,
+            })
+            .model_desc(
+                ModelDesc::builtin("mnist").unwrap(),
+                BackendChoice::Custom(backend),
+            )
+            .build()
+            .unwrap(),
+    );
+    // Hold the gate so everything stays queued or in flight, then shut
+    // down while requests are pending.
+    let tickets: Vec<_> = {
+        let _held = gate.lock().unwrap();
+        let tickets: Vec<_> = (0..16)
+            .map(|_| engine.submit("mnist", vec![0.1; 784]).unwrap())
+            .collect();
+        // shutdown() must block until the queue drains
+        let shutdown = {
+            let engine = Arc::clone(&engine);
+            std::thread::spawn(move || engine.shutdown())
+        };
+        drop(_held); // release the backend; drain proceeds
+        shutdown.join().unwrap();
+        tickets
+    };
+    for t in &tickets {
+        let c = t.wait().expect("in-flight ticket must complete at shutdown");
+        assert_eq!(c.logits.len(), 10);
+    }
+    // post-shutdown: the engine refuses new work
+    let e = engine.submit("mnist", vec![0.0; 784]).unwrap_err();
+    assert!(e.to_string().contains("shut down"), "{e}");
+    assert_eq!(engine.metrics().completed(), 16);
+}
+
+#[test]
+fn full_queue_backpressure_try_submit_returns_none_then_recovers() {
+    let gate = Arc::new(Mutex::new(()));
+    let backend = Arc::new(GatedBackend {
+        gate: Arc::clone(&gate),
+        inner: NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        },
+    });
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            queue_cap: 2,
+        })
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(backend),
+        )
+        .build()
+        .unwrap();
+    let mut tickets = Vec::new();
+    let saw_full = {
+        let _held = gate.lock().unwrap();
+        let mut saw_full = false;
+        // worker blocks on the gated batch; cap-2 queue must fill
+        for _ in 0..50 {
+            match engine.try_submit("mnist", vec![0.2; 784]).unwrap() {
+                Some(t) => tickets.push(t),
+                None => {
+                    saw_full = true;
+                    break;
+                }
+            }
+        }
+        saw_full
+    };
+    assert!(saw_full, "try_submit never reported a full queue");
+    assert!(tickets.len() >= 2, "queue_cap requests were accepted first");
+    // gate released: everything accepted so far must complete
+    for t in &tickets {
+        t.wait().unwrap();
+    }
+    // and a blocking submit goes straight through again
+    let c = engine.submit("mnist", vec![0.3; 784]).unwrap().wait().unwrap();
+    assert_eq!(c.logits.len(), 10);
+    engine.shutdown();
+}
+
+#[test]
+fn bad_inputs_error_instead_of_panicking() {
+    let engine = Engine::builder()
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(null_backend(784)),
+        )
+        .build()
+        .unwrap();
+    let e = engine.submit("mnist", vec![0.0; 3]).unwrap_err();
+    assert!(e.to_string().contains("bad input length"), "{e}");
+    let e = engine.submit("nope", vec![0.0; 784]).unwrap_err();
+    assert!(e.to_string().contains("not registered"), "{e}");
+    // the engine still serves fine afterwards
+    engine.submit("mnist", vec![0.0; 784]).unwrap().wait().unwrap();
+}
+
+#[test]
+fn short_output_backend_fails_tickets_instead_of_hanging() {
+    // A Custom backend violating the one-output-per-input contract must
+    // fail the whole batch's tickets, not silently drop the tail.
+    struct ShortBackend;
+    impl InferenceBackend for ShortBackend {
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs.iter().skip(1).map(|_| vec![0.0; 10]).collect())
+        }
+        fn input_len(&self) -> usize {
+            784
+        }
+    }
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 2,
+            batch_window: Duration::from_millis(50),
+            queue_cap: 8,
+        })
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(Arc::new(ShortBackend)),
+        )
+        .build()
+        .unwrap();
+    let t1 = engine.submit("mnist", vec![0.0; 784]).unwrap();
+    let t2 = engine.submit("mnist", vec![0.0; 784]).unwrap();
+    for t in [t1, t2] {
+        let e = t.wait().unwrap_err();
+        assert!(e.to_string().contains("outputs"), "{e}");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn builder_rejects_unknown_model_name() {
+    let e = Engine::builder()
+        .model("not-a-model", BackendChoice::Plan)
+        .build()
+        .unwrap_err();
+    assert!(e.to_string().contains("unknown model"), "{e}");
+}
+
+#[test]
+fn builder_rejects_empty_and_duplicate_registration() {
+    assert!(Engine::builder().build().is_err());
+    let e = Engine::builder()
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(null_backend(784)),
+        )
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(null_backend(784)),
+        )
+        .build()
+        .unwrap_err();
+    assert!(e.to_string().contains("twice"), "{e}");
+}
+
+#[test]
+fn panicking_backend_fails_its_tickets_but_worker_survives() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    struct PanicOnFirst {
+        tripped: AtomicBool,
+        inner: NullBackend,
+    }
+    impl InferenceBackend for PanicOnFirst {
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            if !self.tripped.swap(true, Ordering::SeqCst) {
+                panic!("kaboom");
+            }
+            self.inner.infer_batch(inputs)
+        }
+        fn input_len(&self) -> usize {
+            self.inner.input_len()
+        }
+    }
+    let engine = Engine::builder()
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(Arc::new(PanicOnFirst {
+                tripped: AtomicBool::new(false),
+                inner: NullBackend {
+                    input_len: 784,
+                    n_classes: 10,
+                },
+            })),
+        )
+        .build()
+        .unwrap();
+    // first batch panics: its ticket must resolve to an error, not hang
+    let e = engine
+        .submit("mnist", vec![0.0; 784])
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(e.to_string().contains("panicked"), "{e}");
+    // the worker thread survived the panic and keeps serving the model
+    let c = engine.submit("mnist", vec![0.0; 784]).unwrap().wait().unwrap();
+    assert_eq!(c.logits.len(), 10);
+    engine.shutdown();
+}
+
+#[test]
+fn try_wait_polls_without_blocking() {
+    let gate = Arc::new(Mutex::new(()));
+    let backend = Arc::new(GatedBackend {
+        gate: Arc::clone(&gate),
+        inner: NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        },
+    });
+    let engine = Engine::builder()
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(backend),
+        )
+        .build()
+        .unwrap();
+    let t = {
+        let _held = gate.lock().unwrap();
+        let t = engine.submit("mnist", vec![0.0; 784]).unwrap();
+        assert!(t.try_wait().unwrap().is_none(), "gated request already done?");
+        t
+    };
+    let c = t.wait().unwrap();
+    assert_eq!(c.logits.len(), 10);
+    assert!(t.try_wait().unwrap().is_some());
+    engine.shutdown();
+}

@@ -1,8 +1,8 @@
 //! Cross-module integration tests: dataflow compression feeding the
 //! scheduler, scheduler agreeing with the analytic simulator, baselines
-//! reproducing the paper's comparative shape, router serving over a local
-//! backend, and artifact descriptors (when built) agreeing with weight
-//! packs.
+//! reproducing the paper's comparative shape, the serve engine over a
+//! local backend, and artifact descriptors (when built) agreeing with
+//! weight packs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,11 +12,9 @@ use sonic::baselines::all_platforms;
 use sonic::coordinator::compress::{compress_fc, fc_product};
 use sonic::coordinator::convflow::{conv2d_compressed, CompressedKernel};
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
-use sonic::coordinator::serve::{
-    InferenceBackend, NullBackend, Router, ServeConfig, ServeMetrics,
-};
 use sonic::model::{LayerKind, ModelDesc};
-use sonic::plan::{cached, ModelPlan, PlanBackend, PlanExecutor};
+use sonic::plan::{cached, ModelPlan, PlanExecutor};
+use sonic::serve::{BackendChoice, Engine, NullBackend, ServeConfig};
 use sonic::sim::{ablation, batch, dse, simulate};
 use sonic::sparsity::ColMatrix;
 use sonic::tensor::swt;
@@ -245,33 +243,46 @@ fn served_photonic_accounting_matches_plan_and_batch_model_exactly() {
         input_len: 784,
         n_classes: 10,
     });
-    let router = Router::new(
-        backend,
-        model.clone(),
-        cfg.clone(),
-        ServeConfig {
-            max_batch: 4,
-            batch_window: Duration::from_millis(2),
+    // max_batch = 1 makes every served batch a singleton regardless of
+    // producer/worker timing, so the expected totals are an exact fold of
+    // the plan's batch-1 numbers — no wall-clock window to race against.
+    let engine = Engine::builder()
+        .arch(cfg.clone())
+        .serve_config(ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
             queue_cap: 16,
-        },
-    );
-    for _ in 0..4 {
-        router.submit(vec![1.0; 784]);
+        })
+        .model_desc(model.clone(), BackendChoice::Custom(backend))
+        .build()
+        .unwrap();
+    let tickets: Vec<_> = (0..4)
+        .map(|_| engine.submit("mnist", vec![1.0; 784]).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
     }
-    let mut m = ServeMetrics::default();
-    let done = router.drain_batch(&mut m).unwrap();
-    assert_eq!(done.len(), 4);
+    engine.shutdown();
+    let m = engine.metrics();
+    let m = &m.model("mnist").unwrap().serve;
+    assert_eq!(m.completed, 4);
+    assert_eq!(m.batches, 4, "max_batch=1 -> singleton batches");
 
-    // served == plan == sim::batch, bit-for-bit: no drift possible.
-    assert_eq!(m.photonic_time_s, plan.batch_latency_s(4));
-    assert_eq!(m.photonic_energy_j, plan.batch_energy_j(4));
+    // served == plan, bit-for-bit: no drift possible.
+    let expect_t = (0..4).fold(0.0, |acc, _| acc + plan.batch_latency_s(1));
+    let expect_e = (0..4).fold(0.0, |acc, _| acc + plan.batch_energy_j(1));
+    assert_eq!(m.photonic_time_s, expect_t);
+    assert_eq!(m.photonic_energy_j, expect_e);
+
+    // and the plan's batch amortization is exactly what sim::batch reports
+    // (pure functions of the same compiled plan, no serving timing).
     let bs = batch::batched(&model, &cfg, 4);
     assert_eq!(bs.latency_s, plan.batch_latency_s(4));
     assert_eq!(bs.energy_j, plan.batch_energy_j(4));
 }
 
 #[test]
-fn plan_cache_shared_between_router_and_simulator() {
+fn plan_cache_shared_between_engine_and_simulator() {
     let model = ModelDesc::builtin("svhn").unwrap();
     let cfg = SonicConfig::paper_best();
     let direct = cached(&model, &cfg);
@@ -279,45 +290,48 @@ fn plan_cache_shared_between_router_and_simulator() {
         input_len: model.input_len(),
         n_classes: 10,
     });
-    let router = Router::new(backend, model, cfg, ServeConfig::default());
-    assert!(Arc::ptr_eq(router.plan(), &direct));
+    let engine = Engine::builder()
+        .arch(cfg)
+        .model_desc(model, BackendChoice::Custom(backend))
+        .build()
+        .unwrap();
+    assert!(Arc::ptr_eq(&engine.plan("svhn").unwrap(), &direct));
 }
 
 #[test]
-fn router_serves_through_plan_backend() {
+fn engine_serves_through_plan_backend() {
     // Functional serving with zero PJRT: batched sparse kernels over the
-    // compiled plan layout.
+    // compiled plan layout, selected by BackendChoice::Plan.
     let desc = ModelDesc::builtin("mnist").unwrap();
-    let backend = Arc::new(PlanBackend::synthetic(&desc, 11));
-    let input_len = backend.input_len();
-    assert_eq!(input_len, desc.input_len());
     let n_classes = desc.n_classes;
-    let router = Router::new(
-        backend,
-        desc,
-        SonicConfig::paper_best(),
-        ServeConfig {
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
             max_batch: 4,
             batch_window: Duration::from_millis(2),
             queue_cap: 64,
-        },
-    );
+        })
+        .synthetic_seed(11)
+        .model_desc(desc.clone(), BackendChoice::Plan)
+        .build()
+        .unwrap();
+    assert_eq!(engine.backend_kind("mnist").unwrap(), "plan");
+    let input_len = engine.input_len("mnist").unwrap();
+    assert_eq!(input_len, desc.input_len());
     let mut rng = Rng::new(13);
-    for _ in 0..8 {
-        router.submit(rng.normal_vec(input_len));
+    let tickets: Vec<_> = (0..8)
+        .map(|_| engine.submit("mnist", rng.normal_vec(input_len)).unwrap())
+        .collect();
+    for t in tickets {
+        let c = t.wait().unwrap();
+        assert_eq!(c.logits.len(), n_classes);
+        assert!(c.logits.iter().all(|v| v.is_finite()));
     }
-    let mut metrics = ServeMetrics::default();
-    let mut done = 0;
-    while done < 8 {
-        let completions = router.drain_batch(&mut metrics).unwrap();
-        for c in &completions {
-            assert_eq!(c.logits.len(), n_classes);
-            assert!(c.logits.iter().all(|v| v.is_finite()));
-        }
-        done += completions.len();
-    }
-    assert_eq!(metrics.completed, 8);
-    assert!(metrics.photonic_fps() > 0.0);
+    engine.shutdown();
+    let m = engine.metrics();
+    let m = m.model("mnist").unwrap();
+    assert_eq!(m.serve.completed, 8);
+    assert!(m.serve.photonic_fps() > 0.0);
+    assert!(m.p99 >= m.p50);
 }
 
 #[test]
@@ -337,41 +351,35 @@ fn plan_executor_batch_equals_one_by_one() {
 }
 
 // ---------------------------------------------------------------------------
-// Router over a local backend (PJRT-free serving path).
+// Engine over a local backend (PJRT-free serving path).
 
 #[test]
-fn router_serves_a_stream_end_to_end() {
+fn engine_serves_a_stream_end_to_end() {
     let model = ModelDesc::builtin("svhn").unwrap();
     let input_len = model.input_hw * model.input_hw * model.input_ch;
     let backend = Arc::new(NullBackend {
         input_len,
         n_classes: 10,
     });
-    let router = Router::new(
-        backend,
-        model,
-        SonicConfig::paper_best(),
-        ServeConfig {
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
             max_batch: 4,
             batch_window: Duration::from_millis(2),
             queue_cap: 256,
-        },
-    );
-    let producer = {
-        let router = Arc::clone(&router);
-        std::thread::spawn(move || {
-            let mut rng = Rng::new(5);
-            for _ in 0..32 {
-                router.submit(rng.normal_vec(input_len));
-            }
         })
-    };
-    let mut metrics = ServeMetrics::default();
-    let mut done = 0;
-    while done < 32 {
-        done += router.drain_batch(&mut metrics).unwrap().len();
+        .model_desc(model, BackendChoice::Custom(backend))
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(5);
+    let tickets: Vec<_> = (0..32)
+        .map(|_| engine.submit("svhn", rng.normal_vec(input_len)).unwrap())
+        .collect();
+    for t in &tickets {
+        t.wait().unwrap();
     }
-    producer.join().unwrap();
+    engine.shutdown();
+    let m = engine.metrics();
+    let metrics = &m.model("svhn").unwrap().serve;
     assert_eq!(metrics.completed, 32);
     assert!(metrics.batches <= 32);
     assert!(metrics.photonic_fps() > 0.0);

@@ -6,12 +6,10 @@
 //! compiles, SWT weights bind positionally, logits match across batch
 //! sizes, and the Pallas-kernel VDU artifacts compute correct dot products.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use sonic::arch::SonicConfig;
-use sonic::coordinator::serve::{InferenceBackend, Router, ServeConfig, ServeMetrics};
-use sonic::model::ModelDesc;
+use sonic::serve::{BackendChoice, Engine, InferenceBackend, ServeConfig};
 use sonic::runtime::{load_manifest, PjrtBackend, Runtime};
 use sonic::tensor::Tensor;
 use sonic::util::rng::Rng;
@@ -139,13 +137,7 @@ fn trained_model_beats_chance_on_synthetic_eval() {
     let outs = backend.infer_batch(&inputs).unwrap();
     let mut classes = std::collections::BTreeSet::new();
     for o in &outs {
-        let c = o
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        classes.insert(c);
+        classes.insert(sonic::serve::argmax(o));
     }
     // logits must vary across random inputs (weights actually loaded)
     assert!(
@@ -156,29 +148,31 @@ fn trained_model_beats_chance_on_synthetic_eval() {
 }
 
 #[test]
-fn router_over_pjrt_serves_batches() {
+fn engine_over_pjrt_serves_batches() {
     let Some(dir) = artifacts() else { return };
-    let backend = Arc::new(PjrtBackend::load(&dir, "mnist").unwrap());
-    let desc = ModelDesc::load_or_builtin("mnist");
-    let router = Router::new(
-        backend.clone(),
-        desc,
-        SonicConfig::paper_best(),
-        ServeConfig {
+    let engine = Engine::builder()
+        .arch(SonicConfig::paper_best())
+        .artifacts_dir(&dir)
+        .serve_config(ServeConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             queue_cap: 64,
-        },
-    );
+        })
+        .model("mnist", BackendChoice::Pjrt)
+        .build()
+        .unwrap();
+    assert_eq!(engine.backend_kind("mnist").unwrap(), "pjrt");
+    let per = engine.input_len("mnist").unwrap();
     let mut rng = Rng::new(8);
-    for _ in 0..12 {
-        router.submit(rng.normal_vec(backend.input_len()));
+    let tickets: Vec<_> = (0..12)
+        .map(|_| engine.submit("mnist", rng.normal_vec(per)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
     }
-    let mut metrics = ServeMetrics::default();
-    let mut done = 0;
-    while done < 12 {
-        done += router.drain_batch(&mut metrics).unwrap().len();
-    }
+    engine.shutdown();
+    let m = engine.metrics();
+    let metrics = &m.model("mnist").unwrap().serve;
     assert_eq!(metrics.completed, 12);
     assert!(metrics.photonic_fps() > 0.0);
     assert!(metrics.photonic_fps_per_watt() > 0.0);
