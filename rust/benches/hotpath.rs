@@ -25,17 +25,37 @@ use sonic::coordinator::convflow::{
 };
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
-use sonic::plan::{cached, FcExec, ModelPlan, PlanBackend};
+use sonic::plan::{cached, FcExec, KernelChoice, ModelPlan, PlanBackend};
 use sonic::serve::{BackendChoice, Engine, InferenceBackend, ServeConfig};
 use sonic::sim::simulate;
 use sonic::sparsity::ColMatrix;
+use sonic::tensor::BatchTensor;
 use sonic::util::bench::{black_box, report, Bencher, Stats};
 use sonic::util::json::{arr, num, obj, s};
 use sonic::util::rng::Rng;
 
+/// `--iters N` bounds every benchmark to N samples (CI smoke mode:
+/// record the perf trajectory without full measurement time).
+fn bench_iters() -> Option<usize> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--iters" {
+            return args.next().and_then(|v| v.parse().ok());
+        }
+    }
+    None
+}
+
+fn bencher() -> Bencher {
+    match bench_iters() {
+        Some(n) => Bencher::bounded(n),
+        None => Bencher::default(),
+    }
+}
+
 /// Report one line and remember it for the JSON artifact.
 fn run(results: &mut Vec<(String, Stats)>, name: &str, f: impl FnMut()) -> Stats {
-    let st = Bencher::default().run(f);
+    let st = bencher().run(f);
     report(name, &st);
     results.push((name.to_string(), st.clone()));
     st
@@ -149,6 +169,80 @@ fn main() {
          (target >= 2x){}",
         if speedup >= 2.0 { "" } else { "  ** BELOW TARGET **" }
     );
+
+    // --- structurally-sparse kernel micro-bench: dense vs CSC -----------
+    //
+    // The acceptance gate for the compiled CSC kernels: on the svhn-sized
+    // FC matrix, compare the dense column-streaming fallback against the
+    // CSC batch kernel across weight sparsity x batch size.  Both sides
+    // run through `forward_batch_into` with persistent buffers, so the
+    // comparison is pure kernel time.  Results go to BENCH_kernels.json.
+    println!("\n=== kernel micro-bench: dense vs CSC (272x1792 FC) ===\n");
+    let mut kernel_entries = Vec::new();
+    let mut csc_speedup_gate = 0.0; // 90% sparsity, batch 8 (target >= 2x)
+    for &sparsity in &[0.5f64, 0.8, 0.9, 0.95] {
+        let wk = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, sparsity));
+        let dense = FcExec::with_kernel(wk.clone(), false, 0.0, KernelChoice::Dense);
+        let csc = FcExec::with_kernel(wk, false, 0.0, KernelChoice::Csc);
+        for &bn in &[1usize, 8, 64] {
+            let inputs: Vec<Vec<f32>> = (0..bn).map(|_| rng.normal_vec(cols)).collect();
+            let (mut xt, mut yt) = (Vec::new(), Vec::new());
+            let mut out = BatchTensor::new();
+            let d = run(
+                &mut results,
+                &format!("fc dense   sp={sparsity:.2} batch={bn}"),
+                || {
+                    dense
+                        .forward_batch_into(&inputs, &mut xt, &mut yt, &mut out)
+                        .unwrap();
+                    black_box(&out);
+                },
+            );
+            let c = run(
+                &mut results,
+                &format!("fc csc     sp={sparsity:.2} batch={bn}"),
+                || {
+                    csc.forward_batch_into(&inputs, &mut xt, &mut yt, &mut out)
+                        .unwrap();
+                    black_box(&out);
+                },
+            );
+            let kernel_speedup = d.mean_ns / c.mean_ns;
+            println!(
+                "    -> csc speedup {kernel_speedup:.2}x ({:.0} ns/inf vs {:.0} ns/inf dense)\n",
+                c.mean_ns / bn as f64,
+                d.mean_ns / bn as f64
+            );
+            if sparsity == 0.9 && bn == 8 {
+                csc_speedup_gate = kernel_speedup;
+            }
+            kernel_entries.push(obj(vec![
+                ("sparsity", num(sparsity)),
+                ("batch", num(bn as f64)),
+                ("ns_per_inf", num(c.mean_ns / bn as f64)),
+                ("dense_ns_per_inf", num(d.mean_ns / bn as f64)),
+                ("speedup_vs_dense", num(kernel_speedup)),
+            ]));
+        }
+    }
+    println!(
+        "CSC kernel speedup at 90% weight sparsity, batch 8: {csc_speedup_gate:.2}x \
+         (target >= 2x){}",
+        if csc_speedup_gate >= 2.0 { "" } else { "  ** BELOW TARGET **" }
+    );
+    let kernels_json = obj(vec![
+        ("bench", s("kernels")),
+        ("rows", num(rows as f64)),
+        ("cols", num(cols as f64)),
+        ("csc_speedup_90sp_b8", num(csc_speedup_gate)),
+        ("results", arr(kernel_entries)),
+    ]);
+    let kout = std::env::var("SONIC_BENCH_KERNELS_JSON")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    match std::fs::write(&kout, kernels_json.to_pretty()) {
+        Ok(()) => println!("kernel results written to {kout}"),
+        Err(e) => eprintln!("could not write {kout}: {e}"),
+    }
 
     // --- engine facade overhead vs the raw backend ----------------------
     //

@@ -158,6 +158,81 @@ pub fn conv2d_compressed(
     out
 }
 
+/// Build the full SAME-padded im2col patch matrix of one image: row `p`
+/// (output pixel `p = oy*w + ox`, row-major) holds that pixel's
+/// `kh*kw*c` unrolled patch.  `out` must be exactly `h*w*kh*kw*c` long.
+///
+/// This is the batched-serving form of [`extract_patch_into`]: patches
+/// for a whole (image, layer) are materialized once, then every
+/// compressed kernel streams across all of them — patch extraction is
+/// hoisted out of the per-kernel (and per-request) loop.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    out: &mut [f32],
+) {
+    let kvol = kh * kw * c;
+    assert_eq!(x.len(), h * w * c, "image size mismatch");
+    assert_eq!(out.len(), h * w * kvol, "patch matrix size mismatch");
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut base = 0usize;
+    for oy in 0..h {
+        for ox in 0..w {
+            let row = &mut out[base..base + kvol];
+            let mut o = 0usize;
+            for dy in 0..kh {
+                let iy = oy as isize + dy as isize - ph as isize;
+                if iy < 0 || iy >= h as isize {
+                    row[o..o + kw * c].fill(0.0);
+                    o += kw * c;
+                    continue;
+                }
+                let row_base = iy as usize * w;
+                for dx in 0..kw {
+                    let ix = ox as isize + dx as isize - pw as isize;
+                    if ix < 0 || ix >= w as isize {
+                        row[o..o + c].fill(0.0);
+                    } else {
+                        let src = (row_base + ix as usize) * c;
+                        row[o..o + c].copy_from_slice(&x[src..src + c]);
+                    }
+                    o += c;
+                }
+            }
+            base += kvol;
+        }
+    }
+}
+
+/// Stream each compressed kernel across every row of an im2col patch
+/// matrix: `out[p*cout + oc] = dot(kernels[oc], patch p)`.  The kernel is
+/// the outer loop, so one kernel's values/gather indices stay hot in
+/// cache while it sweeps the whole patch matrix (all pixels of all
+/// requests in the shard) — the Phantom-style lookahead over the
+/// compressed operand.
+pub fn conv_patches_compressed(
+    patches: &[f32],
+    kvol: usize,
+    kernels: &[CompressedKernel],
+    out: &mut [f32],
+) {
+    assert!(kvol > 0, "empty kernel volume");
+    assert_eq!(patches.len() % kvol, 0, "ragged patch matrix");
+    let n_px = patches.len() / kvol;
+    let cout = kernels.len();
+    assert_eq!(out.len(), n_px * cout, "output size mismatch");
+    for (oc, k) in kernels.iter().enumerate() {
+        for (p, patch) in patches.chunks_exact(kvol).enumerate() {
+            out[p * cout + oc] = compressed_dot(k, patch);
+        }
+    }
+}
+
 /// Measure activation sparsity of an IF patch stream (drives the gating
 /// accounting in the schedule model).
 pub fn patch_sparsity(patch: &[f32]) -> f64 {
@@ -245,5 +320,39 @@ mod tests {
         let x: Vec<f32> = (0..25).map(|i| i as f32).collect();
         let p = extract_patch(&x, 5, 5, 1, 2, 2, 3, 3);
         assert_eq!(p, vec![6., 7., 8., 11., 12., 13., 16., 17., 18.]);
+    }
+
+    #[test]
+    fn im2col_rows_match_extract_patch() {
+        let mut rng = Rng::new(11);
+        let (h, w, c, kh, kw) = (5, 4, 3, 3, 3);
+        let x = rng.normal_vec(h * w * c);
+        let kvol = kh * kw * c;
+        let mut m = vec![f32::NAN; h * w * kvol];
+        im2col_into(&x, h, w, c, kh, kw, &mut m);
+        for oy in 0..h {
+            for ox in 0..w {
+                let want = extract_patch(&x, h, w, c, oy, ox, kh, kw);
+                let p = oy * w + ox;
+                assert_eq!(&m[p * kvol..(p + 1) * kvol], &want[..], "pixel ({oy},{ox})");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_patches_matches_conv2d() {
+        let mut rng = Rng::new(12);
+        let (h, w, cin, cout, kh, kw) = (6, 6, 2, 3, 3, 3);
+        let x = rng.sparse_vec(h * w * cin, 0.4);
+        let kernels: Vec<CompressedKernel> = (0..cout)
+            .map(|_| CompressedKernel::from_dense(&rng.sparse_vec(kh * kw * cin, 0.6)))
+            .collect();
+        let kvol = kh * kw * cin;
+        let mut patches = vec![0.0f32; h * w * kvol];
+        im2col_into(&x, h, w, cin, kh, kw, &mut patches);
+        let mut got = vec![0.0f32; h * w * cout];
+        conv_patches_compressed(&patches, kvol, &kernels, &mut got);
+        let want = conv2d_compressed(&x, h, w, cin, &kernels, kh, kw);
+        assert_eq!(got, want);
     }
 }

@@ -1,210 +1,8 @@
-//! Thread-pool + channel execution substrate (tokio substitute).
+//! Thread-pool execution substrate — relocated to [`crate::util::pool`].
 //!
-//! The serving loop needs: a bounded MPSC work queue, a small worker pool,
-//! and graceful shutdown.  Implemented on std::thread + std::sync::mpsc,
-//! with a bounded submission wrapper providing backpressure.
+//! The pool started life here as a serving-only concern; now that the
+//! plan executor shards batched kernels across it too, it lives with the
+//! other offline substrates in `util`.  This module remains as a
+//! re-export so existing `coordinator::exec::Pool` paths keep compiling.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// A fixed-size worker pool over a bounded queue.
-pub struct Pool {
-    tx: Option<SyncSender<Job>>,
-    workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
-}
-
-impl Pool {
-    /// `workers` threads, queue bounded at `queue_cap` jobs.
-    pub fn new(workers: usize, queue_cap: usize) -> Self {
-        assert!(workers > 0);
-        let (tx, rx) = sync_channel::<Job>(queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
-        let handles = (0..workers)
-            .map(|_| {
-                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
-                let inf = Arc::clone(&in_flight);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match job {
-                        Ok(j) => {
-                            // A panicking job must not leak `in_flight`
-                            // (that would wedge `drain` and starve the
-                            // backpressure accounting) nor kill the
-                            // worker: catch the unwind, then decrement
-                            // unconditionally.
-                            let _ = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(j),
-                            );
-                            inf.fetch_sub(1, Ordering::SeqCst);
-                        }
-                        Err(_) => break, // channel closed
-                    }
-                })
-            })
-            .collect();
-        Self {
-            tx: Some(tx),
-            workers: handles,
-            in_flight,
-        }
-    }
-
-    /// Submit a job, blocking when the queue is full (backpressure).
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("workers gone");
-    }
-
-    /// Try to submit without blocking; returns false when saturated.
-    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
-        match self
-            .tx
-            .as_ref()
-            .expect("pool shut down")
-            .try_send(Box::new(f))
-        {
-            Ok(()) => true,
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                false
-            }
-        }
-    }
-
-    pub fn pending(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
-    }
-
-    /// Wait until every submitted job has completed.
-    pub fn drain(&self) {
-        while self.pending() > 0 {
-            std::thread::yield_now();
-        }
-    }
-}
-
-impl Drop for Pool {
-    fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel; workers exit on recv Err
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::sync::atomic::AtomicU64;
-
-    #[test]
-    fn runs_all_jobs() {
-        let pool = Pool::new(4, 16);
-        let counter = Arc::new(AtomicU64::new(0));
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            pool.submit(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-            });
-        }
-        pool.drain();
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
-    }
-
-    #[test]
-    fn try_submit_reports_saturation() {
-        let pool = Pool::new(1, 1);
-        let gate = Arc::new(Mutex::new(()));
-        let guard = gate.lock().unwrap();
-        // first job blocks on the gate; queue then fills
-        let g2 = Arc::clone(&gate);
-        pool.submit(move || {
-            let _guard = g2.lock().unwrap();
-        });
-        // Fill the 1-slot queue (may need a moment for the worker to pick
-        // up the first job).
-        let mut saturated = false;
-        for _ in 0..1000 {
-            if !pool.try_submit(|| {}) {
-                saturated = true;
-                break;
-            }
-        }
-        assert!(saturated, "queue never saturated");
-        drop(guard);
-        pool.drain();
-    }
-
-    #[test]
-    fn drop_joins_workers() {
-        let pool = Pool::new(2, 4);
-        pool.submit(|| {});
-        drop(pool); // must not hang
-    }
-
-    /// Run `f` with panic reports silenced, restoring the previous hook
-    /// even when `f` itself panics (a failing assertion must not leave the
-    /// process-wide hook silenced for the rest of the test run).
-    fn with_silenced_panics<R>(f: impl FnOnce() -> R) -> R {
-        let prev = std::panic::take_hook();
-        std::panic::set_hook(Box::new(|_| {}));
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-        std::panic::set_hook(prev);
-        match result {
-            Ok(r) => r,
-            Err(p) => std::panic::resume_unwind(p),
-        }
-    }
-
-    #[test]
-    fn panicking_job_does_not_leak_in_flight_or_kill_workers() {
-        // Note: the hook is process-global, so other tests' panic output is
-        // briefly silenced too — cosmetic only, and bounded by this scope.
-        with_silenced_panics(|| {
-            let pool = Pool::new(2, 8);
-            for _ in 0..4 {
-                pool.submit(|| panic!("job blew up"));
-            }
-            pool.drain(); // would spin forever if a panic leaked the counter
-            assert_eq!(pool.pending(), 0);
-
-            // Workers survived and still execute jobs.
-            let counter = Arc::new(AtomicU64::new(0));
-            for _ in 0..8 {
-                let c = Arc::clone(&counter);
-                pool.submit(move || {
-                    c.fetch_add(1, Ordering::SeqCst);
-                });
-            }
-            pool.drain();
-            assert_eq!(counter.load(Ordering::SeqCst), 8);
-        });
-    }
-
-    #[test]
-    fn jobs_execute_concurrently() {
-        use std::time::{Duration, Instant};
-        let pool = Pool::new(4, 8);
-        let t0 = Instant::now();
-        for _ in 0..4 {
-            pool.submit(|| std::thread::sleep(Duration::from_millis(50)));
-        }
-        pool.drain();
-        // 4 x 50 ms on 4 workers must finish well under 200 ms
-        assert!(t0.elapsed() < Duration::from_millis(150));
-    }
-}
+pub use crate::util::pool::{shared, Pool};

@@ -7,7 +7,8 @@
 //! * [`schedule`] — decomposition of compressed vectors into n/m-lane
 //!   chunks and their assignment onto the `(N, K)` VDU array, with
 //!   power-gating accounting per chunk.
-//! * [`exec`] — thread-pool + channel substrate (tokio substitute).
+//! * [`exec`] — re-export of the thread-pool substrate, which now lives
+//!   in [`crate::util::pool`] (the plan executor shards batches on it).
 //!
 //! Serving (the request router / dynamic batcher) lives in
 //! [`crate::serve`]: the public [`crate::serve::Engine`] facade over the

@@ -1,40 +1,146 @@
 //! Functional execution against the compiled plan: static weight
-//! compression done **once at model-load time**, then batched sparse
-//! kernels that stream the compiled layout once per *batch*.
+//! compression done **once at model-load time**, then structurally-sparse,
+//! allocation-free, batch-parallel kernels on the serving hot path.
 //!
-//! This replaces the per-request pipeline (`compress_fc` gathering kept
-//! weight columns into a fresh matrix for every single request) on the
-//! serving hot path:
+//! What runs per batch (and what deliberately does not):
 //!
-//! * [`FcExec`] keeps the weight matrix in the column-major layout the FC
-//!   compression needs (dropping a column is skipping it) and applies each
-//!   column to every request in the batch whose activation is non-zero —
-//!   the Fig. 1 compression happens implicitly, with zero gather copies.
-//! * [`ConvExec`] compiles each output channel's kernel into the dense
-//!   value + gather-index form (`CompressedKernel`) exactly once; requests
-//!   reuse it instead of re-compressing static weights.
+//! * [`FcExec`] compiles each FC layer into one of two kernels, chosen at
+//!   compile time by measured weight density against
+//!   [`crate::plan::CSC_MAX_DENSITY`]: a true compressed-sparse-column
+//!   layout ([`CscMatrix`] — a structural zero weight is never loaded,
+//!   work is O(nnz · batch)) or the dense column-major fallback for
+//!   near-dense layers.  The CSC kernel register-blocks across the batch
+//!   (activations transposed into a `[col][batch]` tile) so each stored
+//!   non-zero costs one vectorizable batch-wide FMA.
+//! * [`ConvExec`] compiles per-output-channel compressed kernels once;
+//!   per batch it materializes the im2col patch matrix for **all**
+//!   requests into a scratch tile and streams every kernel across all
+//!   patches (patch extraction is hoisted out of the per-request loop).
+//! * [`PlanExecutor::forward_batch_flat`] threads a contiguous
+//!   [`BatchTensor`] through the layers via a ping-pong scratch pair
+//!   ([`ExecScratch`]): steady-state serving performs **zero heap
+//!   allocation per batch** — every buffer is `reset` in place.  The
+//!   caller's input batch is read by reference into the first layer,
+//!   never cloned.
+//! * Batches shard across the [`crate::util::pool`] workers
+//!   (deterministic contiguous split, each shard writing a disjoint
+//!   slice of the output), so results are bit-identical to the serial
+//!   kernel regardless of worker count.
 //!
-//! `benches/hotpath.rs` measures this against the re-planned path; the
-//! plan-cached form is the one the router serves from.
+//! `benches/hotpath.rs` measures the dense-vs-CSC kernels and writes
+//! `BENCH_kernels.json`; the plan-cached form is what the router serves.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::bail;
-use crate::coordinator::convflow::{conv2d_compressed, CompressedKernel};
-use crate::serve::InferenceBackend;
+use crate::coordinator::convflow::{
+    conv2d_compressed, conv_patches_compressed, im2col_into, CompressedKernel,
+};
 use crate::model::{LayerKind, ModelDesc};
-use crate::sparsity::{ColMatrix, SparseVec};
-use crate::tensor::Tensor;
+use crate::serve::{InferenceBackend, LayerKernelStat};
+use crate::sparsity::{ColMatrix, CscMatrix, SparseVec};
+use crate::tensor::{BatchTensor, Tensor};
 use crate::util::err::Result;
+use crate::util::pool::{shared, Pool};
 use crate::util::rng::Rng;
 
-/// Compiled FC layer: full weight matrix in column-major (CSC-flavoured)
-/// layout + per-column non-zero counts (the static side of the gating
-/// masks).  The dynamic activation sparsity is applied per request by
-/// *skipping* columns — no gather, no copy.
+use super::{choose_fc_kernel, KernelChoice};
+
+// ---------------------------------------------------------------------------
+// Batch row views: the first layer reads the caller's rows by reference.
+
+/// Read-only view of a batch: either the caller's nested rows (first
+/// layer — no up-front copy) or a flat scratch tensor (later layers).
+#[derive(Clone, Copy)]
+enum Rows<'a> {
+    Nested(&'a [Vec<f32>]),
+    Flat(&'a BatchTensor),
+}
+
+impl<'a> Rows<'a> {
+    fn batch(self) -> usize {
+        match self {
+            Rows::Nested(v) => v.len(),
+            Rows::Flat(t) => t.batch,
+        }
+    }
+
+    fn row(self, b: usize) -> &'a [f32] {
+        match self {
+            Rows::Nested(v) => &v[b],
+            Rows::Flat(t) => t.row(b),
+        }
+    }
+
+    /// Every row must be exactly `want` long (kernel contract).
+    fn check_len(self, want: usize, what: &str) -> Result<()> {
+        match self {
+            Rows::Nested(v) => {
+                for x in v {
+                    if x.len() != want {
+                        bail!("{what} input length {} != {want}", x.len());
+                    }
+                }
+            }
+            Rows::Flat(t) => {
+                if t.batch > 0 && t.len != want {
+                    bail!("{what} input length {} != {want}", t.len);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic contiguous batch split: `min(workers, batch)` shards,
+/// sizes differing by at most one.  Returns `(first_row, n_rows)` pairs.
+fn shards(batch: usize, workers: usize) -> Vec<(usize, usize)> {
+    let n = workers.min(batch).max(1);
+    let (base, rem) = (batch / n, batch % n);
+    let mut out = Vec::with_capacity(n);
+    let mut b0 = 0;
+    for s in 0..n {
+        let nb = base + usize::from(s < rem);
+        out.push((b0, nb));
+        b0 += nb;
+    }
+    out
+}
+
+fn relu_slice(y: &mut [f32]) {
+    for v in y.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+thread_local! {
+    /// CSC transpose tiles for pool-worker shards (see
+    /// [`fc_csc_shard`]): thread-local so parallel execution stays
+    /// allocation-free once each worker has warmed up.
+    static FC_TILES: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+// ---------------------------------------------------------------------------
+// FC layer.
+
+/// Compiled FC layer: the dense column-major matrix plus — when the layer
+/// is sparse enough — a true CSC compilation of it.  The kernel choice is
+/// made **once at compile time** from measured weight density
+/// ([`choose_fc_kernel`]); the dynamic activation sparsity is exploited
+/// by both kernels by skipping zero-activation columns.
 #[derive(Debug, Clone)]
 pub struct FcExec {
     /// out x in, column-major — column `c` is the weights multiplying
-    /// activation `c`.
+    /// activation `c`.  Kept as the dense fallback and the reference.
     pub weights: ColMatrix,
+    /// True compressed-sparse-column form; present iff `kernel == Csc`.
+    pub csc: Option<CscMatrix>,
+    /// Which kernel `forward` runs (chosen from measured density).
+    pub kernel: KernelChoice,
     /// Non-zeros per column (drives the analytic gating expectation).
     pub col_nnz: Vec<u32>,
     pub relu: bool,
@@ -46,9 +152,24 @@ impl FcExec {
     /// [`crate::sparsity::keep_nonzero`] are squashed to `0.0` in the
     /// executed layout (the CONV analogue drops them from the kernel
     /// vectors), so the gating accounting (`col_nnz`, `weight_sparsity`)
-    /// and `forward_batch`'s math always describe the same weights.
+    /// and the executed math always describe the same weights.
     /// `eps == 0.0` leaves the matrix untouched (exact contract).
-    pub fn new(mut weights: ColMatrix, relu: bool, eps: f32) -> Self {
+    pub fn new(weights: ColMatrix, relu: bool, eps: f32) -> Self {
+        Self::compile(weights, relu, eps, None)
+    }
+
+    /// Compile with a forced kernel choice (bench/test hook; production
+    /// uses the density policy).
+    pub fn with_kernel(weights: ColMatrix, relu: bool, eps: f32, kernel: KernelChoice) -> Self {
+        Self::compile(weights, relu, eps, Some(kernel))
+    }
+
+    fn compile(
+        mut weights: ColMatrix,
+        relu: bool,
+        eps: f32,
+        force: Option<KernelChoice>,
+    ) -> Self {
         if eps > 0.0 {
             for v in weights.data.iter_mut() {
                 if !crate::sparsity::keep_nonzero(*v, eps) {
@@ -56,7 +177,7 @@ impl FcExec {
                 }
             }
         }
-        let col_nnz = (0..weights.cols)
+        let col_nnz: Vec<u32> = (0..weights.cols)
             .map(|c| {
                 weights
                     .col(c)
@@ -65,15 +186,25 @@ impl FcExec {
                     .count() as u32
             })
             .collect();
+        let total = (weights.rows * weights.cols) as f64;
+        let nnz: u64 = col_nnz.iter().map(|&n| n as u64).sum();
+        let density = if total == 0.0 { 0.0 } else { nnz as f64 / total };
+        let kernel = force.unwrap_or_else(|| choose_fc_kernel(density));
+        let csc = match kernel {
+            KernelChoice::Csc => Some(CscMatrix::from_col_major(&weights)),
+            KernelChoice::Dense => None,
+        };
         Self {
             weights,
+            csc,
+            kernel,
             col_nnz,
             relu,
         }
     }
 
     /// Residual weight sparsity (fraction of zero entries) — what the
-    /// analytic plan power-gates.
+    /// analytic plan power-gates and the CSC kernel structurally skips.
     pub fn weight_sparsity(&self) -> f64 {
         let total = (self.weights.rows * self.weights.cols) as f64;
         if total == 0.0 {
@@ -83,45 +214,143 @@ impl FcExec {
         1.0 - nnz as f64 / total
     }
 
-    /// Batched sparse matvec: iterate the compiled layout once per batch.
-    /// Every weight column is read exactly once and applied to each request
-    /// whose activation at that column is non-zero; requests with a zero
-    /// activation skip the column — the dataflow compression of Fig. 1
-    /// without rebuilding a compressed matrix per request.
+    /// Batched matvec through the compiled kernel (legacy nested API —
+    /// allocates its result; the serving path uses the flat kernels via
+    /// [`PlanExecutor::forward_batch_flat`]).
     pub fn forward_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let rows = self.weights.rows;
-        let cols = self.weights.cols;
-        for x in inputs {
-            if x.len() != cols {
-                bail!("fc input length {} != {cols}", x.len());
-            }
+        let mut xt = Vec::new();
+        let mut yt = Vec::new();
+        let mut out = BatchTensor::new();
+        self.forward_batch_into(inputs, &mut xt, &mut yt, &mut out)?;
+        Ok(out.to_rows())
+    }
+
+    /// Allocation-reusing batched matvec: writes a `batch x rows` tensor
+    /// into `out`, using `xt`/`yt` as the CSC transpose tiles (grown on
+    /// demand, untouched on the dense path).  This is the raw kernel the
+    /// micro-bench compares dense-vs-CSC with — no per-call allocation
+    /// once the buffers are warm.
+    pub fn forward_batch_into(
+        &self,
+        inputs: &[Vec<f32>],
+        xt: &mut Vec<f32>,
+        yt: &mut Vec<f32>,
+        out: &mut BatchTensor,
+    ) -> Result<()> {
+        let rows = Rows::Nested(inputs);
+        rows.check_len(self.weights.cols, "fc")?;
+        if self.runs_csc() {
+            out.reshape(inputs.len(), self.weights.rows);
+        } else {
+            out.reset(inputs.len(), self.weights.rows);
         }
-        let mut out = vec![vec![0.0f32; rows]; inputs.len()];
-        for c in 0..cols {
-            let col = self.weights.col(c);
-            for (b, x) in inputs.iter().enumerate() {
-                let xv = x[c];
-                if xv == 0.0 {
-                    continue; // compressed away for this request
-                }
-                let y = &mut out[b];
-                for r in 0..rows {
-                    y[r] += col[r] * xv;
-                }
-            }
+        self.run_shard(rows, 0, inputs.len(), xt, yt, &mut out.data);
+        Ok(())
+    }
+
+    /// Whether the CSC kernel actually runs (the dense kernel needs a
+    /// pre-zeroed output; the CSC kernel assigns every element).
+    fn runs_csc(&self) -> bool {
+        matches!((self.kernel, &self.csc), (KernelChoice::Csc, Some(_)))
+    }
+
+    /// Run rows `[b0, b0+nb)` through the compiled kernel into `out`
+    /// (`nb * rows_out`; pre-zeroed on the dense path).  `xt`/`yt` are
+    /// the CSC transpose tiles, grown on demand; untouched on the dense
+    /// path.
+    fn run_shard(
+        &self,
+        rows: Rows<'_>,
+        b0: usize,
+        nb: usize,
+        xt: &mut Vec<f32>,
+        yt: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        match (self.kernel, self.csc.as_ref()) {
+            (KernelChoice::Csc, Some(csc)) => fc_csc_shard(csc, rows, b0, nb, xt, yt, out),
+            _ => fc_dense_shard(&self.weights, rows, b0, nb, out),
         }
         if self.relu {
-            for y in &mut out {
-                for v in y.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
+            relu_slice(out);
         }
-        Ok(out)
     }
 }
+
+/// Dense fallback: stream each stored column once per batch, skipping
+/// zero activations (Fig. 1's dynamic compression without gather copies).
+fn fc_dense_shard(w: &ColMatrix, rows: Rows<'_>, b0: usize, nb: usize, out: &mut [f32]) {
+    let rout = w.rows;
+    for c in 0..w.cols {
+        let col = w.col(c);
+        for j in 0..nb {
+            let xv = rows.row(b0 + j)[c];
+            if xv == 0.0 {
+                continue; // compressed away for this request
+            }
+            let y = &mut out[j * rout..(j + 1) * rout];
+            for (yr, &wr) in y.iter_mut().zip(col) {
+                *yr += wr * xv;
+            }
+        }
+    }
+}
+
+/// CSC kernel, register-blocked across the batch: activations are
+/// transposed into a `[col][batch]` tile (`xt`) and accumulation happens
+/// in a `[row][batch]` tile (`yt`), so each stored non-zero weight is
+/// loaded once and applied to the whole shard with one contiguous FMA
+/// loop.  Zero weights were never stored; per output element the
+/// accumulation order (ascending column) is identical to the dense
+/// kernel, so results match it exactly.
+fn fc_csc_shard(
+    csc: &CscMatrix,
+    rows: Rows<'_>,
+    b0: usize,
+    nb: usize,
+    xt: &mut Vec<f32>,
+    yt: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let (rout, cols) = (csc.rows, csc.cols);
+    // xt is fully overwritten by the transpose below — resize without a
+    // clear so the zero-fill is paid only when the tile grows, not per
+    // batch.  yt accumulates and must start zeroed every call.
+    xt.resize(cols * nb, 0.0);
+    yt.clear();
+    yt.resize(rout * nb, 0.0);
+    for j in 0..nb {
+        let x = rows.row(b0 + j);
+        for (c, &xv) in x.iter().enumerate() {
+            xt[c * nb + j] = xv;
+        }
+    }
+    for c in 0..cols {
+        let (vals, idx) = csc.col(c);
+        if vals.is_empty() {
+            continue; // whole column pruned — never loaded
+        }
+        let xrow = &xt[c * nb..(c + 1) * nb];
+        if xrow.iter().all(|&v| v == 0.0) {
+            continue; // dead activation across the whole shard
+        }
+        for (&v, &ri) in vals.iter().zip(idx) {
+            let yrow = &mut yt[ri as usize * nb..(ri as usize + 1) * nb];
+            for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                *yv += v * xv;
+            }
+        }
+    }
+    for j in 0..nb {
+        let dst = &mut out[j * rout..(j + 1) * rout];
+        for (r, d) in dst.iter_mut().enumerate() {
+            *d = yt[r * nb + j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CONV layer.
 
 /// Compiled CONV layer: per-output-channel compressed kernels (built once)
 /// plus the geometry needed to run the im2col dataflow.
@@ -167,43 +396,114 @@ impl ConvExec {
         }
     }
 
-    /// One request through conv -> ReLU -> optional 2x2 max-pool.
+    /// Unrolled patch length `kh*kw*cin`.
+    pub fn kvol(&self) -> usize {
+        self.kernel * self.kernel * self.in_ch
+    }
+
+    /// Input element count `h*h*cin`.
+    pub fn in_len(&self) -> usize {
+        self.in_hw * self.in_hw * self.in_ch
+    }
+
+    /// Pre-pool output element count `h*h*cout`.
+    pub fn pre_pool_len(&self) -> usize {
+        self.in_hw * self.in_hw * self.kernels.len()
+    }
+
+    /// Final output element count per request.
+    pub fn out_len(&self) -> usize {
+        self.out_hw() * self.out_hw() * self.kernels.len()
+    }
+
+    /// One request through conv -> ReLU -> optional 2x2 max-pool (legacy
+    /// per-request path; the batch path goes through the patch matrix).
     pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
         let (h, c) = (self.in_hw, self.in_ch);
         if x.len() != h * h * c {
             bail!("conv input length {} != {}", x.len(), h * h * c);
         }
         let mut y = conv2d_compressed(x, h, h, c, &self.kernels, self.kernel, self.kernel);
-        let cout = self.kernels.len();
-        for v in y.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
+        relu_slice(&mut y);
         if !self.pool {
             return Ok(y);
         }
-        let oh = h / 2;
-        let mut p = vec![0.0f32; oh * oh * cout];
-        for py in 0..oh {
-            for px in 0..oh {
-                for ch in 0..cout {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let v = y[((2 * py + dy) * h + 2 * px + dx) * cout + ch];
-                            if v > m {
-                                m = v;
-                            }
-                        }
-                    }
-                    p[(py * oh + px) * cout + ch] = m;
-                }
-            }
-        }
+        let mut p = vec![0.0f32; self.out_len()];
+        maxpool2x2(&y, h, self.kernels.len(), &mut p);
         Ok(p)
     }
+
+    /// Run rows `[b0, b0+nb)`: materialize the im2col patch matrix for
+    /// the whole shard (`patches`, `nb * h*h*kvol`), stream every
+    /// compressed kernel across all of it, then ReLU + optional pool.
+    /// `convtmp` holds the pre-pool activations (`nb * pre_pool_len`)
+    /// and is untouched when the layer has no pool.
+    fn run_shard(
+        &self,
+        rows: Rows<'_>,
+        b0: usize,
+        nb: usize,
+        patches: &mut [f32],
+        convtmp: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let (h, cin, k) = (self.in_hw, self.in_ch, self.kernel);
+        let kvol = self.kvol();
+        let ppi = h * h * kvol; // patch floats per request
+        for j in 0..nb {
+            im2col_into(
+                rows.row(b0 + j),
+                h,
+                h,
+                cin,
+                k,
+                k,
+                &mut patches[j * ppi..(j + 1) * ppi],
+            );
+        }
+        if self.pool {
+            conv_patches_compressed(patches, kvol, &self.kernels, convtmp);
+            relu_slice(convtmp);
+            let (pre, post) = (self.pre_pool_len(), self.out_len());
+            for j in 0..nb {
+                maxpool2x2(
+                    &convtmp[j * pre..(j + 1) * pre],
+                    h,
+                    self.kernels.len(),
+                    &mut out[j * post..(j + 1) * post],
+                );
+            }
+        } else {
+            conv_patches_compressed(patches, kvol, &self.kernels, out);
+            relu_slice(out);
+        }
+    }
 }
+
+/// 2x2 max-pool over a `[h][h][cout]` activation map into `[h/2][h/2][cout]`.
+fn maxpool2x2(y: &[f32], h: usize, cout: usize, p: &mut [f32]) {
+    let oh = h / 2;
+    debug_assert_eq!(p.len(), oh * oh * cout);
+    for py in 0..oh {
+        for px in 0..oh {
+            for ch in 0..cout {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let v = y[((2 * py + dy) * h + 2 * px + dx) * cout + ch];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                }
+                p[(py * oh + px) * cout + ch] = m;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-model executor.
 
 /// One compiled layer of the functional model.
 #[derive(Debug, Clone)]
@@ -212,13 +512,102 @@ pub enum LayerExec {
     Conv(ConvExec),
 }
 
+impl LayerExec {
+    /// Executed-kernel record, matching what [`crate::plan::LayerPlan`]
+    /// records for the layer: FC layers carry their density-chosen
+    /// kernel; CONV layers always run the structurally-compressed
+    /// (value + gather-index) kernels, i.e. [`KernelChoice::Csc`].
+    pub fn kernel_choice(&self) -> KernelChoice {
+        match self {
+            LayerExec::Fc(fc) => fc.kernel,
+            LayerExec::Conv(_) => KernelChoice::Csc,
+        }
+    }
+
+    /// Kernel label for the per-layer time breakdown (agrees with the
+    /// plan's [`KernelChoice::as_str`] rendering).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel_choice().as_str()
+    }
+}
+
+/// Reusable per-consumer scratch for the flat execution path: the
+/// ping-pong activation pair, the im2col patch tile, the pre-pool conv
+/// tile, and the CSC transpose tiles.  Every buffer is `reset` in place,
+/// so a warmed-up scratch makes `forward_batch_flat` allocation-free.
+/// Also accumulates the per-layer kernel-time breakdown.
+///
+/// A scratch belongs to **one executor**: its timing counters are
+/// index-aligned with that executor's layers, so threading it through a
+/// different executor mixes the kernel stats (the buffers themselves are
+/// shape-agnostic and would still compute correctly).
+#[derive(Debug, Clone, Default)]
+pub struct ExecScratch {
+    bufs: [BatchTensor; 2],
+    patches: BatchTensor,
+    convtmp: BatchTensor,
+    xt: Vec<f32>,
+    yt: Vec<f32>,
+    /// Accumulated kernel nanoseconds per layer (index-aligned with the
+    /// executor's layers).
+    layer_ns: Vec<u64>,
+    /// Batches executed through this scratch.
+    batches: u64,
+}
+
+impl ExecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batches executed through this scratch so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Accumulated per-layer kernel nanoseconds (pair with
+    /// [`PlanExecutor::kernel_stats`]).
+    pub fn layer_ns(&self) -> &[u64] {
+        &self.layer_ns
+    }
+}
+
+/// Which pool the executor shards batches across.
+#[derive(Clone)]
+enum PoolRef {
+    /// The process-wide [`shared`] pool.
+    Shared,
+    /// A caller-owned pool.
+    Owned(Arc<Pool>),
+}
+
+impl PoolRef {
+    fn get(&self) -> &Pool {
+        match self {
+            PoolRef::Shared => shared(),
+            PoolRef::Owned(p) => p,
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PoolRef::Shared => "Shared",
+            PoolRef::Owned(_) => "Owned(..)",
+        })
+    }
+}
+
 /// The compiled functional model: every layer's static compression done at
-/// load time, executed batch-at-a-time.
+/// load time, executed batch-at-a-time through the flat kernels.
 #[derive(Debug, Clone)]
 pub struct PlanExecutor {
     pub model: String,
     layers: Vec<LayerExec>,
+    layer_names: Vec<String>,
     input_len: usize,
+    par: Option<PoolRef>,
 }
 
 impl PlanExecutor {
@@ -238,7 +627,9 @@ impl PlanExecutor {
         Ok(Self {
             model: desc.name.clone(),
             layers,
+            layer_names: desc.layers.iter().map(|l| l.name.clone()).collect(),
             input_len: desc.input_len(),
+            par: None,
         })
     }
 
@@ -296,8 +687,28 @@ impl PlanExecutor {
         Self {
             model: desc.name.clone(),
             layers,
+            layer_names: desc.layers.iter().map(|l| l.name.clone()).collect(),
             input_len: desc.input_len(),
+            par: None,
         }
+    }
+
+    /// Shard batches across the process-wide [`shared`] pool.
+    pub fn with_shared_pool(mut self) -> Self {
+        self.par = Some(PoolRef::Shared);
+        self
+    }
+
+    /// Shard batches across a caller-owned pool.
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.par = Some(PoolRef::Owned(pool));
+        self
+    }
+
+    /// Force serial execution (the default).
+    pub fn serial(mut self) -> Self {
+        self.par = None;
+        self
     }
 
     pub fn layers(&self) -> &[LayerExec] {
@@ -308,24 +719,189 @@ impl PlanExecutor {
         self.input_len
     }
 
-    /// Execute a batch through every compiled layer.  FC layers run the
-    /// batched sparse matvec (weights streamed once per batch); CONV layers
-    /// reuse the once-compiled kernels per request.
+    /// Execute a batch through every compiled layer (legacy nested API).
+    /// The input rows are fed **by reference** into the first layer; only
+    /// the result is materialized as nested vectors.  Serving uses
+    /// [`PlanExecutor::forward_batch_flat`] with a persistent scratch.
     pub fn forward_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let mut cur: Vec<Vec<f32>> = inputs.to_vec();
-        for layer in &self.layers {
-            cur = match layer {
-                LayerExec::Fc(fc) => fc.forward_batch(&cur)?,
-                LayerExec::Conv(cv) => {
-                    let mut out = Vec::with_capacity(cur.len());
-                    for x in &cur {
-                        out.push(cv.forward(x)?);
-                    }
-                    out
-                }
-            };
+        let mut scratch = ExecScratch::new();
+        let out = self.forward_rows(Rows::Nested(inputs), &mut scratch)?;
+        Ok(out.to_rows())
+    }
+
+    /// Execute a flat batch through every compiled layer.  The result
+    /// borrows `scratch` (it *is* one of the ping-pong buffers) — copy it
+    /// out ([`BatchTensor::copy_from`]) before the next call.  With a
+    /// warmed-up scratch this performs zero heap allocation.
+    pub fn forward_batch_flat<'s>(
+        &self,
+        input: &BatchTensor,
+        scratch: &'s mut ExecScratch,
+    ) -> Result<&'s BatchTensor> {
+        self.forward_rows(Rows::Flat(input), scratch)
+    }
+
+    /// Render accumulated per-layer kernel nanoseconds (index-aligned
+    /// with this executor's layers — e.g. an [`ExecScratch`]'s
+    /// `layer_ns`, or a backend-wide aggregate) as the breakdown the
+    /// serving metrics surface.
+    pub fn kernel_stats(&self, layer_ns: &[u64], batches: u64) -> Vec<LayerKernelStat> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, layer)| LayerKernelStat {
+                layer: self.layer_names.get(i).cloned().unwrap_or_default(),
+                kernel: layer.kernel_name().to_string(),
+                total: std::time::Duration::from_nanos(
+                    layer_ns.get(i).copied().unwrap_or(0),
+                ),
+                batches,
+            })
+            .collect()
+    }
+
+    fn forward_rows<'s>(
+        &self,
+        input: Rows<'_>,
+        scratch: &'s mut ExecScratch,
+    ) -> Result<&'s BatchTensor> {
+        let batch = input.batch();
+        input.check_len(self.input_len, "model")?;
+        if scratch.layer_ns.len() != self.layers.len() {
+            scratch.layer_ns = vec![0; self.layers.len()];
         }
-        Ok(cur)
+        scratch.batches += 1;
+        let ExecScratch {
+            bufs,
+            patches,
+            convtmp,
+            xt,
+            yt,
+            layer_ns,
+            ..
+        } = scratch;
+        let (a, b) = bufs.split_at_mut(1);
+        let mut src: &mut BatchTensor = &mut a[0];
+        let mut dst: &mut BatchTensor = &mut b[0];
+        if self.layers.is_empty() {
+            src.reshape(batch, self.input_len); // every row copied below
+            for bi in 0..batch {
+                src.row_mut(bi).copy_from_slice(input.row(bi));
+            }
+            return Ok(&*src);
+        }
+        let mut first = true;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let t0 = Instant::now();
+            let rows = if first { input } else { Rows::Flat(&*src) };
+            self.run_layer(layer, rows, dst, patches, convtmp, xt, yt)?;
+            layer_ns[i] += t0.elapsed().as_nanos() as u64;
+            std::mem::swap(&mut src, &mut dst);
+            first = false;
+        }
+        Ok(&*src)
+    }
+
+    /// Run one layer over `rows` into `dst`, sharding across the pool
+    /// when one is configured and the batch is worth splitting.  Shards
+    /// write disjoint slices of `dst` (and of the conv tiles), and each
+    /// output row is computed entirely by one shard in a fixed order —
+    /// results are bit-identical to serial execution.
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer(
+        &self,
+        layer: &LayerExec,
+        rows: Rows<'_>,
+        dst: &mut BatchTensor,
+        patches: &mut BatchTensor,
+        convtmp: &mut BatchTensor,
+        xt: &mut Vec<f32>,
+        yt: &mut Vec<f32>,
+    ) -> Result<()> {
+        let batch = rows.batch();
+        let pool = self
+            .par
+            .as_ref()
+            .map(|p| p.get())
+            .filter(|p| batch >= 2 && p.workers() > 1);
+        match layer {
+            LayerExec::Fc(fc) => {
+                rows.check_len(fc.weights.cols, "fc")?;
+                let rout = fc.weights.rows;
+                // the dense kernel accumulates (+=) and needs zeros; the
+                // CSC kernel assigns every element from its yt tile
+                if fc.runs_csc() {
+                    dst.reshape(batch, rout);
+                } else {
+                    dst.reset(batch, rout);
+                }
+                match pool {
+                    None => fc.run_shard(rows, 0, batch, xt, yt, &mut dst.data),
+                    Some(pool) => {
+                        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                        let mut rest: &mut [f32] = &mut dst.data;
+                        for (b0, nb) in shards(batch, pool.workers()) {
+                            let (chunk, r) =
+                                std::mem::take(&mut rest).split_at_mut(nb * rout);
+                            rest = r;
+                            jobs.push(Box::new(move || {
+                                // per-worker transpose tiles: pool threads
+                                // are long-lived, so steady state reuses
+                                // the same allocations batch after batch
+                                FC_TILES.with(|t| {
+                                    let (sxt, syt) = &mut *t.borrow_mut();
+                                    fc.run_shard(rows, b0, nb, sxt, syt, chunk);
+                                });
+                            }));
+                        }
+                        pool.scoped(jobs);
+                    }
+                }
+            }
+            LayerExec::Conv(cv) => {
+                rows.check_len(cv.in_len(), "conv")?;
+                let (ppi, pre, post) =
+                    (cv.in_hw * cv.in_hw * cv.kvol(), cv.pre_pool_len(), cv.out_len());
+                // all three are fully assigned (im2col writes padding
+                // zeros itself; conv/pool assign every output element)
+                patches.reshape(batch, ppi);
+                convtmp.reshape(batch, if cv.pool { pre } else { 0 });
+                dst.reshape(batch, post);
+                match pool {
+                    None => cv.run_shard(
+                        rows,
+                        0,
+                        batch,
+                        &mut patches.data,
+                        &mut convtmp.data,
+                        &mut dst.data,
+                    ),
+                    Some(pool) => {
+                        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                        let mut prest: &mut [f32] = &mut patches.data;
+                        let mut crest: &mut [f32] = &mut convtmp.data;
+                        let mut orest: &mut [f32] = &mut dst.data;
+                        for (b0, nb) in shards(batch, pool.workers()) {
+                            let (pchunk, pr) =
+                                std::mem::take(&mut prest).split_at_mut(nb * ppi);
+                            prest = pr;
+                            let csize = if cv.pool { nb * pre } else { 0 };
+                            let (cchunk, cr) =
+                                std::mem::take(&mut crest).split_at_mut(csize);
+                            crest = cr;
+                            let (ochunk, or) =
+                                std::mem::take(&mut orest).split_at_mut(nb * post);
+                            orest = or;
+                            jobs.push(Box::new(move || {
+                                cv.run_shard(rows, b0, nb, pchunk, cchunk, ochunk);
+                            }));
+                        }
+                        pool.scoped(jobs);
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -373,37 +949,104 @@ fn compile_exec_layer(
     }
 }
 
+/// Aggregated kernel-time counters for one backend (all worker threads).
+#[derive(Default)]
+struct KernelAgg {
+    layer_ns: Vec<u64>,
+    batches: u64,
+}
+
 /// [`InferenceBackend`] over a [`PlanExecutor`]: functional serving through
-/// the compiled plan, no PJRT required.
+/// the compiled plan, no PJRT required.  Keeps an idle **pool** of
+/// [`ExecScratch`]es rather than one scratch behind a held lock, so
+/// concurrent engine workers (`workers_per_model > 1`) execute batches in
+/// parallel — a scratch is popped, the kernels run unlocked, and only the
+/// per-layer time merge touches a mutex.  Steady-state calls are
+/// allocation-free once the pool has one scratch per concurrent worker.
 pub struct PlanBackend {
     exec: PlanExecutor,
+    /// Idle scratches (popped for the duration of one batch).
+    scratches: Mutex<Vec<ExecScratch>>,
+    agg: Mutex<KernelAgg>,
 }
 
 impl PlanBackend {
     pub fn new(exec: PlanExecutor) -> Self {
-        Self { exec }
+        Self {
+            exec,
+            scratches: Mutex::new(Vec::new()),
+            agg: Mutex::new(KernelAgg::default()),
+        }
     }
 
     /// Synthetic-weight backend for a descriptor (see
-    /// [`PlanExecutor::synthetic`]).
+    /// [`PlanExecutor::synthetic`]); shards batches across the shared
+    /// pool — the configuration the serving engine deploys.
     pub fn synthetic(desc: &ModelDesc, seed: u64) -> Self {
-        Self {
-            exec: PlanExecutor::synthetic(desc, seed),
-        }
+        Self::new(PlanExecutor::synthetic(desc, seed).with_shared_pool())
     }
 
     pub fn executor(&self) -> &PlanExecutor {
         &self.exec
     }
+
+    /// Run `f` with a pooled scratch (kernels execute with no backend
+    /// lock held), then fold the batch's per-layer times into the
+    /// backend-wide aggregate.
+    fn with_scratch<R>(
+        &self,
+        f: impl FnOnce(&PlanExecutor, &mut ExecScratch) -> Result<R>,
+    ) -> Result<R> {
+        let mut scratch = self
+            .scratches
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_default();
+        // This batch's times only: the scratch's counters are zeroed per
+        // run so the merge below never double-counts.
+        for v in scratch.layer_ns.iter_mut() {
+            *v = 0;
+        }
+        let result = f(&self.exec, &mut scratch);
+        if result.is_ok() {
+            let mut agg = self.agg.lock().unwrap();
+            if agg.layer_ns.len() != scratch.layer_ns.len() {
+                agg.layer_ns.resize(scratch.layer_ns.len(), 0);
+            }
+            for (a, &d) in agg.layer_ns.iter_mut().zip(&scratch.layer_ns) {
+                *a += d;
+            }
+            agg.batches += 1;
+        }
+        self.scratches.lock().unwrap().push(scratch);
+        result
+    }
 }
 
 impl InferenceBackend for PlanBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.exec.forward_batch(inputs)
+        self.with_scratch(|exec, scratch| {
+            let out = exec.forward_rows(Rows::Nested(inputs), scratch)?;
+            Ok(out.to_rows())
+        })
+    }
+
+    fn infer_batch_flat(&self, inputs: &BatchTensor, out: &mut BatchTensor) -> Result<()> {
+        self.with_scratch(|exec, scratch| {
+            let res = exec.forward_batch_flat(inputs, scratch)?;
+            out.copy_from(res);
+            Ok(())
+        })
     }
 
     fn input_len(&self) -> usize {
         self.exec.input_len()
+    }
+
+    fn kernel_breakdown(&self) -> Option<Vec<LayerKernelStat>> {
+        let agg = self.agg.lock().unwrap();
+        Some(self.exec.kernel_stats(&agg.layer_ns, agg.batches))
     }
 }
 
@@ -448,6 +1091,43 @@ mod tests {
     }
 
     #[test]
+    fn density_policy_picks_kernel_and_builds_csc() {
+        let mut rng = Rng::new(30);
+        let sparse = FcExec::new(
+            ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.9)),
+            false,
+            0.0,
+        );
+        assert_eq!(sparse.kernel, KernelChoice::Csc);
+        assert!(sparse.csc.is_some());
+        let dense = FcExec::new(
+            ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.05)),
+            false,
+            0.0,
+        );
+        assert_eq!(dense.kernel, KernelChoice::Dense);
+        assert!(dense.csc.is_none());
+    }
+
+    #[test]
+    fn csc_and_dense_kernels_agree_exactly() {
+        let mut rng = Rng::new(31);
+        for sparsity in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let (rows, cols) = (19, 37);
+            let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, sparsity));
+            let d = FcExec::with_kernel(w.clone(), true, 0.0, KernelChoice::Dense);
+            let c = FcExec::with_kernel(w, true, 0.0, KernelChoice::Csc);
+            for batch_n in [0usize, 1, 5] {
+                let batch: Vec<Vec<f32>> =
+                    (0..batch_n).map(|_| rng.sparse_vec(cols, 0.4)).collect();
+                let yd = d.forward_batch(&batch).unwrap();
+                let yc = c.forward_batch(&batch).unwrap();
+                assert_eq!(yd, yc, "sparsity {sparsity} batch {batch_n}");
+            }
+        }
+    }
+
+    #[test]
     fn fc_eps_squashes_compute_and_accounting_together() {
         // eps applies to the executed weights, not just the gating stats.
         let w = ColMatrix::from_row_major(1, 2, &[0.005, 1.0]);
@@ -486,6 +1166,102 @@ mod tests {
                 "{name}: non-finite logits"
             );
         }
+    }
+
+    #[test]
+    fn flat_path_matches_nested_and_conv_batch_matches_per_request() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let ex = PlanExecutor::synthetic(&desc, 5);
+        let mut rng = Rng::new(6);
+        let batch: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.sparse_vec(ex.input_len(), 0.3)).collect();
+        let nested = ex.forward_batch(&batch).unwrap();
+        // flat path
+        let mut input = BatchTensor::new();
+        input.copy_from_rows(&batch);
+        let mut scratch = ExecScratch::new();
+        let flat = ex.forward_batch_flat(&input, &mut scratch).unwrap().to_rows();
+        assert_eq!(nested, flat);
+        // per-request conv reference: each single-request batch must match
+        for (x, want) in batch.iter().zip(&nested) {
+            let got = ex.forward_batch(std::slice::from_ref(x)).unwrap();
+            assert_eq!(&got[0], want);
+        }
+    }
+
+    #[test]
+    fn parallel_executor_is_bit_identical_to_serial() {
+        let desc = ModelDesc::builtin("svhn").unwrap();
+        let serial = PlanExecutor::synthetic(&desc, 9);
+        let par = PlanExecutor::synthetic(&desc, 9)
+            .with_pool(Arc::new(Pool::new(3, 64)));
+        let mut rng = Rng::new(10);
+        // 7 requests: uneven shard split over 3 workers
+        let batch: Vec<Vec<f32>> =
+            (0..7).map(|_| rng.normal_vec(serial.input_len())).collect();
+        let a = serial.forward_batch(&batch).unwrap();
+        let b = par.forward_batch(&batch).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flat_path_steady_state_allocates_nothing_new() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let ex = PlanExecutor::synthetic(&desc, 11);
+        let mut rng = Rng::new(12);
+        let batch: Vec<Vec<f32>> =
+            (0..8).map(|_| rng.normal_vec(ex.input_len())).collect();
+        let mut input = BatchTensor::new();
+        input.copy_from_rows(&batch);
+        let mut scratch = ExecScratch::new();
+        ex.forward_batch_flat(&input, &mut scratch).unwrap();
+        // warm: capture every buffer's pointer, run again, nothing moved
+        let ptrs: Vec<*const f32> = [
+            scratch.bufs[0].data.as_ptr(),
+            scratch.bufs[1].data.as_ptr(),
+            scratch.patches.data.as_ptr(),
+            scratch.convtmp.data.as_ptr(),
+        ]
+        .to_vec();
+        let out1 = ex.forward_batch_flat(&input, &mut scratch).unwrap().to_rows();
+        let after: Vec<*const f32> = [
+            scratch.bufs[0].data.as_ptr(),
+            scratch.bufs[1].data.as_ptr(),
+            scratch.patches.data.as_ptr(),
+            scratch.convtmp.data.as_ptr(),
+        ]
+        .to_vec();
+        assert_eq!(ptrs, after, "steady-state flat path reallocated a buffer");
+        let out2 = ex.forward_batch(&batch).unwrap();
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn kernel_stats_accumulate_per_layer() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let backend = PlanBackend::new(PlanExecutor::synthetic(&desc, 13));
+        let mut rng = Rng::new(14);
+        let batch: Vec<Vec<f32>> =
+            (0..3).map(|_| rng.normal_vec(backend.input_len())).collect();
+        backend.infer_batch(&batch).unwrap();
+        backend.infer_batch(&batch).unwrap();
+        let stats = backend.kernel_breakdown().unwrap();
+        assert_eq!(stats.len(), desc.layers.len());
+        for s in &stats {
+            assert!(!s.layer.is_empty());
+            // labels agree with the plan's KernelChoice rendering
+            assert!(s.kernel == "csc" || s.kernel == "dense", "{}", s.kernel);
+            assert_eq!(s.batches, 2);
+        }
+        // at least one layer must have measurable time
+        assert!(stats.iter().any(|s| s.total.as_nanos() > 0));
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let ex = PlanExecutor::synthetic(&desc, 15);
+        assert!(ex.forward_batch(&[]).unwrap().is_empty());
     }
 
     #[test]

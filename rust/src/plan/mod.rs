@@ -26,7 +26,7 @@
 
 pub mod exec;
 
-pub use exec::{ConvExec, FcExec, LayerExec, PlanBackend, PlanExecutor};
+pub use exec::{ConvExec, ExecScratch, FcExec, LayerExec, PlanBackend, PlanExecutor};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -40,6 +40,46 @@ use crate::sim::engine::{InferenceStats, LayerStats, PowerBreakdown};
 pub const TO_FRACTION_UNCLUSTERED: f64 = 0.02;
 /// Average MR transmission the clustered codebook maps to.
 pub const AVG_TRANSMISSION: f64 = 0.5;
+
+/// Density (nnz / total) at or below which the FC executor compiles a
+/// layer into true CSC streaming instead of the dense column-major
+/// fallback.  At 50% density the CSC kernel touches half the weights the
+/// dense kernel does, which is where it starts winning despite its
+/// gather-style access pattern; above it the dense kernel's contiguous
+/// vectorized columns are faster.
+pub const CSC_MAX_DENSITY: f64 = 0.5;
+
+/// Which compute kernel a layer executes with (recorded in the plan and
+/// chosen per layer at weight-compile time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Dense column-major streaming (zero activations skip columns, but
+    /// every stored weight is read).
+    Dense,
+    /// Structurally-sparse compressed form: CSC weight streaming for FC,
+    /// value+gather-index compressed kernels for CONV — a structural
+    /// zero weight is never loaded or multiplied.
+    Csc,
+}
+
+impl KernelChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelChoice::Dense => "dense",
+            KernelChoice::Csc => "csc",
+        }
+    }
+}
+
+/// Kernel selection policy for FC layers, shared by the analytic plan
+/// (descriptor sparsity) and the executor (measured density).
+pub fn choose_fc_kernel(density: f64) -> KernelChoice {
+    if density <= CSC_MAX_DENSITY {
+        KernelChoice::Csc
+    } else {
+        KernelChoice::Dense
+    }
+}
 
 /// Ceil division for u64.
 fn ceil_div(a: u64, b: u64) -> u64 {
@@ -102,6 +142,15 @@ pub struct LayerPlan {
     pub energy_j: f64,
     /// Per-device-class energy attribution for one inference.
     pub breakdown: PowerBreakdown,
+    /// Executed-kernel selection for the functional executor: FC layers
+    /// pick by the descriptor's weight density against
+    /// [`CSC_MAX_DENSITY`]; CONV layers always run the compressed
+    /// (value + gather-index) kernels.
+    pub kernel: KernelChoice,
+    /// Expected surviving (non-zero) weights from the descriptor's
+    /// weight sparsity — what the executed kernels do work proportional
+    /// to.
+    pub weight_nnz: u64,
 }
 
 impl LayerPlan {
@@ -296,6 +345,26 @@ fn compile_layer(
         }
     };
 
+    // Executed-kernel record: what the functional executor will run for
+    // this layer, and how many weights survive pruning (the work the
+    // structurally-sparse kernels are proportional to).
+    let (weight_total, kernel) = match layer.kind {
+        LayerKind::Conv {
+            kernel: k,
+            in_ch,
+            out_ch,
+            ..
+        } => ((k * k * in_ch * out_ch) as u64, KernelChoice::Csc),
+        LayerKind::Fc {
+            in_dim, out_dim, ..
+        } => (
+            (in_dim * out_dim) as u64,
+            choose_fc_kernel(1.0 - layer.weight_sparsity),
+        ),
+    };
+    let weight_nnz =
+        (weight_total as f64 * (1.0 - layer.weight_sparsity)).round() as u64;
+
     let lanes = vdu.lanes as u64;
     let passes_per_output = ceil_div(vector_len as u64, lanes);
     let passes = outputs * passes_per_output;
@@ -386,6 +455,8 @@ fn compile_layer(
         other_idle_w,
         energy_j: energy,
         breakdown,
+        kernel,
+        weight_nnz,
     }
 }
 
@@ -533,6 +604,38 @@ mod tests {
         }
         let c = cached(&m2, &SonicConfig::paper_best());
         assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn plan_records_kernel_choice_and_nnz() {
+        let mut m = ModelDesc::builtin("mnist").unwrap();
+        for l in &mut m.layers {
+            l.weight_sparsity = 0.9; // well past the CSC threshold
+        }
+        let p = ModelPlan::compile(&m, &SonicConfig::paper_best());
+        for (lp, l) in p.layers.iter().zip(&m.layers) {
+            assert_eq!(lp.kernel, KernelChoice::Csc, "{}", lp.name);
+            let total = match l.kind {
+                LayerKind::Conv {
+                    kernel,
+                    in_ch,
+                    out_ch,
+                    ..
+                } => kernel * kernel * in_ch * out_ch,
+                LayerKind::Fc { in_dim, out_dim, .. } => in_dim * out_dim,
+            } as f64;
+            assert_eq!(lp.weight_nnz, (total * 0.1).round() as u64, "{}", lp.name);
+        }
+        // a dense FC layer must fall back to the dense kernel
+        for l in &mut m.layers {
+            l.weight_sparsity = 0.1;
+        }
+        let dense = ModelPlan::compile(&m, &SonicConfig::paper_best());
+        for lp in dense.layers.iter().filter(|l| !l.is_conv) {
+            assert_eq!(lp.kernel, KernelChoice::Dense, "{}", lp.name);
+        }
+        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY), KernelChoice::Csc);
+        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY + 0.01), KernelChoice::Dense);
     }
 
     #[test]

@@ -23,7 +23,9 @@ use crate::runtime::PjrtBackend;
 use crate::util::err::{Context, Error, Result};
 
 use super::metrics::{EngineMetrics, LatencyHistogram, ModelMetrics};
-use super::router::{Completion, InferenceBackend, Router, ServeConfig, ServeMetrics};
+use super::router::{
+    BatchBuffers, Completion, InferenceBackend, Router, ServeConfig, ServeMetrics,
+};
 
 /// How the engine resolves the functional backend for one model.
 ///
@@ -328,6 +330,7 @@ impl Engine {
                     p95: hist.quantile(0.95),
                     p99: hist.quantile(0.99),
                     photonic_epb_j,
+                    kernel_breakdown: entry.router.kernel_breakdown(),
                     serve,
                 }
             })
@@ -379,6 +382,9 @@ impl Drop for Engine {
 /// Worker loop: drain batches for one model until shutdown *and* the
 /// queue is empty, filling completion slots as batches finish.
 fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<AtomicBool>) {
+    // Flat input/output buffers reused across every batch this worker
+    // drains — steady-state batch packing performs no heap allocation.
+    let mut bufs = BatchBuffers::default();
     loop {
         let batch = router.pop_batch();
         if batch.is_empty() {
@@ -392,10 +398,10 @@ fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<Atom
         // then merge this batch's counters in one critical section.  A
         // panicking backend must not kill the worker: catch it and fail
         // the batch's tickets, keeping the model serviceable (the same
-        // containment coordinator::exec::Pool applies to its jobs).
+        // containment util::pool::Pool applies to its jobs).
         let mut local = ServeMetrics::default();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            router.execute_batch(batch, &mut local)
+            router.execute_batch(batch, &mut local, &mut bufs)
         }));
         match result {
             Ok(Ok(completions)) => {

@@ -83,6 +83,31 @@ impl LatencyHistogram {
     }
 }
 
+/// One layer's accumulated kernel time inside a backend: which compute
+/// kernel the layer compiled to (`"csc"`, `"dense"`, `"conv"`) and how
+/// long that kernel has run across every batch served so far.
+#[derive(Debug, Clone)]
+pub struct LayerKernelStat {
+    pub layer: String,
+    /// Executed kernel label (see `plan::KernelChoice`).
+    pub kernel: String,
+    /// Total kernel time across all batches.
+    pub total: Duration,
+    /// Batches executed (shared across layers of one backend).
+    pub batches: u64,
+}
+
+impl LayerKernelStat {
+    /// Mean kernel time per batch for this layer.
+    pub fn mean_per_batch(&self) -> Duration {
+        if self.batches == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.batches as u32
+        }
+    }
+}
+
 /// Snapshot of one model's serving state inside an Engine.
 #[derive(Debug, Clone)]
 pub struct ModelMetrics {
@@ -99,6 +124,9 @@ pub struct ModelMetrics {
     /// Served photonic energy-per-bit: total photonic energy over the bits
     /// this model's completions moved (from the compiled plan).
     pub photonic_epb_j: f64,
+    /// Per-layer kernel-time breakdown from the backend (empty when the
+    /// backend doesn't track one — PJRT/custom backends).
+    pub kernel_breakdown: Vec<LayerKernelStat>,
 }
 
 /// Snapshot of a whole Engine: one [`ModelMetrics`] per registered model,

@@ -39,7 +39,7 @@ pub(crate) mod router;
 pub mod workload;
 
 pub use engine::{BackendChoice, Engine, EngineBuilder, Ticket};
-pub use metrics::{EngineMetrics, LatencyHistogram, ModelMetrics};
+pub use metrics::{EngineMetrics, LatencyHistogram, LayerKernelStat, ModelMetrics};
 pub use router::{Completion, InferenceBackend, NullBackend, ServeConfig, ServeMetrics};
 
 /// NaN-safe argmax over logits: the index of the largest value, with NaN

@@ -22,15 +22,44 @@ use std::time::{Duration, Instant};
 use crate::arch::SonicConfig;
 use crate::bail;
 use crate::model::ModelDesc;
+use crate::tensor::BatchTensor;
 use crate::util::err::Result;
 
 use super::argmax;
+use super::metrics::LayerKernelStat;
 
 /// Functional compute interface: batch of flat inputs -> batch of logits.
 pub trait InferenceBackend: Send + Sync {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Flat-tensor batch execution: read `inputs` (one request per row),
+    /// fill `out` (one logit row per request).  The default adapter
+    /// re-boxes through [`InferenceBackend::infer_batch`]; backends on
+    /// the hot path (the plan executor) override it to run allocation-
+    /// free.  The router always calls this form, so overriding it is all
+    /// a backend needs to escape per-batch boxing.
+    fn infer_batch_flat(&self, inputs: &BatchTensor, out: &mut BatchTensor) -> Result<()> {
+        let rows: Vec<Vec<f32>> = inputs.rows().map(|r| r.to_vec()).collect();
+        let res = self.infer_batch(&rows)?;
+        let len = res.first().map_or(0, |r| r.len());
+        out.reshape(res.len(), len); // every row is copied below
+        for (b, r) in res.iter().enumerate() {
+            if r.len() != len {
+                bail!("backend returned ragged logits ({} vs {len})", r.len());
+            }
+            out.row_mut(b).copy_from_slice(r);
+        }
+        Ok(())
+    }
+
     /// Input element count per request.
     fn input_len(&self) -> usize;
+
+    /// Per-layer kernel-time breakdown, when the backend tracks one
+    /// (the plan executor does; PJRT and custom backends may not).
+    fn kernel_breakdown(&self) -> Option<Vec<LayerKernelStat>> {
+        None
+    }
 }
 
 /// Per-model batching knobs (queue capacity, batch size, batch window).
@@ -77,6 +106,9 @@ pub struct ServeMetrics {
     pub batches: u64,
     pub total_wall: Duration,
     pub max_wall: Duration,
+    /// Time spent inside the backend's batch kernels (the
+    /// `infer_batch_flat` call itself, excluding queueing/ticketing).
+    pub kernel_time: Duration,
     /// Photonic simulated totals.
     pub photonic_time_s: f64,
     pub photonic_energy_j: f64,
@@ -89,6 +121,15 @@ impl ServeMetrics {
             0.0
         } else {
             self.completed as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean kernel time per executed batch.
+    pub fn mean_batch_kernel_time(&self) -> Duration {
+        if self.batches == 0 {
+            Duration::ZERO
+        } else {
+            self.kernel_time / self.batches as u32
         }
     }
 
@@ -126,6 +167,7 @@ impl ServeMetrics {
         self.batches += other.batches;
         self.total_wall += other.total_wall;
         self.max_wall = self.max_wall.max(other.max_wall);
+        self.kernel_time += other.kernel_time;
         self.photonic_time_s += other.photonic_time_s;
         self.photonic_energy_j += other.photonic_energy_j;
     }
@@ -295,27 +337,43 @@ impl Router {
         batch
     }
 
+    /// The backend's per-layer kernel-time breakdown (empty when the
+    /// backend doesn't track one).
+    pub(crate) fn kernel_breakdown(&self) -> Vec<super::metrics::LayerKernelStat> {
+        self.backend.kernel_breakdown().unwrap_or_default()
+    }
+
     /// Execute one popped batch on the backend and charge it to the
-    /// photonic plan, attributing per-request latency.
+    /// photonic plan, attributing per-request latency.  `bufs` is the
+    /// caller's reusable flat input/output pair — the worker loop holds
+    /// one per thread, so packing a batch reuses the same allocation
+    /// every time (the zero-allocation steady-state contract).
     pub(crate) fn execute_batch(
         &self,
         batch: Vec<PendingReq>,
         metrics: &mut ServeMetrics,
+        bufs: &mut BatchBuffers,
     ) -> Result<Vec<Completion>> {
         if batch.is_empty() {
             return Ok(Vec::new());
         }
-        // Move the input vectors out of the batch (no hot-path copies);
-        // keep (id, enqueue time) for latency attribution.
-        let (metas, inputs): (Vec<(u64, Instant)>, Vec<Vec<f32>>) = batch
-            .into_iter()
-            .map(|r| ((r.id, r.enqueued), r.input))
-            .unzip();
-        let outputs = self.backend.infer_batch(&inputs)?;
-        if outputs.len() != metas.len() {
+        // Pack inputs into the flat batch tensor (lengths were validated
+        // at submit); keep (id, enqueue time) for latency attribution.
+        let input_len = self.backend.input_len();
+        bufs.inputs.reshape(batch.len(), input_len); // every row copied below
+        let mut metas: Vec<(u64, Instant)> = Vec::with_capacity(batch.len());
+        for (b, r) in batch.iter().enumerate() {
+            bufs.inputs.row_mut(b).copy_from_slice(&r.input);
+            metas.push((r.id, r.enqueued));
+        }
+        drop(batch);
+        let t0 = Instant::now();
+        self.backend.infer_batch_flat(&bufs.inputs, &mut bufs.outputs)?;
+        metrics.kernel_time += t0.elapsed();
+        if bufs.outputs.batch != metas.len() {
             bail!(
                 "backend returned {} outputs for {} inputs",
-                outputs.len(),
+                bufs.outputs.batch,
                 metas.len()
             );
         }
@@ -333,11 +391,12 @@ impl Router {
         metrics.batches += 1;
 
         let mut out = Vec::with_capacity(metas.len());
-        for ((id, enqueued), logits) in metas.into_iter().zip(outputs) {
+        for (i, (id, enqueued)) in metas.into_iter().enumerate() {
             let wall = done.duration_since(enqueued);
             metrics.completed += 1;
             metrics.total_wall += wall;
             metrics.max_wall = metrics.max_wall.max(wall);
+            let logits = bufs.outputs.row(i).to_vec();
             let argmax = argmax(&logits);
             out.push(Completion {
                 id,
@@ -357,8 +416,16 @@ impl Router {
     #[cfg(test)]
     pub(crate) fn drain_batch(&self, metrics: &mut ServeMetrics) -> Result<Vec<Completion>> {
         let batch = self.pop_batch();
-        self.execute_batch(batch, metrics)
+        self.execute_batch(batch, metrics, &mut BatchBuffers::default())
     }
+}
+
+/// Reusable flat input/output pair for [`Router::execute_batch`] — one
+/// per worker thread, so steady-state batch packing never reallocates.
+#[derive(Debug, Default)]
+pub(crate) struct BatchBuffers {
+    inputs: BatchTensor,
+    outputs: BatchTensor,
 }
 
 /// Test/fallback backend: a trivial linear model computed locally.
@@ -546,6 +613,43 @@ mod tests {
         let done = r.drain_batch(&mut m).unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].argmax, 2, "NaN treated as -inf");
+    }
+
+    #[test]
+    fn kernel_time_counts_batches() {
+        let r = router(4);
+        r.submit_with_id(1, vec![1.0; 784], true).unwrap();
+        r.submit_with_id(2, vec![1.0; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        r.drain_batch(&mut m).unwrap();
+        assert_eq!(m.batches, 1);
+        // mean per batch is the whole counter for a single batch
+        assert_eq!(m.mean_batch_kernel_time(), m.kernel_time);
+        // merge folds kernel time like the other counters
+        let mut total = ServeMetrics::default();
+        total.merge(&m);
+        total.merge(&m);
+        assert_eq!(total.kernel_time, m.kernel_time * 2);
+    }
+
+    #[test]
+    fn default_flat_adapter_matches_nested() {
+        use crate::tensor::BatchTensor;
+        let backend = NullBackend {
+            input_len: 12,
+            n_classes: 3,
+        };
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|b| (0..12).map(|i| (b * 12 + i) as f32 * 0.25).collect())
+            .collect();
+        let want = backend.infer_batch(&rows).unwrap();
+        let mut input = BatchTensor::new();
+        input.copy_from_rows(&rows);
+        let mut out = BatchTensor::new();
+        backend.infer_batch_flat(&input, &mut out).unwrap();
+        assert_eq!(out.to_rows(), want);
+        // no breakdown by default
+        assert!(backend.kernel_breakdown().is_none());
     }
 
     #[test]

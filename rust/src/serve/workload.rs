@@ -57,11 +57,22 @@ impl PoissonWorkload {
 pub fn print_report(m: &ModelMetrics) {
     println!("== serving report: {} ({} backend) ==", m.model, m.backend);
     println!("  completed          {}", m.serve.completed);
+    println!("  batches            {}", m.serve.batches);
+    println!("  achieved batch     {:.2}", m.serve.mean_batch());
     println!(
-        "  batches            {} (mean size {:.2})",
-        m.serve.batches,
-        m.serve.mean_batch()
+        "  mean batch kernel  {:?}",
+        m.serve.mean_batch_kernel_time()
     );
+    if !m.kernel_breakdown.is_empty() {
+        for l in &m.kernel_breakdown {
+            println!(
+                "    {:<12} {:<6} {:?}/batch",
+                l.layer,
+                l.kernel,
+                l.mean_per_batch()
+            );
+        }
+    }
     println!("  wall throughput    {:.1} req/s", m.serve.wall_fps());
     println!("  mean wall latency  {:?}", m.serve.mean_wall_latency());
     println!("  p50 wall latency   {:?}", m.p50);

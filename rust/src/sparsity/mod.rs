@@ -165,6 +165,105 @@ impl ColMatrix {
     }
 }
 
+/// True compressed-sparse-column storage: only non-zero weights are kept,
+/// so a structural zero is never loaded, let alone multiplied.  Column
+/// `c`'s entries live at `vals/row_idx[col_ptr[c] .. col_ptr[c+1]]`,
+/// `row_idx` ascending within each column.  This is the compiled form the
+/// FC executor streams when a layer is sparse enough to beat the dense
+/// column-major fallback (see `plan::CSC_MAX_DENSITY`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zero values, column-major order.
+    pub vals: Vec<f32>,
+    /// Row index of each value (`< rows`), ascending within a column.
+    pub row_idx: Vec<u32>,
+    /// `cols + 1` offsets into `vals`/`row_idx`; `col_ptr[0] == 0`.
+    pub col_ptr: Vec<u32>,
+}
+
+impl CscMatrix {
+    /// Compress a dense column-major matrix, dropping entries that fail
+    /// [`keep_nonzero`] with `eps == 0.0` (the exact contract: IEEE
+    /// `!= 0.0`, so `-0.0` drops and denormals stay).
+    pub fn from_col_major(m: &ColMatrix) -> Self {
+        let mut vals = Vec::new();
+        let mut row_idx = Vec::new();
+        let mut col_ptr = Vec::with_capacity(m.cols + 1);
+        col_ptr.push(0u32);
+        for c in 0..m.cols {
+            for (r, &v) in m.col(c).iter().enumerate() {
+                if keep_nonzero(v, 0.0) {
+                    vals.push(v);
+                    row_idx.push(r as u32);
+                }
+            }
+            col_ptr.push(vals.len() as u32);
+        }
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            vals,
+            row_idx,
+            col_ptr,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of stored (non-zero) entries.
+    pub fn density(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / total
+    }
+
+    /// Column `c` as `(values, row_indices)` slices.
+    pub fn col(&self, c: usize) -> (&[f32], &[u32]) {
+        let (lo, hi) = (self.col_ptr[c] as usize, self.col_ptr[c + 1] as usize);
+        (&self.vals[lo..hi], &self.row_idx[lo..hi])
+    }
+
+    /// Expand back to dense column-major (test/reference path).
+    pub fn to_col_major(&self) -> ColMatrix {
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        for c in 0..self.cols {
+            let (vals, idx) = self.col(c);
+            for (&v, &r) in vals.iter().zip(idx) {
+                data[c * self.rows + r as usize] = v;
+            }
+        }
+        ColMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// y = M * x, reference implementation mirroring
+    /// [`ColMatrix::matvec`] (same ascending-column accumulation order).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for c in 0..self.cols {
+            let xv = x[c];
+            if xv == 0.0 {
+                continue;
+            }
+            let (vals, idx) = self.col(c);
+            for (&v, &r) in vals.iter().zip(idx) {
+                y[r as usize] += v * xv;
+            }
+        }
+        y
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,5 +355,43 @@ mod tests {
         let m = ColMatrix::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
         let y = m.matvec(&[1.0, 0.0, 2.0]);
         assert_eq!(y, vec![7.0, 16.0]);
+    }
+
+    #[test]
+    fn csc_round_trips_and_counts() {
+        // [[1, 0, 2], [0, 0, -3]] row-major
+        let m = ColMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let s = CscMatrix::from_col_major(&m);
+        assert_eq!(s.nnz(), 3);
+        assert!((s.density() - 0.5).abs() < 1e-12);
+        assert_eq!(s.col_ptr, vec![0, 1, 1, 3]); // middle column empty
+        let (v0, i0) = s.col(0);
+        assert_eq!((v0, i0), (&[1.0f32][..], &[0u32][..]));
+        let (v2, i2) = s.col(2);
+        assert_eq!(v2, &[2.0, -3.0]);
+        assert_eq!(i2, &[0, 1]);
+        assert_eq!(s.to_col_major().data, m.data);
+    }
+
+    #[test]
+    fn csc_matvec_matches_dense() {
+        let m = ColMatrix::from_row_major(3, 4, &[0., 2., 0., 1., 5., 0., 0., 0., 0., -1., 3., 0.]);
+        let s = CscMatrix::from_col_major(&m);
+        let x = vec![1.0, -2.0, 0.5, 4.0];
+        assert_eq!(s.matvec(&x), m.matvec(&x));
+    }
+
+    #[test]
+    fn csc_all_zero_and_empty() {
+        let z = CscMatrix::from_col_major(&ColMatrix::from_row_major(2, 2, &[0.0; 4]));
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.matvec(&[1.0, 1.0]), vec![0.0, 0.0]);
+        let e = CscMatrix::from_col_major(&ColMatrix {
+            rows: 0,
+            cols: 0,
+            data: vec![],
+        });
+        assert_eq!(e.density(), 0.0);
+        assert_eq!(e.col_ptr, vec![0]);
     }
 }

@@ -1,5 +1,6 @@
-//! Small tensor substrate: shapes, f32 buffers, and the `.swt` weight-pack
-//! reader (written by `python/compile/export.py`).
+//! Small tensor substrate: shapes, f32 buffers, the `.swt` weight-pack
+//! reader (written by `python/compile/export.py`), and the contiguous
+//! [`BatchTensor`] the serving hot path threads through its kernels.
 
 pub mod swt;
 
@@ -82,6 +83,103 @@ impl Tensor {
     }
 }
 
+/// A batch of equal-length rows in one contiguous buffer — the flat
+/// tensor the batched kernels stream instead of `Vec<Vec<f32>>`.
+///
+/// Layout: row `b` occupies `data[b*len .. (b+1)*len]`.  [`reset`]
+/// reshapes in place and only ever grows the backing allocation, so a
+/// pair of these (ping-pong) reused across layers gives the zero
+/// heap-allocation steady state the serving path relies on.
+///
+/// [`reset`]: BatchTensor::reset
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchTensor {
+    /// Contiguous row-major storage, `batch * len` elements.
+    pub data: Vec<f32>,
+    /// Number of rows.
+    pub batch: usize,
+    /// Elements per row.
+    pub len: usize,
+}
+
+impl BatchTensor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a zeroed `batch x len` tensor.
+    pub fn with_shape(batch: usize, len: usize) -> Self {
+        Self {
+            data: vec![0.0; batch * len],
+            batch,
+            len,
+        }
+    }
+
+    /// Reshape to `batch x len` and zero-fill, reusing the existing
+    /// allocation whenever capacity suffices (the hot-path contract: no
+    /// per-batch heap allocation once the buffer has warmed up).
+    pub fn reset(&mut self, batch: usize, len: usize) {
+        let n = batch * len;
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        self.batch = batch;
+        self.len = len;
+    }
+
+    /// Reshape to `batch x len` **without** zeroing retained elements
+    /// (only growth beyond the previous length is zero-filled, paid once
+    /// as the buffer warms up).  For callers that overwrite every
+    /// element; kernels that accumulate (`+=`) must use
+    /// [`BatchTensor::reset`].
+    pub fn reshape(&mut self, batch: usize, len: usize) {
+        self.data.resize(batch * len, 0.0);
+        self.batch = batch;
+        self.len = len;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch == 0 || self.len == 0
+    }
+
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.len..(b + 1) * self.len]
+    }
+
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        &mut self.data[b * self.len..(b + 1) * self.len]
+    }
+
+    /// Iterate rows in order.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.batch).map(move |b| self.row(b))
+    }
+
+    /// Copy a nested batch in (rows must share one length).
+    pub fn copy_from_rows(&mut self, rows: &[Vec<f32>]) {
+        let len = rows.first().map_or(0, |r| r.len());
+        self.reshape(rows.len(), len);
+        for (b, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), len, "ragged batch");
+            self.row_mut(b).copy_from_slice(r);
+        }
+    }
+
+    /// Adopt another tensor's shape + contents: one memcpy, reusing this
+    /// tensor's allocation (clear is O(1) for f32).
+    pub fn copy_from(&mut self, other: &BatchTensor) {
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+        self.batch = other.batch;
+        self.len = other.len;
+    }
+
+    /// Unpack into the legacy nested form (allocates; off the hot path).
+    pub fn to_rows(&self) -> Vec<Vec<f32>> {
+        (0..self.batch).map(|b| self.row(b).to_vec()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +222,62 @@ mod tests {
     fn zeros_all_zero() {
         let t = Tensor::zeros("z", vec![5, 5]);
         assert_eq!(t.sparsity(), 1.0);
+    }
+
+    #[test]
+    fn batch_tensor_round_trips_rows() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut t = BatchTensor::new();
+        t.copy_from_rows(&rows);
+        assert_eq!(t.batch, 3);
+        assert_eq!(t.len, 2);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+        assert_eq!(t.to_rows(), rows);
+        assert_eq!(t.rows().count(), 3);
+    }
+
+    #[test]
+    fn batch_tensor_reset_reuses_allocation() {
+        let mut t = BatchTensor::with_shape(8, 32);
+        let cap = t.data.capacity();
+        let ptr = t.data.as_ptr();
+        t.row_mut(3)[5] = 9.0;
+        t.reset(4, 16); // smaller: same allocation, zeroed
+        assert_eq!(t.data.capacity(), cap);
+        assert_eq!(t.data.as_ptr(), ptr);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+        assert_eq!(t.batch, 4);
+        assert_eq!(t.len, 16);
+    }
+
+    #[test]
+    fn batch_tensor_reshape_keeps_contents_reset_zeroes() {
+        let mut t = BatchTensor::with_shape(2, 3);
+        t.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        t.reshape(3, 2); // same element count: nothing zeroed, only grown region would be
+        assert_eq!(t.row(0), &[1.0, 2.0]);
+        assert_eq!(t.row(1), &[3.0, 0.0]);
+        t.reset(3, 2);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batch_tensor_copy_from_is_exact() {
+        let mut a = BatchTensor::new();
+        a.copy_from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut b = BatchTensor::with_shape(9, 9); // stale larger shape
+        b.copy_from(&a);
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn batch_tensor_empty_batch() {
+        let mut t = BatchTensor::new();
+        t.reset(0, 10);
+        assert!(t.is_empty());
+        assert_eq!(t.rows().count(), 0);
+        assert!(t.to_rows().is_empty());
+        t.copy_from_rows(&[]);
+        assert_eq!(t.batch, 0);
     }
 }

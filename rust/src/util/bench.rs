@@ -57,6 +57,17 @@ impl Bencher {
         }
     }
 
+    /// Smoke-mode bencher: at most `n` samples under a minimal budget.
+    /// Wired to the benches' `--iters n` flag so CI can record the perf
+    /// trajectory without paying full measurement time.
+    pub fn bounded(n: usize) -> Self {
+        Self {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(60),
+            max_samples: n.max(1),
+        }
+    }
+
     pub fn with_budget(mut self, budget: Duration) -> Self {
         self.budget = budget;
         self

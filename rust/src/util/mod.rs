@@ -1,13 +1,17 @@
 //! Offline substrates for crates unavailable in this environment
 //! (DESIGN.md §2): JSON, RNG, CLI parsing, bench harness, property testing,
-//! and the `anyhow`-style error substrate ([`err`]).
+//! the thread pool ([`pool`]), and the `anyhow`-style error substrate
+//! ([`err`]).
 
 pub mod bench;
 pub mod cli;
 pub mod err;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
+
+pub use pool::Pool;
 
 /// Format a float with engineering-style SI prefixes (for reports).
 pub fn si(value: f64, unit: &str) -> String {

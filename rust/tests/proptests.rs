@@ -272,6 +272,111 @@ fn prop_swt_pack_write_read_write_byte_identical() {
 }
 
 #[test]
+fn prop_csc_kernel_matches_dense_reference() {
+    // The acceptance property for the structurally-sparse kernels: the
+    // compiled CSC path must equal the dense FcExec reference exactly
+    // (same ascending-column accumulation order, so not just within a
+    // tolerance) across weight sparsity 0.0..=0.99, batch 0/1/n, and
+    // random activation sparsity.
+    use sonic::plan::{FcExec, KernelChoice};
+    check("csc kernel == dense kernel", Config::default(), |g: &mut Gen| {
+        let rows = g.dim(1, 40);
+        let cols = g.dim(1, 64);
+        let wsp = g.f64(0.0, 0.99);
+        let w = ColMatrix::from_row_major(rows, cols, &g.sparse_vec(rows * cols, wsp));
+        let relu = g.rng.bool(0.5);
+        let dense = FcExec::with_kernel(w.clone(), relu, 0.0, KernelChoice::Dense);
+        let csc = FcExec::with_kernel(w, relu, 0.0, KernelChoice::Csc);
+        for bn in [0usize, 1, g.dim(2, 9)] {
+            let asp = g.f64(0.0, 1.0);
+            let batch: Vec<Vec<f32>> = (0..bn).map(|_| g.sparse_vec(cols, asp)).collect();
+            let yd = dense.forward_batch(&batch).map_err(|e| e.to_string())?;
+            let yc = csc.forward_batch(&batch).map_err(|e| e.to_string())?;
+            if yd != yc {
+                return Err(format!(
+                    "csc != dense (rows={rows} cols={cols} wsp={wsp:.3} batch={bn})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csc_kernel_survives_zero_columns_and_matrices() {
+    // Degenerate structure: whole columns zeroed (empty CSC columns),
+    // plus the all-zero matrix — the kernel must skip them without
+    // touching the output.
+    use sonic::plan::{FcExec, KernelChoice};
+    check("csc kernel zero structure", Config::default(), |g: &mut Gen| {
+        let rows = g.dim(1, 24);
+        let cols = g.dim(1, 40);
+        let mut w_rm = g.sparse_vec(rows * cols, 0.5);
+        // zero a random subset of columns outright (possibly all of them)
+        let p_zero_col = g.f64(0.0, 1.0);
+        for c in 0..cols {
+            if g.rng.bool(p_zero_col) {
+                for r in 0..rows {
+                    w_rm[r * cols + c] = 0.0;
+                }
+            }
+        }
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let dense = FcExec::with_kernel(w.clone(), false, 0.0, KernelChoice::Dense);
+        let csc = FcExec::with_kernel(w, false, 0.0, KernelChoice::Csc);
+        let batch: Vec<Vec<f32>> = (0..3).map(|_| g.sparse_vec(cols, 0.2)).collect();
+        let yd = dense.forward_batch(&batch).map_err(|e| e.to_string())?;
+        let yc = csc.forward_batch(&batch).map_err(|e| e.to_string())?;
+        if yd != yc {
+            return Err("csc != dense with zeroed columns".into());
+        }
+        // all-zero matrix: output must be exactly zero
+        let z = ColMatrix::from_row_major(rows, cols, &vec![0.0; rows * cols]);
+        let zc = FcExec::with_kernel(z, false, 0.0, KernelChoice::Csc);
+        let yz = zc.forward_batch(&batch).map_err(|e| e.to_string())?;
+        if yz.iter().flatten().any(|&v| v != 0.0) {
+            return Err("all-zero matrix produced non-zero output".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_plan_executor_matches_serial() {
+    // Sharding a batch across pool workers must be bit-identical to the
+    // serial kernels, for any batch size vs worker count.
+    use sonic::model::ModelDesc;
+    use sonic::plan::PlanExecutor;
+    use sonic::util::pool::Pool;
+    use std::sync::Arc;
+    check(
+        "pooled executor == serial",
+        Config {
+            cases: 12,
+            ..Default::default()
+        },
+        |g: &mut Gen| {
+            let desc = ModelDesc::builtin("mnist").unwrap();
+            let seed = g.rng.range(0, 1 << 20) as u64;
+            let serial = PlanExecutor::synthetic(&desc, seed);
+            let workers = g.dim(2, 5);
+            let par = PlanExecutor::synthetic(&desc, seed)
+                .with_pool(Arc::new(Pool::new(workers, 64)));
+            let bn = g.dim(1, 7);
+            let batch: Vec<Vec<f32>> = (0..bn)
+                .map(|_| g.sparse_vec(serial.input_len(), 0.3))
+                .collect();
+            let a = serial.forward_batch(&batch).map_err(|e| e.to_string())?;
+            let b = par.forward_batch(&batch).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("parallel != serial (workers={workers} batch={bn})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_plan_batch_latency_monotone_and_bounded() {
     use sonic::model::ModelDesc;
     use sonic::plan::cached;
