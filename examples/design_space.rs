@@ -71,7 +71,7 @@ fn main() {
     ] {
         print!("{label:8}: ");
         for (n, m, nn, k) in pts {
-            let p = evaluate(&models, n, m, nn, k);
+            let p = evaluate(&models, n, m, nn, k).expect("non-empty workload");
             print!("({n},{m},{nn},{k})={:.1}  ", p.gm_fps_per_watt);
         }
         println!();

@@ -32,10 +32,12 @@ fn main() {
     t.print();
     println!("\ntop geometry: {:?} (paper best: (5, 50, 50, 10))", points[0].geometry());
 
-    // Paper claim: n > 5 gives no benefit.
-    let at5 = evaluate(&models, 5, 50, 50, 10);
-    let at8 = evaluate(&models, 8, 50, 50, 10);
-    let at10 = evaluate(&models, 10, 50, 50, 10);
+    // Paper claim: n > 5 gives no benefit.  (The workload is non-empty,
+    // so `evaluate` always scores — it returns None only for an empty
+    // model slice.)
+    let at5 = evaluate(&models, 5, 50, 50, 10).expect("non-empty workload");
+    let at8 = evaluate(&models, 8, 50, 50, 10).expect("non-empty workload");
+    let at10 = evaluate(&models, 10, 50, 50, 10).expect("non-empty workload");
     println!(
         "\nn sweep @ (_, 50, 50, 10): n=5 {:.1}, n=8 {:.1}, n=10 {:.1} FPS/W",
         at5.gm_fps_per_watt, at8.gm_fps_per_watt, at10.gm_fps_per_watt

@@ -11,9 +11,11 @@
 //! precompiled `FcExec` layout with the batched sparse matvec kernel,
 //! streaming the weights once per batch.  A second serving comparison
 //! tracks the `serve::Engine` facade's cost over the raw backend call
-//! (ticketing + queue hand-off + dynamic batching).  Results are also
-//! written to `BENCH_hotpath.json` for the perf trajectory (CI uploads
-//! it).
+//! (ticketing + queue hand-off + dynamic batching).  Kernel grids
+//! (dense-vs-CSC, and activation-gated-vs-ungated across act sparsity x
+//! batch) land in `BENCH_kernels.json` / `BENCH_actgate.json`; everything
+//! else in `BENCH_hotpath.json` for the perf trajectory (CI uploads all
+//! three).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -242,6 +244,94 @@ fn main() {
     match std::fs::write(&kout, kernels_json.to_pretty()) {
         Ok(()) => println!("kernel results written to {kout}"),
         Err(e) => eprintln!("could not write {kout}: {e}"),
+    }
+
+    // --- activation-gating micro-bench: gated vs ungated kernels --------
+    //
+    // Dual-sparsity acceptance: on the same svhn-sized FC matrix, compare
+    // the activation-gated kernel variants (skip a stored column when its
+    // batch activation slab is all-zero) against the ungated streaming
+    // kernels across measured activation sparsity x batch size.  At 0%
+    // activation sparsity this measures the pure gating overhead the
+    // density policy avoids by running ungated on dense batches; at 90%
+    // it measures the win the policy captures.  Results go to
+    // BENCH_actgate.json (uploaded with the other BENCH_*.json by CI).
+    println!("\n=== activation-gating micro-bench: gated vs ungated (272x1792 FC) ===\n");
+    let mut act_entries = Vec::new();
+    let mut act_gate_gain = 0.0; // csc kernel, 90% act sparsity, batch 8
+    let kernels_under_test = [
+        (KernelChoice::Dense, 0.3f64), // near-dense layer -> dense kernel
+        (KernelChoice::Csc, 0.8),      // pruned layer -> CSC kernel
+    ];
+    for &(kernel, wsp) in &kernels_under_test {
+        let wk = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, wsp));
+        let exec = FcExec::with_kernel(wk, false, 0.0, kernel);
+        for &asp in &[0.0f64, 0.5, 0.9] {
+            for &bn in &[1usize, 8, 64] {
+                let inputs: Vec<Vec<f32>> =
+                    (0..bn).map(|_| rng.sparse_vec(cols, asp)).collect();
+                let (mut xt, mut yt) = (Vec::new(), Vec::new());
+                let mut out = BatchTensor::new();
+                let kname = kernel.as_str();
+                let ungated = run(
+                    &mut results,
+                    &format!("fc {kname} ungated asp={asp:.2} batch={bn}"),
+                    || {
+                        exec.forward_batch_into_gated(
+                            &inputs, &mut xt, &mut yt, &mut out, Some(false),
+                        )
+                        .unwrap();
+                        black_box(&out);
+                    },
+                );
+                let gated = run(
+                    &mut results,
+                    &format!("fc {kname} gated   asp={asp:.2} batch={bn}"),
+                    || {
+                        exec.forward_batch_into_gated(
+                            &inputs, &mut xt, &mut yt, &mut out, Some(true),
+                        )
+                        .unwrap();
+                        black_box(&out);
+                    },
+                );
+                let speedup = ungated.mean_ns / gated.mean_ns;
+                println!(
+                    "    -> gating {speedup:.2}x ({:.0} ns/inf gated vs {:.0} ungated)\n",
+                    gated.mean_ns / bn as f64,
+                    ungated.mean_ns / bn as f64
+                );
+                if kernel == KernelChoice::Csc && asp == 0.9 && bn == 8 {
+                    act_gate_gain = speedup;
+                }
+                act_entries.push(obj(vec![
+                    ("kernel", s(kname)),
+                    ("weight_sparsity", num(wsp)),
+                    ("act_sparsity", num(asp)),
+                    ("batch", num(bn as f64)),
+                    ("gated_ns_per_inf", num(gated.mean_ns / bn as f64)),
+                    ("ungated_ns_per_inf", num(ungated.mean_ns / bn as f64)),
+                    ("speedup_gated_vs_ungated", num(speedup)),
+                ]));
+            }
+        }
+    }
+    println!(
+        "activation-gating gain on the CSC kernel at 90% act sparsity, batch 8: \
+         {act_gate_gain:.2}x"
+    );
+    let actgate_json = obj(vec![
+        ("bench", s("actgate")),
+        ("rows", num(rows as f64)),
+        ("cols", num(cols as f64)),
+        ("csc_gate_gain_90asp_b8", num(act_gate_gain)),
+        ("results", arr(act_entries)),
+    ]);
+    let aout = std::env::var("SONIC_BENCH_ACTGATE_JSON")
+        .unwrap_or_else(|_| "BENCH_actgate.json".to_string());
+    match std::fs::write(&aout, actgate_json.to_pretty()) {
+        Ok(()) => println!("activation-gating results written to {aout}"),
+        Err(e) => eprintln!("could not write {aout}: {e}"),
     }
 
     // --- engine facade overhead vs the raw backend ----------------------

@@ -166,6 +166,14 @@ pub fn conv2d_compressed(
 /// for a whole (image, layer) are materialized once, then every
 /// compressed kernel streams across all of them — patch extraction is
 /// hoisted out of the per-kernel (and per-request) loop.
+///
+/// Returns the number of exactly-zero elements written (padding plus the
+/// image's ReLU-gated zeros, counted as the patches are built): the
+/// measured activation density of the IF patch stream the conv dataflow
+/// consumes, reported to the dual-sparsity accounting the same way the
+/// FC slab scans are.  The fraction `1 - zeros / out.len()` is what
+/// `LayerPlan.act_density` holds when a plan is compiled from
+/// measurements.
 #[allow(clippy::too_many_arguments)]
 pub fn im2col_into(
     x: &[f32],
@@ -175,11 +183,12 @@ pub fn im2col_into(
     kh: usize,
     kw: usize,
     out: &mut [f32],
-) {
+) -> u64 {
     let kvol = kh * kw * c;
     assert_eq!(x.len(), h * w * c, "image size mismatch");
     assert_eq!(out.len(), h * w * kvol, "patch matrix size mismatch");
     let (ph, pw) = (kh / 2, kw / 2);
+    let mut zeros = 0u64;
     let mut base = 0usize;
     for oy in 0..h {
         for ox in 0..w {
@@ -190,6 +199,7 @@ pub fn im2col_into(
                 if iy < 0 || iy >= h as isize {
                     row[o..o + kw * c].fill(0.0);
                     o += kw * c;
+                    zeros += (kw * c) as u64;
                     continue;
                 }
                 let row_base = iy as usize * w;
@@ -197,9 +207,12 @@ pub fn im2col_into(
                     let ix = ox as isize + dx as isize - pw as isize;
                     if ix < 0 || ix >= w as isize {
                         row[o..o + c].fill(0.0);
+                        zeros += c as u64;
                     } else {
                         let src = (row_base + ix as usize) * c;
-                        row[o..o + c].copy_from_slice(&x[src..src + c]);
+                        let px = &x[src..src + c];
+                        row[o..o + c].copy_from_slice(px);
+                        zeros += px.iter().filter(|&&v| v == 0.0).count() as u64;
                     }
                     o += c;
                 }
@@ -207,6 +220,7 @@ pub fn im2col_into(
             base += kvol;
         }
     }
+    zeros
 }
 
 /// Stream each compressed kernel across every row of an im2col patch
@@ -337,6 +351,29 @@ mod tests {
                 assert_eq!(&m[p * kvol..(p + 1) * kvol], &want[..], "pixel ({oy},{ox})");
             }
         }
+    }
+
+    #[test]
+    fn im2col_reports_patch_stream_zero_count() {
+        // ReLU-style sparse image: the returned count must equal a rescan
+        // of the built patch matrix (padding zeros included), i.e. the
+        // measured density of the IF stream.
+        let mut rng = Rng::new(13);
+        let (h, w, c, kh, kw) = (6, 5, 2, 3, 3);
+        let x = rng.sparse_vec(h * w * c, 0.6);
+        let kvol = kh * kw * c;
+        let mut m = vec![f32::NAN; h * w * kvol];
+        let zeros = im2col_into(&x, h, w, c, kh, kw, &mut m);
+        let rescan = m.iter().filter(|&&v| v == 0.0).count() as u64;
+        assert_eq!(zeros, rescan);
+        // padding guarantees zeros even for a dense image
+        let dense = vec![1.0f32; h * w * c];
+        let zp = im2col_into(&dense, h, w, c, kh, kw, &mut m);
+        assert!(zp > 0);
+        assert_eq!(zp, m.iter().filter(|&&v| v == 0.0).count() as u64);
+        // density consistency with the per-patch helper
+        let sp = zeros as f64 / m.len() as f64;
+        assert!((0.0..1.0).contains(&sp));
     }
 
     #[test]

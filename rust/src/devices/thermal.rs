@@ -30,6 +30,12 @@ pub fn crosstalk_matrix(n: usize, coupling: f64) -> Vec<Vec<f64>> {
 pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
     let n = b.len();
     assert!(a.len() == n && a.iter().all(|r| r.len() == n));
+    // A NaN target poisons back-substitution without ever touching the
+    // pivot checks (which only see the matrix) — reject it up front so a
+    // poisoned system is always `None`, never Some(garbage).
+    if b.iter().any(|x| x.is_nan()) {
+        return None;
+    }
     // augmented matrix
     let mut m: Vec<Vec<f64>> = a
         .iter()
@@ -41,12 +47,17 @@ pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
         })
         .collect();
     for col in 0..n {
-        // pivot
+        // pivot: total_cmp is a total order, so a NaN entry cannot panic
+        // the comparison.  |NaN| sorts above every finite magnitude,
+        // which makes a NaN-poisoned column select a NaN "pivot" — the
+        // magnitude check below then rejects it (`NaN >= eps` is false),
+        // reporting the poisoned system as unsolvable instead of
+        // propagating garbage or panicking.
         let piv = (col..n).max_by(|&i, &j| {
-            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+            m[i][col].abs().total_cmp(&m[j][col].abs())
         })?;
-        if m[piv][col].abs() < 1e-12 {
-            return None; // singular
+        if !(m[piv][col].abs() >= 1e-12) {
+            return None; // singular, or NaN-poisoned (non-pivotable)
         }
         m.swap(col, piv);
         let pivval = m[col][col];
@@ -64,7 +75,15 @@ pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
             }
         }
     }
-    Some((0..n).map(|i| m[i][n] / m[i][i]).collect())
+    let x: Vec<f64> = (0..n).map(|i| m[i][n] / m[i][i]).collect();
+    // Belt-and-braces: a NaN that entered off the pivot columns (e.g.
+    // above the diagonal with a zero sub-pivot entry, where the `f == 0`
+    // elimination skip keeps it out of every pivot check) still poisons
+    // the Jordan step — never report such a system as solved.
+    if x.iter().any(|v| v.is_nan()) {
+        return None;
+    }
+    Some(x)
 }
 
 /// Heater powers and totals for reaching per-ring temperature targets.
@@ -149,6 +168,33 @@ mod tests {
     fn solver_rejects_singular() {
         let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
         assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn solver_returns_none_on_nan_instead_of_panicking() {
+        // regression: partial_cmp().unwrap() in pivot selection panicked
+        // on any NaN matrix entry
+        let nan = f64::NAN;
+        // NaN in the first pivot column
+        let a = vec![vec![nan, 1.0], vec![2.0, 1.0]];
+        assert!(solve(&a, &[1.0, 1.0]).is_none());
+        // NaN off the first pivot column poisons a later elimination step
+        let b = vec![vec![2.0, nan], vec![1.0, 1.0]];
+        assert!(solve(&b, &[1.0, 1.0]).is_none());
+        // all-NaN system
+        let c = vec![vec![nan, nan], vec![nan, nan]];
+        assert!(solve(&c, &[1.0, 1.0]).is_none());
+        // NaN in the RHS alone must also report unsolvable, not Some(NaN)
+        let id = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        assert!(solve(&id, &[nan, 1.0]).is_none());
+        // NaN above the diagonal with a zero sub-pivot entry: it evades
+        // every pivot check (the f == 0 elimination skip) but must still
+        // come back None, not Some([NaN, 1.0])
+        let ut = vec![vec![1.0, nan], vec![0.0, 1.0]];
+        assert!(solve(&ut, &[1.0, 1.0]).is_none());
+        // ted_tuning survives a poisoned crosstalk matrix via its fallback
+        let sol = ted_tuning(&b, &[1.0, 1.0]);
+        assert!(sol.powers.iter().all(|p| p.is_finite()));
     }
 
     #[test]

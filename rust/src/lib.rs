@@ -44,8 +44,16 @@
 //!   ([`plan::ExecScratch`]) — **zero heap allocation per batch at
 //!   steady state** — and shard deterministically across the
 //!   [`util::pool`] workers, bit-identical to serial execution.
+//!   **Dual sparsity:** each FC layer measures its batch's activation
+//!   density (zero counts threaded between layers by the ReLU writes)
+//!   and, when it clears [`plan::gate_activations`], runs the
+//!   activation-gated kernel that skips whole stored columns of exact
+//!   zeros; measured per-layer density feeds the serving metrics and the
+//!   measured-density photonic charging
+//!   ([`plan::compile_with_density`] / `sim::simulate_with_density`).
 //!   `benches/hotpath.rs` gates the CSC kernel at >= 2x over dense at
-//!   90% weight sparsity (batch 8) and records `BENCH_kernels.json`.
+//!   90% weight sparsity (batch 8) and records `BENCH_kernels.json` +
+//!   `BENCH_actgate.json` (gated vs ungated grid).
 //! * [`sim`] — the analytic performance/power/energy simulator that
 //!   regenerates every table and figure of the paper's evaluation — a view
 //!   over the compiled plan.

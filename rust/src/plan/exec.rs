@@ -12,6 +12,24 @@
 //!   near-dense layers.  The CSC kernel register-blocks across the batch
 //!   (activations transposed into a `[col][batch]` tile) so each stored
 //!   non-zero costs one vectorizable batch-wide FMA.
+//! * **Dual sparsity at run time**: each FC layer measures its batch's
+//!   input activation density (tracked between layers by
+//!   [`BatchTensor::row_zeros`] — the previous layer's ReLU counted its
+//!   zeros as it wrote them — or one column-slab scan for the first
+//!   layer) and, when the kernel-aware gate policy clears
+//!   ([`crate::plan::gate_activations`] for dense per-activation skips;
+//!   [`crate::plan::gate_csc_slabs`], which also weighs batch size, for
+//!   the CSC kernel's whole-slab skips), runs the activation-gated kernel
+//!   variant: a stored weight column whose activations are all exactly
+//!   zero is skipped wholesale (`col_ptr[c]..col_ptr[c+1]` for CSC, the
+//!   column stream for dense).  Dense batches — and large batches where
+//!   an all-zero slab is statistically impossible — run the ungated
+//!   branch-free kernels instead, so gating costs nothing when there is
+//!   nothing to skip.  Gated and ungated outputs are bit-identical
+//!   (property-tested).
+//!   The measured densities feed the serving metrics (`act_density` per
+//!   layer) and the measured-density photonic charging
+//!   ([`crate::plan::compile_with_density`]).
 //! * [`ConvExec`] compiles per-output-channel compressed kernels once;
 //!   per batch it materializes the im2col patch matrix for **all**
 //!   requests into a scratch tile and streams every kernel across all
@@ -116,6 +134,86 @@ fn relu_slice(y: &mut [f32]) {
     }
 }
 
+/// ReLU over `row_len`-element rows, recording each row's exactly-zero
+/// count into `zeros` as it writes — the tracking update the next layer's
+/// gate decision reads for free (no rescanning).  A clamped negative and
+/// an exact 0.0 both count; NaN does not (`NaN != 0.0`, matching the
+/// compression contract).
+fn relu_count_rows(y: &mut [f32], row_len: usize, zeros: &mut [u32]) {
+    if row_len == 0 {
+        zeros.fill(0);
+        return;
+    }
+    for (row, z) in y.chunks_exact_mut(row_len).zip(zeros.iter_mut()) {
+        let mut n = 0u32;
+        for v in row.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+            if *v == 0.0 {
+                n += 1;
+            }
+        }
+        *z = n;
+    }
+}
+
+/// Per-row exact-zero counts without modification (the non-ReLU layers'
+/// tracking update — one streaming pass over output the kernel just
+/// produced).
+fn count_zero_rows(y: &[f32], row_len: usize, zeros: &mut [u32]) {
+    if row_len == 0 {
+        zeros.fill(0);
+        return;
+    }
+    for (row, z) in y.chunks_exact(row_len).zip(zeros.iter_mut()) {
+        *z = row.iter().filter(|&&v| v == 0.0).count() as u32;
+    }
+}
+
+/// Measured input zeros/elements for a batch view: sums the producer's
+/// per-row tracking when the rows are a tracked [`BatchTensor`] (the
+/// steady-state inter-layer path — no rescan), otherwise scans the batch
+/// column-slab once (first layer, untracked callers).  Exact-zero
+/// contract throughout.
+fn measure_rows(rows: Rows<'_>, row_len: usize) -> (u64, u64) {
+    let elems = (rows.batch() * row_len) as u64;
+    if let Rows::Flat(t) = rows {
+        if let Some(z) = t.tracked_zeros() {
+            return (z, elems);
+        }
+    }
+    let mut z = 0u64;
+    for b in 0..rows.batch() {
+        z += rows.row(b).iter().filter(|&&v| v == 0.0).count() as u64;
+    }
+    (z, elems)
+}
+
+/// Gate decision from a measured zero count, kernel-aware: the dense
+/// kernel skips per activation ([`crate::plan::gate_activations`],
+/// density alone), while the CSC kernel skips whole `[col][slab]` tiles
+/// whose all-zero probability decays exponentially in slab length
+/// ([`crate::plan::gate_csc_slabs`]).  `slab` is the row count the
+/// kernel will actually scan per column — the **shard** size under
+/// pooled execution, not the whole batch, since each shard checks its
+/// own tile.  Empty batches don't gate.
+fn gate_from_measurement(fc: &FcExec, zeros: u64, elems: u64, slab: usize) -> bool {
+    match density_from_counts(zeros, elems) {
+        Some(d) if fc.runs_csc() => super::gate_csc_slabs(d, slab),
+        Some(d) => super::gate_activations(d),
+        None => false,
+    }
+}
+
+/// Measured activation density from accumulated zero/element counts.
+/// `None` until any input flowed — the one place the "no elements means
+/// unmeasured, never dense" policy lives (every consumer maps `None` to
+/// its own unmeasured representation).
+fn density_from_counts(zeros: u64, elems: u64) -> Option<f64> {
+    (elems > 0).then(|| 1.0 - zeros as f64 / elems as f64)
+}
+
 thread_local! {
     /// CSC transpose tiles for pool-worker shards (see
     /// [`fc_csc_shard`]): thread-local so parallel execution stays
@@ -130,8 +228,10 @@ thread_local! {
 /// Compiled FC layer: the dense column-major matrix plus — when the layer
 /// is sparse enough — a true CSC compilation of it.  The kernel choice is
 /// made **once at compile time** from measured weight density
-/// ([`choose_fc_kernel`]); the dynamic activation sparsity is exploited
-/// by both kernels by skipping zero-activation columns.
+/// ([`choose_fc_kernel`]); dynamic activation sparsity is exploited **per
+/// batch** by the gated kernel variants, selected from the measured input
+/// density ([`crate::plan::gate_activations`]), which skip a stored
+/// column wholesale when its activations are all exactly zero.
 #[derive(Debug, Clone)]
 pub struct FcExec {
     /// out x in, column-major — column `c` is the weights multiplying
@@ -216,7 +316,8 @@ impl FcExec {
 
     /// Batched matvec through the compiled kernel (legacy nested API —
     /// allocates its result; the serving path uses the flat kernels via
-    /// [`PlanExecutor::forward_batch_flat`]).
+    /// [`PlanExecutor::forward_batch_flat`]).  Measures the batch and
+    /// auto-selects the activation-gated variant.
     pub fn forward_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut xt = Vec::new();
         let mut yt = Vec::new();
@@ -225,11 +326,25 @@ impl FcExec {
         Ok(out.to_rows())
     }
 
+    /// [`FcExec::forward_batch`] with the activation gate forced on or
+    /// off (bench/test hook; the gated and ungated kernels are
+    /// bit-identical by contract, property-tested in
+    /// `tests/proptests.rs`).
+    pub fn forward_batch_gated(&self, inputs: &[Vec<f32>], gate: bool) -> Result<Vec<Vec<f32>>> {
+        let mut xt = Vec::new();
+        let mut yt = Vec::new();
+        let mut out = BatchTensor::new();
+        self.forward_batch_into_gated(inputs, &mut xt, &mut yt, &mut out, Some(gate))?;
+        Ok(out.to_rows())
+    }
+
     /// Allocation-reusing batched matvec: writes a `batch x rows` tensor
     /// into `out`, using `xt`/`yt` as the CSC transpose tiles (grown on
     /// demand, untouched on the dense path).  This is the raw kernel the
     /// micro-bench compares dense-vs-CSC with — no per-call allocation
-    /// once the buffers are warm.
+    /// once the buffers are warm.  Scans the batch once and runs the
+    /// activation-gated kernel when the measured density warrants it
+    /// ([`crate::plan::gate_activations`]).
     pub fn forward_batch_into(
         &self,
         inputs: &[Vec<f32>],
@@ -237,15 +352,47 @@ impl FcExec {
         yt: &mut Vec<f32>,
         out: &mut BatchTensor,
     ) -> Result<()> {
+        self.forward_batch_into_gated(inputs, xt, yt, out, None)
+    }
+
+    /// [`FcExec::forward_batch_into`] with an explicit gate override
+    /// (`None` measures the batch and applies the density policy).  Also
+    /// maintains `out`'s per-row zero tracking, like the executor path.
+    pub fn forward_batch_into_gated(
+        &self,
+        inputs: &[Vec<f32>],
+        xt: &mut Vec<f32>,
+        yt: &mut Vec<f32>,
+        out: &mut BatchTensor,
+        gate: Option<bool>,
+    ) -> Result<()> {
         let rows = Rows::Nested(inputs);
         rows.check_len(self.weights.cols, "fc")?;
-        if self.runs_csc() {
-            out.reshape(inputs.len(), self.weights.rows);
-        } else {
-            out.reset(inputs.len(), self.weights.rows);
-        }
-        self.run_shard(rows, 0, inputs.len(), xt, yt, &mut out.data);
+        let gate = gate.unwrap_or_else(|| {
+            let (z, e) = measure_rows(rows, self.weights.cols);
+            // serial path: the kernel scans the whole batch as one slab
+            gate_from_measurement(self, z, e, inputs.len())
+        });
+        self.prepare_out(out, inputs.len());
+        self.run_shard(rows, 0, inputs.len(), xt, yt, &mut out.data, &mut out.row_zeros, gate);
         Ok(())
+    }
+
+    /// Prepare `out` for this layer's kernel — the single place the
+    /// write-pattern invariant lives: the dense kernel **accumulates**
+    /// (`+=`) and needs a zeroed output ([`BatchTensor::reset`]), the CSC
+    /// kernel assigns every element from its `yt` tile (cheaper
+    /// [`BatchTensor::reshape`]).  Either way the per-row zero tracking
+    /// is (re)sized for the batch, ready for the kernel's counting
+    /// writes.
+    fn prepare_out(&self, out: &mut BatchTensor, batch: usize) {
+        if self.runs_csc() {
+            out.reshape(batch, self.weights.rows);
+        } else {
+            out.reset(batch, self.weights.rows);
+        }
+        out.row_zeros.clear();
+        out.row_zeros.resize(batch, 0);
     }
 
     /// Whether the CSC kernel actually runs (the dense kernel needs a
@@ -257,7 +404,10 @@ impl FcExec {
     /// Run rows `[b0, b0+nb)` through the compiled kernel into `out`
     /// (`nb * rows_out`; pre-zeroed on the dense path).  `xt`/`yt` are
     /// the CSC transpose tiles, grown on demand; untouched on the dense
-    /// path.
+    /// path.  `zeros` (`nb` entries) receives the output rows' exact-zero
+    /// counts — the tracking the next layer's gate reads.  With `gate`
+    /// the kernels skip zero-activation work (bit-identical either way).
+    #[allow(clippy::too_many_arguments)]
     fn run_shard(
         &self,
         rows: Rows<'_>,
@@ -266,26 +416,41 @@ impl FcExec {
         xt: &mut Vec<f32>,
         yt: &mut Vec<f32>,
         out: &mut [f32],
+        zeros: &mut [u32],
+        gate: bool,
     ) {
         match (self.kernel, self.csc.as_ref()) {
-            (KernelChoice::Csc, Some(csc)) => fc_csc_shard(csc, rows, b0, nb, xt, yt, out),
-            _ => fc_dense_shard(&self.weights, rows, b0, nb, out),
+            (KernelChoice::Csc, Some(csc)) => fc_csc_shard(csc, rows, b0, nb, xt, yt, out, gate),
+            _ => fc_dense_shard(&self.weights, rows, b0, nb, out, gate),
         }
         if self.relu {
-            relu_slice(out);
+            relu_count_rows(out, self.weights.rows, zeros);
+        } else {
+            count_zero_rows(out, self.weights.rows, zeros);
         }
     }
 }
 
-/// Dense fallback: stream each stored column once per batch, skipping
-/// zero activations (Fig. 1's dynamic compression without gather copies).
-fn fc_dense_shard(w: &ColMatrix, rows: Rows<'_>, b0: usize, nb: usize, out: &mut [f32]) {
+/// Dense fallback: stream each stored column once per batch.  With
+/// `gate`, a zero activation skips its column stream for that request
+/// (Fig. 1's dynamic compression without gather copies); ungated, the
+/// stream runs branch-free — for finite weights the `+= w * 0.0` terms
+/// are exact no-ops (an accumulator reached through `+=` from `+0.0` is
+/// never `-0.0`), so both variants are bit-identical.
+fn fc_dense_shard(
+    w: &ColMatrix,
+    rows: Rows<'_>,
+    b0: usize,
+    nb: usize,
+    out: &mut [f32],
+    gate: bool,
+) {
     let rout = w.rows;
     for c in 0..w.cols {
         let col = w.col(c);
         for j in 0..nb {
             let xv = rows.row(b0 + j)[c];
-            if xv == 0.0 {
+            if gate && xv == 0.0 {
                 continue; // compressed away for this request
             }
             let y = &mut out[j * rout..(j + 1) * rout];
@@ -300,9 +465,14 @@ fn fc_dense_shard(w: &ColMatrix, rows: Rows<'_>, b0: usize, nb: usize, out: &mut
 /// transposed into a `[col][batch]` tile (`xt`) and accumulation happens
 /// in a `[row][batch]` tile (`yt`), so each stored non-zero weight is
 /// loaded once and applied to the whole shard with one contiguous FMA
-/// loop.  Zero weights were never stored; per output element the
-/// accumulation order (ascending column) is identical to the dense
-/// kernel, so results match it exactly.
+/// loop.  Zero weights were never stored; with `gate` the kernel
+/// additionally scans each column's activation slab and skips the entire
+/// stored column `col_ptr[c]..col_ptr[c+1]` when every activation feeding
+/// it is exactly zero — SONIC's dual weight x activation sparsity on one
+/// pass.  Per output element the accumulation order (ascending column) is
+/// identical to the dense kernel and independent of `gate` (skipped
+/// columns contribute exact-zero terms), so all variants agree exactly.
+#[allow(clippy::too_many_arguments)]
 fn fc_csc_shard(
     csc: &CscMatrix,
     rows: Rows<'_>,
@@ -311,6 +481,7 @@ fn fc_csc_shard(
     xt: &mut Vec<f32>,
     yt: &mut Vec<f32>,
     out: &mut [f32],
+    gate: bool,
 ) {
     let (rout, cols) = (csc.rows, csc.cols);
     // xt is fully overwritten by the transpose below — resize without a
@@ -331,7 +502,7 @@ fn fc_csc_shard(
             continue; // whole column pruned — never loaded
         }
         let xrow = &xt[c * nb..(c + 1) * nb];
-        if xrow.iter().all(|&v| v == 0.0) {
+        if gate && xrow.iter().all(|&v| v == 0.0) {
             continue; // dead activation across the whole shard
         }
         for (&v, &ri) in vals.iter().zip(idx) {
@@ -437,7 +608,12 @@ impl ConvExec {
     /// the whole shard (`patches`, `nb * h*h*kvol`), stream every
     /// compressed kernel across all of it, then ReLU + optional pool.
     /// `convtmp` holds the pre-pool activations (`nb * pre_pool_len`)
-    /// and is untouched when the layer has no pool.
+    /// and is untouched when the layer has no pool.  `zeros` (`nb`
+    /// entries) receives the output rows' zero counts; `patch_zeros`
+    /// accumulates the exact-zero elements of the ReLU-gated IF patch
+    /// stream this shard consumed (counted by `im2col_into` as it writes
+    /// — the measured activation density of the conv dataflow).
+    #[allow(clippy::too_many_arguments)]
     fn run_shard(
         &self,
         rows: Rows<'_>,
@@ -446,12 +622,14 @@ impl ConvExec {
         patches: &mut [f32],
         convtmp: &mut [f32],
         out: &mut [f32],
+        zeros: &mut [u32],
+        patch_zeros: &mut u64,
     ) {
         let (h, cin, k) = (self.in_hw, self.in_ch, self.kernel);
         let kvol = self.kvol();
         let ppi = h * h * kvol; // patch floats per request
         for j in 0..nb {
-            im2col_into(
+            *patch_zeros += im2col_into(
                 rows.row(b0 + j),
                 h,
                 h,
@@ -466,7 +644,7 @@ impl ConvExec {
             relu_slice(convtmp);
             let (pre, post) = (self.pre_pool_len(), self.out_len());
             for j in 0..nb {
-                maxpool2x2(
+                zeros[j] = maxpool2x2(
                     &convtmp[j * pre..(j + 1) * pre],
                     h,
                     self.kernels.len(),
@@ -475,15 +653,19 @@ impl ConvExec {
             }
         } else {
             conv_patches_compressed(patches, kvol, &self.kernels, out);
-            relu_slice(out);
+            relu_count_rows(out, self.out_len(), zeros);
         }
     }
 }
 
 /// 2x2 max-pool over a `[h][h][cout]` activation map into `[h/2][h/2][cout]`.
-fn maxpool2x2(y: &[f32], h: usize, cout: usize, p: &mut [f32]) {
+/// Returns the count of exactly-zero outputs (post-ReLU inputs are
+/// non-negative, so a zero output means the whole 2x2 window was dead) —
+/// the zero tracking for the pooled row comes free with the writes.
+fn maxpool2x2(y: &[f32], h: usize, cout: usize, p: &mut [f32]) -> u32 {
     let oh = h / 2;
     debug_assert_eq!(p.len(), oh * oh * cout);
+    let mut zeros = 0u32;
     for py in 0..oh {
         for px in 0..oh {
             for ch in 0..cout {
@@ -496,10 +678,14 @@ fn maxpool2x2(y: &[f32], h: usize, cout: usize, p: &mut [f32]) {
                         }
                     }
                 }
+                if m == 0.0 {
+                    zeros += 1;
+                }
                 p[(py * oh + px) * cout + ch] = m;
             }
         }
     }
+    zeros
 }
 
 // ---------------------------------------------------------------------------
@@ -551,6 +737,15 @@ pub struct ExecScratch {
     /// Accumulated kernel nanoseconds per layer (index-aligned with the
     /// executor's layers).
     layer_ns: Vec<u64>,
+    /// Accumulated exactly-zero input elements each layer consumed (FC:
+    /// the activation slab; CONV: the im2col patch stream).  Paired with
+    /// `layer_in_elems`, this is the measured activation density the
+    /// serving metrics and the measured-density plan charging read.
+    layer_in_zeros: Vec<u64>,
+    /// Accumulated input elements each layer consumed.
+    layer_in_elems: Vec<u64>,
+    /// Per-shard zero-count staging for pooled conv layers (grown once).
+    shard_zeros: Vec<u64>,
     /// Batches executed through this scratch.
     batches: u64,
 }
@@ -569,6 +764,28 @@ impl ExecScratch {
     /// [`PlanExecutor::kernel_stats`]).
     pub fn layer_ns(&self) -> &[u64] {
         &self.layer_ns
+    }
+
+    /// Accumulated exactly-zero input elements per layer (measured
+    /// activation sparsity numerator).
+    pub fn layer_in_zeros(&self) -> &[u64] {
+        &self.layer_in_zeros
+    }
+
+    /// Accumulated input elements per layer (measured density
+    /// denominator).
+    pub fn layer_in_elems(&self) -> &[u64] {
+        &self.layer_in_elems
+    }
+
+    /// Measured activation density (fraction of non-zero inputs) for
+    /// layer `i` across every batch run so far; `None` before any input
+    /// flowed.
+    pub fn act_density(&self, i: usize) -> Option<f64> {
+        match (self.layer_in_zeros.get(i), self.layer_in_elems.get(i)) {
+            (Some(&z), Some(&e)) => density_from_counts(z, e),
+            _ => None,
+        }
     }
 }
 
@@ -741,21 +958,36 @@ impl PlanExecutor {
         self.forward_rows(Rows::Flat(input), scratch)
     }
 
-    /// Render accumulated per-layer kernel nanoseconds (index-aligned
-    /// with this executor's layers — e.g. an [`ExecScratch`]'s
-    /// `layer_ns`, or a backend-wide aggregate) as the breakdown the
-    /// serving metrics surface.
-    pub fn kernel_stats(&self, layer_ns: &[u64], batches: u64) -> Vec<LayerKernelStat> {
+    /// Render accumulated per-layer kernel counters (index-aligned with
+    /// this executor's layers — e.g. an [`ExecScratch`]'s, or a
+    /// backend-wide aggregate) as the breakdown the serving metrics
+    /// surface.  `in_zeros`/`in_elems` are the measured activation
+    /// zero/element totals each layer consumed; a layer that never saw
+    /// input reports no density.
+    pub fn kernel_stats(
+        &self,
+        layer_ns: &[u64],
+        in_zeros: &[u64],
+        in_elems: &[u64],
+        batches: u64,
+    ) -> Vec<LayerKernelStat> {
         self.layers
             .iter()
             .enumerate()
-            .map(|(i, layer)| LayerKernelStat {
-                layer: self.layer_names.get(i).cloned().unwrap_or_default(),
-                kernel: layer.kernel_name().to_string(),
-                total: std::time::Duration::from_nanos(
-                    layer_ns.get(i).copied().unwrap_or(0),
-                ),
-                batches,
+            .map(|(i, layer)| {
+                let act_density = match (in_zeros.get(i), in_elems.get(i)) {
+                    (Some(&z), Some(&e)) => density_from_counts(z, e),
+                    _ => None,
+                };
+                LayerKernelStat {
+                    layer: self.layer_names.get(i).cloned().unwrap_or_default(),
+                    kernel: layer.kernel_name().to_string(),
+                    total: std::time::Duration::from_nanos(
+                        layer_ns.get(i).copied().unwrap_or(0),
+                    ),
+                    batches,
+                    act_density,
+                }
             })
             .collect()
     }
@@ -770,6 +1002,10 @@ impl PlanExecutor {
         if scratch.layer_ns.len() != self.layers.len() {
             scratch.layer_ns = vec![0; self.layers.len()];
         }
+        if scratch.layer_in_zeros.len() != self.layers.len() {
+            scratch.layer_in_zeros = vec![0; self.layers.len()];
+            scratch.layer_in_elems = vec![0; self.layers.len()];
+        }
         scratch.batches += 1;
         let ExecScratch {
             bufs,
@@ -778,6 +1014,9 @@ impl PlanExecutor {
             xt,
             yt,
             layer_ns,
+            layer_in_zeros,
+            layer_in_elems,
+            shard_zeros,
             ..
         } = scratch;
         let (a, b) = bufs.split_at_mut(1);
@@ -794,8 +1033,10 @@ impl PlanExecutor {
         for (i, layer) in self.layers.iter().enumerate() {
             let t0 = Instant::now();
             let rows = if first { input } else { Rows::Flat(&*src) };
-            self.run_layer(layer, rows, dst, patches, convtmp, xt, yt)?;
+            let (z, e) = self.run_layer(layer, rows, dst, patches, convtmp, xt, yt, shard_zeros)?;
             layer_ns[i] += t0.elapsed().as_nanos() as u64;
+            layer_in_zeros[i] += z;
+            layer_in_elems[i] += e;
             std::mem::swap(&mut src, &mut dst);
             first = false;
         }
@@ -804,9 +1045,14 @@ impl PlanExecutor {
 
     /// Run one layer over `rows` into `dst`, sharding across the pool
     /// when one is configured and the batch is worth splitting.  Shards
-    /// write disjoint slices of `dst` (and of the conv tiles), and each
-    /// output row is computed entirely by one shard in a fixed order —
-    /// results are bit-identical to serial execution.
+    /// write disjoint slices of `dst` (and of the conv tiles and the
+    /// per-row zero tracking), and each output row is computed entirely
+    /// by one shard in a fixed order — results are bit-identical to
+    /// serial execution.  Returns the layer's measured input
+    /// `(zero_elements, total_elements)`: FC layers measure the
+    /// activation slab they consumed (tracked by the previous layer, or
+    /// scanned once for the batch's first layer) and gate their kernels
+    /// on it; CONV layers measure the ReLU-gated im2col patch stream.
     #[allow(clippy::too_many_arguments)]
     fn run_layer(
         &self,
@@ -817,46 +1063,65 @@ impl PlanExecutor {
         convtmp: &mut BatchTensor,
         xt: &mut Vec<f32>,
         yt: &mut Vec<f32>,
-    ) -> Result<()> {
+        shard_zeros: &mut Vec<u64>,
+    ) -> Result<(u64, u64)> {
         let batch = rows.batch();
         let pool = self
             .par
             .as_ref()
             .map(|p| p.get())
             .filter(|p| batch >= 2 && p.workers() > 1);
-        match layer {
+        let measured = match layer {
             LayerExec::Fc(fc) => {
                 rows.check_len(fc.weights.cols, "fc")?;
                 let rout = fc.weights.rows;
-                // the dense kernel accumulates (+=) and needs zeros; the
-                // CSC kernel assigns every element from its yt tile
-                if fc.runs_csc() {
-                    dst.reshape(batch, rout);
-                } else {
-                    dst.reset(batch, rout);
-                }
+                // measured input density decides the gated-vs-ungated
+                // kernel for this whole batch (uniform across shards);
+                // the CSC slab policy sees the SHARD size, since that is
+                // the tile each worker's kernel actually scans
+                let slab = match pool {
+                    Some(p) => batch.div_ceil(p.workers().min(batch).max(1)),
+                    None => batch,
+                };
+                let (in_zeros, in_elems) = measure_rows(rows, fc.weights.cols);
+                let gate = gate_from_measurement(fc, in_zeros, in_elems, slab);
+                fc.prepare_out(dst, batch);
                 match pool {
-                    None => fc.run_shard(rows, 0, batch, xt, yt, &mut dst.data),
+                    None => fc.run_shard(
+                        rows,
+                        0,
+                        batch,
+                        xt,
+                        yt,
+                        &mut dst.data,
+                        &mut dst.row_zeros,
+                        gate,
+                    ),
                     Some(pool) => {
                         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
                         let mut rest: &mut [f32] = &mut dst.data;
+                        let mut zrest: &mut [u32] = &mut dst.row_zeros;
                         for (b0, nb) in shards(batch, pool.workers()) {
                             let (chunk, r) =
                                 std::mem::take(&mut rest).split_at_mut(nb * rout);
                             rest = r;
+                            let (zchunk, zr) =
+                                std::mem::take(&mut zrest).split_at_mut(nb);
+                            zrest = zr;
                             jobs.push(Box::new(move || {
                                 // per-worker transpose tiles: pool threads
                                 // are long-lived, so steady state reuses
                                 // the same allocations batch after batch
                                 FC_TILES.with(|t| {
                                     let (sxt, syt) = &mut *t.borrow_mut();
-                                    fc.run_shard(rows, b0, nb, sxt, syt, chunk);
+                                    fc.run_shard(rows, b0, nb, sxt, syt, chunk, zchunk, gate);
                                 });
                             }));
                         }
                         pool.scoped(jobs);
                     }
                 }
+                (in_zeros, in_elems)
             }
             LayerExec::Conv(cv) => {
                 rows.check_len(cv.in_len(), "conv")?;
@@ -867,21 +1132,34 @@ impl PlanExecutor {
                 patches.reshape(batch, ppi);
                 convtmp.reshape(batch, if cv.pool { pre } else { 0 });
                 dst.reshape(batch, post);
+                dst.row_zeros.clear();
+                dst.row_zeros.resize(batch, 0);
                 match pool {
-                    None => cv.run_shard(
-                        rows,
-                        0,
-                        batch,
-                        &mut patches.data,
-                        &mut convtmp.data,
-                        &mut dst.data,
-                    ),
+                    None => {
+                        let mut pz = 0u64;
+                        cv.run_shard(
+                            rows,
+                            0,
+                            batch,
+                            &mut patches.data,
+                            &mut convtmp.data,
+                            &mut dst.data,
+                            &mut dst.row_zeros,
+                            &mut pz,
+                        );
+                        (pz, (batch * ppi) as u64)
+                    }
                     Some(pool) => {
+                        let splits = shards(batch, pool.workers());
+                        shard_zeros.clear();
+                        shard_zeros.resize(splits.len(), 0);
                         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
                         let mut prest: &mut [f32] = &mut patches.data;
                         let mut crest: &mut [f32] = &mut convtmp.data;
                         let mut orest: &mut [f32] = &mut dst.data;
-                        for (b0, nb) in shards(batch, pool.workers()) {
+                        let mut zrest: &mut [u32] = &mut dst.row_zeros;
+                        let mut szrest: &mut [u64] = shard_zeros;
+                        for (b0, nb) in splits {
                             let (pchunk, pr) =
                                 std::mem::take(&mut prest).split_at_mut(nb * ppi);
                             prest = pr;
@@ -892,16 +1170,32 @@ impl PlanExecutor {
                             let (ochunk, or) =
                                 std::mem::take(&mut orest).split_at_mut(nb * post);
                             orest = or;
+                            let (zchunk, zr) =
+                                std::mem::take(&mut zrest).split_at_mut(nb);
+                            zrest = zr;
+                            let (szchunk, szr) =
+                                std::mem::take(&mut szrest).split_at_mut(1);
+                            szrest = szr;
                             jobs.push(Box::new(move || {
-                                cv.run_shard(rows, b0, nb, pchunk, cchunk, ochunk);
+                                cv.run_shard(
+                                    rows,
+                                    b0,
+                                    nb,
+                                    pchunk,
+                                    cchunk,
+                                    ochunk,
+                                    zchunk,
+                                    &mut szchunk[0],
+                                );
                             }));
                         }
                         pool.scoped(jobs);
+                        (shard_zeros.iter().sum(), (batch * ppi) as u64)
                     }
                 }
             }
-        }
-        Ok(())
+        };
+        Ok(measured)
     }
 }
 
@@ -949,10 +1243,13 @@ fn compile_exec_layer(
     }
 }
 
-/// Aggregated kernel-time counters for one backend (all worker threads).
+/// Aggregated kernel counters for one backend (all worker threads):
+/// per-layer time plus the measured activation zero/element totals.
 #[derive(Default)]
 struct KernelAgg {
     layer_ns: Vec<u64>,
+    in_zeros: Vec<u64>,
+    in_elems: Vec<u64>,
     batches: u64,
 }
 
@@ -991,10 +1288,14 @@ impl PlanBackend {
     }
 
     /// Run `f` with a pooled scratch (kernels execute with no backend
-    /// lock held), then fold the batch's per-layer times into the
-    /// backend-wide aggregate.
+    /// lock held), then fold the batch's per-layer times and measured
+    /// activation counts into the backend-wide aggregate.  When
+    /// `density_out` is given, it receives this batch's measured
+    /// per-layer activation density (the router charges the photonic
+    /// plan with it).
     fn with_scratch<R>(
         &self,
+        mut density_out: Option<&mut Vec<f64>>,
         f: impl FnOnce(&PlanExecutor, &mut ExecScratch) -> Result<R>,
     ) -> Result<R> {
         let mut scratch = self
@@ -1003,18 +1304,46 @@ impl PlanBackend {
             .unwrap()
             .pop()
             .unwrap_or_default();
-        // This batch's times only: the scratch's counters are zeroed per
-        // run so the merge below never double-counts.
+        // This batch's counters only: the scratch's are zeroed per run so
+        // the merge below never double-counts (and the density report is
+        // this batch's, not a running mean).
         for v in scratch.layer_ns.iter_mut() {
+            *v = 0;
+        }
+        for v in scratch.layer_in_zeros.iter_mut() {
+            *v = 0;
+        }
+        for v in scratch.layer_in_elems.iter_mut() {
             *v = 0;
         }
         let result = f(&self.exec, &mut scratch);
         if result.is_ok() {
+            if let Some(d) = density_out.as_deref_mut() {
+                d.clear();
+                d.extend(
+                    scratch
+                        .layer_in_zeros
+                        .iter()
+                        .zip(&scratch.layer_in_elems)
+                        // a layer that saw no elements is unmeasured, not
+                        // dense: NaN makes compile_with_density keep the
+                        // descriptor's static act_sparsity for it
+                        .map(|(&z, &e)| density_from_counts(z, e).unwrap_or(f64::NAN)),
+                );
+            }
             let mut agg = self.agg.lock().unwrap();
             if agg.layer_ns.len() != scratch.layer_ns.len() {
                 agg.layer_ns.resize(scratch.layer_ns.len(), 0);
+                agg.in_zeros.resize(scratch.layer_ns.len(), 0);
+                agg.in_elems.resize(scratch.layer_ns.len(), 0);
             }
             for (a, &d) in agg.layer_ns.iter_mut().zip(&scratch.layer_ns) {
+                *a += d;
+            }
+            for (a, &d) in agg.in_zeros.iter_mut().zip(&scratch.layer_in_zeros) {
+                *a += d;
+            }
+            for (a, &d) in agg.in_elems.iter_mut().zip(&scratch.layer_in_elems) {
                 *a += d;
             }
             agg.batches += 1;
@@ -1026,14 +1355,27 @@ impl PlanBackend {
 
 impl InferenceBackend for PlanBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        self.with_scratch(|exec, scratch| {
+        self.with_scratch(None, |exec, scratch| {
             let out = exec.forward_rows(Rows::Nested(inputs), scratch)?;
             Ok(out.to_rows())
         })
     }
 
     fn infer_batch_flat(&self, inputs: &BatchTensor, out: &mut BatchTensor) -> Result<()> {
-        self.with_scratch(|exec, scratch| {
+        self.with_scratch(None, |exec, scratch| {
+            let res = exec.forward_batch_flat(inputs, scratch)?;
+            out.copy_from(res);
+            Ok(())
+        })
+    }
+
+    fn infer_batch_flat_measured(
+        &self,
+        inputs: &BatchTensor,
+        out: &mut BatchTensor,
+        act_density: &mut Vec<f64>,
+    ) -> Result<()> {
+        self.with_scratch(Some(act_density), |exec, scratch| {
             let res = exec.forward_batch_flat(inputs, scratch)?;
             out.copy_from(res);
             Ok(())
@@ -1046,7 +1388,7 @@ impl InferenceBackend for PlanBackend {
 
     fn kernel_breakdown(&self) -> Option<Vec<LayerKernelStat>> {
         let agg = self.agg.lock().unwrap();
-        Some(self.exec.kernel_stats(&agg.layer_ns, agg.batches))
+        Some(self.exec.kernel_stats(&agg.layer_ns, &agg.in_zeros, &agg.in_elems, agg.batches))
     }
 }
 
@@ -1262,6 +1604,95 @@ mod tests {
         let desc = ModelDesc::builtin("mnist").unwrap();
         let ex = PlanExecutor::synthetic(&desc, 15);
         assert!(ex.forward_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_and_ungated_kernels_agree_exactly() {
+        let mut rng = Rng::new(40);
+        for kernel in [KernelChoice::Dense, KernelChoice::Csc] {
+            let (rows, cols) = (13, 29);
+            let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.6));
+            let fc = FcExec::with_kernel(w, true, 0.0, kernel);
+            for asp in [0.0, 0.5, 1.0] {
+                let mut batch: Vec<Vec<f32>> =
+                    (0..6).map(|_| rng.sparse_vec(cols, asp)).collect();
+                batch.push(vec![0.0; cols]); // all-zero activation row
+                let gated = fc.forward_batch_gated(&batch, true).unwrap();
+                let ungated = fc.forward_batch_gated(&batch, false).unwrap();
+                let auto = fc.forward_batch(&batch).unwrap();
+                assert_eq!(gated, ungated, "{kernel:?} asp={asp}");
+                assert_eq!(gated, auto, "{kernel:?} asp={asp}");
+            }
+        }
+    }
+
+    #[test]
+    fn fc_forward_tracks_output_zeros() {
+        // relu output: tracked zero counts must match a rescan
+        let mut rng = Rng::new(41);
+        let (rows, cols) = (11, 17);
+        let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.5));
+        let fc = FcExec::new(w, true, 0.0);
+        let batch: Vec<Vec<f32>> = (0..5).map(|_| rng.sparse_vec(cols, 0.7)).collect();
+        let (mut xt, mut yt) = (Vec::new(), Vec::new());
+        let mut out = BatchTensor::new();
+        fc.forward_batch_into(&batch, &mut xt, &mut yt, &mut out).unwrap();
+        assert!(out.zeros_tracked());
+        let tracked = out.row_zeros.clone();
+        out.count_zeros();
+        assert_eq!(tracked, out.row_zeros, "tracking drifted from a rescan");
+        // relu output of a sparse layer: some zeros must exist
+        assert!(out.tracked_zeros().unwrap() > 0);
+    }
+
+    #[test]
+    fn executor_measures_per_layer_act_density() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let ex = PlanExecutor::synthetic(&desc, 42);
+        let mut rng = Rng::new(43);
+        let batch: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.sparse_vec(ex.input_len(), 0.5)).collect();
+        let mut input = BatchTensor::new();
+        input.copy_from_rows(&batch);
+        let mut scratch = ExecScratch::new();
+        ex.forward_batch_flat(&input, &mut scratch).unwrap();
+        for i in 0..ex.layers().len() {
+            let d = scratch.act_density(i).expect("density measured");
+            assert!((0.0..=1.0).contains(&d), "layer {i}: {d}");
+        }
+        // layer 0 consumes the 50%-sparse input (conv: its patch stream,
+        // which adds SAME padding zeros) — far from dense
+        assert!(scratch.act_density(0).unwrap() < 0.75);
+        // accumulation: a second batch doubles the element totals
+        let elems: Vec<u64> = scratch.layer_in_elems().to_vec();
+        ex.forward_batch_flat(&input, &mut scratch).unwrap();
+        for (i, &e) in scratch.layer_in_elems().iter().enumerate() {
+            assert_eq!(e, 2 * elems[i], "layer {i}");
+        }
+    }
+
+    #[test]
+    fn plan_backend_reports_batch_density_and_breakdown() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let backend = PlanBackend::new(PlanExecutor::synthetic(&desc, 44));
+        let mut rng = Rng::new(45);
+        let rows: Vec<Vec<f32>> =
+            (0..3).map(|_| rng.sparse_vec(backend.input_len(), 0.4)).collect();
+        let mut input = BatchTensor::new();
+        input.copy_from_rows(&rows);
+        let (mut out, mut density) = (BatchTensor::new(), Vec::new());
+        backend
+            .infer_batch_flat_measured(&input, &mut out, &mut density)
+            .unwrap();
+        assert_eq!(density.len(), desc.layers.len());
+        assert!(density.iter().all(|d| (0.0..=1.0).contains(d)), "{density:?}");
+        // the aggregate breakdown carries the same measurement
+        let stats = backend.kernel_breakdown().unwrap();
+        assert_eq!(stats.len(), desc.layers.len());
+        for (s, d) in stats.iter().zip(&density) {
+            let sd = s.act_density.expect("measured");
+            assert!((sd - d).abs() < 1e-12, "{} vs {d}", sd);
+        }
     }
 
     #[test]

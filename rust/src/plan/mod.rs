@@ -81,6 +81,45 @@ pub fn choose_fc_kernel(density: f64) -> KernelChoice {
     }
 }
 
+/// Measured batch activation density at or below which the FC kernels run
+/// their activation-gated variant (scan the batch column-slab and skip a
+/// stored weight column wholesale when every activation feeding it is
+/// exactly zero — Fig. 1's dynamic compression).  Above it the input is
+/// effectively dense, the scans can never win, and the ungated streaming
+/// kernels run instead so a dense batch pays no gating overhead.
+pub const ACT_GATE_MAX_DENSITY: f64 = 0.95;
+
+/// Activation-gating policy for kernels whose skip unit is a **single
+/// activation** (the dense kernel's per-request column skip): gate when
+/// the measured batch density says enough zeros flow to be worth
+/// skipping (see [`ACT_GATE_MAX_DENSITY`]).
+pub fn gate_activations(measured_density: f64) -> bool {
+    measured_density <= ACT_GATE_MAX_DENSITY
+}
+
+/// Minimum expected all-zero-slab probability per column for the CSC
+/// kernel's slab scan to pay for itself (see [`gate_csc_slabs`]).
+pub const CSC_SLAB_SKIP_MIN: f64 = 1e-3;
+
+/// Activation-gating policy for the CSC kernel, whose skip unit is a
+/// whole `[col][slab]` tile: under an independent-zeros model an
+/// all-zero tile occurs with probability `zero_fraction ^ slab_len`,
+/// which decays exponentially in the tile length — at 64 rows and 50%
+/// sparsity the scan can essentially never skip anything and is pure
+/// overhead.  `slab_len` is the row count one kernel invocation scans
+/// per column: the whole batch when serial, the **shard** size under
+/// pooled execution (each worker checks its own tile).  Gate only while
+/// the skip expectation stays non-negligible ([`CSC_SLAB_SKIP_MIN`]);
+/// density must also clear [`gate_activations`].
+pub fn gate_csc_slabs(measured_density: f64, slab_len: usize) -> bool {
+    if !gate_activations(measured_density) {
+        return false;
+    }
+    let zero_frac = (1.0 - measured_density).clamp(0.0, 1.0);
+    // beyond ~1e6 the power is indistinguishable from 0 (or 1 at frac 1)
+    zero_frac.powi(slab_len.min(1_000_000) as i32) >= CSC_SLAB_SKIP_MIN
+}
+
 /// Ceil division for u64.
 fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
@@ -118,6 +157,11 @@ pub struct LayerPlan {
     pub n_vdus: usize,
     /// Residual sparsity inside the kept operand (power-gates lanes).
     pub residual_sparsity: f64,
+    /// Activation density (fraction of non-zero input activations) this
+    /// plan was compiled against: `1 - act_sparsity` from the descriptor
+    /// for static plans, the kernel-measured batch density when compiled
+    /// through [`compile_with_density`].
+    pub act_density: f64,
     /// Expected live lanes per pass after power gating (the gating mask's
     /// analytic expectation).
     pub avg_active_lanes: f64,
@@ -200,6 +244,18 @@ impl ModelPlan {
     /// where the dataflow math (compression lengths, pass counts, retune
     /// classification, timing/energy coefficients) is derived.
     pub fn compile(model: &ModelDesc, cfg: &SonicConfig) -> ModelPlan {
+        let mut plan = Self::compile_unkeyed(model, cfg);
+        plan.model_key = model_fingerprint(model);
+        plan.config_key = config_fingerprint(cfg);
+        plan
+    }
+
+    /// [`ModelPlan::compile`] without the cache-key fingerprints
+    /// (`model_key`/`config_key` stay 0).  For **ephemeral** plans that
+    /// are never cached — the per-batch measured-density charging on the
+    /// serving hot path — where the `Debug`-format hashing would dominate
+    /// the (otherwise pure-arithmetic) compile cost.
+    pub fn compile_unkeyed(model: &ModelDesc, cfg: &SonicConfig) -> ModelPlan {
         let conv_vdu = cfg.conv_vdu();
         let fc_vdu = cfg.fc_vdu();
         let mut layers = Vec::with_capacity(model.layers.len());
@@ -238,8 +294,8 @@ impl ModelPlan {
             dram_j,
             bits_per_inference: bits,
             breakdown,
-            model_key: model_fingerprint(model),
-            config_key: config_fingerprint(cfg),
+            model_key: 0,
+            config_key: 0,
         }
     }
 
@@ -286,6 +342,61 @@ impl ModelPlan {
     /// Total VDU passes for one inference.
     pub fn total_passes(&self) -> u64 {
         self.layers.iter().map(|l| l.passes).sum()
+    }
+}
+
+/// Compile a plan against **measured** per-layer activation densities
+/// instead of the descriptor's static Table-3 `act_sparsity`: layer `i`'s
+/// `act_sparsity` is overridden with `1 - act_density[i]` (clamped to
+/// [0, 1]; non-finite or missing entries keep the static value).  This is
+/// what the serving router charges a batch against once the gated kernels
+/// have measured the activations that actually flowed, and what
+/// [`crate::sim::engine::simulate_with_density`] exposes so simulated and
+/// served numbers stay comparable.
+///
+/// Density semantics per layer kind: FC densities are measured on the
+/// activation slab; CONV densities on the **im2col patch stream, SAME
+/// padding included** — deliberately, because [`compile_layer`]'s conv
+/// arm consumes `act_sparsity` as *residual zeros in the IF patch* (the
+/// operand the VCSELs gate), and padding zeros ride that patch exactly
+/// like ReLU zeros.  A conv layer can therefore measure sparser than a
+/// raw activation-map count even on a fully dense image; that is the
+/// dataflow's real operand sparsity, not a bias.
+///
+/// Deliberately **not** routed through [`cached`]: measured densities
+/// vary per batch, and caching every float vector would grow the plan
+/// cache without bound.  Compiles through [`ModelPlan::compile_unkeyed`]
+/// (no fingerprints — the plan is ephemeral), so the cost is pure
+/// per-layer arithmetic, cheap next to the batch kernels it accounts
+/// for.
+pub fn compile_with_density(
+    model: &ModelDesc,
+    cfg: &SonicConfig,
+    act_density: &[f64],
+) -> ModelPlan {
+    let mut m = model.clone();
+    apply_measured_density(&mut m, model, act_density);
+    ModelPlan::compile_unkeyed(&m, cfg)
+}
+
+/// The single implementation of the measured-density override rule:
+/// overwrite `desc`'s per-layer `act_sparsity` with `1 - act_density[i]`
+/// (clamped to [0, 1]) where the measurement is finite, and restore the
+/// corresponding layer of `statics` where it is non-finite or missing —
+/// `desc` may be a reused scratch descriptor still holding a previous
+/// batch's overrides.  Shared by [`compile_with_density`] (fresh clone)
+/// and the serving router's per-worker scratch path, so served and
+/// simulated density semantics can never diverge.
+pub fn apply_measured_density(
+    desc: &mut ModelDesc,
+    statics: &ModelDesc,
+    act_density: &[f64],
+) {
+    for (i, (layer, stat)) in desc.layers.iter_mut().zip(&statics.layers).enumerate() {
+        layer.act_sparsity = match act_density.get(i) {
+            Some(&d) if d.is_finite() => (1.0 - d).clamp(0.0, 1.0),
+            _ => stat.act_sparsity,
+        };
     }
 }
 
@@ -444,6 +555,7 @@ fn compile_layer(
         lanes: vdu.lanes,
         n_vdus: n_vdus as usize,
         residual_sparsity,
+        act_density: 1.0 - layer.act_sparsity,
         avg_active_lanes: active,
         to_retune_fraction: to_fraction,
         interval_s: ii,
@@ -636,6 +748,79 @@ mod tests {
         }
         assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY), KernelChoice::Csc);
         assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY + 0.01), KernelChoice::Dense);
+    }
+
+    #[test]
+    fn compile_with_density_overrides_static_act_sparsity() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let stat = ModelPlan::compile(&m, &cfg);
+        // measured == static: identical plan numbers
+        let same: Vec<f64> = m.layers.iter().map(|l| 1.0 - l.act_sparsity).collect();
+        let p_same = compile_with_density(&m, &cfg, &same);
+        assert_eq!(p_same.energy_j, stat.energy_j);
+        assert_eq!(p_same.latency_s, stat.latency_s);
+        // much sparser activations: FC compression shortens vectors ->
+        // fewer passes, less energy
+        let sparse = vec![0.1; m.layers.len()];
+        let p_sparse = compile_with_density(&m, &cfg, &sparse);
+        assert!(p_sparse.energy_j < stat.energy_j);
+        assert!(p_sparse.total_passes() < stat.total_passes());
+        for lp in &p_sparse.layers {
+            assert!((lp.act_density - 0.1).abs() < 1e-12, "{}", lp.name);
+        }
+        // non-finite measurements fall back to the static value
+        let bad = vec![f64::NAN; m.layers.len()];
+        let p_bad = compile_with_density(&m, &cfg, &bad);
+        assert_eq!(p_bad.energy_j, stat.energy_j);
+        // short vectors cover a prefix only
+        let p_short = compile_with_density(&m, &cfg, &[]);
+        assert_eq!(p_short.energy_j, stat.energy_j);
+    }
+
+    #[test]
+    fn act_gate_policy_thresholds() {
+        assert!(gate_activations(0.0));
+        assert!(gate_activations(ACT_GATE_MAX_DENSITY));
+        assert!(!gate_activations(ACT_GATE_MAX_DENSITY + 0.01));
+        assert!(!gate_activations(1.0));
+    }
+
+    #[test]
+    fn csc_slab_gate_weighs_batch_size() {
+        // small batches at moderate sparsity: slab skips plausible -> gate
+        assert!(gate_csc_slabs(0.5, 1));
+        assert!(gate_csc_slabs(0.5, 8));
+        // batch 64 at 50% sparsity: all-zero slab ~0.5^64 -> pure overhead
+        assert!(!gate_csc_slabs(0.5, 64));
+        // very sparse activations keep gating even at batch 64 (0.9^64 ~ 1.2e-3)
+        assert!(gate_csc_slabs(0.1, 64));
+        // dense input never gates, regardless of batch
+        assert!(!gate_csc_slabs(0.99, 1));
+        // all-zero input always gates
+        assert!(gate_csc_slabs(0.0, 1 << 20));
+    }
+
+    #[test]
+    fn apply_measured_density_is_the_shared_override_rule() {
+        let statics = ModelDesc::builtin("mnist").unwrap();
+        let mut desc = statics.clone();
+        // stale overrides from a "previous batch"
+        for l in &mut desc.layers {
+            l.act_sparsity = 0.123;
+        }
+        let n = statics.layers.len();
+        let mut densities = vec![0.4; n];
+        densities[1] = f64::NAN; // unmeasured layer
+        apply_measured_density(&mut desc, &statics, &densities);
+        assert!((desc.layers[0].act_sparsity - 0.6).abs() < 1e-12);
+        // non-finite entry restores the *static* value, not the stale one
+        assert_eq!(desc.layers[1].act_sparsity, statics.layers[1].act_sparsity);
+        // short vectors restore statics for the uncovered tail
+        apply_measured_density(&mut desc, &statics, &[0.4]);
+        for (l, s) in desc.layers.iter().zip(&statics.layers).skip(1) {
+            assert_eq!(l.act_sparsity, s.act_sparsity);
+        }
     }
 
     #[test]

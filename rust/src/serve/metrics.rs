@@ -84,8 +84,9 @@ impl LatencyHistogram {
 }
 
 /// One layer's accumulated kernel time inside a backend: which compute
-/// kernel the layer compiled to (`"csc"`, `"dense"`, `"conv"`) and how
-/// long that kernel has run across every batch served so far.
+/// kernel the layer compiled to (`"csc"`, `"dense"`, `"conv"`), how long
+/// that kernel has run across every batch served so far, and the
+/// activation density it measured on the inputs that actually flowed.
 #[derive(Debug, Clone)]
 pub struct LayerKernelStat {
     pub layer: String,
@@ -95,15 +96,22 @@ pub struct LayerKernelStat {
     pub total: Duration,
     /// Batches executed (shared across layers of one backend).
     pub batches: u64,
+    /// Measured input activation density (fraction of non-zero elements
+    /// in the operand stream this layer consumed — FC activation slab,
+    /// CONV im2col patch stream) across every batch so far.  `None` when
+    /// the backend doesn't measure (PJRT/custom) or nothing flowed yet.
+    pub act_density: Option<f64>,
 }
 
 impl LayerKernelStat {
-    /// Mean kernel time per batch for this layer.
+    /// Mean kernel time per batch for this layer.  Divides in u128
+    /// nanoseconds: the `u64 as u32` cast form would truncate to a
+    /// divide-by-zero panic at exactly 2^32 batches.
     pub fn mean_per_batch(&self) -> Duration {
         if self.batches == 0 {
             Duration::ZERO
         } else {
-            self.total / self.batches as u32
+            Duration::from_nanos((self.total.as_nanos() / self.batches as u128) as u64)
         }
     }
 }
@@ -122,7 +130,12 @@ pub struct ModelMetrics {
     pub p95: Duration,
     pub p99: Duration,
     /// Served photonic energy-per-bit: total photonic energy over the bits
-    /// this model's completions moved (from the compiled plan).
+    /// this model's completions moved.  When the backend measures
+    /// activation density (the plan executor does), each batch's energy
+    /// was charged against a plan compiled with the **measured** density,
+    /// so this reflects the input that actually flowed rather than the
+    /// descriptor's static `act_sparsity` (see
+    /// `ServeMetrics::measured_batches`).
     pub photonic_epb_j: f64,
     /// Per-layer kernel-time breakdown from the backend (empty when the
     /// backend doesn't track one — PJRT/custom backends).

@@ -36,8 +36,7 @@ pub trait InferenceBackend: Send + Sync {
     /// fill `out` (one logit row per request).  The default adapter
     /// re-boxes through [`InferenceBackend::infer_batch`]; backends on
     /// the hot path (the plan executor) override it to run allocation-
-    /// free.  The router always calls this form, so overriding it is all
-    /// a backend needs to escape per-batch boxing.
+    /// free.
     fn infer_batch_flat(&self, inputs: &BatchTensor, out: &mut BatchTensor) -> Result<()> {
         let rows: Vec<Vec<f32>> = inputs.rows().map(|r| r.to_vec()).collect();
         let res = self.infer_batch(&rows)?;
@@ -50,6 +49,25 @@ pub trait InferenceBackend: Send + Sync {
             out.row_mut(b).copy_from_slice(r);
         }
         Ok(())
+    }
+
+    /// [`InferenceBackend::infer_batch_flat`] that additionally reports
+    /// the batch's **measured** per-layer input activation density
+    /// (fraction of non-zero elements each layer consumed).  The router
+    /// always calls this form; when `act_density` comes back non-empty
+    /// the batch is charged against a photonic plan compiled with the
+    /// measured densities instead of the descriptor's static
+    /// `act_sparsity`.  The default leaves it empty (unmeasured — PJRT
+    /// and custom backends), so overriding it is what a backend does to
+    /// make served energy reflect the input that actually flowed.
+    fn infer_batch_flat_measured(
+        &self,
+        inputs: &BatchTensor,
+        out: &mut BatchTensor,
+        act_density: &mut Vec<f64>,
+    ) -> Result<()> {
+        act_density.clear();
+        self.infer_batch_flat(inputs, out)
     }
 
     /// Input element count per request.
@@ -104,12 +122,17 @@ pub struct Completion {
 pub struct ServeMetrics {
     pub completed: u64,
     pub batches: u64,
+    /// Batches whose backend measured activation density, i.e. whose
+    /// photonic charge used the measured per-layer densities instead of
+    /// the descriptor's static `act_sparsity`.
+    pub measured_batches: u64,
     pub total_wall: Duration,
     pub max_wall: Duration,
     /// Time spent inside the backend's batch kernels (the
     /// `infer_batch_flat` call itself, excluding queueing/ticketing).
     pub kernel_time: Duration,
-    /// Photonic simulated totals.
+    /// Photonic simulated totals (measured-density charging when the
+    /// backend reports densities; static plan otherwise).
     pub photonic_time_s: f64,
     pub photonic_energy_j: f64,
     pub wall_elapsed: Duration,
@@ -124,12 +147,14 @@ impl ServeMetrics {
         }
     }
 
-    /// Mean kernel time per executed batch.
+    /// Mean kernel time per executed batch.  (u128-nanosecond division:
+    /// the `u64 as u32` cast form panics with divide-by-zero at exactly
+    /// 2^32 batches and is silently wrong beyond.)
     pub fn mean_batch_kernel_time(&self) -> Duration {
         if self.batches == 0 {
             Duration::ZERO
         } else {
-            self.kernel_time / self.batches as u32
+            Duration::from_nanos((self.kernel_time.as_nanos() / self.batches as u128) as u64)
         }
     }
 
@@ -137,7 +162,7 @@ impl ServeMetrics {
         if self.completed == 0 {
             Duration::ZERO
         } else {
-            self.total_wall / self.completed as u32
+            Duration::from_nanos((self.total_wall.as_nanos() / self.completed as u128) as u64)
         }
     }
 
@@ -165,6 +190,7 @@ impl ServeMetrics {
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.completed += other.completed;
         self.batches += other.batches;
+        self.measured_batches += other.measured_batches;
         self.total_wall += other.total_wall;
         self.max_wall = self.max_wall.max(other.max_wall);
         self.kernel_time += other.kernel_time;
@@ -194,6 +220,9 @@ pub(crate) struct Router {
     backend: Arc<dyn InferenceBackend>,
     cfg: ServeConfig,
     model: ModelDesc,
+    /// Architecture the plans compile against (kept so measured-density
+    /// batches can be recharged against a per-batch compiled plan).
+    arch: SonicConfig,
     queue: Mutex<VecDeque<PendingReq>>,
     notify: Condvar,
     /// Set at engine shutdown: pop_batch stops waiting for work or
@@ -215,6 +244,7 @@ impl Router {
             backend,
             cfg,
             model,
+            arch,
             queue: Mutex::new(VecDeque::new()),
             notify: Condvar::new(),
             closed: AtomicBool::new(false),
@@ -368,7 +398,8 @@ impl Router {
         }
         drop(batch);
         let t0 = Instant::now();
-        self.backend.infer_batch_flat(&bufs.inputs, &mut bufs.outputs)?;
+        self.backend
+            .infer_batch_flat_measured(&bufs.inputs, &mut bufs.outputs, &mut bufs.act_density)?;
         metrics.kernel_time += t0.elapsed();
         if bufs.outputs.batch != metas.len() {
             bail!(
@@ -382,10 +413,35 @@ impl Router {
         // Photonic accounting: a batch of B pipelines through the VDU array;
         // fills/setups amortize (paid once per batch).  The amortization
         // factor comes from the precompiled plan — the same pipeline/overhead
-        // split `sim::batch` uses — not a serving-side constant.
+        // split `sim::batch` uses — not a serving-side constant.  When the
+        // backend measured this batch's activation densities, the charge
+        // comes from a plan compiled with them (cheap per-layer arithmetic):
+        // the energy the metrics report reflects the input that actually
+        // flowed, not the descriptor's static Table-3 `act_sparsity`.
         let b = metas.len() as f64;
-        let batch_latency = self.plan.batch_latency_s(metas.len());
-        let batch_energy = self.plan.batch_energy_j(metas.len());
+        let (batch_latency, batch_energy) = if bufs.act_density.is_empty() {
+            (
+                self.plan.batch_latency_s(metas.len()),
+                self.plan.batch_energy_j(metas.len()),
+            )
+        } else {
+            // Overwrite the worker's scratch descriptor in place (cloned
+            // once, lazily) through the shared override rule and compile
+            // an ephemeral unkeyed plan: no per-batch descriptor clone,
+            // no fingerprint hashing, and the same density semantics as
+            // `plan::compile_with_density` / `sim::simulate_with_density`
+            // by construction.
+            let desc = bufs
+                .measured_desc
+                .get_or_insert_with(|| self.model.clone());
+            crate::plan::apply_measured_density(desc, &self.model, &bufs.act_density);
+            let measured = crate::plan::ModelPlan::compile_unkeyed(desc, &self.arch);
+            metrics.measured_batches += 1;
+            (
+                measured.batch_latency_s(metas.len()),
+                measured.batch_energy_j(metas.len()),
+            )
+        };
         metrics.photonic_time_s += batch_latency;
         metrics.photonic_energy_j += batch_energy;
         metrics.batches += 1;
@@ -420,12 +476,20 @@ impl Router {
     }
 }
 
-/// Reusable flat input/output pair for [`Router::execute_batch`] — one
-/// per worker thread, so steady-state batch packing never reallocates.
+/// Reusable flat input/output pair (plus the measured-density scratch)
+/// for [`Router::execute_batch`] — one per worker thread, so steady-state
+/// batch packing never reallocates.
 #[derive(Debug, Default)]
 pub(crate) struct BatchBuffers {
     inputs: BatchTensor,
     outputs: BatchTensor,
+    /// The backend's measured per-layer activation density for the last
+    /// batch (empty when the backend doesn't measure).
+    act_density: Vec<f64>,
+    /// Scratch descriptor for measured-density charging: cloned from the
+    /// router's model once (lazily), then only its `act_sparsity` fields
+    /// are overwritten per batch.
+    measured_desc: Option<ModelDesc>,
 }
 
 /// Test/fallback backend: a trivial linear model computed locally.
@@ -613,6 +677,89 @@ mod tests {
         let done = r.drain_batch(&mut m).unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].argmax, 2, "NaN treated as -inf");
+    }
+
+    #[test]
+    fn measured_density_recharges_the_photonic_plan() {
+        // A backend that measures its batches: the served photonic charge
+        // must come from a plan compiled with the measured density d, not
+        // the descriptor's static act_sparsity.
+        struct MeasuringBackend {
+            inner: NullBackend,
+            density: f64,
+            n_layers: usize,
+        }
+        impl InferenceBackend for MeasuringBackend {
+            fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                self.inner.infer_batch(inputs)
+            }
+            fn infer_batch_flat_measured(
+                &self,
+                inputs: &BatchTensor,
+                out: &mut BatchTensor,
+                act_density: &mut Vec<f64>,
+            ) -> Result<()> {
+                act_density.clear();
+                act_density.resize(self.n_layers, self.density);
+                self.infer_batch_flat(inputs, out)
+            }
+            fn input_len(&self) -> usize {
+                self.inner.input_len
+            }
+        }
+        let model = ModelDesc::builtin("mnist").unwrap();
+        let arch = SonicConfig::paper_best();
+        let d = 0.2; // far sparser than the static 50% assumption
+        let backend = Arc::new(MeasuringBackend {
+            inner: NullBackend {
+                input_len: 784,
+                n_classes: 10,
+            },
+            density: d,
+            n_layers: model.layers.len(),
+        });
+        let r = Router::new(
+            backend,
+            model.clone(),
+            arch.clone(),
+            ServeConfig {
+                max_batch: 2,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 8,
+            },
+        );
+        r.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        r.submit_with_id(2, vec![0.0; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        r.drain_batch(&mut m).unwrap();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.measured_batches, 1, "measured charging not taken");
+        let densities = vec![d; model.layers.len()];
+        let measured = crate::plan::compile_with_density(&model, &arch, &densities);
+        assert_eq!(m.photonic_energy_j, measured.batch_energy_j(2));
+        assert_eq!(m.photonic_time_s, measured.batch_latency_s(2));
+        // and it genuinely differs from the static plan's charge
+        let stat = crate::plan::cached(&model, &arch);
+        assert!(m.photonic_energy_j < stat.batch_energy_j(2));
+        // merge folds the measured counter like the others
+        let mut total = ServeMetrics::default();
+        total.merge(&m);
+        total.merge(&m);
+        assert_eq!(total.measured_batches, 2);
+    }
+
+    #[test]
+    fn unmeasured_backend_still_charges_the_static_plan() {
+        let r = router(2);
+        r.submit_with_id(1, vec![0.1; 784], true).unwrap();
+        let mut m = ServeMetrics::default();
+        r.drain_batch(&mut m).unwrap();
+        assert_eq!(m.measured_batches, 0);
+        let plan = crate::plan::cached(
+            &ModelDesc::builtin("mnist").unwrap(),
+            &SonicConfig::paper_best(),
+        );
+        assert_eq!(m.photonic_energy_j, plan.batch_energy_j(1));
     }
 
     #[test]

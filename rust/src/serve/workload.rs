@@ -54,10 +54,18 @@ impl PoissonWorkload {
 /// Print the canonical serving report for one model: wall-clock section
 /// (throughput, mean/p50/p95/p99/max latency) and the photonic section
 /// (FPS, FPS/W, EPB, energy) — shared by `sonic serve` and the examples.
+/// Per-layer lines carry the **measured** activation density (`d=`) when
+/// the backend tracks it; the photonic numbers are then charged with it.
 pub fn print_report(m: &ModelMetrics) {
     println!("== serving report: {} ({} backend) ==", m.model, m.backend);
     println!("  completed          {}", m.serve.completed);
     println!("  batches            {}", m.serve.batches);
+    if m.serve.measured_batches > 0 {
+        println!(
+            "  density-charged    {}/{} batches (measured act density)",
+            m.serve.measured_batches, m.serve.batches
+        );
+    }
     println!("  achieved batch     {:.2}", m.serve.mean_batch());
     println!(
         "  mean batch kernel  {:?}",
@@ -65,11 +73,16 @@ pub fn print_report(m: &ModelMetrics) {
     );
     if !m.kernel_breakdown.is_empty() {
         for l in &m.kernel_breakdown {
+            let density = match l.act_density {
+                Some(d) => format!("  d={d:.3}"),
+                None => String::new(),
+            };
             println!(
-                "    {:<12} {:<6} {:?}/batch",
+                "    {:<12} {:<6} {:?}/batch{}",
                 l.layer,
                 l.kernel,
-                l.mean_per_batch()
+                l.mean_per_batch(),
+                density
             );
         }
     }

@@ -39,17 +39,23 @@ fn gmean(xs: impl Iterator<Item = f64>) -> f64 {
     (s / n.max(1) as f64).exp()
 }
 
-/// Evaluate one geometry across a workload set.
+/// Evaluate one geometry across a workload set.  Returns `None` for an
+/// empty workload: there is no meaningful score, and silently folding
+/// zero models used to yield `mean_power_w = 0/0 = NaN` next to a fake
+/// `gmean == exp(0) == 1.0` FPS/W.
 pub fn evaluate(
     models: &[ModelDesc],
     n: usize,
     m: usize,
     nn: usize,
     k: usize,
-) -> DsePoint {
+) -> Option<DsePoint> {
+    if models.is_empty() {
+        return None;
+    }
     let cfg = SonicConfig::with_geometry(n, m, nn, k);
     let stats: Vec<_> = models.iter().map(|md| simulate(md, &cfg)).collect();
-    DsePoint {
+    Some(DsePoint {
         n,
         m,
         n_conv_vdus: nn,
@@ -57,11 +63,14 @@ pub fn evaluate(
         gm_fps_per_watt: gmean(stats.iter().map(|s| s.fps_per_watt)),
         gm_epb: gmean(stats.iter().map(|s| s.epb_j)),
         mean_power_w: stats.iter().map(|s| s.avg_power_w).sum::<f64>() / stats.len() as f64,
-    }
+    })
 }
 
 /// Sweep the configuration space; returns all points sorted by FPS/W
-/// (descending).  Default grid brackets the paper's best point.
+/// (descending).  A pathological NaN score cannot panic the sort
+/// (`total_cmp`) and sorts **last** — a geometry whose simulation went
+/// non-finite must never be reported as the top design point.  Empty for
+/// an empty workload.  Default grid brackets the paper's best point.
 pub fn explore(models: &[ModelDesc], grid: Option<DseGrid>) -> Vec<DsePoint> {
     let grid = grid.unwrap_or_default();
     let mut out = Vec::new();
@@ -69,12 +78,17 @@ pub fn explore(models: &[ModelDesc], grid: Option<DseGrid>) -> Vec<DsePoint> {
         for &m in &grid.m {
             for &nn in &grid.n_conv {
                 for &k in &grid.k_fc {
-                    out.push(evaluate(models, n, m, nn, k));
+                    out.extend(evaluate(models, n, m, nn, k));
                 }
             }
         }
     }
-    out.sort_by(|a, b| b.gm_fps_per_watt.partial_cmp(&a.gm_fps_per_watt).unwrap());
+    out.sort_by(|a, b| {
+        a.gm_fps_per_watt
+            .is_nan()
+            .cmp(&b.gm_fps_per_watt.is_nan())
+            .then(b.gm_fps_per_watt.total_cmp(&a.gm_fps_per_watt))
+    });
     out
 }
 
@@ -111,9 +125,17 @@ mod tests {
 
     #[test]
     fn paper_geometry_evaluates() {
-        let p = evaluate(&workload(), 5, 50, 50, 10);
+        let p = evaluate(&workload(), 5, 50, 50, 10).unwrap();
         assert!(p.gm_fps_per_watt > 0.0);
         assert!(p.gm_epb > 0.0);
+    }
+
+    #[test]
+    fn empty_workload_is_none_not_nan() {
+        // regression: mean_power_w used to be 0/0 (NaN) while gmean of an
+        // empty iterator reported a fake 1.0 FPS/W
+        assert!(evaluate(&[], 5, 50, 50, 10).is_none());
+        assert!(explore(&[], None).is_empty());
     }
 
     #[test]
@@ -136,8 +158,8 @@ mod tests {
         // The paper: dense kernel vectors never exceed ~5 entries, so
         // raising n only adds idle lanes -> FPS/W degrades or stagnates.
         let w = workload();
-        let at5 = evaluate(&w, 5, 50, 50, 10);
-        let at10 = evaluate(&w, 10, 50, 50, 10);
+        let at5 = evaluate(&w, 5, 50, 50, 10).unwrap();
+        let at10 = evaluate(&w, 10, 50, 50, 10).unwrap();
         assert!(at10.gm_fps_per_watt <= at5.gm_fps_per_watt * 1.02);
     }
 

@@ -84,6 +84,22 @@ pub fn simulate(model: &ModelDesc, cfg: &SonicConfig) -> InferenceStats {
     crate::plan::cached(model, cfg).inference_stats()
 }
 
+/// Simulate with **measured** per-layer activation densities in place of
+/// the descriptor's static Table-3 `act_sparsity` — the entry point that
+/// keeps simulated numbers comparable with what the serving engine
+/// charges once its gated kernels have measured the batches (e.g. the
+/// `act_density` column of a serving report's kernel breakdown).  Layer
+/// `i` runs at activation sparsity `1 - act_density[i]`; missing or
+/// non-finite entries keep the static value.  Not cached: measured
+/// densities vary per call (see [`crate::plan::compile_with_density`]).
+pub fn simulate_with_density(
+    model: &ModelDesc,
+    cfg: &SonicConfig,
+    act_density: &[f64],
+) -> InferenceStats {
+    crate::plan::compile_with_density(model, cfg, act_density).inference_stats()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +211,24 @@ mod tests {
         let fc = s.layers.iter().find(|l| l.name == "fc1792x272").unwrap();
         assert_eq!(fc.vector_len, 896);
         assert_eq!(fc.passes, 272 * 18);
+    }
+
+    #[test]
+    fn simulate_with_density_tracks_measured_sparsity() {
+        let m = ModelDesc::builtin("svhn").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let stat = simulate(&m, &cfg);
+        // measured == static densities: exactly the cached simulation
+        let same: Vec<f64> = m.layers.iter().map(|l| 1.0 - l.act_sparsity).collect();
+        let s_same = simulate_with_density(&m, &cfg, &same);
+        assert_eq!(s_same.energy_j, stat.energy_j);
+        assert_eq!(s_same.latency_s, stat.latency_s);
+        // sparser measured activations -> cheaper inference, monotone
+        let s_sparse = simulate_with_density(&m, &cfg, &vec![0.2; m.layers.len()]);
+        let s_denser = simulate_with_density(&m, &cfg, &vec![0.9; m.layers.len()]);
+        assert!(s_sparse.energy_j < stat.energy_j);
+        assert!(s_sparse.energy_j < s_denser.energy_j);
+        assert!(s_sparse.latency_s <= s_denser.latency_s);
     }
 
     #[test]

@@ -13,4 +13,6 @@ pub mod dse;
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate, InferenceStats, LayerStats, PowerBreakdown};
+pub use engine::{
+    simulate, simulate_with_density, InferenceStats, LayerStats, PowerBreakdown,
+};

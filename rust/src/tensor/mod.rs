@@ -71,13 +71,21 @@ impl Tensor {
     /// Interpret as a matrix [rows, cols], flattening leading dims.
     /// Conv weights [kh,kw,cin,cout] become [kh*kw*cin, cout] — the same
     /// layout `model.forward_deploy` feeds the VDU kernel.
+    ///
+    /// A trailing zero dim yields the degenerate `(0, 0)` shape (the swt
+    /// empty-tensor contract: zero elements, zero extent) rather than
+    /// dividing by zero.
     pub fn as_matrix(&self) -> (usize, usize) {
         match self.dims.len() {
             0 => (1, 1),
             1 => (1, self.dims[0]),
             _ => {
                 let cols = *self.dims.last().unwrap();
-                (self.len() / cols, cols)
+                if cols == 0 {
+                    (0, 0)
+                } else {
+                    (self.len() / cols, cols)
+                }
             }
         }
     }
@@ -92,7 +100,7 @@ impl Tensor {
 /// heap-allocation steady state the serving path relies on.
 ///
 /// [`reset`]: BatchTensor::reset
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default)]
 pub struct BatchTensor {
     /// Contiguous row-major storage, `batch * len` elements.
     pub data: Vec<f32>,
@@ -100,6 +108,24 @@ pub struct BatchTensor {
     pub batch: usize,
     /// Elements per row.
     pub len: usize,
+    /// Per-row count of exactly-zero elements (the activation-sparsity
+    /// tracking the dual-sparsity kernels thread between layers so the
+    /// next layer knows its measured input density without rescanning).
+    ///
+    /// This is *producer-maintained* metadata: it is valid only when
+    /// `row_zeros.len() == batch` and the code that last wrote the rows
+    /// filled it (the plan kernels do; `reset`/`reshape`/`copy_from_rows`
+    /// invalidate it by clearing).  The buffer only ever grows, so
+    /// maintaining it allocates nothing at steady state.
+    pub row_zeros: Vec<u32>,
+}
+
+/// Equality is over shape + contents only — `row_zeros` is derived
+/// metadata (and possibly absent on one side).
+impl PartialEq for BatchTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.batch == other.batch && self.len == other.len && self.data == other.data
+    }
 }
 
 impl BatchTensor {
@@ -113,29 +139,72 @@ impl BatchTensor {
             data: vec![0.0; batch * len],
             batch,
             len,
+            row_zeros: Vec::new(),
         }
     }
 
     /// Reshape to `batch x len` and zero-fill, reusing the existing
     /// allocation whenever capacity suffices (the hot-path contract: no
     /// per-batch heap allocation once the buffer has warmed up).
+    /// Invalidates the zero tracking (the producer refills it).
     pub fn reset(&mut self, batch: usize, len: usize) {
         let n = batch * len;
         self.data.clear();
         self.data.resize(n, 0.0);
         self.batch = batch;
         self.len = len;
+        self.row_zeros.clear();
     }
 
     /// Reshape to `batch x len` **without** zeroing retained elements
     /// (only growth beyond the previous length is zero-filled, paid once
     /// as the buffer warms up).  For callers that overwrite every
     /// element; kernels that accumulate (`+=`) must use
-    /// [`BatchTensor::reset`].
+    /// [`BatchTensor::reset`].  Invalidates the zero tracking.
     pub fn reshape(&mut self, batch: usize, len: usize) {
         self.data.resize(batch * len, 0.0);
         self.batch = batch;
         self.len = len;
+        self.row_zeros.clear();
+    }
+
+    /// Whether the per-row zero tracking covers the current shape (the
+    /// producer of the rows maintained it).
+    pub fn zeros_tracked(&self) -> bool {
+        self.row_zeros.len() == self.batch
+    }
+
+    /// Total exactly-zero elements, when tracked (`None` means the last
+    /// writer did not maintain the counts — rescan or call
+    /// [`BatchTensor::count_zeros`]).
+    pub fn tracked_zeros(&self) -> Option<u64> {
+        self.zeros_tracked()
+            .then(|| self.row_zeros.iter().map(|&z| z as u64).sum())
+    }
+
+    /// Measured activation density — the fraction of non-zero elements —
+    /// when tracked and non-degenerate.
+    pub fn measured_density(&self) -> Option<f64> {
+        let total = (self.batch * self.len) as f64;
+        if total == 0.0 {
+            return None;
+        }
+        self.tracked_zeros().map(|z| 1.0 - z as f64 / total)
+    }
+
+    /// (Re)build the per-row zero tracking by scanning (exact-zero
+    /// contract: an element counts iff it `== 0.0`, so `-0.0` counts and
+    /// denormals/NaN do not — the same predicate the compression path
+    /// uses).  Reuses the tracking allocation.
+    pub fn count_zeros(&mut self) {
+        self.row_zeros.clear();
+        self.row_zeros.extend(
+            self.data
+                .chunks(self.len.max(1))
+                .take(self.batch)
+                .map(|row| row.iter().filter(|&&v| v == 0.0).count() as u32),
+        );
+        self.row_zeros.resize(self.batch, 0);
     }
 
     pub fn is_empty(&self) -> bool {
@@ -155,7 +224,9 @@ impl BatchTensor {
         (0..self.batch).map(move |b| self.row(b))
     }
 
-    /// Copy a nested batch in (rows must share one length).
+    /// Copy a nested batch in (rows must share one length).  The zero
+    /// tracking is invalidated (callers that need it rescan via
+    /// [`BatchTensor::count_zeros`]).
     pub fn copy_from_rows(&mut self, rows: &[Vec<f32>]) {
         let len = rows.first().map_or(0, |r| r.len());
         self.reshape(rows.len(), len);
@@ -165,13 +236,16 @@ impl BatchTensor {
         }
     }
 
-    /// Adopt another tensor's shape + contents: one memcpy, reusing this
-    /// tensor's allocation (clear is O(1) for f32).
+    /// Adopt another tensor's shape + contents (and its zero tracking, if
+    /// maintained): one memcpy, reusing this tensor's allocation (clear is
+    /// O(1) for f32).
     pub fn copy_from(&mut self, other: &BatchTensor) {
         self.data.clear();
         self.data.extend_from_slice(&other.data);
         self.batch = other.batch;
         self.len = other.len;
+        self.row_zeros.clear();
+        self.row_zeros.extend_from_slice(&other.row_zeros);
     }
 
     /// Unpack into the legacy nested form (allocates; off the hot path).
@@ -216,6 +290,15 @@ mod tests {
         assert_eq!(t.as_matrix(), (36, 8));
         let v = Tensor::zeros("b", vec![8]);
         assert_eq!(v.as_matrix(), (1, 8));
+    }
+
+    #[test]
+    fn matrix_view_zero_dims_never_divide_by_zero() {
+        // regression: a trailing zero dim used to hit `len() / 0`
+        assert_eq!(Tensor::zeros("e", vec![4, 0]).as_matrix(), (0, 0));
+        assert_eq!(Tensor::zeros("e", vec![3, 0, 8]).as_matrix(), (0, 8));
+        assert_eq!(Tensor::zeros("e", vec![0, 5]).as_matrix(), (0, 5));
+        assert_eq!(Tensor::zeros("e", vec![0]).as_matrix(), (1, 0));
     }
 
     #[test]
@@ -268,6 +351,36 @@ mod tests {
         let mut b = BatchTensor::with_shape(9, 9); // stale larger shape
         b.copy_from(&a);
         assert_eq!(b, a);
+    }
+
+    #[test]
+    fn batch_tensor_zero_tracking_contract() {
+        let mut t = BatchTensor::new();
+        t.copy_from_rows(&[vec![0.0, 1.0, -0.0], vec![2.0, 3.0, 4.0]]);
+        assert!(!t.zeros_tracked(), "copy_from_rows must not claim tracking");
+        assert_eq!(t.tracked_zeros(), None);
+        t.count_zeros();
+        // exact-zero contract: -0.0 counts, non-zeros don't
+        assert_eq!(t.row_zeros, vec![2, 0]);
+        assert_eq!(t.tracked_zeros(), Some(2));
+        let d = t.measured_density().unwrap();
+        assert!((d - 4.0 / 6.0).abs() < 1e-12, "{d}");
+        // copy_from carries the tracking along
+        let mut u = BatchTensor::new();
+        u.copy_from(&t);
+        assert_eq!(u.tracked_zeros(), Some(2));
+        assert_eq!(u, t); // equality ignores metadata but shapes/data match
+        // reshape/reset invalidate
+        u.reshape(2, 3);
+        assert!(!u.zeros_tracked());
+        t.reset(1, 3);
+        assert!(!t.zeros_tracked());
+        // degenerate shapes have no density
+        let mut e = BatchTensor::new();
+        e.reset(0, 4);
+        e.count_zeros();
+        assert_eq!(e.tracked_zeros(), Some(0));
+        assert_eq!(e.measured_density(), None);
     }
 
     #[test]

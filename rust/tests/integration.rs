@@ -332,6 +332,15 @@ fn engine_serves_through_plan_backend() {
     assert_eq!(m.serve.completed, 8);
     assert!(m.serve.photonic_fps() > 0.0);
     assert!(m.p99 >= m.p50);
+    // The plan backend measures activation density: every batch must have
+    // been charged against a measured-density plan, and the per-layer
+    // breakdown must surface what was measured.
+    assert_eq!(m.serve.measured_batches, m.serve.batches);
+    assert_eq!(m.kernel_breakdown.len(), desc.layers.len());
+    for l in &m.kernel_breakdown {
+        let d = l.act_density.expect("plan backend measures density");
+        assert!((0.0..=1.0).contains(&d), "{}: {d}", l.layer);
+    }
 }
 
 #[test]

@@ -342,6 +342,59 @@ fn prop_csc_kernel_survives_zero_columns_and_matrices() {
 }
 
 #[test]
+fn prop_act_gated_kernels_bit_identical_to_ungated() {
+    // The dual-sparsity acceptance property: the activation-gated CSC and
+    // dense kernels (skip a stored column when its batch activation slab
+    // is all exactly zero) must produce bit-identical outputs to the
+    // ungated PR 3 kernels — across weight sparsity 0.0..=0.99, all-zero
+    // activation rows, batch 0/1/64, and eps-thresholded inputs.
+    use sonic::plan::{FcExec, KernelChoice};
+    check("act-gated == ungated", Config::default(), |g: &mut Gen| {
+        let rows = g.dim(1, 24);
+        let cols = g.dim(1, 40);
+        let wsp = g.f64(0.0, 0.99);
+        let w = ColMatrix::from_row_major(rows, cols, &g.sparse_vec(rows * cols, wsp));
+        let relu = g.rng.bool(0.5);
+        // eps-thresholded inputs: squash |x| <= eps to zero through the
+        // shared compression predicate before the kernels see them
+        let eps = if g.rng.bool(0.5) { 0.0 } else { 0.05f32 };
+        let mk_batch = |g: &mut Gen, bn: usize, asp: f64| -> Vec<Vec<f32>> {
+            let mut batch: Vec<Vec<f32>> = (0..bn)
+                .map(|_| SparseVec::from_dense_thresh(&g.sparse_vec(cols, asp), eps).to_dense())
+                .collect();
+            if bn > 1 {
+                batch[0] = vec![0.0; cols]; // all-zero activation row
+            }
+            batch
+        };
+        for kernel in [KernelChoice::Dense, KernelChoice::Csc] {
+            let fc = FcExec::with_kernel(w.clone(), relu, 0.0, kernel);
+            for bn in [0usize, 1, g.dim(2, 9), 64] {
+                let asp = g.f64(0.0, 1.0);
+                let batch = mk_batch(g, bn, asp);
+                let gated = fc.forward_batch_gated(&batch, true).map_err(|e| e.to_string())?;
+                let ungated =
+                    fc.forward_batch_gated(&batch, false).map_err(|e| e.to_string())?;
+                if gated != ungated {
+                    return Err(format!(
+                        "gated != ungated ({kernel:?} rows={rows} cols={cols} \
+                         wsp={wsp:.3} asp={asp:.3} batch={bn} eps={eps})"
+                    ));
+                }
+                // the measured auto-gating path must agree too
+                let auto = fc.forward_batch(&batch).map_err(|e| e.to_string())?;
+                if auto != gated {
+                    return Err(format!(
+                        "auto-gate != forced ({kernel:?} batch={bn} asp={asp:.3})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_parallel_plan_executor_matches_serial() {
     // Sharding a batch across pool workers must be bit-identical to the
     // serial kernels, for any batch size vs worker count.
