@@ -5,9 +5,11 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::time::Duration;
+
 use sonic::arch::SonicConfig;
 use sonic::model::ModelDesc;
-use sonic::serve::{BackendChoice, Engine};
+use sonic::serve::{BackendChoice, Engine, Priority, SubmitOptions};
 use sonic::sim::simulate;
 use sonic::util::err::Result;
 use sonic::util::rng::Rng;
@@ -49,6 +51,24 @@ fn main() -> Result<()> {
         let c = t.wait()?;
         println!("  input {i} -> class {} ({} logits)", c.argmax, c.logits.len());
     }
+
+    // 3) QoS submission: a latency-sensitive request rides the High lane
+    //    with a serve-by deadline.  If it had expired while queued it
+    //    would resolve with Outcome::DeadlineExceeded instead of hanging.
+    let qos = SubmitOptions {
+        priority: Priority::High,
+        deadline: Some(Duration::from_millis(250)),
+    };
+    let c = engine.submit_opts("mnist", rng.normal_vec(per), qos)?.wait()?;
+    println!(
+        "high-priority request -> {} (wall {:?})",
+        if c.served() {
+            format!("class {}", c.argmax)
+        } else {
+            "deadline exceeded".to_string()
+        },
+        c.wall_latency
+    );
     engine.shutdown();
     println!("done — Python never ran on this path.");
     Ok(())

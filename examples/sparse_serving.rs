@@ -1,17 +1,19 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E workload): build a
 //! `sonic::serve::Engine`, let it resolve the backend (AOT-compiled PJRT
-//! artifacts when present, compiled-plan execution otherwise), serve a
-//! Poisson stream of requests, and report wall-clock p50/p95/p99
-//! latency/throughput alongside the photonic accelerator's simulated
-//! FPS / FPS/W / EPB.
+//! artifacts when present, compiled-plan execution otherwise), serve
+//! heterogeneous traffic — a steady Poisson stream, a sidecar model, and
+//! a bursty High-priority stream with per-request deadlines — and report
+//! wall-clock p50/p95/p99 latency/throughput, per-lane QoS counters
+//! (served / deadline-shed / promoted), and the photonic accelerator's
+//! simulated FPS / FPS/W / EPB.
 //!
 //! Run: `cargo run --release --example sparse_serving -- [model] [n_requests]`
 //! (defaults: mnist, 96 requests at ~400 req/s)
 
 use std::time::Duration;
 
-use sonic::serve::workload::{print_report, PoissonWorkload};
-use sonic::serve::{BackendChoice, Engine, ServeConfig};
+use sonic::serve::workload::{print_report, BurstyWorkload, PoissonWorkload};
+use sonic::serve::{BackendChoice, Engine, Priority, ServeConfig, SubmitOptions};
 use sonic::util::err::Result;
 
 fn main() -> Result<()> {
@@ -29,10 +31,12 @@ fn main() -> Result<()> {
     let engine = Engine::builder()
         .serve_config(ServeConfig {
             max_batch: 8,
-            // window sized to the ~2.5ms mean inter-arrival at 400 req/s
-            // so the dynamic batcher actually forms multi-request batches
+            // Ceiling for the adaptive batcher: under the bursty stream's
+            // pressure the window stretches toward filling max_batch; in
+            // the gaps it collapses to an immediate drain.
             batch_window: Duration::from_millis(3),
             queue_cap: 1024,
+            ..ServeConfig::default()
         })
         .model(&model, BackendChoice::Auto)
         .model(sidecar, BackendChoice::Auto)
@@ -41,7 +45,7 @@ fn main() -> Result<()> {
     let desc = engine.model_desc(&model)?;
     println!(
         "serving `{model}` ({} layers, {} params, {:.1}% sparsity) via {} backend — \
-         {n_requests} requests @ ~{rate}/s (+ {} on model `{sidecar}`)",
+         {n_requests} requests @ ~{rate}/s (+ {} on model `{sidecar}`, + bursty High lane)",
         desc.layers.len(),
         desc.total_params,
         (1.0 - desc.surviving_params as f64 / desc.total_params as f64) * 100.0,
@@ -49,27 +53,47 @@ fn main() -> Result<()> {
         n_requests / 4,
     );
 
-    // Sidecar traffic from a second submitter thread: the engine routes by
-    // model name, so the two streams batch independently.
+    // Three concurrent submitters:
+    //  * the main Poisson stream (Normal lane, no deadline),
+    //  * sidecar traffic on the second model (routes independently),
+    //  * a bursty High-priority stream with a 5 ms deadline on the main
+    //    model — bursts overrun the batcher, so some of these are shed
+    //    with Outcome::DeadlineExceeded and show up in the lane report.
     let main_wl = PoissonWorkload {
         requests: n_requests,
         rate,
         seed: 7,
+        opts: SubmitOptions::default(),
     };
     let side_wl = PoissonWorkload {
         requests: n_requests / 4,
         rate: rate / 4.0,
         seed: 11,
+        opts: SubmitOptions::default(),
+    };
+    let burst_wl = BurstyWorkload {
+        requests: n_requests / 2,
+        on_rate: 4.0 * rate,
+        off_rate: 0.0,
+        mean_on: Duration::from_millis(10),
+        mean_off: Duration::from_millis(30),
+        seed: 13,
+        opts: SubmitOptions {
+            priority: Priority::High,
+            deadline: Some(Duration::from_millis(5)),
+        },
+        block: false, // a full queue sheds at the door (counted below)
     };
     let mut class_histogram = [0usize; 10];
-    std::thread::scope(|s| -> Result<()> {
+    let burst_run = std::thread::scope(|s| -> Result<_> {
         let side = s.spawn(|| side_wl.drive(&engine, sidecar));
+        let burst = s.spawn(|| burst_wl.drive(&engine, &model));
         let completions = main_wl.drive(&engine, &model)?;
         for c in &completions {
             class_histogram[c.argmax.min(9)] += 1;
         }
         side.join().expect("sidecar thread panicked")?;
-        Ok(())
+        Ok(burst.join().expect("bursty thread panicked")?)
     })?;
     engine.shutdown();
 
@@ -79,6 +103,12 @@ fn main() -> Result<()> {
     println!();
     print_report(metrics.model(sidecar).expect("sidecar model registered"));
 
-    println!("\nclass histogram ({model}): {class_histogram:?}");
+    println!(
+        "\nbursty High stream: {} served, {} deadline-shed, {} rejected at the door",
+        burst_run.served(),
+        burst_run.deadline_shed(),
+        burst_run.rejected,
+    );
+    println!("class histogram ({model}): {class_histogram:?}");
     Ok(())
 }

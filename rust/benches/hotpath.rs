@@ -13,9 +13,10 @@
 //! tracks the `serve::Engine` facade's cost over the raw backend call
 //! (ticketing + queue hand-off + dynamic batching).  Kernel grids
 //! (dense-vs-CSC, and activation-gated-vs-ungated across act sparsity x
-//! batch) land in `BENCH_kernels.json` / `BENCH_actgate.json`; everything
-//! else in `BENCH_hotpath.json` for the perf trajectory (CI uploads all
-//! three).
+//! batch) land in `BENCH_kernels.json` / `BENCH_actgate.json`; the QoS
+//! grid (priority mix x deadline mix under an overloaded engine, per-lane
+//! p99 + shed counts) lands in `BENCH_qos.json`; everything else in
+//! `BENCH_hotpath.json` for the perf trajectory (CI uploads all four).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -28,7 +29,9 @@ use sonic::coordinator::convflow::{
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
 use sonic::plan::{cached, FcExec, KernelChoice, ModelPlan, PlanBackend};
-use sonic::serve::{BackendChoice, Engine, InferenceBackend, ServeConfig};
+use sonic::serve::{
+    BackendChoice, Engine, InferenceBackend, NullBackend, Priority, ServeConfig, SubmitOptions,
+};
 use sonic::sim::simulate;
 use sonic::sparsity::ColMatrix;
 use sonic::tensor::BatchTensor;
@@ -359,6 +362,7 @@ fn main() {
             max_batch: 8,
             batch_window,
             queue_cap: 1024,
+            ..ServeConfig::default()
         })
         .model_desc(mnist.clone(), BackendChoice::Custom(backend.clone()))
         .build()
@@ -379,6 +383,163 @@ fn main() {
          backend call (includes the {}us batch window)",
         batch_window.as_micros()
     );
+
+    // --- QoS grid: priority mix x deadline mix under overload ------------
+    //
+    // Acceptance for the QoS-aware serving stack: a deterministic slow
+    // backend (fixed per-batch service time) is driven well past its
+    // service rate with a small queue_cap, so the queue sits at capacity
+    // the whole run (blocking submits = backpressure).  Across the
+    // priority-mix x deadline-mix grid we record per-lane served/shed
+    // counts and latency percentiles into BENCH_qos.json.  Gates: under
+    // the mixed-priority/no-deadline cell the High lane's p99 must beat
+    // the Batch lane's; in the deadline cells expired requests complete
+    // as deadline_exceeded (no hung tickets — every submit is waited on)
+    // without ever reaching the backend's kernels.
+    println!("\n=== QoS grid: priority mix x deadline mix (overloaded engine) ===\n");
+    struct SlowBackend {
+        inner: NullBackend,
+        per_batch: Duration,
+    }
+    impl InferenceBackend for SlowBackend {
+        fn infer_batch(&self, inputs: &[Vec<f32>]) -> sonic::util::err::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.per_batch);
+            self.inner.infer_batch(inputs)
+        }
+        fn input_len(&self) -> usize {
+            self.inner.input_len
+        }
+    }
+    let qos_requests = if bench_iters().is_some() { 96 } else { 384 };
+    let per_batch = Duration::from_micros(300);
+    let priority_mixes: &[(&str, &[Priority])] = &[
+        ("all-normal", &[Priority::Normal]),
+        (
+            "mixed-1h2n1b",
+            &[
+                Priority::High,
+                Priority::Normal,
+                Priority::Normal,
+                Priority::Batch,
+            ],
+        ),
+    ];
+    let deadline_mixes: &[(&str, f64, Option<Duration>)] = &[
+        ("none", 0.0, None),
+        ("half-2ms", 0.5, Some(Duration::from_millis(2))),
+        ("all-2ms", 1.0, Some(Duration::from_millis(2))),
+    ];
+    let mut qos_cells = Vec::new();
+    let mut high_p99 = Duration::ZERO;
+    let mut batch_p99 = Duration::ZERO;
+    for &(pmix_name, pmix) in priority_mixes {
+        for &(dmix_name, dfrac, dl) in deadline_mixes {
+            let engine = Engine::builder()
+                .serve_config(ServeConfig {
+                    max_batch: 8,
+                    batch_window: Duration::from_micros(200),
+                    queue_cap: 64,
+                    // lanes stay differentiated for the whole (short) run
+                    promote_after: Duration::from_millis(250),
+                    ..ServeConfig::default()
+                })
+                .model_desc(
+                    mnist.clone(),
+                    BackendChoice::Custom(Arc::new(SlowBackend {
+                        inner: NullBackend {
+                            input_len: 784,
+                            n_classes: 10,
+                        },
+                        per_batch,
+                    })),
+                )
+                .build()
+                .expect("qos engine build");
+            let input = vec![0.25f32; 784];
+            let tickets: Vec<_> = (0..qos_requests)
+                .map(|i| {
+                    let opts = SubmitOptions {
+                        priority: pmix[i % pmix.len()],
+                        deadline: if (i as f64 / qos_requests as f64) < dfrac {
+                            dl
+                        } else {
+                            None
+                        },
+                    };
+                    engine
+                        .submit_opts("mnist", input.clone(), opts)
+                        .expect("submit")
+                })
+                .collect();
+            // every ticket must resolve — served or deadline_exceeded
+            let mut served = 0u64;
+            let mut shed = 0u64;
+            for t in tickets {
+                let c = t.wait().expect("ticket resolved");
+                if c.served() {
+                    served += 1;
+                } else {
+                    shed += 1;
+                }
+            }
+            engine.shutdown();
+            let metrics = engine.metrics();
+            let mm = metrics.model("mnist").expect("registered");
+            println!(
+                "qos cell [{pmix_name:>12} x {dmix_name:>8}]: served {served:>4}  shed {shed:>4}  \
+                 p99 {:?}",
+                mm.p99
+            );
+            if pmix_name == "mixed-1h2n1b" && dmix_name == "none" {
+                high_p99 = mm.lanes[0].p99;
+                batch_p99 = mm.lanes[2].p99;
+            }
+            let lanes = arr(mm
+                .lanes
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("lane", s(l.priority.as_str())),
+                        ("completed", num(l.completed as f64)),
+                        ("shed", num(l.shed as f64)),
+                        ("mean_batch", num(l.mean_batch)),
+                        ("p50_ns", num(l.p50.as_nanos() as f64)),
+                        ("p99_ns", num(l.p99.as_nanos() as f64)),
+                    ])
+                })
+                .collect());
+            qos_cells.push(obj(vec![
+                ("priority_mix", s(pmix_name)),
+                ("deadline_mix", s(dmix_name)),
+                ("submitted", num(qos_requests as f64)),
+                ("served", num(served as f64)),
+                ("shed", num(shed as f64)),
+                ("p99_ns", num(mm.p99.as_nanos() as f64)),
+                ("lanes", lanes),
+            ]));
+        }
+    }
+    let qos_gate = high_p99 < batch_p99;
+    println!(
+        "\nHigh-lane p99 {high_p99:?} vs Batch-lane p99 {batch_p99:?} under overload: {}",
+        if qos_gate { "OK (high < batch)" } else { "** GATE FAILED **" }
+    );
+    let qos_json = obj(vec![
+        ("bench", s("qos")),
+        ("requests_per_cell", num(qos_requests as f64)),
+        ("per_batch_service_us", num(per_batch.as_micros() as f64)),
+        ("queue_cap", num(64.0)),
+        ("high_p99_ns", num(high_p99.as_nanos() as f64)),
+        ("batch_p99_ns", num(batch_p99.as_nanos() as f64)),
+        ("high_p99_lt_batch_p99", num(if qos_gate { 1.0 } else { 0.0 })),
+        ("cells", arr(qos_cells)),
+    ]);
+    let qout = std::env::var("SONIC_BENCH_QOS_JSON")
+        .unwrap_or_else(|_| "BENCH_qos.json".to_string());
+    match std::fs::write(&qout, qos_json.to_pretty()) {
+        Ok(()) => println!("QoS grid results written to {qout}"),
+        Err(e) => eprintln!("could not write {qout}: {e}"),
+    }
 
     // --- analytic simulator (the figure generator's inner loop) ---
     println!();

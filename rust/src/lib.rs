@@ -22,9 +22,18 @@
 //!   [`serve::Ticket`] completion handle (`wait()`/`try_wait()`); the
 //!   engine owns the metrics lifecycle, reporting per-model wall-latency
 //!   p50/p95/p99 next to the photonic FPS / FPS/W / EPB charged against
-//!   the compiled plan.  The request router + dynamic batcher of earlier
-//!   revisions (`Router`/`drain_batch`) is a `pub(crate)` internal of
-//!   this module — the engine is the only way to serve.
+//!   the compiled plan.  **QoS:** `submit_opts` takes a
+//!   [`serve::SubmitOptions`] — a [`serve::Priority`] lane
+//!   (High/Normal/Batch, drained high-first with an aging starvation
+//!   guard) and an optional per-request deadline; expired requests are
+//!   shed *before* execution and resolve with
+//!   [`serve::Outcome::DeadlineExceeded`], the batch window adapts to
+//!   arrival pressure (immediate drain when shallow, stretching toward
+//!   `max_batch` under load), and the metrics carry per-lane latency
+//!   histograms plus shed/promotion counters.  The request router +
+//!   dynamic batcher of earlier revisions (`Router`/`drain_batch`) is a
+//!   `pub(crate)` internal of this module — the engine is the only way
+//!   to serve.
 //! * [`plan`] — the compile-once `LayerPlan`/`ModelPlan` IR (see
 //!   `src/plan/README.md`): every `(model, SonicConfig)` pair is compiled
 //!   exactly once into per-layer VDU decompositions, EO-vs-TO retune

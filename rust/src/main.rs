@@ -18,7 +18,7 @@ use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
 use sonic::model::ModelDesc;
 use sonic::serve::workload::{print_report, PoissonWorkload};
-use sonic::serve::{BackendChoice, Engine, ServeConfig};
+use sonic::serve::{BackendChoice, Engine, Priority, ServeConfig, SubmitOptions};
 use sonic::sim::{ablation, simulate};
 use sonic::sim::dse;
 use sonic::util::bench::Table;
@@ -75,8 +75,10 @@ fn print_usage() {
 USAGE: sonic <subcommand> [options]
 
   infer     --model <m> [--count N] [--backend auto|pjrt|plan]
+            [--priority high|normal|batch] [--deadline-ms D]
                                         functional inference via the serve engine
   serve     --model <m> [--requests N] [--batch B] [--rate R] [--backend auto|pjrt|plan]
+            [--priority high|normal|batch] [--deadline-ms D]
                                         serve a synthetic request stream
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
@@ -101,10 +103,22 @@ fn specs_model() -> Vec<OptSpec> {
         OptSpec { name: "rate", takes_value: true, help: "request rate (req/s)" },
         OptSpec { name: "seed", takes_value: true, help: "workload seed" },
         OptSpec { name: "backend", takes_value: true, help: "backend: auto|pjrt|plan" },
+        OptSpec { name: "deadline-ms", takes_value: true, help: "per-request deadline in ms (0 = none); expired requests are shed" },
+        OptSpec { name: "priority", takes_value: true, help: "QoS lane: high|normal|batch" },
         OptSpec { name: "no-gating", takes_value: false, help: "disable VCSEL power gating" },
         OptSpec { name: "no-compression", takes_value: false, help: "disable dataflow compression" },
         OptSpec { name: "no-clustering", takes_value: false, help: "disable weight clustering" },
     ]
+}
+
+/// Parse the shared `--priority` / `--deadline-ms` QoS flags into the
+/// per-request [`SubmitOptions`] (deadline 0 or absent = none).
+fn submit_opts_from(a: &Args) -> Result<SubmitOptions> {
+    let deadline_ms: f64 = a.parse_num("deadline-ms", 0.0)?;
+    Ok(SubmitOptions {
+        deadline: (deadline_ms > 0.0).then(|| Duration::from_secs_f64(deadline_ms / 1e3)),
+        priority: Priority::parse(a.get_or("priority", "normal"))?,
+    })
 }
 
 fn arch_from(a: &Args) -> SonicConfig {
@@ -140,10 +154,11 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
         engine.backend_kind(&model)?,
     );
 
+    let opts = submit_opts_from(&a)?;
     let mut rng = Rng::new(a.parse_num("seed", 7u64)?);
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = (0..count)
-        .map(|_| engine.submit(&model, rng.normal_vec(per)))
+        .map(|_| engine.submit_opts(&model, rng.normal_vec(per), opts))
         .collect::<Result<_>>()?;
     let completions: Vec<_> = tickets
         .into_iter()
@@ -152,10 +167,14 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let dt = t0.elapsed();
     engine.shutdown();
     for (i, c) in completions.iter().enumerate() {
-        println!(
-            "  req {i}: class {}  (logit {:.3})",
-            c.argmax, c.logits[c.argmax]
-        );
+        if c.served() {
+            println!(
+                "  req {i}: class {}  (logit {:.3})",
+                c.argmax, c.logits[c.argmax]
+            );
+        } else {
+            println!("  req {i}: deadline exceeded after {:?}", c.wall_latency);
+        }
     }
     println!(
         "{count} inferences in {:?}  ({:.1} req/s wall)",
@@ -183,25 +202,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let seed: u64 = a.parse_num("seed", 42)?;
     let backend = BackendChoice::parse(a.get_or("backend", "auto"))?;
 
+    let opts = submit_opts_from(&a)?;
     let engine = Engine::builder()
         .arch(arch_from(&a))
         .serve_config(ServeConfig {
             max_batch,
             batch_window: Duration::from_millis(2),
             queue_cap: 4096,
+            ..ServeConfig::default()
         })
         .model(&model, backend)
         .build()?;
 
     println!(
         "serving {n_requests} requests @ ~{rate} req/s, max batch {max_batch} \
-         ({} backend)",
-        engine.backend_kind(&model)?
+         ({} backend, {} lane{})",
+        engine.backend_kind(&model)?,
+        opts.priority.as_str(),
+        match opts.deadline {
+            Some(d) => format!(", deadline {d:?}"),
+            None => String::new(),
+        },
     );
     let workload = PoissonWorkload {
         requests: n_requests,
         rate,
         seed,
+        opts,
     };
     workload.drive(&engine, &model)?;
     engine.shutdown();
@@ -224,7 +251,7 @@ fn cmd_compare(argv: &[String]) -> Result<()> {
     let mut epb = Table::new(headers);
     let platforms = all_platforms();
     for name in &names {
-        let desc = ModelDesc::load_or_builtin(name);
+        let desc = ModelDesc::try_load_or_builtin(name)?;
         let s = simulate(&desc, &cfg);
         let results: Vec<_> = platforms.iter().map(|p| p.evaluate(&desc)).collect();
         let with_name = |vals: Vec<String>| {
@@ -267,7 +294,7 @@ fn cmd_compare(argv: &[String]) -> Result<()> {
         let p = platforms.iter().find(|p| p.name() == pname).unwrap();
         let mut ratio = 1.0;
         for name in &names {
-            let desc = ModelDesc::load_or_builtin(name);
+            let desc = ModelDesc::try_load_or_builtin(name)?;
             let s = simulate(&desc, &cfg);
             ratio *= s.fps_per_watt / p.evaluate(&desc).fps_per_watt;
         }
@@ -287,7 +314,7 @@ fn cmd_compare(argv: &[String]) -> Result<()> {
         let p = platforms.iter().find(|p| p.name() == pname).unwrap();
         let mut ratio = 1.0;
         for name in &names {
-            let desc = ModelDesc::load_or_builtin(name);
+            let desc = ModelDesc::try_load_or_builtin(name)?;
             let s = simulate(&desc, &cfg);
             ratio *= p.evaluate(&desc).epb_j / s.epb_j;
         }
@@ -301,7 +328,10 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let names = a.list("models", MODELS);
-    let models: Vec<ModelDesc> = names.iter().map(|n| ModelDesc::load_or_builtin(n)).collect();
+    let models: Vec<ModelDesc> = names
+        .iter()
+        .map(|n| ModelDesc::try_load_or_builtin(n))
+        .collect::<Result<_>>()?;
     let points = dse::explore(&models, None);
     let mut t = Table::new(&["n", "m", "N", "K", "FPS/W (gm)", "EPB (gm)", "power (W)"]);
     for p in points.iter().take(15) {
@@ -331,7 +361,7 @@ fn cmd_ablation(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "cifar10");
-    let desc = ModelDesc::load_or_builtin(model);
+    let desc = ModelDesc::try_load_or_builtin(model)?;
     let rows = ablation::ablate(&desc);
     let mut t = Table::new(&["variant", "FPS", "power (W)", "FPS/W", "EPB", "FPS/W rel", "EPB rel"]);
     for r in &rows {
@@ -354,7 +384,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist");
-    let desc = ModelDesc::load_or_builtin(model);
+    let desc = ModelDesc::try_load_or_builtin(model)?;
     let s = simulate(&desc, &arch_from(&a));
     let mut t = Table::new(&["layer", "kind", "vec len", "passes", "rounds", "latency", "energy", "active lanes"]);
     for l in &s.layers {
@@ -399,7 +429,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist");
-    let desc = ModelDesc::load_or_builtin(model);
+    let desc = ModelDesc::try_load_or_builtin(model)?;
     let cfg = arch_from(&a);
     let plan = sonic::plan::cached(&desc, &cfg);
     let mut t = Table::new(&[
@@ -443,7 +473,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     specs.push(OptSpec { name: "out", takes_value: true, help: "write JSON to file" });
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist");
-    let desc = ModelDesc::load_or_builtin(model);
+    let desc = ModelDesc::try_load_or_builtin(model)?;
     let (tr, stats) = sonic::sim::trace::trace(&desc, &arch_from(&a));
     let mut t = Table::new(&["layer", "phase", "start", "duration"]);
     for e in &tr.events {
@@ -468,7 +498,7 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist");
-    let desc = ModelDesc::load_or_builtin(model);
+    let desc = ModelDesc::try_load_or_builtin(model)?;
     let cfg = arch_from(&a);
     let rows = sonic::sim::batch::sweep(&desc, &cfg, &[1, 2, 4, 8, 16, 32]);
     let mut t = Table::new(&["batch", "latency", "per-request", "FPS", "FPS/W"]);
@@ -501,7 +531,7 @@ fn cmd_memory(argv: &[String]) -> Result<()> {
         "mem energy",
     ]);
     for name in &names {
-        let desc = ModelDesc::load_or_builtin(name);
+        let desc = ModelDesc::try_load_or_builtin(name)?;
         let c = model_traffic(&desc, &mem, true);
         let d = model_traffic(&desc, &mem, false);
         t.row(&[
@@ -561,7 +591,7 @@ fn cmd_table3() -> Result<()> {
         "paper acc",
     ]);
     for name in MODELS {
-        let d = ModelDesc::load_or_builtin(name);
+        let d = ModelDesc::try_load_or_builtin(name)?;
         let b = ModelDesc::builtin(name).unwrap();
         t.row(&[
             name.to_string(),

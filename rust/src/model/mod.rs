@@ -138,10 +138,14 @@ impl ModelDesc {
         })
     }
 
-    /// Panicking form of [`ModelDesc::try_load_or_builtin`] for call sites
-    /// that only ever pass the four paper models.
+    /// Panicking form of [`ModelDesc::try_load_or_builtin`] for benches
+    /// and figure generators that only ever pass the four paper models.
+    /// Anything reachable from user input (the CLI's `--model`, the
+    /// engine builder) must use the fallible form instead — a typo'd
+    /// name is an `Err`, not an abort.  The panic message carries the
+    /// full error context rather than the old bare `"unknown model"`.
     pub fn load_or_builtin(name: &str) -> ModelDesc {
-        Self::try_load_or_builtin(name).expect("unknown model")
+        Self::try_load_or_builtin(name).unwrap_or_else(|e| panic!("{e:#}"))
     }
 
     pub fn from_json(j: &Json) -> Result<ModelDesc> {

@@ -22,9 +22,10 @@ use crate::plan::{ModelPlan, PlanBackend};
 use crate::runtime::PjrtBackend;
 use crate::util::err::{Context, Error, Result};
 
-use super::metrics::{EngineMetrics, LatencyHistogram, ModelMetrics};
+use super::metrics::{EngineMetrics, LaneHistograms, LaneReport, ModelMetrics};
 use super::router::{
-    BatchBuffers, Completion, InferenceBackend, Router, ServeConfig, ServeMetrics,
+    BatchBuffers, Completion, InferenceBackend, Priority, Router, ServeConfig, ServeMetrics,
+    SubmitOptions,
 };
 
 /// How the engine resolves the functional backend for one model.
@@ -149,7 +150,7 @@ impl Ticket {
 
 /// Per-model mutable serving state shared with the worker threads.
 struct ModelShared {
-    stats: Mutex<(ServeMetrics, LatencyHistogram)>,
+    stats: Mutex<(ServeMetrics, LaneHistograms)>,
     slots: Mutex<HashMap<u64, Arc<Slot>>>,
 }
 
@@ -230,23 +231,48 @@ impl Engine {
         Ok(self.entry(model)?.backend_kind)
     }
 
-    /// Submit one request to the named model.  Returns a [`Ticket`];
+    /// Submit one request to the named model at [`Priority::Normal`]
+    /// with no deadline (the pre-QoS behavior).  Returns a [`Ticket`];
     /// **blocks** while the model's queue is full (backpressure), and
     /// errors on an unknown model, a bad input length, or after
     /// [`Engine::shutdown`].
     pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<Ticket> {
-        match self.submit_inner(model, input, true)? {
+        self.submit_opts(model, input, SubmitOptions::default())
+    }
+
+    /// Non-blocking submit: `Ok(None)` when the model's queue is full.
+    pub fn try_submit(&self, model: &str, input: Vec<f32>) -> Result<Option<Ticket>> {
+        self.try_submit_opts(model, input, SubmitOptions::default())
+    }
+
+    /// [`Engine::submit`] with explicit QoS options: lane priority and an
+    /// optional serve-by deadline.  A request whose deadline expires
+    /// while queued is shed before execution and its ticket resolves to a
+    /// [`Completion`] with [`super::Outcome::DeadlineExceeded`].
+    pub fn submit_opts(&self, model: &str, input: Vec<f32>, opts: SubmitOptions) -> Result<Ticket> {
+        match self.submit_inner(model, input, opts, true)? {
             Some(t) => Ok(t),
             None => bail!("blocking submit returned without a ticket"),
         }
     }
 
-    /// Non-blocking submit: `Ok(None)` when the model's queue is full.
-    pub fn try_submit(&self, model: &str, input: Vec<f32>) -> Result<Option<Ticket>> {
-        self.submit_inner(model, input, false)
+    /// [`Engine::try_submit`] with explicit QoS options.
+    pub fn try_submit_opts(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Option<Ticket>> {
+        self.submit_inner(model, input, opts, false)
     }
 
-    fn submit_inner(&self, model: &str, input: Vec<f32>, block: bool) -> Result<Option<Ticket>> {
+    fn submit_inner(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+        block: bool,
+    ) -> Result<Option<Ticket>> {
         if self.stopping.load(Ordering::SeqCst) {
             bail!("engine is shut down");
         }
@@ -263,7 +289,7 @@ impl Engine {
             .lock()
             .unwrap()
             .insert(id, Arc::clone(&slot));
-        match entry.router.submit_with_id(id, input, block) {
+        match entry.router.submit_with_id(id, input, opts, block) {
             Ok(true) => {
                 // Close the race with a concurrent shutdown(): if the
                 // request is still queued it may never be served (workers
@@ -312,7 +338,7 @@ impl Engine {
             .models
             .iter()
             .map(|(name, entry)| {
-                let (mut serve, hist) = {
+                let (mut serve, hists) = {
                     let st = entry.shared.stats.lock().unwrap();
                     (st.0.clone(), st.1.clone())
                 };
@@ -323,12 +349,31 @@ impl Engine {
                 } else {
                     serve.photonic_energy_j / (serve.completed as f64 * bits)
                 };
+                let all = hists.merged();
+                let lanes = Priority::ALL
+                    .iter()
+                    .map(|&p| {
+                        let c = serve.lanes[p.idx()];
+                        let h = hists.lane(p);
+                        LaneReport {
+                            priority: p,
+                            completed: c.completed,
+                            shed: c.shed,
+                            promoted: c.promoted,
+                            mean_batch: c.mean_batch(),
+                            p50: h.quantile(0.50),
+                            p95: h.quantile(0.95),
+                            p99: h.quantile(0.99),
+                        }
+                    })
+                    .collect();
                 ModelMetrics {
                     model: name.clone(),
                     backend: entry.backend_kind.to_string(),
-                    p50: hist.quantile(0.50),
-                    p95: hist.quantile(0.95),
-                    p99: hist.quantile(0.99),
+                    p50: all.quantile(0.50),
+                    p95: all.quantile(0.95),
+                    p99: all.quantile(0.99),
+                    lanes,
                     photonic_epb_j,
                     kernel_breakdown: entry.router.kernel_breakdown(),
                     serve,
@@ -380,13 +425,31 @@ impl Drop for Engine {
 }
 
 /// Worker loop: drain batches for one model until shutdown *and* the
-/// queue is empty, filling completion slots as batches finish.
+/// queue is empty, filling completion slots as batches finish.  While
+/// the queue is idle the worker parks on the router's condvar inside
+/// `pop_batch` — no empty-queue spin.
 fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<AtomicBool>) {
     // Flat input/output buffers reused across every batch this worker
     // drains — steady-state batch packing performs no heap allocation.
     let mut bufs = BatchBuffers::default();
     loop {
-        let batch = router.pop_batch();
+        let popped = router.pop_batch();
+        // Resolve shed (deadline-expired) requests *before* touching the
+        // backend — their tickets complete with Outcome::DeadlineExceeded
+        // even if the batch below errors or panics.
+        if !popped.shed.is_empty() || popped.promoted.iter().any(|&n| n > 0) {
+            let mut qos = ServeMetrics::default();
+            for (lane, n) in qos.lanes.iter_mut().zip(popped.promoted) {
+                lane.promoted += n;
+            }
+            let shed = Router::shed_completions(&popped.shed, &mut qos);
+            shared.stats.lock().unwrap().0.merge(&qos);
+            for c in shed {
+                let id = c.id;
+                shared.complete(id, Ok(c));
+            }
+        }
+        let batch = popped.batch;
         if batch.is_empty() {
             if stopping.load(Ordering::SeqCst) && router.queue_depth() == 0 {
                 return;
@@ -409,7 +472,7 @@ fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<Atom
                     let mut st = shared.stats.lock().unwrap();
                     st.0.merge(&local);
                     for c in &completions {
-                        st.1.record(c.wall_latency);
+                        st.1.record(c.priority, c.wall_latency);
                     }
                 }
                 for c in completions {
@@ -602,7 +665,7 @@ impl EngineBuilder {
                 self.serve_cfg.clone(),
             );
             let shared = Arc::new(ModelShared {
-                stats: Mutex::new((ServeMetrics::default(), LatencyHistogram::default())),
+                stats: Mutex::new((ServeMetrics::default(), LaneHistograms::default())),
                 slots: Mutex::new(HashMap::new()),
             });
             models.insert(

@@ -1,9 +1,10 @@
-//! Engine-level metrics: per-model serving counters plus a log-bucketed
-//! wall-latency histogram giving p50/p95/p99 without storing every sample.
+//! Engine-level metrics: per-model serving counters plus log-bucketed
+//! wall-latency histograms (one per priority lane) giving p50/p95/p99
+//! without storing every sample.
 
 use std::time::Duration;
 
-use super::router::ServeMetrics;
+use super::router::{Priority, ServeMetrics};
 
 /// Histogram geometry: log-spaced buckets from 100 ns upward with 30%
 /// growth per bucket — ~±15% relative error on reported quantiles, which
@@ -62,6 +63,17 @@ impl LatencyHistogram {
         self.count == 0
     }
 
+    /// Fold another histogram into this one (used to derive the
+    /// all-lanes percentiles from the per-priority histograms).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
     /// Latency at quantile `q` in [0, 1]: the geometric midpoint of the
     /// bucket containing the rank-`ceil(q * count)` sample (the unbiased
     /// estimate for log-spaced buckets — worst-case error half a bucket,
@@ -81,6 +93,50 @@ impl LatencyHistogram {
         }
         Duration::from_nanos(self.max_ns)
     }
+}
+
+/// Per-priority wall-latency histograms for one model (served requests
+/// only — shed requests are counted, not timed into percentiles).
+#[derive(Debug, Clone, Default)]
+pub struct LaneHistograms([LatencyHistogram; Priority::COUNT]);
+
+impl LaneHistograms {
+    pub fn record(&mut self, p: Priority, d: Duration) {
+        self.0[p.idx()].record(d);
+    }
+
+    pub fn lane(&self, p: Priority) -> &LatencyHistogram {
+        &self.0[p.idx()]
+    }
+
+    /// All lanes folded together — the model-wide latency distribution.
+    pub fn merged(&self) -> LatencyHistogram {
+        let mut all = LatencyHistogram::default();
+        for h in &self.0 {
+            all.merge(h);
+        }
+        all
+    }
+}
+
+/// Snapshot of one priority lane's serving state inside a model.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub priority: Priority,
+    /// Requests served (executed on the backend) from this lane.
+    pub completed: u64,
+    /// Requests shed with an expired deadline from this lane.
+    pub shed: u64,
+    /// Starvation-guard promotions (pops where this lane's aged head
+    /// jumped a higher-priority lane).
+    pub promoted: u64,
+    /// Achieved batch occupancy: mean requests of this lane per batch
+    /// that contained the lane.
+    pub mean_batch: f64,
+    /// Wall-latency percentiles over this lane's served requests.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
 }
 
 /// One layer's accumulated kernel time inside a backend: which compute
@@ -125,10 +181,14 @@ pub struct ModelMetrics {
     pub backend: String,
     /// Wall + photonic counters (same shape the old Router exposed).
     pub serve: ServeMetrics,
-    /// Wall-latency percentiles over every completed request.
+    /// Wall-latency percentiles over every completed request (all lanes
+    /// folded together).
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
+    /// Per-priority lane snapshots (always [`Priority::COUNT`] entries,
+    /// drain order: High, Normal, Batch).
+    pub lanes: Vec<LaneReport>,
     /// Served photonic energy-per-bit: total photonic energy over the bits
     /// this model's completions moved.  When the backend measures
     /// activation density (the plan executor does), each batch's energy
@@ -161,6 +221,11 @@ impl EngineMetrics {
     pub fn completed(&self) -> u64 {
         self.models.iter().map(|m| m.serve.completed).sum()
     }
+
+    /// Requests shed (deadline exceeded) across every model.
+    pub fn shed(&self) -> u64 {
+        self.models.iter().map(|m| m.serve.shed).sum()
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +252,36 @@ mod tests {
         // log buckets: p50 within ~30% of the true median 500us
         let mid = p50.as_nanos() as f64 / 500_000.0;
         assert!((0.7..=1.3).contains(&mid), "p50 {p50:?} vs true 500us");
+    }
+
+    #[test]
+    fn merge_folds_counts_and_extremes() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.quantile(0.0), Duration::from_micros(10));
+        assert_eq!(a.quantile(1.0), Duration::from_micros(1000));
+        // merging an empty histogram is a no-op
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn lane_histograms_split_and_merge_by_priority() {
+        let mut lanes = LaneHistograms::default();
+        lanes.record(Priority::High, Duration::from_micros(5));
+        lanes.record(Priority::Batch, Duration::from_millis(5));
+        assert_eq!(lanes.lane(Priority::High).len(), 1);
+        assert_eq!(lanes.lane(Priority::Normal).len(), 0);
+        assert_eq!(lanes.lane(Priority::Batch).len(), 1);
+        assert_eq!(lanes.merged().len(), 2);
+        assert!(
+            lanes.lane(Priority::High).quantile(0.99)
+                < lanes.lane(Priority::Batch).quantile(0.99)
+        );
     }
 
     #[test]

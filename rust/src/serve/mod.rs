@@ -25,8 +25,16 @@
 //!   router + compile-once photonic plan; `submit` routes by model name.
 //! * **Worker threads**: batches are drained in the background; `submit`
 //!   returns a [`Ticket`] (`wait()` / `try_wait()`) instead of a bare id.
+//! * **QoS**: [`Engine::submit_opts`] takes a [`SubmitOptions`] with a
+//!   lane [`Priority`] (High/Normal/Batch, drained high-first with a
+//!   starvation guard) and an optional deadline — expired requests are
+//!   shed before execution and complete with
+//!   [`Outcome::DeadlineExceeded`].  The batch window is adaptive:
+//!   it widens toward `max_batch` under arrival pressure and collapses
+//!   to an immediate drain when the queue is shallow.
 //! * **Metrics**: [`Engine::metrics`] snapshots per-model counters,
-//!   wall-latency p50/p95/p99, and served photonic FPS / FPS/W / EPB;
+//!   wall-latency p50/p95/p99 (overall and per lane), shed/promotion
+//!   counters, and served photonic FPS / FPS/W / EPB;
 //!   [`Engine::shutdown`] drains in-flight requests and freezes the clock.
 //!
 //! The former `coordinator::serve::Router` / `drain_batch` pair is now a
@@ -39,8 +47,13 @@ pub(crate) mod router;
 pub mod workload;
 
 pub use engine::{BackendChoice, Engine, EngineBuilder, Ticket};
-pub use metrics::{EngineMetrics, LatencyHistogram, LayerKernelStat, ModelMetrics};
-pub use router::{Completion, InferenceBackend, NullBackend, ServeConfig, ServeMetrics};
+pub use metrics::{
+    EngineMetrics, LaneHistograms, LaneReport, LatencyHistogram, LayerKernelStat, ModelMetrics,
+};
+pub use router::{
+    Completion, InferenceBackend, LaneCounters, NullBackend, Outcome, Priority, ServeConfig,
+    ServeMetrics, SubmitOptions,
+};
 
 /// NaN-safe argmax over logits: the index of the largest value, with NaN
 /// treated as negative infinity (a poisoned logit can never win, and —

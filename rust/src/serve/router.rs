@@ -1,4 +1,5 @@
-//! Request router + dynamic batcher — the **internal** serving core.
+//! Request router + QoS-aware dynamic batcher — the **internal** serving
+//! core.
 //!
 //! Since the `sonic::serve` Engine redesign this type is `pub(crate)`:
 //! the public surface is [`crate::serve::Engine`], which owns one router
@@ -6,13 +7,25 @@
 //! threads.  Nothing outside `rust/src/serve/` constructs a `Router` or
 //! calls `drain_batch` anymore.
 //!
-//! Requests enter a bounded queue; the batcher drains up to `max_batch`
-//! requests or waits `batch_window` for stragglers (vLLM-router-style
-//! dynamic batching), executes the batch on an [`InferenceBackend`]
-//! (PJRT artifacts in production, the compiled-plan executor offline),
-//! and attributes per-request latency.  Alongside the functional
-//! results, the batch is charged to the precompiled photonic plan so the
-//! serving report carries FPS, FPS/W and EPB.
+//! Requests enter a bounded queue split into per-priority lanes
+//! ([`Priority::High`] / [`Priority::Normal`] / [`Priority::Batch`]).
+//! The batcher drains High-first with a **starvation guard**: a lane head
+//! that has waited longer than `ServeConfig::promote_after` is drained
+//! first regardless of its lane (oldest promoted head wins), so Batch
+//! traffic ages into service instead of starving behind a busy High lane.
+//! A request whose [`SubmitOptions::deadline`] expired while it queued is
+//! **shed before execution**: it never reaches the backend (no kernel
+//! slot, no photonic charge) and completes with
+//! [`Outcome::DeadlineExceeded`] so the caller's ticket resolves instead
+//! of hanging.  The straggler wait is **adaptive** (see
+//! [`ServeConfig::adaptive_window`]): under sustained arrival pressure it
+//! widens toward the time needed to fill `max_batch` (capped at
+//! `batch_window`), and collapses to an immediate drain when the queue is
+//! shallow and arrivals are slow — while idle, workers park on the queue
+//! condvar and burn no CPU.  Executed batches run on an
+//! [`InferenceBackend`] (PJRT artifacts in production, the compiled-plan
+//! executor offline) and are charged to the precompiled photonic plan so
+//! the serving report carries FPS, FPS/W and EPB.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -80,12 +93,115 @@ pub trait InferenceBackend: Send + Sync {
     }
 }
 
-/// Per-model batching knobs (queue capacity, batch size, batch window).
+/// Request priority: which lane a submission queues in.  Lanes drain
+/// High-first, subject to the starvation guard
+/// (`ServeConfig::promote_after`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic: drained before everything else.
+    High,
+    /// The default lane; what bare `Engine::submit` uses.
+    #[default]
+    Normal,
+    /// Throughput traffic that tolerates queueing (offline scoring,
+    /// backfill): drained when the other lanes are empty or aged.
+    Batch,
+}
+
+impl Priority {
+    /// All lanes, drain order (High first).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Batch];
+    /// Number of lanes (array dimension for per-lane state).
+    pub const COUNT: usize = 3;
+
+    /// Lane index in drain order (High = 0).
+    pub fn idx(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI `--priority` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "batch" => Ok(Priority::Batch),
+            other => bail!("unknown priority {other:?} (want high|normal|batch)"),
+        }
+    }
+}
+
+/// Per-request QoS options for `Engine::submit_opts` /
+/// `Engine::try_submit_opts`.  The default (`Normal`, no deadline) is
+/// exactly what the bare `submit` / `try_submit` wrappers use, so
+/// pre-QoS callers are unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Serve-by budget measured from submission.  A request still queued
+    /// when its deadline passes is shed before execution and completes
+    /// with [`Outcome::DeadlineExceeded`]; a request already popped into
+    /// a batch runs to completion.  `None` = never shed.
+    pub deadline: Option<Duration>,
+    /// Which lane the request queues in.
+    pub priority: Priority,
+}
+
+impl SubmitOptions {
+    pub fn with_priority(priority: Priority) -> Self {
+        Self {
+            priority,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_deadline(deadline: Duration) -> Self {
+        Self {
+            deadline: Some(deadline),
+            ..Self::default()
+        }
+    }
+}
+
+/// How a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Executed on the backend; `logits`/`argmax` are meaningful.
+    Served,
+    /// Shed before execution because its deadline expired while queued:
+    /// `logits` is empty and no photonic energy was charged.
+    DeadlineExceeded,
+}
+
+/// Per-model batching + QoS knobs.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub max_batch: usize,
+    /// Maximum straggler wait when forming a batch.  With
+    /// `adaptive_window` set this is the ceiling the adaptive policy
+    /// works under; otherwise it is the fixed wait (pre-QoS behavior).
     pub batch_window: Duration,
     pub queue_cap: usize,
+    /// Starvation guard: a lane head that has waited at least this long
+    /// is drained before higher-priority lanes (oldest promoted head
+    /// first).  `Duration::ZERO` degenerates to strict oldest-first
+    /// (FIFO by arrival across lanes).
+    pub promote_after: Duration,
+    /// Adaptive straggler window (default): scale the wait to the
+    /// observed arrival rate — wait just long enough to fill `max_batch`
+    /// under pressure, drain immediately when arrivals are slower than
+    /// `batch_window`.  `false` restores the fixed window.
+    pub adaptive_window: bool,
 }
 
 impl Default for ServeConfig {
@@ -94,6 +210,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_window: Duration::from_micros(200),
             queue_cap: 1024,
+            promote_after: Duration::from_millis(25),
+            adaptive_window: true,
         }
     }
 }
@@ -102,7 +220,10 @@ impl Default for ServeConfig {
 pub(crate) struct PendingReq {
     pub(crate) id: u64,
     input: Vec<f32>,
-    enqueued: Instant,
+    pub(crate) enqueued: Instant,
+    pub(crate) priority: Priority,
+    /// Absolute serve-by instant (None = no deadline).
+    pub(crate) deadline: Option<Instant>,
 }
 
 /// One finished request: logits, argmax, and its latency attribution.
@@ -115,9 +236,68 @@ pub struct Completion {
     pub wall_latency: Duration,
     /// Photonic-model latency for this request's share of the batch (s).
     pub photonic_latency_s: f64,
+    /// Lane the request was served (or shed) from.
+    pub priority: Priority,
+    /// Served, or shed with an expired deadline (empty logits).
+    pub outcome: Outcome,
 }
 
-/// Cumulative serving counters for one model (wall + photonic).
+impl Completion {
+    /// The first-class shed outcome: a request whose deadline expired
+    /// while queued completes with this instead of occupying a kernel
+    /// slot.  Empty logits, zero photonic charge.
+    pub fn deadline_exceeded(id: u64, priority: Priority, wall_latency: Duration) -> Self {
+        Self {
+            id,
+            logits: Vec::new(),
+            argmax: 0,
+            wall_latency,
+            photonic_latency_s: 0.0,
+            priority,
+            outcome: Outcome::DeadlineExceeded,
+        }
+    }
+
+    /// `true` when the request actually executed on the backend.
+    pub fn served(&self) -> bool {
+        self.outcome == Outcome::Served
+    }
+}
+
+/// Per-lane serving counters (one entry per [`Priority`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneCounters {
+    /// Requests served (executed on the backend) from this lane.
+    pub completed: u64,
+    /// Requests shed with an expired deadline from this lane.
+    pub shed: u64,
+    /// Pops where this lane's aged head jumped a higher-priority lane
+    /// (the starvation guard firing).
+    pub promoted: u64,
+    /// Executed batches containing at least one request from this lane.
+    pub batches: u64,
+}
+
+impl LaneCounters {
+    /// Achieved batch occupancy for this lane: mean number of this
+    /// lane's requests per batch that contained the lane at all.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+
+    fn merge(&mut self, other: &LaneCounters) {
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.promoted += other.promoted;
+        self.batches += other.batches;
+    }
+}
+
+/// Cumulative serving counters for one model (wall + photonic + QoS).
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     pub completed: u64,
@@ -126,6 +306,12 @@ pub struct ServeMetrics {
     /// photonic charge used the measured per-layer densities instead of
     /// the descriptor's static `act_sparsity`.
     pub measured_batches: u64,
+    /// Requests shed before execution (deadline expired while queued).
+    /// Disjoint from `completed`; shed requests charge no photonic
+    /// energy and never reach the backend.
+    pub shed: u64,
+    /// Per-priority counters, indexed by [`Priority::idx`].
+    pub lanes: [LaneCounters; Priority::COUNT],
     pub total_wall: Duration,
     pub max_wall: Duration,
     /// Time spent inside the backend's batch kernels (the
@@ -191,6 +377,10 @@ impl ServeMetrics {
         self.completed += other.completed;
         self.batches += other.batches;
         self.measured_batches += other.measured_batches;
+        self.shed += other.shed;
+        for (l, o) in self.lanes.iter_mut().zip(&other.lanes) {
+            l.merge(o);
+        }
         self.total_wall += other.total_wall;
         self.max_wall = self.max_wall.max(other.max_wall);
         self.kernel_time += other.kernel_time;
@@ -209,6 +399,85 @@ impl ServeMetrics {
     }
 }
 
+/// Arrival-rate EWMA smoothing factor for the adaptive window.
+const ARRIVAL_EWMA_ALPHA: f64 = 0.25;
+
+/// The per-priority queues plus the arrival-rate estimate the adaptive
+/// window reads — one structure so a single mutex guards all of it.
+#[derive(Debug, Default)]
+struct LaneQueues {
+    lanes: [VecDeque<PendingReq>; Priority::COUNT],
+    len: usize,
+    last_arrival: Option<Instant>,
+    /// EWMA of inter-arrival gaps in nanoseconds (None until two
+    /// arrivals have been observed).
+    ewma_gap_ns: Option<f64>,
+}
+
+impl LaneQueues {
+    fn push(&mut self, r: PendingReq) {
+        self.lanes[r.priority.idx()].push_back(r);
+        self.len += 1;
+    }
+
+    fn note_arrival(&mut self, now: Instant) {
+        if let Some(prev) = self.last_arrival {
+            let gap = now.saturating_duration_since(prev).as_nanos() as f64;
+            self.ewma_gap_ns = Some(match self.ewma_gap_ns {
+                Some(e) => ARRIVAL_EWMA_ALPHA * gap + (1.0 - ARRIVAL_EWMA_ALPHA) * e,
+                None => gap,
+            });
+        }
+        self.last_arrival = Some(now);
+    }
+
+    /// Pop the next request in QoS order: the oldest lane head that has
+    /// waited at least `promote_after` wins (the starvation guard);
+    /// otherwise the highest-priority nonempty lane.  The returned bool
+    /// is `true` when the pop *promoted* a lower lane over a nonempty
+    /// higher one.
+    fn pop_next(&mut self, now: Instant, promote_after: Duration) -> Option<(PendingReq, bool)> {
+        let first_nonempty = self.lanes.iter().position(|l| !l.is_empty())?;
+        let mut pick = first_nonempty;
+        let mut oldest: Option<Instant> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if let Some(front) = lane.front() {
+                if now.saturating_duration_since(front.enqueued) >= promote_after
+                    && oldest.map_or(true, |o| front.enqueued < o)
+                {
+                    oldest = Some(front.enqueued);
+                    pick = i;
+                }
+            }
+        }
+        let promoted = pick > first_nonempty;
+        let r = self.lanes[pick].pop_front().expect("picked lane nonempty");
+        self.len -= 1;
+        Some((r, promoted))
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        for lane in &mut self.lanes {
+            if let Some(pos) = lane.iter().position(|r| r.id == id) {
+                lane.remove(pos);
+                self.len -= 1;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// One `pop_batch` result: the requests to execute, the requests shed
+/// with expired deadlines (complete them, don't run them), and how many
+/// pops the starvation guard promoted per lane.
+#[derive(Debug, Default)]
+pub(crate) struct Popped {
+    pub(crate) batch: Vec<PendingReq>,
+    pub(crate) shed: Vec<PendingReq>,
+    pub(crate) promoted: [u64; Priority::COUNT],
+}
+
 /// The router: synchronous submission API over an internal batcher.
 ///
 /// At construction the model is compiled **once** into a
@@ -223,7 +492,7 @@ pub(crate) struct Router {
     /// Architecture the plans compile against (kept so measured-density
     /// batches can be recharged against a per-batch compiled plan).
     arch: SonicConfig,
-    queue: Mutex<VecDeque<PendingReq>>,
+    queue: Mutex<LaneQueues>,
     notify: Condvar,
     /// Set at engine shutdown: pop_batch stops waiting for work or
     /// stragglers and drains whatever is queued.
@@ -245,7 +514,7 @@ impl Router {
             cfg,
             model,
             arch,
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(LaneQueues::default()),
             notify: Condvar::new(),
             closed: AtomicBool::new(false),
             plan,
@@ -269,8 +538,15 @@ impl Router {
     /// Enqueue a request under a caller-allocated id (the Engine owns id
     /// allocation so it can register the completion slot first).  With
     /// `block`, waits for queue space (backpressure); otherwise returns
-    /// `Ok(false)` when the queue is full.
-    pub(crate) fn submit_with_id(&self, id: u64, input: Vec<f32>, block: bool) -> Result<bool> {
+    /// `Ok(false)` when the queue is full.  `opts` selects the lane and
+    /// the optional serve-by deadline.
+    pub(crate) fn submit_with_id(
+        &self,
+        id: u64,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+        block: bool,
+    ) -> Result<bool> {
         if input.len() != self.backend.input_len() {
             bail!(
                 "bad input length {} (model {:?} wants {})",
@@ -279,8 +555,16 @@ impl Router {
                 self.backend.input_len()
             );
         }
+        // The deadline budget and the wall/aging clock start *here*, at
+        // submission — time spent blocked on a full queue (backpressure)
+        // counts against the request, so an overloaded engine sheds it
+        // instead of serving it late with an understated latency.
+        let submitted = Instant::now();
+        // checked_add: a Duration::MAX deadline must mean "never", not
+        // an Instant-overflow panic on the submit path.
+        let deadline = opts.deadline.and_then(|d| submitted.checked_add(d));
         let mut q = self.queue.lock().unwrap();
-        while q.len() >= self.cfg.queue_cap {
+        while q.len >= self.cfg.queue_cap {
             // Re-check on every wake: after close() no worker will ever
             // pop again, so a submitter blocked on a full queue must bail
             // out instead of waiting forever.
@@ -292,26 +576,30 @@ impl Router {
             }
             q = self.notify.wait(q).unwrap();
         }
-        q.push_back(PendingReq {
+        // The arrival-rate EWMA reads *admission* gaps (post-wait): it
+        // paces the batcher by the stream it can actually drain.
+        q.note_arrival(Instant::now());
+        q.push(PendingReq {
             id,
             input,
-            enqueued: Instant::now(),
+            enqueued: submitted,
+            priority: opts.priority,
+            deadline,
         });
         self.notify.notify_all();
         Ok(true)
     }
 
     pub(crate) fn queue_depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.queue.lock().unwrap().len
     }
 
     /// Remove a still-queued request (shutdown racing a submit).  `false`
-    /// means a worker already popped it — it will be executed and its
-    /// completion slot filled normally.
+    /// means a worker already popped it — it will be executed (or shed)
+    /// and its completion slot filled normally.
     pub(crate) fn retract(&self, id: u64) -> bool {
         let mut q = self.queue.lock().unwrap();
-        if let Some(pos) = q.iter().position(|r| r.id == id) {
-            q.remove(pos);
+        if q.remove(id) {
             self.notify.notify_all();
             true
         } else {
@@ -328,27 +616,68 @@ impl Router {
         self.notify.notify_all();
     }
 
-    /// Pop one batch (up to max_batch, waiting batch_window for
-    /// stragglers).  While the queue is empty this **blocks** on the
+    /// Straggler wait for the batch being formed, given the queue state
+    /// at first pop.  Fixed `batch_window` when adaptivity is off or no
+    /// arrival history exists; otherwise just long enough to fill
+    /// `max_batch` at the observed arrival rate (capped at
+    /// `batch_window`), collapsing to an immediate drain when arrivals
+    /// are slower than the window (waiting would buy latency, not
+    /// batching).
+    fn window_for(&self, q: &LaneQueues) -> Duration {
+        if self.closed.load(Ordering::SeqCst) || q.len >= self.cfg.max_batch {
+            return Duration::ZERO;
+        }
+        if !self.cfg.adaptive_window {
+            return self.cfg.batch_window;
+        }
+        match q.ewma_gap_ns {
+            // No rate estimate yet: behave like the fixed window.
+            None => self.cfg.batch_window,
+            Some(gap_ns) => {
+                if gap_ns > self.cfg.batch_window.as_nanos() as f64 {
+                    Duration::ZERO
+                } else {
+                    let need = (self.cfg.max_batch - q.len) as f64;
+                    Duration::from_nanos((gap_ns * need) as u64).min(self.cfg.batch_window)
+                }
+            }
+        }
+    }
+
+    /// Pop one batch in QoS order (up to `max_batch`, waiting the
+    /// adaptive straggler window), shedding expired requests as they are
+    /// encountered.  While the queue is empty this **blocks** on the
     /// condvar — an idle engine burns no CPU — until a submission or
-    /// [`Router::close`] arrives; after close it returns an empty vec
+    /// [`Router::close`] arrives; after close it returns an empty pop
     /// once the queue is drained.
-    pub(crate) fn pop_batch(&self) -> Vec<PendingReq> {
-        let mut batch = Vec::new();
+    pub(crate) fn pop_batch(&self) -> Popped {
+        let mut out = Popped::default();
         let mut q = self.queue.lock().unwrap();
-        while q.is_empty() && !self.closed.load(Ordering::SeqCst) {
+        while q.len == 0 && !self.closed.load(Ordering::SeqCst) {
             q = self.notify.wait(q).unwrap();
         }
-        let deadline = Instant::now() + self.cfg.batch_window;
+        let deadline = Instant::now() + self.window_for(&q);
         loop {
-            while batch.len() < self.cfg.max_batch {
-                match q.pop_front() {
-                    Some(r) => batch.push(r),
+            let now = Instant::now();
+            while out.batch.len() < self.cfg.max_batch {
+                match q.pop_next(now, self.cfg.promote_after) {
+                    Some((r, promoted)) => {
+                        if promoted {
+                            out.promoted[r.priority.idx()] += 1;
+                        }
+                        if r.deadline.map_or(false, |d| now >= d) {
+                            out.shed.push(r);
+                        } else {
+                            out.batch.push(r);
+                        }
+                    }
                     None => break,
                 }
             }
-            if batch.len() >= self.cfg.max_batch
-                || batch.is_empty()
+            // An all-shed pop returns immediately: the shed completions
+            // should resolve now, not after a straggler wait.
+            if out.batch.len() >= self.cfg.max_batch
+                || out.batch.is_empty()
                 || self.closed.load(Ordering::SeqCst)
                 || Instant::now() >= deadline
             {
@@ -359,12 +688,33 @@ impl Router {
                 .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
                 .unwrap();
             q = guard;
-            if timeout.timed_out() && q.is_empty() {
+            if timeout.timed_out() && q.len == 0 {
                 break;
             }
         }
         self.notify.notify_all();
-        batch
+        out
+    }
+
+    /// Stamp shed counters and build the [`Outcome::DeadlineExceeded`]
+    /// completions for one pop's expired requests (shared by the engine
+    /// worker loop and the in-crate `drain_batch` test helper).
+    pub(crate) fn shed_completions(
+        shed: &[PendingReq],
+        metrics: &mut ServeMetrics,
+    ) -> Vec<Completion> {
+        let now = Instant::now();
+        shed.iter()
+            .map(|r| {
+                metrics.shed += 1;
+                metrics.lanes[r.priority.idx()].shed += 1;
+                Completion::deadline_exceeded(
+                    r.id,
+                    r.priority,
+                    now.saturating_duration_since(r.enqueued),
+                )
+            })
+            .collect()
     }
 
     /// The backend's per-layer kernel-time breakdown (empty when the
@@ -388,13 +738,13 @@ impl Router {
             return Ok(Vec::new());
         }
         // Pack inputs into the flat batch tensor (lengths were validated
-        // at submit); keep (id, enqueue time) for latency attribution.
+        // at submit); keep (id, enqueue time, lane) for attribution.
         let input_len = self.backend.input_len();
         bufs.inputs.reshape(batch.len(), input_len); // every row copied below
-        let mut metas: Vec<(u64, Instant)> = Vec::with_capacity(batch.len());
+        let mut metas: Vec<(u64, Instant, Priority)> = Vec::with_capacity(batch.len());
         for (b, r) in batch.iter().enumerate() {
             bufs.inputs.row_mut(b).copy_from_slice(&r.input);
-            metas.push((r.id, r.enqueued));
+            metas.push((r.id, r.enqueued, r.priority));
         }
         drop(batch);
         let t0 = Instant::now();
@@ -445,11 +795,14 @@ impl Router {
         metrics.photonic_time_s += batch_latency;
         metrics.photonic_energy_j += batch_energy;
         metrics.batches += 1;
+        let mut lane_in_batch = [0u64; Priority::COUNT];
 
         let mut out = Vec::with_capacity(metas.len());
-        for (i, (id, enqueued)) in metas.into_iter().enumerate() {
+        for (i, (id, enqueued, priority)) in metas.into_iter().enumerate() {
             let wall = done.duration_since(enqueued);
             metrics.completed += 1;
+            metrics.lanes[priority.idx()].completed += 1;
+            lane_in_batch[priority.idx()] += 1;
             metrics.total_wall += wall;
             metrics.max_wall = metrics.max_wall.max(wall);
             let logits = bufs.outputs.row(i).to_vec();
@@ -460,19 +813,32 @@ impl Router {
                 argmax,
                 wall_latency: wall,
                 photonic_latency_s: batch_latency / b,
+                priority,
+                outcome: Outcome::Served,
             });
+        }
+        for (lane, n) in metrics.lanes.iter_mut().zip(lane_in_batch) {
+            if n > 0 {
+                lane.batches += 1;
+            }
         }
         Ok(out)
     }
 
-    /// Pop one batch and execute it.  Returns completions; empty when the
-    /// queue stayed empty.  (Kept for the in-crate unit tests; the Engine
-    /// drives `pop_batch`/`execute_batch` separately so it can fail the
+    /// Pop one batch and execute it, resolving shed requests too.
+    /// Returns completions (served + shed); empty when the queue stayed
+    /// empty.  (Kept for the in-crate unit tests; the Engine drives
+    /// `pop_batch`/`execute_batch` separately so it can fail the
     /// affected tickets when the backend errors.)
     #[cfg(test)]
     pub(crate) fn drain_batch(&self, metrics: &mut ServeMetrics) -> Result<Vec<Completion>> {
-        let batch = self.pop_batch();
-        self.execute_batch(batch, metrics, &mut BatchBuffers::default())
+        let popped = self.pop_batch();
+        for (lane, n) in metrics.lanes.iter_mut().zip(popped.promoted) {
+            lane.promoted += n;
+        }
+        let mut out = Self::shed_completions(&popped.shed, metrics);
+        out.extend(self.execute_batch(popped.batch, metrics, &mut BatchBuffers::default())?);
+        Ok(out)
     }
 }
 
@@ -525,6 +891,10 @@ impl InferenceBackend for NullBackend {
 mod tests {
     use super::*;
 
+    fn dflt() -> SubmitOptions {
+        SubmitOptions::default()
+    }
+
     fn router(max_batch: usize) -> Arc<Router> {
         let model = ModelDesc::builtin("mnist").unwrap();
         let backend = Arc::new(NullBackend {
@@ -539,6 +909,7 @@ mod tests {
                 max_batch,
                 batch_window: Duration::from_millis(5),
                 queue_cap: 64,
+                ..ServeConfig::default()
             },
         )
     }
@@ -546,33 +917,37 @@ mod tests {
     #[test]
     fn single_request_round_trip() {
         let r = router(4);
-        r.submit_with_id(1, vec![1.0; 784], true).unwrap();
+        r.submit_with_id(1, vec![1.0; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         let done = r.drain_batch(&mut m).unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
         assert_eq!(done[0].logits.len(), 10);
+        assert_eq!(done[0].outcome, Outcome::Served);
+        assert_eq!(done[0].priority, Priority::Normal);
         assert_eq!(m.completed, 1);
+        assert_eq!(m.lanes[Priority::Normal.idx()].completed, 1);
     }
 
     #[test]
     fn batching_groups_requests() {
         let r = router(8);
         for i in 0..8 {
-            r.submit_with_id(i + 1, vec![0.5; 784], true).unwrap();
+            r.submit_with_id(i + 1, vec![0.5; 784], dflt(), true).unwrap();
         }
         let mut m = ServeMetrics::default();
         let done = r.drain_batch(&mut m).unwrap();
         assert_eq!(done.len(), 8);
         assert_eq!(m.batches, 1);
         assert!((m.mean_batch() - 8.0).abs() < 1e-12);
+        assert!((m.lanes[Priority::Normal.idx()].mean_batch() - 8.0).abs() < 1e-12);
     }
 
     #[test]
     fn batch_capped_at_max() {
         let r = router(4);
         for i in 0..10 {
-            r.submit_with_id(i + 1, vec![0.0; 784], true).unwrap();
+            r.submit_with_id(i + 1, vec![0.0; 784], dflt(), true).unwrap();
         }
         let mut m = ServeMetrics::default();
         let first = r.drain_batch(&mut m).unwrap();
@@ -592,8 +967,8 @@ mod tests {
     #[test]
     fn photonic_accounting_accumulates() {
         let r = router(2);
-        r.submit_with_id(1, vec![0.1; 784], true).unwrap();
-        r.submit_with_id(2, vec![0.2; 784], true).unwrap();
+        r.submit_with_id(1, vec![0.1; 784], dflt(), true).unwrap();
+        r.submit_with_id(2, vec![0.2; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         r.drain_batch(&mut m).unwrap();
         assert!(m.photonic_time_s > 0.0);
@@ -606,13 +981,13 @@ mod tests {
     fn batch_amortizes_photonic_latency() {
         // 2-request batch must cost < 2x single-request photonic latency
         let r1 = router(1);
-        r1.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        r1.submit_with_id(1, vec![0.0; 784], dflt(), true).unwrap();
         let mut m1 = ServeMetrics::default();
         r1.drain_batch(&mut m1).unwrap();
 
         let r2 = router(2);
-        r2.submit_with_id(1, vec![0.0; 784], true).unwrap();
-        r2.submit_with_id(2, vec![0.0; 784], true).unwrap();
+        r2.submit_with_id(1, vec![0.0; 784], dflt(), true).unwrap();
+        r2.submit_with_id(2, vec![0.0; 784], dflt(), true).unwrap();
         let mut m2 = ServeMetrics::default();
         r2.drain_batch(&mut m2).unwrap();
 
@@ -622,7 +997,7 @@ mod tests {
     #[test]
     fn wrong_input_length_is_an_error_not_a_panic() {
         let e = router(1)
-            .submit_with_id(1, vec![0.0; 3], true)
+            .submit_with_id(1, vec![0.0; 3], dflt(), true)
             .unwrap_err();
         assert!(e.to_string().contains("bad input length"), "{e}");
     }
@@ -642,12 +1017,176 @@ mod tests {
                 max_batch: 4,
                 batch_window: Duration::from_millis(1),
                 queue_cap: 2,
+                ..ServeConfig::default()
             },
         );
-        assert!(r.submit_with_id(1, vec![0.0; 784], false).unwrap());
-        assert!(r.submit_with_id(2, vec![0.0; 784], false).unwrap());
+        assert!(r.submit_with_id(1, vec![0.0; 784], dflt(), false).unwrap());
+        assert!(r.submit_with_id(2, vec![0.0; 784], dflt(), false).unwrap());
         // queue full: non-blocking submit must refuse rather than wait
-        assert!(!r.submit_with_id(3, vec![0.0; 784], false).unwrap());
+        assert!(!r.submit_with_id(3, vec![0.0; 784], dflt(), false).unwrap());
+    }
+
+    #[test]
+    fn priority_lanes_drain_high_first() {
+        // Pre-fill all three lanes, then drain: High before Normal before
+        // Batch, FIFO within each lane (promote_after is the 25ms default,
+        // far beyond this test's lifetime).
+        let r = router(8);
+        r.submit_with_id(1, vec![0.0; 784], SubmitOptions::with_priority(Priority::Batch), true)
+            .unwrap();
+        r.submit_with_id(2, vec![0.0; 784], dflt(), true).unwrap();
+        r.submit_with_id(3, vec![0.0; 784], SubmitOptions::with_priority(Priority::High), true)
+            .unwrap();
+        r.submit_with_id(4, vec![0.0; 784], SubmitOptions::with_priority(Priority::High), true)
+            .unwrap();
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![3, 4, 2, 1], "drain order is not high-first FIFO");
+        assert_eq!(m.lanes[Priority::High.idx()].completed, 2);
+        assert_eq!(m.lanes[Priority::Batch.idx()].completed, 1);
+        // no promotion happened: high lanes were legitimately first
+        assert_eq!(m.lanes[Priority::Batch.idx()].promoted, 0);
+    }
+
+    #[test]
+    fn starvation_guard_zero_promote_is_fifo_by_age() {
+        // promote_after == ZERO degenerates to oldest-first across lanes:
+        // the Batch request submitted first is served first even though
+        // the High lane is populated, and the promotion is counted.
+        let model = ModelDesc::builtin("mnist").unwrap();
+        let backend = Arc::new(NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        });
+        let r = Router::new(
+            backend,
+            model,
+            SonicConfig::paper_best(),
+            ServeConfig {
+                max_batch: 8,
+                batch_window: Duration::from_millis(5),
+                queue_cap: 64,
+                promote_after: Duration::ZERO,
+                ..ServeConfig::default()
+            },
+        );
+        r.submit_with_id(1, vec![0.0; 784], SubmitOptions::with_priority(Priority::Batch), true)
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        r.submit_with_id(2, vec![0.0; 784], SubmitOptions::with_priority(Priority::High), true)
+            .unwrap();
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![1, 2], "aged Batch head must drain first");
+        assert!(
+            m.lanes[Priority::Batch.idx()].promoted >= 1,
+            "promotion not counted: {:?}",
+            m.lanes
+        );
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_deadline_exceeded() {
+        let r = router(4);
+        r.submit_with_id(1, vec![0.3; 784], SubmitOptions::with_deadline(Duration::ZERO), true)
+            .unwrap();
+        r.submit_with_id(2, vec![0.3; 784], dflt(), true).unwrap();
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 2);
+        let shed = done.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(shed.outcome, Outcome::DeadlineExceeded);
+        assert!(shed.logits.is_empty());
+        assert_eq!(shed.photonic_latency_s, 0.0);
+        let served = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(served.outcome, Outcome::Served);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.completed, 1, "shed request must not count as completed");
+        assert_eq!(m.lanes[Priority::Normal.idx()].shed, 1);
+        // the shed request charged no photonic energy: totals equal a
+        // single-request batch
+        assert_eq!(m.photonic_energy_j, r.plan().batch_energy_j(1));
+    }
+
+    #[test]
+    fn all_shed_pop_returns_without_straggler_wait() {
+        let r = router(8);
+        r.submit_with_id(1, vec![0.0; 784], SubmitOptions::with_deadline(Duration::ZERO), true)
+            .unwrap();
+        let mut m = ServeMetrics::default();
+        let t0 = Instant::now();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, Outcome::DeadlineExceeded);
+        assert_eq!(m.batches, 0, "no backend batch for an all-shed pop");
+        // must not have waited the 5ms straggler window for stragglers
+        assert!(t0.elapsed() < Duration::from_millis(5), "shed pop waited");
+    }
+
+    #[test]
+    fn adaptive_window_policy() {
+        let r = router(4);
+        {
+            // no arrival history: fixed window
+            let q = r.queue.lock().unwrap();
+            assert_eq!(r.window_for(&q), r.cfg.batch_window);
+        }
+        {
+            // arrivals slower than the window: immediate drain
+            let mut q = r.queue.lock().unwrap();
+            q.ewma_gap_ns = Some(1e9); // 1s gaps
+            assert_eq!(r.window_for(&q), Duration::ZERO);
+            // sustained pressure: wait ~gap * need, capped at the window
+            q.ewma_gap_ns = Some(1_000.0); // 1us gaps
+            let w = r.window_for(&q);
+            assert!(w > Duration::ZERO && w <= r.cfg.batch_window, "{w:?}");
+            // a full queue drains immediately regardless
+            for i in 0..4 {
+                q.push(PendingReq {
+                    id: i,
+                    input: vec![],
+                    enqueued: Instant::now(),
+                    priority: Priority::Normal,
+                    deadline: None,
+                });
+            }
+            assert_eq!(r.window_for(&q), Duration::ZERO);
+        }
+        {
+            // adaptivity off: always the fixed window
+            let model = ModelDesc::builtin("mnist").unwrap();
+            let fixed = Router::new(
+                Arc::new(NullBackend {
+                    input_len: 784,
+                    n_classes: 10,
+                }),
+                model,
+                SonicConfig::paper_best(),
+                ServeConfig {
+                    adaptive_window: false,
+                    ..ServeConfig::default()
+                },
+            );
+            let mut q = fixed.queue.lock().unwrap();
+            q.ewma_gap_ns = Some(1e9);
+            assert_eq!(fixed.window_for(&q), fixed.cfg.batch_window);
+        }
+    }
+
+    #[test]
+    fn retract_searches_all_lanes() {
+        let r = router(4);
+        r.submit_with_id(1, vec![0.0; 784], SubmitOptions::with_priority(Priority::Batch), true)
+            .unwrap();
+        r.submit_with_id(2, vec![0.0; 784], SubmitOptions::with_priority(Priority::High), true)
+            .unwrap();
+        assert!(r.retract(1));
+        assert!(!r.retract(1), "double retract must miss");
+        assert_eq!(r.queue_depth(), 1);
+        assert!(r.retract(2));
+        assert_eq!(r.queue_depth(), 0);
     }
 
     #[test]
@@ -672,7 +1211,7 @@ mod tests {
             SonicConfig::paper_best(),
             ServeConfig::default(),
         );
-        r.submit_with_id(1, vec![0.0; 784], true).unwrap();
+        r.submit_with_id(1, vec![0.0; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         let done = r.drain_batch(&mut m).unwrap();
         assert_eq!(done.len(), 1);
@@ -726,10 +1265,11 @@ mod tests {
                 max_batch: 2,
                 batch_window: Duration::from_millis(1),
                 queue_cap: 8,
+                ..ServeConfig::default()
             },
         );
-        r.submit_with_id(1, vec![0.0; 784], true).unwrap();
-        r.submit_with_id(2, vec![0.0; 784], true).unwrap();
+        r.submit_with_id(1, vec![0.0; 784], dflt(), true).unwrap();
+        r.submit_with_id(2, vec![0.0; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         r.drain_batch(&mut m).unwrap();
         assert_eq!(m.batches, 1);
@@ -751,7 +1291,7 @@ mod tests {
     #[test]
     fn unmeasured_backend_still_charges_the_static_plan() {
         let r = router(2);
-        r.submit_with_id(1, vec![0.1; 784], true).unwrap();
+        r.submit_with_id(1, vec![0.1; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         r.drain_batch(&mut m).unwrap();
         assert_eq!(m.measured_batches, 0);
@@ -765,18 +1305,22 @@ mod tests {
     #[test]
     fn kernel_time_counts_batches() {
         let r = router(4);
-        r.submit_with_id(1, vec![1.0; 784], true).unwrap();
-        r.submit_with_id(2, vec![1.0; 784], true).unwrap();
+        r.submit_with_id(1, vec![1.0; 784], dflt(), true).unwrap();
+        r.submit_with_id(2, vec![1.0; 784], dflt(), true).unwrap();
         let mut m = ServeMetrics::default();
         r.drain_batch(&mut m).unwrap();
         assert_eq!(m.batches, 1);
         // mean per batch is the whole counter for a single batch
         assert_eq!(m.mean_batch_kernel_time(), m.kernel_time);
-        // merge folds kernel time like the other counters
+        // merge folds kernel time and lane counters like the others
         let mut total = ServeMetrics::default();
         total.merge(&m);
         total.merge(&m);
         assert_eq!(total.kernel_time, m.kernel_time * 2);
+        assert_eq!(
+            total.lanes[Priority::Normal.idx()].completed,
+            2 * m.lanes[Priority::Normal.idx()].completed
+        );
     }
 
     #[test]
@@ -807,7 +1351,7 @@ mod tests {
             let rc = Arc::clone(&r);
             handles.push(std::thread::spawn(move || {
                 for i in 0..5u64 {
-                    rc.submit_with_id(t * 5 + i + 1, vec![0.3; 784], true)
+                    rc.submit_with_id(t * 5 + i + 1, vec![0.3; 784], SubmitOptions::default(), true)
                         .unwrap();
                 }
             }));
@@ -821,5 +1365,13 @@ mod tests {
             total += r.drain_batch(&mut m).unwrap().len();
         }
         assert_eq!(m.completed, 20);
+    }
+
+    #[test]
+    fn priority_parse_round_trips() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
     }
 }

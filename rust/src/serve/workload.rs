@@ -1,6 +1,7 @@
 //! Synthetic serving workloads + report printing, shared by the CLI
-//! (`sonic serve`) and `examples/sparse_serving.rs` so the Poisson
-//! producer and the serving report exist exactly once.
+//! (`sonic serve`), `examples/sparse_serving.rs`, and the QoS benches so
+//! the Poisson/bursty producers and the serving report exist exactly
+//! once.
 
 use std::time::Duration;
 
@@ -10,17 +11,22 @@ use crate::util::si;
 
 use super::engine::Engine;
 use super::metrics::ModelMetrics;
-use super::router::Completion;
+use super::router::{Completion, Priority, SubmitOptions};
+
+/// Producers cap individual sleeps here so low rates stay responsive.
+const MAX_SLEEP: Duration = Duration::from_millis(50);
 
 /// A seeded Poisson request stream: exponential inter-arrival times at
-/// `rate` req/s (sleeps capped at 50 ms so low rates stay responsive),
-/// submitting `requests` random normal frames.
+/// `rate` req/s, submitting `requests` random normal frames with the
+/// given per-request QoS options.
 #[derive(Debug, Clone)]
 pub struct PoissonWorkload {
     pub requests: usize,
     /// Mean arrival rate in requests/second.
     pub rate: f64,
     pub seed: u64,
+    /// QoS options (lane + deadline) applied to every request.
+    pub opts: SubmitOptions,
 }
 
 impl Default for PoissonWorkload {
@@ -29,6 +35,7 @@ impl Default for PoissonWorkload {
             requests: 96,
             rate: 400.0,
             seed: 7,
+            opts: SubmitOptions::default(),
         }
     }
 }
@@ -43,22 +50,148 @@ impl PoissonWorkload {
         let mut rng = Rng::new(self.seed);
         let mut tickets = Vec::with_capacity(self.requests);
         for _ in 0..self.requests {
-            let dt = rng.exp(self.rate);
-            std::thread::sleep(Duration::from_secs_f64(dt.min(0.05)));
-            tickets.push(engine.submit(model, rng.normal_vec(per))?);
+            // clamp in f64 space: an extreme draw (or rate = 0 -> inf)
+            // must not panic Duration::from_secs_f64
+            let dt = rng.exp(self.rate).min(MAX_SLEEP.as_secs_f64());
+            std::thread::sleep(Duration::from_secs_f64(dt));
+            tickets.push(engine.submit_opts(model, rng.normal_vec(per), self.opts)?);
         }
         tickets.into_iter().map(|t| t.wait()).collect()
     }
 }
 
+/// An on/off (Markov-modulated) Poisson stream: bursts arrive at
+/// `on_rate` for an exponentially-distributed `mean_on` sojourn, then the
+/// source goes quiet (`off_rate`, usually 0) for `mean_off` — the
+/// canonical overload shape for exercising load shedding, deadline
+/// expiry, and the adaptive batch window offline.
+#[derive(Debug, Clone)]
+pub struct BurstyWorkload {
+    pub requests: usize,
+    /// Arrival rate during a burst (req/s).
+    pub on_rate: f64,
+    /// Arrival rate between bursts (req/s; 0 = silent).
+    pub off_rate: f64,
+    /// Mean burst duration (exponential sojourn).
+    pub mean_on: Duration,
+    /// Mean quiet-period duration (exponential sojourn).
+    pub mean_off: Duration,
+    pub seed: u64,
+    /// QoS options (lane + deadline) applied to every request.
+    pub opts: SubmitOptions,
+    /// `true`: blocking `submit` (backpressure throttles the burst).
+    /// `false`: `try_submit` — a full queue sheds the request at the
+    /// door, counted in [`WorkloadRun::rejected`].
+    pub block: bool,
+}
+
+impl Default for BurstyWorkload {
+    fn default() -> Self {
+        Self {
+            requests: 96,
+            on_rate: 4000.0,
+            off_rate: 0.0,
+            mean_on: Duration::from_millis(10),
+            mean_off: Duration::from_millis(20),
+            seed: 7,
+            opts: SubmitOptions::default(),
+            block: false,
+        }
+    }
+}
+
+/// What driving a workload produced: every resolved completion (served
+/// *and* deadline-shed) plus the requests refused at the door by a full
+/// queue (non-blocking submission only).
+#[derive(Debug)]
+pub struct WorkloadRun {
+    pub completions: Vec<Completion>,
+    pub rejected: u64,
+}
+
+impl WorkloadRun {
+    /// Completions that actually executed on the backend.
+    pub fn served(&self) -> usize {
+        self.completions.iter().filter(|c| c.served()).count()
+    }
+
+    /// Completions shed with an expired deadline.
+    pub fn deadline_shed(&self) -> usize {
+        self.completions.len() - self.served()
+    }
+}
+
+impl BurstyWorkload {
+    /// Drive the on/off stream against one model and wait for every
+    /// accepted request to resolve (served or deadline-shed — a ticket
+    /// may never hang).  Sleeps are capped at 50 ms so extreme phase
+    /// draws stay responsive.
+    pub fn drive(&self, engine: &Engine, model: &str) -> Result<WorkloadRun> {
+        // a source that can never arrive would loop flipping phases forever
+        if self.on_rate <= 0.0 && self.off_rate <= 0.0 {
+            return Ok(WorkloadRun {
+                completions: Vec::new(),
+                rejected: 0,
+            });
+        }
+        let per = engine.input_len(model)?;
+        let mut rng = Rng::new(self.seed);
+        let mut tickets = Vec::with_capacity(self.requests);
+        let mut rejected = 0u64;
+        let mut on = true;
+        let mut phase_left = rng.exp(1.0 / self.mean_on.as_secs_f64().max(1e-9));
+        let mut sent = 0usize;
+        while sent < self.requests {
+            let rate = if on { self.on_rate } else { self.off_rate };
+            let dt = if rate > 0.0 { rng.exp(rate) } else { f64::INFINITY };
+            if dt >= phase_left {
+                // phase expires before the next arrival: flip on/off
+                // (sleeps clamp in f64 space — no from_secs_f64 panics)
+                std::thread::sleep(Duration::from_secs_f64(
+                    phase_left.min(MAX_SLEEP.as_secs_f64()).max(0.0),
+                ));
+                on = !on;
+                let mean = if on { self.mean_on } else { self.mean_off };
+                phase_left = rng.exp(1.0 / mean.as_secs_f64().max(1e-9));
+                continue;
+            }
+            phase_left -= dt;
+            std::thread::sleep(Duration::from_secs_f64(dt.min(MAX_SLEEP.as_secs_f64())));
+            let input = rng.normal_vec(per);
+            if self.block {
+                tickets.push(engine.submit_opts(model, input, self.opts)?);
+            } else {
+                match engine.try_submit_opts(model, input, self.opts)? {
+                    Some(t) => tickets.push(t),
+                    None => rejected += 1,
+                }
+            }
+            sent += 1;
+        }
+        let completions = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(WorkloadRun {
+            completions,
+            rejected,
+        })
+    }
+}
+
 /// Print the canonical serving report for one model: wall-clock section
-/// (throughput, mean/p50/p95/p99/max latency) and the photonic section
-/// (FPS, FPS/W, EPB, energy) — shared by `sonic serve` and the examples.
-/// Per-layer lines carry the **measured** activation density (`d=`) when
-/// the backend tracks it; the photonic numbers are then charged with it.
+/// (throughput, mean/p50/p95/p99/max latency), the QoS section (per-lane
+/// served/shed/promoted + percentiles, printed when any non-Normal lane
+/// or shedding saw traffic), and the photonic section (FPS, FPS/W, EPB,
+/// energy) — shared by `sonic serve` and the examples.  Per-layer lines
+/// carry the **measured** activation density (`d=`) when the backend
+/// tracks it; the photonic numbers are then charged with it.
 pub fn print_report(m: &ModelMetrics) {
     println!("== serving report: {} ({} backend) ==", m.model, m.backend);
     println!("  completed          {}", m.serve.completed);
+    if m.serve.shed > 0 {
+        println!("  shed (deadline)    {}", m.serve.shed);
+    }
     println!("  batches            {}", m.serve.batches);
     if m.serve.measured_batches > 0 {
         println!(
@@ -92,6 +225,13 @@ pub fn print_report(m: &ModelMetrics) {
     println!("  p95 wall latency   {:?}", m.p95);
     println!("  p99 wall latency   {:?}", m.p99);
     println!("  max wall latency   {:?}", m.serve.max_wall);
+    if m.serve.shed > 0
+        || m.lanes.iter().any(|l| {
+            l.priority != Priority::Normal && (l.completed > 0 || l.shed > 0)
+        })
+    {
+        print_lane_report(m);
+    }
     println!("  photonic FPS       {:.0}", m.serve.photonic_fps());
     println!("  photonic FPS/W     {:.1}", m.serve.photonic_fps_per_watt());
     println!("  photonic EPB       {}", si(m.photonic_epb_j, "J/b"));
@@ -99,4 +239,25 @@ pub fn print_report(m: &ModelMetrics) {
         "  photonic energy    {}",
         si(m.serve.photonic_energy_j, "J")
     );
+}
+
+/// Print the per-priority lane table for one model: served/shed/promoted
+/// counts, achieved batch occupancy, and per-lane latency percentiles.
+pub fn print_lane_report(m: &ModelMetrics) {
+    println!("  -- QoS lanes --");
+    for l in &m.lanes {
+        if l.completed == 0 && l.shed == 0 {
+            continue;
+        }
+        println!(
+            "    {:<6} served {:<6} shed {:<5} promoted {:<4} batch {:>5.2}  p50 {:?}  p99 {:?}",
+            l.priority.as_str(),
+            l.completed,
+            l.shed,
+            l.promoted,
+            l.mean_batch,
+            l.p50,
+            l.p99,
+        );
+    }
 }

@@ -102,7 +102,11 @@ impl Bencher {
 
 fn stats_from(samples: &mut [f64]) -> Stats {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-last total order: a single NaN sample (e.g. a zero-duration
+    // division upstream) must not panic the whole bench run the way
+    // `partial_cmp().unwrap()` did — it sorts to the end and shows up as
+    // a NaN max/mean instead of an abort.
+    samples.sort_by(|a, b| a.is_nan().cmp(&b.is_nan()).then_with(|| a.total_cmp(b)));
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -218,6 +222,22 @@ mod tests {
         assert_eq!(st.min_ns, 1.0);
         assert_eq!(st.max_ns, 100.0);
         assert!((st.mean_ns - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_the_stats() {
+        // regression: partial_cmp().unwrap() panicked on any NaN sample
+        let mut s = vec![3.0, f64::NAN, 1.0, 2.0];
+        let st = stats_from(&mut s);
+        assert_eq!(st.samples, 4);
+        // NaN sorts last: the finite order statistics stay meaningful
+        assert_eq!(st.min_ns, 1.0);
+        assert_eq!(st.median_ns, 3.0);
+        assert!(st.max_ns.is_nan(), "NaN must sort last, not first");
+        // and negative NaN bit patterns sort last too
+        let mut s2 = vec![f64::from_bits(f64::NAN.to_bits() | (1 << 63)), 5.0];
+        let st2 = stats_from(&mut s2);
+        assert_eq!(st2.min_ns, 5.0);
     }
 
     #[test]

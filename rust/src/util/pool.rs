@@ -23,6 +23,9 @@ pub struct Pool {
     workers: Vec<JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
     n_workers: usize,
+    /// Set by [`Pool::close`]: further submissions are refused (no-op)
+    /// instead of aborting the process.
+    closed: AtomicBool,
 }
 
 impl Pool {
@@ -63,7 +66,22 @@ impl Pool {
             workers: handles,
             in_flight,
             n_workers: workers,
+            closed: AtomicBool::new(false),
         }
+    }
+
+    /// Stop accepting work: every later [`Pool::submit`] /
+    /// [`Pool::try_submit`] is a refused no-op (returns `false`) and
+    /// [`Pool::scoped`] falls back to running its jobs inline on the
+    /// caller's thread.  Jobs already queued still run; `close` does not
+    /// join the workers (dropping the pool does).  Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+    }
+
+    /// `true` after [`Pool::close`].
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 
     /// Number of worker threads (the natural shard count for
@@ -72,25 +90,52 @@ impl Pool {
         self.n_workers
     }
 
-    /// Submit a job, blocking when the queue is full (backpressure).
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Submit a boxed job, blocking when the queue is full
+    /// (backpressure).  Returns the job back instead of running it when
+    /// the pool is closed or its workers are gone — the caller decides
+    /// whether to drop it or run it inline ([`Pool::scoped`] does the
+    /// latter so its barrier contract holds).
+    fn submit_boxed(&self, job: Job) -> Result<(), Job> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(job);
+        }
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(job);
+        };
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("workers gone");
+        match tx.send(job) {
+            Ok(()) => Ok(()),
+            // Workers gone (all exited): hand the job back rather than
+            // aborting the process — the old `.expect("workers gone")`
+            // turned a shutdown race into an abort.
+            Err(e) => {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                Err(e.0)
+            }
+        }
     }
 
-    /// Try to submit without blocking; returns false when saturated.
+    /// Submit a job, blocking when the queue is full (backpressure).
+    /// Returns `false` (a documented no-op — the job is dropped unrun)
+    /// when the pool has been [`Pool::close`]d or its workers are gone,
+    /// so a late submission racing shutdown can never panic the process.
+    #[must_use = "the job is dropped unrun when the pool is closed"]
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        self.submit_boxed(Box::new(f)).is_ok()
+    }
+
+    /// Try to submit without blocking; returns false when saturated (or
+    /// closed — same no-op contract as [`Pool::submit`]).
+    #[must_use = "the job is dropped unrun when the pool is closed or saturated"]
     pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        if self.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        let Some(tx) = self.tx.as_ref() else {
+            return false;
+        };
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        match self
-            .tx
-            .as_ref()
-            .expect("pool shut down")
-            .try_send(Box::new(f))
-        {
+        match tx.try_send(Box::new(f)) {
             Ok(()) => true,
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
                 self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -155,10 +200,19 @@ impl Pool {
             let job: Box<dyn FnOnce() + Send + 'static> =
                 unsafe { std::mem::transmute(job) };
             let st = Arc::clone(&state);
-            self.submit(move || {
+            let wrapped: Job = Box::new(move || {
                 let _g = Guard(st);
                 job();
             });
+            // A closed pool (shutdown racing a late batch) refuses the
+            // job: run it inline on the caller's thread instead, so every
+            // job still completes before `scoped` returns and the borrow
+            // contract holds.  catch_unwind keeps an inline panic from
+            // escaping before the barrier below — the Guard records it
+            // and the post-barrier check re-raises, same as pooled jobs.
+            if let Err(refused) = self.submit_boxed(wrapped) {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(refused));
+            }
         }
         let mut left = state.left.lock().unwrap();
         while *left > 0 {
@@ -206,9 +260,9 @@ mod tests {
         let counter = Arc::new(AtomicU64::new(0));
         for _ in 0..100 {
             let c = Arc::clone(&counter);
-            pool.submit(move || {
+            assert!(pool.submit(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            }));
         }
         pool.drain();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -221,9 +275,9 @@ mod tests {
         let guard = gate.lock().unwrap();
         // first job blocks on the gate; queue then fills
         let g2 = Arc::clone(&gate);
-        pool.submit(move || {
+        assert!(pool.submit(move || {
             let _guard = g2.lock().unwrap();
-        });
+        }));
         // Fill the 1-slot queue (may need a moment for the worker to pick
         // up the first job).
         let mut saturated = false;
@@ -241,7 +295,7 @@ mod tests {
     #[test]
     fn drop_joins_workers() {
         let pool = Pool::new(2, 4);
-        pool.submit(|| {});
+        assert!(pool.submit(|| {}));
         drop(pool); // must not hang
     }
 
@@ -266,7 +320,7 @@ mod tests {
         with_silenced_panics(|| {
             let pool = Pool::new(2, 8);
             for _ in 0..4 {
-                pool.submit(|| panic!("job blew up"));
+                assert!(pool.submit(|| panic!("job blew up")));
             }
             pool.drain(); // would spin forever if a panic leaked the counter
             assert_eq!(pool.pending(), 0);
@@ -275,12 +329,64 @@ mod tests {
             let counter = Arc::new(AtomicU64::new(0));
             for _ in 0..8 {
                 let c = Arc::clone(&counter);
-                pool.submit(move || {
+                assert!(pool.submit(move || {
                     c.fetch_add(1, Ordering::SeqCst);
-                });
+                }));
             }
             pool.drain();
             assert_eq!(counter.load(Ordering::SeqCst), 8);
+        });
+    }
+
+    #[test]
+    fn submit_after_close_is_a_refused_no_op() {
+        // regression: submission racing shutdown used to hit
+        // `.expect("pool shut down")` / `.expect("workers gone")` and
+        // abort the process
+        let pool = Pool::new(2, 8);
+        assert!(pool.submit(|| {}));
+        pool.drain();
+        pool.close();
+        assert!(pool.is_closed());
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        assert!(!pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert!(!pool.try_submit(|| {}));
+        assert_eq!(pool.pending(), 0, "refused submit must not leak in_flight");
+        pool.drain();
+        assert_eq!(counter.load(Ordering::SeqCst), 0, "refused job must not run");
+    }
+
+    #[test]
+    fn scoped_on_closed_pool_runs_jobs_inline() {
+        // the barrier contract survives shutdown: every job completes
+        // before scoped returns, on the caller's thread if need be
+        let pool = Pool::new(2, 8);
+        pool.close();
+        let mut out = [0u64; 4];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, v)| Box::new(move || *v = i as u64 + 1) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.scoped(jobs);
+        assert_eq!(out, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_on_closed_pool_still_propagates_panics() {
+        with_silenced_panics(|| {
+            let pool = Pool::new(1, 4);
+            pool.close();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.scoped(vec![
+                    Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>,
+                    Box::new(|| panic!("inline shard blew up")),
+                ]);
+            }));
+            assert!(r.is_err(), "inline fallback swallowed a job panic");
         });
     }
 
@@ -290,7 +396,7 @@ mod tests {
         let pool = Pool::new(4, 8);
         let t0 = Instant::now();
         for _ in 0..4 {
-            pool.submit(|| std::thread::sleep(Duration::from_millis(50)));
+            assert!(pool.submit(|| std::thread::sleep(Duration::from_millis(50))));
         }
         pool.drain();
         // 4 x 50 ms on 4 workers must finish well under 200 ms

@@ -252,6 +252,7 @@ fn served_photonic_accounting_matches_plan_and_batch_model_exactly() {
             max_batch: 1,
             batch_window: Duration::from_millis(1),
             queue_cap: 16,
+            ..ServeConfig::default()
         })
         .model_desc(model.clone(), BackendChoice::Custom(backend))
         .build()
@@ -309,6 +310,7 @@ fn engine_serves_through_plan_backend() {
             max_batch: 4,
             batch_window: Duration::from_millis(2),
             queue_cap: 64,
+            ..ServeConfig::default()
         })
         .synthetic_seed(11)
         .model_desc(desc.clone(), BackendChoice::Plan)
@@ -375,6 +377,7 @@ fn engine_serves_a_stream_end_to_end() {
             max_batch: 4,
             batch_window: Duration::from_millis(2),
             queue_cap: 256,
+            ..ServeConfig::default()
         })
         .model_desc(model, BackendChoice::Custom(backend))
         .build()

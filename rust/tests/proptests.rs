@@ -503,3 +503,163 @@ fn prop_simulator_monotonicity_in_sparsity() {
         },
     );
 }
+
+#[test]
+fn prop_qos_tickets_always_resolve() {
+    // Any mix of priorities and deadlines (including already-expired
+    // ones) must leave no ticket hanging: every request resolves either
+    // Served (full logits) or DeadlineExceeded (empty logits, only ever
+    // for requests that carried a deadline), and the engine's counters
+    // account for every submission.
+    use sonic::model::ModelDesc;
+    use sonic::serve::{
+        BackendChoice, Engine, NullBackend, Outcome, Priority, ServeConfig, SubmitOptions,
+    };
+    use std::sync::Arc;
+    use std::time::Duration;
+    check(
+        "qos tickets always resolve",
+        Config {
+            cases: 12,
+            max_size: 24,
+            ..Default::default()
+        },
+        |g: &mut Gen| {
+            let n = g.dim(1, 24);
+            let engine = Engine::builder()
+                .serve_config(ServeConfig {
+                    max_batch: g.dim(1, 6),
+                    batch_window: Duration::from_micros(200),
+                    queue_cap: 64,
+                    promote_after: if g.rng.bool(0.5) {
+                        Duration::ZERO
+                    } else {
+                        Duration::from_millis(5)
+                    },
+                    adaptive_window: g.rng.bool(0.5),
+                })
+                .model_desc(
+                    ModelDesc::builtin("mnist").unwrap(),
+                    BackendChoice::Custom(Arc::new(NullBackend {
+                        input_len: 784,
+                        n_classes: 10,
+                    })),
+                )
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut tickets = Vec::new();
+            for _ in 0..n {
+                let priority = match g.rng.range(0, 3) {
+                    0 => Priority::High,
+                    1 => Priority::Normal,
+                    _ => Priority::Batch,
+                };
+                let deadline = if g.rng.bool(0.4) {
+                    Some(Duration::from_millis(g.rng.range(0, 3) as u64))
+                } else {
+                    None
+                };
+                let t = engine
+                    .submit_opts("mnist", vec![0.5; 784], SubmitOptions { deadline, priority })
+                    .map_err(|e| e.to_string())?;
+                tickets.push((t, deadline.is_some(), priority));
+            }
+            engine.shutdown(); // drains everything queued
+            for (t, had_deadline, priority) in tickets {
+                let c = t.wait().map_err(|e| format!("ticket errored: {e}"))?;
+                if c.priority != priority {
+                    return Err(format!("completion lane {:?} != {:?}", c.priority, priority));
+                }
+                match c.outcome {
+                    Outcome::Served => {
+                        if c.logits.len() != 10 {
+                            return Err(format!("served with {} logits", c.logits.len()));
+                        }
+                    }
+                    Outcome::DeadlineExceeded => {
+                        if !had_deadline {
+                            return Err("shed a request that had no deadline".into());
+                        }
+                        if !c.logits.is_empty() {
+                            return Err("shed completion carries logits".into());
+                        }
+                    }
+                }
+            }
+            let m = engine.metrics();
+            let mm = m.model("mnist").ok_or("model metrics missing")?;
+            if mm.serve.completed + mm.serve.shed != n as u64 {
+                return Err(format!(
+                    "counters lose requests: {} served + {} shed != {n}",
+                    mm.serve.completed, mm.serve.shed
+                ));
+            }
+            let lane_total: u64 = mm
+                .lanes
+                .iter()
+                .map(|l| l.completed + l.shed)
+                .sum();
+            if lane_total != n as u64 {
+                return Err(format!("lane counters lose requests: {lane_total} != {n}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_normal_qos_serving_is_bit_identical_to_fixed_fifo() {
+    // The QoS router (lanes + adaptive window) must be invisible to a
+    // workload that never uses it: same inputs through the default
+    // (adaptive) config and the fixed-window FIFO config produce
+    // bit-identical logits on the real plan-executor kernels.
+    use sonic::model::ModelDesc;
+    use sonic::serve::{BackendChoice, Engine, ServeConfig};
+    use std::time::Duration;
+    check(
+        "all-normal qos == fifo",
+        Config {
+            cases: 6,
+            max_size: 12,
+            ..Default::default()
+        },
+        |g: &mut Gen| {
+            let n = g.dim(1, 12);
+            let inputs: Vec<Vec<f32>> = (0..n).map(|_| g.sparse_vec(784, 0.3)).collect();
+            let desc = ModelDesc::builtin("mnist").unwrap();
+            let run = |cfg: ServeConfig| -> Result<Vec<Vec<u32>>, String> {
+                let engine = Engine::builder()
+                    .serve_config(cfg)
+                    .synthetic_seed(7)
+                    .model_desc(desc.clone(), BackendChoice::Plan)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let tickets: Vec<_> = inputs
+                    .iter()
+                    .map(|x| engine.submit("mnist", x.clone()))
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| e.to_string())?;
+                let out = tickets
+                    .into_iter()
+                    .map(|t| {
+                        t.wait()
+                            .map(|c| c.logits.iter().map(|v| v.to_bits()).collect())
+                            .map_err(|e| e.to_string())
+                    })
+                    .collect();
+                engine.shutdown();
+                out
+            };
+            let qos = run(ServeConfig::default())?;
+            let fifo = run(ServeConfig {
+                adaptive_window: false,
+                promote_after: Duration::from_secs(3600),
+                ..ServeConfig::default()
+            })?;
+            if qos != fifo {
+                return Err(format!("all-Normal serving diverged from FIFO (n={n})"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -157,6 +157,7 @@ fn engine_over_pjrt_serves_batches() {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             queue_cap: 64,
+            ..ServeConfig::default()
         })
         .model("mnist", BackendChoice::Pjrt)
         .build()
