@@ -11,9 +11,11 @@
 //! precompiled `FcExec` layout with the batched sparse matvec kernel,
 //! streaming the weights once per batch.  A second serving comparison
 //! tracks the `serve::Engine` facade's cost over the raw backend call
-//! (ticketing + queue hand-off + dynamic batching).  Kernel grids
-//! (dense-vs-CSC, and activation-gated-vs-ungated across act sparsity x
-//! batch) land in `BENCH_kernels.json` / `BENCH_actgate.json`; the QoS
+//! (ticketing + queue hand-off + dynamic batching).  Kernel grids (all
+//! four FC kernels — dense/csc/csr/bitmap — across weight density x
+//! batch with the cost model's pick checked against the measured oracle,
+//! and activation-gated-vs-ungated across act sparsity x batch) land in
+//! `BENCH_kernels.json` / `BENCH_actgate.json`; the QoS
 //! grid (priority mix x deadline mix under an overloaded engine, per-lane
 //! p99 + shed counts) lands in `BENCH_qos.json`; everything else in
 //! `BENCH_hotpath.json` for the perf trajectory (CI uploads all four).
@@ -28,7 +30,7 @@ use sonic::coordinator::convflow::{
 };
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
-use sonic::plan::{cached, FcExec, KernelChoice, ModelPlan, PlanBackend};
+use sonic::plan::{cached, FcExec, KernelChoice, KernelPolicy, ModelPlan, PlanBackend};
 use sonic::serve::{
     BackendChoice, Engine, InferenceBackend, NullBackend, Priority, ServeConfig, SubmitOptions,
 };
@@ -175,58 +177,87 @@ fn main() {
         if speedup >= 2.0 { "" } else { "  ** BELOW TARGET **" }
     );
 
-    // --- structurally-sparse kernel micro-bench: dense vs CSC -----------
+    // --- structurally-sparse kernel micro-bench: all four FC kernels ----
     //
-    // The acceptance gate for the compiled CSC kernels: on the svhn-sized
-    // FC matrix, compare the dense column-streaming fallback against the
-    // CSC batch kernel across weight sparsity x batch size.  Both sides
-    // run through `forward_batch_into` with persistent buffers, so the
-    // comparison is pure kernel time.  Results go to BENCH_kernels.json.
-    println!("\n=== kernel micro-bench: dense vs CSC (272x1792 FC) ===\n");
+    // The acceptance gate for the compiled sparse kernels: on the
+    // svhn-sized FC matrix, compare the dense column-streaming fallback
+    // against every compressed kernel (CSC, CSR, bitmap) across weight
+    // sparsity x batch size — the 0.5–0.9 *density* band (sparsity
+    // 0.1–0.5) plus the legacy sparse corners.  All sides run through
+    // `forward_batch_into` with persistent buffers, so the comparison is
+    // pure kernel time.  Each cell also scores the cost model: the
+    // policy's chosen-kernel time over the measured per-cell best
+    // (`policy_vs_oracle`, CI-gated <= 1.05).  Results go to
+    // BENCH_kernels.json.
+    println!("\n=== kernel micro-bench: dense/csc/csr/bitmap (272x1792 FC) ===\n");
     let mut kernel_entries = Vec::new();
     let mut csc_speedup_gate = 0.0; // 90% sparsity, batch 8 (target >= 2x)
-    for &sparsity in &[0.5f64, 0.8, 0.9, 0.95] {
+    let mut max_policy_vs_oracle = 0.0f64;
+    let policy = KernelPolicy::default();
+    for &sparsity in &[0.1f64, 0.2, 0.3, 0.4, 0.5, 0.8, 0.9, 0.95] {
         let wk = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, sparsity));
-        let dense = FcExec::with_kernel(wk.clone(), false, 0.0, KernelChoice::Dense);
-        let csc = FcExec::with_kernel(wk, false, 0.0, KernelChoice::Csc);
+        let execs: Vec<FcExec> = KernelChoice::FC_CANDIDATES
+            .iter()
+            .map(|&k| FcExec::with_kernel(wk.clone(), false, 0.0, k))
+            .collect();
+        // what the selector would compile for this matrix (exact stats)
+        let chosen = policy.choose(&execs[0].stats);
+        let chosen_idx = KernelChoice::FC_CANDIDATES
+            .iter()
+            .position(|&k| k == chosen)
+            .expect("chosen kernel is an FC candidate");
         for &bn in &[1usize, 8, 64] {
             let inputs: Vec<Vec<f32>> = (0..bn).map(|_| rng.normal_vec(cols)).collect();
             let (mut xt, mut yt) = (Vec::new(), Vec::new());
             let mut out = BatchTensor::new();
-            let d = run(
-                &mut results,
-                &format!("fc dense   sp={sparsity:.2} batch={bn}"),
-                || {
-                    dense
-                        .forward_batch_into(&inputs, &mut xt, &mut yt, &mut out)
-                        .unwrap();
-                    black_box(&out);
-                },
-            );
-            let c = run(
-                &mut results,
-                &format!("fc csc     sp={sparsity:.2} batch={bn}"),
-                || {
-                    csc.forward_batch_into(&inputs, &mut xt, &mut yt, &mut out)
-                        .unwrap();
-                    black_box(&out);
-                },
-            );
-            let kernel_speedup = d.mean_ns / c.mean_ns;
+            let times: Vec<f64> = execs
+                .iter()
+                .zip(KernelChoice::FC_CANDIDATES)
+                .map(|(exec, k)| {
+                    run(
+                        &mut results,
+                        &format!("fc {:<6} sp={sparsity:.2} batch={bn}", k.as_str()),
+                        || {
+                            exec.forward_batch_into(&inputs, &mut xt, &mut yt, &mut out)
+                                .unwrap();
+                            black_box(&out);
+                        },
+                    )
+                    .mean_ns
+                })
+                .collect();
+            let best_idx = (0..times.len())
+                .min_by(|&a, &b| times[a].total_cmp(&times[b]))
+                .unwrap();
+            let policy_vs_oracle = times[chosen_idx] / times[best_idx];
+            max_policy_vs_oracle = max_policy_vs_oracle.max(policy_vs_oracle);
+            let csc_speedup = times[0] / times[1];
             println!(
-                "    -> csc speedup {kernel_speedup:.2}x ({:.0} ns/inf vs {:.0} ns/inf dense)\n",
-                c.mean_ns / bn as f64,
-                d.mean_ns / bn as f64
+                "    -> policy {} vs oracle {}: {policy_vs_oracle:.2}x  \
+                 (csc {csc_speedup:.2}x dense)\n",
+                chosen.as_str(),
+                KernelChoice::FC_CANDIDATES[best_idx].as_str(),
             );
             if sparsity == 0.9 && bn == 8 {
-                csc_speedup_gate = kernel_speedup;
+                csc_speedup_gate = csc_speedup;
             }
             kernel_entries.push(obj(vec![
                 ("sparsity", num(sparsity)),
+                ("density", num(1.0 - sparsity)),
                 ("batch", num(bn as f64)),
-                ("ns_per_inf", num(c.mean_ns / bn as f64)),
-                ("dense_ns_per_inf", num(d.mean_ns / bn as f64)),
-                ("speedup_vs_dense", num(kernel_speedup)),
+                ("dense_ns_per_inf", num(times[0] / bn as f64)),
+                ("csc_ns_per_inf", num(times[1] / bn as f64)),
+                ("csr_ns_per_inf", num(times[2] / bn as f64)),
+                ("bitmap_ns_per_inf", num(times[3] / bn as f64)),
+                ("ns_per_inf", num(times[1] / bn as f64)),
+                ("speedup_vs_dense", num(csc_speedup)),
+                ("chosen_kernel", s(chosen.as_str())),
+                (
+                    "best_kernel",
+                    s(KernelChoice::FC_CANDIDATES[best_idx].as_str()),
+                ),
+                ("chosen_speedup_vs_dense", num(times[0] / times[chosen_idx])),
+                ("policy_vs_oracle", num(policy_vs_oracle)),
             ]));
         }
     }
@@ -235,11 +266,17 @@ fn main() {
          (target >= 2x){}",
         if csc_speedup_gate >= 2.0 { "" } else { "  ** BELOW TARGET **" }
     );
+    println!(
+        "worst policy_vs_oracle across the grid: {max_policy_vs_oracle:.3} \
+         (CI gate <= 1.05){}",
+        if max_policy_vs_oracle <= 1.05 { "" } else { "  ** ABOVE GATE **" }
+    );
     let kernels_json = obj(vec![
         ("bench", s("kernels")),
         ("rows", num(rows as f64)),
         ("cols", num(cols as f64)),
         ("csc_speedup_90sp_b8", num(csc_speedup_gate)),
+        ("max_policy_vs_oracle", num(max_policy_vs_oracle)),
         ("results", arr(kernel_entries)),
     ]);
     let kout = std::env::var("SONIC_BENCH_KERNELS_JSON")

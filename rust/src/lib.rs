@@ -43,10 +43,16 @@
 //!   the functional plan executor serving without PJRT.
 //!
 //!   **Performance notes (the serving hot path):** the executor compiles
-//!   each FC layer into a true CSC kernel when its measured weight
-//!   density is at or below [`plan::CSC_MAX_DENSITY`] (a structural zero
-//!   is never loaded or multiplied; work is O(nnz · batch)), falling
-//!   back to dense column streaming for near-dense layers; CONV layers
+//!   each FC layer into one of **four kernels** — dense column
+//!   streaming, CSC (work O(nnz · batch), scatter output), CSR
+//!   (register accumulator per row, wins when rows are nnz-balanced),
+//!   or u64-bitmap over dense value slabs (the 0.5–0.9 density band,
+//!   where mask words beat an explicit index stream) — picked per layer
+//!   by the structure-aware cost model [`plan::KernelPolicy`] over
+//!   exact [`sparsity::stats::MatrixStats`] (row/col nnz moments, band
+//!   width); a structural zero is never loaded or multiplied by any
+//!   compressed kernel.  `sonic serve --autotune` re-picks by *timing*
+//!   all four candidates on the first real batch.  CONV layers
 //!   materialize the im2col patch matrix for the whole batch once and
 //!   stream each compressed kernel across all of it.  Batches run
 //!   through contiguous [`tensor::BatchTensor`] ping-pong scratch
@@ -55,13 +61,16 @@
 //!   [`util::pool`] workers, bit-identical to serial execution.
 //!   **Dual sparsity:** each FC layer measures its batch's activation
 //!   density (zero counts threaded between layers by the ReLU writes)
-//!   and, when it clears [`plan::gate_activations`], runs the
-//!   activation-gated kernel that skips whole stored columns of exact
-//!   zeros; measured per-layer density feeds the serving metrics and the
-//!   measured-density photonic charging
+//!   and, when it clears the kernel-aware gate policy
+//!   ([`plan::gate_activations`] / [`plan::gate_csc_slabs`]), runs the
+//!   activation-gated kernel variant that skips whole stored columns of
+//!   exact zeros; measured per-layer density feeds the serving metrics
+//!   and the measured-density photonic charging
 //!   ([`plan::compile_with_density`] / `sim::simulate_with_density`).
 //!   `benches/hotpath.rs` gates the CSC kernel at >= 2x over dense at
-//!   90% weight sparsity (batch 8) and records `BENCH_kernels.json` +
+//!   90% weight sparsity (batch 8), holds the cost-model's pick within
+//!   5% of the fastest measured kernel in every grid cell
+//!   (`policy_vs_oracle`, CI-gated), and records `BENCH_kernels.json` +
 //!   `BENCH_actgate.json` (gated vs ungated grid).
 //! * [`sim`] — the analytic performance/power/energy simulator that
 //!   regenerates every table and figure of the paper's evaluation — a view

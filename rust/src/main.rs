@@ -78,13 +78,17 @@ USAGE: sonic <subcommand> [options]
             [--priority high|normal|batch] [--deadline-ms D]
                                         functional inference via the serve engine
   serve     --model <m> [--requests N] [--batch B] [--rate R] [--backend auto|pjrt|plan]
-            [--priority high|normal|batch] [--deadline-ms D]
+            [--priority high|normal|batch] [--deadline-ms D] [--autotune]
                                         serve a synthetic request stream
+                                        (--autotune: time all FC kernels on the
+                                        first batch and re-plan mispredictions)
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
   report    --model <m>                 per-layer simulator breakdown
-  plan      --model <m>                 compiled LayerPlan IR (passes, retunes, coefficients)
+  plan      --model <m> [--kernel-policy auto|dense|csc|csr|bitmap|k=v,...]
+                                        compiled LayerPlan IR (passes, retunes,
+                                        coefficients, per-layer kernel choices)
   trace     --model <m> [--out f.json]  per-layer execution timeline
   batch     --model <m>                 batch-size amortization sweep
   memory    [--models a,b,...]          main-memory traffic report
@@ -105,6 +109,8 @@ fn specs_model() -> Vec<OptSpec> {
         OptSpec { name: "backend", takes_value: true, help: "backend: auto|pjrt|plan" },
         OptSpec { name: "deadline-ms", takes_value: true, help: "per-request deadline in ms (0 = none); expired requests are shed" },
         OptSpec { name: "priority", takes_value: true, help: "QoS lane: high|normal|batch" },
+        OptSpec { name: "kernel-policy", takes_value: true, help: "FC kernel policy: auto (cost model), dense|csc|csr|bitmap (force), or k=v,... cost coefficients" },
+        OptSpec { name: "autotune", takes_value: false, help: "time every candidate FC kernel on the first batch and re-plan mispredicted layers" },
         OptSpec { name: "no-gating", takes_value: false, help: "disable VCSEL power gating" },
         OptSpec { name: "no-compression", takes_value: false, help: "disable dataflow compression" },
         OptSpec { name: "no-clustering", takes_value: false, help: "disable weight clustering" },
@@ -209,6 +215,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             max_batch,
             batch_window: Duration::from_millis(2),
             queue_cap: 4096,
+            autotune: a.flag("autotune"),
             ..ServeConfig::default()
         })
         .model(&model, backend)
@@ -431,7 +438,18 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     let model = a.get_or("model", "mnist");
     let desc = ModelDesc::try_load_or_builtin(model)?;
     let cfg = arch_from(&a);
-    let plan = sonic::plan::cached(&desc, &cfg);
+    let policy_str = a.get_or("kernel-policy", "auto");
+    let policy = match sonic::plan::KernelPolicy::parse(policy_str) {
+        Ok(p) => p,
+        Err(e) => bail!("--kernel-policy: {e}"),
+    };
+    // the default policy is what the cache holds; a custom one bypasses
+    // it (the cache key does not cover policy coefficients)
+    let plan = if policy == sonic::plan::KernelPolicy::default() {
+        sonic::plan::cached(&desc, &cfg)
+    } else {
+        std::sync::Arc::new(sonic::plan::ModelPlan::compile_with_policy(&desc, &cfg, &policy))
+    };
     let mut t = Table::new(&[
         "layer", "kind", "vec len", "outputs", "passes", "rounds", "II", "overhead",
         "TO frac", "pass E",
@@ -452,6 +470,24 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     }
     println!("== {model} compiled LayerPlan IR ==");
     t.print();
+    // kernel-selection view: what the structure-aware cost model chose
+    // per layer and the stats it scored (conv layers have one kernel and
+    // no predicted cost to compare)
+    let mut kt = Table::new(&[
+        "layer", "kernel", "w density", "row cv", "band", "pred cost",
+    ]);
+    for l in &plan.layers {
+        kt.row(&[
+            l.name.clone(),
+            l.kernel.as_str().into(),
+            format!("{:.3}", l.stats.density),
+            if l.is_conv { "-".into() } else { format!("{:.3}", l.stats.row_cv()) },
+            if l.is_conv { "-".into() } else { format!("{:.2}", l.stats.band_frac()) },
+            if l.is_conv { "-".into() } else { format!("{:.3}", l.predicted_cost) },
+        ]);
+    }
+    println!("\n== {model} kernel selection ({}) ==", policy_str);
+    kt.print();
     println!(
         "\ntotals: latency {}  energy {}  overhead {}  pipeline fraction {:.4}",
         si(plan.latency_s, "s"),

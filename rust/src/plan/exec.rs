@@ -4,14 +4,20 @@
 //!
 //! What runs per batch (and what deliberately does not):
 //!
-//! * [`FcExec`] compiles each FC layer into one of two kernels, chosen at
-//!   compile time by measured weight density against
-//!   [`crate::plan::CSC_MAX_DENSITY`]: a true compressed-sparse-column
-//!   layout ([`CscMatrix`] — a structural zero weight is never loaded,
-//!   work is O(nnz · batch)) or the dense column-major fallback for
-//!   near-dense layers.  The CSC kernel register-blocks across the batch
-//!   (activations transposed into a `[col][batch]` tile) so each stored
-//!   non-zero costs one vectorizable batch-wide FMA.
+//! * [`FcExec`] compiles each FC layer into one of four kernels, chosen
+//!   at compile time by the structure-aware cost model
+//!   ([`crate::plan::KernelPolicy`] scoring exact
+//!   [`MatrixStats`]): a true compressed-sparse-column layout
+//!   ([`CscMatrix`] — a structural zero weight is never loaded, work is
+//!   O(nnz · batch)), a row-major CSR layout ([`CsrMatrix`] — streamed
+//!   output rows, wins when row nnz is balanced), a bitmap layout
+//!   ([`BitmapMatrix`] — u64 masks over dense value slabs, targeting the
+//!   0.5–0.9 density band where index-gather overhead loses to dense but
+//!   many multiplies are still structurally wasted), or the dense
+//!   column-major fallback for near-dense layers.  All sparse kernels
+//!   register-block across the batch (activations transposed into a
+//!   `[col][batch]` tile) so each stored non-zero costs one vectorizable
+//!   batch-wide FMA.
 //! * **Dual sparsity at run time**: each FC layer measures its batch's
 //!   input activation density (tracked between layers by
 //!   [`BatchTensor::row_zeros`] — the previous layer's ReLU counted its
@@ -19,10 +25,11 @@
 //!   layer) and, when the kernel-aware gate policy clears
 //!   ([`crate::plan::gate_activations`] for dense per-activation skips;
 //!   [`crate::plan::gate_csc_slabs`], which also weighs batch size, for
-//!   the CSC kernel's whole-slab skips), runs the activation-gated kernel
-//!   variant: a stored weight column whose activations are all exactly
-//!   zero is skipped wholesale (`col_ptr[c]..col_ptr[c+1]` for CSC, the
-//!   column stream for dense).  Dense batches — and large batches where
+//!   the compressed kernels' whole-slab skips), runs the activation-gated
+//!   kernel variant: a stored weight column whose activations are all
+//!   exactly zero is skipped wholesale (`col_ptr[c]..col_ptr[c+1]` for
+//!   CSC/bitmap, a liveness-mask lookup for CSR, the column stream for
+//!   dense).  Dense batches — and large batches where
 //!   an all-zero slab is statistically impossible — run the ungated
 //!   branch-free kernels instead, so gating costs nothing when there is
 //!   nothing to skip.  Gated and ungated outputs are bit-identical
@@ -45,10 +52,16 @@
 //!   slice of the output), so results are bit-identical to the serial
 //!   kernel regardless of worker count.
 //!
-//! `benches/hotpath.rs` measures the dense-vs-CSC kernels and writes
-//! `BENCH_kernels.json`; the plan-cached form is what the router serves.
+//! `benches/hotpath.rs` measures all four FC kernels across the density
+//! grid and writes `BENCH_kernels.json` (including a `policy_vs_oracle`
+//! column checking the cost model against the measured best); the
+//! plan-cached form is what the router serves.  [`PlanBackend`] can
+//! additionally *autotune*: time every candidate kernel on the first real
+//! batch and swap any FC layer whose measured winner disagrees with the
+//! predicted one.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
 use std::time::Instant;
 
 use crate::bail;
@@ -57,13 +70,14 @@ use crate::coordinator::convflow::{
 };
 use crate::model::{LayerKind, ModelDesc};
 use crate::serve::{InferenceBackend, LayerKernelStat};
-use crate::sparsity::{ColMatrix, CscMatrix, SparseVec};
+use crate::sparsity::stats::MatrixStats;
+use crate::sparsity::{BitmapMatrix, ColMatrix, CscMatrix, CsrMatrix, SparseVec};
 use crate::tensor::{BatchTensor, Tensor};
 use crate::util::err::Result;
 use crate::util::pool::{shared, Pool};
 use crate::util::rng::Rng;
 
-use super::{choose_fc_kernel, KernelChoice};
+use super::{KernelChoice, KernelPolicy};
 
 // ---------------------------------------------------------------------------
 // Batch row views: the first layer reads the caller's rows by reference.
@@ -192,16 +206,20 @@ fn measure_rows(rows: Rows<'_>, row_len: usize) -> (u64, u64) {
 
 /// Gate decision from a measured zero count, kernel-aware: the dense
 /// kernel skips per activation ([`crate::plan::gate_activations`],
-/// density alone), while the CSC kernel skips whole `[col][slab]` tiles
-/// whose all-zero probability decays exponentially in slab length
-/// ([`crate::plan::gate_csc_slabs`]).  `slab` is the row count the
-/// kernel will actually scan per column — the **shard** size under
-/// pooled execution, not the whole batch, since each shard checks its
-/// own tile.  Empty batches don't gate.
+/// density alone), while the compressed kernels (CSC, CSR, bitmap) skip
+/// whole `[col][slab]` tiles whose all-zero probability decays
+/// exponentially in slab length ([`crate::plan::gate_csc_slabs`]).
+/// `slab` is the row count the kernel will actually scan per column —
+/// the **shard** size under pooled execution, not the whole batch, since
+/// each shard checks its own tile.  Empty batches don't gate.
 fn gate_from_measurement(fc: &FcExec, zeros: u64, elems: u64, slab: usize) -> bool {
     match density_from_counts(zeros, elems) {
-        Some(d) if fc.runs_csc() => super::gate_csc_slabs(d, slab),
-        Some(d) => super::gate_activations(d),
+        Some(d) => match fc.compiled_kernel() {
+            KernelChoice::Csc | KernelChoice::Csr | KernelChoice::Bitmap => {
+                super::gate_csc_slabs(d, slab)
+            }
+            _ => super::gate_activations(d),
+        },
         None => false,
     }
 }
@@ -215,20 +233,30 @@ fn density_from_counts(zeros: u64, elems: u64) -> Option<f64> {
 }
 
 thread_local! {
-    /// CSC transpose tiles for pool-worker shards (see
-    /// [`fc_csc_shard`]): thread-local so parallel execution stays
-    /// allocation-free once each worker has warmed up.
+    /// Transpose tiles for pool-worker shards (see [`fc_csc_shard`],
+    /// [`fc_csr_shard`], [`fc_bitmap_shard`]): thread-local so parallel
+    /// execution stays allocation-free once each worker has warmed up.
     static FC_TILES: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
         const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+
+    /// Column-liveness bitmask for the gated CSR kernel (one bit per
+    /// input column, set when any activation in the shard's slab is
+    /// non-zero).  Built once per shard so the row-major sweep can test
+    /// column deadness in O(1) instead of rescanning the slab at every
+    /// stored entry.  Thread-local for the same allocation-free reason
+    /// as [`FC_TILES`].
+    static CSR_MASK: std::cell::RefCell<Vec<u64>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 // ---------------------------------------------------------------------------
 // FC layer.
 
-/// Compiled FC layer: the dense column-major matrix plus — when the layer
-/// is sparse enough — a true CSC compilation of it.  The kernel choice is
-/// made **once at compile time** from measured weight density
-/// ([`choose_fc_kernel`]); dynamic activation sparsity is exploited **per
+/// Compiled FC layer: the dense column-major matrix plus — when the
+/// structure warrants it — a compressed compilation of it (CSC, CSR, or
+/// bitmap).  The kernel choice is made **once at compile time** by the
+/// structure-aware cost model ([`KernelPolicy`] scoring exact
+/// [`MatrixStats`]); dynamic activation sparsity is exploited **per
 /// batch** by the gated kernel variants, selected from the measured input
 /// density ([`crate::plan::gate_activations`]), which skip a stored
 /// column wholesale when its activations are all exactly zero.
@@ -239,8 +267,17 @@ pub struct FcExec {
     pub weights: ColMatrix,
     /// True compressed-sparse-column form; present iff `kernel == Csc`.
     pub csc: Option<CscMatrix>,
-    /// Which kernel `forward` runs (chosen from measured density).
+    /// Row-major compressed form; present iff `kernel == Csr`.
+    pub csr: Option<CsrMatrix>,
+    /// Bitmap-compressed form; present iff `kernel == Bitmap`.
+    pub bitmap: Option<BitmapMatrix>,
+    /// Which kernel `forward` runs (chosen by the cost model from the
+    /// exact structure statistics, or forced via
+    /// [`FcExec::with_kernel`]).
     pub kernel: KernelChoice,
+    /// Exact structure statistics measured from the compiled weights —
+    /// the cost model's input, surfaced for reporting and autotune.
+    pub stats: MatrixStats,
     /// Non-zeros per column (drives the analytic gating expectation).
     pub col_nnz: Vec<u32>,
     pub relu: bool,
@@ -286,18 +323,22 @@ impl FcExec {
                     .count() as u32
             })
             .collect();
-        let total = (weights.rows * weights.cols) as f64;
-        let nnz: u64 = col_nnz.iter().map(|&n| n as u64).sum();
-        let density = if total == 0.0 { 0.0 } else { nnz as f64 / total };
-        let kernel = force.unwrap_or_else(|| choose_fc_kernel(density));
-        let csc = match kernel {
-            KernelChoice::Csc => Some(CscMatrix::from_col_major(&weights)),
-            KernelChoice::Dense => None,
-        };
+        // Exact structure statistics (not the plan's Bernoulli estimate):
+        // the executor sees the real matrix, so the cost model scores the
+        // real row balance and density here.
+        let stats = MatrixStats::from_col_major(&weights);
+        let kernel = force.unwrap_or_else(|| KernelPolicy::default().choose(&stats));
+        let csc = (kernel == KernelChoice::Csc).then(|| CscMatrix::from_col_major(&weights));
+        let csr = (kernel == KernelChoice::Csr).then(|| CsrMatrix::from_col_major(&weights));
+        let bitmap =
+            (kernel == KernelChoice::Bitmap).then(|| BitmapMatrix::from_col_major(&weights));
         Self {
             weights,
             csc,
+            csr,
+            bitmap,
             kernel,
+            stats,
             col_nnz,
             relu,
         }
@@ -380,13 +421,14 @@ impl FcExec {
 
     /// Prepare `out` for this layer's kernel — the single place the
     /// write-pattern invariant lives: the dense kernel **accumulates**
-    /// (`+=`) and needs a zeroed output ([`BatchTensor::reset`]), the CSC
-    /// kernel assigns every element from its `yt` tile (cheaper
-    /// [`BatchTensor::reshape`]).  Either way the per-row zero tracking
-    /// is (re)sized for the batch, ready for the kernel's counting
-    /// writes.
+    /// (`+=`) and needs a zeroed output ([`BatchTensor::reset`]); the
+    /// compressed kernels assign every element (CSC/bitmap from their
+    /// `yt` tile, CSR from its per-row accumulator), so the cheaper
+    /// [`BatchTensor::reshape`] suffices.  Either way the per-row zero
+    /// tracking is (re)sized for the batch, ready for the kernel's
+    /// counting writes.
     fn prepare_out(&self, out: &mut BatchTensor, batch: usize) {
-        if self.runs_csc() {
+        if self.assigns_output() {
             out.reshape(batch, self.weights.rows);
         } else {
             out.reset(batch, self.weights.rows);
@@ -395,18 +437,32 @@ impl FcExec {
         out.row_zeros.resize(batch, 0);
     }
 
-    /// Whether the CSC kernel actually runs (the dense kernel needs a
-    /// pre-zeroed output; the CSC kernel assigns every element).
-    fn runs_csc(&self) -> bool {
-        matches!((self.kernel, &self.csc), (KernelChoice::Csc, Some(_)))
+    /// The kernel [`FcExec::run_shard`] actually dispatches: the chosen
+    /// [`KernelChoice`] when its compressed structure was built, else the
+    /// dense fallback (covers `with_kernel` forcing a kernel whose
+    /// structure a hand-built `FcExec` lacks).
+    pub fn compiled_kernel(&self) -> KernelChoice {
+        match self.kernel {
+            KernelChoice::Csc if self.csc.is_some() => KernelChoice::Csc,
+            KernelChoice::Csr if self.csr.is_some() => KernelChoice::Csr,
+            KernelChoice::Bitmap if self.bitmap.is_some() => KernelChoice::Bitmap,
+            _ => KernelChoice::Dense,
+        }
+    }
+
+    /// Whether the running kernel assigns every output element (the
+    /// dense fallback instead accumulates into a pre-zeroed output).
+    fn assigns_output(&self) -> bool {
+        self.compiled_kernel() != KernelChoice::Dense
     }
 
     /// Run rows `[b0, b0+nb)` through the compiled kernel into `out`
     /// (`nb * rows_out`; pre-zeroed on the dense path).  `xt`/`yt` are
-    /// the CSC transpose tiles, grown on demand; untouched on the dense
-    /// path.  `zeros` (`nb` entries) receives the output rows' exact-zero
-    /// counts — the tracking the next layer's gate reads.  With `gate`
-    /// the kernels skip zero-activation work (bit-identical either way).
+    /// the transpose/accumulator tiles, grown on demand; untouched on the
+    /// dense path.  `zeros` (`nb` entries) receives the output rows'
+    /// exact-zero counts — the tracking the next layer's gate reads.
+    /// With `gate` the kernels skip zero-activation work (bit-identical
+    /// either way).
     #[allow(clippy::too_many_arguments)]
     fn run_shard(
         &self,
@@ -419,8 +475,16 @@ impl FcExec {
         zeros: &mut [u32],
         gate: bool,
     ) {
-        match (self.kernel, self.csc.as_ref()) {
-            (KernelChoice::Csc, Some(csc)) => fc_csc_shard(csc, rows, b0, nb, xt, yt, out, gate),
+        match self.compiled_kernel() {
+            KernelChoice::Csc => {
+                fc_csc_shard(self.csc.as_ref().unwrap(), rows, b0, nb, xt, yt, out, gate)
+            }
+            KernelChoice::Csr => {
+                fc_csr_shard(self.csr.as_ref().unwrap(), rows, b0, nb, xt, yt, out, gate)
+            }
+            KernelChoice::Bitmap => {
+                fc_bitmap_shard(self.bitmap.as_ref().unwrap(), rows, b0, nb, xt, yt, out, gate)
+            }
             _ => fc_dense_shard(&self.weights, rows, b0, nb, out, gate),
         }
         if self.relu {
@@ -509,6 +573,139 @@ fn fc_csc_shard(
             let yrow = &mut yt[ri as usize * nb..(ri as usize + 1) * nb];
             for (yv, &xv) in yrow.iter_mut().zip(xrow) {
                 *yv += v * xv;
+            }
+        }
+    }
+    for j in 0..nb {
+        let dst = &mut out[j * rout..(j + 1) * rout];
+        for (r, d) in dst.iter_mut().enumerate() {
+            *d = yt[r * nb + j];
+        }
+    }
+}
+
+/// CSR kernel, register-blocked across the batch: activations are
+/// transposed into the same `[col][batch]` tile as the CSC kernel, but
+/// the sweep is row-major — each output row's stored `(weight, col)`
+/// pairs stream once, accumulating into an `nb`-wide register-blocked
+/// accumulator that is scattered to `out` when the row completes.  Output
+/// rows are written exactly once, streamed in order, which is why CSR
+/// wins when row nnz is balanced (no straggler rows serializing the
+/// sweep).  With `gate` a per-column liveness bitmask is built once from
+/// the slab ([`CSR_MASK`]); stored entries whose column is dead across
+/// the whole shard are skipped — the same whole-column-slab skip unit as
+/// CSC, tested in O(1) per entry.  Per output element the accumulation
+/// order (ascending column, CSR's storage order) is identical to the
+/// dense kernel and independent of `gate` (skipped entries contribute
+/// exact-zero terms), so all variants agree exactly.
+#[allow(clippy::too_many_arguments)]
+fn fc_csr_shard(
+    csr: &CsrMatrix,
+    rows: Rows<'_>,
+    b0: usize,
+    nb: usize,
+    xt: &mut Vec<f32>,
+    yt: &mut Vec<f32>,
+    out: &mut [f32],
+    gate: bool,
+) {
+    let (rout, cols) = (csr.rows, csr.cols);
+    // xt is fully overwritten by the transpose; yt serves as the nb-wide
+    // per-row accumulator, refilled for every row.
+    xt.resize(cols * nb, 0.0);
+    yt.clear();
+    yt.resize(nb, 0.0);
+    for j in 0..nb {
+        let x = rows.row(b0 + j);
+        for (c, &xv) in x.iter().enumerate() {
+            xt[c * nb + j] = xv;
+        }
+    }
+    CSR_MASK.with(|m| {
+        let mask = &mut *m.borrow_mut();
+        mask.clear();
+        if gate {
+            // one slab scan total; every stored entry then tests its
+            // column's bit instead of rescanning nb activations
+            mask.resize(cols.div_ceil(64), 0);
+            for c in 0..cols {
+                if xt[c * nb..(c + 1) * nb].iter().any(|&v| v != 0.0) {
+                    mask[c / 64] |= 1u64 << (c % 64);
+                }
+            }
+        }
+        for r in 0..rout {
+            let (vals, idx) = csr.row(r);
+            let acc = &mut yt[..nb];
+            acc.fill(0.0);
+            for (&v, &ci) in vals.iter().zip(idx) {
+                let c = ci as usize;
+                if gate && mask[c / 64] & (1u64 << (c % 64)) == 0 {
+                    continue; // dead activation column across the shard
+                }
+                let xrow = &xt[c * nb..(c + 1) * nb];
+                for (av, &xv) in acc.iter_mut().zip(xrow) {
+                    *av += v * xv;
+                }
+            }
+            for (j, &av) in acc.iter().enumerate() {
+                out[j * rout + r] = av;
+            }
+        }
+    });
+}
+
+/// Bitmap kernel, register-blocked across the batch: values live in
+/// column-major dense slabs and the row positions in u64 masks
+/// ([`BitmapMatrix`]), so the per-entry cost is a `trailing_zeros` walk
+/// instead of a `u32` index gather — cheaper when 10–50% of entries are
+/// stored (the 0.5–0.9 density band) and the index array would approach
+/// the matrix itself in size.  Same `[col][batch]` / `[row][batch]`
+/// tiling and whole-column gate skip as the CSC kernel; within a column
+/// the mask walk visits rows in ascending order, so per output element
+/// the accumulation order is identical to dense/CSC and independent of
+/// `gate` — all variants agree exactly.
+#[allow(clippy::too_many_arguments)]
+fn fc_bitmap_shard(
+    bm: &BitmapMatrix,
+    rows: Rows<'_>,
+    b0: usize,
+    nb: usize,
+    xt: &mut Vec<f32>,
+    yt: &mut Vec<f32>,
+    out: &mut [f32],
+    gate: bool,
+) {
+    let (rout, cols) = (bm.rows, bm.cols);
+    xt.resize(cols * nb, 0.0);
+    yt.clear();
+    yt.resize(rout * nb, 0.0);
+    for j in 0..nb {
+        let x = rows.row(b0 + j);
+        for (c, &xv) in x.iter().enumerate() {
+            xt[c * nb + j] = xv;
+        }
+    }
+    for c in 0..cols {
+        let (vals, words) = bm.col(c);
+        if vals.is_empty() {
+            continue; // whole column pruned — never loaded
+        }
+        let xrow = &xt[c * nb..(c + 1) * nb];
+        if gate && xrow.iter().all(|&v| v == 0.0) {
+            continue; // dead activation across the whole shard
+        }
+        let mut vi = 0;
+        for (wi, &word) in words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let r = wi * 64 + w.trailing_zeros() as usize;
+                let yrow = &mut yt[r * nb..(r + 1) * nb];
+                for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += vals[vi] * xv;
+                }
+                vi += 1;
+                w &= w - 1;
             }
         }
     }
@@ -700,13 +897,14 @@ pub enum LayerExec {
 
 impl LayerExec {
     /// Executed-kernel record, matching what [`crate::plan::LayerPlan`]
-    /// records for the layer: FC layers carry their density-chosen
-    /// kernel; CONV layers always run the structurally-compressed
-    /// (value + gather-index) kernels, i.e. [`KernelChoice::Csc`].
+    /// records for the layer: FC layers carry their cost-model-chosen
+    /// kernel; CONV layers run the per-output-channel compressed im2col
+    /// kernels, reported as their own [`KernelChoice::Conv`] label (they
+    /// are not the FC CSC kernel and must not be mislabelled as it).
     pub fn kernel_choice(&self) -> KernelChoice {
         match self {
             LayerExec::Fc(fc) => fc.kernel,
-            LayerExec::Conv(_) => KernelChoice::Csc,
+            LayerExec::Conv(_) => KernelChoice::Conv,
         }
     }
 
@@ -956,6 +1154,64 @@ impl PlanExecutor {
         scratch: &'s mut ExecScratch,
     ) -> Result<&'s BatchTensor> {
         self.forward_rows(Rows::Flat(input), scratch)
+    }
+
+    /// First-batch autotune: walk the layers with this batch's **real**
+    /// activations, time every candidate FC kernel
+    /// ([`KernelChoice::FC_CANDIDATES`], each candidate compiled via
+    /// [`FcExec::with_kernel`] so its compressed structure really
+    /// exists), and swap any FC layer whose measured winner disagrees
+    /// with the cost model's prediction.  The measured re-plan is safe
+    /// by the bit-identity contract — every candidate produces exactly
+    /// the same outputs, only the time differs.  CONV layers are walked
+    /// (their outputs feed the next FC layer's timing) but not re-planned
+    /// — they have a single kernel.  Returns `(layer index, old kernel,
+    /// new kernel)` for each swap; empty batches tune nothing.
+    pub fn autotune_batch(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<(usize, KernelChoice, KernelChoice)>> {
+        /// Timing repetitions per candidate — enough to lift the winner
+        /// out of timer noise without stalling the first batch.
+        const AUTOTUNE_ITERS: u32 = 5;
+        let mut swaps = Vec::new();
+        if inputs.is_empty() {
+            return Ok(swaps);
+        }
+        let mut rows: Vec<Vec<f32>> = inputs.to_vec();
+        let (mut xt, mut yt) = (Vec::new(), Vec::new());
+        let mut out = BatchTensor::new();
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            match layer {
+                LayerExec::Fc(fc) => {
+                    let mut best = (fc.kernel, u128::MAX);
+                    for cand in KernelChoice::FC_CANDIDATES {
+                        let cexec = FcExec::with_kernel(fc.weights.clone(), fc.relu, 0.0, cand);
+                        // warm the tiles (and surface input-shape errors
+                        // once) before the timed repetitions
+                        cexec.forward_batch_into(&rows, &mut xt, &mut yt, &mut out)?;
+                        let t0 = Instant::now();
+                        for _ in 0..AUTOTUNE_ITERS {
+                            cexec.forward_batch_into(&rows, &mut xt, &mut yt, &mut out)?;
+                        }
+                        let dt = t0.elapsed().as_nanos();
+                        if dt < best.1 {
+                            best = (cand, dt);
+                        }
+                    }
+                    if best.0 != fc.kernel {
+                        let old = fc.kernel;
+                        *fc = FcExec::with_kernel(fc.weights.clone(), fc.relu, 0.0, best.0);
+                        swaps.push((i, old, best.0));
+                    }
+                    rows = fc.forward_batch(&rows)?;
+                }
+                LayerExec::Conv(cv) => {
+                    rows = rows
+                        .iter()
+                        .map(|x| cv.forward(x))
+                        .collect::<Result<Vec<_>>>()?;
+                }
+            }
+        }
+        Ok(swaps)
     }
 
     /// Render accumulated per-layer kernel counters (index-aligned with
@@ -1260,19 +1516,34 @@ struct KernelAgg {
 /// parallel — a scratch is popped, the kernels run unlocked, and only the
 /// per-layer time merge touches a mutex.  Steady-state calls are
 /// allocation-free once the pool has one scratch per concurrent worker.
+///
+/// With [`PlanBackend::with_autotune`] the **first** non-empty batch
+/// additionally times every candidate FC kernel on its real activations
+/// ([`PlanExecutor::autotune_batch`]) and re-plans layers whose measured
+/// winner disagrees with the cost model — a one-shot write-lock; every
+/// batch after runs through the uncontended read path.
 pub struct PlanBackend {
-    exec: PlanExecutor,
+    /// Write-locked exactly once (first-batch autotune); every serving
+    /// batch takes the read side.
+    exec: RwLock<PlanExecutor>,
     /// Idle scratches (popped for the duration of one batch).
     scratches: Mutex<Vec<ExecScratch>>,
     agg: Mutex<KernelAgg>,
+    /// Measure-and-re-plan on the first real batch?
+    autotune: bool,
+    /// First-batch latch: set once the autotune pass ran (or lost the
+    /// race to a concurrent worker that ran it).
+    tuned: AtomicBool,
 }
 
 impl PlanBackend {
     pub fn new(exec: PlanExecutor) -> Self {
         Self {
-            exec,
+            exec: RwLock::new(exec),
             scratches: Mutex::new(Vec::new()),
             agg: Mutex::new(KernelAgg::default()),
+            autotune: false,
+            tuned: AtomicBool::new(false),
         }
     }
 
@@ -1283,8 +1554,31 @@ impl PlanBackend {
         Self::new(PlanExecutor::synthetic(desc, seed).with_shared_pool())
     }
 
-    pub fn executor(&self) -> &PlanExecutor {
-        &self.exec
+    /// Enable (or disable) first-batch kernel autotuning — the
+    /// `serve --autotune` engine mode.
+    pub fn with_autotune(mut self, on: bool) -> Self {
+        self.autotune = on;
+        self
+    }
+
+    /// Read access to the compiled executor (briefly blocks only a
+    /// concurrent first-batch autotune).
+    pub fn executor(&self) -> RwLockReadGuard<'_, PlanExecutor> {
+        self.exec.read().unwrap()
+    }
+
+    /// Run the first-batch autotune pass if it is enabled and still
+    /// pending.  Timing errors are swallowed — the serving call that
+    /// follows reports any real input problem itself.
+    fn maybe_autotune(&self, rows: &[Vec<f32>]) {
+        if !self.autotune || rows.is_empty() || self.tuned.load(Ordering::Acquire) {
+            return;
+        }
+        let mut exec = self.exec.write().unwrap();
+        if self.tuned.swap(true, Ordering::AcqRel) {
+            return; // another worker tuned while we waited for the lock
+        }
+        let _ = exec.autotune_batch(rows);
     }
 
     /// Run `f` with a pooled scratch (kernels execute with no backend
@@ -1316,7 +1610,10 @@ impl PlanBackend {
         for v in scratch.layer_in_elems.iter_mut() {
             *v = 0;
         }
-        let result = f(&self.exec, &mut scratch);
+        let result = {
+            let exec = self.exec.read().unwrap();
+            f(&exec, &mut scratch)
+        };
         if result.is_ok() {
             if let Some(d) = density_out.as_deref_mut() {
                 d.clear();
@@ -1355,6 +1652,7 @@ impl PlanBackend {
 
 impl InferenceBackend for PlanBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.maybe_autotune(inputs);
         self.with_scratch(None, |exec, scratch| {
             let out = exec.forward_rows(Rows::Nested(inputs), scratch)?;
             Ok(out.to_rows())
@@ -1362,6 +1660,9 @@ impl InferenceBackend for PlanBackend {
     }
 
     fn infer_batch_flat(&self, inputs: &BatchTensor, out: &mut BatchTensor) -> Result<()> {
+        if self.autotune && !self.tuned.load(Ordering::Acquire) {
+            self.maybe_autotune(&inputs.to_rows());
+        }
         self.with_scratch(None, |exec, scratch| {
             let res = exec.forward_batch_flat(inputs, scratch)?;
             out.copy_from(res);
@@ -1375,6 +1676,9 @@ impl InferenceBackend for PlanBackend {
         out: &mut BatchTensor,
         act_density: &mut Vec<f64>,
     ) -> Result<()> {
+        if self.autotune && !self.tuned.load(Ordering::Acquire) {
+            self.maybe_autotune(&inputs.to_rows());
+        }
         self.with_scratch(Some(act_density), |exec, scratch| {
             let res = exec.forward_batch_flat(inputs, scratch)?;
             out.copy_from(res);
@@ -1383,12 +1687,17 @@ impl InferenceBackend for PlanBackend {
     }
 
     fn input_len(&self) -> usize {
-        self.exec.input_len()
+        self.exec.read().unwrap().input_len()
     }
 
     fn kernel_breakdown(&self) -> Option<Vec<LayerKernelStat>> {
         let agg = self.agg.lock().unwrap();
-        Some(self.exec.kernel_stats(&agg.layer_ns, &agg.in_zeros, &agg.in_elems, agg.batches))
+        Some(self.exec.read().unwrap().kernel_stats(
+            &agg.layer_ns,
+            &agg.in_zeros,
+            &agg.in_elems,
+            agg.batches,
+        ))
     }
 }
 
@@ -1433,40 +1742,74 @@ mod tests {
     }
 
     #[test]
-    fn density_policy_picks_kernel_and_builds_csc() {
+    fn density_policy_picks_kernel_and_builds_structure() {
         let mut rng = Rng::new(30);
+        // very sparse -> CSC (and only the CSC structure is built)
         let sparse = FcExec::new(
-            ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.9)),
+            ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.95)),
             false,
             0.0,
         );
         assert_eq!(sparse.kernel, KernelChoice::Csc);
-        assert!(sparse.csc.is_some());
+        assert!(sparse.csc.is_some() && sparse.csr.is_none() && sparse.bitmap.is_none());
+        // mid-band (~0.6 dense) -> bitmap masks over dense slabs
+        let mid = FcExec::new(
+            ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.4)),
+            false,
+            0.0,
+        );
+        assert_eq!(mid.kernel, KernelChoice::Bitmap);
+        assert!(mid.bitmap.is_some() && mid.csc.is_none());
+        // near-dense -> dense fallback, no compressed structure at all
         let dense = FcExec::new(
             ColMatrix::from_row_major(8, 16, &rng.sparse_vec(128, 0.05)),
             false,
             0.0,
         );
         assert_eq!(dense.kernel, KernelChoice::Dense);
-        assert!(dense.csc.is_none());
+        assert!(dense.csc.is_none() && dense.csr.is_none() && dense.bitmap.is_none());
+        // the exact stats ride along for reporting/autotune
+        assert_eq!(mid.stats.rows, 8);
+        assert_eq!(mid.stats.cols, 16);
+        assert!(mid.stats.density > sparse.stats.density);
     }
 
     #[test]
-    fn csc_and_dense_kernels_agree_exactly() {
+    fn all_compressed_kernels_agree_exactly_with_dense() {
         let mut rng = Rng::new(31);
         for sparsity in [0.0, 0.5, 0.9, 0.99, 1.0] {
-            let (rows, cols) = (19, 37);
+            // 70 rows: the bitmap kernel crosses a u64 mask-word boundary
+            let (rows, cols) = (70, 37);
             let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, sparsity));
             let d = FcExec::with_kernel(w.clone(), true, 0.0, KernelChoice::Dense);
-            let c = FcExec::with_kernel(w, true, 0.0, KernelChoice::Csc);
-            for batch_n in [0usize, 1, 5] {
-                let batch: Vec<Vec<f32>> =
-                    (0..batch_n).map(|_| rng.sparse_vec(cols, 0.4)).collect();
-                let yd = d.forward_batch(&batch).unwrap();
-                let yc = c.forward_batch(&batch).unwrap();
-                assert_eq!(yd, yc, "sparsity {sparsity} batch {batch_n}");
+            for kernel in [KernelChoice::Csc, KernelChoice::Csr, KernelChoice::Bitmap] {
+                let c = FcExec::with_kernel(w.clone(), true, 0.0, kernel);
+                assert_eq!(c.compiled_kernel(), kernel);
+                for batch_n in [0usize, 1, 5] {
+                    let batch: Vec<Vec<f32>> =
+                        (0..batch_n).map(|_| rng.sparse_vec(cols, 0.4)).collect();
+                    let yd = d.forward_batch(&batch).unwrap();
+                    let yc = c.forward_batch(&batch).unwrap();
+                    assert_eq!(yd, yc, "{kernel:?} sparsity {sparsity} batch {batch_n}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn forced_conv_choice_falls_back_to_dense_kernel() {
+        // Conv is not an FC kernel: no structure is built and the shard
+        // dispatch must fall back to the dense reference, not panic.
+        let mut rng = Rng::new(33);
+        let w = ColMatrix::from_row_major(9, 21, &rng.sparse_vec(9 * 21, 0.5));
+        let forced = FcExec::with_kernel(w.clone(), false, 0.0, KernelChoice::Conv);
+        assert_eq!(forced.compiled_kernel(), KernelChoice::Dense);
+        let reference = FcExec::with_kernel(w, false, 0.0, KernelChoice::Dense);
+        let batch: Vec<Vec<f32>> = (0..3).map(|_| rng.sparse_vec(21, 0.3)).collect();
+        assert_eq!(
+            forced.forward_batch(&batch).unwrap(),
+            reference.forward_batch(&batch).unwrap()
+        );
     }
 
     #[test]
@@ -1592,8 +1935,20 @@ mod tests {
         for s in &stats {
             assert!(!s.layer.is_empty());
             // labels agree with the plan's KernelChoice rendering
-            assert!(s.kernel == "csc" || s.kernel == "dense", "{}", s.kernel);
+            assert!(
+                ["dense", "csc", "csr", "bitmap", "conv"].contains(&s.kernel.as_str()),
+                "{}",
+                s.kernel
+            );
             assert_eq!(s.batches, 2);
+        }
+        // conv layers report their own label, never an FC kernel's
+        for (s, l) in stats.iter().zip(&desc.layers) {
+            if matches!(l.kind, LayerKind::Conv { .. }) {
+                assert_eq!(s.kernel, "conv", "{}", s.layer);
+            } else {
+                assert_ne!(s.kernel, "conv", "{}", s.layer);
+            }
         }
         // at least one layer must have measurable time
         assert!(stats.iter().any(|s| s.total.as_nanos() > 0));
@@ -1609,7 +1964,12 @@ mod tests {
     #[test]
     fn gated_and_ungated_kernels_agree_exactly() {
         let mut rng = Rng::new(40);
-        for kernel in [KernelChoice::Dense, KernelChoice::Csc] {
+        for kernel in [
+            KernelChoice::Dense,
+            KernelChoice::Csc,
+            KernelChoice::Csr,
+            KernelChoice::Bitmap,
+        ] {
             let (rows, cols) = (13, 29);
             let w = ColMatrix::from_row_major(rows, cols, &rng.sparse_vec(rows * cols, 0.6));
             let fc = FcExec::with_kernel(w, true, 0.0, kernel);
@@ -1693,6 +2053,45 @@ mod tests {
             let sd = s.act_density.expect("measured");
             assert!((sd - d).abs() < 1e-12, "{} vs {d}", sd);
         }
+    }
+
+    #[test]
+    fn autotune_backend_is_bit_identical_and_keeps_valid_kernels() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let plain = PlanBackend::new(PlanExecutor::synthetic(&desc, 46));
+        let tuned = PlanBackend::new(PlanExecutor::synthetic(&desc, 46)).with_autotune(true);
+        let mut rng = Rng::new(47);
+        let batch: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.sparse_vec(plain.input_len(), 0.5)).collect();
+        // whatever kernel the measured timings pick, outputs must not move
+        // (the bit-identity contract is what makes autotune safe at all)
+        let a = plain.infer_batch(&batch).unwrap();
+        let b = tuned.infer_batch(&batch).unwrap();
+        assert_eq!(a, b);
+        // steady state after the one-shot tune: still identical
+        assert_eq!(tuned.infer_batch(&batch).unwrap(), a);
+        // every FC layer's compiled structure matches its (possibly
+        // re-planned) kernel choice
+        let exec = tuned.executor();
+        for layer in exec.layers() {
+            if let LayerExec::Fc(fc) = layer {
+                assert_eq!(fc.compiled_kernel(), fc.kernel);
+            }
+        }
+    }
+
+    #[test]
+    fn autotune_on_empty_batch_stays_pending_then_tunes() {
+        let desc = ModelDesc::builtin("mnist").unwrap();
+        let backend = PlanBackend::new(PlanExecutor::synthetic(&desc, 48)).with_autotune(true);
+        // an empty first batch must not consume the tune (nothing to time)
+        assert!(backend.infer_batch(&[]).unwrap().is_empty());
+        assert!(!backend.tuned.load(Ordering::Acquire));
+        let mut rng = Rng::new(49);
+        let batch: Vec<Vec<f32>> =
+            (0..2).map(|_| rng.normal_vec(backend.input_len())).collect();
+        backend.infer_batch(&batch).unwrap();
+        assert!(backend.tuned.load(Ordering::Acquire));
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::arch::{SonicConfig, Vdu};
 use crate::model::{Layer, LayerKind, ModelDesc};
 use crate::sim::engine::{InferenceStats, LayerStats, PowerBreakdown};
+use crate::sparsity::stats::MatrixStats;
 
 /// Fraction of passes that fall back to TO retuning without clustering
 /// (large arbitrary-precision weight swings exceeding the EO range).
@@ -41,12 +42,15 @@ pub const TO_FRACTION_UNCLUSTERED: f64 = 0.02;
 /// Average MR transmission the clustered codebook maps to.
 pub const AVG_TRANSMISSION: f64 = 0.5;
 
-/// Density (nnz / total) at or below which the FC executor compiles a
-/// layer into true CSC streaming instead of the dense column-major
-/// fallback.  At 50% density the CSC kernel touches half the weights the
-/// dense kernel does, which is where it starts winning despite its
-/// gather-style access pattern; above it the dense kernel's contiguous
-/// vectorized columns are faster.
+/// Density (nnz / total) at or below which CSC streaming beats the dense
+/// column-major fallback under the default [`KernelPolicy`]: the
+/// `csc_per_nnz = 2.0` coefficient puts the csc/dense crossover exactly
+/// here.  At 50% density the CSC kernel touches half the weights the
+/// dense kernel does, which is where it would start winning despite its
+/// gather-style access pattern — though under the four-kernel selector
+/// the bitmap kernel now takes most of the band around this point.
+/// Kept as a named constant because the analytic docs and benches
+/// reference the crossover.
 pub const CSC_MAX_DENSITY: f64 = 0.5;
 
 /// Which compute kernel a layer executes with (recorded in the plan and
@@ -56,10 +60,24 @@ pub enum KernelChoice {
     /// Dense column-major streaming (zero activations skip columns, but
     /// every stored weight is read).
     Dense,
-    /// Structurally-sparse compressed form: CSC weight streaming for FC,
-    /// value+gather-index compressed kernels for CONV — a structural
-    /// zero weight is never loaded or multiplied.
+    /// Structurally-sparse compressed-sparse-column form: a structural
+    /// zero weight is never loaded or multiplied.  Wins at high weight
+    /// sparsity, where the 32-bit row-index gather is amortized by the
+    /// skipped work.
     Csc,
+    /// Compressed-sparse-row form: each output element is one contiguous
+    /// row walk, streamed in output order.  Wins when row nnz is
+    /// balanced (no straggler rows) — the `row_cv` feature.
+    Csr,
+    /// u64 occupancy masks over dense value slabs: indices cost one bit
+    /// per position instead of 32 per non-zero.  Targets the 0.5–0.9
+    /// density band where CSC's gather loses to dense but 10–50% of the
+    /// multiplies are still structurally wasted.
+    Bitmap,
+    /// The CONV path's compressed (value + gather-index) im2col kernels —
+    /// not an FC candidate, recorded so conv layers report their real
+    /// kernel label instead of borrowing `Csc`.
+    Conv,
 }
 
 impl KernelChoice {
@@ -67,18 +85,154 @@ impl KernelChoice {
         match self {
             KernelChoice::Dense => "dense",
             KernelChoice::Csc => "csc",
+            KernelChoice::Csr => "csr",
+            KernelChoice::Bitmap => "bitmap",
+            KernelChoice::Conv => "conv",
+        }
+    }
+
+    /// The FC kernel candidates the selector scores, in stable tie-break
+    /// order (ties go to the earlier entry; `Conv` is not a candidate).
+    pub const FC_CANDIDATES: [KernelChoice; 4] = [
+        KernelChoice::Dense,
+        KernelChoice::Csc,
+        KernelChoice::Csr,
+        KernelChoice::Bitmap,
+    ];
+}
+
+/// Structure-aware FC kernel selection policy: a micro-cost model scoring
+/// every [`KernelChoice::FC_CANDIDATES`] entry from a matrix's
+/// [`MatrixStats`], in units of *dense-kernel cost per stored element
+/// slab* (the dense kernel always scores 1.0).  Coefficients are
+/// calibrated against the `BENCH_kernels.json` micro-bench grid (see
+/// `benches/hotpath.rs`): each `*_per_nnz` coefficient is the measured
+/// per-nonzero cost of that kernel's inner loop relative to the dense
+/// kernel's contiguous FMA, and the fixed terms capture per-column
+/// overheads that don't scale with nnz.
+///
+/// Defaults preserve the historical two-kernel behaviour at the extremes
+/// (CSC below [`CSC_MAX_DENSITY`]'s neighbourhood, dense near 1.0) and
+/// hand the middle band to the bitmap kernel.  Override per run via
+/// `sonic plan --kernel-policy` or force a single kernel with
+/// `force`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelPolicy {
+    /// Bypass the cost model entirely and compile every FC layer with
+    /// this kernel (the CLI's `--kernel-policy csc` etc.).
+    pub force: Option<KernelChoice>,
+    /// CSC cost per stored element relative to a dense FMA: the 32-bit
+    /// row-index gather plus the scattered accumulate.  2.0 puts the
+    /// csc/dense crossover at [`CSC_MAX_DENSITY`].
+    pub csc_per_nnz: f64,
+    /// CSR cost per stored element on a perfectly row-balanced matrix —
+    /// slightly cheaper than CSC (streamed outputs, no scatter) so CSR
+    /// wins exactly when balance holds.
+    pub csr_per_nnz: f64,
+    /// CSR straggler penalty, multiplied by the row-nnz coefficient of
+    /// variation ([`MatrixStats::row_cv`]): imbalanced rows stall the
+    /// row-major stream.
+    pub csr_imbalance: f64,
+    /// Bitmap fixed cost per position (mask-word scan: one bit per
+    /// element, paid whether stored or not).
+    pub bitmap_fixed: f64,
+    /// Bitmap cost per stored element (`trailing_zeros` walk + FMA).
+    pub bitmap_per_nnz: f64,
+}
+
+impl Default for KernelPolicy {
+    fn default() -> Self {
+        Self {
+            force: None,
+            csc_per_nnz: 2.0,
+            csr_per_nnz: 1.95,
+            csr_imbalance: 2.5,
+            bitmap_fixed: 0.15,
+            bitmap_per_nnz: 1.1,
         }
     }
 }
 
-/// Kernel selection policy for FC layers, shared by the analytic plan
-/// (descriptor sparsity) and the executor (measured density).
-pub fn choose_fc_kernel(density: f64) -> KernelChoice {
-    if density <= CSC_MAX_DENSITY {
-        KernelChoice::Csc
-    } else {
-        KernelChoice::Dense
+impl KernelPolicy {
+    /// Predicted relative cost of running `kernel` on a matrix with the
+    /// given structure statistics (dense == 1.0; lower is better).
+    /// `Conv` is not an FC candidate and scores infinity.
+    pub fn predicted_cost(&self, kernel: KernelChoice, stats: &MatrixStats) -> f64 {
+        let d = stats.density;
+        match kernel {
+            KernelChoice::Dense => 1.0,
+            KernelChoice::Csc => self.csc_per_nnz * d,
+            KernelChoice::Csr => (self.csr_per_nnz + self.csr_imbalance * stats.row_cv()) * d,
+            KernelChoice::Bitmap => self.bitmap_fixed + self.bitmap_per_nnz * d,
+            KernelChoice::Conv => f64::INFINITY,
+        }
     }
+
+    /// Score all FC candidates and return the cheapest (stable tie-break:
+    /// earlier [`KernelChoice::FC_CANDIDATES`] entry wins).  Honors
+    /// `force` when set.
+    pub fn choose(&self, stats: &MatrixStats) -> KernelChoice {
+        if let Some(k) = self.force {
+            return k;
+        }
+        let mut best = KernelChoice::FC_CANDIDATES[0];
+        let mut best_cost = self.predicted_cost(best, stats);
+        for &k in &KernelChoice::FC_CANDIDATES[1..] {
+            let c = self.predicted_cost(k, stats);
+            if c < best_cost {
+                best = k;
+                best_cost = c;
+            }
+        }
+        best
+    }
+
+    /// Parse a CLI policy spec: `auto` (defaults), a kernel name
+    /// (`dense`/`csc`/`csr`/`bitmap` — force that kernel), or
+    /// comma-separated `coefficient=value` overrides
+    /// (e.g. `csc_per_nnz=1.8,bitmap_fixed=0.2`).
+    pub fn parse(s: &str) -> Result<KernelPolicy, String> {
+        let mut p = KernelPolicy::default();
+        match s.trim() {
+            "" | "auto" => return Ok(p),
+            "dense" => p.force = Some(KernelChoice::Dense),
+            "csc" => p.force = Some(KernelChoice::Csc),
+            "csr" => p.force = Some(KernelChoice::Csr),
+            "bitmap" => p.force = Some(KernelChoice::Bitmap),
+            spec => {
+                for kv in spec.split(',') {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("bad kernel-policy item '{kv}' (want k=v)"))?;
+                    let v: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad kernel-policy value '{v}'"))?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!("kernel-policy value '{v}' must be >= 0"));
+                    }
+                    match k.trim() {
+                        "csc_per_nnz" => p.csc_per_nnz = v,
+                        "csr_per_nnz" => p.csr_per_nnz = v,
+                        "csr_imbalance" => p.csr_imbalance = v,
+                        "bitmap_fixed" => p.bitmap_fixed = v,
+                        "bitmap_per_nnz" => p.bitmap_per_nnz = v,
+                        other => return Err(format!("unknown kernel-policy key '{other}'")),
+                    }
+                }
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Legacy scalar-density FC kernel selection, shared by the analytic plan
+/// (descriptor sparsity) and the executor (measured density): the default
+/// [`KernelPolicy`] scored on Bernoulli-estimated structure for a
+/// nominal layer shape.  Call sites that have a real matrix should use
+/// [`KernelPolicy::choose`] on exact [`MatrixStats`] instead.
+pub fn choose_fc_kernel(density: f64) -> KernelChoice {
+    KernelPolicy::default().choose(&MatrixStats::estimate(256, 256, density))
 }
 
 /// Measured batch activation density at or below which the FC kernels run
@@ -187,14 +341,22 @@ pub struct LayerPlan {
     /// Per-device-class energy attribution for one inference.
     pub breakdown: PowerBreakdown,
     /// Executed-kernel selection for the functional executor: FC layers
-    /// pick by the descriptor's weight density against
-    /// [`CSC_MAX_DENSITY`]; CONV layers always run the compressed
-    /// (value + gather-index) kernels.
+    /// are scored by the [`KernelPolicy`] cost model over [`Self::stats`];
+    /// CONV layers always run the compressed (value + gather-index)
+    /// im2col kernels ([`KernelChoice::Conv`]).
     pub kernel: KernelChoice,
     /// Expected surviving (non-zero) weights from the descriptor's
     /// weight sparsity — what the executed kernels do work proportional
     /// to.
     pub weight_nnz: u64,
+    /// Sparsity-structure statistics the kernel selector scored
+    /// (Bernoulli-estimated from the descriptor's weight sparsity at
+    /// plan time; the executor recomputes them exactly from the real
+    /// matrix when it compiles weights).
+    pub stats: MatrixStats,
+    /// The cost model's score for the chosen kernel (dense == 1.0,
+    /// lower is better; 0.0 for CONV layers, which have one kernel).
+    pub predicted_cost: f64,
 }
 
 impl LayerPlan {
@@ -240,11 +402,24 @@ pub struct ModelPlan {
 }
 
 impl ModelPlan {
-    /// Compile `model` for `cfg`.  This is the *only* place in the crate
-    /// where the dataflow math (compression lengths, pass counts, retune
-    /// classification, timing/energy coefficients) is derived.
+    /// Compile `model` for `cfg` under the default [`KernelPolicy`].
+    /// This is the *only* place in the crate where the dataflow math
+    /// (compression lengths, pass counts, retune classification,
+    /// timing/energy coefficients) is derived.
     pub fn compile(model: &ModelDesc, cfg: &SonicConfig) -> ModelPlan {
-        let mut plan = Self::compile_unkeyed(model, cfg);
+        Self::compile_with_policy(model, cfg, &KernelPolicy::default())
+    }
+
+    /// [`ModelPlan::compile`] with an explicit kernel-selection policy
+    /// (the `sonic plan --kernel-policy` path).  Non-default policies are
+    /// never routed through [`cached`] — the cache key doesn't cover the
+    /// policy.
+    pub fn compile_with_policy(
+        model: &ModelDesc,
+        cfg: &SonicConfig,
+        policy: &KernelPolicy,
+    ) -> ModelPlan {
+        let mut plan = Self::compile_unkeyed_with_policy(model, cfg, policy);
         plan.model_key = model_fingerprint(model);
         plan.config_key = config_fingerprint(cfg);
         plan
@@ -256,6 +431,14 @@ impl ModelPlan {
     /// serving hot path — where the `Debug`-format hashing would dominate
     /// the (otherwise pure-arithmetic) compile cost.
     pub fn compile_unkeyed(model: &ModelDesc, cfg: &SonicConfig) -> ModelPlan {
+        Self::compile_unkeyed_with_policy(model, cfg, &KernelPolicy::default())
+    }
+
+    fn compile_unkeyed_with_policy(
+        model: &ModelDesc,
+        cfg: &SonicConfig,
+        policy: &KernelPolicy,
+    ) -> ModelPlan {
         let conv_vdu = cfg.conv_vdu();
         let fc_vdu = cfg.fc_vdu();
         let mut layers = Vec::with_capacity(model.layers.len());
@@ -264,7 +447,7 @@ impl ModelPlan {
         let mut breakdown = PowerBreakdown::default();
 
         for layer in &model.layers {
-            let lp = compile_layer(layer, cfg, &conv_vdu, &fc_vdu);
+            let lp = compile_layer(layer, cfg, &conv_vdu, &fc_vdu, policy);
             total_latency += lp.latency_s;
             overhead += lp.overhead_s;
             breakdown.add(&lp.breakdown);
@@ -407,6 +590,7 @@ fn compile_layer(
     cfg: &SonicConfig,
     conv_vdu: &Vdu,
     fc_vdu: &Vdu,
+    policy: &KernelPolicy,
 ) -> LayerPlan {
     let clustered = cfg.weight_dac_bits <= 6;
     let (vdu, n_vdus, vector_len, outputs, residual_sparsity) = match layer.kind {
@@ -458,23 +642,34 @@ fn compile_layer(
 
     // Executed-kernel record: what the functional executor will run for
     // this layer, and how many weights survive pruning (the work the
-    // structurally-sparse kernels are proportional to).
-    let (weight_total, kernel) = match layer.kind {
+    // structurally-sparse kernels are proportional to).  FC layers are
+    // scored by the policy cost model over Bernoulli-estimated structure
+    // stats (only the descriptor's density scalar exists at plan time;
+    // the executor rescoreds on exact stats when it compiles weights).
+    let weight_density = 1.0 - layer.weight_sparsity;
+    let (weight_total, stats, kernel, predicted_cost) = match layer.kind {
         LayerKind::Conv {
             kernel: k,
             in_ch,
             out_ch,
             ..
-        } => ((k * k * in_ch * out_ch) as u64, KernelChoice::Csc),
+        } => (
+            (k * k * in_ch * out_ch) as u64,
+            // im2col view: out_ch rows of k*k*in_ch unrolled weights
+            MatrixStats::estimate(out_ch, k * k * in_ch, weight_density),
+            KernelChoice::Conv,
+            0.0,
+        ),
         LayerKind::Fc {
             in_dim, out_dim, ..
-        } => (
-            (in_dim * out_dim) as u64,
-            choose_fc_kernel(1.0 - layer.weight_sparsity),
-        ),
+        } => {
+            let stats = MatrixStats::estimate(out_dim, in_dim, weight_density);
+            let kernel = policy.choose(&stats);
+            let cost = policy.predicted_cost(kernel, &stats);
+            ((in_dim * out_dim) as u64, stats, kernel, cost)
+        }
     };
-    let weight_nnz =
-        (weight_total as f64 * (1.0 - layer.weight_sparsity)).round() as u64;
+    let weight_nnz = (weight_total as f64 * weight_density).round() as u64;
 
     let lanes = vdu.lanes as u64;
     let passes_per_output = ceil_div(vector_len as u64, lanes);
@@ -569,6 +764,8 @@ fn compile_layer(
         breakdown,
         kernel,
         weight_nnz,
+        stats,
+        predicted_cost,
     }
 }
 
@@ -726,7 +923,12 @@ mod tests {
         }
         let p = ModelPlan::compile(&m, &SonicConfig::paper_best());
         for (lp, l) in p.layers.iter().zip(&m.layers) {
-            assert_eq!(lp.kernel, KernelChoice::Csc, "{}", lp.name);
+            let want = if lp.is_conv {
+                KernelChoice::Conv
+            } else {
+                KernelChoice::Csc
+            };
+            assert_eq!(lp.kernel, want, "{}", lp.name);
             let total = match l.kind {
                 LayerKind::Conv {
                     kernel,
@@ -737,6 +939,13 @@ mod tests {
                 LayerKind::Fc { in_dim, out_dim, .. } => in_dim * out_dim,
             } as f64;
             assert_eq!(lp.weight_nnz, (total * 0.1).round() as u64, "{}", lp.name);
+            // structure stats recorded with matching density
+            assert!((lp.stats.density - 0.1).abs() < 1e-12, "{}", lp.name);
+            if !lp.is_conv {
+                assert!(lp.predicted_cost > 0.0 && lp.predicted_cost < 1.0);
+            } else {
+                assert_eq!(lp.predicted_cost, 0.0);
+            }
         }
         // a dense FC layer must fall back to the dense kernel
         for l in &mut m.layers {
@@ -745,9 +954,102 @@ mod tests {
         let dense = ModelPlan::compile(&m, &SonicConfig::paper_best());
         for lp in dense.layers.iter().filter(|l| !l.is_conv) {
             assert_eq!(lp.kernel, KernelChoice::Dense, "{}", lp.name);
+            assert_eq!(lp.predicted_cost, 1.0, "{}", lp.name);
         }
-        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY), KernelChoice::Csc);
-        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY + 0.01), KernelChoice::Dense);
+        // the bitmap kernel owns the band around the old two-kernel cutoff
+        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY), KernelChoice::Bitmap);
+        assert_eq!(choose_fc_kernel(CSC_MAX_DENSITY + 0.01), KernelChoice::Bitmap);
+    }
+
+    #[test]
+    fn cost_model_picks_pinned_at_grid_corners() {
+        // The ISSUE-pinned corners of the bench grid, on the default
+        // policy with Bernoulli-estimated structure.
+        assert_eq!(choose_fc_kernel(0.05), KernelChoice::Csc);
+        assert_eq!(choose_fc_kernel(0.7), KernelChoice::Bitmap);
+        assert_eq!(choose_fc_kernel(0.95), KernelChoice::Dense);
+        // the same picks on exact per-layer shapes
+        let p = KernelPolicy::default();
+        for (rows, cols) in [(128, 784), (10, 128), (512, 512)] {
+            assert_eq!(p.choose(&MatrixStats::estimate(rows, cols, 0.05)), KernelChoice::Csc);
+            assert_eq!(
+                p.choose(&MatrixStats::estimate(rows, cols, 0.7)),
+                KernelChoice::Bitmap
+            );
+            assert_eq!(
+                p.choose(&MatrixStats::estimate(rows, cols, 0.95)),
+                KernelChoice::Dense
+            );
+        }
+    }
+
+    #[test]
+    fn cost_model_prefers_csr_only_when_rows_balance() {
+        let p = KernelPolicy::default();
+        // perfectly balanced rows (row_cv == 0): CSR's streamed outputs
+        // undercut CSC at any density where either beats dense
+        let balanced = MatrixStats {
+            row_nnz_var: 0.0,
+            ..MatrixStats::estimate(64, 64, 0.1)
+        };
+        assert_eq!(balanced.row_cv(), 0.0);
+        assert!(
+            p.predicted_cost(KernelChoice::Csr, &balanced)
+                < p.predicted_cost(KernelChoice::Csc, &balanced)
+        );
+        assert_eq!(p.choose(&balanced), KernelChoice::Csr);
+        // clustered rows (large cv): the straggler penalty hands it back
+        let clustered = MatrixStats {
+            row_nnz_var: 100.0,
+            ..balanced
+        };
+        assert_eq!(p.choose(&clustered), KernelChoice::Csc);
+    }
+
+    #[test]
+    fn kernel_policy_parse_forms() {
+        assert_eq!(KernelPolicy::parse("auto").unwrap(), KernelPolicy::default());
+        assert_eq!(KernelPolicy::parse("").unwrap(), KernelPolicy::default());
+        assert_eq!(
+            KernelPolicy::parse("bitmap").unwrap().force,
+            Some(KernelChoice::Bitmap)
+        );
+        let p = KernelPolicy::parse("csc_per_nnz=1.5,bitmap_fixed=0.3").unwrap();
+        assert_eq!(p.csc_per_nnz, 1.5);
+        assert_eq!(p.bitmap_fixed, 0.3);
+        assert_eq!(p.force, None);
+        // forced policy overrides any stats
+        let forced = KernelPolicy::parse("dense").unwrap();
+        assert_eq!(
+            forced.choose(&MatrixStats::estimate(64, 64, 0.01)),
+            KernelChoice::Dense
+        );
+        assert!(KernelPolicy::parse("conv").is_err());
+        assert!(KernelPolicy::parse("csc_per_nnz").is_err());
+        assert!(KernelPolicy::parse("csc_per_nnz=x").is_err());
+        assert!(KernelPolicy::parse("csc_per_nnz=-1").is_err());
+        assert!(KernelPolicy::parse("nope=1").is_err());
+    }
+
+    #[test]
+    fn compile_with_policy_honors_force() {
+        let m = ModelDesc::builtin("mnist").unwrap();
+        let cfg = SonicConfig::paper_best();
+        let forced = ModelPlan::compile_with_policy(
+            &m,
+            &cfg,
+            &KernelPolicy {
+                force: Some(KernelChoice::Csr),
+                ..KernelPolicy::default()
+            },
+        );
+        for lp in forced.layers.iter().filter(|l| !l.is_conv) {
+            assert_eq!(lp.kernel, KernelChoice::Csr, "{}", lp.name);
+        }
+        // conv layers keep their own kernel regardless of FC policy
+        for lp in forced.layers.iter().filter(|l| l.is_conv) {
+            assert_eq!(lp.kernel, KernelChoice::Conv, "{}", lp.name);
+        }
     }
 
     #[test]

@@ -592,8 +592,10 @@ impl EngineBuilder {
         match choice {
             BackendChoice::Custom(b) => Ok((Arc::clone(b), "custom")),
             BackendChoice::Plan => {
-                let b: Arc<dyn InferenceBackend> =
-                    Arc::new(PlanBackend::synthetic(desc, self.synthetic_seed));
+                let b: Arc<dyn InferenceBackend> = Arc::new(
+                    PlanBackend::synthetic(desc, self.synthetic_seed)
+                        .with_autotune(self.serve_cfg.autotune),
+                );
                 Ok((b, "plan"))
             }
             BackendChoice::Pjrt => {
@@ -623,8 +625,10 @@ impl EngineBuilder {
                          compiled plan (synthetic weights)"
                     );
                 }
-                let b: Arc<dyn InferenceBackend> =
-                    Arc::new(PlanBackend::synthetic(desc, self.synthetic_seed));
+                let b: Arc<dyn InferenceBackend> = Arc::new(
+                    PlanBackend::synthetic(desc, self.synthetic_seed)
+                        .with_autotune(self.serve_cfg.autotune),
+                );
                 Ok((b, "plan"))
             }
         }

@@ -140,8 +140,9 @@ pub struct LaneReport {
 }
 
 /// One layer's accumulated kernel time inside a backend: which compute
-/// kernel the layer compiled to (`"csc"`, `"dense"`, `"conv"`), how long
-/// that kernel has run across every batch served so far, and the
+/// kernel the layer compiled to (`"dense"`, `"csc"`, `"csr"`,
+/// `"bitmap"` for FC layers, `"conv"` for the im2col conv path), how
+/// long that kernel has run across every batch served so far, and the
 /// activation density it measured on the inputs that actually flowed.
 #[derive(Debug, Clone)]
 pub struct LayerKernelStat {

@@ -202,6 +202,13 @@ pub struct ServeConfig {
     /// under pressure, drain immediately when arrivals are slower than
     /// `batch_window`.  `false` restores the fixed window.
     pub adaptive_window: bool,
+    /// First-batch kernel autotune (`serve --autotune`): the plan
+    /// backend times every candidate FC kernel on the first real batch
+    /// and re-plans any layer whose measured winner disagrees with the
+    /// cost model's prediction (outputs are bit-identical either way —
+    /// only the speed changes).  Off by default: the cost model alone
+    /// decides, with no first-batch timing hiccup.
+    pub autotune: bool,
 }
 
 impl Default for ServeConfig {
@@ -212,6 +219,7 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             promote_after: Duration::from_millis(25),
             adaptive_window: true,
+            autotune: false,
         }
     }
 }

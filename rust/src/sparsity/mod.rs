@@ -264,6 +264,189 @@ impl CscMatrix {
     }
 }
 
+/// Compressed-sparse-row storage: row `r`'s entries live at
+/// `vals/col_idx[row_ptr[r] .. row_ptr[r+1]]`, `col_idx` ascending within
+/// each row.  This is the compiled form the FC executor streams when row
+/// nnz is balanced: each output element is produced by one contiguous
+/// row walk, in the same ascending-column order as the dense reference,
+/// so the kernel stays bit-identical while streaming outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zero values, row-major order.
+    pub vals: Vec<f32>,
+    /// Column index of each value (`< cols`), ascending within a row.
+    pub col_idx: Vec<u32>,
+    /// `rows + 1` offsets into `vals`/`col_idx`; `row_ptr[0] == 0`.
+    pub row_ptr: Vec<u32>,
+}
+
+impl CsrMatrix {
+    /// Compress a dense column-major matrix, dropping entries that fail
+    /// [`keep_nonzero`] with `eps == 0.0` (same exact contract as
+    /// [`CscMatrix::from_col_major`]).
+    pub fn from_col_major(m: &ColMatrix) -> Self {
+        let mut vals = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        row_ptr.push(0u32);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let v = m.data[c * m.rows + r];
+                if keep_nonzero(v, 0.0) {
+                    vals.push(v);
+                    col_idx.push(c as u32);
+                }
+            }
+            row_ptr.push(vals.len() as u32);
+        }
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            vals,
+            col_idx,
+            row_ptr,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of stored (non-zero) entries.
+    pub fn density(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / total
+    }
+
+    /// Row `r` as `(values, column_indices)` slices.
+    pub fn row(&self, r: usize) -> (&[f32], &[u32]) {
+        let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+        (&self.vals[lo..hi], &self.col_idx[lo..hi])
+    }
+
+    /// y = M * x, reference implementation.  Each output element
+    /// accumulates its row's stored terms in ascending column order —
+    /// per element the exact order of [`ColMatrix::matvec`].
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let (vals, idx) = self.row(r);
+            let mut acc = 0.0f32;
+            for (&v, &c) in vals.iter().zip(idx) {
+                acc += v * x[c as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+/// Bitmap-compressed storage for the moderate-density band: per column a
+/// `u64` occupancy mask (bit `r % 64` of word `r / 64` set iff row `r` is
+/// stored) over a dense slab of the stored values, ascending row within
+/// each column.  Indices cost one bit per *position* instead of 32 bits
+/// per *non-zero*, so at 0.5–0.9 density the stream stays nearly as
+/// compact as dense while still skipping 10–50% of the multiplies that
+/// CSC's 32-bit index gather can no longer afford to chase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitmapMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Non-zero values, column-major order (ascending row within column).
+    pub vals: Vec<f32>,
+    /// `cols + 1` offsets into `vals`; `col_ptr[0] == 0`.
+    pub col_ptr: Vec<u32>,
+    /// `words_per_col()` mask words per column, column-major.
+    pub masks: Vec<u64>,
+}
+
+impl BitmapMatrix {
+    /// `u64` words needed to cover one column of `rows` bits.
+    pub fn words_per_col(rows: usize) -> usize {
+        rows.div_ceil(64)
+    }
+
+    /// Compress a dense column-major matrix, dropping entries that fail
+    /// [`keep_nonzero`] with `eps == 0.0` (same exact contract as
+    /// [`CscMatrix::from_col_major`]).
+    pub fn from_col_major(m: &ColMatrix) -> Self {
+        let wpc = Self::words_per_col(m.rows);
+        let mut vals = Vec::new();
+        let mut col_ptr = Vec::with_capacity(m.cols + 1);
+        let mut masks = vec![0u64; wpc * m.cols];
+        col_ptr.push(0u32);
+        for c in 0..m.cols {
+            for (r, &v) in m.col(c).iter().enumerate() {
+                if keep_nonzero(v, 0.0) {
+                    vals.push(v);
+                    masks[c * wpc + r / 64] |= 1u64 << (r % 64);
+                }
+            }
+            col_ptr.push(vals.len() as u32);
+        }
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            vals,
+            col_ptr,
+            masks,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of stored (non-zero) entries.
+    pub fn density(&self) -> f64 {
+        let total = (self.rows * self.cols) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / total
+    }
+
+    /// Column `c` as `(values, mask_words)` slices; bit `r % 64` of word
+    /// `r / 64` is set iff row `r` stores the next value.
+    pub fn col(&self, c: usize) -> (&[f32], &[u64]) {
+        let (lo, hi) = (self.col_ptr[c] as usize, self.col_ptr[c + 1] as usize);
+        let wpc = Self::words_per_col(self.rows);
+        (&self.vals[lo..hi], &self.masks[c * wpc..(c + 1) * wpc])
+    }
+
+    /// y = M * x, reference implementation mirroring
+    /// [`ColMatrix::matvec`] (same ascending-column accumulation order;
+    /// within a column, `trailing_zeros` walks rows ascending).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for c in 0..self.cols {
+            let xv = x[c];
+            if xv == 0.0 {
+                continue;
+            }
+            let (vals, words) = self.col(c);
+            let mut vi = 0usize;
+            for (wi, &word) in words.iter().enumerate() {
+                let mut w = word;
+                while w != 0 {
+                    let r = wi * 64 + w.trailing_zeros() as usize;
+                    y[r] += vals[vi] * xv;
+                    vi += 1;
+                    w &= w - 1;
+                }
+            }
+        }
+        y
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,5 +576,89 @@ mod tests {
         });
         assert_eq!(e.density(), 0.0);
         assert_eq!(e.col_ptr, vec![0]);
+    }
+
+    #[test]
+    fn csr_round_trips_and_counts() {
+        // [[1, 0, 2], [0, 0, -3]] row-major
+        let m = ColMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let s = CsrMatrix::from_col_major(&m);
+        assert_eq!(s.nnz(), 3);
+        assert!((s.density() - 0.5).abs() < 1e-12);
+        assert_eq!(s.row_ptr, vec![0, 2, 3]);
+        let (v0, i0) = s.row(0);
+        assert_eq!(v0, &[1.0, 2.0]);
+        assert_eq!(i0, &[0, 2]); // ascending columns within the row
+        let (v1, i1) = s.row(1);
+        assert_eq!((v1, i1), (&[-3.0f32][..], &[2u32][..]));
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        let m = ColMatrix::from_row_major(3, 4, &[0., 2., 0., 1., 5., 0., 0., 0., 0., -1., 3., 0.]);
+        let s = CsrMatrix::from_col_major(&m);
+        let x = vec![1.0, -2.0, 0.5, 4.0];
+        assert_eq!(s.matvec(&x), m.matvec(&x));
+    }
+
+    #[test]
+    fn csr_all_zero_and_empty() {
+        let z = CsrMatrix::from_col_major(&ColMatrix::from_row_major(2, 2, &[0.0; 4]));
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.matvec(&[1.0, 1.0]), vec![0.0, 0.0]);
+        let e = CsrMatrix::from_col_major(&ColMatrix {
+            rows: 0,
+            cols: 0,
+            data: vec![],
+        });
+        assert_eq!(e.density(), 0.0);
+        assert_eq!(e.row_ptr, vec![0]);
+    }
+
+    #[test]
+    fn bitmap_round_trips_and_counts() {
+        // [[1, 0, 2], [0, 0, -3]] row-major
+        let m = ColMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let b = BitmapMatrix::from_col_major(&m);
+        assert_eq!(b.nnz(), 3);
+        assert!((b.density() - 0.5).abs() < 1e-12);
+        assert_eq!(b.col_ptr, vec![0, 1, 1, 3]); // middle column empty
+        let (v0, w0) = b.col(0);
+        assert_eq!((v0, w0), (&[1.0f32][..], &[0b01u64][..]));
+        let (v2, w2) = b.col(2);
+        assert_eq!(v2, &[2.0, -3.0]); // ascending row within the column
+        assert_eq!(w2, &[0b11]);
+    }
+
+    #[test]
+    fn bitmap_matvec_matches_dense_across_word_boundary() {
+        // 70 rows forces two mask words per column.
+        let rows = 70;
+        let mut rm = vec![0.0f32; rows * 2];
+        for r in (0..rows).step_by(3) {
+            rm[r * 2] = r as f32 + 1.0;
+            rm[r * 2 + 1] = -(r as f32) - 0.5;
+        }
+        let m = ColMatrix::from_row_major(rows, 2, &rm);
+        let b = BitmapMatrix::from_col_major(&m);
+        assert_eq!(BitmapMatrix::words_per_col(rows), 2);
+        let x = vec![0.25, -2.0];
+        assert_eq!(b.matvec(&x), m.matvec(&x));
+    }
+
+    #[test]
+    fn bitmap_all_zero_and_empty() {
+        let z = BitmapMatrix::from_col_major(&ColMatrix::from_row_major(2, 2, &[0.0; 4]));
+        assert_eq!(z.nnz(), 0);
+        assert!(z.masks.iter().all(|&w| w == 0));
+        assert_eq!(z.matvec(&[1.0, 1.0]), vec![0.0, 0.0]);
+        let e = BitmapMatrix::from_col_major(&ColMatrix {
+            rows: 0,
+            cols: 0,
+            data: vec![],
+        });
+        assert_eq!(e.density(), 0.0);
+        assert_eq!(e.col_ptr, vec![0]);
+        assert!(e.masks.is_empty());
     }
 }

@@ -1,8 +1,137 @@
 //! Sparsity statistics over weight packs — the data behind Fig. 7
-//! (layer-wise weight & activation sparsity per model).
+//! (layer-wise weight & activation sparsity per model) and the
+//! per-matrix structure statistics feeding the kernel selector
+//! ([`MatrixStats`]).
 
+use super::ColMatrix;
 use crate::model::ModelDesc;
 use crate::tensor::Tensor;
+
+/// Per-matrix sparsity *structure* statistics — the features the kernel
+/// selector (`plan::KernelPolicy`) scores instead of a single density
+/// scalar.  The winning format depends on how the non-zeros are
+/// distributed (row/column balance, band-ness), not just how many there
+/// are: balanced rows favour CSR's streamed outputs, moderate density
+/// favours bitmap masks, extreme sparsity favours CSC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored (non-zero) entries.
+    pub nnz: u64,
+    /// `nnz / (rows * cols)`; 0 for an empty matrix.
+    pub density: f64,
+    /// Mean non-zeros per row.
+    pub row_nnz_mean: f64,
+    /// Population variance of non-zeros per row.
+    pub row_nnz_var: f64,
+    /// Mean non-zeros per column.
+    pub col_nnz_mean: f64,
+    /// Population variance of non-zeros per column.
+    pub col_nnz_var: f64,
+    /// Widest row band: max over rows of `last_col - first_col + 1`
+    /// (0 when no row stores anything).
+    pub max_band: usize,
+}
+
+impl MatrixStats {
+    /// Exact statistics from a dense column-major matrix (one pass;
+    /// zeroness decided by IEEE `!= 0.0`, the same contract the
+    /// compressed formats use).
+    pub fn from_col_major(m: &ColMatrix) -> Self {
+        let mut row_nnz = vec![0u64; m.rows];
+        let mut row_first = vec![usize::MAX; m.rows];
+        let mut row_last = vec![0usize; m.rows];
+        let mut col_nnz = vec![0u64; m.cols];
+        for c in 0..m.cols {
+            for (r, &v) in m.col(c).iter().enumerate() {
+                if v != 0.0 {
+                    row_nnz[r] += 1;
+                    col_nnz[c] += 1;
+                    if row_first[r] == usize::MAX {
+                        row_first[r] = c;
+                    }
+                    row_last[r] = c;
+                }
+            }
+        }
+        let nnz: u64 = row_nnz.iter().sum();
+        let max_band = (0..m.rows)
+            .filter(|&r| row_first[r] != usize::MAX)
+            .map(|r| row_last[r] - row_first[r] + 1)
+            .max()
+            .unwrap_or(0);
+        let mean_var = |counts: &[u64]| -> (f64, f64) {
+            if counts.is_empty() {
+                return (0.0, 0.0);
+            }
+            let n = counts.len() as f64;
+            let mean = counts.iter().sum::<u64>() as f64 / n;
+            let var = counts
+                .iter()
+                .map(|&c| (c as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n;
+            (mean, var)
+        };
+        let (row_nnz_mean, row_nnz_var) = mean_var(&row_nnz);
+        let (col_nnz_mean, col_nnz_var) = mean_var(&col_nnz);
+        let total = (m.rows * m.cols) as f64;
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            nnz,
+            density: if total == 0.0 { 0.0 } else { nnz as f64 / total },
+            row_nnz_mean,
+            row_nnz_var,
+            col_nnz_mean,
+            col_nnz_var,
+            max_band,
+        }
+    }
+
+    /// Bernoulli estimate for plan time, when only a density scalar is
+    /// known (each entry independently non-zero with probability `d`):
+    /// row nnz ~ Binomial(cols, d) so mean `d·cols`, variance
+    /// `d(1-d)·cols`; columns analogously.  Band width defaults to the
+    /// full matrix — unstructured sparsity has no band to exploit.
+    pub fn estimate(rows: usize, cols: usize, density: f64) -> Self {
+        let d = density.clamp(0.0, 1.0);
+        let total = (rows * cols) as f64;
+        Self {
+            rows,
+            cols,
+            nnz: (d * total).round() as u64,
+            density: d,
+            row_nnz_mean: d * cols as f64,
+            row_nnz_var: d * (1.0 - d) * cols as f64,
+            col_nnz_mean: d * rows as f64,
+            col_nnz_var: d * (1.0 - d) * rows as f64,
+            max_band: if d > 0.0 { cols } else { 0 },
+        }
+    }
+
+    /// Coefficient of variation of row nnz (`sqrt(var)/mean`, 0 when the
+    /// mean is 0) — the row-balance feature: 0 means perfectly balanced
+    /// rows (CSR streams without straggler rows), large means clustered.
+    pub fn row_cv(&self) -> f64 {
+        if self.row_nnz_mean == 0.0 {
+            0.0
+        } else {
+            self.row_nnz_var.sqrt() / self.row_nnz_mean
+        }
+    }
+
+    /// Widest row band as a fraction of the column count (1.0 = no band
+    /// structure, small = tightly banded).
+    pub fn band_frac(&self) -> f64 {
+        if self.cols == 0 {
+            0.0
+        } else {
+            self.max_band as f64 / self.cols as f64
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct LayerSparsity {
@@ -77,5 +206,65 @@ mod tests {
         let (w, a) = model_avg_sparsity(&d);
         assert!((0.0..=1.0).contains(&w));
         assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn matrix_stats_exact_counts() {
+        // [[1, 0, 2], [0, 0, -3]] row-major: row nnz {2, 1}, col nnz
+        // {1, 0, 2}, row 0 band [0, 2] width 3, row 1 band width 1.
+        let m = ColMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, -3.0]);
+        let s = MatrixStats::from_col_major(&m);
+        assert_eq!(s.nnz, 3);
+        assert!((s.density - 0.5).abs() < 1e-12);
+        assert!((s.row_nnz_mean - 1.5).abs() < 1e-12);
+        assert!((s.row_nnz_var - 0.25).abs() < 1e-12);
+        assert!((s.col_nnz_mean - 1.0).abs() < 1e-12);
+        assert!((s.col_nnz_var - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_band, 3);
+        assert!((s.band_frac() - 1.0).abs() < 1e-12);
+        assert!((s.row_cv() - 0.5 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_stats_empty_and_all_zero() {
+        let z = MatrixStats::from_col_major(&ColMatrix::from_row_major(3, 4, &[0.0; 12]));
+        assert_eq!(z.nnz, 0);
+        assert_eq!(z.density, 0.0);
+        assert_eq!(z.max_band, 0);
+        assert_eq!(z.row_cv(), 0.0);
+        let e = MatrixStats::from_col_major(&ColMatrix {
+            rows: 0,
+            cols: 0,
+            data: vec![],
+        });
+        assert_eq!(e.density, 0.0);
+        assert_eq!(e.row_nnz_mean, 0.0);
+        assert_eq!(e.band_frac(), 0.0);
+    }
+
+    #[test]
+    fn matrix_stats_estimate_matches_bernoulli_moments() {
+        let s = MatrixStats::estimate(10, 20, 0.3);
+        assert_eq!(s.nnz, 60);
+        assert!((s.row_nnz_mean - 6.0).abs() < 1e-12);
+        assert!((s.row_nnz_var - 0.3 * 0.7 * 20.0).abs() < 1e-12);
+        assert!((s.col_nnz_mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.max_band, 20);
+        // dense matrix estimate: zero variance, full band
+        let d = MatrixStats::estimate(4, 4, 1.0);
+        assert_eq!(d.row_nnz_var, 0.0);
+        // zero density: nothing stored, no band
+        let z = MatrixStats::estimate(4, 4, 0.0);
+        assert_eq!(z.nnz, 0);
+        assert_eq!(z.max_band, 0);
+    }
+
+    #[test]
+    fn matrix_stats_exact_agrees_with_estimate_on_uniform_matrix() {
+        // A fully-dense matrix: exact stats must equal the d=1 estimate.
+        let m = ColMatrix::from_row_major(3, 5, &[1.0; 15]);
+        let exact = MatrixStats::from_col_major(&m);
+        let est = MatrixStats::estimate(3, 5, 1.0);
+        assert_eq!(exact, est);
     }
 }

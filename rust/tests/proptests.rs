@@ -343,11 +343,12 @@ fn prop_csc_kernel_survives_zero_columns_and_matrices() {
 
 #[test]
 fn prop_act_gated_kernels_bit_identical_to_ungated() {
-    // The dual-sparsity acceptance property: the activation-gated CSC and
-    // dense kernels (skip a stored column when its batch activation slab
-    // is all exactly zero) must produce bit-identical outputs to the
-    // ungated PR 3 kernels — across weight sparsity 0.0..=0.99, all-zero
-    // activation rows, batch 0/1/64, and eps-thresholded inputs.
+    // The dual-sparsity acceptance property: the activation-gated kernels
+    // (skip a stored column when its batch activation slab is all exactly
+    // zero) must produce bit-identical outputs to the ungated kernels —
+    // for every FC kernel (dense, CSC, CSR, bitmap), across weight
+    // sparsity 0.0..=0.99, all-zero activation rows, batch 0/1/64, and
+    // eps-thresholded inputs.
     use sonic::plan::{FcExec, KernelChoice};
     check("act-gated == ungated", Config::default(), |g: &mut Gen| {
         let rows = g.dim(1, 24);
@@ -367,7 +368,12 @@ fn prop_act_gated_kernels_bit_identical_to_ungated() {
             }
             batch
         };
-        for kernel in [KernelChoice::Dense, KernelChoice::Csc] {
+        for kernel in [
+            KernelChoice::Dense,
+            KernelChoice::Csc,
+            KernelChoice::Csr,
+            KernelChoice::Bitmap,
+        ] {
             let fc = FcExec::with_kernel(w.clone(), relu, 0.0, kernel);
             for bn in [0usize, 1, g.dim(2, 9), 64] {
                 let asp = g.f64(0.0, 1.0);
@@ -387,6 +393,68 @@ fn prop_act_gated_kernels_bit_identical_to_ungated() {
                     return Err(format!(
                         "auto-gate != forced ({kernel:?} batch={bn} asp={asp:.3})"
                     ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_and_bitmap_kernels_match_dense_reference() {
+    // PR 6 acceptance: the two new compressed kernels (row-major CSR and
+    // u64-bitmap), gated and ungated, must equal the dense FcExec
+    // reference exactly — same per-element ascending-column accumulation
+    // order — across weight density 0.0..=0.99 (sampled to cover the
+    // mid-density bitmap band), whole rows/columns zeroed, empty batch,
+    // and batch=1.  Rows range past 64 so bitmap masks cross a word
+    // boundary.
+    use sonic::plan::{FcExec, KernelChoice};
+    check("csr/bitmap kernel == dense kernel", Config::default(), |g: &mut Gen| {
+        let rows = g.dim(1, 80);
+        let cols = g.dim(1, 48);
+        let wsp = g.f64(0.0, 0.99);
+        let mut w_rm = g.sparse_vec(rows * cols, wsp);
+        // zero a random subset of whole columns (dead CSC/bitmap columns)
+        // and whole rows (empty CSR rows) outright
+        let p_zero = g.f64(0.0, 0.5);
+        for c in 0..cols {
+            if g.rng.bool(p_zero) {
+                for r in 0..rows {
+                    w_rm[r * cols + c] = 0.0;
+                }
+            }
+        }
+        for r in 0..rows {
+            if g.rng.bool(p_zero) {
+                w_rm[r * cols..(r + 1) * cols].fill(0.0);
+            }
+        }
+        let w = ColMatrix::from_row_major(rows, cols, &w_rm);
+        let relu = g.rng.bool(0.5);
+        let dense = FcExec::with_kernel(w.clone(), relu, 0.0, KernelChoice::Dense);
+        for kernel in [KernelChoice::Csr, KernelChoice::Bitmap] {
+            let fc = FcExec::with_kernel(w.clone(), relu, 0.0, kernel);
+            for bn in [0usize, 1, g.dim(2, 9)] {
+                let asp = g.f64(0.0, 1.0);
+                let mut batch: Vec<Vec<f32>> =
+                    (0..bn).map(|_| g.sparse_vec(cols, asp)).collect();
+                if bn > 1 {
+                    batch[0] = vec![0.0; cols]; // all-zero activation row
+                }
+                let want = dense.forward_batch(&batch).map_err(|e| e.to_string())?;
+                for gate in [Some(true), Some(false), None] {
+                    let got = match gate {
+                        Some(on) => fc.forward_batch_gated(&batch, on),
+                        None => fc.forward_batch(&batch),
+                    }
+                    .map_err(|e| e.to_string())?;
+                    if got != want {
+                        return Err(format!(
+                            "{kernel:?} != dense (gate={gate:?} rows={rows} cols={cols} \
+                             wsp={wsp:.3} asp={asp:.3} batch={bn})"
+                        ));
+                    }
                 }
             }
         }
@@ -537,6 +605,7 @@ fn prop_qos_tickets_always_resolve() {
                         Duration::from_millis(5)
                     },
                     adaptive_window: g.rng.bool(0.5),
+                    autotune: false,
                 })
                 .model_desc(
                     ModelDesc::builtin("mnist").unwrap(),
