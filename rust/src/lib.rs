@@ -33,7 +33,11 @@
 //!   histograms plus shed/promotion counters.  The request router +
 //!   dynamic batcher of earlier revisions (`Router`/`drain_batch`) is a
 //!   `pub(crate)` internal of this module — the engine is the only way
-//!   to serve.
+//!   to serve.  **Network edge** ([`serve::net`]): a hand-rolled
+//!   multi-tenant gateway (HTTP/1.1 + a framed-TCP fast path sharing one
+//!   port) maps API keys to token-bucket rate limits and weighted fair
+//!   shares, QoS headers onto the lanes, and drains gracefully; the
+//!   socket load generator (`sonic loadgen`) writes `BENCH_net.json`.
 //! * [`plan`] — the compile-once `LayerPlan`/`ModelPlan` IR (see
 //!   `src/plan/README.md`): every `(model, SonicConfig)` pair is compiled
 //!   exactly once into per-layer VDU decompositions, EO-vs-TO retune

@@ -17,7 +17,10 @@ use sonic::util::err::Result;
 use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
 use sonic::model::ModelDesc;
-use sonic::serve::workload::{print_report, PoissonWorkload};
+use sonic::serve::net::{
+    fetch_models, LoadGen, NetConfig, NetServer, TenantLoad, TenantSpec,
+};
+use sonic::serve::workload::{print_report, Arrivals, PoissonWorkload};
 use sonic::serve::{BackendChoice, Engine, Priority, ServeConfig, SubmitOptions};
 use sonic::sim::{ablation, simulate};
 use sonic::sim::dse;
@@ -49,6 +52,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "infer" => cmd_infer(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "compare" => cmd_compare(rest),
         "dse" => cmd_dse(rest),
         "ablation" => cmd_ablation(rest),
@@ -79,9 +83,18 @@ USAGE: sonic <subcommand> [options]
                                         functional inference via the serve engine
   serve     --model <m> [--requests N] [--batch B] [--rate R] [--backend auto|pjrt|plan]
             [--priority high|normal|batch] [--deadline-ms D] [--autotune]
-                                        serve a synthetic request stream
+            [--listen addr:port] [--tenants name:key:rps:burst:prio:weight,...]
+            [--duration-s S]
+                                        serve a synthetic request stream, or —
+                                        with --listen — expose the engine as a
+                                        multi-tenant HTTP + framed-TCP gateway
                                         (--autotune: time all FC kernels on the
                                         first batch and re-plan mispredictions)
+  loadgen   [--target addr:port] [--requests N] [--slow-us U] [--out f.json]
+                                        socket load generator; without --target
+                                        it serves itself on a loopback port with
+                                        a deliberately slow backend (overload)
+                                        and writes BENCH_net.json
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
@@ -111,6 +124,12 @@ fn specs_model() -> Vec<OptSpec> {
         OptSpec { name: "priority", takes_value: true, help: "QoS lane: high|normal|batch" },
         OptSpec { name: "kernel-policy", takes_value: true, help: "FC kernel policy: auto (cost model), dense|csc|csr|bitmap (force), or k=v,... cost coefficients" },
         OptSpec { name: "autotune", takes_value: false, help: "time every candidate FC kernel on the first batch and re-plan mispredicted layers" },
+        OptSpec { name: "listen", takes_value: true, help: "serve over TCP on addr:port (HTTP + framed)" },
+        OptSpec { name: "tenants", takes_value: true, help: "tenant list: name:key:rate_rps:burst:priority:weight,..." },
+        OptSpec { name: "duration-s", takes_value: true, help: "network serve duration in seconds (0 = forever)" },
+        OptSpec { name: "target", takes_value: true, help: "loadgen target addr:port (absent = self-serve loopback)" },
+        OptSpec { name: "slow-us", takes_value: true, help: "self-serve backend delay per batch (microseconds)" },
+        OptSpec { name: "out", takes_value: true, help: "output JSON path" },
         OptSpec { name: "no-gating", takes_value: false, help: "disable VCSEL power gating" },
         OptSpec { name: "no-compression", takes_value: false, help: "disable dataflow compression" },
         OptSpec { name: "no-clustering", takes_value: false, help: "disable weight clustering" },
@@ -201,6 +220,9 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
+    if a.get("listen").is_some() {
+        return cmd_serve_net(&a);
+    }
     let model = a.get_or("model", "mnist").to_string();
     let n_requests: usize = a.parse_num("requests", 64)?;
     let max_batch: usize = a.parse_num("batch", 8)?;
@@ -244,6 +266,205 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!();
     print_report(metrics.model(&model).expect("registered model"));
     Ok(())
+}
+
+/// `sonic serve --listen addr:port`: expose the engine as the network
+/// gateway (HTTP/1.1 + framed TCP on one port, multi-tenant admission).
+fn cmd_serve_net(a: &Args) -> Result<()> {
+    let listen = a.get("listen").expect("checked by caller");
+    let model = a.get_or("model", "mnist").to_string();
+    let max_batch: usize = a.parse_num("batch", 8)?;
+    let backend = BackendChoice::parse(a.get_or("backend", "auto"))?;
+    let tenants = match a.get("tenants") {
+        Some(spec) => TenantSpec::parse_list(spec)?,
+        None => TenantSpec::demo_fleet(),
+    };
+    let duration_s: f64 = a.parse_num("duration-s", 0.0)?;
+
+    let engine = std::sync::Arc::new(
+        Engine::builder()
+            .arch(arch_from(a))
+            .serve_config(ServeConfig {
+                max_batch,
+                batch_window: Duration::from_millis(2),
+                autotune: a.flag("autotune"),
+                ..ServeConfig::default()
+            })
+            .model(&model, backend)
+            .build()?,
+    );
+    let server = NetServer::bind(
+        listen,
+        std::sync::Arc::clone(&engine),
+        tenants,
+        NetConfig::default(),
+    )?;
+    println!(
+        "gateway on {} serving {model:?} ({} backend)",
+        server.local_addr(),
+        engine.backend_kind(&model)?,
+    );
+    println!("  POST /v1/models/{model}/infer   (x-api-key, x-priority, x-deadline-ms)");
+    println!("  GET  /healthz | /v1/models | /v1/stats");
+    if duration_s > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(duration_s));
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    println!("draining ...");
+    let drained = server.shutdown();
+    engine.shutdown();
+    for (name, c) in server.tenant_counters() {
+        println!(
+            "  tenant {name:<8} submitted {:<6} served {:<6} throttled {:<5} busy {:<5} shed {:<5} p99 {:?}",
+            c.submitted,
+            c.served,
+            c.throttled(),
+            c.rejected_busy,
+            c.deadline_shed,
+            c.latency.quantile(0.99),
+        );
+    }
+    if !drained {
+        bail!("drain timed out with connections still live");
+    }
+    Ok(())
+}
+
+/// `sonic loadgen`: drive a gateway over real sockets and write
+/// `BENCH_net.json`.  Without `--target` it serves itself on a loopback
+/// port with a deliberately slow backend, so the overload behaviours
+/// (429 rate limiting, priority separation) are reproducible offline.
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let specs = specs_model();
+    let a = Args::parse(argv, &specs)?;
+    let requests: usize = a.parse_num("requests", 240)?;
+    let out = a.get_or("out", "BENCH_net.json").to_string();
+
+    // Self-serve: a slow NullBackend under a small batch cap is a
+    // guaranteed overload for the closed-loop fleets below.
+    let self_serve = a.get("target").is_none();
+    let mut server_state = None;
+    let target = if self_serve {
+        let slow_us: u64 = a.parse_num("slow-us", 1500u64)?;
+        let engine = std::sync::Arc::new(
+            Engine::builder()
+                .serve_config(ServeConfig {
+                    max_batch: 4,
+                    batch_window: Duration::from_millis(1),
+                    queue_cap: 64,
+                    promote_after: Duration::from_millis(250),
+                    ..ServeConfig::default()
+                })
+                .model(
+                    "mnist",
+                    BackendChoice::Custom(std::sync::Arc::new(SlowBackend {
+                        inner: sonic::serve::NullBackend {
+                            input_len: 784,
+                            n_classes: 10,
+                        },
+                        delay: Duration::from_micros(slow_us),
+                    })),
+                )
+                .build()?,
+        );
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            std::sync::Arc::clone(&engine),
+            TenantSpec::demo_fleet(),
+            NetConfig {
+                inflight_budget: 64,
+                ..NetConfig::default()
+            },
+        )?;
+        let target = server.connect_addr();
+        println!(
+            "self-serve gateway on {target} (backend delay {slow_us} µs/batch, max batch 4)"
+        );
+        server_state = Some((server, engine));
+        target
+    } else {
+        let t = a.get("target").unwrap();
+        t.parse()
+            .map_err(|_| sonic::util::err::Error::msg(format!("bad --target {t:?}")))?
+    };
+
+    let models = fetch_models(target)?;
+    let Some((model, input_len)) = (match a.get("model") {
+        Some(want) => models.iter().find(|(m, _)| m == want).cloned(),
+        None => models.first().cloned(),
+    }) else {
+        bail!("gateway at {target} does not serve the requested model ({models:?})");
+    };
+    println!("driving {model:?} ({input_len} f32) at {target}");
+
+    // Three fleets against the demo tenants: gold = framed + High +
+    // unlimited, silver = HTTP + Normal + tight deadline (exercises 504),
+    // free = HTTP + Batch behind a small token bucket (exercises 429).
+    let seed: u64 = a.parse_num("seed", 7)?;
+    let load = |label: &str, key: &str, n, conns, prio, deadline_ms, framed, rate| TenantLoad {
+        label: label.into(),
+        api_key: key.into(),
+        model: model.clone(),
+        input_len,
+        requests: n,
+        connections: conns,
+        arrivals: Arrivals::poisson(rate),
+        priority: prio,
+        deadline_ms,
+        framed,
+        seed,
+    };
+    let gen = LoadGen {
+        target,
+        tenants: vec![
+            load("gold", "gold-key", requests, 4, Priority::High, None, true, 400.0),
+            load("silver", "silver-key", requests / 12, 2, Priority::Normal, Some(5.0), false, 200.0),
+            load("free", "free-key", requests / 4, 2, Priority::Batch, None, false, 200.0),
+        ],
+    };
+    let report = gen.run();
+    report.print();
+
+    if let Some((server, engine)) = server_state {
+        server.shutdown();
+        engine.shutdown();
+        println!("  -- server-side tenant counters --");
+        for (name, c) in server.tenant_counters() {
+            println!(
+                "  {name:<8} submitted {:<6} served {:<6} 429 {:<5} busy {:<5} shed {:<5}",
+                c.submitted,
+                c.served,
+                c.throttled(),
+                c.rejected_busy,
+                c.deadline_shed,
+            );
+        }
+    }
+
+    std::fs::write(&out, report.to_json().to_pretty())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// A [`NullBackend`] with a per-batch stall: the self-serve loadgen's
+/// way of making a loopback gateway genuinely overloaded.
+struct SlowBackend {
+    inner: sonic::serve::NullBackend,
+    delay: Duration,
+}
+
+impl sonic::serve::InferenceBackend for SlowBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.infer_batch(inputs)
+    }
+
+    fn input_len(&self) -> usize {
+        self.inner.input_len
+    }
 }
 
 fn cmd_compare(argv: &[String]) -> Result<()> {
@@ -505,8 +726,8 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_trace(argv: &[String]) -> Result<()> {
-    let mut specs = specs_model();
-    specs.push(OptSpec { name: "out", takes_value: true, help: "write JSON to file" });
+    // "out" is in the shared spec list now (loadgen uses it too)
+    let specs = specs_model();
     let a = Args::parse(argv, &specs)?;
     let model = a.get_or("model", "mnist");
     let desc = ModelDesc::try_load_or_builtin(model)?;

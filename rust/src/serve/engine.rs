@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::arch::SonicConfig;
 use crate::bail;
@@ -134,6 +134,36 @@ impl Ticket {
                 SlotState::Pending => {}
             }
             st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// [`Ticket::wait`] with a bound: blocks at most `timeout`, returning
+    /// `Ok(None)` if the request is still in flight when it expires.  A
+    /// timed-out wait consumes nothing — the ticket stays resolvable and
+    /// a later `wait`/`wait_timeout`/`try_wait` sees the completion.
+    /// Connection handlers use this so a stuck backend can never park a
+    /// socket thread forever.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<Completion>> {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Done(c) => return Ok(Some(c.clone())),
+                SlotState::Failed(e) => {
+                    return Err(Error::msg(format!("request {}: {e}", self.id)))
+                }
+                SlotState::Pending => {}
+            }
+            let Some(deadline) = deadline else {
+                // timeout overflows Instant: effectively unbounded
+                st = self.slot.cv.wait(st).unwrap();
+                continue;
+            };
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            st = self.slot.cv.wait_timeout(st, deadline - now).unwrap().0;
         }
     }
 
@@ -385,6 +415,13 @@ impl Engine {
             wall_elapsed: elapsed,
             models,
         }
+    }
+
+    /// `true` once [`Engine::shutdown`] has begun (or completed).  The
+    /// network edge's drain sequence polls this so connection handlers
+    /// stop advertising keep-alive as soon as the engine is going away.
+    pub fn is_stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
     }
 
     /// Graceful shutdown: stop accepting new requests, drain every queued

@@ -119,6 +119,58 @@ impl LaneHistograms {
     }
 }
 
+/// Per-tenant serving counters at the network edge: what happened to every
+/// request a tenant's API key submitted, by disposition.  Every refused
+/// request is counted somewhere — a 429 is never silently dropped — and
+/// served latencies feed a per-tenant histogram so the gateway can report
+/// p50/p95/p99 by tenant, not just by lane.
+#[derive(Debug, Clone, Default)]
+pub struct TenantCounters {
+    /// Requests that reached admission control (after auth).
+    pub submitted: u64,
+    /// Served to completion with a 2xx response.
+    pub served: u64,
+    /// Shed by the QoS lanes with an expired deadline (HTTP 504).
+    pub deadline_shed: u64,
+    /// Refused by the tenant's token bucket (HTTP 429).
+    pub rate_limited: u64,
+    /// Refused by weighted fairness — the tenant was over its in-flight
+    /// share while the gateway was contended (HTTP 429).
+    pub over_share: u64,
+    /// Refused by engine backpressure — queue full or draining (HTTP 503).
+    pub rejected_busy: u64,
+    /// Everything else (bad input, backend failure; HTTP 4xx/5xx).
+    pub errors: u64,
+    /// End-to-end gateway latency (admission to response write) of served
+    /// requests.
+    pub latency: LatencyHistogram,
+}
+
+impl TenantCounters {
+    pub fn record_served(&mut self, d: Duration) {
+        self.served += 1;
+        self.latency.record(d);
+    }
+
+    /// Fold another tenant's-worth of counters into this one (merging
+    /// per-connection shards into the registry totals).
+    pub fn merge(&mut self, other: &TenantCounters) {
+        self.submitted += other.submitted;
+        self.served += other.served;
+        self.deadline_shed += other.deadline_shed;
+        self.rate_limited += other.rate_limited;
+        self.over_share += other.over_share;
+        self.rejected_busy += other.rejected_busy;
+        self.errors += other.errors;
+        self.latency.merge(&other.latency);
+    }
+
+    /// Requests refused with a 429 (token bucket + fairness combined).
+    pub fn throttled(&self) -> u64 {
+        self.rate_limited + self.over_share
+    }
+}
+
 /// Snapshot of one priority lane's serving state inside a model.
 #[derive(Debug, Clone)]
 pub struct LaneReport {

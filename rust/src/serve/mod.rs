@@ -37,18 +37,26 @@
 //!   counters, and served photonic FPS / FPS/W / EPB;
 //!   [`Engine::shutdown`] drains in-flight requests and freezes the clock.
 //!
+//! * **Network edge** ([`net`]): a zero-dependency multi-tenant gateway
+//!   (HTTP/1.1 + a framed-TCP fast path on one port) that maps API keys
+//!   to token-bucket rate limits and weighted fair shares, QoS headers to
+//!   [`SubmitOptions`], and drains gracefully — plus a socket load
+//!   generator (`sonic loadgen`) that writes `BENCH_net.json`.
+//!
 //! The former `coordinator::serve::Router` / `drain_batch` pair is now a
 //! `pub(crate)` implementation detail of this module ([`router`]); see
 //! `src/serve/README.md` for the full lifecycle and backend table.
 
 mod engine;
 mod metrics;
+pub mod net;
 pub(crate) mod router;
 pub mod workload;
 
 pub use engine::{BackendChoice, Engine, EngineBuilder, Ticket};
 pub use metrics::{
     EngineMetrics, LaneHistograms, LaneReport, LatencyHistogram, LayerKernelStat, ModelMetrics,
+    TenantCounters,
 };
 pub use router::{
     Completion, InferenceBackend, LaneCounters, NullBackend, Outcome, Priority, ServeConfig,

@@ -1,0 +1,393 @@
+//! Offline load generator: drives a running [`super::server::NetServer`]
+//! over real TCP sockets — per-tenant connection fleets, seeded
+//! [`Arrivals`] processes (the same Poisson/bursty draws the in-process
+//! workloads use), both wire protocols — and reduces the outcome to a
+//! [`NetBenchReport`] (`BENCH_net.json`): RPS, per-tenant latency
+//! percentiles, and 429/503/504 rates under overload.
+//!
+//! Each connection is closed-loop (send one request, wait for its
+//! response, sleep the next arrival gap); concurrency comes from the
+//! connection fleet, which keeps the generator honest — a slow server
+//! slows its own offered load instead of flooding the socket buffers.
+
+use std::net::{SocketAddr, TcpStream};
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::serve::metrics::LatencyHistogram;
+use crate::serve::router::Priority;
+use crate::serve::workload::Arrivals;
+use crate::util::err::{Context, Result};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+use super::protocol::{
+    parse_frame, parse_http_response, write_frame, Parsed, FRAME_MAGIC, H_API_KEY, H_DEADLINE_MS,
+    H_PRIORITY,
+};
+
+/// Producers cap arrival-gap sleeps here so low rates stay responsive.
+const MAX_SLEEP: Duration = Duration::from_millis(50);
+
+/// One tenant's slice of the generated load.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Report label (usually the tenant name).
+    pub label: String,
+    /// The `x-api-key` this fleet authenticates with.
+    pub api_key: String,
+    pub model: String,
+    /// Input vector length (fetch with [`fetch_models`] when unknown).
+    pub input_len: usize,
+    /// Total requests across the whole fleet.
+    pub requests: usize,
+    /// Concurrent connections (the fleet's parallelism).
+    pub connections: usize,
+    /// Arrival process per connection.
+    pub arrivals: Arrivals,
+    /// Requested QoS lane (the server clamps to the tenant ceiling).
+    pub priority: Priority,
+    /// Optional per-request deadline header, in milliseconds.
+    pub deadline_ms: Option<f64>,
+    /// `true`: framed-TCP fast path; `false`: HTTP/1.1 keep-alive.
+    pub framed: bool,
+    pub seed: u64,
+}
+
+/// What one tenant's fleet observed.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub label: String,
+    pub sent: u64,
+    pub ok_2xx: u64,
+    pub http_429: u64,
+    pub http_503: u64,
+    pub http_504: u64,
+    pub other_status: u64,
+    /// Connects that failed, broken sockets, unparseable responses.
+    pub transport_errors: u64,
+    /// Client-observed latency of 2xx responses (send to response).
+    pub latency: LatencyHistogram,
+}
+
+impl TenantStats {
+    fn merge(&mut self, other: &TenantStats) {
+        self.sent += other.sent;
+        self.ok_2xx += other.ok_2xx;
+        self.http_429 += other.http_429;
+        self.http_503 += other.http_503;
+        self.http_504 += other.http_504;
+        self.other_status += other.other_status;
+        self.transport_errors += other.transport_errors;
+        self.latency.merge(&other.latency);
+    }
+
+    fn record_status(&mut self, status: u16, latency: Duration) {
+        match status {
+            200..=299 => {
+                self.ok_2xx += 1;
+                self.latency.record(latency);
+            }
+            429 => self.http_429 += 1,
+            503 => self.http_503 += 1,
+            504 => self.http_504 += 1,
+            _ => self.other_status += 1,
+        }
+    }
+}
+
+/// The whole run, reduced: wall clock, aggregate RPS, per-tenant stats.
+#[derive(Debug)]
+pub struct NetBenchReport {
+    pub wall: Duration,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl NetBenchReport {
+    /// Aggregate served (2xx) throughput over the run's wall clock.
+    pub fn rps(&self) -> f64 {
+        let ok: u64 = self.tenants.iter().map(|t| t.ok_2xx).sum();
+        ok as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn tenant(&self, label: &str) -> Option<&TenantStats> {
+        self.tenants.iter().find(|t| t.label == label)
+    }
+
+    /// The `BENCH_net.json` payload.
+    pub fn to_json(&self) -> Json {
+        let tenants: std::collections::BTreeMap<String, Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                (
+                    t.label.clone(),
+                    obj(vec![
+                        ("sent", num(t.sent as f64)),
+                        ("ok_2xx", num(t.ok_2xx as f64)),
+                        ("http_429", num(t.http_429 as f64)),
+                        ("http_503", num(t.http_503 as f64)),
+                        ("http_504", num(t.http_504 as f64)),
+                        ("other_status", num(t.other_status as f64)),
+                        ("transport_errors", num(t.transport_errors as f64)),
+                        ("p50_us", num(t.latency.quantile(0.50).as_secs_f64() * 1e6)),
+                        ("p95_us", num(t.latency.quantile(0.95).as_secs_f64() * 1e6)),
+                        ("p99_us", num(t.latency.quantile(0.99).as_secs_f64() * 1e6)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("bench", s("net_serving")),
+            ("wall_s", num(self.wall.as_secs_f64())),
+            ("rps_2xx", num(self.rps())),
+            ("tenants", Json::Obj(tenants)),
+        ])
+    }
+
+    /// Human-readable per-tenant table.
+    pub fn print(&self) {
+        println!("== net load report ==");
+        println!(
+            "  wall {:.2}s   served throughput {:.1} req/s",
+            self.wall.as_secs_f64(),
+            self.rps()
+        );
+        for t in &self.tenants {
+            println!(
+                "  {:<8} sent {:<6} 2xx {:<6} 429 {:<5} 503 {:<5} 504 {:<5} err {:<4} p50 {:?}  p99 {:?}",
+                t.label,
+                t.sent,
+                t.ok_2xx,
+                t.http_429,
+                t.http_503,
+                t.http_504,
+                t.transport_errors,
+                t.latency.quantile(0.50),
+                t.latency.quantile(0.99),
+            );
+        }
+    }
+}
+
+/// `GET /v1/models` over a throwaway connection: `(name, input_len)`
+/// pairs, for sizing request vectors against a remote server.
+pub fn fetch_models(target: SocketAddr) -> Result<Vec<(String, usize)>> {
+    let mut stream = TcpStream::connect_timeout(&target, Duration::from_secs(5))
+        .with_context(|| format!("connecting to {target}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("setting read timeout")?;
+    stream
+        .write_all(b"GET /v1/models HTTP/1.1\r\nhost: loadgen\r\nconnection: close\r\n\r\n")
+        .context("sending model query")?;
+    let mut buf = Vec::new();
+    let (_, body) = read_http_response(&mut stream, &mut buf)?;
+    let json = Json::parse(std::str::from_utf8(&body).context("model list is not UTF-8")?)
+        .map_err(|e| crate::util::err::Error::msg(format!("bad model list JSON: {e}")))?;
+    let Some(models) = json.get("models").and_then(|m| m.as_arr()) else {
+        crate::bail!("model list response missing \"models\"");
+    };
+    Ok(models
+        .iter()
+        .filter_map(|m| {
+            Some((
+                m.get("name")?.as_str()?.to_string(),
+                m.get("input_len")?.as_f64()? as usize,
+            ))
+        })
+        .collect())
+}
+
+/// The generator: point it at a listening address, give each tenant a
+/// [`TenantLoad`], and [`LoadGen::run`] blocks until every fleet
+/// finishes.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    pub target: SocketAddr,
+    pub tenants: Vec<TenantLoad>,
+}
+
+impl LoadGen {
+    pub fn run(&self) -> NetBenchReport {
+        let start = Instant::now();
+        let mut tenants: Vec<TenantStats> = Vec::with_capacity(self.tenants.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in &self.tenants {
+                let conns = t.connections.max(1);
+                let per = t.requests / conns;
+                let extra = t.requests % conns;
+                for c in 0..conns {
+                    let n = per + usize::from(c < extra);
+                    if n == 0 {
+                        continue;
+                    }
+                    let seed = t.seed ^ ((c as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                    let target = self.target;
+                    handles.push((
+                        t.label.clone(),
+                        scope.spawn(move || drive_conn(target, t, n, seed)),
+                    ));
+                }
+            }
+            for (label, h) in handles {
+                let stats = h.join().unwrap_or_else(|_| {
+                    let mut s = TenantStats::default();
+                    s.transport_errors += 1;
+                    s
+                });
+                match tenants.iter_mut().find(|t| t.label == label) {
+                    Some(t) => t.merge(&stats),
+                    None => {
+                        let mut t = stats;
+                        t.label = label;
+                        tenants.push(t);
+                    }
+                }
+            }
+        });
+        // stable report order: as configured
+        let order: Vec<&str> = self.tenants.iter().map(|t| t.label.as_str()).collect();
+        tenants.sort_by_key(|t| order.iter().position(|l| *l == t.label).unwrap_or(usize::MAX));
+        NetBenchReport {
+            wall: start.elapsed(),
+            tenants,
+        }
+    }
+}
+
+/// One connection's closed loop: connect, (maybe) send the framed magic,
+/// then alternate arrival-gap sleeps with send/receive round trips.
+fn drive_conn(target: SocketAddr, t: &TenantLoad, n_requests: usize, seed: u64) -> TenantStats {
+    let mut stats = TenantStats {
+        label: t.label.clone(),
+        ..TenantStats::default()
+    };
+    let Ok(mut stream) = TcpStream::connect_timeout(&target, Duration::from_secs(5)) else {
+        stats.transport_errors += n_requests as u64;
+        return stats;
+    };
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(Duration::from_secs(30))).is_err()
+        || (t.framed && stream.write_all(&FRAME_MAGIC).is_err())
+    {
+        stats.transport_errors += n_requests as u64;
+        return stats;
+    }
+    let mut rng = Rng::new(seed);
+    let mut arrivals = t.arrivals.clone();
+    let mut buf: Vec<u8> = Vec::new();
+    for i in 0..n_requests {
+        std::thread::sleep(arrivals.next_gap(&mut rng).min(MAX_SLEEP));
+        let input = rng.normal_vec(t.input_len);
+        let msg = if t.framed {
+            framed_request(t, i as u64, &input)
+        } else {
+            http_request(t, &input)
+        };
+        let sent_at = Instant::now();
+        if stream.write_all(&msg).is_err() {
+            stats.transport_errors += (n_requests - i) as u64;
+            return stats;
+        }
+        stats.sent += 1;
+        let status = if t.framed {
+            read_frame_response(&mut stream, &mut buf)
+        } else {
+            read_http_response(&mut stream, &mut buf).map(|(status, _)| status)
+        };
+        match status {
+            Ok(status) => stats.record_status(status, sent_at.elapsed()),
+            Err(_) => {
+                stats.transport_errors += (n_requests - i) as u64;
+                return stats;
+            }
+        }
+    }
+    stats
+}
+
+fn http_request(t: &TenantLoad, input: &[f32]) -> Vec<u8> {
+    let body = Json::Arr(input.iter().map(|&v| Json::Num(v as f64)).collect()).to_string();
+    let mut head = format!(
+        "POST /v1/models/{}/infer HTTP/1.1\r\nhost: loadgen\r\n{}: {}\r\n{}: {}\r\n",
+        t.model,
+        H_API_KEY,
+        t.api_key,
+        H_PRIORITY,
+        t.priority.as_str(),
+    );
+    if let Some(ms) = t.deadline_ms {
+        head.push_str(&format!("{H_DEADLINE_MS}: {ms}\r\n"));
+    }
+    head.push_str(&format!(
+        "content-type: application/json\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    ));
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+fn framed_request(t: &TenantLoad, id: u64, input: &[f32]) -> Vec<u8> {
+    let mut pairs = vec![
+        ("model", s(&t.model)),
+        ("api_key", s(&t.api_key)),
+        ("priority", s(t.priority.as_str())),
+        ("id", num(id as f64)),
+    ];
+    if let Some(ms) = t.deadline_ms {
+        pairs.push(("deadline_ms", num(ms)));
+    }
+    let mut out = Vec::new();
+    write_frame(&mut out, &obj(pairs), input);
+    out
+}
+
+/// Read one HTTP response off the stream (buffer carries over between
+/// calls for keep-alive pipelining).
+fn read_http_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<(u16, Vec<u8>)> {
+    loop {
+        match parse_http_response(buf) {
+            Parsed::Complete((status, body), used) => {
+                buf.drain(..used);
+                return Ok((status, body));
+            }
+            Parsed::Malformed(why) => crate::bail!("malformed response: {why}"),
+            Parsed::Incomplete => {}
+        }
+        fill(stream, buf)?;
+    }
+}
+
+/// Read one framed response off the stream; the status rides in the
+/// JSON header.
+fn read_frame_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u16> {
+    loop {
+        match parse_frame(buf) {
+            Parsed::Complete(frame, used) => {
+                buf.drain(..used);
+                let Some(status) = frame.header.get("status").and_then(|v| v.as_f64()) else {
+                    crate::bail!("frame response missing status");
+                };
+                return Ok(status as u16);
+            }
+            Parsed::Malformed(why) => crate::bail!("malformed frame: {why}"),
+            Parsed::Incomplete => {}
+        }
+        fill(stream, buf)?;
+    }
+}
+
+fn fill(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
+    let mut tmp = [0u8; 8 * 1024];
+    match stream.read(&mut tmp) {
+        Ok(0) => crate::bail!("connection closed mid-response"),
+        Ok(n) => {
+            buf.extend_from_slice(&tmp[..n]);
+            Ok(())
+        }
+        Err(e) => Err(e.into()),
+    }
+}

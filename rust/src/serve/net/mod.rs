@@ -1,0 +1,46 @@
+//! `sonic::serve::net` — the network serving edge.
+//!
+//! Everything the in-process [`Engine`](crate::serve::Engine) deliberately
+//! does not do: sockets, wire formats, tenants.  Four layers, bottom-up:
+//!
+//! * [`protocol`] — pure parsers/writers for the two wire formats that
+//!   share one port: curl-able HTTP/1.1 and a length-prefixed framed-TCP
+//!   fast path (raw little-endian `f32` payloads, no base-10 round trip).
+//! * [`tenant`] — API-key authentication, per-tenant token-bucket rate
+//!   limits, and weighted fair in-flight shares, layered on top of the
+//!   engine's QoS lanes.
+//! * [`server`] — the gateway: accept loop on a dedicated thread pool,
+//!   keep-alive connections with a bounded in-flight window, QoS headers
+//!   mapped to [`SubmitOptions`](crate::serve::SubmitOptions), graceful
+//!   drain (stop accepting → finish every in-flight ticket → close).
+//! * [`loadgen`] — the offline load generator: per-tenant socket fleets
+//!   driving seeded arrival processes, reduced to `BENCH_net.json`.
+//!
+//! ```no_run
+//! use sonic::serve::net::{NetConfig, NetServer, TenantSpec};
+//! use sonic::serve::{BackendChoice, Engine};
+//! use std::sync::Arc;
+//!
+//! let engine = Arc::new(Engine::builder().model("mnist", BackendChoice::Auto).build()?);
+//! let server = NetServer::bind(
+//!     "127.0.0.1:0",
+//!     Arc::clone(&engine),
+//!     TenantSpec::demo_fleet(),
+//!     NetConfig::default(),
+//! )?;
+//! println!("listening on {}", server.local_addr());
+//! // ... traffic ...
+//! server.shutdown(); // drain the edge; the engine stays up
+//! engine.shutdown();
+//! # Ok::<(), sonic::util::err::Error>(())
+//! ```
+
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+pub mod tenant;
+
+pub use loadgen::{fetch_models, LoadGen, NetBenchReport, TenantLoad, TenantStats};
+pub use protocol::{FRAME_MAGIC, H_API_KEY, H_DEADLINE_MS, H_PRIORITY};
+pub use server::{GatewayCounters, NetConfig, NetServer};
+pub use tenant::{Refusal, Tenant, TenantRegistry, TenantSpec};

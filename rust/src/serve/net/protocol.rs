@@ -1,0 +1,402 @@
+//! Wire formats for the network edge (see `src/serve/README.md`,
+//! "Network edge").
+//!
+//! Two protocols share one port, distinguished by the first bytes a
+//! client sends:
+//!
+//! * **HTTP/1.1** — `POST /v1/models/<model>/infer` with a JSON body
+//!   (`{"input": [..]}` or a bare array), QoS and identity in headers
+//!   ([`H_API_KEY`], [`H_PRIORITY`], [`H_DEADLINE_MS`]), keep-alive by
+//!   default.  Curl-able, and what the CI smoke drives.
+//! * **Framed TCP** — the fast path: the client opens with the 4-byte
+//!   magic [`FRAME_MAGIC`], then exchanges length-prefixed frames whose
+//!   payload is a small JSON header followed by raw little-endian `f32`s
+//!   (no base-10 float round trip on the hot path).
+//!
+//! Everything here is a pure function over byte buffers — the server owns
+//! the sockets and their timeouts; these parsers just say "incomplete",
+//! "here is a message and how many bytes it consumed", or "malformed".
+
+use crate::util::json::Json;
+
+/// Tenant identity: the API key header (required on inference requests).
+pub const H_API_KEY: &str = "x-api-key";
+/// QoS lane request: `high` | `normal` | `batch` (clamped per tenant).
+pub const H_PRIORITY: &str = "x-priority";
+/// Serve-by budget in milliseconds, measured from admission.
+pub const H_DEADLINE_MS: &str = "x-deadline-ms";
+
+/// First four bytes of a framed-TCP connection.
+pub const FRAME_MAGIC: [u8; 4] = *b"SNF1";
+
+/// Bound on the HTTP request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Bound on an HTTP body or a framed payload.
+pub const MAX_PAYLOAD_BYTES: usize = 16 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased at parse time; values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default, overridden by `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First value of a header, by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// What a protocol parser produced from the buffered bytes so far.
+#[derive(Debug)]
+pub enum Parsed<T> {
+    /// Not enough bytes yet — read more and retry.
+    Incomplete,
+    /// One complete message and the byte count it consumed.
+    Complete(T, usize),
+    /// The bytes can never become a valid message.
+    Malformed(String),
+}
+
+/// Parse one HTTP/1.x request from the front of `buf`.
+pub fn parse_http_request(buf: &[u8]) -> Parsed<Request> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parsed::Malformed(format!("request head exceeds {MAX_HEAD_BYTES} bytes"));
+        }
+        return Parsed::Incomplete;
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Parsed::Malformed(format!("request head exceeds {MAX_HEAD_BYTES} bytes"));
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s,
+        Err(_) => return Parsed::Malformed("request head is not UTF-8".into()),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Parsed::Malformed(format!("bad request line {request_line:?}"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Parsed::Malformed(format!("unsupported version {version:?}"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Parsed::Malformed(format!("bad header line {line:?}"));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+        keep_alive: true,
+    };
+    let content_len = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n <= MAX_PAYLOAD_BYTES => n,
+            Ok(n) => return Parsed::Malformed(format!("content-length {n} exceeds limit")),
+            Err(_) => return Parsed::Malformed(format!("bad content-length {v:?}")),
+        },
+    };
+    let total = head_end + 4 + content_len;
+    if buf.len() < total {
+        return Parsed::Incomplete;
+    }
+    let conn = req.header("connection").map(|v| v.to_ascii_lowercase());
+    let keep_alive = if version == "HTTP/1.0" {
+        conn.as_deref() == Some("keep-alive")
+    } else {
+        conn.as_deref() != Some("close")
+    };
+    let mut req = req;
+    req.body = buf[head_end + 4..total].to_vec();
+    req.keep_alive = keep_alive;
+    Parsed::Complete(req, total)
+}
+
+/// Byte offset of the `\r\n\r\n` terminating the request head, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Canonical reason phrases for the statuses the gateway emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one HTTP/1.1 response with a JSON body.
+pub fn write_http_response(out: &mut Vec<u8>, status: u16, keep_alive: bool, body: &Json) {
+    let body = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status_reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+}
+
+/// Parse one HTTP/1.x response from the front of `buf` — the load
+/// generator's half of the exchange.  Returns `(status, body)`.
+pub fn parse_http_response(buf: &[u8]) -> Parsed<(u16, Vec<u8>)> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parsed::Malformed(format!("response head exceeds {MAX_HEAD_BYTES} bytes"));
+        }
+        return Parsed::Incomplete;
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s,
+        Err(_) => return Parsed::Malformed("response head is not UTF-8".into()),
+    };
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.split_whitespace();
+    let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
+        return Parsed::Malformed(format!("bad status line {status_line:?}"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Parsed::Malformed(format!("unsupported version {version:?}"));
+    }
+    let Ok(status) = code.parse::<u16>() else {
+        return Parsed::Malformed(format!("bad status code {code:?}"));
+    };
+    let mut content_len = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Parsed::Malformed(format!("bad header line {line:?}"));
+        };
+        if k.trim().eq_ignore_ascii_case("content-length") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n <= MAX_PAYLOAD_BYTES => content_len = n,
+                _ => return Parsed::Malformed(format!("bad content-length {v:?}")),
+            }
+        }
+    }
+    let total = head_end + 4 + content_len;
+    if buf.len() < total {
+        return Parsed::Incomplete;
+    }
+    Parsed::Complete((status, buf[head_end + 4..total].to_vec()), total)
+}
+
+/// One framed-TCP message: a JSON header plus a raw `f32` payload
+/// (request: the input vector; response: the logits).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub header: Json,
+    pub floats: Vec<f32>,
+}
+
+/// Parse one frame from the front of `buf` (after the connection magic
+/// has been consumed).  Layout: `u32 LE payload_len`, then payload =
+/// `u32 LE header_len` + header JSON bytes + raw `f32 LE` floats.
+pub fn parse_frame(buf: &[u8]) -> Parsed<Frame> {
+    if buf.len() < 4 {
+        return Parsed::Incomplete;
+    }
+    let payload_len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Parsed::Malformed(format!("frame of {payload_len} bytes exceeds limit"));
+    }
+    if buf.len() < 4 + payload_len {
+        return Parsed::Incomplete;
+    }
+    let payload = &buf[4..4 + payload_len];
+    if payload.len() < 4 {
+        return Parsed::Malformed("frame payload shorter than its header length".into());
+    }
+    let header_len = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    if payload.len() < 4 + header_len {
+        return Parsed::Malformed("frame header length exceeds payload".into());
+    }
+    let header_bytes = &payload[4..4 + header_len];
+    let header = match std::str::from_utf8(header_bytes)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+    {
+        Some(j) => j,
+        None => return Parsed::Malformed("frame header is not valid JSON".into()),
+    };
+    let float_bytes = &payload[4 + header_len..];
+    if float_bytes.len() % 4 != 0 {
+        return Parsed::Malformed("frame float payload is not a multiple of 4 bytes".into());
+    }
+    let floats = float_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Parsed::Complete(
+        Frame { header, floats },
+        4 + payload_len,
+    )
+}
+
+/// Serialize one frame (the inverse of [`parse_frame`]).
+pub fn write_frame(out: &mut Vec<u8>, header: &Json, floats: &[f32]) {
+    let header = header.to_string();
+    let payload_len = 4 + header.len() + 4 * floats.len();
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for f in floats {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, s};
+
+    #[test]
+    fn http_request_parses_incrementally() {
+        let raw = b"POST /v1/models/mnist/infer HTTP/1.1\r\nX-Api-Key: k1\r\nContent-Length: 5\r\n\r\nhello";
+        // every proper prefix is Incomplete, never Malformed
+        for cut in 0..raw.len() {
+            match parse_http_request(&raw[..cut]) {
+                Parsed::Incomplete => {}
+                other => panic!("prefix {cut}: {other:?}"),
+            }
+        }
+        match parse_http_request(raw) {
+            Parsed::Complete(req, used) => {
+                assert_eq!(used, raw.len());
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/models/mnist/infer");
+                assert_eq!(req.header(H_API_KEY), Some("k1"));
+                assert_eq!(req.body, b"hello");
+                assert!(req.keep_alive);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn http_connection_close_and_pipelined_second_request() {
+        let raw = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\nGET /x HTTP/1.1\r\n\r\n";
+        match parse_http_request(raw) {
+            Parsed::Complete(req, used) => {
+                assert!(!req.keep_alive);
+                assert_eq!(req.path, "/healthz");
+                // the remainder is the next request, intact
+                match parse_http_request(&raw[used..]) {
+                    Parsed::Complete(r2, _) => assert_eq!(r2.path, "/x"),
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn http_rejects_garbage_and_oversize() {
+        assert!(matches!(
+            parse_http_request(b"NOT A REQUEST\r\n\r\n"),
+            Parsed::Malformed(_)
+        ));
+        let huge = vec![b'a'; MAX_HEAD_BYTES + 8];
+        assert!(matches!(parse_http_request(&huge), Parsed::Malformed(_)));
+        assert!(matches!(
+            parse_http_request(b"POST / HTTP/1.1\r\ncontent-length: zap\r\n\r\n"),
+            Parsed::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let header = obj(vec![("id", num(7.0)), ("model", s("mnist"))]);
+        let floats = vec![0.5f32, -1.25, 3.75];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &header, &floats);
+        for cut in 0..wire.len() {
+            assert!(matches!(parse_frame(&wire[..cut]), Parsed::Incomplete));
+        }
+        match parse_frame(&wire) {
+            Parsed::Complete(f, used) => {
+                assert_eq!(used, wire.len());
+                assert_eq!(f.header, header);
+                assert_eq!(f.floats, floats);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_rejects_bad_lengths() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &obj(vec![]), &[1.0]);
+        // corrupt the inner header length to exceed the payload
+        wire[4] = 0xff;
+        assert!(matches!(parse_frame(&wire), Parsed::Malformed(_)));
+        let huge = (MAX_PAYLOAD_BYTES as u32 + 1).to_le_bytes().to_vec();
+        assert!(matches!(parse_frame(&huge), Parsed::Malformed(_)));
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let mut out = Vec::new();
+        write_http_response(&mut out, 504, false, &obj(vec![("outcome", s("deadline_exceeded"))]));
+        for cut in 0..out.len() {
+            assert!(matches!(parse_http_response(&out[..cut]), Parsed::Incomplete));
+        }
+        match parse_http_response(&out) {
+            Parsed::Complete((status, body), used) => {
+                assert_eq!(status, 504);
+                assert_eq!(used, out.len());
+                let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+                assert_eq!(j.get("outcome").unwrap().as_str(), Some("deadline_exceeded"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_writer_emits_parseable_head() {
+        let mut out = Vec::new();
+        write_http_response(&mut out, 429, true, &obj(vec![("error", s("rate limited"))]));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("connection: keep-alive"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(
+            Json::parse(body).unwrap().get("error").unwrap().as_str(),
+            Some("rate limited")
+        );
+    }
+}

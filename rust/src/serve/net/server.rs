@@ -1,0 +1,825 @@
+//! The multi-tenant gateway itself: TCP accept loop on a dedicated
+//! [`crate::util::pool::Pool`], per-connection handlers speaking both wire
+//! protocols ([`super::protocol`]), tenant admission ([`super::tenant`]),
+//! and graceful drain — stop accepting, finish every in-flight ticket,
+//! then close.
+//!
+//! Threading model: the accept loop is one thread; every connection is one
+//! pool job that owns its socket for the connection's lifetime.  Handlers
+//! never block forever — socket reads use a poll-interval timeout so the
+//! stop flag is observed, and ticket waits are bounded by
+//! [`Ticket::wait_timeout`].  HTTP responses are written strictly in
+//! request order (pipelining-safe); the per-connection in-flight bound is
+//! [`NetConfig::max_inflight_per_conn`].
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::engine::{Engine, Ticket};
+use crate::serve::metrics::TenantCounters;
+use crate::serve::router::{Outcome, Priority, SubmitOptions};
+use crate::util::err::{Context, Result};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::pool::Pool;
+
+use super::protocol::{
+    parse_frame, parse_http_request, write_frame, write_http_response, Parsed, Request,
+    FRAME_MAGIC, H_API_KEY, H_DEADLINE_MS, H_PRIORITY,
+};
+use super::tenant::{Refusal, Tenant, TenantRegistry, TenantSpec};
+
+/// Gateway knobs.  The defaults serve a loopback bench; production fronts
+/// would raise `conn_workers` and the drain budget.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Dedicated connection-handler threads (the concurrent-connection
+    /// capacity; a connection holds its worker for its whole lifetime).
+    /// Deliberately NOT the shared kernel pool — a blocking socket read
+    /// on the kernel shards would deadlock `Pool::scoped`.
+    pub conn_workers: usize,
+    /// Max requests one connection may have in flight before the handler
+    /// stops reading and drains responses (HTTP pipelining / framed
+    /// streaming bound).
+    pub max_inflight_per_conn: usize,
+    /// Socket read timeout: how often a blocked handler re-checks the
+    /// stop flag.  Bounds drain latency for idle keep-alive connections.
+    pub poll_interval: Duration,
+    /// Upper bound on waiting for one ticket before the connection gives
+    /// up on it (the ticket stays resolvable; the client gets a 500).
+    pub response_timeout: Duration,
+    /// Total budget [`NetServer::shutdown`] waits for live connections.
+    pub drain_timeout: Duration,
+    /// Gateway-wide concurrent-request budget split across tenants by
+    /// fairness weight (see [`TenantRegistry::new`]).
+    pub inflight_budget: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            conn_workers: 16,
+            max_inflight_per_conn: 8,
+            poll_interval: Duration::from_millis(20),
+            response_timeout: Duration::from_secs(30),
+            drain_timeout: Duration::from_secs(10),
+            inflight_budget: 256,
+        }
+    }
+}
+
+/// Gateway-level counters (tenant-agnostic; per-tenant dispositions live
+/// in [`TenantCounters`]).
+#[derive(Debug, Clone, Default)]
+pub struct GatewayCounters {
+    pub connections: u64,
+    pub http_requests: u64,
+    pub frames: u64,
+    pub resp_2xx: u64,
+    pub resp_4xx: u64,
+    pub resp_5xx: u64,
+    pub auth_failures: u64,
+    pub malformed: u64,
+}
+
+struct Shared {
+    engine: Arc<Engine>,
+    tenants: TenantRegistry,
+    cfg: NetConfig,
+    stopping: AtomicBool,
+    live_conns: Mutex<usize>,
+    conn_done: Condvar,
+    gateway: Mutex<GatewayCounters>,
+    next_conn: AtomicU64,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst) || self.engine.is_stopping()
+    }
+}
+
+/// Decrements the live-connection count when the connection ends — or
+/// when a saturated pool drops the un-run handler job, so a refused
+/// connection can never wedge the drain accounting.
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        let mut n = self.0.live_conns.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.0.conn_done.notify_all();
+    }
+}
+
+/// The network edge server.  Bind with [`NetServer::bind`], stop with
+/// [`NetServer::shutdown`] (dropping shuts down implicitly).
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    listener: Mutex<Option<TcpListener>>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+    pool: Arc<Pool>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting.  The engine stays caller-owned: shutting the server
+    /// down drains the edge without touching the engine.
+    pub fn bind(
+        addr: &str,
+        engine: Arc<Engine>,
+        specs: Vec<TenantSpec>,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding net server to {addr}"))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let tenants = TenantRegistry::new(specs, cfg.inflight_budget);
+        let pool = Arc::new(Pool::new(cfg.conn_workers.max(1), cfg.conn_workers.max(1)));
+        let shared = Arc::new(Shared {
+            engine,
+            tenants,
+            cfg,
+            stopping: AtomicBool::new(false),
+            live_conns: Mutex::new(0),
+            conn_done: Condvar::new(),
+            gateway: Mutex::new(GatewayCounters::default()),
+            next_conn: AtomicU64::new(0),
+        });
+        let accept_listener = listener.try_clone().context("cloning listener")?;
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let pool = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(accept_listener, shared, pool))
+                .context("spawning accept loop")?
+        };
+        Ok(NetServer {
+            shared,
+            local_addr,
+            listener: Mutex::new(Some(listener)),
+            accept_thread: Mutex::new(Some(accept)),
+            pool,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// An address a local client can connect to (maps a wildcard bind to
+    /// loopback).
+    pub fn connect_addr(&self) -> SocketAddr {
+        let mut a = self.local_addr;
+        if a.ip().is_unspecified() {
+            a.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        }
+        a
+    }
+
+    /// Per-tenant counter snapshot, sorted by tenant name.
+    pub fn tenant_counters(&self) -> Vec<(String, TenantCounters)> {
+        self.shared
+            .tenants
+            .tenants()
+            .iter()
+            .map(|t| (t.spec.name.clone(), t.counters.lock().unwrap().clone()))
+            .collect()
+    }
+
+    /// Gateway-level counter snapshot.
+    pub fn gateway_counters(&self) -> GatewayCounters {
+        self.shared.gateway.lock().unwrap().clone()
+    }
+
+    /// Graceful drain: stop accepting (new connections are refused once
+    /// this returns), let every live connection finish its in-flight
+    /// requests, then close.  Returns `true` if every connection drained
+    /// within [`NetConfig::drain_timeout`].  Idempotent; does NOT shut
+    /// down the engine.
+    pub fn shutdown(&self) -> bool {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        // Wake the accept loop: it blocks in accept(), so poke it with a
+        // throwaway connection, then join and drop the listener so the OS
+        // refuses new connections from here on.
+        if let Some(handle) = self.accept_thread.lock().unwrap().take() {
+            let _ = TcpStream::connect_timeout(&self.connect_addr(), Duration::from_secs(1));
+            let _ = handle.join();
+        }
+        drop(self.listener.lock().unwrap().take());
+        // Wait for live connections: handlers observe the stop flag within
+        // poll_interval, finish their pending tickets, and drop their
+        // ConnGuard.
+        let deadline = Instant::now() + self.shared.cfg.drain_timeout;
+        let mut drained = true;
+        let mut n = self.shared.live_conns.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                drained = false;
+                break;
+            }
+            let (guard, _) = self
+                .shared
+                .conn_done
+                .wait_timeout(n, deadline - now)
+                .unwrap();
+            n = guard;
+        }
+        drop(n);
+        self.pool.close();
+        drained
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, pool: Arc<Pool>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stopping.load(Ordering::SeqCst) {
+            // the shutdown wake-up poke, or a client racing the drain
+            drop(stream);
+            return;
+        }
+        shared.gateway.lock().unwrap().connections += 1;
+        *shared.live_conns.lock().unwrap() += 1;
+        let guard = ConnGuard(Arc::clone(&shared));
+        let sh = Arc::clone(&shared);
+        let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        // A saturated pool drops the job — the guard and socket drop with
+        // it, closing the connection and keeping the drain count exact.
+        let _accepted = pool.try_submit(move || handle_conn(stream, sh, conn_id, guard));
+    }
+}
+
+// ---- connection handling ---------------------------------------------------
+
+enum Fill {
+    Data,
+    TimedOut,
+    Eof,
+}
+
+/// Buffered socket reader tolerant of read timeouts (the handler's
+/// stop-flag polling) and partial messages.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    fn fill(&mut self) -> std::io::Result<Fill> {
+        let mut tmp = [0u8; 8 * 1024];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(Fill::Data)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(Fill::TimedOut)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.buf.drain(..n);
+    }
+}
+
+/// One response waiting its turn on the connection (responses go out in
+/// request order — HTTP pipelining requires it; framed clients get it for
+/// free plus an id echo).
+enum Outstanding {
+    /// Decided immediately (errors, health, stats).
+    Ready {
+        status: u16,
+        body: Json,
+        floats: Vec<f32>,
+    },
+    /// An admitted inference waiting on its ticket.
+    Waiting {
+        ticket: Ticket,
+        tenant: Arc<Tenant>,
+        admitted: Instant,
+        id_echo: Option<f64>,
+        model: String,
+    },
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: ConnGuard) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.poll_interval));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut conn = Conn {
+        stream,
+        buf: Vec::new(),
+    };
+    // Protocol sniff: framed connections open with the 4-byte magic;
+    // anything else is treated as HTTP (no valid HTTP request starts with
+    // the magic bytes).
+    let framed = loop {
+        if conn.buf.len() >= 4 {
+            break if conn.buf[..4] == FRAME_MAGIC {
+                conn.consume(4);
+                true
+            } else {
+                false
+            };
+        }
+        match conn.fill() {
+            Ok(Fill::Data) => {}
+            Ok(Fill::TimedOut) => {
+                if shared.draining() && conn.buf.is_empty() {
+                    return;
+                }
+            }
+            Ok(Fill::Eof) | Err(_) => return,
+        }
+    };
+    let mut pending: VecDeque<Outstanding> = VecDeque::new();
+    // `closing`: stop reading new requests, drain pending, then hang up.
+    let mut closing = false;
+    loop {
+        // Phase 1: parse every complete message already buffered, up to
+        // the in-flight bound.
+        while !closing && pending.len() < shared.cfg.max_inflight_per_conn {
+            if framed {
+                match parse_frame(&conn.buf) {
+                    Parsed::Complete(frame, used) => {
+                        conn.consume(used);
+                        shared.gateway.lock().unwrap().frames += 1;
+                        pending.push_back(process_framed(&shared, frame));
+                    }
+                    Parsed::Incomplete => break,
+                    Parsed::Malformed(why) => {
+                        shared.gateway.lock().unwrap().malformed += 1;
+                        pending.push_back(Outstanding::Ready {
+                            status: 400,
+                            body: obj(vec![("error", s(&why))]),
+                            floats: Vec::new(),
+                        });
+                        closing = true;
+                    }
+                }
+            } else {
+                match parse_http_request(&conn.buf) {
+                    Parsed::Complete(req, used) => {
+                        conn.consume(used);
+                        shared.gateway.lock().unwrap().http_requests += 1;
+                        if !req.keep_alive {
+                            closing = true;
+                        }
+                        pending.push_back(process_http(&shared, req));
+                    }
+                    Parsed::Incomplete => break,
+                    Parsed::Malformed(why) => {
+                        shared.gateway.lock().unwrap().malformed += 1;
+                        pending.push_back(Outstanding::Ready {
+                            status: 400,
+                            body: obj(vec![("error", s(&why))]),
+                            floats: Vec::new(),
+                        });
+                        closing = true;
+                    }
+                }
+            }
+        }
+        // Phase 2: one response off the front (blocking on its ticket if
+        // needed), written in request order.
+        if let Some(front) = pending.pop_front() {
+            let (status, body, floats) = resolve(&shared, front);
+            {
+                let mut g = shared.gateway.lock().unwrap();
+                match status {
+                    200..=299 => g.resp_2xx += 1,
+                    400..=499 => g.resp_4xx += 1,
+                    _ => g.resp_5xx += 1,
+                }
+            }
+            // during drain, tell HTTP clients this is the last response
+            let keep = !closing && !(shared.draining() && pending.is_empty());
+            let mut out = Vec::new();
+            if framed {
+                write_frame(&mut out, &body, &floats);
+            } else {
+                write_http_response(&mut out, status, keep, &body);
+            }
+            if conn.stream.write_all(&out).is_err() {
+                abandon(&pending);
+                return;
+            }
+            if !keep && pending.is_empty() {
+                return;
+            }
+            continue;
+        }
+        // Phase 3: nothing buffered, nothing pending — wait for bytes.
+        if closing {
+            return;
+        }
+        match conn.fill() {
+            Ok(Fill::Data) => {}
+            Ok(Fill::TimedOut) => {
+                if shared.draining() && conn.buf.is_empty() {
+                    return; // idle connection during drain: hang up
+                }
+            }
+            Ok(Fill::Eof) | Err(_) => {
+                abandon(&pending);
+                return;
+            }
+        }
+    }
+}
+
+/// Account for admitted requests whose responses can no longer be
+/// delivered (client hung up / write failed): release their fair-share
+/// slots and count the failed deliveries.
+fn abandon(pending: &VecDeque<Outstanding>) {
+    for p in pending {
+        if let Outstanding::Waiting { tenant, .. } = p {
+            tenant.release();
+            tenant.counters.lock().unwrap().errors += 1;
+        }
+    }
+}
+
+/// Resolve one outstanding entry into `(status, body, floats)`.
+fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
+    let (ticket, tenant, admitted, id_echo, model) = match o {
+        Outstanding::Ready {
+            status,
+            body,
+            floats,
+        } => return (status, body, floats),
+        Outstanding::Waiting {
+            ticket,
+            tenant,
+            admitted,
+            id_echo,
+            model,
+        } => (ticket, tenant, admitted, id_echo, model),
+    };
+    let base = |status: f64, id_echo: Option<f64>| {
+        let mut pairs = vec![("status", num(status)), ("model", s(&model))];
+        if let Some(id) = id_echo {
+            pairs.push(("id", num(id)));
+        }
+        pairs
+    };
+    let out = match ticket.wait_timeout(shared.cfg.response_timeout) {
+        Ok(Some(c)) if c.outcome == Outcome::Served => {
+            tenant
+                .counters
+                .lock()
+                .unwrap()
+                .record_served(admitted.elapsed());
+            tenant.release();
+            let mut pairs = base(200.0, id_echo);
+            pairs.push(("outcome", s("served")));
+            pairs.push(("argmax", num(c.argmax as f64)));
+            pairs.push(("wall_us", num(c.wall_latency.as_secs_f64() * 1e6)));
+            pairs.push(("lane", s(c.priority.as_str())));
+            let logits = c.logits;
+            return finish_served(pairs, logits);
+        }
+        Ok(Some(c)) => {
+            // deadline-shed: first-class 504, never an error or a hang
+            let mut g = tenant.counters.lock().unwrap();
+            g.deadline_shed += 1;
+            drop(g);
+            tenant.release();
+            let mut pairs = base(504.0, id_echo);
+            pairs.push(("outcome", s("deadline_exceeded")));
+            pairs.push(("wall_us", num(c.wall_latency.as_secs_f64() * 1e6)));
+            (504, obj(pairs), Vec::new())
+        }
+        Ok(None) => {
+            // timed out waiting: the ticket stays resolvable, the client
+            // gets a bounded answer instead of a hung socket
+            tenant.counters.lock().unwrap().errors += 1;
+            tenant.release();
+            let mut pairs = base(500.0, id_echo);
+            pairs.push(("error", s("response timed out")));
+            (500, obj(pairs), Vec::new())
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let status = if msg.contains("shut down") { 503 } else { 500 };
+            let mut g = tenant.counters.lock().unwrap();
+            if status == 503 {
+                g.rejected_busy += 1;
+            } else {
+                g.errors += 1;
+            }
+            drop(g);
+            tenant.release();
+            let mut pairs = base(status as f64, id_echo);
+            pairs.push(("error", s(&msg)));
+            (status, obj(pairs), Vec::new())
+        }
+    };
+    out
+}
+
+/// Attach logits to a served response: the JSON body carries them for
+/// HTTP clients; framed clients read the raw float payload and ignore the
+/// (omitted) JSON copy.
+fn finish_served(mut pairs: Vec<(&str, Json)>, logits: Vec<f32>) -> (u16, Json, Vec<f32>) {
+    pairs.push((
+        "logits",
+        arr(logits.iter().map(|&v| num(v as f64)).collect()),
+    ));
+    (200, obj(pairs), logits)
+}
+
+/// Everything an inference request needs after protocol-specific parsing.
+struct InferReq {
+    model: String,
+    api_key: Option<String>,
+    priority: Option<String>,
+    deadline_ms: Option<f64>,
+    input: Vec<f32>,
+    id_echo: Option<f64>,
+}
+
+/// Admission + submission, shared by both protocols.  Every refusal is a
+/// counted `Ready` response — a rate-limited request is never silently
+/// dropped.
+fn admit_and_submit(shared: &Shared, r: InferReq) -> Outstanding {
+    let ready = |status: u16, mut pairs: Vec<(&str, Json)>| {
+        pairs.insert(0, ("status", num(status as f64)));
+        if let Some(id) = r.id_echo {
+            pairs.push(("id", num(id)));
+        }
+        Outstanding::Ready {
+            status,
+            body: obj(pairs),
+            floats: Vec::new(),
+        }
+    };
+    let Some(key) = r.api_key.as_deref() else {
+        shared.gateway.lock().unwrap().auth_failures += 1;
+        return ready(401, vec![("error", s("missing x-api-key"))]);
+    };
+    let Some(tenant) = shared.tenants.authenticate(key) else {
+        shared.gateway.lock().unwrap().auth_failures += 1;
+        return ready(401, vec![("error", s("unknown api key"))]);
+    };
+    tenant.counters.lock().unwrap().submitted += 1;
+    if shared.draining() {
+        tenant.counters.lock().unwrap().rejected_busy += 1;
+        return ready(503, vec![("error", s("draining"))]);
+    }
+    let expected = match shared.engine.input_len(&r.model) {
+        Ok(n) => n,
+        Err(e) => {
+            tenant.counters.lock().unwrap().errors += 1;
+            return ready(404, vec![("error", s(&e.to_string()))]);
+        }
+    };
+    if r.input.len() != expected {
+        tenant.counters.lock().unwrap().errors += 1;
+        return ready(
+            400,
+            vec![(
+                "error",
+                s(&format!(
+                    "model {:?} expects {expected} inputs, got {}",
+                    r.model,
+                    r.input.len()
+                )),
+            )],
+        );
+    }
+    let requested = match r.priority.as_deref() {
+        None => Priority::Normal,
+        Some(p) => match Priority::parse(p) {
+            Ok(p) => p,
+            Err(e) => {
+                tenant.counters.lock().unwrap().errors += 1;
+                return ready(400, vec![("error", s(&e.to_string()))]);
+            }
+        },
+    };
+    let opts = SubmitOptions {
+        priority: tenant.clamp(requested),
+        deadline: r
+            .deadline_ms
+            .filter(|&ms| ms > 0.0 && ms.is_finite())
+            .map(|ms| Duration::from_secs_f64(ms / 1e3)),
+    };
+    let now = Instant::now();
+    match tenant.admit(now) {
+        Err(Refusal::RateLimited) => {
+            tenant.counters.lock().unwrap().rate_limited += 1;
+            ready(429, vec![("error", s("rate limited"))])
+        }
+        Err(Refusal::OverShare) => {
+            tenant.counters.lock().unwrap().over_share += 1;
+            ready(429, vec![("error", s("over fair share"))])
+        }
+        Ok(()) => match shared.engine.try_submit_opts(&r.model, r.input, opts) {
+            Ok(Some(ticket)) => Outstanding::Waiting {
+                ticket,
+                tenant,
+                admitted: now,
+                id_echo: r.id_echo,
+                model: r.model,
+            },
+            Ok(None) => {
+                tenant.counters.lock().unwrap().rejected_busy += 1;
+                tenant.release();
+                ready(503, vec![("error", s("queue full"))])
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                let status = if msg.contains("shut down") { 503 } else { 500 };
+                let mut g = tenant.counters.lock().unwrap();
+                if status == 503 {
+                    g.rejected_busy += 1;
+                } else {
+                    g.errors += 1;
+                }
+                drop(g);
+                tenant.release();
+                ready(status, vec![("error", s(&msg))])
+            }
+        },
+    }
+}
+
+/// Route one HTTP request.
+fn process_http(shared: &Shared, req: Request) -> Outstanding {
+    let ready = |status: u16, body: Json| Outstanding::Ready {
+        status,
+        body,
+        floats: Vec::new(),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => ready(
+            200,
+            obj(vec![(
+                "status",
+                s(if shared.draining() { "draining" } else { "ok" }),
+            )]),
+        ),
+        ("GET", "/v1/models") => {
+            let models: Vec<Json> = shared
+                .engine
+                .models()
+                .iter()
+                .map(|m| {
+                    obj(vec![
+                        ("name", s(m)),
+                        (
+                            "input_len",
+                            num(shared.engine.input_len(m).unwrap_or(0) as f64),
+                        ),
+                    ])
+                })
+                .collect();
+            ready(200, obj(vec![("models", arr(models))]))
+        }
+        ("GET", "/v1/stats") => ready(200, stats_json(shared)),
+        ("POST", path) => {
+            let Some(model) = path
+                .strip_prefix("/v1/models/")
+                .and_then(|rest| rest.strip_suffix("/infer"))
+            else {
+                return ready(404, obj(vec![("error", s("unknown path"))]));
+            };
+            let input = match parse_http_input(&req.body) {
+                Ok(v) => v,
+                Err(why) => return ready(400, obj(vec![("error", s(&why))])),
+            };
+            admit_and_submit(
+                shared,
+                InferReq {
+                    model: model.to_string(),
+                    api_key: req.header(H_API_KEY).map(|v| v.to_string()),
+                    priority: req.header(H_PRIORITY).map(|v| v.to_string()),
+                    deadline_ms: req.header(H_DEADLINE_MS).and_then(|v| v.parse().ok()),
+                    input,
+                    id_echo: None,
+                },
+            )
+        }
+        ("GET", _) => ready(404, obj(vec![("error", s("unknown path"))])),
+        _ => ready(405, obj(vec![("error", s("method not allowed"))])),
+    }
+}
+
+/// Route one framed message: the JSON header carries model/key/QoS, the
+/// float payload is the input vector.
+fn process_framed(shared: &Shared, frame: super::protocol::Frame) -> Outstanding {
+    let h = &frame.header;
+    let model = h.get("model").and_then(|m| m.as_str()).unwrap_or("");
+    admit_and_submit(
+        shared,
+        InferReq {
+            model: model.to_string(),
+            api_key: h.get("api_key").and_then(|k| k.as_str()).map(String::from),
+            priority: h
+                .get("priority")
+                .and_then(|p| p.as_str())
+                .map(String::from),
+            deadline_ms: h.get("deadline_ms").and_then(|d| d.as_f64()),
+            input: frame.floats,
+            id_echo: h.get("id").and_then(|i| i.as_f64()),
+        },
+    )
+}
+
+/// `{"input": [..]}` or a bare JSON array of numbers.
+fn parse_http_input(body: &[u8]) -> std::result::Result<Vec<f32>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("bad JSON body: {e}"))?;
+    let items = json
+        .get("input")
+        .and_then(|v| v.as_arr())
+        .or_else(|| json.as_arr())
+        .ok_or_else(|| "body must be {\"input\": [..]} or a bare array".to_string())?;
+    items
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| "input must be numbers".to_string())
+        })
+        .collect()
+}
+
+/// The `/v1/stats` payload: per-tenant dispositions + gateway counters.
+fn stats_json(shared: &Shared) -> Json {
+    let tenants: Vec<(&str, Json)> = Vec::new();
+    let mut pairs = tenants;
+    let snapshots: Vec<(String, Json)> = shared
+        .tenants
+        .tenants()
+        .iter()
+        .map(|t| {
+            let c = t.counters.lock().unwrap();
+            (
+                t.spec.name.clone(),
+                obj(vec![
+                    ("submitted", num(c.submitted as f64)),
+                    ("served", num(c.served as f64)),
+                    ("deadline_shed", num(c.deadline_shed as f64)),
+                    ("rate_limited", num(c.rate_limited as f64)),
+                    ("over_share", num(c.over_share as f64)),
+                    ("rejected_busy", num(c.rejected_busy as f64)),
+                    ("errors", num(c.errors as f64)),
+                    ("p50_us", num(c.latency.quantile(0.50).as_secs_f64() * 1e6)),
+                    ("p95_us", num(c.latency.quantile(0.95).as_secs_f64() * 1e6)),
+                    ("p99_us", num(c.latency.quantile(0.99).as_secs_f64() * 1e6)),
+                    ("inflight", num(t.inflight() as f64)),
+                    ("inflight_cap", num(t.inflight_cap as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let tenant_obj = Json::Obj(snapshots.into_iter().collect());
+    let g = shared.gateway.lock().unwrap().clone();
+    pairs.push(("draining", Json::Bool(shared.draining())));
+    pairs.push(("tenants", tenant_obj));
+    pairs.push((
+        "gateway",
+        obj(vec![
+            ("connections", num(g.connections as f64)),
+            ("http_requests", num(g.http_requests as f64)),
+            ("frames", num(g.frames as f64)),
+            ("resp_2xx", num(g.resp_2xx as f64)),
+            ("resp_4xx", num(g.resp_4xx as f64)),
+            ("resp_5xx", num(g.resp_5xx as f64)),
+            ("auth_failures", num(g.auth_failures as f64)),
+            ("malformed", num(g.malformed as f64)),
+        ]),
+    ));
+    obj(pairs)
+}

@@ -1,0 +1,357 @@
+//! Multi-tenant admission control for the network edge: API-key
+//! authentication, per-tenant token-bucket rate limits, and weighted
+//! fairness (per-tenant in-flight caps) layered *on top of* the engine's
+//! QoS lanes — the lanes govern drain order once a request is admitted;
+//! this module decides who gets in and at what priority.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::serve::metrics::TenantCounters;
+use crate::serve::router::Priority;
+
+/// Static description of one tenant, as configured at server start
+/// (CLI `--tenants` or [`TenantSpec::demo_fleet`]).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display name (reports, BENCH_net.json keys).
+    pub name: String,
+    /// The `x-api-key` value that authenticates as this tenant.
+    pub api_key: String,
+    /// Sustained admission rate in requests/second; `<= 0` = unlimited.
+    pub rate_rps: f64,
+    /// Token-bucket burst capacity (max tokens banked while idle).
+    pub burst: f64,
+    /// Highest lane this tenant may use — a request asking for a higher
+    /// priority is clamped here, never rejected for it.
+    pub max_priority: Priority,
+    /// Fair-share weight: the tenant's in-flight cap is proportional to
+    /// `weight / total_weight` of the gateway's in-flight budget.
+    pub weight: u32,
+}
+
+impl TenantSpec {
+    /// The three-tier fleet the CLI serves by default: a High-lane "gold"
+    /// tenant with no rate limit, a Normal "silver" tenant, and a tightly
+    /// rate-limited Batch "free" tenant (the one that exercises 429s).
+    pub fn demo_fleet() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec {
+                name: "gold".into(),
+                api_key: "gold-key".into(),
+                rate_rps: 0.0,
+                burst: 0.0,
+                max_priority: Priority::High,
+                weight: 8,
+            },
+            TenantSpec {
+                name: "silver".into(),
+                api_key: "silver-key".into(),
+                rate_rps: 500.0,
+                burst: 50.0,
+                max_priority: Priority::Normal,
+                weight: 4,
+            },
+            TenantSpec {
+                name: "free".into(),
+                api_key: "free-key".into(),
+                // tight enough that even a closed-loop client fleet
+                // (whose offered rate is throttled by response latency)
+                // overruns it — the 429 path is reachable offline
+                rate_rps: 2.0,
+                burst: 5.0,
+                max_priority: Priority::Batch,
+                weight: 1,
+            },
+        ]
+    }
+
+    /// Parse a `--tenants` CLI list:
+    /// `name:key:rate_rps:burst:priority:weight[,name:key:...]`.
+    pub fn parse_list(spec: &str) -> crate::util::err::Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = item.split(':').collect();
+            if parts.len() != 6 {
+                crate::bail!(
+                    "tenant spec {item:?}: want name:key:rate_rps:burst:priority:weight"
+                );
+            }
+            let num = |i: usize, what: &str| -> crate::util::err::Result<f64> {
+                parts[i]
+                    .parse::<f64>()
+                    .map_err(|_| crate::util::err::Error::msg(format!(
+                        "tenant spec {item:?}: bad {what} {:?}",
+                        parts[i]
+                    )))
+            };
+            out.push(TenantSpec {
+                name: parts[0].to_string(),
+                api_key: parts[1].to_string(),
+                rate_rps: num(2, "rate_rps")?,
+                burst: num(3, "burst")?,
+                max_priority: Priority::parse(parts[4])?,
+                weight: num(5, "weight")?.max(1.0) as u32,
+            });
+        }
+        if out.is_empty() {
+            crate::bail!("empty tenant list");
+        }
+        Ok(out)
+    }
+}
+
+/// Classic token bucket: `burst` capacity, refilled at `rate_rps`
+/// tokens/second from the elapsed wall clock.  `rate_rps <= 0` means
+/// unlimited (every take succeeds).
+#[derive(Debug)]
+struct TokenBucket {
+    rate_rps: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate_rps: f64, burst: f64) -> Self {
+        // a zero-burst limited bucket could never admit anything
+        let burst = if rate_rps > 0.0 { burst.max(1.0) } else { burst };
+        Self {
+            rate_rps,
+            burst,
+            tokens: burst,
+            last: Instant::now(),
+        }
+    }
+
+    fn try_take(&mut self, now: Instant) -> bool {
+        if self.rate_rps <= 0.0 {
+            return true;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate_rps).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Why admission refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Refusal {
+    /// The tenant's token bucket is empty (sustained rate exceeded).
+    RateLimited,
+    /// The tenant is over its weighted in-flight share.
+    OverShare,
+}
+
+/// One authenticated tenant's live state.
+pub struct Tenant {
+    pub spec: TenantSpec,
+    /// In-flight cap from the fairness weights (≥ 1).
+    pub inflight_cap: u64,
+    bucket: Mutex<TokenBucket>,
+    inflight: AtomicU64,
+    /// Edge counters; merged into reports under the registry lock.
+    pub counters: Mutex<TenantCounters>,
+}
+
+impl Tenant {
+    /// Clamp a requested lane to this tenant's ceiling (High outranks
+    /// Normal outranks Batch; `idx()` is drain order, 0 = High).
+    pub fn clamp(&self, requested: Priority) -> Priority {
+        if requested.idx() < self.spec.max_priority.idx() {
+            self.spec.max_priority
+        } else {
+            requested
+        }
+    }
+
+    /// Admission control: token bucket first, then the fairness cap.  On
+    /// success the tenant's in-flight count is incremented — the caller
+    /// must pair it with [`Tenant::release`] once the response is written.
+    pub fn admit(&self, now: Instant) -> Result<(), Refusal> {
+        if !self.bucket.lock().unwrap().try_take(now) {
+            return Err(Refusal::RateLimited);
+        }
+        // optimistic increment; back out when over the share
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.inflight_cap {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(Refusal::OverShare);
+        }
+        Ok(())
+    }
+
+    /// Release one admitted request's in-flight slot.
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Current in-flight count (tests / reports).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+}
+
+/// All tenants the gateway knows, keyed by API key.
+pub struct TenantRegistry {
+    by_key: HashMap<String, Arc<Tenant>>,
+}
+
+impl TenantRegistry {
+    /// Build from specs.  `inflight_budget` is the gateway's total
+    /// concurrent-request budget; each tenant's cap is its weighted share
+    /// (at least 1, so a tiny weight can still make progress).
+    pub fn new(specs: Vec<TenantSpec>, inflight_budget: usize) -> Self {
+        let total: u64 = specs.iter().map(|s| s.weight.max(1) as u64).sum::<u64>().max(1);
+        let by_key = specs
+            .into_iter()
+            .map(|spec| {
+                let cap =
+                    ((inflight_budget as u64 * spec.weight.max(1) as u64) / total).max(1);
+                (
+                    spec.api_key.clone(),
+                    Arc::new(Tenant {
+                        bucket: Mutex::new(TokenBucket::new(spec.rate_rps, spec.burst)),
+                        inflight_cap: cap,
+                        inflight: AtomicU64::new(0),
+                        counters: Mutex::new(TenantCounters::default()),
+                        spec,
+                    }),
+                )
+            })
+            .collect();
+        Self { by_key }
+    }
+
+    /// Resolve an API key to its tenant; `None` = 401.
+    pub fn authenticate(&self, api_key: &str) -> Option<Arc<Tenant>> {
+        self.by_key.get(api_key).cloned()
+    }
+
+    /// Every tenant, sorted by name (stable report order).
+    pub fn tenants(&self) -> Vec<Arc<Tenant>> {
+        let mut v: Vec<Arc<Tenant>> = self.by_key.values().cloned().collect();
+        v.sort_by(|a, b| a.spec.name.cmp(&b.spec.name));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn one_tenant(rate_rps: f64, burst: f64, weight: u32) -> TenantRegistry {
+        TenantRegistry::new(
+            vec![TenantSpec {
+                name: "t".into(),
+                api_key: "k".into(),
+                rate_rps,
+                burst,
+                max_priority: Priority::Normal,
+                weight,
+            }],
+            8,
+        )
+    }
+
+    #[test]
+    fn token_bucket_enforces_burst_then_refills() {
+        let reg = one_tenant(10.0, 2.0, 1);
+        let t = reg.authenticate("k").unwrap();
+        let now = Instant::now();
+        assert!(t.admit(now).is_ok());
+        t.release();
+        assert!(t.admit(now).is_ok());
+        t.release();
+        // burst of 2 exhausted at the same instant
+        assert_eq!(t.admit(now), Err(Refusal::RateLimited));
+        // 200 ms at 10 rps refills 2 tokens
+        let later = now + Duration::from_millis(200);
+        assert!(t.admit(later).is_ok());
+        t.release();
+    }
+
+    #[test]
+    fn unlimited_bucket_never_rate_limits() {
+        let reg = one_tenant(0.0, 0.0, 1);
+        let t = reg.authenticate("k").unwrap();
+        let now = Instant::now();
+        for _ in 0..100 {
+            assert!(t.admit(now).is_ok());
+            t.release();
+        }
+    }
+
+    #[test]
+    fn fairness_caps_inflight_by_weight() {
+        let reg = TenantRegistry::new(
+            vec![
+                TenantSpec {
+                    name: "big".into(),
+                    api_key: "b".into(),
+                    rate_rps: 0.0,
+                    burst: 0.0,
+                    max_priority: Priority::High,
+                    weight: 3,
+                },
+                TenantSpec {
+                    name: "small".into(),
+                    api_key: "s".into(),
+                    rate_rps: 0.0,
+                    burst: 0.0,
+                    max_priority: Priority::Batch,
+                    weight: 1,
+                },
+            ],
+            8,
+        );
+        let big = reg.authenticate("b").unwrap();
+        let small = reg.authenticate("s").unwrap();
+        assert_eq!(big.inflight_cap, 6);
+        assert_eq!(small.inflight_cap, 2);
+        let now = Instant::now();
+        for _ in 0..2 {
+            assert!(small.admit(now).is_ok());
+        }
+        assert_eq!(small.admit(now), Err(Refusal::OverShare));
+        small.release();
+        assert!(small.admit(now).is_ok());
+    }
+
+    #[test]
+    fn priority_clamps_to_tenant_ceiling() {
+        let reg = one_tenant(0.0, 0.0, 1); // max_priority: Normal
+        let t = reg.authenticate("k").unwrap();
+        assert_eq!(t.clamp(Priority::High), Priority::Normal);
+        assert_eq!(t.clamp(Priority::Normal), Priority::Normal);
+        assert_eq!(t.clamp(Priority::Batch), Priority::Batch);
+    }
+
+    #[test]
+    fn unknown_key_does_not_authenticate() {
+        let reg = one_tenant(0.0, 0.0, 1);
+        assert!(reg.authenticate("nope").is_none());
+    }
+
+    #[test]
+    fn spec_list_parses_and_rejects() {
+        let specs =
+            TenantSpec::parse_list("a:ka:100:10:high:4,b:kb:0:0:batch:1").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "a");
+        assert_eq!(specs[0].max_priority, Priority::High);
+        assert_eq!(specs[1].rate_rps, 0.0);
+        assert!(TenantSpec::parse_list("a:b:c").is_err());
+        assert!(TenantSpec::parse_list("").is_err());
+        assert!(TenantSpec::parse_list("a:k:1:1:urgent:1").is_err());
+    }
+}

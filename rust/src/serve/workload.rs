@@ -16,6 +16,89 @@ use super::router::{Completion, Priority, SubmitOptions};
 /// Producers cap individual sleeps here so low rates stay responsive.
 const MAX_SLEEP: Duration = Duration::from_millis(50);
 
+/// An arrival process: the inter-arrival-gap generator shared by the
+/// in-process workload drivers below and the socket load generator
+/// ([`super::net::loadgen`]), so "Poisson at rate λ" and "Markov-modulated
+/// on/off bursts" mean exactly the same thing whether requests enter
+/// through `Engine::submit` or through a real TCP connection.
+#[derive(Debug, Clone)]
+pub enum Arrivals {
+    /// Exponential inter-arrival times at `rate` req/s.
+    Poisson { rate: f64 },
+    /// On/off modulated: bursts at `on_rate` for an exponential sojourn of
+    /// mean `mean_on`, then `off_rate` (usually 0) for `mean_off`.
+    Bursty {
+        on_rate: f64,
+        off_rate: f64,
+        mean_on: Duration,
+        mean_off: Duration,
+        /// Current phase (starts in a burst).
+        on: bool,
+        /// Time left in the current phase (seconds).
+        phase_left: f64,
+    },
+}
+
+impl Arrivals {
+    pub fn poisson(rate: f64) -> Self {
+        Arrivals::Poisson { rate }
+    }
+
+    pub fn bursty(on_rate: f64, off_rate: f64, mean_on: Duration, mean_off: Duration) -> Self {
+        Arrivals::Bursty {
+            on_rate,
+            off_rate,
+            mean_on,
+            mean_off,
+            on: true,
+            phase_left: mean_on.as_secs_f64().max(1e-9),
+        }
+    }
+
+    /// Draw the gap before the next arrival.  Always finite: a source that
+    /// can never arrive (all rates ≤ 0) reports one [`MAX_SLEEP`] so
+    /// callers poll instead of spinning through phase flips forever.
+    /// Draws clamp in f64 space — `Duration::from_secs_f64` never panics.
+    pub fn next_gap(&mut self, rng: &mut Rng) -> Duration {
+        match self {
+            Arrivals::Poisson { rate } => {
+                if *rate <= 0.0 {
+                    return MAX_SLEEP;
+                }
+                Duration::from_secs_f64(rng.exp(*rate).min(3600.0))
+            }
+            Arrivals::Bursty {
+                on_rate,
+                off_rate,
+                mean_on,
+                mean_off,
+                on,
+                phase_left,
+            } => {
+                if *on_rate <= 0.0 && *off_rate <= 0.0 {
+                    return MAX_SLEEP;
+                }
+                let mut gap = 0.0f64;
+                loop {
+                    let rate = if *on { *on_rate } else { *off_rate };
+                    let dt = if rate > 0.0 { rng.exp(rate) } else { f64::INFINITY };
+                    if dt >= *phase_left {
+                        // phase expires first: advance time and flip
+                        gap += *phase_left;
+                        *on = !*on;
+                        let mean = if *on { *mean_on } else { *mean_off };
+                        *phase_left = rng.exp(1.0 / mean.as_secs_f64().max(1e-9));
+                        continue;
+                    }
+                    *phase_left -= dt;
+                    gap += dt;
+                    return Duration::from_secs_f64(gap.min(3600.0));
+                }
+            }
+        }
+    }
+}
+
 /// A seeded Poisson request stream: exponential inter-arrival times at
 /// `rate` req/s, submitting `requests` random normal frames with the
 /// given per-request QoS options.
@@ -45,15 +128,19 @@ impl PoissonWorkload {
     /// every completion.  Batching happens in the engine's workers while
     /// the producer sleeps between arrivals, exactly as the hand-rolled
     /// producer/consumer threads used to behave.
+    /// The arrival process this workload drives (shared with the socket
+    /// load generator).
+    pub fn arrivals(&self) -> Arrivals {
+        Arrivals::poisson(self.rate)
+    }
+
     pub fn drive(&self, engine: &Engine, model: &str) -> Result<Vec<Completion>> {
         let per = engine.input_len(model)?;
         let mut rng = Rng::new(self.seed);
+        let mut arrivals = self.arrivals();
         let mut tickets = Vec::with_capacity(self.requests);
         for _ in 0..self.requests {
-            // clamp in f64 space: an extreme draw (or rate = 0 -> inf)
-            // must not panic Duration::from_secs_f64
-            let dt = rng.exp(self.rate).min(MAX_SLEEP.as_secs_f64());
-            std::thread::sleep(Duration::from_secs_f64(dt));
+            std::thread::sleep(arrivals.next_gap(&mut rng).min(MAX_SLEEP));
             tickets.push(engine.submit_opts(model, rng.normal_vec(per), self.opts)?);
         }
         tickets.into_iter().map(|t| t.wait()).collect()
@@ -126,8 +213,14 @@ impl BurstyWorkload {
     /// accepted request to resolve (served or deadline-shed — a ticket
     /// may never hang).  Sleeps are capped at 50 ms so extreme phase
     /// draws stay responsive.
+    /// The arrival process this workload drives (shared with the socket
+    /// load generator).
+    pub fn arrivals(&self) -> Arrivals {
+        Arrivals::bursty(self.on_rate, self.off_rate, self.mean_on, self.mean_off)
+    }
+
     pub fn drive(&self, engine: &Engine, model: &str) -> Result<WorkloadRun> {
-        // a source that can never arrive would loop flipping phases forever
+        // a source that can never arrive would poll MAX_SLEEP forever
         if self.on_rate <= 0.0 && self.off_rate <= 0.0 {
             return Ok(WorkloadRun {
                 completions: Vec::new(),
@@ -136,27 +229,12 @@ impl BurstyWorkload {
         }
         let per = engine.input_len(model)?;
         let mut rng = Rng::new(self.seed);
+        let mut arrivals = self.arrivals();
         let mut tickets = Vec::with_capacity(self.requests);
         let mut rejected = 0u64;
-        let mut on = true;
-        let mut phase_left = rng.exp(1.0 / self.mean_on.as_secs_f64().max(1e-9));
         let mut sent = 0usize;
         while sent < self.requests {
-            let rate = if on { self.on_rate } else { self.off_rate };
-            let dt = if rate > 0.0 { rng.exp(rate) } else { f64::INFINITY };
-            if dt >= phase_left {
-                // phase expires before the next arrival: flip on/off
-                // (sleeps clamp in f64 space — no from_secs_f64 panics)
-                std::thread::sleep(Duration::from_secs_f64(
-                    phase_left.min(MAX_SLEEP.as_secs_f64()).max(0.0),
-                ));
-                on = !on;
-                let mean = if on { self.mean_on } else { self.mean_off };
-                phase_left = rng.exp(1.0 / mean.as_secs_f64().max(1e-9));
-                continue;
-            }
-            phase_left -= dt;
-            std::thread::sleep(Duration::from_secs_f64(dt.min(MAX_SLEEP.as_secs_f64())));
+            std::thread::sleep(arrivals.next_gap(&mut rng).min(MAX_SLEEP));
             let input = rng.normal_vec(per);
             if self.block {
                 tickets.push(engine.submit_opts(model, input, self.opts)?);

@@ -226,7 +226,11 @@ pub fn arr(items: Vec<Json>) -> Json {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity literal; `{n}` would emit invalid
+        // output that no peer (including this parser) accepts.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -325,16 +329,33 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
                     b'b' => out.push('\u{8}'),
                     b'f' => out.push('\u{c}'),
                     b'u' => {
-                        if *pos + 4 > b.len() {
-                            return Err(JsonError::Eof(*pos));
+                        let cp = parse_hex4(b, pos)?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: a following \uDC00..\uDFFF
+                            // escape combines into one astral-plane char
+                            // (how python/js encoders emit chars > U+FFFF
+                            // under ASCII escaping).  Anything else is a
+                            // lone surrogate -> U+FFFD, never a panic.
+                            if b.get(*pos) == Some(&b'\\') && b.get(*pos + 1) == Some(&b'u') {
+                                let save = *pos;
+                                *pos += 2;
+                                let lo = parse_hex4(b, pos)?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                } else {
+                                    // valid escape but not a low surrogate:
+                                    // emit U+FFFD for the lone high half and
+                                    // re-parse the second escape on its own
+                                    out.push('\u{fffd}');
+                                    *pos = save;
+                                }
+                            } else {
+                                out.push('\u{fffd}');
+                            }
+                        } else {
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
-                        let hex = std::str::from_utf8(&b[*pos..*pos + 4])
-                            .map_err(|_| JsonError::BadEscape('u', *pos))?;
-                        let cp = u32::from_str_radix(hex, 16)
-                            .map_err(|_| JsonError::BadEscape('u', *pos))?;
-                        *pos += 4;
-                        // (surrogate pairs unsupported: descriptors are ASCII)
-                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                     }
                     e => return Err(JsonError::BadEscape(e as char, *pos)),
                 }
@@ -356,6 +377,18 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
             }
         }
     }
+}
+
+/// Parse exactly four hex digits at `pos` (the payload of a `\u` escape).
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32, JsonError> {
+    if *pos + 4 > b.len() {
+        return Err(JsonError::Eof(*pos));
+    }
+    let hex =
+        std::str::from_utf8(&b[*pos..*pos + 4]).map_err(|_| JsonError::BadEscape('u', *pos))?;
+    let cp = u32::from_str_radix(hex, 16).map_err(|_| JsonError::BadEscape('u', *pos))?;
+    *pos += 4;
+    Ok(cp)
 }
 
 fn utf8_len(first: u8) -> usize {
@@ -498,5 +531,67 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse("\"λ=1550nm\"").unwrap();
         assert_eq!(j.as_str(), Some("λ=1550nm"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // how python's json.dumps (ensure_ascii) escapes U+1F600
+        let j = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // lone surrogates become U+FFFD instead of corrupting the string
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{fffd}x"));
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // high surrogate followed by a non-surrogate escape keeps both
+        assert_eq!(
+            Json::parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // `{n}` would print "NaN"/"inf" — not JSON; peers must never see it
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let j = obj(vec![("p99", num(f64::NEG_INFINITY))]);
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn string_round_trip_property() {
+        // encode -> decode over arbitrary strings: control chars, quotes,
+        // backslashes, multi-byte BMP chars, and astral-plane chars — the
+        // wire protocol ships user-controlled strings through this path.
+        use crate::util::prop::{check, Config};
+        check("json string round trip", Config::default(), |g| {
+            let len = g.dim(0, 64);
+            let mut s = String::new();
+            for _ in 0..len {
+                let c = match g.rng.range(0, 6) {
+                    0 => char::from_u32(g.rng.range(0, 0x20) as u32).unwrap(),
+                    1 => ['"', '\\', '/', '\u{7f}'][g.rng.range(0, 4)],
+                    2 => char::from_u32(g.rng.range(0x20, 0x80) as u32).unwrap(),
+                    3 => 'λ',
+                    4 => '😀',
+                    _ => {
+                        // arbitrary scalar value (skip the surrogate gap)
+                        let cp = g.rng.range(0x20, 0x110000 - 0x800) as u32;
+                        let cp = if cp >= 0xD800 { cp + 0x800 } else { cp };
+                        char::from_u32(cp).unwrap_or('?')
+                    }
+                };
+                s.push(c);
+            }
+            let encoded = Json::Str(s.clone()).to_string();
+            let decoded = Json::parse(&encoded)
+                .map_err(|e| format!("reparse failed for {encoded:?}: {e}"))?;
+            crate::prop_assert!(
+                decoded.as_str() == Some(s.as_str()),
+                "round trip mismatch: {:?} -> {encoded:?} -> {:?}",
+                s,
+                decoded.as_str()
+            );
+            Ok(())
+        });
     }
 }

@@ -870,3 +870,51 @@ fn shutdown_racing_submitters_never_hangs_a_ticket() {
         "served tickets must equal completed requests"
     );
 }
+
+/// `Ticket::wait_timeout`: a timed-out wait returns `Ok(None)` and leaves
+/// the ticket fully resolvable — a later `wait()` still gets the result.
+#[test]
+fn wait_timeout_expires_then_the_ticket_still_resolves() {
+    let gate = Arc::new(Mutex::new(()));
+    let engine = Engine::builder()
+        .serve_config(ServeConfig {
+            max_batch: 2,
+            batch_window: Duration::from_millis(1),
+            queue_cap: 16,
+            ..ServeConfig::default()
+        })
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(Arc::new(GatedBackend {
+                gate: Arc::clone(&gate),
+                inner: NullBackend {
+                    input_len: 784,
+                    n_classes: 10,
+                },
+            })),
+        )
+        .build()
+        .unwrap();
+    let held = gate.lock().unwrap();
+    let mut x = vec![0.0f32; 784];
+    x[3] = 1.0;
+    let ticket = engine.submit("mnist", x).unwrap();
+    // the backend is blocked: a short wait must time out, not hang
+    let t0 = std::time::Instant::now();
+    assert!(ticket
+        .wait_timeout(Duration::from_millis(50))
+        .unwrap()
+        .is_none());
+    assert!(t0.elapsed() >= Duration::from_millis(50));
+    assert!(ticket.wait_timeout(Duration::from_millis(1)).unwrap().is_none());
+    // release the backend: the SAME ticket resolves with its own logits
+    drop(held);
+    let c = ticket.wait().unwrap();
+    assert_eq!(c.argmax, 3);
+    // and an already-done ticket returns instantly regardless of timeout
+    assert!(ticket
+        .wait_timeout(Duration::from_millis(1))
+        .unwrap()
+        .is_some());
+    engine.shutdown();
+}

@@ -1,0 +1,526 @@
+//! Integration tests for the network serving edge: wire round trips over
+//! real sockets, tenant admission (401/429), QoS header plumbing into the
+//! engine's lanes (clamping, deadlines → 504), graceful drain, and the
+//! load generator.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use sonic::model::ModelDesc;
+use sonic::serve::net::protocol::{
+    parse_frame, parse_http_response, write_frame, Parsed, FRAME_MAGIC,
+};
+use sonic::serve::net::{LoadGen, NetConfig, NetServer, TenantLoad, TenantSpec};
+use sonic::serve::workload::Arrivals;
+use sonic::serve::{
+    BackendChoice, Engine, InferenceBackend, NullBackend, Priority, ServeConfig,
+};
+use sonic::util::err::Result;
+use sonic::util::json::Json;
+
+fn null_backend(input_len: usize) -> Arc<NullBackend> {
+    Arc::new(NullBackend {
+        input_len,
+        n_classes: 10,
+    })
+}
+
+/// Backend whose batches block while the test holds `gate` — makes
+/// in-flight states deterministic.
+struct GatedBackend {
+    gate: Arc<Mutex<()>>,
+    inner: NullBackend,
+}
+
+impl InferenceBackend for GatedBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let _g = self.gate.lock().unwrap();
+        self.inner.infer_batch(inputs)
+    }
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+}
+
+fn mnist_engine(backend: Arc<dyn InferenceBackend>) -> Arc<Engine> {
+    Arc::new(
+        Engine::builder()
+            .serve_config(ServeConfig {
+                max_batch: 4,
+                batch_window: Duration::from_millis(1),
+                queue_cap: 64,
+                ..ServeConfig::default()
+            })
+            .model_desc(
+                ModelDesc::builtin("mnist").unwrap(),
+                BackendChoice::Custom(backend),
+            )
+            .build()
+            .unwrap(),
+    )
+}
+
+fn spec(name: &str, key: &str, rate: f64, burst: f64, prio: Priority) -> TenantSpec {
+    TenantSpec {
+        name: name.into(),
+        api_key: key.into(),
+        rate_rps: rate,
+        burst,
+        max_priority: prio,
+        weight: 1,
+    }
+}
+
+/// An unlimited High-ceiling tenant ("t"/"k") — the default for tests
+/// that aren't about admission.
+fn open_specs() -> Vec<TenantSpec> {
+    vec![spec("t", "k", 0.0, 0.0, Priority::High)]
+}
+
+fn connect(server: &NetServer) -> TcpStream {
+    let s = TcpStream::connect(server.connect_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+/// A one-hot POST body: NullBackend maps one-hot at `j` to argmax `j % 10`.
+fn infer_request(key: &str, hot: usize, extra_headers: &str) -> Vec<u8> {
+    let mut vals = vec!["0"; 784];
+    vals[hot] = "1";
+    let body = format!("[{}]", vals.join(","));
+    format!(
+        "POST /v1/models/mnist/infer HTTP/1.1\r\nx-api-key: {key}\r\n{extra_headers}content-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Read one HTTP response off the stream: `(status, body JSON)`.
+fn recv_http(stream: &mut TcpStream, buf: &mut Vec<u8>) -> (u16, Json) {
+    loop {
+        match parse_http_response(buf) {
+            Parsed::Complete((status, body), used) => {
+                buf.drain(..used);
+                let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+                return (status, json);
+            }
+            Parsed::Malformed(why) => panic!("malformed response: {why}"),
+            Parsed::Incomplete => {}
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).expect("read");
+        assert!(n > 0, "connection closed mid-response");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Read one framed response off the stream: `(header JSON, floats)`.
+fn recv_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> (Json, Vec<f32>) {
+    loop {
+        match parse_frame(buf) {
+            Parsed::Complete(frame, used) => {
+                buf.drain(..used);
+                return (frame.header, frame.floats);
+            }
+            Parsed::Malformed(why) => panic!("malformed frame: {why}"),
+            Parsed::Incomplete => {}
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).expect("read");
+        assert!(n > 0, "connection closed mid-frame");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+#[test]
+fn http_round_trip_keeps_the_connection_alive() {
+    let engine = mnist_engine(null_backend(784));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        open_specs(),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut conn = connect(&server);
+    let mut buf = Vec::new();
+    // two sequential inferences on ONE connection, then a health check
+    for hot in [3usize, 7] {
+        conn.write_all(&infer_request("k", hot, "")).unwrap();
+        let (status, json) = recv_http(&mut conn, &mut buf);
+        assert_eq!(status, 200, "{json:?}");
+        assert_eq!(json.get("argmax").unwrap().as_f64(), Some(hot as f64));
+        assert_eq!(json.get("outcome").unwrap().as_str(), Some("served"));
+        assert_eq!(json.get("logits").unwrap().as_arr().unwrap().len(), 10);
+    }
+    conn.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    let (status, json) = recv_http(&mut conn, &mut buf);
+    assert_eq!(status, 200);
+    assert_eq!(json.get("status").unwrap().as_str(), Some("ok"));
+    // model listing names mnist with its input length
+    conn.write_all(b"GET /v1/models HTTP/1.1\r\n\r\n").unwrap();
+    let (status, json) = recv_http(&mut conn, &mut buf);
+    assert_eq!(status, 200);
+    let models = json.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].get("name").unwrap().as_str(), Some("mnist"));
+    assert_eq!(models[0].get("input_len").unwrap().as_f64(), Some(784.0));
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn framed_round_trip_echoes_id_and_raw_logits() {
+    let engine = mnist_engine(null_backend(784));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        open_specs(),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut conn = connect(&server);
+    conn.write_all(&FRAME_MAGIC).unwrap();
+    let mut input = vec![0.0f32; 784];
+    input[5] = 1.0;
+    let header = sonic::util::json::obj(vec![
+        ("model", sonic::util::json::s("mnist")),
+        ("api_key", sonic::util::json::s("k")),
+        ("priority", sonic::util::json::s("high")),
+        ("id", sonic::util::json::num(42.0)),
+    ]);
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &header, &input);
+    conn.write_all(&wire).unwrap();
+    let mut buf = Vec::new();
+    let (resp, logits) = recv_frame(&mut conn, &mut buf);
+    assert_eq!(resp.get("status").unwrap().as_f64(), Some(200.0));
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(42.0));
+    assert_eq!(resp.get("argmax").unwrap().as_f64(), Some(5.0));
+    assert_eq!(logits.len(), 10);
+    assert!((logits[5] - 1.0).abs() < 1e-6);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn auth_and_routing_errors_map_to_statuses() {
+    let engine = mnist_engine(null_backend(784));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        open_specs(),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut conn = connect(&server);
+    let mut buf = Vec::new();
+    let cases: Vec<(Vec<u8>, u16)> = vec![
+        // no API key
+        (infer_request("", 0, ""), 401),
+        // unknown API key
+        (infer_request("wrong", 0, ""), 401),
+        // unknown model
+        (
+            b"POST /v1/models/nope/infer HTTP/1.1\r\nx-api-key: k\r\ncontent-length: 5\r\n\r\n[1,2]".to_vec(),
+            404,
+        ),
+        // wrong input length
+        (
+            b"POST /v1/models/mnist/infer HTTP/1.1\r\nx-api-key: k\r\ncontent-length: 5\r\n\r\n[1,2]".to_vec(),
+            400,
+        ),
+        // bad body
+        (
+            b"POST /v1/models/mnist/infer HTTP/1.1\r\nx-api-key: k\r\ncontent-length: 4\r\n\r\nwhat".to_vec(),
+            400,
+        ),
+        // bad priority header
+        (infer_request("k", 0, "x-priority: urgent\r\n"), 400),
+        // unknown paths and methods
+        (b"GET /nope HTTP/1.1\r\n\r\n".to_vec(), 404),
+        (b"POST /nope HTTP/1.1\r\ncontent-length: 0\r\n\r\n".to_vec(), 404),
+        (b"DELETE /healthz HTTP/1.1\r\n\r\n".to_vec(), 405),
+    ];
+    for (req, want) in cases {
+        conn.write_all(&req).unwrap();
+        let (status, json) = recv_http(&mut conn, &mut buf);
+        assert_eq!(status, want, "request {:?} -> {json:?}", String::from_utf8_lossy(&req));
+        assert!(json.get("error").is_some());
+    }
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn rate_limit_answers_429_and_counts_it() {
+    let engine = mnist_engine(null_backend(784));
+    // burst of 1, refill far slower than the test: second request MUST 429
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        vec![spec("rl", "rk", 0.001, 1.0, Priority::Normal)],
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut conn = connect(&server);
+    let mut buf = Vec::new();
+    conn.write_all(&infer_request("rk", 1, "")).unwrap();
+    let (status, _) = recv_http(&mut conn, &mut buf);
+    assert_eq!(status, 200);
+    let mut seen_429: u64 = 0;
+    for _ in 0..3 {
+        conn.write_all(&infer_request("rk", 1, "")).unwrap();
+        let (status, json) = recv_http(&mut conn, &mut buf);
+        assert_eq!(status, 429, "{json:?}");
+        assert_eq!(json.get("error").unwrap().as_str(), Some("rate limited"));
+        seen_429 += 1;
+    }
+    // every refusal got a response AND a counter — never silently dropped
+    let counters = server.tenant_counters();
+    let (_, c) = counters.iter().find(|(n, _)| n == "rl").unwrap();
+    assert_eq!(c.rate_limited, seen_429);
+    assert_eq!(c.submitted, 1 + seen_429);
+    assert_eq!(c.served, 1);
+    server.shutdown();
+    engine.shutdown();
+}
+
+#[test]
+fn priority_header_reaches_the_lanes_and_clamps_to_tenant_ceiling() {
+    let engine = mnist_engine(null_backend(784));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        vec![
+            spec("vip", "vip-key", 0.0, 0.0, Priority::High),
+            spec("std", "std-key", 0.0, 0.0, Priority::Normal),
+        ],
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut conn = connect(&server);
+    let mut buf = Vec::new();
+    // vip asks High and gets it; std asks High and is clamped to Normal
+    conn.write_all(&infer_request("vip-key", 0, "x-priority: high\r\n"))
+        .unwrap();
+    let (status, json) = recv_http(&mut conn, &mut buf);
+    assert_eq!(status, 200);
+    assert_eq!(json.get("lane").unwrap().as_str(), Some("high"));
+    conn.write_all(&infer_request("std-key", 0, "x-priority: high\r\n"))
+        .unwrap();
+    let (status, json) = recv_http(&mut conn, &mut buf);
+    assert_eq!(status, 200);
+    assert_eq!(json.get("lane").unwrap().as_str(), Some("normal"));
+    server.shutdown();
+    engine.shutdown();
+    // the engine's own lane counters saw exactly one request per lane
+    let metrics = engine.metrics();
+    let m = metrics.model("mnist").unwrap();
+    let completed = |p: Priority| {
+        m.lanes
+            .iter()
+            .find(|l| l.priority == p)
+            .map_or(0, |l| l.completed)
+    };
+    assert_eq!(completed(Priority::High), 1);
+    assert_eq!(completed(Priority::Normal), 1);
+    assert_eq!(completed(Priority::Batch), 0);
+}
+
+#[test]
+fn deadline_header_sheds_queued_requests_as_504() {
+    let gate = Arc::new(Mutex::new(()));
+    let engine = mnist_engine(Arc::new(GatedBackend {
+        gate: Arc::clone(&gate),
+        inner: NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        },
+    }));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        open_specs(),
+        NetConfig::default(),
+    )
+    .unwrap();
+    // hold the gate: request A occupies the backend, request B (1 ms
+    // deadline) expires in the queue behind it
+    let held = gate.lock().unwrap();
+    let mut conn_a = connect(&server);
+    let mut conn_b = connect(&server);
+    conn_a.write_all(&infer_request("k", 0, "")).unwrap();
+    std::thread::sleep(Duration::from_millis(60)); // A reaches the backend
+    conn_b
+        .write_all(&infer_request("k", 1, "x-deadline-ms: 1\r\n"))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(60)); // B's deadline expires
+    drop(held);
+    let mut buf = Vec::new();
+    let (status_a, _) = recv_http(&mut conn_a, &mut buf);
+    assert_eq!(status_a, 200);
+    let mut buf_b = Vec::new();
+    let (status_b, json_b) = recv_http(&mut conn_b, &mut buf_b);
+    assert_eq!(status_b, 504, "{json_b:?}");
+    assert_eq!(
+        json_b.get("outcome").unwrap().as_str(),
+        Some("deadline_exceeded")
+    );
+    server.shutdown();
+    engine.shutdown();
+    // shed is visible in BOTH the tenant counters and the engine lanes
+    let counters = server.tenant_counters();
+    let (_, c) = counters.iter().find(|(n, _)| n == "t").unwrap();
+    assert_eq!(c.deadline_shed, 1);
+    let metrics = engine.metrics();
+    assert_eq!(metrics.model("mnist").unwrap().serve.shed, 1);
+}
+
+/// Satellite 3: graceful drain — every in-flight request is answered,
+/// new connections are refused afterwards.  Watchdogged: a hang here is
+/// a bug, not a slow machine.
+#[test]
+fn graceful_drain_answers_inflight_and_refuses_new_connections() {
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let gate = Arc::new(Mutex::new(()));
+        let engine = mnist_engine(Arc::new(GatedBackend {
+            gate: Arc::clone(&gate),
+            inner: NullBackend {
+                input_len: 784,
+                n_classes: 10,
+            },
+        }));
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            open_specs(),
+            NetConfig::default(),
+        )
+        .unwrap();
+        let addr = server.connect_addr();
+        // three connections, each with one request in flight behind the
+        // held gate
+        let held = gate.lock().unwrap();
+        let mut conns: Vec<TcpStream> = (0..3).map(|_| connect(&server)).collect();
+        for (i, c) in conns.iter_mut().enumerate() {
+            c.write_all(&infer_request("k", i, "")).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(100)); // all admitted
+        // drain in the background (it must wait for the gate), then let
+        // the backend finish
+        let drainer = std::thread::spawn(move || server.shutdown());
+        std::thread::sleep(Duration::from_millis(100));
+        drop(held);
+        // EVERY in-flight request gets its real answer
+        for (i, c) in conns.iter_mut().enumerate() {
+            let mut buf = Vec::new();
+            let (status, json) = recv_http(c, &mut buf);
+            assert_eq!(status, 200, "conn {i}: {json:?}");
+            assert_eq!(json.get("argmax").unwrap().as_f64(), Some(i as f64));
+        }
+        assert!(drainer.join().unwrap(), "drain timed out");
+        // new connections are refused (or immediately closed) after drain
+        match TcpStream::connect_timeout(&addr, Duration::from_secs(1)) {
+            Err(_) => {}
+            Ok(mut s) => {
+                s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+                let mut tmp = [0u8; 16];
+                match s.read(&mut tmp) {
+                    Ok(0) => {}                    // EOF: closed by the server
+                    Err(_) => {}                   // reset: also refused
+                    Ok(n) => panic!("drained server answered with {n} bytes"),
+                }
+            }
+        }
+        engine.shutdown();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(20))
+        .expect("graceful-drain test wedged");
+}
+
+/// A slow backend makes the loopback gateway genuinely overloaded, so the
+/// loadgen smoke sees both 2xx and 429 deterministically.
+struct SlowBackend {
+    inner: NullBackend,
+    delay: Duration,
+}
+
+impl InferenceBackend for SlowBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.infer_batch(inputs)
+    }
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+}
+
+#[test]
+fn loadgen_drives_tenants_and_reports_throttling() {
+    let engine = mnist_engine(Arc::new(SlowBackend {
+        inner: NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        },
+        delay: Duration::from_micros(500),
+    }));
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&engine),
+        vec![
+            spec("gold", "gold-key", 0.0, 0.0, Priority::High),
+            spec("free", "free-key", 0.5, 2.0, Priority::Batch),
+        ],
+        NetConfig::default(),
+    )
+    .unwrap();
+    let load = |label: &str, key: &str, n, framed, prio| TenantLoad {
+        label: label.into(),
+        api_key: key.into(),
+        model: "mnist".into(),
+        input_len: 784,
+        requests: n,
+        connections: 2,
+        arrivals: Arrivals::poisson(500.0),
+        priority: prio,
+        deadline_ms: None,
+        framed,
+        seed: 11,
+    };
+    let gen = LoadGen {
+        target: server.connect_addr(),
+        tenants: vec![
+            load("gold", "gold-key", 24, true, Priority::High),
+            load("free", "free-key", 16, false, Priority::Batch),
+        ],
+    };
+    let report = gen.run();
+    let gold = report.tenant("gold").unwrap();
+    let free = report.tenant("free").unwrap();
+    assert_eq!(gold.sent, 24);
+    assert_eq!(gold.ok_2xx, 24, "unlimited tenant fully served");
+    assert_eq!(gold.transport_errors, 0);
+    assert!(free.ok_2xx >= 1, "free burst admits a couple");
+    assert!(free.http_429 >= 1, "tight bucket must throttle: {free:?}");
+    assert_eq!(
+        free.sent,
+        free.ok_2xx + free.http_429 + free.http_503 + free.http_504 + free.other_status,
+        "every request got exactly one response"
+    );
+    // the report serializes with per-tenant percentiles
+    let json = report.to_json();
+    let t = json.get("tenants").unwrap();
+    assert!(t.get("gold").unwrap().get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        t.get("free").unwrap().get("http_429").unwrap().as_f64(),
+        Some(free.http_429 as f64)
+    );
+    server.shutdown();
+    engine.shutdown();
+}
