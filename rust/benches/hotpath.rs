@@ -17,8 +17,10 @@
 //! and activation-gated-vs-ungated across act sparsity x batch) land in
 //! `BENCH_kernels.json` / `BENCH_actgate.json`; the QoS
 //! grid (priority mix x deadline mix under an overloaded engine, per-lane
-//! p99 + shed counts) lands in `BENCH_qos.json`; everything else in
-//! `BENCH_hotpath.json` for the perf trajectory (CI uploads all four).
+//! p99 + shed counts) lands in `BENCH_qos.json`; the cluster chaos grid
+//! (availability / retry amplification / hung-ticket count with a replica
+//! killed or stalled mid-load) lands in `BENCH_cluster.json`; everything
+//! else in `BENCH_hotpath.json` for the perf trajectory (CI uploads all).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -31,6 +33,9 @@ use sonic::coordinator::convflow::{
 use sonic::coordinator::schedule::{schedule_conv, schedule_fc, schedule_layer};
 use sonic::model::ModelDesc;
 use sonic::plan::{cached, FcExec, KernelChoice, KernelPolicy, ModelPlan, PlanBackend};
+use sonic::serve::cluster::{
+    ChaosEvent, ChaosSpec, ClusterConfig, ClusterEngine, FaultKind, HealthPolicy, RetryPolicy,
+};
 use sonic::serve::{
     BackendChoice, Engine, InferenceBackend, NullBackend, Priority, ServeConfig, SubmitOptions,
 };
@@ -576,6 +581,201 @@ fn main() {
     match std::fs::write(&qout, qos_json.to_pretty()) {
         Ok(()) => println!("QoS grid results written to {qout}"),
         Err(e) => eprintln!("could not write {qout}: {e}"),
+    }
+
+    // --- Cluster chaos grid: availability under replica faults ----------
+    //
+    // Acceptance for the fault-tolerant cluster: 3 replicas of the same
+    // slow backend, a paced request stream, and a deterministic fault on
+    // replica 1 in the middle of the run.  Cells: healthy baseline,
+    // kill-1-of-3 (backend errors instantly; retries fail over), and
+    // stall-1-of-3 (backend blocks; per-try timeouts abandon and re-queue
+    // the tries).  Gates (checked in CI from BENCH_cluster.json): every
+    // ticket resolves (hung == 0), kill-cell availability >= 99%, retry
+    // amplification < 1.5x, and energy rolls up only executed work.
+    println!("\n=== Cluster chaos grid: availability under replica faults ===\n");
+    let creq: usize = if bench_iters().is_some() { 150 } else { 600 };
+    let pace = Duration::from_micros(500);
+    let window = pace * creq as u32;
+    let fault_at = window.mul_f64(0.25);
+    let fault_dur = window.mul_f64(0.35);
+    let chaos_specs: Vec<(&str, ChaosSpec)> = vec![
+        ("healthy", ChaosSpec::none()),
+        (
+            "kill-1of3",
+            ChaosSpec {
+                events: vec![ChaosEvent {
+                    at: fault_at,
+                    replica: 1,
+                    kind: FaultKind::Kill {
+                        dur: Some(fault_dur),
+                    },
+                }],
+            },
+        ),
+        (
+            "stall-1of3",
+            ChaosSpec {
+                events: vec![ChaosEvent {
+                    at: fault_at,
+                    replica: 1,
+                    kind: FaultKind::Stall { dur: fault_dur },
+                }],
+            },
+        ),
+    ];
+    let mut chaos_cells = Vec::new();
+    let mut healthy_ppw = 0.0f64;
+    let mut kill_gate = (1.0f64, 0u64, 1.0f64); // (availability, hung, retry_amp)
+    for (cell_name, chaos) in chaos_specs {
+        let cluster = ClusterEngine::build_with(
+            mnist.clone(),
+            ClusterConfig {
+                replicas: 3,
+                serve: ServeConfig {
+                    max_batch: 8,
+                    batch_window: Duration::from_micros(200),
+                    queue_cap: 256,
+                    promote_after: Duration::from_millis(250),
+                    ..ServeConfig::default()
+                },
+                retry: RetryPolicy {
+                    // well under the stall duration so stalled tries are
+                    // abandoned and re-queued, not waited out
+                    per_try_timeout: Duration::from_millis(10),
+                    base_backoff: Duration::from_micros(500),
+                    max_backoff: Duration::from_millis(5),
+                    ..RetryPolicy::default()
+                },
+                health: HealthPolicy {
+                    probe_interval: Duration::from_millis(10),
+                    probe_timeout: Duration::from_millis(50),
+                    ..HealthPolicy::default()
+                },
+                chaos,
+                ..ClusterConfig::default()
+            },
+            |_| {
+                Arc::new(SlowBackend {
+                    inner: NullBackend {
+                        input_len: 784,
+                        n_classes: 10,
+                    },
+                    per_batch,
+                }) as Arc<dyn InferenceBackend>
+            },
+        )
+        .expect("cluster build");
+        let input = vec![0.25f32; 784];
+        let t0 = std::time::Instant::now();
+        let mut tickets = Vec::with_capacity(creq);
+        let mut in_window = vec![false; creq];
+        for i in 0..creq {
+            let due = pace * i as u32;
+            let now = t0.elapsed();
+            if now < due {
+                std::thread::sleep(due - now);
+            }
+            let off = t0.elapsed();
+            // the fault window plus half a duration of recovery tail
+            in_window[i] = off >= fault_at && off <= fault_at + fault_dur + fault_dur / 2;
+            tickets.push(cluster.submit("mnist", input.clone()).expect("cluster submit"));
+        }
+        // watchdogged waits: every ticket must resolve well within the
+        // bound — a None here is a hung ticket, the cardinal sin
+        let mut served = 0u64;
+        let mut replica_failed = 0u64;
+        let mut hung = 0u64;
+        let mut window_hist = sonic::serve::LatencyHistogram::default();
+        for (i, t) in tickets.iter().enumerate() {
+            match t.wait_timeout(Duration::from_secs(5)) {
+                Ok(Some(c)) if c.served() => {
+                    served += 1;
+                    if in_window[i] {
+                        window_hist.record(c.wall_latency);
+                    }
+                }
+                Ok(Some(_)) => replica_failed += 1,
+                Ok(None) => hung += 1,
+                Err(_) => replica_failed += 1,
+            }
+        }
+        cluster.shutdown();
+        let m = cluster.metrics();
+        let ppw = m.photonic_fps_per_watt();
+        if cell_name == "healthy" {
+            healthy_ppw = ppw;
+        }
+        if cell_name == "kill-1of3" {
+            kill_gate = (m.availability(), hung, m.retry_amplification());
+        }
+        let ppw_vs_healthy = if healthy_ppw > 0.0 { ppw / healthy_ppw } else { 0.0 };
+        println!(
+            "chaos cell [{cell_name:>10}]: served {served:>4}  failed {replica_failed:>3}  hung {hung}  \
+             avail {:.4}  retries {:<4} failovers {:<4} amp {:.3}  window p99 {:?}  ppw {:.3}x",
+            m.availability(),
+            m.retries,
+            m.failovers,
+            m.retry_amplification(),
+            window_hist.quantile(0.99),
+            ppw_vs_healthy,
+        );
+        let replicas_json = arr(m
+            .replicas
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("index", num(r.index as f64)),
+                    ("health", s(r.health.as_str())),
+                    ("tries", num(r.tries as f64)),
+                    ("failures", num(r.failures as f64)),
+                    ("probes", num(r.probes as f64)),
+                    ("time_degraded_s", num(r.time_degraded.as_secs_f64())),
+                    ("time_dead_s", num(r.time_dead.as_secs_f64())),
+                    ("photonic_energy_j", num(r.serve.photonic_energy_j)),
+                ])
+            })
+            .collect());
+        chaos_cells.push(obj(vec![
+            ("cell", s(cell_name)),
+            ("submitted", num(creq as f64)),
+            ("served", num(served as f64)),
+            ("replica_failed", num(replica_failed as f64)),
+            ("hung", num(hung as f64)),
+            ("availability", num(m.availability())),
+            ("retries", num(m.retries as f64)),
+            ("failovers", num(m.failovers as f64)),
+            ("retry_amplification", num(m.retry_amplification())),
+            ("window_p99_ns", num(window_hist.quantile(0.99).as_nanos() as f64)),
+            ("p99_ns", num(m.p99.as_nanos() as f64)),
+            ("fps_per_watt", num(ppw)),
+            ("ppw_vs_healthy", num(ppw_vs_healthy)),
+            ("photonic_energy_j", num(m.serve.photonic_energy_j)),
+            ("replicas", replicas_json),
+        ]));
+    }
+    let (kill_avail, kill_hung, kill_amp) = kill_gate;
+    println!(
+        "\nkill-1of3 gates: availability {kill_avail:.4} (>= 0.99), hung {kill_hung} (== 0), \
+         retry amplification {kill_amp:.3} (< 1.5)"
+    );
+    let cluster_json = obj(vec![
+        ("bench", s("cluster_chaos")),
+        ("requests_per_cell", num(creq as f64)),
+        ("replicas", num(3.0)),
+        ("pace_us", num(pace.as_micros() as f64)),
+        ("fault_at_us", num(fault_at.as_micros() as f64)),
+        ("fault_dur_us", num(fault_dur.as_micros() as f64)),
+        ("kill_availability", num(kill_avail)),
+        ("kill_hung", num(kill_hung as f64)),
+        ("kill_retry_amplification", num(kill_amp)),
+        ("cells", arr(chaos_cells)),
+    ]);
+    let cout = std::env::var("SONIC_BENCH_CLUSTER_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    match std::fs::write(&cout, cluster_json.to_pretty()) {
+        Ok(()) => println!("cluster chaos grid results written to {cout}"),
+        Err(e) => eprintln!("could not write {cout}: {e}"),
     }
 
     // --- analytic simulator (the figure generator's inner loop) ---

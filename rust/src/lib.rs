@@ -36,8 +36,21 @@
 //!   to serve.  **Network edge** ([`serve::net`]): a hand-rolled
 //!   multi-tenant gateway (HTTP/1.1 + a framed-TCP fast path sharing one
 //!   port) maps API keys to token-bucket rate limits and weighted fair
-//!   shares, QoS headers onto the lanes, and drains gracefully; the
-//!   socket load generator (`sonic loadgen`) writes `BENCH_net.json`.
+//!   shares, QoS headers onto the lanes, and drains gracefully — locally
+//!   or via the admin-gated `POST /v1/admin/drain`; the socket load
+//!   generator (`sonic loadgen`) writes `BENCH_net.json`.
+//!   **Fault-tolerant clustering** ([`serve::cluster`]): a
+//!   [`serve::cluster::ClusterEngine`] replicates a model across N
+//!   engines behind health-gated power-of-two-choices routing
+//!   (Healthy/Degraded/Dead per replica, heartbeat probes, re-warm
+//!   through Degraded), retries dead or stalled tries on another
+//!   replica with deadline-aware capped backoff (budget exhaustion is a
+//!   first-class [`serve::Outcome::ReplicaFailed`], never a hang), and
+//!   charges photonic energy only for work that actually executed.
+//!   Deterministic fault injection ([`serve::cluster::chaos`], CLI
+//!   `--replicas`/`--chaos`) drives the chaos bench grid
+//!   (`BENCH_cluster.json`) CI gates on: kill-1-of-3 availability
+//!   ≥ 99%, zero hung tickets, retry amplification < 1.5×.
 //! * [`plan`] — the compile-once `LayerPlan`/`ModelPlan` IR (see
 //!   `src/plan/README.md`): every `(model, SonicConfig)` pair is compiled
 //!   exactly once into per-layer VDU decompositions, EO-vs-TO retune

@@ -9,6 +9,7 @@
 //!   report   — per-layer simulator breakdown for one model
 //!   table1/table2/table3 — paper table reconstructions
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use sonic::bail;
@@ -17,8 +18,9 @@ use sonic::util::err::Result;
 use sonic::arch::SonicConfig;
 use sonic::baselines::all_platforms;
 use sonic::model::ModelDesc;
+use sonic::serve::cluster::{ChaosSpec, ClusterConfig, ClusterEngine, ClusterMetrics};
 use sonic::serve::net::{
-    fetch_models, LoadGen, NetConfig, NetServer, TenantLoad, TenantSpec,
+    fetch_models, GatewayEngine, LoadGen, NetConfig, NetServer, TenantLoad, TenantSpec,
 };
 use sonic::serve::workload::{print_report, Arrivals, PoissonWorkload};
 use sonic::serve::{BackendChoice, Engine, Priority, ServeConfig, SubmitOptions};
@@ -84,17 +86,23 @@ USAGE: sonic <subcommand> [options]
   serve     --model <m> [--requests N] [--batch B] [--rate R] [--backend auto|pjrt|plan]
             [--priority high|normal|batch] [--deadline-ms D] [--autotune]
             [--listen addr:port] [--tenants name:key:rps:burst:prio:weight,...]
-            [--duration-s S]
+            [--duration-s S] [--replicas N] [--chaos SPEC]
                                         serve a synthetic request stream, or —
                                         with --listen — expose the engine as a
                                         multi-tenant HTTP + framed-TCP gateway
                                         (--autotune: time all FC kernels on the
-                                        first batch and re-plan mispredictions)
+                                        first batch and re-plan mispredictions;
+                                        --replicas > 1: a fault-tolerant cluster
+                                        with retry/failover; --chaos: scheduled
+                                        faults, e.g. kill@200ms:r1:dur=400ms)
   loadgen   [--target addr:port] [--requests N] [--slow-us U] [--out f.json]
+            [--replicas N] [--chaos SPEC]
                                         socket load generator; without --target
                                         it serves itself on a loopback port with
                                         a deliberately slow backend (overload)
-                                        and writes BENCH_net.json
+                                        and writes BENCH_net.json — with
+                                        --replicas/--chaos the self-serve side
+                                        is a cluster under fault injection
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
@@ -127,6 +135,8 @@ fn specs_model() -> Vec<OptSpec> {
         OptSpec { name: "listen", takes_value: true, help: "serve over TCP on addr:port (HTTP + framed)" },
         OptSpec { name: "tenants", takes_value: true, help: "tenant list: name:key:rate_rps:burst:priority:weight,..." },
         OptSpec { name: "duration-s", takes_value: true, help: "network serve duration in seconds (0 = forever)" },
+        OptSpec { name: "replicas", takes_value: true, help: "replica count; > 1 serves through a fault-tolerant cluster" },
+        OptSpec { name: "chaos", takes_value: true, help: "chaos schedule: kind@time:rN[:dur=T][:x=M],... (kind: kill|stall|slow)" },
         OptSpec { name: "target", takes_value: true, help: "loadgen target addr:port (absent = self-serve loopback)" },
         OptSpec { name: "slow-us", takes_value: true, help: "self-serve backend delay per batch (microseconds)" },
         OptSpec { name: "out", takes_value: true, help: "output JSON path" },
@@ -268,8 +278,60 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--replicas` / `--chaos` cluster flags; any chaos
+/// spec implies a cluster (of at least one replica) so faults have a
+/// supervisor to retry around.
+fn cluster_opts_from(a: &Args) -> Result<Option<(usize, ChaosSpec)>> {
+    let replicas: usize = a.parse_num("replicas", 1)?;
+    let chaos = match a.get("chaos") {
+        Some(spec) => ChaosSpec::parse(spec)?,
+        None => ChaosSpec::none(),
+    };
+    if replicas > 1 || !chaos.is_empty() {
+        Ok(Some((replicas.max(1), chaos)))
+    } else {
+        Ok(None)
+    }
+}
+
+fn print_cluster_metrics(m: &ClusterMetrics) {
+    println!("  -- cluster ({}) --", m.model);
+    println!(
+        "  completed {}  deadline {}  replica_failed {}  retries {}  failovers {}  \
+         availability {:.4}  retry amplification {:.3}",
+        m.completed,
+        m.deadline_exceeded,
+        m.replica_failed,
+        m.retries,
+        m.failovers,
+        m.availability(),
+        m.retry_amplification(),
+    );
+    println!(
+        "  p50 {:?}  p99 {:?}  photonic {:.1} FPS/W (executed work only)",
+        m.p50,
+        m.p99,
+        m.photonic_fps_per_watt(),
+    );
+    for r in &m.replicas {
+        println!(
+            "  r{} {:<8} tries {:<6} failures {:<5} probes {:<4} degraded {:?} dead {:?} energy {:.3e} J",
+            r.index,
+            r.health.as_str(),
+            r.tries,
+            r.failures,
+            r.probes,
+            r.time_degraded,
+            r.time_dead,
+            r.serve.photonic_energy_j,
+        );
+    }
+}
+
 /// `sonic serve --listen addr:port`: expose the engine as the network
 /// gateway (HTTP/1.1 + framed TCP on one port, multi-tenant admission).
+/// With `--replicas N` (or any `--chaos` spec) the gateway fronts a
+/// fault-tolerant [`ClusterEngine`] instead of a single engine.
 fn cmd_serve_net(a: &Args) -> Result<()> {
     let listen = a.get("listen").expect("checked by caller");
     let model = a.get_or("model", "mnist").to_string();
@@ -280,50 +342,74 @@ fn cmd_serve_net(a: &Args) -> Result<()> {
         None => TenantSpec::demo_fleet(),
     };
     let duration_s: f64 = a.parse_num("duration-s", 0.0)?;
+    let serve_cfg = ServeConfig {
+        max_batch,
+        batch_window: Duration::from_millis(2),
+        autotune: a.flag("autotune"),
+        ..ServeConfig::default()
+    };
 
-    let engine = std::sync::Arc::new(
-        Engine::builder()
-            .arch(arch_from(a))
-            .serve_config(ServeConfig {
-                max_batch,
-                batch_window: Duration::from_millis(2),
-                autotune: a.flag("autotune"),
-                ..ServeConfig::default()
-            })
-            .model(&model, backend)
-            .build()?,
-    );
-    let server = NetServer::bind(
-        listen,
-        std::sync::Arc::clone(&engine),
-        tenants,
-        NetConfig::default(),
-    )?;
-    println!(
-        "gateway on {} serving {model:?} ({} backend)",
-        server.local_addr(),
-        engine.backend_kind(&model)?,
-    );
-    println!("  POST /v1/models/{model}/infer   (x-api-key, x-priority, x-deadline-ms)");
-    println!("  GET  /healthz | /v1/models | /v1/stats");
-    if duration_s > 0.0 {
-        std::thread::sleep(Duration::from_secs_f64(duration_s));
-    } else {
-        loop {
-            std::thread::sleep(Duration::from_secs(3600));
+    let gateway: GatewayEngine = match cluster_opts_from(a)? {
+        Some((replicas, chaos)) => {
+            let desc = ModelDesc::try_load_or_builtin(&model)?;
+            let cluster = Arc::new(ClusterEngine::build(
+                desc,
+                ClusterConfig {
+                    replicas,
+                    serve: serve_cfg,
+                    arch: arch_from(a),
+                    chaos,
+                    ..ClusterConfig::default()
+                },
+            )?);
+            println!("cluster: {replicas} replicas (compiled-plan backends)");
+            GatewayEngine::Cluster(cluster)
         }
+        None => GatewayEngine::Single(Arc::new(
+            Engine::builder()
+                .arch(arch_from(a))
+                .serve_config(serve_cfg)
+                .model(&model, backend)
+                .build()?,
+        )),
+    };
+    let server = NetServer::bind(listen, gateway.clone(), tenants, NetConfig::default())?;
+    println!("gateway on {} serving {model:?}", server.local_addr());
+    println!("  POST /v1/models/{model}/infer   (x-api-key, x-priority, x-deadline-ms)");
+    println!("  POST /v1/admin/drain            (admin-tier x-api-key)");
+    println!("  GET  /healthz | /v1/models | /v1/stats");
+    let t_end = (duration_s > 0.0)
+        .then(|| std::time::Instant::now() + Duration::from_secs_f64(duration_s));
+    loop {
+        if server.drain_requested() {
+            println!("drain requested via /v1/admin/drain");
+            break;
+        }
+        if let Some(end) = t_end {
+            if std::time::Instant::now() >= end {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(200));
     }
     println!("draining ...");
     let drained = server.shutdown();
-    engine.shutdown();
+    match &gateway {
+        GatewayEngine::Single(engine) => engine.shutdown(),
+        GatewayEngine::Cluster(cluster) => {
+            cluster.shutdown();
+            print_cluster_metrics(&cluster.metrics());
+        }
+    }
     for (name, c) in server.tenant_counters() {
         println!(
-            "  tenant {name:<8} submitted {:<6} served {:<6} throttled {:<5} busy {:<5} shed {:<5} p99 {:?}",
+            "  tenant {name:<8} submitted {:<6} served {:<6} throttled {:<5} busy {:<5} shed {:<5} failed {:<4} p99 {:?}",
             c.submitted,
             c.served,
             c.throttled(),
             c.rejected_busy,
             c.deadline_shed,
+            c.replica_failed,
             c.latency.quantile(0.99),
         );
     }
@@ -346,33 +432,51 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     // Self-serve: a slow NullBackend under a small batch cap is a
     // guaranteed overload for the closed-loop fleets below.
     let self_serve = a.get("target").is_none();
-    let mut server_state = None;
+    let mut server_state: Option<(NetServer, GatewayEngine)> = None;
     let target = if self_serve {
         let slow_us: u64 = a.parse_num("slow-us", 1500u64)?;
-        let engine = std::sync::Arc::new(
-            Engine::builder()
-                .serve_config(ServeConfig {
-                    max_batch: 4,
-                    batch_window: Duration::from_millis(1),
-                    queue_cap: 64,
-                    promote_after: Duration::from_millis(250),
-                    ..ServeConfig::default()
-                })
-                .model(
-                    "mnist",
-                    BackendChoice::Custom(std::sync::Arc::new(SlowBackend {
-                        inner: sonic::serve::NullBackend {
-                            input_len: 784,
-                            n_classes: 10,
-                        },
-                        delay: Duration::from_micros(slow_us),
-                    })),
-                )
-                .build()?,
-        );
+        let serve_cfg = ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            queue_cap: 64,
+            promote_after: Duration::from_millis(250),
+            ..ServeConfig::default()
+        };
+        let slow_backend = || -> Arc<dyn sonic::serve::InferenceBackend> {
+            Arc::new(SlowBackend {
+                inner: sonic::serve::NullBackend {
+                    input_len: 784,
+                    n_classes: 10,
+                },
+                delay: Duration::from_micros(slow_us),
+            })
+        };
+        let gateway: GatewayEngine = match cluster_opts_from(a)? {
+            Some((replicas, chaos)) => {
+                let desc = ModelDesc::builtin("mnist").expect("builtin model");
+                let cluster = Arc::new(ClusterEngine::build_with(
+                    desc,
+                    ClusterConfig {
+                        replicas,
+                        serve: serve_cfg,
+                        chaos,
+                        ..ClusterConfig::default()
+                    },
+                    |_| slow_backend(),
+                )?);
+                println!("self-serve cluster: {replicas} slow replicas");
+                GatewayEngine::Cluster(cluster)
+            }
+            None => GatewayEngine::Single(Arc::new(
+                Engine::builder()
+                    .serve_config(serve_cfg)
+                    .model("mnist", BackendChoice::Custom(slow_backend()))
+                    .build()?,
+            )),
+        };
         let server = NetServer::bind(
             "127.0.0.1:0",
-            std::sync::Arc::clone(&engine),
+            gateway.clone(),
             TenantSpec::demo_fleet(),
             NetConfig {
                 inflight_budget: 64,
@@ -383,7 +487,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         println!(
             "self-serve gateway on {target} (backend delay {slow_us} µs/batch, max batch 4)"
         );
-        server_state = Some((server, engine));
+        server_state = Some((server, gateway));
         target
     } else {
         let t = a.get("target").unwrap();
@@ -428,25 +532,77 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let report = gen.run();
     report.print();
 
-    if let Some((server, engine)) = server_state {
+    let mut cluster_json = None;
+    if let Some((server, gateway)) = server_state {
         server.shutdown();
-        engine.shutdown();
+        match &gateway {
+            GatewayEngine::Single(engine) => engine.shutdown(),
+            GatewayEngine::Cluster(cluster) => {
+                cluster.shutdown();
+                let m = cluster.metrics();
+                print_cluster_metrics(&m);
+                cluster_json = Some(cluster_metrics_json(&m));
+            }
+        }
         println!("  -- server-side tenant counters --");
         for (name, c) in server.tenant_counters() {
             println!(
-                "  {name:<8} submitted {:<6} served {:<6} 429 {:<5} busy {:<5} shed {:<5}",
+                "  {name:<8} submitted {:<6} served {:<6} 429 {:<5} busy {:<5} shed {:<5} failed {:<4}",
                 c.submitted,
                 c.served,
                 c.throttled(),
                 c.rejected_busy,
                 c.deadline_shed,
+                c.replica_failed,
             );
         }
     }
 
-    std::fs::write(&out, report.to_json().to_pretty())?;
+    let mut json = report.to_json();
+    if let (Some(cluster), sonic::util::json::Json::Obj(map)) = (cluster_json, &mut json) {
+        map.insert("cluster".to_string(), cluster);
+    }
+    std::fs::write(&out, json.to_pretty())?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// The `cluster` section of the loadgen JSON: the server-side truth the
+/// CI chaos smoke gates on (socket-side counts alone can't see retries).
+fn cluster_metrics_json(m: &ClusterMetrics) -> sonic::util::json::Json {
+    use sonic::util::json::{arr, num, obj, s};
+    obj(vec![
+        ("model", s(&m.model)),
+        ("completed", num(m.completed as f64)),
+        ("deadline_exceeded", num(m.deadline_exceeded as f64)),
+        ("replica_failed", num(m.replica_failed as f64)),
+        ("tries", num(m.tries as f64)),
+        ("retries", num(m.retries as f64)),
+        ("failovers", num(m.failovers as f64)),
+        ("availability", num(m.availability())),
+        ("retry_amplification", num(m.retry_amplification())),
+        ("p50_us", num(m.p50.as_secs_f64() * 1e6)),
+        ("p99_us", num(m.p99.as_secs_f64() * 1e6)),
+        ("photonic_energy_j", num(m.serve.photonic_energy_j)),
+        (
+            "replicas",
+            arr(m.replicas
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("index", num(r.index as f64)),
+                        ("health", s(r.health.as_str())),
+                        ("tries", num(r.tries as f64)),
+                        ("failures", num(r.failures as f64)),
+                        ("probes", num(r.probes as f64)),
+                        ("time_degraded_s", num(r.time_degraded.as_secs_f64())),
+                        ("time_dead_s", num(r.time_dead.as_secs_f64())),
+                        ("photonic_energy_j", num(r.serve.photonic_energy_j)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
 }
 
 /// A [`NullBackend`] with a per-batch stall: the self-serve loadgen's

@@ -1,0 +1,402 @@
+//! Deterministic fault injection for the cluster layer.
+//!
+//! A [`ChaosSpec`] is a seeded, reproducible schedule of replica faults —
+//! kills, stalls, and slow-degrade latency multipliers — expressed either
+//! through the CLI grammar (`kill@200ms:r1:dur=400ms,slow@1s:r2:x=4`) or
+//! generated from a seed ([`ChaosSpec::random`]).  At cluster start the
+//! spec compiles into a sorted action timeline; the cluster's supervisor
+//! thread applies due actions to each replica's [`FaultState`], and the
+//! [`ChaosBackend`] wrapper around every replica's real backend consults
+//! that state on each batch:
+//!
+//! * **kill** — the compute fabric goes dark: every batch fails at entry
+//!   with an error *before* any kernel runs, so the router charges zero
+//!   photonic energy for it (the `?` in `execute_batch` precedes the
+//!   charge).  The replica process stays up; when the kill duration
+//!   elapses the backend works again and the health prober re-warms the
+//!   replica through Degraded.
+//! * **stall** — batches block inside the backend until the stall window
+//!   ends, then execute normally.  This is what per-try timeouts and
+//!   re-queueing are tested against: the work is *not* lost, just late —
+//!   an abandoned try that eventually executes is charged honestly by
+//!   the replica that ran it (and only there).
+//! * **slow** — completed batches are padded by `(mult - 1) x` their
+//!   measured service time: a degrading-but-alive replica.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bail;
+use crate::serve::router::InferenceBackend;
+use crate::util::err::Result;
+use crate::util::rng::Rng;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Backend fails every batch at entry; `dur: None` = permanent.
+    Kill { dur: Option<Duration> },
+    /// Backend blocks batches for `dur`, then proceeds.
+    Stall { dur: Duration },
+    /// Completed batches take `mult` x as long; `dur: None` = permanent.
+    Slow { mult: f64, dur: Option<Duration> },
+}
+
+/// A fault applied to one replica at an offset from cluster start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosEvent {
+    /// Offset from cluster start.
+    pub at: Duration,
+    /// Target replica index.
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// The full (deterministic) fault schedule for one cluster run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosSpec {
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosSpec {
+    /// No faults (a healthy cluster).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI grammar: events separated by `,` or `;`, each
+    /// `kind@time:rN[:dur=TIME][:x=MULT]` —
+    ///
+    /// ```text
+    /// kill@200ms:r1:dur=400ms ; stall@1s:r0:dur=500ms ; slow@3s:r2:x=4
+    /// ```
+    ///
+    /// Times accept `us`/`ms`/`s` suffixes (bare numbers are ms).
+    /// `kill` without `dur` is permanent; `stall` requires `dur`;
+    /// `slow` requires `x` and takes an optional `dur`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for part in spec.split([',', ';']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            events.push(Self::parse_event(part)?);
+        }
+        Ok(Self { events })
+    }
+
+    fn parse_event(part: &str) -> Result<ChaosEvent> {
+        let mut fields = part.split(':');
+        let head = fields.next().unwrap_or("");
+        let Some((kind, at)) = head.split_once('@') else {
+            bail!("chaos event {part:?}: want kind@time (e.g. kill@200ms)");
+        };
+        let at = parse_duration(at)
+            .ok_or_else(|| crate::util::err::Error::msg(format!("chaos event {part:?}: bad time {at:?}")))?;
+        let Some(replica) = fields.next().and_then(|r| r.strip_prefix('r')).and_then(|n| n.parse::<usize>().ok())
+        else {
+            bail!("chaos event {part:?}: want a replica target like r0 after the time");
+        };
+        let mut dur = None;
+        let mut mult = None;
+        for f in fields {
+            if let Some(v) = f.strip_prefix("dur=") {
+                dur = Some(parse_duration(v).ok_or_else(|| {
+                    crate::util::err::Error::msg(format!("chaos event {part:?}: bad dur {v:?}"))
+                })?);
+            } else if let Some(v) = f.strip_prefix("x=") {
+                let m: f64 = v.parse().map_err(|_| {
+                    crate::util::err::Error::msg(format!("chaos event {part:?}: bad x {v:?}"))
+                })?;
+                if !(m.is_finite() && m >= 1.0) {
+                    bail!("chaos event {part:?}: slow multiplier must be >= 1");
+                }
+                mult = Some(m);
+            } else {
+                bail!("chaos event {part:?}: unknown field {f:?} (want dur= or x=)");
+            }
+        }
+        let kind = match kind {
+            "kill" => FaultKind::Kill { dur },
+            "stall" => {
+                let Some(dur) = dur else {
+                    bail!("chaos event {part:?}: stall requires dur=");
+                };
+                FaultKind::Stall { dur }
+            }
+            "slow" => {
+                let Some(mult) = mult else {
+                    bail!("chaos event {part:?}: slow requires x=");
+                };
+                FaultKind::Slow { mult, dur }
+            }
+            other => bail!("chaos event {part:?}: unknown kind {other:?} (want kill|stall|slow)"),
+        };
+        Ok(ChaosEvent { at, replica, kind })
+    }
+
+    /// A seeded random schedule: `events` faults spread uniformly over
+    /// `horizon` across `replicas` targets, mixing kills, stalls, and
+    /// slow-downs.  Same seed, same schedule — the bench's chaos grid
+    /// stays reproducible without hand-writing every event.
+    pub fn random(seed: u64, replicas: usize, horizon: Duration, events: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xc4a0_5);
+        let mut out = Vec::with_capacity(events);
+        for _ in 0..events {
+            let at = horizon.mul_f64(rng.f64());
+            let dur = horizon.mul_f64(0.05 + 0.25 * rng.f64());
+            let replica = rng.range(0, replicas.max(1));
+            let kind = match rng.range(0, 3) {
+                0 => FaultKind::Kill { dur: Some(dur) },
+                1 => FaultKind::Stall { dur },
+                _ => FaultKind::Slow {
+                    mult: 2.0 + 6.0 * rng.f64(),
+                    dur: Some(dur),
+                },
+            };
+            out.push(ChaosEvent { at, replica, kind });
+        }
+        out.sort_by_key(|e| e.at);
+        Self { events: out }
+    }
+
+    /// Compile into the flat action timeline the supervisor replays: a
+    /// bounded fault becomes two actions (apply, then clear).  Events
+    /// naming replicas outside `0..replicas` are dropped (a spec written
+    /// for 3 replicas still parses when run with 2).
+    pub(crate) fn timeline(&self, replicas: usize) -> Vec<TimedAction> {
+        let mut acts = Vec::new();
+        for e in &self.events {
+            if e.replica >= replicas {
+                continue;
+            }
+            match &e.kind {
+                FaultKind::Kill { dur } => {
+                    acts.push(TimedAction { at: e.at, replica: e.replica, act: Action::Kill });
+                    if let Some(d) = dur {
+                        acts.push(TimedAction {
+                            at: e.at.saturating_add(*d),
+                            replica: e.replica,
+                            act: Action::Revive,
+                        });
+                    }
+                }
+                FaultKind::Stall { dur } => acts.push(TimedAction {
+                    at: e.at,
+                    replica: e.replica,
+                    act: Action::Stall(*dur),
+                }),
+                FaultKind::Slow { mult, dur } => {
+                    acts.push(TimedAction {
+                        at: e.at,
+                        replica: e.replica,
+                        act: Action::Slow(*mult),
+                    });
+                    if let Some(d) = dur {
+                        acts.push(TimedAction {
+                            at: e.at.saturating_add(*d),
+                            replica: e.replica,
+                            act: Action::SlowClear,
+                        });
+                    }
+                }
+            }
+        }
+        acts.sort_by_key(|a| a.at);
+        acts
+    }
+}
+
+/// `"200ms"`, `"1.5s"`, `"500us"`, or a bare millisecond count.
+pub fn parse_duration(s: &str) -> Option<Duration> {
+    let s = s.trim();
+    let (num, scale) = if let Some(v) = s.strip_suffix("us") {
+        (v, 1e-6)
+    } else if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        (s, 1e-3)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if !(v.is_finite() && v >= 0.0) {
+        return None;
+    }
+    Some(Duration::from_secs_f64(v * scale))
+}
+
+/// One compiled timeline step.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TimedAction {
+    pub(crate) at: Duration,
+    pub(crate) replica: usize,
+    pub(crate) act: Action,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Action {
+    Kill,
+    Revive,
+    Stall(Duration),
+    Slow(f64),
+    SlowClear,
+}
+
+/// Per-replica live fault flags, shared between the supervisor (writer)
+/// and the replica's [`ChaosBackend`] (reader, on every batch).  All
+/// lock-free: one atomic load per batch when idle.
+#[derive(Debug)]
+pub struct FaultState {
+    epoch: Instant,
+    killed: AtomicBool,
+    /// Stall end, nanoseconds since `epoch`; 0 = no stall.
+    stall_until_ns: AtomicU64,
+    /// Latency multiplier in milli-units (1000 = 1.0x).
+    slow_milli: AtomicU64,
+}
+
+impl FaultState {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            killed: AtomicBool::new(false),
+            stall_until_ns: AtomicU64::new(0),
+            slow_milli: AtomicU64::new(1000),
+        }
+    }
+
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn revive(&self) {
+        self.killed.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.killed.load(Ordering::SeqCst)
+    }
+
+    pub fn stall_for(&self, dur: Duration) {
+        let until = self.epoch.elapsed().saturating_add(dur);
+        self.stall_until_ns
+            .store(until.as_nanos().min(u64::MAX as u128) as u64, Ordering::SeqCst);
+    }
+
+    pub fn set_slow(&self, mult: f64) {
+        self.slow_milli
+            .store((mult.max(1.0) * 1000.0) as u64, Ordering::SeqCst);
+    }
+
+    pub fn clear_slow(&self) {
+        self.slow_milli.store(1000, Ordering::SeqCst);
+    }
+
+    fn slow_mult(&self) -> f64 {
+        self.slow_milli.load(Ordering::SeqCst) as f64 / 1000.0
+    }
+
+    pub(crate) fn apply(&self, act: Action) {
+        match act {
+            Action::Kill => self.kill(),
+            Action::Revive => self.revive(),
+            Action::Stall(d) => self.stall_for(d),
+            Action::Slow(m) => self.set_slow(m),
+            Action::SlowClear => self.clear_slow(),
+        }
+    }
+
+    /// The batch-entry gate: error out while killed, block (in small
+    /// increments, so a kill arriving mid-stall still fails fast) while
+    /// stalled.
+    fn gate(&self) -> Result<()> {
+        loop {
+            if self.is_killed() {
+                bail!("replica killed (chaos)");
+            }
+            let until_ns = self.stall_until_ns.load(Ordering::SeqCst);
+            let now_ns = self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            if now_ns >= until_ns {
+                return Ok(());
+            }
+            let left = Duration::from_nanos(until_ns - now_ns);
+            std::thread::sleep(left.min(Duration::from_millis(2)));
+        }
+    }
+}
+
+impl Default for FaultState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Wraps a replica's real backend with its [`FaultState`] gate.  The
+/// wrapper sits *inside* the replica's engine, so a killed batch fails
+/// exactly where a real hardware fault would surface — in
+/// `execute_batch`, before any photonic energy is charged.
+pub(crate) struct ChaosBackend {
+    pub(crate) inner: Arc<dyn InferenceBackend>,
+    pub(crate) fault: Arc<FaultState>,
+}
+
+impl InferenceBackend for ChaosBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.fault.gate()?;
+        let t0 = Instant::now();
+        let out = self.inner.infer_batch(inputs)?;
+        self.pad(t0);
+        Ok(out)
+    }
+
+    fn infer_batch_flat(
+        &self,
+        inputs: &crate::tensor::BatchTensor,
+        out: &mut crate::tensor::BatchTensor,
+    ) -> Result<()> {
+        self.fault.gate()?;
+        let t0 = Instant::now();
+        self.inner.infer_batch_flat(inputs, out)?;
+        self.pad(t0);
+        Ok(())
+    }
+
+    fn infer_batch_flat_measured(
+        &self,
+        inputs: &crate::tensor::BatchTensor,
+        out: &mut crate::tensor::BatchTensor,
+        act_density: &mut Vec<f64>,
+    ) -> Result<()> {
+        self.fault.gate()?;
+        let t0 = Instant::now();
+        self.inner.infer_batch_flat_measured(inputs, out, act_density)?;
+        self.pad(t0);
+        Ok(())
+    }
+
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+
+    fn kernel_breakdown(&self) -> Option<Vec<crate::serve::metrics::LayerKernelStat>> {
+        self.inner.kernel_breakdown()
+    }
+}
+
+impl ChaosBackend {
+    /// Slow-degrade: pad a completed batch by `(mult - 1) x` its
+    /// measured service time.
+    fn pad(&self, t0: Instant) {
+        let mult = self.fault.slow_mult();
+        if mult > 1.0 {
+            std::thread::sleep(t0.elapsed().mul_f64(mult - 1.0));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-replica health state machine.
+//!
+//! ```text
+//!            consecutive failures                probe success
+//!   Healthy ----------------------> Degraded ------------------+
+//!      ^       (>= degraded_after)     |                       |
+//!      |                               | more failures         |
+//!      |  rewarm_successes probes      v  (>= dead_after)      |
+//!      +---------------------------  Dead  --------------------+
+//!                                       (first probe success re-enters
+//!                                        Degraded; never jumps straight
+//!                                        back to Healthy)
+//! ```
+//!
+//! Failures come from real traffic (a try that errored or timed out) and
+//! from probes; successes from either reset the failure streak.  The
+//! asymmetry is deliberate: one bad batch never dooms a replica
+//! (`degraded_after` > 1 by default), and a replica returning from Dead
+//! must string together `rewarm_successes` consecutive probe successes
+//! in Degraded — a trickle of real probe inference — before the router
+//! puts it back in full rotation.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Routing eligibility of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Full rotation: picked by power-of-two-choices.
+    Healthy,
+    /// Suspect: routed to only when no Healthy replica exists; probed.
+    Degraded,
+    /// Out of rotation entirely; probed for recovery.
+    Dead,
+}
+
+impl Health {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Dead => "dead",
+        }
+    }
+}
+
+/// Consecutive-failure thresholds and probe cadence.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Consecutive failures that demote Healthy -> Degraded.
+    pub degraded_after: u32,
+    /// Consecutive failures that demote to Dead.
+    pub dead_after: u32,
+    /// Heartbeat cadence for probing non-Healthy replicas.
+    pub probe_interval: Duration,
+    /// Per-probe wait (a probe that misses it counts as a failure).
+    pub probe_timeout: Duration,
+    /// Consecutive successes a Degraded replica needs to rejoin full
+    /// rotation (the re-warm trickle).
+    pub rewarm_successes: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            degraded_after: 2,
+            dead_after: 5,
+            probe_interval: Duration::from_millis(25),
+            probe_timeout: Duration::from_millis(250),
+            rewarm_successes: 3,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct TrackerState {
+    health: Health,
+    consecutive_failures: u32,
+    /// Consecutive successes while Degraded (the re-warm streak).
+    rewarm_streak: u32,
+    /// When the current health state was entered.
+    since: Instant,
+    time_degraded: Duration,
+    time_dead: Duration,
+    transitions: u64,
+}
+
+/// One replica's health, updated by traffic results and probe results.
+#[derive(Debug)]
+pub struct HealthTracker {
+    state: Mutex<TrackerState>,
+}
+
+impl HealthTracker {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(TrackerState {
+                health: Health::Healthy,
+                consecutive_failures: 0,
+                rewarm_streak: 0,
+                since: Instant::now(),
+                time_degraded: Duration::ZERO,
+                time_dead: Duration::ZERO,
+                transitions: 0,
+            }),
+        }
+    }
+
+    pub fn health(&self) -> Health {
+        self.state.lock().unwrap().health
+    }
+
+    /// A try or probe succeeded on this replica.
+    pub fn record_success(&self, policy: &HealthPolicy) {
+        let mut st = self.state.lock().unwrap();
+        st.consecutive_failures = 0;
+        match st.health {
+            Health::Healthy => {}
+            Health::Dead => {
+                // back from the dead: re-warm through Degraded, never
+                // straight into full rotation
+                st.rewarm_streak = 1;
+                Self::transition(&mut st, Health::Degraded);
+            }
+            Health::Degraded => {
+                st.rewarm_streak += 1;
+                if st.rewarm_streak >= policy.rewarm_successes {
+                    Self::transition(&mut st, Health::Healthy);
+                }
+            }
+        }
+    }
+
+    /// A try or probe failed on this replica.
+    pub fn record_failure(&self, policy: &HealthPolicy) {
+        let mut st = self.state.lock().unwrap();
+        st.consecutive_failures = st.consecutive_failures.saturating_add(1);
+        st.rewarm_streak = 0;
+        let next = if st.consecutive_failures >= policy.dead_after {
+            Health::Dead
+        } else if st.consecutive_failures >= policy.degraded_after {
+            Health::Degraded
+        } else {
+            st.health
+        };
+        // demotion only: failures never promote Dead back to Degraded
+        let demote = matches!(
+            (st.health, next),
+            (Health::Healthy, Health::Degraded | Health::Dead) | (Health::Degraded, Health::Dead)
+        );
+        if demote {
+            Self::transition(&mut st, next);
+        }
+    }
+
+    fn transition(st: &mut TrackerState, next: Health) {
+        let elapsed = st.since.elapsed();
+        match st.health {
+            Health::Degraded => st.time_degraded += elapsed,
+            Health::Dead => st.time_dead += elapsed,
+            Health::Healthy => {}
+        }
+        st.health = next;
+        st.since = Instant::now();
+        st.transitions += 1;
+    }
+
+    /// `(health, time_in_degraded, time_in_dead, transitions)`, with the
+    /// open interval of the current non-Healthy state included.
+    pub fn snapshot(&self) -> (Health, Duration, Duration, u64) {
+        let st = self.state.lock().unwrap();
+        let open = st.since.elapsed();
+        let (mut deg, mut dead) = (st.time_degraded, st.time_dead);
+        match st.health {
+            Health::Degraded => deg += open,
+            Health::Dead => dead += open,
+            Health::Healthy => {}
+        }
+        (st.health, deg, dead, st.transitions)
+    }
+}
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,1132 @@
+//! `sonic::serve::cluster` — fault-tolerant replicated serving.
+//!
+//! A [`ClusterEngine`] runs N independent [`Engine`] replicas (same
+//! model, own compiled plans and worker pools) behind a router with
+//! **power-of-two-choices** load balancing over live replicas.  Its
+//! contract is robustness-first:
+//!
+//! * **Health-gated routing** ([`Health`], [`HealthPolicy`]): every
+//!   replica carries a Healthy/Degraded/Dead state driven by consecutive
+//!   traffic failures and a heartbeat probe thread.  Only Healthy
+//!   replicas are in full rotation; Degraded ones serve only when
+//!   nothing Healthy exists; Dead ones are probed for recovery and
+//!   re-warm *through* Degraded with a trickle of probe inference
+//!   before rejoining.
+//! * **Retry / re-queue** ([`RetryPolicy`]): a try that errors (replica
+//!   died) or outlives its per-try timeout (replica stalled) is
+//!   abandoned — cancelled out of the replica's queue when still
+//!   possible — and re-queued on another live replica with capped
+//!   exponential backoff.  The remaining request deadline caps every
+//!   backoff, and the retry budget is bounded: a ticket can resolve
+//!   [`Outcome::Served`], [`Outcome::DeadlineExceeded`], or (budget
+//!   exhausted) [`Outcome::ReplicaFailed`] — never hang.
+//! * **Deterministic chaos** ([`chaos::ChaosSpec`]): seeded, scheduled
+//!   replica kills, stalls, and slow-degrade multipliers make every
+//!   failure scenario reproducible in tests and benches.
+//! * **Honest accounting**: cluster photonic time/energy is the sum of
+//!   what each replica *actually executed*.  A killed batch fails
+//!   before the charge; a retried request is charged once per executed
+//!   try (an abandoned try that later completes on its replica is that
+//!   replica's real work and is charged there, never double-counted
+//!   into the winning try).
+//!
+//! ```no_run
+//! use sonic::serve::cluster::{ChaosSpec, ClusterConfig, ClusterEngine};
+//! use sonic::model::ModelDesc;
+//!
+//! let cfg = ClusterConfig {
+//!     replicas: 3,
+//!     chaos: ChaosSpec::parse("kill@200ms:r1:dur=400ms").unwrap(),
+//!     ..ClusterConfig::default()
+//! };
+//! let desc = ModelDesc::builtin("mnist").unwrap();
+//! let cluster = ClusterEngine::build(desc, cfg).unwrap();
+//! let ticket = cluster.submit("mnist", vec![0.0; 784]).unwrap();
+//! let completion = ticket.wait().unwrap(); // served, shed, or ReplicaFailed
+//! cluster.shutdown();
+//! ```
+
+pub mod chaos;
+pub mod health;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::arch::SonicConfig;
+use crate::bail;
+use crate::model::ModelDesc;
+use crate::plan::PlanBackend;
+use crate::util::err::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::engine::{BackendChoice, Engine, Ticket};
+use super::metrics::LatencyHistogram;
+use super::router::{Completion, InferenceBackend, Outcome, ServeConfig, ServeMetrics, SubmitOptions};
+
+pub use chaos::{ChaosEvent, ChaosSpec, FaultKind, FaultState};
+pub use health::{Health, HealthPolicy, HealthTracker};
+
+use chaos::{ChaosBackend, TimedAction};
+
+/// Retry/re-queue policy for tries that die or stall.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total tries per request, the first included.  Exhausting the
+    /// budget resolves the ticket with [`Outcome::ReplicaFailed`].
+    pub max_tries: u32,
+    /// A try still unresolved after this long is abandoned (cancelled
+    /// out of its replica's queue when still possible) and re-queued.
+    pub per_try_timeout: Duration,
+    /// First backoff; doubles per failed try.
+    pub base_backoff: Duration,
+    /// Exponential backoff ceiling.
+    pub max_backoff: Duration,
+    /// Supervisor tick: how often outstanding tries are polled.
+    pub poll_interval: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_tries: 3,
+            per_try_timeout: Duration::from_secs(2),
+            base_backoff: Duration::from_millis(2),
+            max_backoff: Duration::from_millis(50),
+            poll_interval: Duration::from_micros(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before try `failed_tries + 1`: `base * 2^(failed_tries-1)`
+    /// capped at `max_backoff`, and — deadline-aware — at the remaining
+    /// request deadline, so a retry never sleeps past the point where
+    /// the answer stops mattering.
+    pub fn backoff_for(&self, failed_tries: u32, remaining: Option<Duration>) -> Duration {
+        let exp = failed_tries.saturating_sub(1).min(16);
+        let capped = self
+            .base_backoff
+            .saturating_mul(1u32 << exp)
+            .min(self.max_backoff);
+        match remaining {
+            Some(r) => capped.min(r),
+            None => capped,
+        }
+    }
+}
+
+/// Everything needed to build a [`ClusterEngine`].
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Replica count (each one a full [`Engine`]).
+    pub replicas: usize,
+    /// Per-replica batching/QoS knobs.
+    pub serve: ServeConfig,
+    /// Photonic architecture each replica's plan is compiled against.
+    pub arch: SonicConfig,
+    /// Seed for synthetic plan-backend weights; replica `i` uses
+    /// `synthetic_seed + i` so the fleet is deterministic but not
+    /// bit-identical in timing.
+    pub synthetic_seed: u64,
+    /// Drain worker threads per replica engine.
+    pub workers_per_replica: usize,
+    pub retry: RetryPolicy,
+    pub health: HealthPolicy,
+    /// Fault schedule (empty = healthy run).
+    pub chaos: ChaosSpec,
+    /// Seed for the power-of-two-choices picks.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 3,
+            serve: ServeConfig::default(),
+            arch: SonicConfig::paper_best(),
+            synthetic_seed: 7,
+            workers_per_replica: 1,
+            retry: RetryPolicy::default(),
+            health: HealthPolicy::default(),
+            chaos: ChaosSpec::none(),
+            seed: 42,
+        }
+    }
+}
+
+// ---- tickets ---------------------------------------------------------------
+
+enum CSlotState {
+    Pending,
+    Done(Completion),
+    Failed(String),
+}
+
+struct CSlot {
+    state: Mutex<CSlotState>,
+    cv: Condvar,
+}
+
+impl CSlot {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(CSlotState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, r: std::result::Result<Completion, String>) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, CSlotState::Pending) {
+            *st = match r {
+                Ok(c) => CSlotState::Done(c),
+                Err(e) => CSlotState::Failed(e),
+            };
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Completion handle for one cluster request: the same wait surface as
+/// [`Ticket`], resolved by the cluster supervisor after however many
+/// tries the request needed.
+#[derive(Clone)]
+pub struct ClusterTicket {
+    id: u64,
+    model: String,
+    slot: Arc<CSlot>,
+}
+
+impl ClusterTicket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Block until the request resolves (served, deadline-shed, or
+    /// [`Outcome::ReplicaFailed`]).  Errors only on cluster shutdown
+    /// racing the request.
+    pub fn wait(&self) -> Result<Completion> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                CSlotState::Done(c) => return Ok(c.clone()),
+                CSlotState::Failed(e) => {
+                    return Err(Error::msg(format!("request {}: {e}", self.id)))
+                }
+                CSlotState::Pending => {}
+            }
+            st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// [`ClusterTicket::wait`] bounded by `timeout`; `Ok(None)` when the
+    /// request is still in flight (the ticket stays resolvable).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<Completion>> {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                CSlotState::Done(c) => return Ok(Some(c.clone())),
+                CSlotState::Failed(e) => {
+                    return Err(Error::msg(format!("request {}: {e}", self.id)))
+                }
+                CSlotState::Pending => {}
+            }
+            let Some(deadline) = deadline else {
+                st = self.slot.cv.wait(st).unwrap();
+                continue;
+            };
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            st = self.slot.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Non-blocking poll: `Ok(None)` while still in flight.
+    pub fn try_wait(&self) -> Result<Option<Completion>> {
+        let st = self.slot.state.lock().unwrap();
+        match &*st {
+            CSlotState::Pending => Ok(None),
+            CSlotState::Done(c) => Ok(Some(c.clone())),
+            CSlotState::Failed(e) => Err(Error::msg(format!("request {}: {e}", self.id))),
+        }
+    }
+}
+
+// ---- internals -------------------------------------------------------------
+
+struct Replica {
+    index: usize,
+    engine: Arc<Engine>,
+    fault: Arc<FaultState>,
+    tracker: HealthTracker,
+    /// Cluster-visible outstanding tries (the p2c load signal).
+    inflight: AtomicU64,
+    /// Request tries routed here (probes not included).
+    tries: AtomicU64,
+    /// Tries that errored or were abandoned here.
+    failures: AtomicU64,
+    /// Heartbeat probes sent here.
+    probes: AtomicU64,
+}
+
+enum FlightState {
+    InFlight {
+        replica: usize,
+        ticket: Ticket,
+        try_deadline: Instant,
+    },
+    Backoff {
+        retry_at: Instant,
+        last_replica: usize,
+    },
+}
+
+/// One cluster request, across all its tries.
+struct Flight {
+    id: u64,
+    slot: Arc<CSlot>,
+    input: Vec<f32>,
+    opts: SubmitOptions,
+    submitted: Instant,
+    /// Absolute request deadline (None = unbounded).
+    deadline: Option<Instant>,
+    /// Tries consumed so far (>= 1 once routed).
+    attempt: u32,
+    state: FlightState,
+}
+
+#[derive(Debug, Clone, Default)]
+struct ClusterCounters {
+    completed: u64,
+    deadline_exceeded: u64,
+    replica_failed: u64,
+    /// Engine submits attempted for request traffic (first tries
+    /// included; probes excluded).
+    tries: u64,
+    /// Tries beyond each request's first.
+    retries: u64,
+    /// Retries that landed on a different replica than the failed try.
+    failovers: u64,
+    latency: LatencyHistogram,
+}
+
+struct SupState {
+    flights: Vec<Flight>,
+    timeline: Vec<TimedAction>,
+    timeline_pos: usize,
+}
+
+/// Shared by the [`ClusterEngine`] facade, the supervisor thread, and
+/// the heartbeat thread.
+struct Ctx {
+    model: String,
+    replicas: Vec<Arc<Replica>>,
+    retry: RetryPolicy,
+    health: HealthPolicy,
+    epoch: Instant,
+    stopping: AtomicBool,
+    state: Mutex<SupState>,
+    wake: Condvar,
+    counters: Mutex<ClusterCounters>,
+    rng: Mutex<Rng>,
+}
+
+impl Ctx {
+    /// Routing pool: Healthy replicas; when none, Degraded ones; Dead
+    /// replicas never route.  `exclude` (the replica a try just failed
+    /// on) is honoured unless it would empty the pool.
+    fn pick_replica(&self, exclude: Option<usize>) -> Option<usize> {
+        let healths: Vec<Health> = self.replicas.iter().map(|r| r.tracker.health()).collect();
+        let of = |want: Health| -> Vec<usize> {
+            healths
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| **h == want)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        let mut pool = of(Health::Healthy);
+        if pool.is_empty() {
+            pool = of(Health::Degraded);
+        }
+        if pool.is_empty() {
+            return None;
+        }
+        if let Some(ex) = exclude {
+            let filtered: Vec<usize> = pool.iter().copied().filter(|&i| i != ex).collect();
+            if !filtered.is_empty() {
+                pool = filtered;
+            }
+        }
+        if pool.len() == 1 {
+            return Some(pool[0]);
+        }
+        // power of two choices: two independent picks, lower load wins
+        let (a, b) = {
+            let mut rng = self.rng.lock().unwrap();
+            (pool[rng.range(0, pool.len())], pool[rng.range(0, pool.len())])
+        };
+        let load = |i: usize| self.replicas[i].inflight.load(Ordering::Relaxed);
+        Some(if load(b) < load(a) { b } else { a })
+    }
+
+    fn remaining(&self, deadline: Option<Instant>, now: Instant) -> Option<Duration> {
+        deadline.map(|d| d.saturating_duration_since(now))
+    }
+}
+
+// ---- metrics ---------------------------------------------------------------
+
+/// One replica's slice of a [`ClusterMetrics`] snapshot.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub index: usize,
+    pub health: Health,
+    /// Request tries routed here (probes excluded).
+    pub tries: u64,
+    /// Tries that errored or were abandoned here.
+    pub failures: u64,
+    /// Heartbeat probes sent here.
+    pub probes: u64,
+    pub time_degraded: Duration,
+    pub time_dead: Duration,
+    /// The replica engine's own serving counters — `photonic_energy_j`
+    /// here is exactly what this replica executed.
+    pub serve: ServeMetrics,
+}
+
+/// Cluster-rolled-up metrics: request dispositions, retry/failover
+/// counters, and the executed-work photonic rollup.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    pub model: String,
+    pub wall_elapsed: Duration,
+    /// Cluster tickets resolved [`Outcome::Served`].
+    pub completed: u64,
+    pub deadline_exceeded: u64,
+    pub replica_failed: u64,
+    /// Engine submits attempted for request traffic.
+    pub tries: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    /// End-to-end latency of served requests (first submit to final
+    /// resolution, retries included).
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Sum of every replica's executed work — energy is charged only
+    /// where a batch actually ran, so retried requests never
+    /// double-charge the photonic model.
+    pub serve: ServeMetrics,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+impl ClusterMetrics {
+    pub fn resolved(&self) -> u64 {
+        self.completed + self.deadline_exceeded + self.replica_failed
+    }
+
+    /// Fraction of resolution-seeking requests that were served:
+    /// `completed / (completed + replica_failed)`.  Deadline sheds are a
+    /// QoS disposition, not an availability loss.
+    pub fn availability(&self) -> f64 {
+        let denom = self.completed + self.replica_failed;
+        if denom == 0 {
+            1.0
+        } else {
+            self.completed as f64 / denom as f64
+        }
+    }
+
+    /// Mean engine tries per resolved request (1.0 = no retries).
+    pub fn retry_amplification(&self) -> f64 {
+        self.tries as f64 / self.resolved().max(1) as f64
+    }
+
+    /// Cluster perf-per-watt over executed work only.
+    pub fn photonic_fps_per_watt(&self) -> f64 {
+        self.serve.photonic_fps_per_watt()
+    }
+}
+
+// ---- the engine ------------------------------------------------------------
+
+/// N replicated [`Engine`]s behind health-gated power-of-two-choices
+/// routing with retry/re-queue.  See the module docs.
+pub struct ClusterEngine {
+    ctx: Arc<Ctx>,
+    input_len: usize,
+    next_id: AtomicU64,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    shutdown_lock: Mutex<()>,
+    stopped_elapsed: Mutex<Option<Duration>>,
+}
+
+impl ClusterEngine {
+    /// Build a cluster serving `desc` through per-replica compiled-plan
+    /// backends (synthetic weights, replica `i` seeded
+    /// `synthetic_seed + i`).
+    pub fn build(desc: ModelDesc, cfg: ClusterConfig) -> Result<ClusterEngine> {
+        let seed = cfg.synthetic_seed;
+        let autotune = cfg.serve.autotune;
+        let d = desc.clone();
+        Self::build_with(desc, cfg, move |i| {
+            Arc::new(PlanBackend::synthetic(&d, seed + i as u64).with_autotune(autotune))
+                as Arc<dyn InferenceBackend>
+        })
+    }
+
+    /// Build a cluster with a caller-supplied backend per replica
+    /// (tests inject [`super::NullBackend`]s or slow fakes here).  Every
+    /// backend is wrapped in the chaos fault gate regardless, so one
+    /// code path serves healthy and chaotic runs.
+    pub fn build_with<F>(desc: ModelDesc, cfg: ClusterConfig, factory: F) -> Result<ClusterEngine>
+    where
+        F: Fn(usize) -> Arc<dyn InferenceBackend>,
+    {
+        if cfg.replicas == 0 {
+            bail!("cluster needs at least one replica");
+        }
+        let model = desc.name.clone();
+        let mut replicas: Vec<Arc<Replica>> = Vec::with_capacity(cfg.replicas);
+        for i in 0..cfg.replicas {
+            let fault = Arc::new(FaultState::new());
+            let backend: Arc<dyn InferenceBackend> = Arc::new(ChaosBackend {
+                inner: factory(i),
+                fault: Arc::clone(&fault),
+            });
+            let built = Engine::builder()
+                .arch(cfg.arch.clone())
+                .serve_config(cfg.serve.clone())
+                .workers_per_model(cfg.workers_per_replica)
+                .model_desc(desc.clone(), BackendChoice::Custom(backend))
+                .build();
+            let engine = match built {
+                Ok(e) => Arc::new(e),
+                Err(e) => {
+                    // don't leak the replicas already started
+                    for r in &replicas {
+                        r.engine.shutdown();
+                    }
+                    return Err(e).map_err(|e| {
+                        Error::msg(format!("building cluster replica {i}: {e:#}"))
+                    });
+                }
+            };
+            replicas.push(Arc::new(Replica {
+                index: i,
+                engine,
+                fault,
+                tracker: HealthTracker::new(),
+                inflight: AtomicU64::new(0),
+                tries: AtomicU64::new(0),
+                failures: AtomicU64::new(0),
+                probes: AtomicU64::new(0),
+            }));
+        }
+        let input_len = replicas[0]
+            .engine
+            .input_len(&model)
+            .expect("registered model");
+        let timeline = cfg.chaos.timeline(cfg.replicas);
+        let ctx = Arc::new(Ctx {
+            model,
+            replicas,
+            retry: cfg.retry,
+            health: cfg.health,
+            epoch: Instant::now(),
+            stopping: AtomicBool::new(false),
+            state: Mutex::new(SupState {
+                flights: Vec::new(),
+                timeline,
+                timeline_pos: 0,
+            }),
+            wake: Condvar::new(),
+            counters: Mutex::new(ClusterCounters::default()),
+            rng: Mutex::new(Rng::new(cfg.seed)),
+        });
+        let mut threads = Vec::new();
+        for (name, f) in [
+            ("cluster-supervisor", supervisor_loop as fn(Arc<Ctx>)),
+            ("cluster-heartbeat", heartbeat_loop as fn(Arc<Ctx>)),
+        ] {
+            let c = Arc::clone(&ctx);
+            let h = std::thread::Builder::new()
+                .name(name.into())
+                .spawn(move || f(c))
+                .map_err(|e| Error::msg(format!("spawning {name}: {e}")))?;
+            threads.push(h);
+        }
+        Ok(ClusterEngine {
+            ctx,
+            input_len,
+            next_id: AtomicU64::new(0),
+            threads: Mutex::new(threads),
+            shutdown_lock: Mutex::new(()),
+            stopped_elapsed: Mutex::new(None),
+        })
+    }
+
+    /// Registered model names (one model per cluster for now; sharding
+    /// across replicas is the roadmap follow-on).
+    pub fn models(&self) -> Vec<String> {
+        vec![self.ctx.model.clone()]
+    }
+
+    pub fn input_len(&self, model: &str) -> Result<usize> {
+        if model != self.ctx.model {
+            bail!(
+                "model {model:?} not registered (cluster serves {:?})",
+                self.ctx.model
+            );
+        }
+        Ok(self.input_len)
+    }
+
+    pub fn is_stopping(&self) -> bool {
+        self.ctx.stopping.load(Ordering::SeqCst)
+    }
+
+    /// Current health of every replica, by index.
+    pub fn health(&self) -> Vec<Health> {
+        self.ctx
+            .replicas
+            .iter()
+            .map(|r| r.tracker.health())
+            .collect()
+    }
+
+    /// The chaos fault handle of one replica — the same switch the
+    /// scheduled chaos timeline flips, exposed so tests can inject
+    /// faults at exact moments.
+    pub fn fault(&self, replica: usize) -> Arc<FaultState> {
+        Arc::clone(&self.ctx.replicas[replica].fault)
+    }
+
+    /// Submit at [`super::Priority::Normal`] with no deadline; blocks on
+    /// backpressure.  Mirrors [`Engine::submit`].
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<ClusterTicket> {
+        self.submit_opts(model, input, SubmitOptions::default())
+    }
+
+    /// Submit with explicit QoS options; blocks while every routable
+    /// replica's queue is full.  Mirrors [`Engine::submit_opts`].
+    pub fn submit_opts(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<ClusterTicket> {
+        match self.submit_inner(model, input, opts, true)? {
+            Some(t) => Ok(t),
+            None => bail!("blocking submit returned without a ticket"),
+        }
+    }
+
+    /// Non-blocking submit: `Ok(None)` when every routable replica's
+    /// queue is full.  Mirrors [`Engine::try_submit_opts`].
+    pub fn try_submit_opts(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Option<ClusterTicket>> {
+        self.submit_inner(model, input, opts, false)
+    }
+
+    fn submit_inner(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+        block: bool,
+    ) -> Result<Option<ClusterTicket>> {
+        if self.is_stopping() {
+            bail!("cluster is shut down");
+        }
+        if model != self.ctx.model {
+            bail!(
+                "model {model:?} not registered (cluster serves {:?})",
+                self.ctx.model
+            );
+        }
+        if input.len() != self.input_len {
+            bail!(
+                "model {model:?} expects {} inputs, got {}",
+                self.input_len,
+                input.len()
+            );
+        }
+        let submitted = Instant::now();
+        let deadline = opts.deadline.and_then(|d| submitted.checked_add(d));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let slot = Arc::new(CSlot::new());
+        let ticket = ClusterTicket {
+            id,
+            model: self.ctx.model.clone(),
+            slot: Arc::clone(&slot),
+        };
+        loop {
+            if self.is_stopping() {
+                bail!("cluster is shut down");
+            }
+            let now = Instant::now();
+            // Every arm below either constructs the request's Flight (and
+            // flows into the unconditional push + return after the match)
+            // or diverges (continue / early return) — `input` and `slot`
+            // are moved at most once on any path through the loop.
+            let flight = match self.ctx.pick_replica(None) {
+                None => {
+                    // no routable replica right now: accept the request
+                    // and let the supervisor retry within the budget —
+                    // it resolves ReplicaFailed if nothing comes back
+                    Flight {
+                        id,
+                        slot,
+                        input,
+                        opts,
+                        submitted,
+                        deadline,
+                        attempt: 1,
+                        state: FlightState::Backoff {
+                            retry_at: now
+                                + self
+                                    .ctx
+                                    .retry
+                                    .backoff_for(1, self.ctx.remaining(deadline, now)),
+                            last_replica: usize::MAX,
+                        },
+                    }
+                }
+                Some(idx) => {
+                    let r = &self.ctx.replicas[idx];
+                    let eng_opts = SubmitOptions {
+                        priority: opts.priority,
+                        deadline: self.ctx.remaining(deadline, now),
+                    };
+                    match r.engine.try_submit_opts(&self.ctx.model, input.clone(), eng_opts) {
+                        Ok(Some(t)) => {
+                            r.inflight.fetch_add(1, Ordering::Relaxed);
+                            r.tries.fetch_add(1, Ordering::Relaxed);
+                            self.ctx.counters.lock().unwrap().tries += 1;
+                            Flight {
+                                id,
+                                slot,
+                                input,
+                                opts,
+                                submitted,
+                                deadline,
+                                attempt: 1,
+                                state: FlightState::InFlight {
+                                    replica: idx,
+                                    ticket: t,
+                                    try_deadline: now + self.ctx.retry.per_try_timeout,
+                                },
+                            }
+                        }
+                        Ok(None) => {
+                            // queue full on the least-loaded live pick
+                            if block {
+                                std::thread::sleep(Duration::from_micros(200));
+                                continue;
+                            }
+                            return Ok(None);
+                        }
+                        Err(_) => {
+                            // replica refused outright (a shutdown race):
+                            // a consumed try; re-queue via the supervisor
+                            r.tracker.record_failure(&self.ctx.health);
+                            r.tries.fetch_add(1, Ordering::Relaxed);
+                            r.failures.fetch_add(1, Ordering::Relaxed);
+                            self.ctx.counters.lock().unwrap().tries += 1;
+                            Flight {
+                                id,
+                                slot,
+                                input,
+                                opts,
+                                submitted,
+                                deadline,
+                                attempt: 1,
+                                state: FlightState::Backoff {
+                                    retry_at: now
+                                        + self
+                                            .ctx
+                                            .retry
+                                            .backoff_for(1, self.ctx.remaining(deadline, now)),
+                                    last_replica: idx,
+                                },
+                            }
+                        }
+                    }
+                }
+            };
+            self.ctx.state.lock().unwrap().flights.push(flight);
+            self.ctx.wake.notify_all();
+            return Ok(Some(ticket));
+        }
+    }
+
+    /// Cluster-wide metrics snapshot: dispositions, retry counters, and
+    /// the per-replica executed-work rollup.
+    pub fn metrics(&self) -> ClusterMetrics {
+        let wall = self
+            .stopped_elapsed
+            .lock()
+            .unwrap()
+            .unwrap_or_else(|| self.ctx.epoch.elapsed());
+        let c = self.ctx.counters.lock().unwrap().clone();
+        let mut serve = ServeMetrics::default();
+        let mut replicas = Vec::with_capacity(self.ctx.replicas.len());
+        for r in &self.ctx.replicas {
+            let em = r.engine.metrics();
+            let sm = em
+                .model(&self.ctx.model)
+                .map(|m| m.serve.clone())
+                .unwrap_or_default();
+            serve.merge(&sm);
+            let (health, time_degraded, time_dead, _) = r.tracker.snapshot();
+            replicas.push(ReplicaReport {
+                index: r.index,
+                health,
+                tries: r.tries.load(Ordering::Relaxed),
+                failures: r.failures.load(Ordering::Relaxed),
+                probes: r.probes.load(Ordering::Relaxed),
+                time_degraded,
+                time_dead,
+                serve: sm,
+            });
+        }
+        ClusterMetrics {
+            model: self.ctx.model.clone(),
+            wall_elapsed: wall,
+            completed: c.completed,
+            deadline_exceeded: c.deadline_exceeded,
+            replica_failed: c.replica_failed,
+            tries: c.tries,
+            retries: c.retries,
+            failovers: c.failovers,
+            p50: c.latency.quantile(0.50),
+            p99: c.latency.quantile(0.99),
+            serve,
+            replicas,
+        }
+    }
+
+    /// Stop the cluster: resolve every outstanding flight (in-flight
+    /// tries get their per-try window, re-queues are refused), join the
+    /// supervisor and heartbeat threads, then drain every replica
+    /// engine.  Idempotent.
+    pub fn shutdown(&self) {
+        let _g = self.shutdown_lock.lock().unwrap();
+        if !self.ctx.stopping.swap(true, Ordering::SeqCst) {
+            self.ctx.wake.notify_all();
+            let threads: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
+            for h in threads {
+                let _ = h.join();
+            }
+            for r in &self.ctx.replicas {
+                r.engine.shutdown();
+            }
+            *self.stopped_elapsed.lock().unwrap() = Some(self.ctx.epoch.elapsed());
+        }
+    }
+}
+
+impl Drop for ClusterEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---- supervisor ------------------------------------------------------------
+
+/// The retry orchestrator: applies due chaos actions, polls every
+/// outstanding try, abandons tries past their per-try deadline, and
+/// re-queues or resolves flights.  One thread per cluster.
+fn supervisor_loop(ctx: Arc<Ctx>) {
+    let mut guard = ctx.state.lock().unwrap();
+    loop {
+        let stopping = ctx.stopping.load(Ordering::SeqCst);
+        // chaos timeline: flip the fault switches whose time has come
+        // (not while draining — the run is over)
+        if !stopping {
+            let now_off = ctx.epoch.elapsed();
+            while guard.timeline_pos < guard.timeline.len()
+                && guard.timeline[guard.timeline_pos].at <= now_off
+            {
+                let t = guard.timeline[guard.timeline_pos];
+                ctx.replicas[t.replica].fault.apply(t.act);
+                guard.timeline_pos += 1;
+            }
+        }
+        // poll flights; resolved ones drop out
+        let now = Instant::now();
+        let mut i = 0;
+        while i < guard.flights.len() {
+            let resolved = step_flight(&ctx, &mut guard.flights[i], now, stopping);
+            if resolved {
+                guard.flights.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if stopping && guard.flights.is_empty() {
+            return;
+        }
+        // sleep until the next actionable instant, bounded by the tick
+        let mut sleep = if guard.flights.is_empty() && guard.timeline_pos >= guard.timeline.len() {
+            Duration::from_millis(50)
+        } else {
+            ctx.retry.poll_interval
+        };
+        if guard.timeline_pos < guard.timeline.len() {
+            let until = guard.timeline[guard.timeline_pos]
+                .at
+                .saturating_sub(ctx.epoch.elapsed());
+            sleep = sleep.min(until.max(Duration::from_micros(50)));
+        }
+        guard = ctx.wake.wait_timeout(guard, sleep).unwrap().0;
+    }
+}
+
+/// Advance one flight.  Returns `true` when it resolved (the flight is
+/// finished and must be dropped from the outstanding list).
+fn step_flight(ctx: &Ctx, f: &mut Flight, now: Instant, draining: bool) -> bool {
+    match &f.state {
+        FlightState::InFlight {
+            replica,
+            ticket,
+            try_deadline,
+        } => {
+            let idx = *replica;
+            let r = &ctx.replicas[idx];
+            match ticket.try_wait() {
+                Ok(Some(c)) => {
+                    // resolved by the replica: pass the completion
+                    // through with the cluster-level wall latency
+                    if c.served() {
+                        r.tracker.record_success(&ctx.health);
+                    }
+                    r.inflight.fetch_sub(1, Ordering::Relaxed);
+                    let mut c = c;
+                    c.id = f.id;
+                    c.wall_latency = f.submitted.elapsed();
+                    let mut counters = ctx.counters.lock().unwrap();
+                    match c.outcome {
+                        Outcome::Served => {
+                            counters.completed += 1;
+                            counters.latency.record(c.wall_latency);
+                        }
+                        Outcome::DeadlineExceeded => counters.deadline_exceeded += 1,
+                        Outcome::ReplicaFailed => counters.replica_failed += 1,
+                    }
+                    drop(counters);
+                    f.slot.fill(Ok(c));
+                    true
+                }
+                Err(_) => {
+                    // the replica failed the batch (killed, backend
+                    // error, or its engine shut down under us)
+                    r.tracker.record_failure(&ctx.health);
+                    r.failures.fetch_add(1, Ordering::Relaxed);
+                    r.inflight.fetch_sub(1, Ordering::Relaxed);
+                    retry_or_fail(ctx, f, idx, now, draining)
+                }
+                Ok(None) => {
+                    if now < *try_deadline {
+                        return false;
+                    }
+                    // stalled past the per-try timeout: abandon.  A
+                    // still-queued request retracts (never executes,
+                    // charges nothing); one already executing finishes
+                    // as that replica's own (charged) work.
+                    let _ = r.engine.cancel(ticket);
+                    r.tracker.record_failure(&ctx.health);
+                    r.failures.fetch_add(1, Ordering::Relaxed);
+                    r.inflight.fetch_sub(1, Ordering::Relaxed);
+                    retry_or_fail(ctx, f, idx, now, draining)
+                }
+            }
+        }
+        FlightState::Backoff {
+            retry_at,
+            last_replica,
+        } => {
+            if draining {
+                f.slot
+                    .fill(Err("cluster shut down before request was served".to_string()));
+                return true;
+            }
+            if let Some(d) = f.deadline {
+                if now >= d {
+                    resolve_deadline(ctx, f);
+                    return true;
+                }
+            }
+            if now < *retry_at {
+                return false;
+            }
+            let last = *last_replica;
+            start_retry(ctx, f, last, now)
+        }
+    }
+}
+
+/// A try just failed on `failed_on`.  Either schedule the next backoff
+/// or resolve the flight (budget exhausted / deadline passed / drain).
+fn retry_or_fail(ctx: &Ctx, f: &mut Flight, failed_on: usize, now: Instant, draining: bool) -> bool {
+    if draining {
+        f.slot
+            .fill(Err("cluster shut down before request was served".to_string()));
+        return true;
+    }
+    if f.attempt >= ctx.retry.max_tries {
+        ctx.counters.lock().unwrap().replica_failed += 1;
+        f.slot.fill(Ok(Completion::replica_failed(
+            f.id,
+            f.opts.priority,
+            f.submitted.elapsed(),
+        )));
+        return true;
+    }
+    if let Some(d) = f.deadline {
+        if now >= d {
+            resolve_deadline(ctx, f);
+            return true;
+        }
+    }
+    let backoff = ctx
+        .retry
+        .backoff_for(f.attempt, ctx.remaining(f.deadline, now));
+    f.state = FlightState::Backoff {
+        retry_at: now + backoff,
+        last_replica: failed_on,
+    };
+    false
+}
+
+/// A backoff expired: consume the next try, preferring a different
+/// replica than the one that failed.
+fn start_retry(ctx: &Ctx, f: &mut Flight, last: usize, now: Instant) -> bool {
+    f.attempt += 1;
+    {
+        let mut c = ctx.counters.lock().unwrap();
+        c.retries += 1;
+    }
+    let exclude = if last == usize::MAX { None } else { Some(last) };
+    match ctx.pick_replica(exclude) {
+        None => {
+            // still nothing routable; the consumed attempt bounds this
+            retry_or_fail(ctx, f, last, now, false)
+        }
+        Some(idx) => {
+            let r = &ctx.replicas[idx];
+            r.tries.fetch_add(1, Ordering::Relaxed);
+            {
+                let mut c = ctx.counters.lock().unwrap();
+                c.tries += 1;
+                if exclude.is_some() && idx != last {
+                    c.failovers += 1;
+                }
+            }
+            let eng_opts = SubmitOptions {
+                priority: f.opts.priority,
+                deadline: ctx.remaining(f.deadline, now),
+            };
+            match r
+                .engine
+                .try_submit_opts(&ctx.model, f.input.clone(), eng_opts)
+            {
+                Ok(Some(t)) => {
+                    r.inflight.fetch_add(1, Ordering::Relaxed);
+                    f.state = FlightState::InFlight {
+                        replica: idx,
+                        ticket: t,
+                        try_deadline: now + ctx.retry.per_try_timeout,
+                    };
+                    false
+                }
+                Ok(None) | Err(_) => {
+                    // full queue or refusal: this try is spent
+                    r.tracker.record_failure(&ctx.health);
+                    r.failures.fetch_add(1, Ordering::Relaxed);
+                    retry_or_fail(ctx, f, idx, now, false)
+                }
+            }
+        }
+    }
+}
+
+fn resolve_deadline(ctx: &Ctx, f: &Flight) {
+    ctx.counters.lock().unwrap().deadline_exceeded += 1;
+    f.slot.fill(Ok(Completion::deadline_exceeded(
+        f.id,
+        f.opts.priority,
+        f.submitted.elapsed(),
+    )));
+}
+
+// ---- heartbeat -------------------------------------------------------------
+
+/// Probes non-Healthy replicas with a tiny real inference every
+/// `probe_interval`.  Successes walk a replica Dead -> Degraded ->
+/// (after `rewarm_successes`) Healthy; failures keep it out of rotation.
+/// Healthy replicas are governed by real traffic and never probed.
+fn heartbeat_loop(ctx: Arc<Ctx>) {
+    let input_len = ctx.replicas[0]
+        .engine
+        .input_len(&ctx.model)
+        .expect("registered model");
+    let mut next = Instant::now() + ctx.health.probe_interval;
+    while !ctx.stopping.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep((next - now).min(Duration::from_millis(10)));
+            continue;
+        }
+        next = now + ctx.health.probe_interval;
+        for r in &ctx.replicas {
+            if ctx.stopping.load(Ordering::SeqCst) {
+                return;
+            }
+            if r.tracker.health() == Health::Healthy {
+                continue;
+            }
+            r.probes.fetch_add(1, Ordering::Relaxed);
+            let ok = probe(ctx.as_ref(), r, input_len);
+            if ok {
+                r.tracker.record_success(&ctx.health);
+            } else {
+                r.tracker.record_failure(&ctx.health);
+            }
+        }
+    }
+}
+
+/// One probe: a zero-vector inference bounded by `probe_timeout`; only a
+/// served completion counts.  Probe work that executes is real executed
+/// work and is charged to the replica that ran it.
+fn probe(ctx: &Ctx, r: &Replica, input_len: usize) -> bool {
+    let opts = SubmitOptions {
+        priority: super::router::Priority::High,
+        deadline: Some(ctx.health.probe_timeout),
+    };
+    match r
+        .engine
+        .try_submit_opts(&ctx.model, vec![0.0; input_len], opts)
+    {
+        Ok(Some(t)) => matches!(
+            t.wait_timeout(ctx.health.probe_timeout),
+            Ok(Some(c)) if c.served()
+        ),
+        _ => false,
+    }
+}

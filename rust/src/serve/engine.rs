@@ -348,6 +348,27 @@ impl Engine {
         }
     }
 
+    /// Best-effort cancel of a still-queued request: retract it from the
+    /// lane queues and fail its ticket so every waiter unblocks.  Returns
+    /// `true` when the request was retracted before execution (it never
+    /// reaches the backend and charges nothing); `false` when a worker
+    /// already popped it — the request runs to completion and the ticket
+    /// resolves normally.  The cluster layer uses this to abandon a try
+    /// on a stalled replica before re-queueing it elsewhere.
+    pub fn cancel(&self, ticket: &Ticket) -> bool {
+        let Ok(entry) = self.entry(ticket.model()) else {
+            return false;
+        };
+        if entry.router.retract(ticket.id()) {
+            entry
+                .shared
+                .complete(ticket.id(), Err("request cancelled".to_string()));
+            true
+        } else {
+            false
+        }
+    }
+
     /// Duration of the serving interval so far: first submit to now (or
     /// to shutdown).  Zero when nothing was ever submitted.
     fn serving_elapsed(&self) -> std::time::Duration {

@@ -139,6 +139,9 @@ pub struct TenantCounters {
     pub over_share: u64,
     /// Refused by engine backpressure — queue full or draining (HTTP 503).
     pub rejected_busy: u64,
+    /// Exhausted the cluster retry budget — every replica try failed
+    /// (HTTP 502; single-engine gateways never count these).
+    pub replica_failed: u64,
     /// Everything else (bad input, backend failure; HTTP 4xx/5xx).
     pub errors: u64,
     /// End-to-end gateway latency (admission to response write) of served
@@ -161,6 +164,7 @@ impl TenantCounters {
         self.rate_limited += other.rate_limited;
         self.over_share += other.over_share;
         self.rejected_busy += other.rejected_busy;
+        self.replica_failed += other.replica_failed;
         self.errors += other.errors;
         self.latency.merge(&other.latency);
     }

@@ -43,16 +43,30 @@
 //!   [`SubmitOptions`], and drains gracefully — plus a socket load
 //!   generator (`sonic loadgen`) that writes `BENCH_net.json`.
 //!
+//! * **Fault-tolerant clustering** ([`cluster`]): a
+//!   [`cluster::ClusterEngine`] replicates one model across N engines
+//!   behind health-gated power-of-two-choices routing, retries/re-queues
+//!   tries that die or stall (capped, deadline-aware backoff; budget
+//!   exhaustion resolves [`Outcome::ReplicaFailed`], never a hang), and
+//!   injects deterministic faults ([`cluster::ChaosSpec`]) for
+//!   reproducible failure testing.  Photonic energy is charged only for
+//!   work that actually executed.
+//!
 //! The former `coordinator::serve::Router` / `drain_batch` pair is now a
 //! `pub(crate)` implementation detail of this module ([`router`]); see
 //! `src/serve/README.md` for the full lifecycle and backend table.
 
+pub mod cluster;
 mod engine;
 mod metrics;
 pub mod net;
 pub(crate) mod router;
 pub mod workload;
 
+pub use cluster::{
+    ChaosSpec, ClusterConfig, ClusterEngine, ClusterMetrics, ClusterTicket, Health, HealthPolicy,
+    RetryPolicy,
+};
 pub use engine::{BackendChoice, Engine, EngineBuilder, Ticket};
 pub use metrics::{
     EngineMetrics, LaneHistograms, LaneReport, LatencyHistogram, LayerKernelStat, ModelMetrics,

@@ -61,6 +61,8 @@ pub struct TenantStats {
     pub sent: u64,
     pub ok_2xx: u64,
     pub http_429: u64,
+    /// Cluster retry budget exhausted (`replica_failed`).
+    pub http_502: u64,
     pub http_503: u64,
     pub http_504: u64,
     pub other_status: u64,
@@ -75,6 +77,7 @@ impl TenantStats {
         self.sent += other.sent;
         self.ok_2xx += other.ok_2xx;
         self.http_429 += other.http_429;
+        self.http_502 += other.http_502;
         self.http_503 += other.http_503;
         self.http_504 += other.http_504;
         self.other_status += other.other_status;
@@ -89,6 +92,7 @@ impl TenantStats {
                 self.latency.record(latency);
             }
             429 => self.http_429 += 1,
+            502 => self.http_502 += 1,
             503 => self.http_503 += 1,
             504 => self.http_504 += 1,
             _ => self.other_status += 1,
@@ -126,6 +130,7 @@ impl NetBenchReport {
                         ("sent", num(t.sent as f64)),
                         ("ok_2xx", num(t.ok_2xx as f64)),
                         ("http_429", num(t.http_429 as f64)),
+                        ("http_502", num(t.http_502 as f64)),
                         ("http_503", num(t.http_503 as f64)),
                         ("http_504", num(t.http_504 as f64)),
                         ("other_status", num(t.other_status as f64)),
@@ -155,11 +160,12 @@ impl NetBenchReport {
         );
         for t in &self.tenants {
             println!(
-                "  {:<8} sent {:<6} 2xx {:<6} 429 {:<5} 503 {:<5} 504 {:<5} err {:<4} p50 {:?}  p99 {:?}",
+                "  {:<8} sent {:<6} 2xx {:<6} 429 {:<5} 502 {:<5} 503 {:<5} 504 {:<5} err {:<4} p50 {:?}  p99 {:?}",
                 t.label,
                 t.sent,
                 t.ok_2xx,
                 t.http_429,
+                t.http_502,
                 t.http_503,
                 t.http_504,
                 t.transport_errors,

@@ -10,9 +10,15 @@
 //!   limits, and weighted fair in-flight shares, layered on top of the
 //!   engine's QoS lanes.
 //! * [`server`] — the gateway: accept loop on a dedicated thread pool,
-//!   keep-alive connections with a bounded in-flight window, QoS headers
-//!   mapped to [`SubmitOptions`](crate::serve::SubmitOptions), graceful
-//!   drain (stop accepting → finish every in-flight ticket → close).
+//!   keep-alive connections with a bounded in-flight window (idle ones
+//!   back their poll timeout off exponentially), QoS headers mapped to
+//!   [`SubmitOptions`](crate::serve::SubmitOptions), graceful drain
+//!   (stop accepting → finish every in-flight ticket → close) — also
+//!   reachable remotely via the admin-gated `POST /v1/admin/drain`.
+//!   Fronts either a single engine or a fault-tolerant
+//!   [`ClusterEngine`](crate::serve::cluster::ClusterEngine) through
+//!   [`server::GatewayEngine`]; cluster retry-budget exhaustion surfaces
+//!   as HTTP 502 `replica_failed`.
 //! * [`loadgen`] — the offline load generator: per-tenant socket fleets
 //!   driving seeded arrival processes, reduced to `BENCH_net.json`.
 //!
@@ -42,5 +48,5 @@ pub mod tenant;
 
 pub use loadgen::{fetch_models, LoadGen, NetBenchReport, TenantLoad, TenantStats};
 pub use protocol::{FRAME_MAGIC, H_API_KEY, H_DEADLINE_MS, H_PRIORITY};
-pub use server::{GatewayCounters, NetConfig, NetServer};
+pub use server::{GatewayCounters, GatewayEngine, NetConfig, NetServer};
 pub use tenant::{Refusal, Tenant, TenantRegistry, TenantSpec};

@@ -20,9 +20,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::serve::cluster::{ClusterEngine, ClusterTicket};
 use crate::serve::engine::{Engine, Ticket};
 use crate::serve::metrics::TenantCounters;
-use crate::serve::router::{Outcome, Priority, SubmitOptions};
+use crate::serve::router::{Completion, Outcome, Priority, SubmitOptions};
 use crate::util::err::{Context, Result};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::pool::Pool;
@@ -49,6 +50,13 @@ pub struct NetConfig {
     /// Socket read timeout: how often a blocked handler re-checks the
     /// stop flag.  Bounds drain latency for idle keep-alive connections.
     pub poll_interval: Duration,
+    /// Idle back-off ceiling: a connection that keeps timing out with
+    /// nothing buffered doubles its read timeout from `poll_interval` up
+    /// to this cap (and snaps back on the next byte), so a long-lived
+    /// idle keep-alive costs ~1/16th the wakeups instead of spinning at
+    /// `poll_interval`.  This, not `poll_interval`, bounds how stale an
+    /// idle handler's view of the stop flag can be.
+    pub idle_poll_max: Duration,
     /// Upper bound on waiting for one ticket before the connection gives
     /// up on it (the ticket stays resolvable; the client gets a 500).
     pub response_timeout: Duration,
@@ -65,6 +73,7 @@ impl Default for NetConfig {
             conn_workers: 16,
             max_inflight_per_conn: 8,
             poll_interval: Duration::from_millis(20),
+            idle_poll_max: Duration::from_millis(320),
             response_timeout: Duration::from_secs(30),
             drain_timeout: Duration::from_secs(10),
             inflight_budget: 256,
@@ -86,11 +95,92 @@ pub struct GatewayCounters {
     pub malformed: u64,
 }
 
+/// The serving backend behind the gateway: a single [`Engine`] or a
+/// fault-tolerant [`ClusterEngine`].  [`NetServer::bind`] takes
+/// `impl Into<GatewayEngine>`, so existing single-engine call sites
+/// compile unchanged while `sonic serve --replicas N` hands in a cluster.
+#[derive(Clone)]
+pub enum GatewayEngine {
+    Single(Arc<Engine>),
+    Cluster(Arc<ClusterEngine>),
+}
+
+impl From<Arc<Engine>> for GatewayEngine {
+    fn from(e: Arc<Engine>) -> Self {
+        GatewayEngine::Single(e)
+    }
+}
+
+impl From<Arc<ClusterEngine>> for GatewayEngine {
+    fn from(c: Arc<ClusterEngine>) -> Self {
+        GatewayEngine::Cluster(c)
+    }
+}
+
+impl GatewayEngine {
+    pub fn is_stopping(&self) -> bool {
+        match self {
+            GatewayEngine::Single(e) => e.is_stopping(),
+            GatewayEngine::Cluster(c) => c.is_stopping(),
+        }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        match self {
+            GatewayEngine::Single(e) => e.models(),
+            GatewayEngine::Cluster(c) => c.models(),
+        }
+    }
+
+    pub fn input_len(&self, model: &str) -> Result<usize> {
+        match self {
+            GatewayEngine::Single(e) => e.input_len(model),
+            GatewayEngine::Cluster(c) => c.input_len(model),
+        }
+    }
+
+    fn try_submit_opts(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Option<GatewayTicket>> {
+        match self {
+            GatewayEngine::Single(e) => Ok(e
+                .try_submit_opts(model, input, opts)?
+                .map(GatewayTicket::Single)),
+            GatewayEngine::Cluster(c) => Ok(c
+                .try_submit_opts(model, input, opts)?
+                .map(GatewayTicket::Cluster)),
+        }
+    }
+}
+
+/// A pending response from either backend flavour.
+enum GatewayTicket {
+    Single(Ticket),
+    Cluster(ClusterTicket),
+}
+
+impl GatewayTicket {
+    fn wait_timeout(&self, timeout: Duration) -> Result<Option<Completion>> {
+        match self {
+            GatewayTicket::Single(t) => t.wait_timeout(timeout),
+            GatewayTicket::Cluster(t) => t.wait_timeout(timeout),
+        }
+    }
+}
+
 struct Shared {
-    engine: Arc<Engine>,
+    engine: GatewayEngine,
     tenants: TenantRegistry,
     cfg: NetConfig,
     stopping: AtomicBool,
+    /// Set by the `/v1/admin/drain` endpoint; the server's owner polls
+    /// [`NetServer::drain_requested`] and completes the (blocking)
+    /// shutdown from outside a connection handler — a handler calling
+    /// `shutdown()` itself would wait on its own live connection.
+    drain_requested: AtomicBool,
     live_conns: Mutex<usize>,
     conn_done: Condvar,
     gateway: Mutex<GatewayCounters>,
@@ -132,7 +222,7 @@ impl NetServer {
     /// down drains the edge without touching the engine.
     pub fn bind(
         addr: &str,
-        engine: Arc<Engine>,
+        engine: impl Into<GatewayEngine>,
         specs: Vec<TenantSpec>,
         cfg: NetConfig,
     ) -> Result<NetServer> {
@@ -142,10 +232,11 @@ impl NetServer {
         let tenants = TenantRegistry::new(specs, cfg.inflight_budget);
         let pool = Arc::new(Pool::new(cfg.conn_workers.max(1), cfg.conn_workers.max(1)));
         let shared = Arc::new(Shared {
-            engine,
+            engine: engine.into(),
             tenants,
             cfg,
             stopping: AtomicBool::new(false),
+            drain_requested: AtomicBool::new(false),
             live_conns: Mutex::new(0),
             conn_done: Condvar::new(),
             gateway: Mutex::new(GatewayCounters::default()),
@@ -197,6 +288,14 @@ impl NetServer {
     /// Gateway-level counter snapshot.
     pub fn gateway_counters(&self) -> GatewayCounters {
         self.shared.gateway.lock().unwrap().clone()
+    }
+
+    /// True once `POST /v1/admin/drain` has been accepted.  The endpoint
+    /// only flips flags (new work is refused immediately); the owner of
+    /// this server is expected to poll this and call the blocking
+    /// [`NetServer::shutdown`] to finish the drain.
+    pub fn drain_requested(&self) -> bool {
+        self.shared.drain_requested.load(Ordering::SeqCst)
     }
 
     /// Graceful drain: stop accepting (new connections are refused once
@@ -281,25 +380,51 @@ enum Fill {
 }
 
 /// Buffered socket reader tolerant of read timeouts (the handler's
-/// stop-flag polling) and partial messages.
+/// stop-flag polling) and partial messages.  Consecutive idle timeouts
+/// double the socket read timeout from `poll` up to `poll_max`; the next
+/// byte snaps it back, so active connections keep the tight poll and
+/// idle keep-alives stop burning wakeups.
 struct Conn {
     stream: TcpStream,
     buf: Vec<u8>,
+    poll: Duration,
+    poll_max: Duration,
+    cur_timeout: Duration,
 }
 
 impl Conn {
+    fn new(stream: TcpStream, poll: Duration, poll_max: Duration) -> Self {
+        Self {
+            stream,
+            buf: Vec::new(),
+            poll,
+            poll_max: poll_max.max(poll),
+            cur_timeout: poll,
+        }
+    }
+
+    fn set_timeout(&mut self, t: Duration) {
+        if t != self.cur_timeout {
+            let _ = self.stream.set_read_timeout(Some(t));
+            self.cur_timeout = t;
+        }
+    }
+
     fn fill(&mut self) -> std::io::Result<Fill> {
         let mut tmp = [0u8; 8 * 1024];
         match self.stream.read(&mut tmp) {
             Ok(0) => Ok(Fill::Eof),
             Ok(n) => {
                 self.buf.extend_from_slice(&tmp[..n]);
+                self.set_timeout(self.poll);
                 Ok(Fill::Data)
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                let next = self.cur_timeout.saturating_mul(2).min(self.poll_max);
+                self.set_timeout(next);
                 Ok(Fill::TimedOut)
             }
             Err(e) => Err(e),
@@ -323,7 +448,7 @@ enum Outstanding {
     },
     /// An admitted inference waiting on its ticket.
     Waiting {
-        ticket: Ticket,
+        ticket: GatewayTicket,
         tenant: Arc<Tenant>,
         admitted: Instant,
         id_echo: Option<f64>,
@@ -335,10 +460,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: Co
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(shared.cfg.poll_interval));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-    let mut conn = Conn {
-        stream,
-        buf: Vec::new(),
-    };
+    let mut conn = Conn::new(stream, shared.cfg.poll_interval, shared.cfg.idle_poll_max);
     // Protocol sniff: framed connections open with the 4-byte magic;
     // anything else is treated as HTTP (no valid HTTP request starts with
     // the magic bytes).
@@ -507,6 +629,18 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
             pairs.push(("lane", s(c.priority.as_str())));
             let logits = c.logits;
             return finish_served(pairs, logits);
+        }
+        Ok(Some(c)) if c.outcome == Outcome::ReplicaFailed => {
+            // the cluster exhausted its retry budget: a bounded,
+            // first-class 502 — the client can retry, nothing hangs
+            let mut g = tenant.counters.lock().unwrap();
+            g.replica_failed += 1;
+            drop(g);
+            tenant.release();
+            let mut pairs = base(502.0, id_echo);
+            pairs.push(("outcome", s("replica_failed")));
+            pairs.push(("wall_us", num(c.wall_latency.as_secs_f64() * 1e6)));
+            (502, obj(pairs), Vec::new())
         }
         Ok(Some(c)) => {
             // deadline-shed: first-class 504, never an error or a hang
@@ -707,6 +841,31 @@ fn process_http(shared: &Shared, req: Request) -> Outstanding {
             ready(200, obj(vec![("models", arr(models))]))
         }
         ("GET", "/v1/stats") => ready(200, stats_json(shared)),
+        ("POST", "/v1/admin/drain") => {
+            // Admin-tier gate: only a key whose tenant may submit High
+            // priority (the gold tier in the demo fleet) can drain the
+            // gateway.  The handler flips flags only — in-flight requests
+            // finish, new work gets 503 immediately — and the server's
+            // owner polls `drain_requested()` to run the blocking
+            // shutdown (doing it here would deadlock on our own
+            // connection).
+            let Some(tenant) = req
+                .header(H_API_KEY)
+                .and_then(|k| shared.tenants.authenticate(k))
+            else {
+                shared.gateway.lock().unwrap().auth_failures += 1;
+                return ready(401, obj(vec![("error", s("missing or unknown x-api-key"))]));
+            };
+            if tenant.spec.max_priority != Priority::High {
+                return ready(
+                    403,
+                    obj(vec![("error", s("drain requires an admin-tier api key"))]),
+                );
+            }
+            shared.stopping.store(true, Ordering::SeqCst);
+            shared.drain_requested.store(true, Ordering::SeqCst);
+            ready(200, obj(vec![("status", s("draining"))]))
+        }
         ("POST", path) => {
             let Some(model) = path
                 .strip_prefix("/v1/models/")
@@ -794,6 +953,7 @@ fn stats_json(shared: &Shared) -> Json {
                     ("rate_limited", num(c.rate_limited as f64)),
                     ("over_share", num(c.over_share as f64)),
                     ("rejected_busy", num(c.rejected_busy as f64)),
+                    ("replica_failed", num(c.replica_failed as f64)),
                     ("errors", num(c.errors as f64)),
                     ("p50_us", num(c.latency.quantile(0.50).as_secs_f64() * 1e6)),
                     ("p95_us", num(c.latency.quantile(0.95).as_secs_f64() * 1e6)),

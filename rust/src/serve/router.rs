@@ -181,6 +181,11 @@ pub enum Outcome {
     /// Shed before execution because its deadline expired while queued:
     /// `logits` is empty and no photonic energy was charged.
     DeadlineExceeded,
+    /// Every try across the cluster's replicas failed or timed out
+    /// (see `serve::cluster`): the retry budget is exhausted and the
+    /// request never completed on any backend.  `logits` is empty and
+    /// only work that actually executed was charged.
+    ReplicaFailed,
 }
 
 /// Per-model batching + QoS knobs.
@@ -263,6 +268,22 @@ impl Completion {
             photonic_latency_s: 0.0,
             priority,
             outcome: Outcome::DeadlineExceeded,
+        }
+    }
+
+    /// The cluster's terminal failure outcome: the retry budget ran out
+    /// without any replica completing the request.  Empty logits, zero
+    /// photonic charge (abandoned work is charged by the replica that
+    /// ran it, never double-charged here).
+    pub fn replica_failed(id: u64, priority: Priority, wall_latency: Duration) -> Self {
+        Self {
+            id,
+            logits: Vec::new(),
+            argmax: 0,
+            wall_latency,
+            photonic_latency_s: 0.0,
+            priority,
+            outcome: Outcome::ReplicaFailed,
         }
     }
 

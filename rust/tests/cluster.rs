@@ -1,0 +1,600 @@
+//! `sonic::serve::cluster` integration tests: replicated serving,
+//! deterministic fault injection, retry/failover, health state machine,
+//! and the executed-work-only energy pin.
+//!
+//! Every wait in the fault tests is watchdogged (`wait_timeout`) — a
+//! ticket that fails to resolve is a test failure, never a hang.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sonic::model::ModelDesc;
+use sonic::serve::cluster::chaos::parse_duration;
+use sonic::serve::cluster::{
+    ChaosEvent, ChaosSpec, ClusterConfig, ClusterEngine, FaultKind, Health, HealthPolicy,
+    HealthTracker, RetryPolicy,
+};
+use sonic::serve::{InferenceBackend, NullBackend, Outcome, ServeConfig};
+use sonic::util::err::Result;
+
+/// Watchdog bound: no single ticket may take longer than this to
+/// resolve, even with replicas dying under it.
+const WATCHDOG: Duration = Duration::from_secs(10);
+
+fn mnist() -> ModelDesc {
+    ModelDesc::builtin("mnist").unwrap()
+}
+
+/// Backend with a fixed per-batch service time (so faults land while
+/// work is genuinely in flight).
+struct SlowBackend {
+    inner: NullBackend,
+    per_batch: Duration,
+}
+
+impl InferenceBackend for SlowBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.per_batch);
+        self.inner.infer_batch(inputs)
+    }
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+}
+
+fn null_factory() -> impl Fn(usize) -> Arc<dyn InferenceBackend> {
+    |_| {
+        Arc::new(NullBackend {
+            input_len: 784,
+            n_classes: 10,
+        }) as Arc<dyn InferenceBackend>
+    }
+}
+
+fn slow_factory(per_batch: Duration) -> impl Fn(usize) -> Arc<dyn InferenceBackend> {
+    move |_| {
+        Arc::new(SlowBackend {
+            inner: NullBackend {
+                input_len: 784,
+                n_classes: 10,
+            },
+            per_batch,
+        }) as Arc<dyn InferenceBackend>
+    }
+}
+
+/// Small batches, short windows: keep the tests fast.
+fn fast_serve() -> ServeConfig {
+    ServeConfig {
+        max_batch: 4,
+        batch_window: Duration::from_micros(200),
+        queue_cap: 256,
+        ..ServeConfig::default()
+    }
+}
+
+/// Tight retry knobs so failover happens in milliseconds, not seconds.
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy {
+        per_try_timeout: Duration::from_millis(25),
+        base_backoff: Duration::from_micros(500),
+        max_backoff: Duration::from_millis(5),
+        ..RetryPolicy::default()
+    }
+}
+
+// ---- spec / policy unit tests ----------------------------------------------
+
+#[test]
+fn chaos_spec_parses_the_full_grammar() {
+    let spec =
+        ChaosSpec::parse("kill@200ms:r1:dur=400ms, stall@1s:r0:dur=500us; slow@3s:r2:x=4").unwrap();
+    assert_eq!(
+        spec.events,
+        vec![
+            ChaosEvent {
+                at: Duration::from_millis(200),
+                replica: 1,
+                kind: FaultKind::Kill {
+                    dur: Some(Duration::from_millis(400)),
+                },
+            },
+            ChaosEvent {
+                at: Duration::from_secs(1),
+                replica: 0,
+                kind: FaultKind::Stall {
+                    dur: Duration::from_micros(500),
+                },
+            },
+            ChaosEvent {
+                at: Duration::from_secs(3),
+                replica: 2,
+                kind: FaultKind::Slow {
+                    mult: 4.0,
+                    dur: None,
+                },
+            },
+        ]
+    );
+    // permanent kill: no dur
+    let perm = ChaosSpec::parse("kill@0ms:r0").unwrap();
+    assert_eq!(perm.events[0].kind, FaultKind::Kill { dur: None });
+    assert!(ChaosSpec::parse("").unwrap().is_empty());
+}
+
+#[test]
+fn chaos_spec_rejects_malformed_events() {
+    for bad in [
+        "kill200ms:r1",          // no @
+        "kill@banana:r1",        // bad time
+        "kill@1s",               // no replica
+        "kill@1s:x1",            // replica must be rN
+        "stall@1s:r0",           // stall requires dur
+        "slow@1s:r0",            // slow requires x
+        "slow@1s:r0:x=0.5",      // mult < 1
+        "freeze@1s:r0",          // unknown kind
+        "kill@1s:r0:whoops=3ms", // unknown field
+    ] {
+        assert!(ChaosSpec::parse(bad).is_err(), "accepted {bad:?}");
+    }
+}
+
+#[test]
+fn duration_grammar_accepts_suffixes_and_bare_ms() {
+    assert_eq!(parse_duration("200ms"), Some(Duration::from_millis(200)));
+    assert_eq!(parse_duration("1.5s"), Some(Duration::from_micros(1_500_000)));
+    assert_eq!(parse_duration("500us"), Some(Duration::from_micros(500)));
+    assert_eq!(parse_duration("250"), Some(Duration::from_millis(250)));
+    assert_eq!(parse_duration(" 10ms "), Some(Duration::from_millis(10)));
+    assert_eq!(parse_duration("-5ms"), None);
+    assert_eq!(parse_duration("banana"), None);
+    assert_eq!(parse_duration(""), None);
+}
+
+#[test]
+fn backoff_doubles_caps_and_respects_the_deadline() {
+    let p = RetryPolicy {
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(50),
+        ..RetryPolicy::default()
+    };
+    assert_eq!(p.backoff_for(1, None), Duration::from_millis(2));
+    assert_eq!(p.backoff_for(2, None), Duration::from_millis(4));
+    assert_eq!(p.backoff_for(3, None), Duration::from_millis(8));
+    // ceiling
+    assert_eq!(p.backoff_for(10, None), Duration::from_millis(50));
+    // huge try counts must not overflow the shift
+    assert_eq!(p.backoff_for(u32::MAX, None), Duration::from_millis(50));
+    // deadline-aware: never sleep past the remaining budget
+    assert_eq!(
+        p.backoff_for(3, Some(Duration::from_millis(1))),
+        Duration::from_millis(1)
+    );
+}
+
+#[test]
+fn health_tracker_walks_the_state_machine() {
+    let policy = HealthPolicy {
+        degraded_after: 2,
+        dead_after: 4,
+        rewarm_successes: 3,
+        ..HealthPolicy::default()
+    };
+    let t = HealthTracker::new();
+    assert_eq!(t.health(), Health::Healthy);
+
+    // one failure is forgiven
+    t.record_failure(&policy);
+    assert_eq!(t.health(), Health::Healthy);
+    // second consecutive failure demotes
+    t.record_failure(&policy);
+    assert_eq!(t.health(), Health::Degraded);
+    // pile on to Dead
+    t.record_failure(&policy);
+    t.record_failure(&policy);
+    assert_eq!(t.health(), Health::Dead);
+    // more failures keep it Dead (demote-only)
+    t.record_failure(&policy);
+    assert_eq!(t.health(), Health::Dead);
+
+    // first success re-enters Degraded, never straight to Healthy
+    t.record_success(&policy);
+    assert_eq!(t.health(), Health::Degraded);
+    // re-warm streak: needs rewarm_successes total in Degraded
+    t.record_success(&policy);
+    assert_eq!(t.health(), Health::Degraded);
+    t.record_success(&policy);
+    assert_eq!(t.health(), Health::Healthy);
+
+    // a failure mid-rewarm resets the streak
+    t.record_failure(&policy);
+    t.record_failure(&policy);
+    assert_eq!(t.health(), Health::Degraded);
+    t.record_success(&policy);
+    t.record_failure(&policy); // streak broken
+    t.record_success(&policy);
+    t.record_success(&policy);
+    assert_eq!(t.health(), Health::Degraded, "streak must restart after a failure");
+    t.record_success(&policy);
+    assert_eq!(t.health(), Health::Healthy);
+
+    let (_, deg, dead, transitions) = t.snapshot();
+    assert!(deg > Duration::ZERO);
+    assert!(dead > Duration::ZERO);
+    assert!(transitions >= 4);
+}
+
+// ---- healthy-cluster integration -------------------------------------------
+
+#[test]
+fn healthy_cluster_serves_and_rolls_up_replica_metrics() {
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 3,
+            serve: fast_serve(),
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    assert_eq!(cluster.models(), vec!["mnist".to_string()]);
+    assert_eq!(cluster.input_len("mnist").unwrap(), 784);
+
+    // one-hot inputs: NullBackend puts logit 1.0 at j % 10, proving each
+    // cluster ticket carried *its own* request through routing
+    let n = 40usize;
+    let tickets: Vec<_> = (0..n)
+        .map(|j| {
+            let mut x = vec![0.0f32; 784];
+            x[j] = 1.0;
+            cluster.submit("mnist", x).unwrap()
+        })
+        .collect();
+    for (j, t) in tickets.iter().enumerate() {
+        let c = t
+            .wait_timeout(WATCHDOG)
+            .unwrap()
+            .expect("healthy cluster must resolve within the watchdog");
+        assert_eq!(c.outcome, Outcome::Served);
+        assert_eq!(c.argmax, j % 10, "ticket {j} got another request's logits");
+        assert_eq!(c.id, t.id());
+    }
+    cluster.shutdown();
+
+    let m = cluster.metrics();
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(m.replica_failed, 0);
+    assert_eq!(m.deadline_exceeded, 0);
+    assert!((m.availability() - 1.0).abs() < 1e-12);
+    assert_eq!(m.replicas.len(), 3);
+    assert!(m.replicas.iter().all(|r| r.health == Health::Healthy));
+    // the rollup is exactly the sum of the replicas
+    let sum_completed: u64 = m.replicas.iter().map(|r| r.serve.completed).sum();
+    assert_eq!(sum_completed, n as u64);
+    let sum_energy: f64 = m.replicas.iter().map(|r| r.serve.photonic_energy_j).sum();
+    assert!(m.serve.photonic_energy_j > 0.0, "plan charging must be live");
+    assert!(
+        (m.serve.photonic_energy_j - sum_energy).abs() <= 1e-12 * sum_energy.max(1.0),
+        "cluster energy {} != sum of replica energies {}",
+        m.serve.photonic_energy_j,
+        sum_energy
+    );
+}
+
+#[test]
+fn cluster_rejects_unknown_model_and_bad_input_len() {
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 2,
+            serve: fast_serve(),
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    assert!(cluster.submit("nope", vec![0.0; 784]).is_err());
+    assert!(cluster.submit("mnist", vec![0.0; 3]).is_err());
+    assert!(cluster.input_len("nope").is_err());
+    cluster.shutdown();
+    assert!(cluster.is_stopping());
+    assert!(
+        cluster.submit("mnist", vec![0.0; 784]).is_err(),
+        "submits after shutdown must be refused"
+    );
+}
+
+// ---- fault injection --------------------------------------------------------
+
+#[test]
+fn kill_one_of_three_mid_load_every_ticket_resolves() {
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 3,
+            serve: fast_serve(),
+            retry: fast_retry(),
+            health: HealthPolicy {
+                probe_interval: Duration::from_millis(5),
+                probe_timeout: Duration::from_millis(50),
+                ..HealthPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        slow_factory(Duration::from_micros(200)),
+    )
+    .unwrap();
+    let n = 120usize;
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        if i == n / 4 {
+            // the fault lands mid-load, with tries in flight
+            cluster.fault(1).kill();
+        }
+        if i == 3 * n / 4 {
+            cluster.fault(1).revive();
+        }
+        tickets.push(cluster.submit("mnist", vec![0.25; 784]).unwrap());
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let mut served = 0u64;
+    let mut failed = 0u64;
+    for t in &tickets {
+        match t.wait_timeout(WATCHDOG).unwrap() {
+            Some(c) if c.served() => served += 1,
+            Some(_) => failed += 1,
+            None => panic!("hung ticket {} — watchdog fired", t.id()),
+        }
+    }
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert_eq!(served + failed, n as u64, "every ticket must resolve");
+    assert_eq!(m.resolved(), n as u64);
+    assert!(
+        m.availability() >= 0.99,
+        "kill-1-of-3 availability {} < 0.99 (served {served}, failed {failed})",
+        m.availability()
+    );
+    assert!(
+        m.replicas[1].failures > 0,
+        "the killed replica must have recorded failures"
+    );
+    assert!(m.retries > 0, "failover must have re-queued tries");
+}
+
+#[test]
+fn energy_is_charged_only_for_executed_work() {
+    // replica 0 is dark from t=0 (permanent chaos kill) and probes are
+    // effectively disabled, so any energy on r0 could only come from a
+    // charging bug: batches that *fail* must charge nothing.
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 3,
+            serve: fast_serve(),
+            retry: fast_retry(),
+            health: HealthPolicy {
+                probe_interval: Duration::from_secs(3600),
+                ..HealthPolicy::default()
+            },
+            chaos: ChaosSpec::parse("kill@0ms:r0").unwrap(),
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    // let the supervisor apply the t=0 kill before traffic arrives
+    std::thread::sleep(Duration::from_millis(20));
+    let n = 30usize;
+    let tickets: Vec<_> = (0..n)
+        .map(|_| cluster.submit("mnist", vec![0.25; 784]).unwrap())
+        .collect();
+    for t in &tickets {
+        let c = t
+            .wait_timeout(WATCHDOG)
+            .unwrap()
+            .expect("ticket must resolve");
+        assert!(c.served(), "two live replicas must absorb all traffic");
+    }
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(
+        m.replicas[0].serve.photonic_energy_j, 0.0,
+        "killed replica charged energy for work it never executed"
+    );
+    assert_eq!(m.replicas[0].serve.completed, 0);
+    let live_energy: f64 = m.replicas[1..]
+        .iter()
+        .map(|r| r.serve.photonic_energy_j)
+        .sum();
+    assert!(live_energy > 0.0);
+    assert!(
+        (m.serve.photonic_energy_j - live_energy).abs() <= 1e-12 * live_energy,
+        "rollup must equal the live replicas' executed work"
+    );
+}
+
+#[test]
+fn all_replicas_dead_resolves_replica_failed_within_budget() {
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 2,
+            serve: fast_serve(),
+            retry: RetryPolicy {
+                max_tries: 3,
+                per_try_timeout: Duration::from_millis(25),
+                base_backoff: Duration::from_micros(500),
+                max_backoff: Duration::from_millis(2),
+                ..RetryPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    cluster.fault(0).kill();
+    cluster.fault(1).kill();
+    let tickets: Vec<_> = (0..5)
+        .map(|_| cluster.submit("mnist", vec![0.25; 784]).unwrap())
+        .collect();
+    for t in &tickets {
+        let c = t
+            .wait_timeout(WATCHDOG)
+            .unwrap()
+            .expect("retry-budget exhaustion must resolve the ticket, not hang it");
+        assert_eq!(c.outcome, Outcome::ReplicaFailed);
+        assert!(!c.served());
+    }
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert_eq!(m.replica_failed, 5);
+    assert_eq!(m.completed, 0);
+    assert!((m.availability() - 0.0).abs() < 1e-12);
+    // budget respected: at most max_tries engine submits per request
+    assert!(
+        m.tries <= 5 * 3,
+        "tries {} exceeded the per-request budget",
+        m.tries
+    );
+}
+
+#[test]
+fn dead_replica_rewarms_through_degraded_after_revival() {
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 2,
+            serve: fast_serve(),
+            retry: fast_retry(),
+            health: HealthPolicy {
+                degraded_after: 2,
+                dead_after: 4,
+                probe_interval: Duration::from_millis(5),
+                probe_timeout: Duration::from_millis(100),
+                rewarm_successes: 2,
+                ..HealthPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    cluster.fault(0).kill();
+    // drive traffic until the failing replica is demoted to Dead
+    let t0 = Instant::now();
+    while cluster.health()[0] != Health::Dead {
+        assert!(
+            t0.elapsed() < WATCHDOG,
+            "replica 0 never went Dead (health {:?})",
+            cluster.health()
+        );
+        let t = cluster.submit("mnist", vec![0.25; 784]).unwrap();
+        t.wait_timeout(WATCHDOG).unwrap().expect("resolve");
+    }
+    // revive: the probe trickle must walk it Dead -> Degraded -> Healthy
+    cluster.fault(0).revive();
+    let t0 = Instant::now();
+    while cluster.health()[0] != Health::Healthy {
+        assert!(
+            t0.elapsed() < WATCHDOG,
+            "replica 0 never re-warmed (health {:?})",
+            cluster.health()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert!(m.replicas[0].probes > 0, "recovery must come from probes");
+    assert!(
+        m.replicas[0].time_dead > Duration::ZERO,
+        "the Dead interval must be accounted"
+    );
+}
+
+// ---- satellite: Ticket::wait_timeout under failover -------------------------
+
+#[test]
+fn wait_timeout_times_out_then_still_resolves() {
+    // single stalled replica: wait_timeout must return Ok(None) at the
+    // deadline without consuming the ticket, and a later wait still
+    // gets the completion once the stall clears.
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 1,
+            serve: fast_serve(),
+            retry: RetryPolicy {
+                // long enough that the stalled try is waited out, not
+                // abandoned — this test is about the ticket API
+                per_try_timeout: Duration::from_secs(5),
+                ..RetryPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    cluster.fault(0).stall_for(Duration::from_millis(150));
+    let t = cluster.submit("mnist", vec![0.25; 784]).unwrap();
+    let early = t.wait_timeout(Duration::from_millis(20)).unwrap();
+    assert!(early.is_none(), "stalled request resolved impossibly early");
+    let c = t
+        .wait_timeout(WATCHDOG)
+        .unwrap()
+        .expect("request must complete after the stall clears");
+    assert!(c.served());
+    assert!(c.wall_latency >= Duration::from_millis(100));
+    cluster.shutdown();
+}
+
+#[test]
+fn wait_timeout_under_failover_resolves_in_bounded_time() {
+    // replica 1 stalls long; per-try timeout abandons the stuck tries
+    // and fails them over, so every wait_timeout resolves well before
+    // the stall would have ended.
+    let stall = Duration::from_secs(3);
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 3,
+            serve: fast_serve(),
+            retry: RetryPolicy {
+                per_try_timeout: Duration::from_millis(20),
+                base_backoff: Duration::from_micros(500),
+                max_backoff: Duration::from_millis(2),
+                ..RetryPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        slow_factory(Duration::from_micros(200)),
+    )
+    .unwrap();
+    let n = 60usize;
+    let mut tickets = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for i in 0..n {
+        if i == n / 4 {
+            cluster.fault(1).stall_for(stall);
+        }
+        tickets.push(cluster.submit("mnist", vec![0.25; 784]).unwrap());
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    for t in &tickets {
+        let c = t
+            .wait_timeout(Duration::from_secs(2))
+            .unwrap()
+            .expect("failover must resolve every ticket long before the stall ends");
+        assert!(c.served(), "ticket {} not served: {:?}", t.id(), c.outcome);
+    }
+    assert!(
+        t0.elapsed() < stall,
+        "the whole run must finish before the stalled replica wakes"
+    );
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert!(m.retries > 0, "stalled tries must have been re-queued");
+    assert_eq!(m.completed, n as u64);
+}

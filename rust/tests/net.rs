@@ -444,6 +444,111 @@ fn graceful_drain_answers_inflight_and_refuses_new_connections() {
         .expect("graceful-drain test wedged");
 }
 
+/// The remote drain endpoint: admin-tier gated, flips the gateway into
+/// draining (in-flight requests finish, new work gets 503), and hands
+/// the blocking shutdown to the server's owner via `drain_requested()`.
+/// Watchdogged: a hang here is a bug, not a slow machine.
+#[test]
+fn admin_drain_endpoint_is_gated_and_drains_gracefully() {
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let gate = Arc::new(Mutex::new(()));
+        let engine = mnist_engine(Arc::new(GatedBackend {
+            gate: Arc::clone(&gate),
+            inner: NullBackend {
+                input_len: 784,
+                n_classes: 10,
+            },
+        }));
+        // a long poll_interval keeps idle handlers blocked in read while
+        // the test races the drain flag against a late request
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            Arc::clone(&engine),
+            vec![
+                spec("gold", "gold-key", 0.0, 0.0, Priority::High),
+                spec("free", "free-key", 0.0, 0.0, Priority::Batch),
+            ],
+            NetConfig {
+                poll_interval: Duration::from_millis(100),
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let drain_req = |key: &str| {
+            let auth = if key.is_empty() {
+                String::new()
+            } else {
+                format!("x-api-key: {key}\r\n")
+            };
+            format!("POST /v1/admin/drain HTTP/1.1\r\n{auth}content-length: 0\r\n\r\n").into_bytes()
+        };
+        // one request in flight behind the held gate — it must survive
+        // the drain and get its real answer
+        let held = gate.lock().unwrap();
+        let mut conn_inflight = connect(&server);
+        conn_inflight.write_all(&infer_request("gold-key", 4, "")).unwrap();
+        // a second idle connection, opened pre-drain, to prove new work
+        // is refused with 503 once draining
+        let mut conn_late = connect(&server);
+        std::thread::sleep(Duration::from_millis(50));
+
+        let mut conn_admin = connect(&server);
+        let mut buf = Vec::new();
+        // no key -> 401; non-admin tier -> 403; neither starts the drain
+        conn_admin.write_all(&drain_req("")).unwrap();
+        let (status, json) = recv_http(&mut conn_admin, &mut buf);
+        assert_eq!(status, 401, "{json:?}");
+        conn_admin.write_all(&drain_req("free-key")).unwrap();
+        let (status, json) = recv_http(&mut conn_admin, &mut buf);
+        assert_eq!(status, 403, "{json:?}");
+        assert!(!server.drain_requested(), "rejected drains must not drain");
+
+        // admin tier -> 200 and the flag flips for the owner to act on
+        conn_admin.write_all(&drain_req("gold-key")).unwrap();
+        let (status, json) = recv_http(&mut conn_admin, &mut buf);
+        assert_eq!(status, 200, "{json:?}");
+        assert_eq!(json.get("status").unwrap().as_str(), Some("draining"));
+        assert!(server.drain_requested());
+
+        // new work is refused immediately, even with a valid key
+        conn_late.write_all(&infer_request("gold-key", 0, "")).unwrap();
+        let mut buf_late = Vec::new();
+        let (status, json) = recv_http(&mut conn_late, &mut buf_late);
+        assert_eq!(status, 503, "{json:?}");
+        assert_eq!(json.get("error").unwrap().as_str(), Some("draining"));
+
+        // the in-flight request still completes with its real answer
+        drop(held);
+        let mut buf_inflight = Vec::new();
+        let (status, json) = recv_http(&mut conn_inflight, &mut buf_inflight);
+        assert_eq!(status, 200, "{json:?}");
+        assert_eq!(json.get("argmax").unwrap().as_f64(), Some(4.0));
+
+        // the owner completes the blocking drain; afterwards new
+        // connections are refused (or immediately closed)
+        let addr = server.connect_addr();
+        assert!(server.shutdown(), "drain timed out");
+        match TcpStream::connect_timeout(&addr, Duration::from_secs(1)) {
+            Err(_) => {}
+            Ok(mut s) => {
+                s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+                let mut tmp = [0u8; 16];
+                match s.read(&mut tmp) {
+                    Ok(0) => {}
+                    Err(_) => {}
+                    Ok(n) => panic!("drained server answered with {n} bytes"),
+                }
+            }
+        }
+        engine.shutdown();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("admin-drain test wedged");
+}
+
 /// A slow backend makes the loopback gateway genuinely overloaded, so the
 /// loadgen smoke sees both 2xx and 429 deterministically.
 struct SlowBackend {

@@ -653,6 +653,10 @@ fn prop_qos_tickets_always_resolve() {
                             return Err("shed completion carries logits".into());
                         }
                     }
+                    Outcome::ReplicaFailed => {
+                        // cluster-only outcome; a single engine never emits it
+                        return Err("single engine emitted ReplicaFailed".into());
+                    }
                 }
             }
             let m = engine.metrics();
