@@ -1,0 +1,27 @@
+//! Known-bad fixture for `no-blocking-on-shared-pool`.  Never compiled —
+//! scanned by the lint self-tests.  Blocking on other tasks from inside
+//! a closure running *on* the shared kernel pool can park every worker
+//! with nobody left to wake them.
+use crate::util::pool::shared;
+
+fn bad(ticket: Ticket, cv: &std::sync::Condvar, m: &std::sync::Mutex<bool>) {
+    shared().submit(Box::new(move || {
+        let _ = ticket.wait(); // lint-expect: no-blocking-on-shared-pool
+    }));
+    shared().scoped(|s| {
+        let g = m.lock_or_recover();
+        let _g = cv.wait(g); // lint-expect: no-blocking-on-shared-pool
+    });
+    shared().submit(Box::new(move || {
+        let mut buf = [0u8; 4];
+        stream.read_exact(&mut buf); // lint-expect: no-blocking-on-shared-pool
+    }));
+}
+
+fn good(ticket: Ticket, pool: &crate::util::pool::Pool) {
+    // Blocking is fine on a *dedicated* pool or on the caller's thread.
+    let _ = ticket.wait();
+    pool.scoped(|s| {
+        s.submit(|| compute());
+    });
+}

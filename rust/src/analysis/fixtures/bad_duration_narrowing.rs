@@ -1,0 +1,21 @@
+//! Known-bad fixture for `no-duration-narrowing`.  Never compiled —
+//! scanned by the lint self-tests.  `as_nanos()` overflows u32 after
+//! 4.3 s and `as_millis()` after 49.7 days; the truncation is silent.
+use std::time::{Duration, Instant};
+
+fn bad(d: Duration, t0: Instant) -> u64 {
+    let a = d.as_nanos() as u64; // lint-expect: no-duration-narrowing
+    let b = d.as_millis() as u32; // lint-expect: no-duration-narrowing
+    let c = t0.elapsed().as_micros() as u64; // lint-expect: no-duration-narrowing
+    let s = d.as_secs() as u32; // lint-expect: no-duration-narrowing
+    a + b as u64 + c + s as u64
+}
+
+fn good(d: Duration, n: u64) -> u64 {
+    // Divide in u128 first, clamp explicitly, or saturate via try_from.
+    let per = (d.as_nanos() / n.max(1) as u128) as u64;
+    let clamped = d.as_nanos().min(u64::MAX as u128) as u64;
+    let sat = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+    let secs = d.as_secs();
+    per + clamped + sat + secs
+}

@@ -1,0 +1,53 @@
+//! Known-bad fixture for `lock-order`.  Never compiled — scanned by the
+//! lint self-tests.  The declared hierarchy is
+//! engine → router-lanes → metrics → health: nested acquisition may only
+//! move rightward, or two threads taking the pair in opposite orders
+//! deadlock.
+use std::sync::Mutex;
+
+struct Subsystems {
+    queue: Mutex<Vec<u64>>,
+    counters: Mutex<u64>,
+    health: Mutex<u8>,
+}
+
+fn bad(s: &Subsystems) {
+    let h = s.health.lock_or_recover();
+    let c = s.counters.lock_or_recover(); // lint-expect: lock-order
+    drop(c);
+    drop(h);
+}
+
+fn bad_transient(s: &Subsystems) {
+    let c = s.counters.lock_or_recover();
+    s.queue.lock_or_recover().push(1); // lint-expect: lock-order
+    drop(c);
+}
+
+fn good(s: &Subsystems) {
+    let q = s.queue.lock_or_recover();
+    let c = s.counters.lock_or_recover();
+    drop(c);
+    drop(q);
+    let h = s.health.lock_or_recover();
+    drop(h);
+}
+
+fn good_scoped(s: &Subsystems) {
+    {
+        let h = s.health.lock_or_recover();
+        let _ = *h;
+    }
+    // The health guard died with its scope; metrics is safe now.
+    let c = s.counters.lock_or_recover();
+    drop(c);
+}
+
+fn good_transient_chain(s: &Subsystems) {
+    // A chained access releases at statement end; the binding below is
+    // the value, not the guard.
+    let held = s.health.lock_or_recover().wrapping_add(1);
+    let c = s.counters.lock_or_recover();
+    drop(c);
+    let _ = held;
+}

@@ -1,0 +1,34 @@
+//! Known-bad fixture for `no-lock-unwrap`.  Never compiled — scanned by
+//! the lint self-tests; each `lint-expect` marker names the rule that
+//! must fire on exactly that line.
+use std::sync::{Condvar, Mutex, RwLock};
+
+fn bad(m: &Mutex<u32>, l: &RwLock<u32>, cv: &Condvar) {
+    let g = m.lock().unwrap(); // lint-expect: no-lock-unwrap
+    let r = l.read().unwrap(); // lint-expect: no-lock-unwrap
+    let w = l.write().expect("poisoned"); // lint-expect: no-lock-unwrap
+    let g2 = cv.wait(g).unwrap(); // lint-expect: no-lock-unwrap
+    let _ = (g2, r, w);
+}
+
+fn bad_multiline(m: &Mutex<Vec<u32>>) {
+    m.lock() // lint-expect: no-lock-unwrap
+        .unwrap()
+        .push(1);
+}
+
+fn bad_timeout(cv: &Condvar, m: &Mutex<bool>) {
+    let g = m.lock_or_recover();
+    let _ = cv.wait_timeout(g, DUR).unwrap(); // lint-expect: no-lock-unwrap
+}
+
+fn suppressed(m: &Mutex<u32>) {
+    // sonic-lint: allow(no-lock-unwrap): fixture demonstrating a justified pragma
+    let _g = m.lock().unwrap();
+}
+
+fn not_code(m: &Mutex<u32>) {
+    let _s = "m.lock().unwrap()";
+    // only a comment: m.lock().unwrap()
+    let _g = m.lock_or_recover();
+}

@@ -1,0 +1,16 @@
+//! Known-bad fixture for `no-partial-cmp-unwrap`.  Never compiled —
+//! scanned by the lint self-tests.
+
+fn bad(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); // lint-expect: no-partial-cmp-unwrap
+    let _m = xs
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.partial_cmp(b).expect("nan")); // lint-expect: no-partial-cmp-unwrap
+}
+
+fn good(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    // partial_cmp without the unwrap is legitimate:
+    let _ = xs[0].partial_cmp(&xs[1]).unwrap_or(std::cmp::Ordering::Equal);
+}

@@ -1,0 +1,49 @@
+//! Clean fixture: every rule enabled, zero findings expected.  Exercises
+//! the lexical corners most likely to false-positive — bad patterns in
+//! comments, strings, raw strings, and char literals, plus the blessed
+//! spellings of each invariant.
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+fn lifetimes<'a>(x: &'a str, _c: char) -> &'a str {
+    let _apostrophe = '\'';
+    let _letter = 'x';
+    x
+}
+
+fn strings_and_comments() -> String {
+    // looks bad but is a comment: m.lock().unwrap()
+    let s = "m.lock().unwrap()";
+    let r = r#"a.partial_cmp(b).unwrap()"#;
+    /* block comment: d.as_nanos() as u32
+       /* nested: cv.wait(g).unwrap() */ still inside */
+    format!("{s}{r}")
+}
+
+fn durations(d: Duration, n: u64) -> u64 {
+    let per = (d.as_nanos() / n.max(1) as u128) as u64;
+    let sat = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+    let wide = d.as_millis() as f64;
+    per + sat + wide as u64
+}
+
+fn floats(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+fn locks(m: &Mutex<u64>, cv: &Condvar) -> u64 {
+    let g = m.lock_or_recover();
+    let (g, _timed_out) = cv.wait_timeout_or_recover(g, Duration::from_millis(5));
+    *g
+}
+
+fn tickets(t: Ticket) {
+    // Ticket::wait() takes no guard — not a condvar wait.
+    let _ = t.wait().unwrap();
+    let _ = t.wait_timeout(Duration::from_secs(1)).unwrap();
+}
+
+fn io_reads(stream: &mut TcpStream, buf: &mut [u8]) {
+    // io::Read::read takes a buffer — not an RwLock read().
+    let _ = stream.read(buf).unwrap();
+}

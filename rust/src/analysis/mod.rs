@@ -1,0 +1,362 @@
+//! `sonic lint` — repo-invariant static analysis (see `README.md`).
+//!
+//! A lightweight, zero-dependency scanner over this repo's own Rust
+//! sources.  Each rule encodes an invariant a past PR paid for in
+//! debugging time — poison-safe locking, NaN-safe float ordering, no
+//! blocking work on the shared kernel pool, no silently-truncating
+//! duration casts, and a declared lock hierarchy — so the next change
+//! cannot quietly reintroduce the bug class.  CI runs
+//! `cargo run --release -- lint` as a gating step; the fixture
+//! self-tests below run under plain `cargo test`.
+//!
+//! Suppression: a finding is silenced by a *justified* pragma on the
+//! same line or the line directly above:
+//!
+//! ```text
+//! // sonic-lint: allow(no-lock-unwrap): recovery wrapper itself
+//! ```
+//!
+//! A pragma with no justification text is itself a finding — the point
+//! is that every exception carries its reasoning in the diff.
+
+pub mod rules;
+pub mod sanitize;
+
+use crate::util::json::{self, Json};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub const RULE_NO_LOCK_UNWRAP: &str = "no-lock-unwrap";
+pub const RULE_NO_PARTIAL_CMP_UNWRAP: &str = "no-partial-cmp-unwrap";
+pub const RULE_NO_BLOCKING_ON_SHARED_POOL: &str = "no-blocking-on-shared-pool";
+pub const RULE_NO_DURATION_NARROWING: &str = "no-duration-narrowing";
+pub const RULE_LOCK_ORDER: &str = "lock-order";
+/// Meta-rule: malformed or unjustified suppression pragmas.
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, path: &str, line: usize, message: String) -> Self {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            message,
+        }
+    }
+}
+
+type RuleFn = fn(&str, &sanitize::Sanitized, &mut Vec<Finding>);
+
+/// The rule registry: name, one-line summary, implementation.
+pub const RULES: &[(&str, &str, RuleFn)] = &[
+    (
+        RULE_NO_LOCK_UNWRAP,
+        "Mutex/RwLock/Condvar acquisition must recover from poison (util::sync)",
+        rules::no_lock_unwrap,
+    ),
+    (
+        RULE_NO_PARTIAL_CMP_UNWRAP,
+        "float ordering must use total_cmp, never partial_cmp().unwrap()",
+        rules::no_partial_cmp_unwrap,
+    ),
+    (
+        RULE_NO_BLOCKING_ON_SHARED_POOL,
+        "closures on util::pool::shared() must never block on other tasks",
+        rules::no_blocking_on_shared_pool,
+    ),
+    (
+        RULE_NO_DURATION_NARROWING,
+        "no `as u32`/`as u64` narrowing casts on Duration accessors",
+        rules::no_duration_narrowing,
+    ),
+    (
+        RULE_LOCK_ORDER,
+        "nested lock acquisition follows engine → router-lanes → metrics → health",
+        rules::lock_order,
+    ),
+];
+
+/// Lint one file's source.  `enabled` filters by rule name; empty means
+/// all rules.  Pragma suppression and pragma validation happen here.
+pub fn lint_source(path: &str, src: &str, enabled: &[String]) -> Vec<Finding> {
+    let s = sanitize::sanitize(src);
+    let mut raw = Vec::new();
+    for (name, _, f) in RULES {
+        if enabled.is_empty() || enabled.iter().any(|e| e == name) {
+            f(path, &s, &mut raw);
+        }
+    }
+    let known = |r: &str| RULES.iter().any(|(n, _, _)| *n == r);
+    let mut out = Vec::new();
+    for f in raw {
+        let suppressed = s.pragmas.iter().any(|p| {
+            p.justified
+                && (p.line == f.line || p.line + 1 == f.line)
+                && p.rules.iter().any(|r| r == f.rule)
+        });
+        if !suppressed {
+            out.push(f);
+        }
+    }
+    // Every pragma must parse, name real rules, and carry a reason.
+    for p in &s.pragmas {
+        if p.rules.is_empty() {
+            out.push(Finding::new(
+                RULE_PRAGMA,
+                path,
+                p.line,
+                format!("unparseable sonic-lint pragma: `{}`", p.text),
+            ));
+        } else if let Some(bad) = p.rules.iter().find(|r| !known(r)) {
+            out.push(Finding::new(
+                RULE_PRAGMA,
+                path,
+                p.line,
+                format!("pragma names unknown rule `{bad}`"),
+            ));
+        } else if !p.justified {
+            out.push(Finding::new(
+                RULE_PRAGMA,
+                path,
+                p.line,
+                "suppression pragma has no justification — say why the \
+                 exception is sound: `// sonic-lint: allow(rule): reason`"
+                    .to_string(),
+            ));
+        }
+    }
+    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, skipping build output
+/// and the intentionally-bad lint fixtures.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(root) else {
+        return;
+    };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "target" || name == ".git" || name == "fixtures" {
+                continue;
+            }
+            collect_rs_files(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Default scan roots, resolved relative to the current directory so the
+/// command works both from `rust/` (CI) and from the repo root.
+pub fn default_roots() -> Vec<PathBuf> {
+    let candidates: &[&[&str]] = if Path::new("src").is_dir() {
+        &[&["src"], &["tests"], &["benches"], &["..", "examples"]]
+    } else {
+        &[
+            &["rust", "src"],
+            &["rust", "tests"],
+            &["rust", "benches"],
+            &["examples"],
+        ]
+    };
+    candidates
+        .iter()
+        .map(|parts| parts.iter().collect::<PathBuf>())
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+/// Lint every `.rs` file under `roots` (default roots when empty).
+pub fn lint_paths(roots: &[PathBuf], enabled: &[String]) -> std::io::Result<Vec<Finding>> {
+    let roots = if roots.is_empty() {
+        default_roots()
+    } else {
+        roots.to_vec()
+    };
+    let mut files = Vec::new();
+    for r in &roots {
+        if r.is_file() {
+            files.push(r.clone());
+        } else {
+            collect_rs_files(r, &mut files);
+        }
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        out.extend(lint_source(&f.display().to_string(), &src, enabled));
+    }
+    Ok(out)
+}
+
+/// Render findings as `path:line: [rule] message` lines.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+    }
+    s
+}
+
+/// Render findings as a JSON report (machine-readable CI artifact).
+pub fn render_json(findings: &[Finding]) -> String {
+    let items = findings
+        .iter()
+        .map(|f| {
+            json::obj(vec![
+                ("rule", json::s(f.rule)),
+                ("path", json::s(&f.path)),
+                ("line", json::num(f.line as f64)),
+                ("message", json::s(&f.message)),
+            ])
+        })
+        .collect::<Vec<Json>>();
+    json::obj(vec![
+        ("findings", json::arr(items)),
+        ("count", json::num(findings.len() as f64)),
+    ])
+    .to_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    /// Expected findings of a fixture: every `lint-expect: rule-a, rule-b`
+    /// marker names the rules that must fire on that exact line.
+    fn expected(src: &str) -> BTreeSet<(usize, String)> {
+        let mut want = BTreeSet::new();
+        for (i, line) in src.lines().enumerate() {
+            if let Some(pos) = line.find("lint-expect:") {
+                for r in line[pos + "lint-expect:".len()..].split(',') {
+                    want.insert((i + 1, r.trim().to_string()));
+                }
+            }
+        }
+        want
+    }
+
+    fn check_fixture(name: &str, src: &str) {
+        let got: BTreeSet<(usize, String)> = lint_source(name, src, &[])
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string()))
+            .collect();
+        let want = expected(src);
+        assert!(
+            !want.is_empty(),
+            "{name}: fixture has no lint-expect markers"
+        );
+        assert_eq!(
+            got, want,
+            "{name}: findings (left) diverge from lint-expect markers (right)"
+        );
+    }
+
+    #[test]
+    fn fixture_lock_unwrap() {
+        check_fixture(
+            "bad_lock_unwrap.rs",
+            include_str!("fixtures/bad_lock_unwrap.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_partial_cmp() {
+        check_fixture(
+            "bad_partial_cmp.rs",
+            include_str!("fixtures/bad_partial_cmp.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_blocking_pool() {
+        check_fixture(
+            "bad_blocking_pool.rs",
+            include_str!("fixtures/bad_blocking_pool.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_duration_narrowing() {
+        check_fixture(
+            "bad_duration_narrowing.rs",
+            include_str!("fixtures/bad_duration_narrowing.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_lock_order() {
+        check_fixture(
+            "bad_lock_order.rs",
+            include_str!("fixtures/bad_lock_order.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_clean_has_zero_findings() {
+        let f = lint_source("clean.rs", include_str!("fixtures/clean.rs"), &[]);
+        assert!(f.is_empty(), "clean fixture flagged: {f:?}");
+    }
+
+    #[test]
+    fn rule_filter_restricts_scan() {
+        let src = include_str!("fixtures/bad_lock_unwrap.rs");
+        let only = vec![RULE_NO_DURATION_NARROWING.to_string()];
+        assert!(lint_source("f.rs", src, &only).is_empty());
+    }
+
+    #[test]
+    fn unjustified_pragma_is_a_finding() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) {\n    // sonic-lint: allow(no-lock-unwrap)\n    let _ = m.lock().unwrap();\n}\n";
+        let f = lint_source("f.rs", src, &[]);
+        // The unjustified pragma does not suppress, and is flagged itself.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == RULE_PRAGMA));
+        assert!(f.iter().any(|x| x.rule == RULE_NO_LOCK_UNWRAP));
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_is_a_finding() {
+        let src = "// sonic-lint: allow(no-such-rule): because\nfn f() {}\n";
+        let f = lint_source("f.rs", src, &[]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_PRAGMA);
+    }
+
+    /// The gate the whole PR exists for: the migrated tree must be
+    /// finding-free.  `cargo test` runs with the package root as cwd, so
+    /// the default roots resolve exactly as in CI.
+    #[test]
+    fn migrated_tree_is_clean() {
+        let findings = lint_paths(&[], &[]).expect("scan repo sources");
+        assert!(
+            findings.is_empty(),
+            "lint findings on the tree:\n{}",
+            render_text(&findings)
+        );
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let f = vec![Finding::new(RULE_LOCK_ORDER, "a.rs", 3, "msg".into())];
+        let j = Json::parse(&render_json(&f)).expect("valid json");
+        assert_eq!(j.req("count").unwrap().as_usize(), Some(1));
+        let items = j.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(items[0].req("rule").unwrap().as_str(), Some("lock-order"));
+    }
+}

@@ -1,0 +1,470 @@
+//! The lint rules.  Each rule is a pure function over a [`Sanitized`]
+//! file view; it appends [`Finding`]s with 1-based line numbers.  See
+//! `README.md` for the catalog and the invariant behind each rule.
+
+use super::sanitize::Sanitized;
+use super::Finding;
+
+/// Skip ASCII whitespace (incl. newlines) starting at `i`.
+fn skip_ws(text: &str, mut i: usize) -> usize {
+    let b = text.as_bytes();
+    while i < b.len() && (b[i] as char).is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Given `text[open]` == `(`, return the offset just past the matching
+/// `)` and the number of top-level commas inside, or `None` if
+/// unbalanced.  Sanitized text has no parens hiding in strings/comments.
+fn match_paren(text: &str, open: usize) -> Option<(usize, usize)> {
+    let b = text.as_bytes();
+    debug_assert_eq!(b[open], b'(');
+    let mut depth = 0usize;
+    let mut commas = 0usize;
+    let mut nonblank = false;
+    for (k, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((k + 1, if nonblank { commas } else { usize::MAX }));
+                }
+            }
+            b',' if depth == 1 => commas += 1,
+            c if !(c as char).is_ascii_whitespace() => nonblank = true,
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Does `.unwrap()` or `.expect(` immediately follow offset `i`
+/// (whitespace-tolerant, so multi-line chains match)?
+fn followed_by_unwrap(text: &str, i: usize) -> bool {
+    let j = skip_ws(text, i);
+    text[j..].starts_with(".unwrap()") || text[j..].starts_with(".expect(")
+}
+
+/// The identifier chain segment directly before offset `end` (which
+/// points at the `.` of a method call): for `self.ctx.counters` returns
+/// `counters`; for `cache()` returns `cache`; empty when unresolvable.
+fn receiver_ident(text: &str, end: usize) -> &str {
+    let b = text.as_bytes();
+    let mut i = end;
+    // strip a trailing empty call `()` so `cache().lock…` resolves to cache
+    if i >= 2 && &text[i - 2..i] == "()" {
+        i -= 2;
+    }
+    let stop = i;
+    while i > 0 {
+        let c = b[i - 1] as char;
+        if c.is_ascii_alphanumeric() || c == '_' {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    &text[i..stop]
+}
+
+/// `no-lock-unwrap`: `Mutex`/`RwLock`/`Condvar` acquisition must go
+/// through `util::sync` so a poisoned lock recovers instead of
+/// cascading panics across threads.
+pub fn no_lock_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+    let text = &s.text;
+    for pat in [".lock()", ".read()", ".write()"] {
+        for (i, _) in text.match_indices(pat) {
+            if followed_by_unwrap(text, i + pat.len()) {
+                out.push(Finding::new(
+                    super::RULE_NO_LOCK_UNWRAP,
+                    path,
+                    s.line_of(i),
+                    format!(
+                        "`{}` acquisition unwraps the poison error; use \
+                         util::sync::{} so a panicking holder cannot cascade",
+                        &pat[1..pat.len() - 2],
+                        match pat {
+                            ".read()" => "read_or_recover()",
+                            ".write()" => "write_or_recover()",
+                            _ => "lock_or_recover()",
+                        }
+                    ),
+                ));
+            }
+        }
+    }
+    // Condvar::wait(guard) / wait_timeout(guard, dur) re-acquire the
+    // mutex and surface poison the same way.  Ticket::wait() takes no
+    // argument and Ticket::wait_timeout(dur) takes one — the top-level
+    // comma count tells them apart.
+    for (pat, min_commas) in [(".wait(", 0), (".wait_timeout(", 1), (".wait_while(", 1)] {
+        for (i, _) in text.match_indices(pat) {
+            let open = i + pat.len() - 1;
+            let Some((close, commas)) = match_paren(text, open) else {
+                continue;
+            };
+            // usize::MAX marks empty argument lists (Ticket::wait()).
+            if commas == usize::MAX || commas < min_commas {
+                continue;
+            }
+            if followed_by_unwrap(text, close) {
+                out.push(Finding::new(
+                    super::RULE_NO_LOCK_UNWRAP,
+                    path,
+                    s.line_of(i),
+                    "condvar wait unwraps the poison error on re-acquire; use \
+                     util::sync::wait_or_recover / wait_timeout_or_recover"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// `no-partial-cmp-unwrap`: `partial_cmp().unwrap()` panics on NaN —
+/// float ordering must use `total_cmp` (regressions: bench stats,
+/// router logits, thermal pivot selection).
+pub fn no_partial_cmp_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+    let text = &s.text;
+    for (i, _) in text.match_indices(".partial_cmp(") {
+        let open = i + ".partial_cmp(".len() - 1;
+        let Some((close, _)) = match_paren(text, open) else {
+            continue;
+        };
+        if followed_by_unwrap(text, close) {
+            out.push(Finding::new(
+                super::RULE_NO_PARTIAL_CMP_UNWRAP,
+                path,
+                s.line_of(i),
+                "partial_cmp().unwrap() panics on NaN; use f32::total_cmp / f64::total_cmp"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// `no-duration-narrowing`: `as u32`/`as u64` directly on a `Duration`
+/// accessor silently truncates (nanos overflow u32 in 4.3 s, millis in
+/// 49.7 days).  Divide in u128 first, clamp with `.min(...)`, or use
+/// `u64::try_from(..).unwrap_or(u64::MAX)`.
+pub fn no_duration_narrowing(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+    let text = &s.text;
+    for pat in [".as_nanos()", ".as_micros()", ".as_millis()", ".as_secs()"] {
+        for (i, _) in text.match_indices(pat) {
+            let j = skip_ws(text, i + pat.len());
+            let rest = &text[j..];
+            let Some(ty) = rest.strip_prefix("as ") else {
+                continue;
+            };
+            let ty = ty.trim_start();
+            let narrow = ["u8", "u16", "u32", "i8", "i16", "i32", "usize", "isize"]
+                .iter()
+                .any(|t| ty.starts_with(t) && !ty[t.len()..].starts_with(|c: char| c.is_ascii_alphanumeric()));
+            // u128-returning accessors also truncate into u64/i64.
+            let from_u128 = pat != ".as_secs()";
+            let narrow64 = from_u128
+                && ["u64", "i64", "f32"]
+                    .iter()
+                    .any(|t| ty.starts_with(t) && !ty[t.len()..].starts_with(|c: char| c.is_ascii_alphanumeric()));
+            if narrow || narrow64 {
+                out.push(Finding::new(
+                    super::RULE_NO_DURATION_NARROWING,
+                    path,
+                    s.line_of(i),
+                    format!(
+                        "`{} as …` silently truncates; divide in u128, clamp, or \
+                         use try_from with a saturating fallback",
+                        &pat[1..]
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Blocking-call markers for `no-blocking-on-shared-pool`: things that
+/// park the calling worker until *another* task makes progress.
+const BLOCKING: &[(&str, &str)] = &[
+    (".wait()", "Ticket::wait"),
+    (".wait_timeout(", "bounded wait still serializes a shared worker"),
+    (".read_exact(", "socket/stream read"),
+    (".read_to_end(", "socket/stream read"),
+    (".read_to_string(", "socket/stream read"),
+    (".accept()", "listener accept"),
+    (".recv()", "channel recv"),
+    (".join()", "thread join"),
+];
+
+/// `no-blocking-on-shared-pool`: closures submitted to the global
+/// kernel pool (`util::pool::shared()`) must never block on work that
+/// needs pool capacity to finish — with all workers parked, nothing can
+/// ever wake them (the deadlock class documented in `serve/net`, which
+/// is why the gateway owns a *dedicated* pool).
+pub fn no_blocking_on_shared_pool(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+    let text = &s.text;
+    for (i, _) in text.match_indices("shared()") {
+        let j = skip_ws(text, i + "shared()".len());
+        let rest = &text[j..];
+        let entry = [".submit(", ".submit_boxed(", ".scoped("]
+            .iter()
+            .find(|p| rest.starts_with(**p));
+        let Some(entry) = entry else {
+            continue;
+        };
+        let open = j + entry.len() - 1;
+        let Some((close, _)) = match_paren(text, open) else {
+            continue;
+        };
+        let region = &text[open..close];
+        for (marker, what) in BLOCKING {
+            for (k, _) in region.match_indices(marker) {
+                // `.wait_timeout(` with a guard arg is already flagged by
+                // no-lock-unwrap's condvar check; here any parking call
+                // counts, so no disambiguation is needed.
+                out.push(Finding::new(
+                    super::RULE_NO_BLOCKING_ON_SHARED_POOL,
+                    path,
+                    s.line_of(open + k),
+                    format!(
+                        "blocking call `{}` ({what}) inside a closure on the shared \
+                         kernel pool can park every worker with no one left to wake \
+                         them; use a dedicated pool or resolve before submitting",
+                        marker.trim_end_matches('(')
+                    ),
+                ));
+            }
+        }
+        // Ungated condvar wait: `.wait(guard)` — one non-empty argument.
+        for (k, _) in region.match_indices(".wait(") {
+            let Some((_, commas)) = match_paren(region, k + ".wait(".len() - 1) else {
+                continue;
+            };
+            if commas != usize::MAX {
+                out.push(Finding::new(
+                    super::RULE_NO_BLOCKING_ON_SHARED_POOL,
+                    path,
+                    s.line_of(open + k),
+                    "Condvar::wait without a timeout inside a closure on the shared \
+                     kernel pool can park every worker forever"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// The declared lock hierarchy: a thread may acquire a lock of a
+/// *higher* level while holding a lower one, never the reverse.
+/// Receivers are classified by field name; unknown names are ignored.
+const HIERARCHY: &[(&str, u8, &str)] = &[
+    // level 0 — engine lifecycle (outermost)
+    ("shutdown_lock", 0, "engine"),
+    ("workers", 0, "engine"),
+    ("threads", 0, "engine"),
+    ("slots", 0, "engine"),
+    ("listener", 0, "engine"),
+    ("accept_thread", 0, "engine"),
+    // level 1 — router lane queues
+    ("queue", 1, "router-lanes"),
+    ("lanes", 1, "router-lanes"),
+    // level 2 — metrics / counters
+    ("stats", 2, "metrics"),
+    ("counters", 2, "metrics"),
+    ("gateway", 2, "metrics"),
+    ("agg", 2, "metrics"),
+    ("stopped_elapsed", 2, "metrics"),
+    // level 3 — health tracking (innermost)
+    ("health", 3, "health"),
+];
+
+fn classify(ident: &str, path: &str) -> Option<(u8, &'static str)> {
+    // `state` is the health tracker's field in health.rs; elsewhere the
+    // name is too generic to classify.
+    if ident == "state" && path.ends_with("health.rs") {
+        return Some((3, "health"));
+    }
+    HIERARCHY
+        .iter()
+        .find(|(n, _, _)| *n == ident)
+        .map(|&(_, lvl, class)| (lvl, class))
+}
+
+/// Acquisition patterns `lock-order` tracks (wrapped and raw).
+const ACQUIRE: &[&str] = &[
+    ".lock_or_recover()",
+    ".read_or_recover()",
+    ".write_or_recover()",
+    ".lock()",
+    ".read()",
+    ".write()",
+];
+
+/// `lock-order`: intra-function nested acquisitions must follow the
+/// declared hierarchy `engine → router lanes → metrics → health`.
+/// Heuristic guard tracking: `let g = recv.lock…();` holds until
+/// `drop(g)` or the binding's brace scope closes; acquisitions chained
+/// into a longer expression are transient and only *checked*, not held.
+pub fn lock_order(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+    let mut depth: i32 = 0;
+    // (guard name, level, class, depth at binding)
+    let mut held: Vec<(String, u8, &'static str, i32)> = Vec::new();
+    for ln in 1..=s.line_count() {
+        let line = s.line(ln).to_string();
+        // Acquisitions on this line, in textual order.
+        let mut hits: Vec<usize> = Vec::new();
+        for pat in ACQUIRE {
+            for (i, _) in line.match_indices(pat) {
+                hits.push(i);
+            }
+        }
+        hits.sort_unstable();
+        hits.dedup();
+        for &i in &hits {
+            let recv = receiver_ident(&line, i).to_string();
+            let Some((lvl, class)) = classify(&recv, path) else {
+                continue;
+            };
+            for (gname, glvl, gclass, _) in &held {
+                if *glvl > lvl {
+                    out.push(Finding::new(
+                        super::RULE_LOCK_ORDER,
+                        path,
+                        ln,
+                        format!(
+                            "acquires '{recv}' ({class}, level {lvl}) while holding \
+                             '{gname}' ({gclass}, level {glvl}); declared order is \
+                             engine → router-lanes → metrics → health"
+                        ),
+                    ));
+                }
+            }
+            // Held only when the statement binds the guard itself:
+            // `let g = recv.lock…();`
+            if let Some(guard_name) = binds_guard(&line, i) {
+                held.push((guard_name, lvl, class, depth));
+            }
+        }
+        // Explicit early releases.
+        for (i, _) in line.match_indices("drop(") {
+            if let Some((close, _)) = match_paren(&line, i + "drop(".len() - 1) {
+                let name = line[i + "drop(".len()..close - 1].trim();
+                held.retain(|(g, _, _, _)| g != name);
+            }
+        }
+        // Brace tracking: guards die when their binding scope closes.
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    held.retain(|&(_, _, _, d)| d <= depth);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// If the acquisition at offset `i` of `line` is the tail of a plain
+/// `let <name> = recv.lock…();` statement, return the guard name.
+fn binds_guard(line: &str, i: usize) -> Option<String> {
+    let head = line[..i].trim_start();
+    let head = head.strip_prefix("let ")?;
+    let head = head.strip_prefix("mut ").unwrap_or(head);
+    let eq = head.find('=')?;
+    let name = head[..eq].trim();
+    if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+        return None;
+    }
+    // The guard is only held if the acquisition ends the statement.
+    let after = line[i..].find(')').map(|p| i + p + 1)?;
+    let rest = line[after..].trim_start();
+    if rest.starts_with(';') {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sanitize::sanitize;
+    use super::*;
+
+    fn run(rule: fn(&str, &Sanitized, &mut Vec<Finding>), src: &str) -> Vec<Finding> {
+        let s = sanitize(src);
+        let mut out = Vec::new();
+        rule("test.rs", &s, &mut out);
+        out
+    }
+
+    #[test]
+    fn lock_unwrap_flags_multiline_chains() {
+        let f = run(no_lock_unwrap, "cache()\n    .lock()\n    .unwrap()\n    .get(&k);\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2, "reported at the .lock(), not the .unwrap()");
+    }
+
+    #[test]
+    fn ticket_wait_is_not_a_condvar_wait() {
+        assert!(run(no_lock_unwrap, "let c = t.wait().unwrap();\n").is_empty());
+        assert!(run(no_lock_unwrap, "t.wait_timeout(WATCHDOG).unwrap();\n").is_empty());
+        assert_eq!(run(no_lock_unwrap, "let g = cv.wait(g).unwrap();\n").len(), 1);
+        assert_eq!(
+            run(no_lock_unwrap, "let (g, t) = cv.wait_timeout(g, dur).unwrap();\n").len(),
+            1
+        );
+    }
+
+    #[test]
+    fn io_read_with_args_is_not_a_rwlock_read() {
+        assert!(run(no_lock_unwrap, "stream.read(&mut buf).unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn duration_narrowing_spares_safe_forms() {
+        assert!(run(no_duration_narrowing, "let x = (d.as_nanos() / n as u128) as u64;\n")
+            .is_empty());
+        assert!(run(
+            no_duration_narrowing,
+            "let x = d.as_nanos().min(u64::MAX as u128) as u64;\n"
+        )
+        .is_empty());
+        assert_eq!(run(no_duration_narrowing, "let x = d.as_nanos() as u64;\n").len(), 1);
+        assert_eq!(run(no_duration_narrowing, "let x = d.as_millis() as u32;\n").len(), 1);
+        assert_eq!(run(no_duration_narrowing, "let s = d.as_secs() as u64;\n").len(), 0);
+        assert_eq!(run(no_duration_narrowing, "let s = d.as_secs() as u32;\n").len(), 1);
+    }
+
+    #[test]
+    fn lock_order_tracks_guards_and_drops() {
+        let bad = "fn f(s: &S) {\n    let h = s.health.lock_or_recover();\n    let c = s.counters.lock_or_recover();\n}\n";
+        let f = run(lock_order, bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        let ok = "fn f(s: &S) {\n    let q = s.queue.lock_or_recover();\n    let c = s.counters.lock_or_recover();\n}\n";
+        assert!(run(lock_order, ok).is_empty());
+        let dropped = "fn f(s: &S) {\n    let h = s.health.lock_or_recover();\n    drop(h);\n    let c = s.counters.lock_or_recover();\n}\n";
+        assert!(run(lock_order, dropped).is_empty());
+    }
+
+    #[test]
+    fn lock_order_ignores_transient_chains() {
+        // A chained access releases the guard at statement end — the
+        // binding is the clone, not the guard.
+        let src = "fn f(s: &S) {\n    let h = s.health.lock_or_recover().clone();\n    let c = s.counters.lock_or_recover();\n}\n";
+        assert!(run(lock_order, src).is_empty());
+    }
+
+    #[test]
+    fn shared_pool_blocking_flagged() {
+        let src = "shared().submit(move || {\n    let _ = ticket.wait();\n});\n";
+        let f = run(no_blocking_on_shared_pool, src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        let ok = "shared().submit(move || {\n    counter.fetch_add(1, Ordering::SeqCst);\n});\n";
+        assert!(run(no_blocking_on_shared_pool, ok).is_empty());
+    }
+}

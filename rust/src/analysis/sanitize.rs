@@ -1,0 +1,353 @@
+//! Source sanitizer: a comment/string/char-literal-aware pass over Rust
+//! source that (a) blanks everything that is not code, so the rule engine
+//! can match patterns with naive text search and never trip on a comment
+//! or a string literal, and (b) extracts `sonic-lint:` suppression
+//! pragmas from the comments it blanks.
+//!
+//! This is deliberately *not* a Rust parser.  It tracks exactly the
+//! lexical states that can hide code-looking text — line comments,
+//! (nested) block comments, string literals with escapes, raw strings
+//! with `#` fences, byte strings, and char literals (disambiguated from
+//! lifetimes) — and replaces their contents with spaces, preserving line
+//! structure so findings keep real line numbers.
+
+/// A parsed suppression pragma: the comment form
+/// `allow(rule-a, rule-b): justification` behind the sonic-lint marker.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Rule names listed inside `allow(...)`.
+    pub rules: Vec<String>,
+    /// Whether a non-empty justification followed the rule list.
+    pub justified: bool,
+    /// Raw comment text (diagnostics for malformed pragmas).
+    pub text: String,
+}
+
+/// Sanitized view of one source file.
+pub struct Sanitized {
+    /// The source with comments, strings, and char literals blanked to
+    /// spaces.  Same length and line structure as the input.
+    pub text: String,
+    /// Byte offset of the start of each line (for offset→line lookup).
+    line_starts: Vec<usize>,
+    /// Every `sonic-lint:` pragma found in the comments.
+    pub pragmas: Vec<Pragma>,
+}
+
+impl Sanitized {
+    /// 1-based line number containing byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// The sanitized text of a 1-based line (without trailing newline).
+    pub fn line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|e| e - 1)
+            .unwrap_or(self.text.len());
+        &self.text[start..end.max(start)]
+    }
+
+    /// Number of lines.
+    pub fn line_count(&self) -> usize {
+        self.line_starts.len()
+    }
+}
+
+#[derive(PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Block comments nest in Rust; the payload is the nesting depth.
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Sanitize `src`, blanking non-code bytes and collecting pragmas.
+pub fn sanitize(src: &str) -> Sanitized {
+    let bytes = src.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut line_starts = vec![0usize];
+    let mut pragmas = Vec::new();
+    let mut state = State::Code;
+    // Accumulates the current comment's text for pragma parsing.
+    let mut comment = String::new();
+    let mut comment_line = 1usize;
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c == b'\n' {
+            if state == State::LineComment {
+                flush_pragma(&comment, comment_line, &mut pragmas);
+                comment.clear();
+                state = State::Code;
+            }
+            out.push(b'\n');
+            line += 1;
+            line_starts.push(i + 1);
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    state = State::LineComment;
+                    comment_line = line;
+                    out.push(b' ');
+                    i += 1;
+                    out.push(b' ');
+                    i += 1;
+                } else if c == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(1);
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    state = State::Str;
+                    out.push(b' ');
+                    i += 1;
+                } else if is_raw_string_start(bytes, i) {
+                    // r"..."  r#"..."#  br#"..."#  — count the fence.
+                    let mut j = i;
+                    while bytes[j] != b'#' && bytes[j] != b'"' {
+                        j += 1; // skip the r / br prefix
+                    }
+                    let mut hashes = 0u32;
+                    while bytes.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    // bytes[j] is the opening quote
+                    for _ in i..=j {
+                        out.push(b' ');
+                    }
+                    i = j + 1;
+                    state = State::RawStr(hashes);
+                } else if c == b'\'' && is_char_literal(bytes, i) {
+                    state = State::Char;
+                    out.push(b' ');
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c as char);
+                out.push(b' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                } else if c == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == b'\\' && i + 1 < bytes.len() && bytes[i + 1] != b'\n' {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'"' {
+                    out.push(b' ');
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == b'"' && raw_fence_closes(bytes, i, hashes) {
+                    for _ in 0..=hashes {
+                        out.push(b' ');
+                    }
+                    i += 1 + hashes as usize;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == b'\\' && i + 1 < bytes.len() && bytes[i + 1] != b'\n' {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if c == b'\'' {
+                    out.push(b' ');
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if state == State::LineComment {
+        flush_pragma(&comment, comment_line, &mut pragmas);
+    }
+
+    Sanitized {
+        // Only ASCII bytes were substituted, so the output is valid UTF-8.
+        text: String::from_utf8(out).expect("sanitizer preserves utf-8"),
+        line_starts,
+        pragmas,
+    }
+}
+
+/// Is `bytes[i..]` the start of a raw (byte) string literal?  Requires
+/// the previous char to not be identifier-ish, so `attr` or `for` never
+/// match.
+fn is_raw_string_start(bytes: &[u8], i: usize) -> bool {
+    if i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_') {
+        return false;
+    }
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return false;
+    }
+    j += 1;
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    bytes.get(j) == Some(&b'"')
+}
+
+/// Does the `"` at `bytes[i]` close a raw string with `hashes` fence
+/// characters?
+fn raw_fence_closes(bytes: &[u8], i: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if bytes.get(i + 1 + k) != Some(&b'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// Disambiguate a char literal from a lifetime: `'x'` and `'\n'` are
+/// literals; `'a` in `&'a str` or `'static` is a lifetime.
+fn is_char_literal(bytes: &[u8], i: usize) -> bool {
+    match bytes.get(i + 1) {
+        Some(b'\\') => true,
+        Some(_) => bytes.get(i + 2) == Some(&b'\''),
+        None => false,
+    }
+}
+
+/// Parse a suppression pragma — the sonic-lint marker followed by
+/// `allow(rule, ...): justification` — out of a line comment's text.
+fn flush_pragma(comment: &str, line: usize, pragmas: &mut Vec<Pragma>) {
+    let Some(pos) = comment.find("sonic-lint:") else {
+        return;
+    };
+    let rest = comment[pos + "sonic-lint:".len()..].trim_start();
+    if !rest.starts_with("allow") {
+        // Prose that merely mentions the marker (docs, READMEs quoted in
+        // comments) is not a suppression attempt.
+        return;
+    }
+    let mut rules = Vec::new();
+    let mut justified = false;
+    if let Some(body) = rest.strip_prefix("allow(") {
+        if let Some(close) = body.find(')') {
+            for r in body[..close].split(',') {
+                let r = r.trim();
+                if !r.is_empty() {
+                    rules.push(r.to_string());
+                }
+            }
+            justified = body[close + 1..]
+                .trim_start()
+                .strip_prefix(':')
+                .map(|j| !j.trim().is_empty())
+                .unwrap_or(false);
+        }
+    }
+    pragmas.push(Pragma {
+        line,
+        rules,
+        justified,
+        text: comment.trim().to_string(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_and_strings() {
+        let s = sanitize("let a = 1; // m.lock().unwrap()\nlet b = \"x.lock().unwrap()\";\n");
+        assert!(!s.text.contains("unwrap"));
+        assert!(s.text.contains("let a = 1;"));
+        assert!(s.text.contains("let b ="));
+        assert_eq!(s.line_count(), 3); // trailing newline opens an empty line
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let s = sanitize("/* outer /* inner */ still */ code()\nlet r = r#\"lock().unwrap()\"#;\n");
+        assert!(s.text.contains("code()"));
+        assert!(!s.text.contains("unwrap"));
+        assert!(!s.text.contains("still"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let s = sanitize("fn f<'a>(x: &'a str) -> char { 'x' }\nlet q = '\\'';\n");
+        assert!(s.text.contains("<'a>"), "lifetime mangled: {}", s.text);
+        assert!(!s.text.contains("'x'"));
+    }
+
+    #[test]
+    fn parses_pragma_with_justification() {
+        let s = sanitize("// sonic-lint: allow(no-lock-unwrap, lock-order): recovery wrapper\nx();\n");
+        assert_eq!(s.pragmas.len(), 1);
+        let p = &s.pragmas[0];
+        assert_eq!(p.line, 1);
+        assert_eq!(p.rules, vec!["no-lock-unwrap", "lock-order"]);
+        assert!(p.justified);
+    }
+
+    #[test]
+    fn pragma_without_justification_is_not_justified() {
+        let s = sanitize("let g = m.lock(); // sonic-lint: allow(no-lock-unwrap)\n");
+        assert_eq!(s.pragmas.len(), 1);
+        assert!(!s.pragmas[0].justified);
+    }
+
+    #[test]
+    fn line_of_maps_offsets() {
+        let s = sanitize("a\nbb\nccc\n");
+        assert_eq!(s.line_of(0), 1);
+        assert_eq!(s.line_of(2), 2);
+        assert_eq!(s.line_of(5), 3);
+        assert_eq!(s.line("2".parse::<usize>().unwrap()), "bb");
+    }
+}

@@ -54,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "infer" => cmd_infer(rest),
         "serve" => cmd_serve(rest),
+        "lint" => cmd_lint(rest),
         "loadgen" => cmd_loadgen(rest),
         "compare" => cmd_compare(rest),
         "dse" => cmd_dse(rest),
@@ -103,6 +104,10 @@ USAGE: sonic <subcommand> [options]
                                         and writes BENCH_net.json — with
                                         --replicas/--chaos the self-serve side
                                         is a cluster under fault injection
+  lint      [paths...] [--rules a,b] [--json] [--list-rules]
+                                        repo-invariant static analysis (see
+                                        src/analysis/README.md); exits non-zero
+                                        on any finding — CI gates on it
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
@@ -423,6 +428,47 @@ fn cmd_serve_net(a: &Args) -> Result<()> {
 /// `BENCH_net.json`.  Without `--target` it serves itself on a loopback
 /// port with a deliberately slow backend, so the overload behaviours
 /// (429 rate limiting, priority separation) are reproducible offline.
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "rules", takes_value: true, help: "comma-separated rule subset" },
+        OptSpec { name: "json", takes_value: false, help: "machine-readable report" },
+        OptSpec { name: "list-rules", takes_value: false, help: "print the rule catalog" },
+    ];
+    let a = Args::parse(argv, &specs)?;
+    if a.flag("list-rules") {
+        for (name, summary, _) in sonic::analysis::RULES {
+            println!("{name:<28} {summary}");
+        }
+        return Ok(());
+    }
+    let enabled: Vec<String> = match a.get("rules") {
+        Some(list) => list.split(',').map(|r| r.trim().to_string()).collect(),
+        None => Vec::new(),
+    };
+    for r in &enabled {
+        if !sonic::analysis::RULES.iter().any(|(n, _, _)| n == r) {
+            bail!("unknown rule `{r}` (try --list-rules)");
+        }
+    }
+    let roots: Vec<std::path::PathBuf> =
+        a.positional.iter().map(std::path::PathBuf::from).collect();
+    let findings = sonic::analysis::lint_paths(&roots, &enabled)
+        .map_err(|e| sonic::util::err::Error::msg(format!("lint scan failed: {e}")))?;
+    if a.flag("json") {
+        println!("{}", sonic::analysis::render_json(&findings));
+    } else {
+        print!("{}", sonic::analysis::render_text(&findings));
+    }
+    if findings.is_empty() {
+        if !a.flag("json") {
+            println!("sonic lint: clean");
+        }
+        Ok(())
+    } else {
+        bail!("sonic lint: {} finding(s)", findings.len());
+    }
+}
+
 fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let specs = specs_model();
     let a = Args::parse(argv, &specs)?;

@@ -75,6 +75,7 @@ use crate::sparsity::{BitmapMatrix, ColMatrix, CscMatrix, CsrMatrix, SparseVec};
 use crate::tensor::{BatchTensor, Tensor};
 use crate::util::err::Result;
 use crate::util::pool::{shared, Pool};
+use crate::util::sync::{LockExt, RwLockExt};
 use crate::util::rng::Rng;
 
 use super::{KernelChoice, KernelPolicy};
@@ -1290,7 +1291,8 @@ impl PlanExecutor {
             let t0 = Instant::now();
             let rows = if first { input } else { Rows::Flat(&*src) };
             let (z, e) = self.run_layer(layer, rows, dst, patches, convtmp, xt, yt, shard_zeros)?;
-            layer_ns[i] += t0.elapsed().as_nanos() as u64;
+            let step_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            layer_ns[i] = layer_ns[i].saturating_add(step_ns);
             layer_in_zeros[i] += z;
             layer_in_elems[i] += e;
             std::mem::swap(&mut src, &mut dst);
@@ -1564,7 +1566,7 @@ impl PlanBackend {
     /// Read access to the compiled executor (briefly blocks only a
     /// concurrent first-batch autotune).
     pub fn executor(&self) -> RwLockReadGuard<'_, PlanExecutor> {
-        self.exec.read().unwrap()
+        self.exec.read_or_recover()
     }
 
     /// Run the first-batch autotune pass if it is enabled and still
@@ -1574,7 +1576,7 @@ impl PlanBackend {
         if !self.autotune || rows.is_empty() || self.tuned.load(Ordering::Acquire) {
             return;
         }
-        let mut exec = self.exec.write().unwrap();
+        let mut exec = self.exec.write_or_recover();
         if self.tuned.swap(true, Ordering::AcqRel) {
             return; // another worker tuned while we waited for the lock
         }
@@ -1594,8 +1596,7 @@ impl PlanBackend {
     ) -> Result<R> {
         let mut scratch = self
             .scratches
-            .lock()
-            .unwrap()
+            .lock_or_recover()
             .pop()
             .unwrap_or_default();
         // This batch's counters only: the scratch's are zeroed per run so
@@ -1611,7 +1612,7 @@ impl PlanBackend {
             *v = 0;
         }
         let result = {
-            let exec = self.exec.read().unwrap();
+            let exec = self.exec.read_or_recover();
             f(&exec, &mut scratch)
         };
         if result.is_ok() {
@@ -1628,7 +1629,7 @@ impl PlanBackend {
                         .map(|(&z, &e)| density_from_counts(z, e).unwrap_or(f64::NAN)),
                 );
             }
-            let mut agg = self.agg.lock().unwrap();
+            let mut agg = self.agg.lock_or_recover();
             if agg.layer_ns.len() != scratch.layer_ns.len() {
                 agg.layer_ns.resize(scratch.layer_ns.len(), 0);
                 agg.in_zeros.resize(scratch.layer_ns.len(), 0);
@@ -1645,7 +1646,7 @@ impl PlanBackend {
             }
             agg.batches += 1;
         }
-        self.scratches.lock().unwrap().push(scratch);
+        self.scratches.lock_or_recover().push(scratch);
         result
     }
 }
@@ -1687,12 +1688,12 @@ impl InferenceBackend for PlanBackend {
     }
 
     fn input_len(&self) -> usize {
-        self.exec.read().unwrap().input_len()
+        self.exec.read_or_recover().input_len()
     }
 
     fn kernel_breakdown(&self) -> Option<Vec<LayerKernelStat>> {
-        let agg = self.agg.lock().unwrap();
-        Some(self.exec.read().unwrap().kernel_stats(
+        let agg = self.agg.lock_or_recover();
+        Some(self.exec.read_or_recover().kernel_stats(
             &agg.layer_ns,
             &agg.in_zeros,
             &agg.in_elems,

@@ -29,6 +29,7 @@ pub mod exec;
 pub use exec::{ConvExec, ExecScratch, FcExec, LayerExec, PlanBackend, PlanExecutor};
 
 use std::collections::HashMap;
+use crate::util::sync::LockExt;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::arch::{SonicConfig, Vdu};
@@ -809,7 +810,7 @@ fn cache() -> &'static PlanCache {
 /// the `Arc` so repeated requests never re-plan.
 pub fn cached(model: &ModelDesc, cfg: &SonicConfig) -> Arc<ModelPlan> {
     let key = (model_fingerprint(model), config_fingerprint(cfg));
-    if let Some(hit) = cache().lock().unwrap().get(&key) {
+    if let Some(hit) = cache().lock_or_recover().get(&key) {
         return Arc::clone(hit);
     }
     // Compile outside the lock: plans for large models take a while and
@@ -817,8 +818,7 @@ pub fn cached(model: &ModelDesc, cfg: &SonicConfig) -> Arc<ModelPlan> {
     let plan = Arc::new(ModelPlan::compile(model, cfg));
     Arc::clone(
         cache()
-            .lock()
-            .unwrap()
+            .lock_or_recover()
             .entry(key)
             .or_insert(plan),
     )
@@ -826,7 +826,7 @@ pub fn cached(model: &ModelDesc, cfg: &SonicConfig) -> Arc<ModelPlan> {
 
 /// Number of plans currently cached (test/diagnostic hook).
 pub fn cache_len() -> usize {
-    cache().lock().unwrap().len()
+    cache().lock_or_recover().len()
 }
 
 #[cfg(test)]

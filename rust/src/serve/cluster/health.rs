@@ -20,6 +20,7 @@
 //! in Degraded — a trickle of real probe inference — before the router
 //! puts it back in full rotation.
 
+use crate::util::sync::LockExt;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -107,12 +108,12 @@ impl HealthTracker {
     }
 
     pub fn health(&self) -> Health {
-        self.state.lock().unwrap().health
+        self.state.lock_or_recover().health
     }
 
     /// A try or probe succeeded on this replica.
     pub fn record_success(&self, policy: &HealthPolicy) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock_or_recover();
         st.consecutive_failures = 0;
         match st.health {
             Health::Healthy => {}
@@ -133,7 +134,7 @@ impl HealthTracker {
 
     /// A try or probe failed on this replica.
     pub fn record_failure(&self, policy: &HealthPolicy) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock_or_recover();
         st.consecutive_failures = st.consecutive_failures.saturating_add(1);
         st.rewarm_streak = 0;
         let next = if st.consecutive_failures >= policy.dead_after {
@@ -168,7 +169,7 @@ impl HealthTracker {
     /// `(health, time_in_degraded, time_in_dead, transitions)`, with the
     /// open interval of the current non-Healthy state included.
     pub fn snapshot(&self) -> (Health, Duration, Duration, u64) {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock_or_recover();
         let open = st.since.elapsed();
         let (mut deg, mut dead) = (st.time_degraded, st.time_dead);
         match st.health {

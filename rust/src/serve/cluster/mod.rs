@@ -50,6 +50,7 @@ pub mod chaos;
 pub mod health;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{CondvarExt, LockExt};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -178,7 +179,7 @@ impl CSlot {
     }
 
     fn fill(&self, r: std::result::Result<Completion, String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock_or_recover();
         if matches!(*st, CSlotState::Pending) {
             *st = match r {
                 Ok(c) => CSlotState::Done(c),
@@ -212,7 +213,7 @@ impl ClusterTicket {
     /// [`Outcome::ReplicaFailed`]).  Errors only on cluster shutdown
     /// racing the request.
     pub fn wait(&self) -> Result<Completion> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock_or_recover();
         loop {
             match &*st {
                 CSlotState::Done(c) => return Ok(c.clone()),
@@ -221,7 +222,7 @@ impl ClusterTicket {
                 }
                 CSlotState::Pending => {}
             }
-            st = self.slot.cv.wait(st).unwrap();
+            st = self.slot.cv.wait_or_recover(st);
         }
     }
 
@@ -229,7 +230,7 @@ impl ClusterTicket {
     /// request is still in flight (the ticket stays resolvable).
     pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<Completion>> {
         let deadline = Instant::now().checked_add(timeout);
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock_or_recover();
         loop {
             match &*st {
                 CSlotState::Done(c) => return Ok(Some(c.clone())),
@@ -239,20 +240,20 @@ impl ClusterTicket {
                 CSlotState::Pending => {}
             }
             let Some(deadline) = deadline else {
-                st = self.slot.cv.wait(st).unwrap();
+                st = self.slot.cv.wait_or_recover(st);
                 continue;
             };
             let now = Instant::now();
             if now >= deadline {
                 return Ok(None);
             }
-            st = self.slot.cv.wait_timeout(st, deadline - now).unwrap().0;
+            st = self.slot.cv.wait_timeout_or_recover(st, deadline - now).0;
         }
     }
 
     /// Non-blocking poll: `Ok(None)` while still in flight.
     pub fn try_wait(&self) -> Result<Option<Completion>> {
-        let st = self.slot.state.lock().unwrap();
+        let st = self.slot.state.lock_or_recover();
         match &*st {
             CSlotState::Pending => Ok(None),
             CSlotState::Done(c) => Ok(Some(c.clone())),
@@ -372,7 +373,7 @@ impl Ctx {
         }
         // power of two choices: two independent picks, lower load wins
         let (a, b) = {
-            let mut rng = self.rng.lock().unwrap();
+            let mut rng = self.rng.lock_or_recover();
             (pool[rng.range(0, pool.len())], pool[rng.range(0, pool.len())])
         };
         let load = |i: usize| self.replicas[i].inflight.load(Ordering::Relaxed);
@@ -716,7 +717,7 @@ impl ClusterEngine {
                         Ok(Some(t)) => {
                             r.inflight.fetch_add(1, Ordering::Relaxed);
                             r.tries.fetch_add(1, Ordering::Relaxed);
-                            self.ctx.counters.lock().unwrap().tries += 1;
+                            self.ctx.counters.lock_or_recover().tries += 1;
                             Flight {
                                 id,
                                 slot,
@@ -746,7 +747,7 @@ impl ClusterEngine {
                             r.tracker.record_failure(&self.ctx.health);
                             r.tries.fetch_add(1, Ordering::Relaxed);
                             r.failures.fetch_add(1, Ordering::Relaxed);
-                            self.ctx.counters.lock().unwrap().tries += 1;
+                            self.ctx.counters.lock_or_recover().tries += 1;
                             Flight {
                                 id,
                                 slot,
@@ -768,7 +769,7 @@ impl ClusterEngine {
                     }
                 }
             };
-            self.ctx.state.lock().unwrap().flights.push(flight);
+            self.ctx.state.lock_or_recover().flights.push(flight);
             self.ctx.wake.notify_all();
             return Ok(Some(ticket));
         }
@@ -779,10 +780,9 @@ impl ClusterEngine {
     pub fn metrics(&self) -> ClusterMetrics {
         let wall = self
             .stopped_elapsed
-            .lock()
-            .unwrap()
+            .lock_or_recover()
             .unwrap_or_else(|| self.ctx.epoch.elapsed());
-        let c = self.ctx.counters.lock().unwrap().clone();
+        let c = self.ctx.counters.lock_or_recover().clone();
         let mut serve = ServeMetrics::default();
         let mut replicas = Vec::with_capacity(self.ctx.replicas.len());
         for r in &self.ctx.replicas {
@@ -825,17 +825,17 @@ impl ClusterEngine {
     /// supervisor and heartbeat threads, then drain every replica
     /// engine.  Idempotent.
     pub fn shutdown(&self) {
-        let _g = self.shutdown_lock.lock().unwrap();
+        let _g = self.shutdown_lock.lock_or_recover();
         if !self.ctx.stopping.swap(true, Ordering::SeqCst) {
             self.ctx.wake.notify_all();
-            let threads: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
+            let threads: Vec<JoinHandle<()>> = self.threads.lock_or_recover().drain(..).collect();
             for h in threads {
                 let _ = h.join();
             }
             for r in &self.ctx.replicas {
                 r.engine.shutdown();
             }
-            *self.stopped_elapsed.lock().unwrap() = Some(self.ctx.epoch.elapsed());
+            *self.stopped_elapsed.lock_or_recover() = Some(self.ctx.epoch.elapsed());
         }
     }
 }
@@ -852,7 +852,7 @@ impl Drop for ClusterEngine {
 /// outstanding try, abandons tries past their per-try deadline, and
 /// re-queues or resolves flights.  One thread per cluster.
 fn supervisor_loop(ctx: Arc<Ctx>) {
-    let mut guard = ctx.state.lock().unwrap();
+    let mut guard = ctx.state.lock_or_recover();
     loop {
         let stopping = ctx.stopping.load(Ordering::SeqCst);
         // chaos timeline: flip the fault switches whose time has come
@@ -893,7 +893,7 @@ fn supervisor_loop(ctx: Arc<Ctx>) {
                 .saturating_sub(ctx.epoch.elapsed());
             sleep = sleep.min(until.max(Duration::from_micros(50)));
         }
-        guard = ctx.wake.wait_timeout(guard, sleep).unwrap().0;
+        guard = ctx.wake.wait_timeout_or_recover(guard, sleep).0;
     }
 }
 
@@ -919,7 +919,7 @@ fn step_flight(ctx: &Ctx, f: &mut Flight, now: Instant, draining: bool) -> bool 
                     let mut c = c;
                     c.id = f.id;
                     c.wall_latency = f.submitted.elapsed();
-                    let mut counters = ctx.counters.lock().unwrap();
+                    let mut counters = ctx.counters.lock_or_recover();
                     match c.outcome {
                         Outcome::Served => {
                             counters.completed += 1;
@@ -989,7 +989,7 @@ fn retry_or_fail(ctx: &Ctx, f: &mut Flight, failed_on: usize, now: Instant, drai
         return true;
     }
     if f.attempt >= ctx.retry.max_tries {
-        ctx.counters.lock().unwrap().replica_failed += 1;
+        ctx.counters.lock_or_recover().replica_failed += 1;
         f.slot.fill(Ok(Completion::replica_failed(
             f.id,
             f.opts.priority,
@@ -1018,7 +1018,7 @@ fn retry_or_fail(ctx: &Ctx, f: &mut Flight, failed_on: usize, now: Instant, drai
 fn start_retry(ctx: &Ctx, f: &mut Flight, last: usize, now: Instant) -> bool {
     f.attempt += 1;
     {
-        let mut c = ctx.counters.lock().unwrap();
+        let mut c = ctx.counters.lock_or_recover();
         c.retries += 1;
     }
     let exclude = if last == usize::MAX { None } else { Some(last) };
@@ -1031,7 +1031,7 @@ fn start_retry(ctx: &Ctx, f: &mut Flight, last: usize, now: Instant) -> bool {
             let r = &ctx.replicas[idx];
             r.tries.fetch_add(1, Ordering::Relaxed);
             {
-                let mut c = ctx.counters.lock().unwrap();
+                let mut c = ctx.counters.lock_or_recover();
                 c.tries += 1;
                 if exclude.is_some() && idx != last {
                     c.failovers += 1;
@@ -1066,7 +1066,7 @@ fn start_retry(ctx: &Ctx, f: &mut Flight, last: usize, now: Instant) -> bool {
 }
 
 fn resolve_deadline(ctx: &Ctx, f: &Flight) {
-    ctx.counters.lock().unwrap().deadline_exceeded += 1;
+    ctx.counters.lock_or_recover().deadline_exceeded += 1;
     f.slot.fill(Ok(Completion::deadline_exceeded(
         f.id,
         f.opts.priority,

@@ -21,6 +21,7 @@ use crate::model::ModelDesc;
 use crate::plan::{ModelPlan, PlanBackend};
 use crate::runtime::PjrtBackend;
 use crate::util::err::{Context, Error, Result};
+use crate::util::sync::{CondvarExt, LockExt};
 
 use super::metrics::{EngineMetrics, LaneHistograms, LaneReport, ModelMetrics};
 use super::router::{
@@ -98,7 +99,7 @@ impl Slot {
     }
 
     fn fill(&self, r: Result<Completion, String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock_or_recover();
         if matches!(*st, SlotState::Pending) {
             *st = match r {
                 Ok(c) => SlotState::Done(c),
@@ -124,7 +125,7 @@ impl Ticket {
     /// Errors if the backend failed the batch or the engine shut down
     /// before serving it.
     pub fn wait(&self) -> Result<Completion> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock_or_recover();
         loop {
             match &*st {
                 SlotState::Done(c) => return Ok(c.clone()),
@@ -133,7 +134,7 @@ impl Ticket {
                 }
                 SlotState::Pending => {}
             }
-            st = self.slot.cv.wait(st).unwrap();
+            st = self.slot.cv.wait_or_recover(st);
         }
     }
 
@@ -145,7 +146,7 @@ impl Ticket {
     /// socket thread forever.
     pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<Completion>> {
         let deadline = Instant::now().checked_add(timeout);
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock_or_recover();
         loop {
             match &*st {
                 SlotState::Done(c) => return Ok(Some(c.clone())),
@@ -156,20 +157,20 @@ impl Ticket {
             }
             let Some(deadline) = deadline else {
                 // timeout overflows Instant: effectively unbounded
-                st = self.slot.cv.wait(st).unwrap();
+                st = self.slot.cv.wait_or_recover(st);
                 continue;
             };
             let now = Instant::now();
             if now >= deadline {
                 return Ok(None);
             }
-            st = self.slot.cv.wait_timeout(st, deadline - now).unwrap().0;
+            st = self.slot.cv.wait_timeout_or_recover(st, deadline - now).0;
         }
     }
 
     /// Non-blocking poll: `Ok(None)` while still in flight.
     pub fn try_wait(&self) -> Result<Option<Completion>> {
-        let st = self.slot.state.lock().unwrap();
+        let st = self.slot.state.lock_or_recover();
         match &*st {
             SlotState::Pending => Ok(None),
             SlotState::Done(c) => Ok(Some(c.clone())),
@@ -186,7 +187,7 @@ struct ModelShared {
 
 impl ModelShared {
     fn complete(&self, id: u64, r: Result<Completion, String>) {
-        let slot = self.slots.lock().unwrap().remove(&id);
+        let slot = self.slots.lock_or_recover().remove(&id);
         if let Some(slot) = slot {
             slot.fill(r);
         }
@@ -316,8 +317,7 @@ impl Engine {
         entry
             .shared
             .slots
-            .lock()
-            .unwrap()
+            .lock_or_recover()
             .insert(id, Arc::clone(&slot));
         match entry.router.submit_with_id(id, input, opts, block) {
             Ok(true) => {
@@ -327,7 +327,7 @@ impl Engine {
                 // shutdown.  If a worker already popped it, it will be
                 // executed and the ticket resolves normally.
                 if self.stopping.load(Ordering::SeqCst) && entry.router.retract(id) {
-                    entry.shared.slots.lock().unwrap().remove(&id);
+                    entry.shared.slots.lock_or_recover().remove(&id);
                     bail!("engine is shut down");
                 }
                 self.started.get_or_init(Instant::now);
@@ -338,11 +338,11 @@ impl Engine {
                 }))
             }
             Ok(false) => {
-                entry.shared.slots.lock().unwrap().remove(&id);
+                entry.shared.slots.lock_or_recover().remove(&id);
                 Ok(None)
             }
             Err(e) => {
-                entry.shared.slots.lock().unwrap().remove(&id);
+                entry.shared.slots.lock_or_recover().remove(&id);
                 Err(e)
             }
         }
@@ -382,15 +382,14 @@ impl Engine {
     pub fn metrics(&self) -> EngineMetrics {
         let elapsed = self
             .stopped_elapsed
-            .lock()
-            .unwrap()
+            .lock_or_recover()
             .unwrap_or_else(|| self.serving_elapsed());
         let mut models: Vec<ModelMetrics> = self
             .models
             .iter()
             .map(|(name, entry)| {
                 let (mut serve, hists) = {
-                    let st = entry.shared.stats.lock().unwrap();
+                    let st = entry.shared.stats.lock_or_recover();
                     (st.0.clone(), st.1.clone())
                 };
                 serve.wall_elapsed = elapsed;
@@ -452,23 +451,23 @@ impl Engine {
         // Hold the lock for the whole drain: a concurrent second caller
         // blocks here until shutdown has fully completed, then sees the
         // stopping flag and returns with the metrics frozen.
-        let _guard = self.shutdown_lock.lock().unwrap();
+        let _guard = self.shutdown_lock.lock_or_recover();
         if self.stopping.swap(true, Ordering::SeqCst) {
             return; // another caller already completed shutdown
         }
         for entry in self.models.values() {
             entry.router.close();
         }
-        let workers: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        let workers: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock_or_recover());
         for h in workers {
             let _ = h.join();
         }
-        *self.stopped_elapsed.lock().unwrap() = Some(self.serving_elapsed());
+        *self.stopped_elapsed.lock_or_recover() = Some(self.serving_elapsed());
         // Any slot still pending was never picked up (e.g. submitted by a
         // thread that slipped past the drain); fail it so wait() returns.
         for entry in self.models.values() {
             let slots: Vec<Arc<Slot>> =
-                entry.shared.slots.lock().unwrap().drain().map(|(_, s)| s).collect();
+                entry.shared.slots.lock_or_recover().drain().map(|(_, s)| s).collect();
             for slot in slots {
                 slot.fill(Err("engine shut down before request was served".into()));
             }
@@ -501,7 +500,7 @@ fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<Atom
                 lane.promoted += n;
             }
             let shed = Router::shed_completions(&popped.shed, &mut qos);
-            shared.stats.lock().unwrap().0.merge(&qos);
+            shared.stats.lock_or_recover().0.merge(&qos);
             for c in shed {
                 let id = c.id;
                 shared.complete(id, Ok(c));
@@ -527,7 +526,7 @@ fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<Atom
         match result {
             Ok(Ok(completions)) => {
                 {
-                    let mut st = shared.stats.lock().unwrap();
+                    let mut st = shared.stats.lock_or_recover();
                     st.0.merge(&local);
                     for c in &completions {
                         st.1.record(c.priority, c.wall_latency);

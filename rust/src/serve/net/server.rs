@@ -16,6 +16,7 @@ use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{CondvarExt, LockExt};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -200,7 +201,7 @@ struct ConnGuard(Arc<Shared>);
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        let mut n = self.0.live_conns.lock().unwrap();
+        let mut n = self.0.live_conns.lock_or_recover();
         *n = n.saturating_sub(1);
         self.0.conn_done.notify_all();
     }
@@ -281,13 +282,13 @@ impl NetServer {
             .tenants
             .tenants()
             .iter()
-            .map(|t| (t.spec.name.clone(), t.counters.lock().unwrap().clone()))
+            .map(|t| (t.spec.name.clone(), t.counters.lock_or_recover().clone()))
             .collect()
     }
 
     /// Gateway-level counter snapshot.
     pub fn gateway_counters(&self) -> GatewayCounters {
-        self.shared.gateway.lock().unwrap().clone()
+        self.shared.gateway.lock_or_recover().clone()
     }
 
     /// True once `POST /v1/admin/drain` has been accepted.  The endpoint
@@ -308,17 +309,17 @@ impl NetServer {
         // Wake the accept loop: it blocks in accept(), so poke it with a
         // throwaway connection, then join and drop the listener so the OS
         // refuses new connections from here on.
-        if let Some(handle) = self.accept_thread.lock().unwrap().take() {
+        if let Some(handle) = self.accept_thread.lock_or_recover().take() {
             let _ = TcpStream::connect_timeout(&self.connect_addr(), Duration::from_secs(1));
             let _ = handle.join();
         }
-        drop(self.listener.lock().unwrap().take());
+        drop(self.listener.lock_or_recover().take());
         // Wait for live connections: handlers observe the stop flag within
         // poll_interval, finish their pending tickets, and drop their
         // ConnGuard.
         let deadline = Instant::now() + self.shared.cfg.drain_timeout;
         let mut drained = true;
-        let mut n = self.shared.live_conns.lock().unwrap();
+        let mut n = self.shared.live_conns.lock_or_recover();
         while *n > 0 {
             let now = Instant::now();
             if now >= deadline {
@@ -328,8 +329,7 @@ impl NetServer {
             let (guard, _) = self
                 .shared
                 .conn_done
-                .wait_timeout(n, deadline - now)
-                .unwrap();
+                .wait_timeout_or_recover(n, deadline - now);
             n = guard;
         }
         drop(n);
@@ -360,8 +360,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, pool: Arc<Pool>) {
             drop(stream);
             return;
         }
-        shared.gateway.lock().unwrap().connections += 1;
-        *shared.live_conns.lock().unwrap() += 1;
+        shared.gateway.lock_or_recover().connections += 1;
+        *shared.live_conns.lock_or_recover() += 1;
         let guard = ConnGuard(Arc::clone(&shared));
         let sh = Arc::clone(&shared);
         let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
@@ -494,12 +494,12 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: Co
                 match parse_frame(&conn.buf) {
                     Parsed::Complete(frame, used) => {
                         conn.consume(used);
-                        shared.gateway.lock().unwrap().frames += 1;
+                        shared.gateway.lock_or_recover().frames += 1;
                         pending.push_back(process_framed(&shared, frame));
                     }
                     Parsed::Incomplete => break,
                     Parsed::Malformed(why) => {
-                        shared.gateway.lock().unwrap().malformed += 1;
+                        shared.gateway.lock_or_recover().malformed += 1;
                         pending.push_back(Outstanding::Ready {
                             status: 400,
                             body: obj(vec![("error", s(&why))]),
@@ -512,7 +512,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: Co
                 match parse_http_request(&conn.buf) {
                     Parsed::Complete(req, used) => {
                         conn.consume(used);
-                        shared.gateway.lock().unwrap().http_requests += 1;
+                        shared.gateway.lock_or_recover().http_requests += 1;
                         if !req.keep_alive {
                             closing = true;
                         }
@@ -520,7 +520,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: Co
                     }
                     Parsed::Incomplete => break,
                     Parsed::Malformed(why) => {
-                        shared.gateway.lock().unwrap().malformed += 1;
+                        shared.gateway.lock_or_recover().malformed += 1;
                         pending.push_back(Outstanding::Ready {
                             status: 400,
                             body: obj(vec![("error", s(&why))]),
@@ -536,7 +536,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, _conn_id: u64, _guard: Co
         if let Some(front) = pending.pop_front() {
             let (status, body, floats) = resolve(&shared, front);
             {
-                let mut g = shared.gateway.lock().unwrap();
+                let mut g = shared.gateway.lock_or_recover();
                 match status {
                     200..=299 => g.resp_2xx += 1,
                     400..=499 => g.resp_4xx += 1,
@@ -586,7 +586,7 @@ fn abandon(pending: &VecDeque<Outstanding>) {
     for p in pending {
         if let Outstanding::Waiting { tenant, .. } = p {
             tenant.release();
-            tenant.counters.lock().unwrap().errors += 1;
+            tenant.counters.lock_or_recover().errors += 1;
         }
     }
 }
@@ -618,8 +618,7 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
         Ok(Some(c)) if c.outcome == Outcome::Served => {
             tenant
                 .counters
-                .lock()
-                .unwrap()
+                .lock_or_recover()
                 .record_served(admitted.elapsed());
             tenant.release();
             let mut pairs = base(200.0, id_echo);
@@ -633,7 +632,7 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
         Ok(Some(c)) if c.outcome == Outcome::ReplicaFailed => {
             // the cluster exhausted its retry budget: a bounded,
             // first-class 502 — the client can retry, nothing hangs
-            let mut g = tenant.counters.lock().unwrap();
+            let mut g = tenant.counters.lock_or_recover();
             g.replica_failed += 1;
             drop(g);
             tenant.release();
@@ -644,7 +643,7 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
         }
         Ok(Some(c)) => {
             // deadline-shed: first-class 504, never an error or a hang
-            let mut g = tenant.counters.lock().unwrap();
+            let mut g = tenant.counters.lock_or_recover();
             g.deadline_shed += 1;
             drop(g);
             tenant.release();
@@ -656,7 +655,7 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
         Ok(None) => {
             // timed out waiting: the ticket stays resolvable, the client
             // gets a bounded answer instead of a hung socket
-            tenant.counters.lock().unwrap().errors += 1;
+            tenant.counters.lock_or_recover().errors += 1;
             tenant.release();
             let mut pairs = base(500.0, id_echo);
             pairs.push(("error", s("response timed out")));
@@ -665,7 +664,7 @@ fn resolve(shared: &Shared, o: Outstanding) -> (u16, Json, Vec<f32>) {
         Err(e) => {
             let msg = e.to_string();
             let status = if msg.contains("shut down") { 503 } else { 500 };
-            let mut g = tenant.counters.lock().unwrap();
+            let mut g = tenant.counters.lock_or_recover();
             if status == 503 {
                 g.rejected_busy += 1;
             } else {
@@ -718,27 +717,27 @@ fn admit_and_submit(shared: &Shared, r: InferReq) -> Outstanding {
         }
     };
     let Some(key) = r.api_key.as_deref() else {
-        shared.gateway.lock().unwrap().auth_failures += 1;
+        shared.gateway.lock_or_recover().auth_failures += 1;
         return ready(401, vec![("error", s("missing x-api-key"))]);
     };
     let Some(tenant) = shared.tenants.authenticate(key) else {
-        shared.gateway.lock().unwrap().auth_failures += 1;
+        shared.gateway.lock_or_recover().auth_failures += 1;
         return ready(401, vec![("error", s("unknown api key"))]);
     };
-    tenant.counters.lock().unwrap().submitted += 1;
+    tenant.counters.lock_or_recover().submitted += 1;
     if shared.draining() {
-        tenant.counters.lock().unwrap().rejected_busy += 1;
+        tenant.counters.lock_or_recover().rejected_busy += 1;
         return ready(503, vec![("error", s("draining"))]);
     }
     let expected = match shared.engine.input_len(&r.model) {
         Ok(n) => n,
         Err(e) => {
-            tenant.counters.lock().unwrap().errors += 1;
+            tenant.counters.lock_or_recover().errors += 1;
             return ready(404, vec![("error", s(&e.to_string()))]);
         }
     };
     if r.input.len() != expected {
-        tenant.counters.lock().unwrap().errors += 1;
+        tenant.counters.lock_or_recover().errors += 1;
         return ready(
             400,
             vec![(
@@ -756,7 +755,7 @@ fn admit_and_submit(shared: &Shared, r: InferReq) -> Outstanding {
         Some(p) => match Priority::parse(p) {
             Ok(p) => p,
             Err(e) => {
-                tenant.counters.lock().unwrap().errors += 1;
+                tenant.counters.lock_or_recover().errors += 1;
                 return ready(400, vec![("error", s(&e.to_string()))]);
             }
         },
@@ -771,11 +770,11 @@ fn admit_and_submit(shared: &Shared, r: InferReq) -> Outstanding {
     let now = Instant::now();
     match tenant.admit(now) {
         Err(Refusal::RateLimited) => {
-            tenant.counters.lock().unwrap().rate_limited += 1;
+            tenant.counters.lock_or_recover().rate_limited += 1;
             ready(429, vec![("error", s("rate limited"))])
         }
         Err(Refusal::OverShare) => {
-            tenant.counters.lock().unwrap().over_share += 1;
+            tenant.counters.lock_or_recover().over_share += 1;
             ready(429, vec![("error", s("over fair share"))])
         }
         Ok(()) => match shared.engine.try_submit_opts(&r.model, r.input, opts) {
@@ -787,14 +786,14 @@ fn admit_and_submit(shared: &Shared, r: InferReq) -> Outstanding {
                 model: r.model,
             },
             Ok(None) => {
-                tenant.counters.lock().unwrap().rejected_busy += 1;
+                tenant.counters.lock_or_recover().rejected_busy += 1;
                 tenant.release();
                 ready(503, vec![("error", s("queue full"))])
             }
             Err(e) => {
                 let msg = e.to_string();
                 let status = if msg.contains("shut down") { 503 } else { 500 };
-                let mut g = tenant.counters.lock().unwrap();
+                let mut g = tenant.counters.lock_or_recover();
                 if status == 503 {
                     g.rejected_busy += 1;
                 } else {
@@ -853,7 +852,7 @@ fn process_http(shared: &Shared, req: Request) -> Outstanding {
                 .header(H_API_KEY)
                 .and_then(|k| shared.tenants.authenticate(k))
             else {
-                shared.gateway.lock().unwrap().auth_failures += 1;
+                shared.gateway.lock_or_recover().auth_failures += 1;
                 return ready(401, obj(vec![("error", s("missing or unknown x-api-key"))]));
             };
             if tenant.spec.max_priority != Priority::High {
@@ -943,7 +942,7 @@ fn stats_json(shared: &Shared) -> Json {
         .tenants()
         .iter()
         .map(|t| {
-            let c = t.counters.lock().unwrap();
+            let c = t.counters.lock_or_recover();
             (
                 t.spec.name.clone(),
                 obj(vec![
@@ -965,7 +964,7 @@ fn stats_json(shared: &Shared) -> Json {
         })
         .collect();
     let tenant_obj = Json::Obj(snapshots.into_iter().collect());
-    let g = shared.gateway.lock().unwrap().clone();
+    let g = shared.gateway.lock_or_recover().clone();
     pairs.push(("draining", Json::Bool(shared.draining())));
     pairs.push(("tenants", tenant_obj));
     pairs.push((

@@ -6,6 +6,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::LockExt;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -177,7 +178,7 @@ impl Tenant {
     /// success the tenant's in-flight count is incremented — the caller
     /// must pair it with [`Tenant::release`] once the response is written.
     pub fn admit(&self, now: Instant) -> Result<(), Refusal> {
-        if !self.bucket.lock().unwrap().try_take(now) {
+        if !self.bucket.lock_or_recover().try_take(now) {
             return Err(Refusal::RateLimited);
         }
         // optimistic increment; back out when over the share

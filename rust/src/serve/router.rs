@@ -29,6 +29,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{CondvarExt, LockExt};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -592,7 +593,7 @@ impl Router {
         // checked_add: a Duration::MAX deadline must mean "never", not
         // an Instant-overflow panic on the submit path.
         let deadline = opts.deadline.and_then(|d| submitted.checked_add(d));
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock_or_recover();
         while q.len >= self.cfg.queue_cap {
             // Re-check on every wake: after close() no worker will ever
             // pop again, so a submitter blocked on a full queue must bail
@@ -603,7 +604,7 @@ impl Router {
             if !block {
                 return Ok(false);
             }
-            q = self.notify.wait(q).unwrap();
+            q = self.notify.wait_or_recover(q);
         }
         // The arrival-rate EWMA reads *admission* gaps (post-wait): it
         // paces the batcher by the stream it can actually drain.
@@ -620,14 +621,14 @@ impl Router {
     }
 
     pub(crate) fn queue_depth(&self) -> usize {
-        self.queue.lock().unwrap().len
+        self.queue.lock_or_recover().len
     }
 
     /// Remove a still-queued request (shutdown racing a submit).  `false`
     /// means a worker already popped it — it will be executed (or shed)
     /// and its completion slot filled normally.
     pub(crate) fn retract(&self, id: u64) -> bool {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock_or_recover();
         if q.remove(id) {
             self.notify.notify_all();
             true
@@ -641,7 +642,7 @@ impl Router {
     /// drain whatever is left without straggler waits.
     pub(crate) fn close(&self) {
         self.closed.store(true, Ordering::SeqCst);
-        let _q = self.queue.lock().unwrap();
+        let _q = self.queue.lock_or_recover();
         self.notify.notify_all();
     }
 
@@ -681,9 +682,9 @@ impl Router {
     /// once the queue is drained.
     pub(crate) fn pop_batch(&self) -> Popped {
         let mut out = Popped::default();
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.queue.lock_or_recover();
         while q.len == 0 && !self.closed.load(Ordering::SeqCst) {
-            q = self.notify.wait(q).unwrap();
+            q = self.notify.wait_or_recover(q);
         }
         let deadline = Instant::now() + self.window_for(&q);
         loop {
@@ -714,8 +715,7 @@ impl Router {
             }
             let (guard, timeout) = self
                 .notify
-                .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
-                .unwrap();
+                .wait_timeout_or_recover(q, deadline.saturating_duration_since(Instant::now()));
             q = guard;
             if timeout.timed_out() && q.len == 0 {
                 break;
@@ -943,6 +943,28 @@ mod tests {
         )
     }
 
+    /// The lane mutex survives a holder panicking mid-acquisition: a
+    /// thread poisons `queue`, and submit/drain keep working through
+    /// `lock_or_recover` — the replica-level behavior the poison-free
+    /// locking sweep exists for.
+    #[test]
+    fn poisoned_lane_lock_recovers() {
+        let r = router(4);
+        let r2 = Arc::clone(&r);
+        let _ = std::thread::spawn(move || {
+            let _q = r2.queue.lock_or_recover();
+            panic!("poison the lane lock while holding it");
+        })
+        .join();
+        assert!(r.queue.is_poisoned(), "holder panic should poison the lanes");
+        r.submit_with_id(1, vec![0.5; 784], dflt(), true).unwrap();
+        assert_eq!(r.queue_depth(), 1);
+        let mut m = ServeMetrics::default();
+        let done = r.drain_batch(&mut m).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, Outcome::Served);
+    }
+
     #[test]
     fn single_request_round_trip() {
         let r = router(4);
@@ -1159,12 +1181,12 @@ mod tests {
         let r = router(4);
         {
             // no arrival history: fixed window
-            let q = r.queue.lock().unwrap();
+            let q = r.queue.lock_or_recover();
             assert_eq!(r.window_for(&q), r.cfg.batch_window);
         }
         {
             // arrivals slower than the window: immediate drain
-            let mut q = r.queue.lock().unwrap();
+            let mut q = r.queue.lock_or_recover();
             q.ewma_gap_ns = Some(1e9); // 1s gaps
             assert_eq!(r.window_for(&q), Duration::ZERO);
             // sustained pressure: wait ~gap * need, capped at the window
@@ -1198,7 +1220,7 @@ mod tests {
                     ..ServeConfig::default()
                 },
             );
-            let mut q = fixed.queue.lock().unwrap();
+            let mut q = fixed.queue.lock_or_recover();
             q.ewma_gap_ns = Some(1e9);
             assert_eq!(fixed.window_for(&q), fixed.cfg.batch_window);
         }

@@ -1,7 +1,7 @@
 //! Offline substrates for crates unavailable in this environment
 //! (DESIGN.md §2): JSON, RNG, CLI parsing, bench harness, property testing,
-//! the thread pool ([`pool`]), and the `anyhow`-style error substrate
-//! ([`err`]).
+//! the thread pool ([`pool`]), poison-recovering lock acquisition
+//! ([`sync`]), and the `anyhow`-style error substrate ([`err`]).
 
 pub mod bench;
 pub mod cli;
@@ -10,6 +10,7 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 pub use pool::Pool;
 

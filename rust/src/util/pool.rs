@@ -12,6 +12,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use crate::util::sync::{CondvarExt, LockExt};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -41,7 +42,7 @@ impl Pool {
                 let inf = Arc::clone(&in_flight);
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
+                        let guard = rx.lock_or_recover();
                         guard.recv()
                     };
                     match job {
@@ -187,7 +188,7 @@ impl Pool {
                 if std::thread::panicking() {
                     self.0.panicked.store(true, Ordering::SeqCst);
                 }
-                let mut left = self.0.left.lock().unwrap();
+                let mut left = self.0.left.lock_or_recover();
                 *left -= 1;
                 self.0.done.notify_all();
             }
@@ -214,9 +215,9 @@ impl Pool {
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(refused));
             }
         }
-        let mut left = state.left.lock().unwrap();
+        let mut left = state.left.lock_or_recover();
         while *left > 0 {
-            left = state.done.wait(left).unwrap();
+            left = state.done.wait_or_recover(left);
         }
         drop(left);
         if state.panicked.load(Ordering::SeqCst) {
@@ -272,11 +273,11 @@ mod tests {
     fn try_submit_reports_saturation() {
         let pool = Pool::new(1, 1);
         let gate = Arc::new(Mutex::new(()));
-        let guard = gate.lock().unwrap();
+        let guard = gate.lock_or_recover();
         // first job blocks on the gate; queue then fills
         let g2 = Arc::clone(&gate);
         assert!(pool.submit(move || {
-            let _guard = g2.lock().unwrap();
+            let _guard = g2.lock_or_recover();
         }));
         // Fill the 1-slot queue (may need a moment for the worker to pick
         // up the first job).
@@ -335,6 +336,31 @@ mod tests {
             }
             pool.drain();
             assert_eq!(counter.load(Ordering::SeqCst), 8);
+        });
+    }
+
+    #[test]
+    fn job_panicking_under_a_lock_poisons_it_but_later_jobs_recover() {
+        with_silenced_panics(|| {
+            let pool = Pool::new(2, 8);
+            let gate = Arc::new(Mutex::new(0u64));
+            let g = Arc::clone(&gate);
+            assert!(pool.submit(move || {
+                let mut held = g.lock_or_recover();
+                *held += 1;
+                panic!("job blew up holding the gate");
+            }));
+            pool.drain();
+            assert!(gate.is_poisoned(), "panic under the lock should poison it");
+
+            // Later jobs take the same mutex through lock_or_recover and
+            // see the pre-panic state — the counter invariant survives.
+            let g = Arc::clone(&gate);
+            assert!(pool.submit(move || {
+                *g.lock_or_recover() += 1;
+            }));
+            pool.drain();
+            assert_eq!(*gate.lock_or_recover(), 2);
         });
     }
 

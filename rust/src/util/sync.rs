@@ -1,0 +1,155 @@
+//! Poison-recovering lock acquisition.
+//!
+//! Every `Mutex`/`RwLock` in this crate guards either plain counters or a
+//! queue whose invariants survive a panic mid-critical-section: a batch
+//! that was half-pushed is still a well-formed queue, a counter bumped
+//! before a panic is merely off by one sample.  So a *poisoned* lock —
+//! some thread panicked while holding it — carries data that is still
+//! safe to use, and propagating the `PoisonError` (what `.unwrap()` does)
+//! turns one panicking worker into a cascade that takes down every
+//! thread touching the same lock.  Under `serve::cluster::chaos` fault
+//! injection that cascade is the difference between "one request failed"
+//! and "the replica died".
+//!
+//! These extension traits make the recovering acquisition as terse as
+//! the panicking one, so call sites read `q.lock_or_recover()` instead
+//! of `q.lock().unwrap()`.  The `no-lock-unwrap` rule in
+//! [`crate::analysis`] enforces that the rest of the crate goes through
+//! here; this file is the one place allowed to touch the raw API.
+//!
+//! **When recovery would be wrong:** if a guarded structure had a
+//! multi-step invariant (e.g. two containers that must stay in sync,
+//! mutated one after the other), taking data from a poisoned guard could
+//! observe the torn intermediate state.  No lock in this crate guards
+//! such a structure — keep it that way, or give the offending lock a
+//! justified allow-pragma for `no-lock-unwrap` and handle the poison
+//! explicitly.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Poison-recovering [`Mutex`] acquisition.
+pub trait LockExt<T> {
+    /// Acquire the mutex; on poison, take the data anyway.
+    fn lock_or_recover(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn lock_or_recover(&self) -> MutexGuard<'_, T> {
+        // sonic-lint: allow(no-lock-unwrap): this is the recovery wrapper itself
+        self.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Poison-recovering [`RwLock`] acquisition.
+pub trait RwLockExt<T> {
+    /// Acquire a read guard; on poison, read the data anyway.
+    fn read_or_recover(&self) -> RwLockReadGuard<'_, T>;
+    /// Acquire a write guard; on poison, take the data anyway.
+    fn write_or_recover(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn read_or_recover(&self) -> RwLockReadGuard<'_, T> {
+        // sonic-lint: allow(no-lock-unwrap): this is the recovery wrapper itself
+        self.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn write_or_recover(&self) -> RwLockWriteGuard<'_, T> {
+        // sonic-lint: allow(no-lock-unwrap): this is the recovery wrapper itself
+        self.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Poison-recovering [`Condvar`] waits.  A condvar wait re-acquires the
+/// mutex on wakeup, so it can observe poison exactly like `lock()` can;
+/// recovery is the same call, one layer in.
+pub trait CondvarExt {
+    /// Block on the condvar; on poisoned re-acquire, keep the guard.
+    fn wait_or_recover<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+
+    /// Block with a timeout; on poisoned re-acquire, keep the guard.
+    fn wait_timeout_or_recover<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn wait_or_recover<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        // sonic-lint: allow(no-lock-unwrap): this is the recovery wrapper itself
+        self.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn wait_timeout_or_recover<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        // sonic-lint: allow(no-lock-unwrap): this is the recovery wrapper itself
+        self.wait_timeout(guard, dur)
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    /// Poison a mutex by panicking a thread that holds it; the data must
+    /// still come out through `lock_or_recover`.
+    #[test]
+    fn mutex_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(vec![1u32, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = thread::spawn(move || {
+            let mut g = m2.lock_or_recover();
+            g.push(4);
+            panic!("poison while holding");
+        })
+        .join();
+        assert!(m.is_poisoned(), "panic in holder should poison the mutex");
+        let g = m.lock_or_recover();
+        // The half-done mutation is visible and the structure is intact.
+        assert_eq!(&*g, &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(7u64));
+        let l2 = Arc::clone(&l);
+        let _ = thread::spawn(move || {
+            let mut g = l2.write_or_recover();
+            *g = 8;
+            panic!("poison while writing");
+        })
+        .join();
+        assert_eq!(*l.read_or_recover(), 8);
+        *l.write_or_recover() = 9;
+        assert_eq!(*l.read_or_recover(), 9);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_from_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        // Poison the mutex first...
+        let _ = thread::spawn(move || {
+            let _g = pair2.0.lock_or_recover();
+            panic!("poison");
+        })
+        .join();
+        // ...then a timed wait on the poisoned mutex must still return a
+        // usable guard rather than propagating the poison.
+        let (g, timed_out) = pair
+            .1
+            .wait_timeout_or_recover(pair.0.lock_or_recover(), Duration::from_millis(1));
+        assert!(timed_out.timed_out());
+        assert!(!*g);
+    }
+}

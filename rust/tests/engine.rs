@@ -2,6 +2,7 @@
 //! multi-model routing, backpressure, graceful shutdown, and per-model
 //! photonic accounting agreeing with the compiled plan.
 
+use sonic::util::sync::LockExt;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -29,7 +30,7 @@ struct GatedBackend {
 
 impl InferenceBackend for GatedBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let _g = self.gate.lock().unwrap();
+        let _g = self.gate.lock_or_recover();
         self.inner.infer_batch(inputs)
     }
     fn input_len(&self) -> usize {
@@ -202,7 +203,7 @@ fn shutdown_completes_all_in_flight_tickets() {
     // Hold the gate so everything stays queued or in flight, then shut
     // down while requests are pending.
     let tickets: Vec<_> = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let tickets: Vec<_> = (0..16)
             .map(|_| engine.submit("mnist", vec![0.1; 784]).unwrap())
             .collect();
@@ -250,7 +251,7 @@ fn full_queue_backpressure_try_submit_returns_none_then_recovers() {
         .unwrap();
     let mut tickets = Vec::new();
     let saw_full = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let mut saw_full = false;
         // worker blocks on the gated batch; cap-2 queue must fill
         for _ in 0..50 {
@@ -416,7 +417,7 @@ fn try_wait_polls_without_blocking() {
         .build()
         .unwrap();
     let t = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let t = engine.submit("mnist", vec![0.0; 784]).unwrap();
         assert!(t.try_wait().unwrap().is_none(), "gated request already done?");
         t
@@ -464,14 +465,14 @@ impl ProbeBackend {
 impl InferenceBackend for ProbeBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         {
-            let mut m = self.markers.lock().unwrap();
+            let mut m = self.markers.lock_or_recover();
             for x in inputs {
                 m.push(x[0] as i64);
             }
         }
         self.rows.fetch_add(inputs.len(), Ordering::SeqCst);
         self.entered.store(true, Ordering::SeqCst);
-        let _g = self.gate.lock().unwrap();
+        let _g = self.gate.lock_or_recover();
         self.inner.infer_batch(inputs)
     }
     fn input_len(&self) -> usize {
@@ -522,7 +523,7 @@ fn expired_requests_are_shed_before_reaching_the_backend() {
         Arc::clone(&gate),
     );
     let (holder, doomed) = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let holder = engine.submit("mnist", marked(0)).unwrap();
         wait_entered(&backend.entered);
         // Worker is blocked inside the backend; these queue up with an
@@ -572,7 +573,7 @@ fn shed_tickets_resolve_with_deadline_exceeded_completions() {
         Arc::clone(&gate),
     );
     let (holder, doomed) = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let holder = engine.submit("mnist", marked(0)).unwrap();
         wait_entered(&backend.entered);
         let doomed: Vec<_> = (0..3)
@@ -620,7 +621,7 @@ fn priority_lanes_serve_high_before_batch_under_load() {
         Arc::clone(&gate),
     );
     let tickets = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let mut tickets = vec![engine.submit("mnist", marked(0)).unwrap()];
         wait_entered(&backend.entered);
         // Queue fills while the worker is gated: Batch lane first, then
@@ -653,7 +654,7 @@ fn priority_lanes_serve_high_before_batch_under_load() {
         t.wait().unwrap();
     }
     engine.shutdown();
-    let order = backend.markers.lock().unwrap().clone();
+    let order = backend.markers.lock_or_recover().clone();
     assert_eq!(order.len(), 13);
     assert_eq!(order[0], 0, "gated holder executes first");
     let highs: Vec<usize> = order
@@ -700,7 +701,7 @@ fn starvation_guard_promotes_aged_batch_lane() {
         Arc::clone(&gate),
     );
     let tickets = {
-        let _held = gate.lock().unwrap();
+        let _held = gate.lock_or_recover();
         let mut tickets = vec![engine.submit("mnist", marked(0)).unwrap()];
         wait_entered(&backend.entered);
         tickets.push(
@@ -730,7 +731,7 @@ fn starvation_guard_promotes_aged_batch_lane() {
         t.wait().unwrap();
     }
     engine.shutdown();
-    let order = backend.markers.lock().unwrap().clone();
+    let order = backend.markers.lock_or_recover().clone();
     assert_eq!(
         order,
         vec![0, 100, 200, 201],
@@ -895,7 +896,7 @@ fn wait_timeout_expires_then_the_ticket_still_resolves() {
         )
         .build()
         .unwrap();
-    let held = gate.lock().unwrap();
+    let held = gate.lock_or_recover();
     let mut x = vec![0.0f32; 784];
     x[3] = 1.0;
     let ticket = engine.submit("mnist", x).unwrap();

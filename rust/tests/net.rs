@@ -6,6 +6,7 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
+use sonic::util::sync::LockExt;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -37,7 +38,7 @@ struct GatedBackend {
 
 impl InferenceBackend for GatedBackend {
     fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let _g = self.gate.lock().unwrap();
+        let _g = self.gate.lock_or_recover();
         self.inner.infer_batch(inputs)
     }
     fn input_len(&self) -> usize {
@@ -349,7 +350,7 @@ fn deadline_header_sheds_queued_requests_as_504() {
     .unwrap();
     // hold the gate: request A occupies the backend, request B (1 ms
     // deadline) expires in the queue behind it
-    let held = gate.lock().unwrap();
+    let held = gate.lock_or_recover();
     let mut conn_a = connect(&server);
     let mut conn_b = connect(&server);
     conn_a.write_all(&infer_request("k", 0, "")).unwrap();
@@ -404,7 +405,7 @@ fn graceful_drain_answers_inflight_and_refuses_new_connections() {
         let addr = server.connect_addr();
         // three connections, each with one request in flight behind the
         // held gate
-        let held = gate.lock().unwrap();
+        let held = gate.lock_or_recover();
         let mut conns: Vec<TcpStream> = (0..3).map(|_| connect(&server)).collect();
         for (i, c) in conns.iter_mut().enumerate() {
             c.write_all(&infer_request("k", i, "")).unwrap();
@@ -485,7 +486,7 @@ fn admin_drain_endpoint_is_gated_and_drains_gracefully() {
         };
         // one request in flight behind the held gate — it must survive
         // the drain and get its real answer
-        let held = gate.lock().unwrap();
+        let held = gate.lock_or_recover();
         let mut conn_inflight = connect(&server);
         conn_inflight.write_all(&infer_request("gold-key", 4, "")).unwrap();
         // a second idle connection, opened pre-drain, to prove new work

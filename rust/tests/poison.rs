@@ -1,0 +1,145 @@
+//! Poison-recovery regression (the behavior the `no-lock-unwrap`
+//! migration buys): a backend that panics *while holding a lock* must
+//! not take down serving.  The engine worker contains the panic and
+//! fails only that batch's tickets; every other ticket resolves, the
+//! poisoned lock recovers through `util::sync`, and fresh submissions
+//! keep serving.  All waits are watchdogged — a hang is a failure, not
+//! a stuck CI job.
+
+use sonic::model::ModelDesc;
+use sonic::serve::{BackendChoice, Engine, InferenceBackend, Outcome, ServeConfig};
+use sonic::util::err::Result;
+use sonic::util::sync::LockExt;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const WATCHDOG: Duration = Duration::from_secs(30);
+/// Inputs whose first element is the marker make the backend panic.
+const MARKER: f32 = 1e6;
+
+/// Probe backend: counts batches under a lock it holds across the
+/// batch, and panics on marker inputs *while holding it* — poisoning
+/// the mutex exactly the way a buggy backend would under chaos.
+struct PoisoningBackend {
+    gate: Arc<Mutex<u64>>,
+    input_len: usize,
+    n_classes: usize,
+}
+
+impl InferenceBackend for PoisoningBackend {
+    fn infer_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut held = self.gate.lock_or_recover();
+        *held += 1;
+        if inputs.iter().any(|x| x[0] == MARKER) {
+            panic!("probe backend: marker input while holding the gate");
+        }
+        Ok(vec![vec![0.0; self.n_classes]; inputs.len()])
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+}
+
+fn engine_with_gate(gate: Arc<Mutex<u64>>) -> Engine {
+    Engine::builder()
+        .serve_config(ServeConfig {
+            // One request per batch: the marker panics its own batch
+            // only, so exactly the marker tickets fail.
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            queue_cap: 64,
+            ..ServeConfig::default()
+        })
+        .model_desc(
+            ModelDesc::builtin("mnist").unwrap(),
+            BackendChoice::Custom(Arc::new(PoisoningBackend {
+                gate,
+                input_len: 784,
+                n_classes: 10,
+            })),
+        )
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn panicking_backend_poisons_lock_but_serving_survives() {
+    let gate = Arc::new(Mutex::new(0u64));
+    let engine = engine_with_gate(Arc::clone(&gate));
+
+    // Interleave healthy requests with two marker (panicking) requests.
+    let mut healthy = Vec::new();
+    let mut markers = Vec::new();
+    for i in 0..12 {
+        let mut x = vec![0.5f32; 784];
+        if i == 4 || i == 8 {
+            x[0] = MARKER;
+            markers.push(engine.submit("mnist", x).unwrap());
+        } else {
+            healthy.push(engine.submit("mnist", x).unwrap());
+        }
+    }
+
+    // Every marker ticket resolves (no hang) with the contained panic.
+    for t in markers {
+        let err = t
+            .wait_timeout(WATCHDOG)
+            .expect_err("marker ticket must fail, not serve");
+        assert!(
+            format!("{err:#}").contains("panicked"),
+            "unexpected failure kind: {err:#}"
+        );
+    }
+    // Every other ticket still resolves served — the poisoned gate
+    // recovered instead of cascading.
+    for t in healthy {
+        let c = t
+            .wait_timeout(WATCHDOG)
+            .expect("healthy ticket errored")
+            .expect("healthy ticket hit the watchdog");
+        assert_eq!(c.outcome, Outcome::Served);
+    }
+    assert!(gate.is_poisoned(), "the marker panic should have poisoned the gate");
+
+    // The engine keeps serving *after* the poison: fresh submissions
+    // lock the same poisoned mutex through lock_or_recover.
+    for _ in 0..4 {
+        let c = engine
+            .submit("mnist", vec![0.25; 784])
+            .unwrap()
+            .wait_timeout(WATCHDOG)
+            .expect("post-poison ticket errored")
+            .expect("post-poison ticket hit the watchdog");
+        assert_eq!(c.outcome, Outcome::Served);
+    }
+    // The batch counter survived the panic: data behind a poisoned lock
+    // stays usable (14 healthy batches + 2 that panicked after the bump).
+    assert_eq!(*gate.lock_or_recover(), 16);
+
+    engine.shutdown();
+}
+
+#[test]
+fn metrics_survive_a_poisoning_backend() {
+    let gate = Arc::new(Mutex::new(0u64));
+    let engine = engine_with_gate(Arc::clone(&gate));
+    let mut x = vec![0.5f32; 784];
+    x[0] = MARKER;
+    let _ = engine
+        .submit("mnist", x)
+        .unwrap()
+        .wait_timeout(WATCHDOG)
+        .expect_err("marker must fail");
+    let ok = engine
+        .submit("mnist", vec![0.5; 784])
+        .unwrap()
+        .wait_timeout(WATCHDOG)
+        .expect("ticket errored")
+        .expect("ticket hit the watchdog");
+    assert_eq!(ok.outcome, Outcome::Served);
+    // The metrics path walks the same stats locks the panic flew over.
+    let m = engine.metrics();
+    assert!(!m.models.is_empty(), "metrics must still aggregate");
+    engine.shutdown();
+}
