@@ -1,0 +1,48 @@
+//! Known-bad fixture for `atomic-ordering`.  Never compiled — scanned
+//! by the lint self-tests.  A `Relaxed` half of a cross-function
+//! publish → gating-load pair synchronizes nothing: the loading thread
+//! may never observe the store in any useful happens-before order.
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+struct Flags {
+    stopping: AtomicBool,
+    drain_requested: AtomicBool,
+    total_served: AtomicU64,
+}
+
+fn shutdown(f: &Flags) {
+    // The worker gates on this flag from another thread: Relaxed cannot
+    // publish the preceding writes to it.
+    f.stopping.store(true, Ordering::Relaxed); // lint-expect: atomic-ordering
+}
+
+fn worker_poll(f: &Flags) -> bool {
+    // The load side is Acquire — correct — so only the store above is
+    // flagged.
+    if f.stopping.load(Ordering::Acquire) {
+        return true;
+    }
+    false
+}
+
+fn request_drain(f: &Flags) {
+    // Publish side done right …
+    f.drain_requested.store(true, Ordering::Release);
+}
+
+fn accept_loop(f: &Flags) {
+    // … but the gating load is Relaxed: the accept loop may spin on a
+    // stale false forever as far as the memory model cares.
+    while !f.drain_requested.load(Ordering::Relaxed) { // lint-expect: atomic-ordering
+        serve_one(f);
+    }
+}
+
+fn bump(f: &Flags) {
+    // Monotonic stat counter: Relaxed is fine — nothing gates on it.
+    f.total_served.fetch_add(1, Ordering::Relaxed);
+}
+
+fn report(f: &Flags) -> u64 {
+    f.total_served.load(Ordering::Relaxed)
+}

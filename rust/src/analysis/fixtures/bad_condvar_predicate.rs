@@ -1,0 +1,47 @@
+//! Known-bad fixture for `condvar-predicate`.  Never compiled — scanned
+//! by the lint self-tests.  Condvars may wake spuriously: a wait that
+//! is not wrapped in a `while`/`loop` re-checking its predicate treats
+//! a phantom wakeup as a real completion.
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+fn straight_line_wait(m: &Mutex<bool>, cv: &Condvar) {
+    let g = m.lock_or_recover();
+    let _g = cv.wait_or_recover(g); // lint-expect: condvar-predicate
+}
+
+fn if_gated_wait(m: &Mutex<bool>, cv: &Condvar) {
+    let g = m.lock_or_recover();
+    // An `if` checks once; a spurious wakeup after the check slips by.
+    if !*g {
+        let (_g, _timed_out) = cv.wait_timeout_or_recover(g, Duration::from_millis(5)); // lint-expect: condvar-predicate
+    }
+}
+
+fn for_is_not_a_predicate_loop(m: &Mutex<bool>, cv: &Condvar) {
+    let mut g = m.lock_or_recover();
+    // Bounded retries re-wait but never re-check a predicate per se;
+    // `for` runs once per item, so the rule treats it as straight-line.
+    for _ in 0..3 {
+        g = cv.wait_or_recover(g); // lint-expect: condvar-predicate
+    }
+    let _ = g;
+}
+
+fn good_while_predicate(m: &Mutex<bool>, cv: &Condvar) {
+    let mut g = m.lock_or_recover();
+    while !*g {
+        g = cv.wait_or_recover(g);
+    }
+}
+
+fn good_loop_with_break(m: &Mutex<bool>, cv: &Condvar) {
+    let mut g = m.lock_or_recover();
+    loop {
+        if *g {
+            break;
+        }
+        let (ng, _timed_out) = cv.wait_timeout_or_recover(g, Duration::from_millis(5));
+        g = ng;
+    }
+}

@@ -1,0 +1,16 @@
+//! Cross-file lock-cycle fixture, file 1 of 2.  Never compiled —
+//! scanned by the lint self-tests *together with* `b.rs`.
+//!
+//! This file holds a metrics lock and calls into `b.rs`, which
+//! acquires a router-lanes lock — a hierarchy inversion (level 2 held
+//! while acquiring level 1) that no single function exhibits: PR 9's
+//! intra-function `lock-order` rule provably finds nothing here (the
+//! self-test asserts exactly that).  Only the whole-crate `lock-graph`
+//! pass, propagating acquires-while-holding edges through the call,
+//! can see it.
+
+fn flush_report(s: &Subsystems) {
+    let c = s.counters.lock_or_recover();
+    enqueue_low_priority(s); // lint-expect: lock-graph
+    drop(c);
+}

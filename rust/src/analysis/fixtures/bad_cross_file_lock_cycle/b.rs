@@ -1,0 +1,26 @@
+//! Cross-file lock-cycle fixture, file 2 of 2 — see `a.rs`.
+//!
+//! `enqueue_low_priority` acquires the router-lanes lock that `a.rs`
+//! reaches while holding metrics (the inversion).  `note_depth` below
+//! nests the same pair in the *declared* direction — legal on its own,
+//! but combined with `a.rs` the two orders form a cycle: two threads
+//! running `flush_report` and `note_depth` can deadlock.  The edge here
+//! is therefore flagged as a cycle participant.
+
+struct Subsystems {
+    queue: Mutex<Vec<u64>>,
+    counters: Mutex<u64>,
+}
+
+fn enqueue_low_priority(s: &Subsystems) {
+    let q = s.queue.lock_or_recover();
+    q.push(0);
+}
+
+fn note_depth(s: &Subsystems) {
+    let q = s.queue.lock_or_recover();
+    let c = s.counters.lock_or_recover(); // lint-expect: lock-graph
+    *c += q.len() as u64;
+    drop(c);
+    drop(q);
+}

@@ -25,10 +25,14 @@ fn bad_transient(s: &Subsystems) {
 }
 
 fn good(s: &Subsystems) {
+    // Sequential, never nested.  (Nesting queue → counters here would be
+    // legal for `lock-order`, but `bad_transient` above inverts the same
+    // pair, and the whole-crate `lock-graph` rule would then see a cycle
+    // — that two-function shape lives in bad_cross_file_lock_cycle/.)
     let q = s.queue.lock_or_recover();
+    drop(q);
     let c = s.counters.lock_or_recover();
     drop(c);
-    drop(q);
     let h = s.health.lock_or_recover();
     drop(h);
 }

@@ -1,0 +1,37 @@
+//! Known-bad fixture for `no-spin-loop`.  Never compiled — scanned by
+//! the lint self-tests.  A loop that only polls atomics burns a core
+//! and, on a shared pool, can starve the very thread that would flip
+//! the flag.
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+fn busy_wait_flag(flag: &AtomicBool) {
+    while !flag.load(Ordering::Acquire) {} // lint-expect: no-spin-loop
+}
+
+fn busy_drain_gauge(pending: &AtomicU64) {
+    loop { // lint-expect: no-spin-loop
+        if pending.load(Ordering::Acquire) == 0 {
+            break;
+        }
+    }
+}
+
+fn good_backoff_sleep(flag: &AtomicBool) {
+    while !flag.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn good_yielding_drain(pending: &AtomicU64) {
+    while pending.load(Ordering::Acquire) > 0 {
+        std::thread::yield_now();
+    }
+}
+
+fn good_polling_with_work(flag: &AtomicBool, q: &WorkQueue) {
+    // The loop makes progress itself — polling is incidental.
+    while !flag.load(Ordering::Acquire) {
+        q.drain_one();
+    }
+}

@@ -1,7 +1,10 @@
 //! Clean fixture: every rule enabled, zero findings expected.  Exercises
 //! the lexical corners most likely to false-positive — bad patterns in
 //! comments, strings, raw strings, and char literals, plus the blessed
-//! spellings of each invariant.
+//! spellings of each invariant (including the PR 10 concurrency rules:
+//! predicate-looped condvar waits, parking poll loops, Release/Acquire
+//! publish pairs, and non-gating Relaxed counters).
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -32,9 +35,27 @@ fn floats(xs: &mut [f32]) {
 }
 
 fn locks(m: &Mutex<u64>, cv: &Condvar) -> u64 {
-    let g = m.lock_or_recover();
-    let (g, _timed_out) = cv.wait_timeout_or_recover(g, Duration::from_millis(5));
+    // The predicate loop around the wait is what condvar-predicate
+    // demands: a spurious wakeup just re-checks and waits again.
+    let mut g = m.lock_or_recover();
+    while *g == 0 {
+        let (ng, timed_out) = cv.wait_timeout_or_recover(g, Duration::from_millis(5));
+        g = ng;
+        if timed_out.timed_out() {
+            break;
+        }
+    }
     *g
+}
+
+fn condvar_in_loop(m: &Mutex<bool>, cv: &Condvar) {
+    let mut g = m.lock_or_recover();
+    loop {
+        if *g {
+            break;
+        }
+        g = cv.wait_or_recover(g);
+    }
 }
 
 fn tickets(t: Ticket) {
@@ -46,4 +67,65 @@ fn tickets(t: Ticket) {
 fn io_reads(stream: &mut TcpStream, buf: &mut [u8]) {
     // io::Read::read takes a buffer — not an RwLock read().
     let _ = stream.read(buf).unwrap();
+}
+
+struct Shared {
+    closing: AtomicBool,
+    served: AtomicU64,
+}
+
+fn publish_done_right(sh: &Shared) {
+    // Cross-thread flag published with Release …
+    sh.closing.store(true, Ordering::Release);
+}
+
+fn observe_done_right(sh: &Shared) -> bool {
+    // … and gated with Acquire: atomic-ordering stays quiet.
+    if sh.closing.load(Ordering::Acquire) {
+        return true;
+    }
+    false
+}
+
+fn counter_bump(sh: &Shared) {
+    // Relaxed is fine for a stat counter nothing gates on.
+    sh.served.fetch_add(1, Ordering::Relaxed);
+}
+
+fn counter_report(sh: &Shared) -> u64 {
+    // Non-gating Relaxed load of the same counter: also fine.
+    sh.served.load(Ordering::Relaxed)
+}
+
+fn same_function_handoff(once: &AtomicBool) -> bool {
+    // Publish and gate in the *same* function is not a cross-thread
+    // protocol; atomic-ordering only pairs across functions.  (The
+    // receiver name is deliberately distinct from the `flag` fields the
+    // polling fns below gate on — fields are keyed crate-wide by name.)
+    once.store(true, Ordering::Relaxed);
+    if once.load(Ordering::Relaxed) {
+        return true;
+    }
+    false
+}
+
+fn backoff_poll(flag: &AtomicBool) {
+    // Polling an atomic is fine when the loop parks between probes.
+    while !flag.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn yielding_drain(pending: &AtomicU64) {
+    // yield_now is a deliberate scheduling decision, not a busy-wait.
+    while pending.load(Ordering::Acquire) > 0 {
+        std::thread::yield_now();
+    }
+}
+
+fn working_poll(flag: &AtomicBool, q: &WorkQueue) {
+    // The loop body does real work; the atomic check is incidental.
+    while !flag.load(Ordering::Acquire) {
+        q.drain_one();
+    }
 }

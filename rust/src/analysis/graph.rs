@@ -1,0 +1,764 @@
+//! Whole-crate analysis passes: the lock graph (`lock-graph`) and the
+//! cross-function atomics rule (`atomic-ordering`).
+//!
+//! PR 9's `lock-order` rule is intra-function: it sees `let g =
+//! a.lock…(); b.lock…();` inside one body and nothing else.  The lock
+//! graph closes the gap the MPSC-ring work will live in: it tracks
+//! guard lifetimes per function, resolves intra-crate calls by function
+//! name (call-graph-lite — every same-named function is a candidate
+//! callee), propagates "acquires-while-holding" edges across files, and
+//! then *derives* the lock hierarchy from the edges.  The declared
+//! `engine → router-lanes → metrics → health` order stops being an
+//! assumption and becomes an assertion the derived graph must satisfy:
+//! a cross-file inversion or a cycle is a finding even though no single
+//! function ever nests two acquisitions.
+//!
+//! `atomic-ordering` is the same idea for atomics: a `Relaxed` publish
+//! (store/swap/fetch_*) whose field is loaded to gate control flow in a
+//! *different* function cannot synchronize anything — the load may
+//! never observe the store in any useful happens-before sense.  Either
+//! the pair is upgraded to `Release`/`Acquire`, or the field is a
+//! monotonic counter and belongs in [`RELAXED_COUNTERS`], or the load
+//! site carries a justified pragma (the power-of-two-choices sampler in
+//! `serve/cluster` is the canonical intentional race).
+
+use super::rules::{self, DECLARED_ORDER};
+use super::sanitize::Sanitized;
+use super::tokens::{TokKind, Tokens};
+use super::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One sanitized + lexed file, borrowed by the crate passes.
+pub struct FileView<'a> {
+    pub path: &'a str,
+    pub s: &'a Sanitized,
+    pub t: &'a Tokens,
+}
+
+/// Fields allowed to stay `Relaxed` on the publish side even though
+/// another function gates on their value: monotonic gauges/counters
+/// whose *exact* value never carries a cross-thread protocol.  Each
+/// entry is annotated — the justification prints in `--list-rules` and
+/// the README, mirroring the pragma discipline.
+pub const RELAXED_COUNTERS: &[(&str, &str)] = &[
+    (
+        "inflight",
+        "per-replica in-flight gauge; read racily by power-of-two-choices \
+         sampling (the load pair carries its own pragma in cluster::pick_replica)",
+    ),
+    (
+        "in_flight",
+        "pool work gauge; increment is Relaxed (the submit itself orders via the \
+         queue mutex), decrement/read are Release/Acquire for drain()",
+    ),
+    (
+        "tries",
+        "per-replica dispatch counter; read only for reports and tests, never to \
+         gate a cross-thread decision",
+    ),
+    (
+        "next_id",
+        "monotonic id allocator; uniqueness needs atomicity, not ordering",
+    ),
+    (
+        "next_conn",
+        "monotonic connection-id allocator; uniqueness needs atomicity, not ordering",
+    ),
+];
+
+fn relaxed_counter(field: &str) -> bool {
+    RELAXED_COUNTERS.iter().any(|(n, _)| *n == field)
+}
+
+/// Method-call shape at ident token `i` (`.name(`): `(dot, open)`.
+fn method_call(t: &Tokens, i: usize) -> Option<(usize, usize)> {
+    if i == 0 || !t.is_punct(i - 1, ".") || !t.is_punct(i + 1, "(") {
+        return None;
+    }
+    Some((i - 1, i + 1))
+}
+
+// ---------------------------------------------------------------------------
+// Lock graph
+// ---------------------------------------------------------------------------
+
+/// One class-level edge: "some thread acquires `to` while holding
+/// `from`", with the first site that creates it.  `via` is the callee
+/// chain for propagated edges (`None` for an intra-function nesting).
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub from: &'static str,
+    pub to: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub via: Option<String>,
+    /// Number of distinct sites inducing this class pair.
+    pub count: usize,
+}
+
+/// The derived whole-crate lock graph.
+pub struct LockGraph {
+    pub edges: Vec<Edge>,
+    /// Every lock class that appears in any acquisition, sorted by
+    /// declared level then name.
+    pub classes: Vec<&'static str>,
+}
+
+struct FnNode {
+    name: String,
+    file: usize,
+    /// Classes acquired directly in this body.
+    direct: BTreeSet<&'static str>,
+    /// (held, acquired, line) — intra-function nestings.
+    edges: Vec<(&'static str, &'static str, usize)>,
+    /// (callee name, held classes at the call, line).
+    calls: Vec<(String, Vec<&'static str>, usize)>,
+}
+
+/// Walk one function body, tracking guard lifetimes exactly like
+/// `rules::lock_order` (bind-to-hold, `drop()` release, brace expiry),
+/// and record direct edges plus call sites with the held set.
+fn scan_fn(view: &FileView, file: usize, fx: usize) -> FnNode {
+    let t = view.t;
+    let f = &t.fns[fx];
+    let mut node = FnNode {
+        name: f.name.clone(),
+        file,
+        direct: BTreeSet::new(),
+        edges: Vec::new(),
+        calls: Vec::new(),
+    };
+    // Nested fn items own their tokens; skip their body ranges.
+    let nested: Vec<(usize, usize)> = t
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|&(i, g)| i != fx && g.open > f.open && g.close < f.close)
+        .map(|(_, g)| (g.open, g.close))
+        .collect();
+    let mut depth: i32 = 0;
+    let mut held: Vec<(String, &'static str, i32)> = Vec::new();
+    let mut j = f.open + 1;
+    while j < f.close {
+        if let Some(&(_, close)) = nested.iter().find(|&&(o, _)| o == j) {
+            j = close + 1;
+            continue;
+        }
+        let Some(tok) = t.tok(j) else { break };
+        match tok.kind {
+            TokKind::Punct => {
+                match tok.text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        held.retain(|&(_, _, d)| d <= depth);
+                    }
+                    _ => {}
+                }
+                j += 1;
+                continue;
+            }
+            TokKind::Ident => {}
+            _ => {
+                j += 1;
+                continue;
+            }
+        }
+        let name = tok.text.as_str();
+        // Explicit early release.
+        if name == "drop" && t.is_punct(j + 1, "(") && t.is_punct(j + 3, ")") {
+            let g = t.text(j + 2).to_string();
+            held.retain(|(h, _, _)| *h != g);
+            j += 1;
+            continue;
+        }
+        if rules::is_acquire_ident(name) {
+            if let Some((dot, open)) = method_call(t, j) {
+                if let Some((close, _, nonblank)) = t.call_args(open) {
+                    if !nonblank {
+                        if let Some((_, class)) = t
+                            .receiver_of(dot)
+                            .and_then(|r| rules::classify(r, view.path))
+                        {
+                            node.direct.insert(class);
+                            for &(_, hclass, _) in held.iter() {
+                                if hclass != class {
+                                    node.edges.push((hclass, class, t.line(dot)));
+                                }
+                            }
+                            if let Some(g) = rules::binds_guard(t, dot, close) {
+                                held.push((g, class, depth));
+                            }
+                        }
+                        j += 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        // Plain call site: `name(` not preceded by `fn`, not a keyword,
+        // not an atomic op.  Method calls (`recv.name(`) count too —
+        // resolution is by name.
+        if t.is_punct(j + 1, "(")
+            && !t.is_ident(j.wrapping_sub(1), "fn")
+            && !rules::is_acquire_ident(name)
+            && !rules::is_atomic_op(name)
+            && !matches!(
+                name,
+                "if" | "while" | "match" | "for" | "loop" | "return" | "drop"
+            )
+        {
+            let held_classes: Vec<&'static str> = {
+                let mut hs: Vec<&'static str> = held.iter().map(|&(_, c, _)| c).collect();
+                hs.sort_unstable();
+                hs.dedup();
+                hs
+            };
+            node.calls.push((name.to_string(), held_classes, t.line(j)));
+        }
+        j += 1;
+    }
+    node
+}
+
+/// Build the whole-crate lock graph: scan every function, run the
+/// may-acquire fixpoint over the name-resolved call graph, and collapse
+/// sites into class-level edges.
+pub fn build_lock_graph(files: &[FileView]) -> LockGraph {
+    let mut nodes: Vec<FnNode> = Vec::new();
+    for (fi, v) in files.iter().enumerate() {
+        for fx in 0..v.t.fns.len() {
+            nodes.push(scan_fn(v, fi, fx));
+        }
+    }
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        by_name.entry(&n.name).or_default().push(i);
+    }
+    // may_acquire fixpoint: what can each function (transitively) lock?
+    let mut may: Vec<BTreeSet<&'static str>> = nodes.iter().map(|n| n.direct.clone()).collect();
+    loop {
+        let mut changed = false;
+        for i in 0..nodes.len() {
+            let mut add: BTreeSet<&'static str> = BTreeSet::new();
+            for (callee, _, _) in &nodes[i].calls {
+                if let Some(targets) = by_name.get(callee.as_str()) {
+                    for &ti in targets {
+                        add.extend(may[ti].iter().copied());
+                    }
+                }
+            }
+            for c in add {
+                changed |= may[i].insert(c);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Collapse to class-level edges, keeping the first site per pair.
+    // Direct and call-propagated edges are kept distinct so a propagated
+    // inversion can never hide behind an existing (legal-looking) direct
+    // edge with the same class pair.
+    let mut edges: BTreeMap<(&'static str, &'static str, bool), Edge> = BTreeMap::new();
+    let mut add_edge =
+        |from: &'static str, to: &'static str, path: &str, line: usize, via: Option<String>| {
+            edges
+                .entry((from, to, via.is_some()))
+                .and_modify(|e| e.count += 1)
+                .or_insert(Edge {
+                    from,
+                    to,
+                    path: path.to_string(),
+                    line,
+                    via,
+                    count: 1,
+                });
+        };
+    for n in &nodes {
+        let path = files[n.file].path;
+        for &(from, to, line) in &n.edges {
+            add_edge(from, to, path, line, None);
+        }
+        for (callee, held, line) in &n.calls {
+            if held.is_empty() {
+                continue;
+            }
+            let Some(targets) = by_name.get(callee.as_str()) else {
+                continue;
+            };
+            let mut acq: BTreeSet<&'static str> = BTreeSet::new();
+            for &ti in targets {
+                acq.extend(may[ti].iter().copied());
+            }
+            for &from in held {
+                for &to in &acq {
+                    if from != to {
+                        add_edge(from, to, path, *line, Some(callee.clone()));
+                    }
+                }
+            }
+        }
+    }
+    let mut classes: BTreeSet<&'static str> = BTreeSet::new();
+    for n in &nodes {
+        classes.extend(n.direct.iter().copied());
+    }
+    let mut classes: Vec<&'static str> = classes.into_iter().collect();
+    classes.sort_by_key(|c| (rules::class_level(c), *c));
+    LockGraph {
+        edges: edges.into_values().collect(),
+        classes,
+    }
+}
+
+fn reachable(edges: &[Edge], from: &str, to: &str) -> bool {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let mut stack = vec![from];
+    while let Some(u) = stack.pop() {
+        if u == to {
+            return true;
+        }
+        if !seen.insert(u) {
+            continue;
+        }
+        for e in edges {
+            if e.from == u {
+                stack.push(e.to);
+            }
+        }
+    }
+    false
+}
+
+/// Topological order of the derived graph's classes (declared-level
+/// tie-break), or `None` when the graph has a cycle.
+pub fn topo_order(g: &LockGraph) -> Option<Vec<&'static str>> {
+    let mut indeg: BTreeMap<&'static str, usize> =
+        g.classes.iter().map(|&c| (c, 0usize)).collect();
+    for e in &g.edges {
+        *indeg.entry(e.to).or_insert(0) += 1;
+        indeg.entry(e.from).or_insert(0);
+    }
+    let mut order = Vec::new();
+    let mut left: Vec<&'static str> = indeg.keys().copied().collect();
+    while !left.is_empty() {
+        let pick = left
+            .iter()
+            .copied()
+            .filter(|c| indeg[c] == 0)
+            .min_by_key(|&c| (rules::class_level(c), c))?;
+        order.push(pick);
+        left.retain(|&c| c != pick);
+        for e in &g.edges {
+            if e.from == pick {
+                *indeg.get_mut(e.to).unwrap() -= 1;
+            }
+        }
+    }
+    Some(order)
+}
+
+/// The `lock-graph` crate rule: cross-function/cross-file inversions
+/// (propagated edges that descend the declared hierarchy) and cycles.
+/// Intra-function inversions stay `lock-order`'s findings — this rule
+/// reports exactly what the per-function rule *cannot* see.
+pub fn lock_graph(files: &[FileView], out: &mut Vec<Finding>) {
+    let g = build_lock_graph(files);
+    let mut reported: BTreeSet<(String, usize)> = BTreeSet::new();
+    for e in &g.edges {
+        let (fl, tl) = (rules::class_level(e.from), rules::class_level(e.to));
+        if e.via.is_some() && fl > tl {
+            let via = e.via.as_deref().unwrap_or("?");
+            if reported.insert((e.path.clone(), e.line)) {
+                out.push(Finding::new(
+                    super::RULE_LOCK_GRAPH,
+                    &e.path,
+                    e.line,
+                    format!(
+                        "holding '{}' (level {fl}) while calling `{via}`, which \
+                         (transitively) acquires '{}' (level {tl}); declared order \
+                         is {DECLARED_ORDER}",
+                        e.from, e.to
+                    ),
+                ));
+            }
+        }
+    }
+    for e in &g.edges {
+        if reachable(&g.edges, e.to, e.from) && reported.insert((e.path.clone(), e.line)) {
+            out.push(Finding::new(
+                super::RULE_LOCK_GRAPH,
+                &e.path,
+                e.line,
+                format!(
+                    "lock edge '{}' → '{}' participates in a cycle ('{}' can reach \
+                     '{}' through other acquisitions): a cross-thread deadlock is \
+                     one unlucky interleaving away",
+                    e.from, e.to, e.to, e.from
+                ),
+            ));
+        }
+    }
+}
+
+/// Text dump for `sonic lint --lock-graph`.
+pub fn render_lock_graph(g: &LockGraph) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("declared : {DECLARED_ORDER}\n"));
+    match topo_order(g) {
+        Some(order) => s.push_str(&format!("derived  : {}\n", order.join(" → "))),
+        None => s.push_str("derived  : CYCLIC\n"),
+    }
+    s.push_str(&format!(
+        "classes  : {}\nedges    :\n",
+        g.classes.join(", ")
+    ));
+    for e in &g.edges {
+        let via = e
+            .via
+            .as_deref()
+            .map(|v| format!(" via `{v}`"))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "  {} → {}  ({} site{}{}; first {}:{})\n",
+            e.from,
+            e.to,
+            e.count,
+            if e.count == 1 { "" } else { "s" },
+            via,
+            e.path,
+            e.line
+        ));
+    }
+    if g.edges.is_empty() {
+        s.push_str("  (none — no nested acquisitions anywhere)\n");
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// atomic-ordering
+// ---------------------------------------------------------------------------
+
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn is_publish_op(name: &str) -> bool {
+    matches!(
+        name,
+        "store"
+            | "swap"
+            | "fetch_add"
+            | "fetch_sub"
+            | "fetch_and"
+            | "fetch_or"
+            | "fetch_xor"
+            | "fetch_nand"
+            | "compare_exchange"
+            | "compare_exchange_weak"
+    )
+}
+
+/// First token index of the receiver chain ending at the `.` token
+/// `dot` (e.g. `self.replicas[i].inflight.load` → the `self` token).
+fn chain_start(t: &Tokens, dot: usize) -> usize {
+    let mut d = dot;
+    loop {
+        if d == 0 {
+            return 0;
+        }
+        let mut k = d - 1;
+        if t.is_punct(k, ")") || t.is_punct(k, "]") {
+            match t.match_of(k) {
+                Some(o) if o > 0 => k = o - 1,
+                _ => return d,
+            }
+        }
+        let Some(tok) = t.tok(k) else { return d };
+        if tok.kind != TokKind::Ident {
+            return d;
+        }
+        if k > 0 && t.is_punct(k - 1, ".") {
+            d = k - 1;
+        } else {
+            return k;
+        }
+    }
+}
+
+/// Is the load whose receiver chain starts at `start` and whose call
+/// closes at `close` in a control-flow-gating position?  Three shapes:
+/// inside an `if`/`while`/`match` condition span, negated (`!x.load`),
+/// or comparison-adjacent (`x.load(..) >= n`, `n < x.load(..)`).
+fn is_gating(t: &Tokens, start: usize, dot: usize, close: usize) -> bool {
+    if t.in_gating_span(dot) {
+        return true;
+    }
+    if start > 0 && t.is_punct(start - 1, "!") && !t.is_punct(start.wrapping_sub(2), "=") {
+        return true;
+    }
+    let before_cmp = start > 0
+        && (t.is_punct(start - 1, "<")
+            || t.is_punct(start - 1, ">")
+            || (t.is_punct(start - 1, "=")
+                && start > 1
+                && ["=", "!", "<", ">"].iter().any(|p| t.is_punct(start - 2, p))));
+    let after_cmp = t.is_punct(close + 1, "<")
+        || t.is_punct(close + 1, ">")
+        || (t.is_punct(close + 1, "=") && t.is_punct(close + 2, "="))
+        || (t.is_punct(close + 1, "!") && t.is_punct(close + 2, "="));
+    before_cmp || after_cmp
+}
+
+struct AtomicSite {
+    file: usize,
+    line: usize,
+    /// (file, fn body open token) — identity of the enclosing function.
+    func: (usize, usize),
+    op: String,
+    relaxed: bool,
+    gating: bool,
+}
+
+/// The `atomic-ordering` crate rule.  Per atomic field (receiver name),
+/// collect publishes (store/swap/fetch_*/cas) and gating loads across
+/// the whole crate; a `Relaxed` half of a cross-function publish →
+/// gated-load pair is a finding on that half.
+pub fn atomic_ordering(files: &[FileView], out: &mut Vec<Finding>) {
+    let mut publishes: BTreeMap<String, Vec<AtomicSite>> = BTreeMap::new();
+    let mut loads: BTreeMap<String, Vec<AtomicSite>> = BTreeMap::new();
+    for (fi, v) in files.iter().enumerate() {
+        let t = v.t;
+        for i in 0..t.toks.len() {
+            let Some(tok) = t.tok(i) else { continue };
+            if tok.kind != TokKind::Ident {
+                continue;
+            }
+            let name = tok.text.as_str();
+            let is_load = name == "load";
+            if !is_load && !is_publish_op(name) {
+                continue;
+            }
+            let Some((dot, open)) = method_call(t, i) else {
+                continue;
+            };
+            let Some((close, _, _)) = t.call_args(open) else {
+                continue;
+            };
+            let mut ords: Vec<&str> = Vec::new();
+            for j in open + 1..close {
+                let txt = t.text(j);
+                if ORDERINGS.contains(&txt) {
+                    ords.push(if txt == "Relaxed" {
+                        "Relaxed"
+                    } else if txt == "Acquire" {
+                        "Acquire"
+                    } else if txt == "Release" {
+                        "Release"
+                    } else if txt == "AcqRel" {
+                        "AcqRel"
+                    } else {
+                        "SeqCst"
+                    });
+                }
+            }
+            if ords.is_empty() {
+                continue; // not an atomic access (no Ordering argument)
+            }
+            let Some(field) = t.receiver_of(dot).map(str::to_string) else {
+                continue;
+            };
+            let func = (fi, t.fn_of(i).map(|f| f.open).unwrap_or(usize::MAX));
+            let site = AtomicSite {
+                file: fi,
+                line: t.line(dot),
+                func,
+                op: name.to_string(),
+                relaxed: ords.contains(&"Relaxed"),
+                gating: is_load && is_gating(t, chain_start(t, dot), dot, close),
+            };
+            if is_load {
+                loads.entry(field).or_default().push(site);
+            } else {
+                publishes.entry(field).or_default().push(site);
+            }
+        }
+    }
+    // Publish side: Relaxed publish observed (as a gate) elsewhere.
+    for (field, pubs) in &publishes {
+        if relaxed_counter(field) {
+            continue;
+        }
+        let gates: Vec<&AtomicSite> = loads
+            .get(field)
+            .map(|ls| ls.iter().filter(|l| l.gating).collect())
+            .unwrap_or_default();
+        for p in pubs.iter().filter(|p| p.relaxed) {
+            if let Some(g) = gates.iter().find(|g| g.func != p.func) {
+                out.push(Finding::new(
+                    super::RULE_ATOMIC_ORDERING,
+                    files[p.file].path,
+                    p.line,
+                    format!(
+                        "Relaxed `{}` on `{field}` publishes a value that gates \
+                         control flow in another function ({}:{}); a Relaxed store \
+                         synchronizes nothing — use Ordering::Release, list the \
+                         field in RELAXED_COUNTERS, or justify with a pragma",
+                        p.op, files[g.file].path, g.line
+                    ),
+                ));
+            }
+        }
+    }
+    // Load side: Relaxed gating load of a field published elsewhere.
+    for (field, ls) in &loads {
+        for l in ls.iter().filter(|l| l.gating && l.relaxed) {
+            if let Some(p) = publishes
+                .get(field)
+                .and_then(|ps| ps.iter().find(|p| p.func != l.func))
+            {
+                out.push(Finding::new(
+                    super::RULE_ATOMIC_ORDERING,
+                    files[l.file].path,
+                    l.line,
+                    format!(
+                        "Relaxed load of `{field}` gates control flow, but `{field}` \
+                         is published in another function ({}:{}); the gate may never \
+                         observe the write in a useful order — use Ordering::Acquire \
+                         or justify the race with a pragma",
+                        files[p.file].path, p.line
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sanitize::sanitize;
+    use super::super::tokens::lex;
+    use super::super::Finding;
+    use super::*;
+
+    fn views(srcs: &[(&str, &str)]) -> Vec<(String, Sanitized, Tokens)> {
+        srcs.iter()
+            .map(|(p, src)| {
+                let s = sanitize(src);
+                let t = lex(&s);
+                (p.to_string(), s, t)
+            })
+            .collect()
+    }
+
+    fn run(rule: fn(&[FileView], &mut Vec<Finding>), srcs: &[(&str, &str)]) -> Vec<Finding> {
+        let owned = views(srcs);
+        let fv: Vec<FileView> = owned
+            .iter()
+            .map(|(p, s, t)| FileView { path: p, s, t })
+            .collect();
+        let mut out = Vec::new();
+        rule(&fv, &mut out);
+        out
+    }
+
+    #[test]
+    fn cross_file_inversion_is_found() {
+        let a = "fn caller(s: &S) {\n    let c = s.counters.lock_or_recover();\n    helper(s);\n}\n";
+        let b = "fn helper(s: &S) {\n    let q = s.queue.lock_or_recover();\n    q.push(1);\n}\n";
+        let f = run(lock_graph, &[("a.rs", a), ("b.rs", b)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].path, "a.rs");
+        assert_eq!(f[0].line, 3, "reported at the call site");
+        assert!(f[0].message.contains("helper"));
+    }
+
+    #[test]
+    fn legal_direction_produces_no_findings() {
+        let a = "fn caller(s: &S) {\n    let q = s.queue.lock_or_recover();\n    helper(s);\n}\n";
+        let b = "fn helper(s: &S) {\n    let c = s.counters.lock_or_recover();\n    c.bump();\n}\n";
+        assert!(run(lock_graph, &[("a.rs", a), ("b.rs", b)]).is_empty());
+    }
+
+    #[test]
+    fn transitive_propagation_through_two_calls() {
+        let a = "fn top(s: &S) {\n    let h = s.health.lock_or_recover();\n    mid(s);\n}\nfn mid(s: &S) {\n    bottom(s);\n}\nfn bottom(s: &S) {\n    let c = s.stats.lock_or_recover();\n    c.bump();\n}\n";
+        let f = run(lock_graph, &[("a.rs", a)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn same_level_cycle_detected() {
+        // stats → counters in one fn, counters → stats in another: both
+        // legal by level (2 == 2), deadlock-prone as a cycle.
+        let a = "fn one(s: &S) {\n    let g = s.stats.lock_or_recover();\n    let c = s.counters.lock_or_recover();\n}\nfn two(s: &S) {\n    let c = s.counters.lock_or_recover();\n    let g = s.stats.lock_or_recover();\n}\n";
+        let f = run(lock_graph, &[("a.rs", a)]);
+        assert_eq!(f.len(), 2, "one finding per cycle edge: {f:?}");
+        assert!(f.iter().all(|x| x.message.contains("cycle")));
+    }
+
+    #[test]
+    fn derived_order_matches_declared_on_legal_graph() {
+        let a = "fn f(s: &S) {\n    let q = s.queue.lock_or_recover();\n    let c = s.counters.lock_or_recover();\n    let h = s.health.lock_or_recover();\n}\n";
+        let owned = views(&[("a.rs", a)]);
+        let fv: Vec<FileView> = owned
+            .iter()
+            .map(|(p, s, t)| FileView { path: p, s, t })
+            .collect();
+        let g = build_lock_graph(&fv);
+        let order = topo_order(&g).expect("acyclic");
+        let pos = |c: &str| order.iter().position(|&x| x == c).unwrap();
+        assert!(pos("router-lanes") < pos("metrics"));
+        assert!(pos("metrics") < pos("health"));
+        for e in &g.edges {
+            assert!(rules::class_level(e.from) <= rules::class_level(e.to));
+        }
+    }
+
+    #[test]
+    fn atomic_relaxed_publish_gating_load_both_flagged() {
+        let src = "fn stop(s: &S) {\n    s.stopping.store(true, Ordering::Relaxed);\n}\nfn poll(s: &S) {\n    if s.stopping.load(Ordering::Relaxed) {\n        return;\n    }\n}\n";
+        let f = run(atomic_ordering, &[("a.rs", src)]);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.line == 2), "publish side flagged");
+        assert!(f.iter().any(|x| x.line == 5), "load side flagged");
+    }
+
+    #[test]
+    fn atomic_release_acquire_pair_is_clean() {
+        let src = "fn stop(s: &S) {\n    s.stopping.store(true, Ordering::Release);\n}\nfn poll(s: &S) {\n    if s.stopping.load(Ordering::Acquire) {\n        return;\n    }\n}\n";
+        assert!(run(atomic_ordering, &[("a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn atomic_same_function_pair_is_not_cross_thread() {
+        let src = "fn local(s: &S) {\n    s.flag.store(true, Ordering::Relaxed);\n    if s.flag.load(Ordering::Relaxed) {\n        return;\n    }\n}\n";
+        assert!(run(atomic_ordering, &[("a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn atomic_counter_allowlist_spares_publish_side() {
+        // `tries` is in RELAXED_COUNTERS: its Relaxed publishes are fine
+        // even if some test gates on the count; the gating Relaxed load
+        // itself is still reported (pragma territory).
+        let src = "fn bump(s: &S) {\n    s.tries.fetch_add(1, Ordering::Relaxed);\n}\nfn check(s: &S) {\n    if s.tries.load(Ordering::Relaxed) > 3 {\n        return;\n    }\n}\n";
+        let f = run(atomic_ordering, &[("a.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 5, "only the load side remains");
+    }
+
+    #[test]
+    fn atomic_non_gating_load_is_clean() {
+        let src = "fn bump(s: &S) {\n    s.total.fetch_add(1, Ordering::Relaxed);\n}\nfn report(s: &S) -> u64 {\n    s.total.load(Ordering::Relaxed)\n}\n";
+        assert!(run(atomic_ordering, &[("a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn gating_shapes() {
+        // negation and comparison adjacency, outside an if/while span
+        let src = "fn pub_(s: &S) {\n    s.n.store(1, Ordering::Relaxed);\n}\nfn g(s: &S) -> bool {\n    let more = s.n.load(Ordering::Relaxed) >= LIMIT;\n    more\n}\n";
+        let f = run(atomic_ordering, &[("a.rs", src)]);
+        assert_eq!(f.len(), 2, "comparison makes the load gating: {f:?}");
+    }
+}

@@ -4,10 +4,16 @@
 //! sources.  Each rule encodes an invariant a past PR paid for in
 //! debugging time — poison-safe locking, NaN-safe float ordering, no
 //! blocking work on the shared kernel pool, no silently-truncating
-//! duration casts, and a declared lock hierarchy — so the next change
-//! cannot quietly reintroduce the bug class.  CI runs
-//! `cargo run --release -- lint` as a gating step; the fixture
-//! self-tests below run under plain `cargo test`.
+//! duration casts, a declared lock hierarchy, predicate-looped condvar
+//! waits, no busy-wait loops, and cross-function atomic-ordering
+//! discipline — so the next change cannot quietly reintroduce the bug
+//! class.  CI runs `cargo run --release -- lint` as a gating step; the
+//! fixture self-tests below run under plain `cargo test`.
+//!
+//! The pipeline: [`sanitize`] blanks comments/strings, [`tokens`] lexes
+//! the sanitized text once per file, the per-file rules in [`rules`]
+//! walk the token stream, and the whole-crate passes in [`graph`]
+//! (lock graph, atomic-ordering) run over every file together.
 //!
 //! Suppression: a finding is silenced by a *justified* pragma on the
 //! same line or the line directly above:
@@ -19,10 +25,13 @@
 //! A pragma with no justification text is itself a finding — the point
 //! is that every exception carries its reasoning in the diff.
 
+pub mod graph;
 pub mod rules;
 pub mod sanitize;
+pub mod tokens;
 
 use crate::util::json::{self, Json};
+use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -31,6 +40,10 @@ pub const RULE_NO_PARTIAL_CMP_UNWRAP: &str = "no-partial-cmp-unwrap";
 pub const RULE_NO_BLOCKING_ON_SHARED_POOL: &str = "no-blocking-on-shared-pool";
 pub const RULE_NO_DURATION_NARROWING: &str = "no-duration-narrowing";
 pub const RULE_LOCK_ORDER: &str = "lock-order";
+pub const RULE_CONDVAR_PREDICATE: &str = "condvar-predicate";
+pub const RULE_NO_SPIN_LOOP: &str = "no-spin-loop";
+pub const RULE_ATOMIC_ORDERING: &str = "atomic-ordering";
+pub const RULE_LOCK_GRAPH: &str = "lock-graph";
 /// Meta-rule: malformed or unjustified suppression pragmas.
 pub const RULE_PRAGMA: &str = "pragma";
 
@@ -42,6 +55,14 @@ pub struct Finding {
     /// 1-based line number.
     pub line: usize,
     pub message: String,
+    /// `"error"` for gating rules, `"warning"` for advisory ones; every
+    /// current rule gates (the warn-first path for a *new* rule is the
+    /// `--baseline` diff mode, not a severity downgrade).
+    pub severity: &'static str,
+    /// Raw text of any `sonic-lint` pragma on the finding's line or the
+    /// line above — context for the JSON artifact, so a reviewer sees
+    /// *which* suppression attempt failed or is nearby.
+    pub pragma_context: Option<String>,
 }
 
 impl Finding {
@@ -51,13 +72,16 @@ impl Finding {
             path: path.to_string(),
             line,
             message,
+            severity: "error",
+            pragma_context: None,
         }
     }
 }
 
-type RuleFn = fn(&str, &sanitize::Sanitized, &mut Vec<Finding>);
+type RuleFn = fn(&str, &sanitize::Sanitized, &tokens::Tokens, &mut Vec<Finding>);
+type CrateRuleFn = fn(&[graph::FileView], &mut Vec<Finding>);
 
-/// The rule registry: name, one-line summary, implementation.
+/// The per-file rule registry: name, one-line summary, implementation.
 pub const RULES: &[(&str, &str, RuleFn)] = &[
     (
         RULE_NO_LOCK_UNWRAP,
@@ -84,59 +108,133 @@ pub const RULES: &[(&str, &str, RuleFn)] = &[
         "nested lock acquisition follows engine → router-lanes → metrics → health",
         rules::lock_order,
     ),
+    (
+        RULE_CONDVAR_PREDICATE,
+        "every wait_or_recover / wait_timeout_or_recover sits in a while/loop predicate re-check",
+        rules::condvar_predicate,
+    ),
+    (
+        RULE_NO_SPIN_LOOP,
+        "no loop that only polls atomics without park/sleep/yield/condvar",
+        rules::no_spin_loop,
+    ),
 ];
 
-/// Lint one file's source.  `enabled` filters by rule name; empty means
-/// all rules.  Pragma suppression and pragma validation happen here.
-pub fn lint_source(path: &str, src: &str, enabled: &[String]) -> Vec<Finding> {
-    let s = sanitize::sanitize(src);
+/// Whole-crate passes: they see every file at once, so they can chase
+/// lock acquisition across calls and pair atomic publishes with loads
+/// in other modules.
+pub const CRATE_RULES: &[(&str, &str, CrateRuleFn)] = &[
+    (
+        RULE_LOCK_GRAPH,
+        "derived whole-crate lock graph is acyclic and consistent with the declared hierarchy",
+        graph::lock_graph,
+    ),
+    (
+        RULE_ATOMIC_ORDERING,
+        "no Relaxed half of a cross-function atomic publish → gating-load pair",
+        graph::atomic_ordering,
+    ),
+];
+
+/// Is `name` a rule a pragma may legitimately name?
+pub fn known_rule(name: &str) -> bool {
+    RULES.iter().any(|(n, _, _)| *n == name) || CRATE_RULES.iter().any(|(n, _, _)| *n == name)
+}
+
+fn enabled_has(enabled: &[String], name: &str) -> bool {
+    enabled.is_empty() || enabled.iter().any(|e| e == name)
+}
+
+/// Lint a set of files together: per-file rules on each, crate passes
+/// over all, pragma suppression and pragma validation at the end.
+/// `enabled` filters by rule name; empty means all rules.
+pub fn lint_files(files: &[(String, String)], enabled: &[String]) -> Vec<Finding> {
+    let views: Vec<(String, sanitize::Sanitized, tokens::Tokens)> = files
+        .iter()
+        .map(|(path, src)| {
+            let s = sanitize::sanitize(src);
+            let t = tokens::lex(&s);
+            (path.clone(), s, t)
+        })
+        .collect();
     let mut raw = Vec::new();
-    for (name, _, f) in RULES {
-        if enabled.is_empty() || enabled.iter().any(|e| e == name) {
-            f(path, &s, &mut raw);
+    for (path, s, t) in &views {
+        for (name, _, f) in RULES {
+            if enabled_has(enabled, name) {
+                f(path, s, t, &mut raw);
+            }
         }
     }
-    let known = |r: &str| RULES.iter().any(|(n, _, _)| *n == r);
+    let fviews: Vec<graph::FileView> = views
+        .iter()
+        .map(|(p, s, t)| graph::FileView { path: p, s, t })
+        .collect();
+    for (name, _, f) in CRATE_RULES {
+        if enabled_has(enabled, name) {
+            f(&fviews, &mut raw);
+        }
+    }
+    let by_path: HashMap<&str, usize> = views
+        .iter()
+        .enumerate()
+        .map(|(i, (p, _, _))| (p.as_str(), i))
+        .collect();
     let mut out = Vec::new();
-    for f in raw {
+    for mut f in raw {
+        let Some(&vi) = by_path.get(f.path.as_str()) else {
+            out.push(f);
+            continue;
+        };
+        let s = &views[vi].1;
         let suppressed = s.pragmas.iter().any(|p| {
             p.justified
                 && (p.line == f.line || p.line + 1 == f.line)
                 && p.rules.iter().any(|r| r == f.rule)
         });
-        if !suppressed {
-            out.push(f);
+        if suppressed {
+            continue;
         }
+        f.pragma_context = s
+            .pragmas
+            .iter()
+            .find(|p| p.line == f.line || p.line + 1 == f.line)
+            .map(|p| p.text.clone());
+        out.push(f);
     }
     // Every pragma must parse, name real rules, and carry a reason.
-    for p in &s.pragmas {
-        if p.rules.is_empty() {
-            out.push(Finding::new(
-                RULE_PRAGMA,
-                path,
-                p.line,
-                format!("unparseable sonic-lint pragma: `{}`", p.text),
-            ));
-        } else if let Some(bad) = p.rules.iter().find(|r| !known(r)) {
-            out.push(Finding::new(
-                RULE_PRAGMA,
-                path,
-                p.line,
-                format!("pragma names unknown rule `{bad}`"),
-            ));
-        } else if !p.justified {
-            out.push(Finding::new(
-                RULE_PRAGMA,
-                path,
-                p.line,
-                "suppression pragma has no justification — say why the \
-                 exception is sound: `// sonic-lint: allow(rule): reason`"
-                    .to_string(),
-            ));
+    for (path, s, _) in &views {
+        for p in &s.pragmas {
+            let mut push = |msg: String| {
+                let mut f = Finding::new(RULE_PRAGMA, path, p.line, msg);
+                f.pragma_context = Some(p.text.clone());
+                out.push(f);
+            };
+            if p.rules.is_empty() {
+                push(format!("unparseable sonic-lint pragma: `{}`", p.text));
+            } else if let Some(bad) = p.rules.iter().find(|r| !known_rule(r)) {
+                push(format!("pragma names unknown rule `{bad}`"));
+            } else if !p.justified {
+                push(
+                    "suppression pragma has no justification — say why the \
+                     exception is sound: `// sonic-lint: allow(rule): reason`"
+                        .to_string(),
+                );
+            }
         }
     }
-    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.rule.cmp(b.rule)));
+    out.sort_by(|a, b| {
+        a.path
+            .cmp(&b.path)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+    });
     out
+}
+
+/// Lint one file's source (single-file view of [`lint_files`]; the
+/// crate passes still run, scoped to this file).
+pub fn lint_source(path: &str, src: &str, enabled: &[String]) -> Vec<Finding> {
+    lint_files(&[(path.to_string(), src.to_string())], enabled)
 }
 
 /// Recursively collect `.rs` files under `root`, skipping build output
@@ -180,8 +278,9 @@ pub fn default_roots() -> Vec<PathBuf> {
         .collect()
 }
 
-/// Lint every `.rs` file under `roots` (default roots when empty).
-pub fn lint_paths(roots: &[PathBuf], enabled: &[String]) -> std::io::Result<Vec<Finding>> {
+/// Read every `.rs` file under `roots` (default roots when empty) as
+/// `(path, source)` pairs — the crate the lint passes analyze.
+pub fn read_tree(roots: &[PathBuf]) -> std::io::Result<Vec<(String, String)>> {
     let roots = if roots.is_empty() {
         default_roots()
     } else {
@@ -197,10 +296,47 @@ pub fn lint_paths(roots: &[PathBuf], enabled: &[String]) -> std::io::Result<Vec<
     }
     let mut out = Vec::new();
     for f in &files {
-        let src = fs::read_to_string(f)?;
-        out.extend(lint_source(&f.display().to_string(), &src, enabled));
+        out.push((f.display().to_string(), fs::read_to_string(f)?));
     }
     Ok(out)
+}
+
+/// Lint every `.rs` file under `roots` (default roots when empty).  All
+/// files are analyzed together so the crate passes see the whole graph.
+pub fn lint_paths(roots: &[PathBuf], enabled: &[String]) -> std::io::Result<Vec<Finding>> {
+    Ok(lint_files(&read_tree(roots)?, enabled))
+}
+
+/// Subtract a baseline report (a previous `--json` artifact) from fresh
+/// findings: each baseline `(rule, path, message)` triple forgives that
+/// many matching findings — count-aware, line-number-insensitive, so
+/// unrelated edits don't resurrect grandfathered findings.  Returns the
+/// surviving findings and how many the baseline absorbed.
+pub fn apply_baseline(findings: Vec<Finding>, baseline: &Json) -> (Vec<Finding>, usize) {
+    let mut budget: HashMap<(String, String, String), usize> = HashMap::new();
+    if let Some(items) = baseline.get("findings").and_then(|f| f.as_arr()) {
+        for it in items {
+            let key = (
+                it.get("rule").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                it.get("path").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                it.get("message").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            );
+            *budget.entry(key).or_insert(0) += 1;
+        }
+    }
+    let mut kept = Vec::new();
+    let mut absorbed = 0usize;
+    for f in findings {
+        let key = (f.rule.to_string(), f.path.clone(), f.message.clone());
+        match budget.get_mut(&key) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                absorbed += 1;
+            }
+            _ => kept.push(f),
+        }
+    }
+    (kept, absorbed)
 }
 
 /// Render findings as `path:line: [rule] message` lines.
@@ -219,9 +355,17 @@ pub fn render_json(findings: &[Finding]) -> String {
         .map(|f| {
             json::obj(vec![
                 ("rule", json::s(f.rule)),
+                ("severity", json::s(f.severity)),
                 ("path", json::s(&f.path)),
                 ("line", json::num(f.line as f64)),
                 ("message", json::s(&f.message)),
+                (
+                    "pragma_context",
+                    match &f.pragma_context {
+                        Some(p) => json::s(p),
+                        None => Json::Null,
+                    },
+                ),
             ])
         })
         .collect::<Vec<Json>>();
@@ -239,32 +383,45 @@ mod tests {
 
     /// Expected findings of a fixture: every `lint-expect: rule-a, rule-b`
     /// marker names the rules that must fire on that exact line.
-    fn expected(src: &str) -> BTreeSet<(usize, String)> {
+    fn expected(path: &str, src: &str) -> BTreeSet<(String, usize, String)> {
         let mut want = BTreeSet::new();
         for (i, line) in src.lines().enumerate() {
             if let Some(pos) = line.find("lint-expect:") {
                 for r in line[pos + "lint-expect:".len()..].split(',') {
-                    want.insert((i + 1, r.trim().to_string()));
+                    want.insert((path.to_string(), i + 1, r.trim().to_string()));
                 }
             }
         }
         want
     }
 
-    fn check_fixture(name: &str, src: &str) {
-        let got: BTreeSet<(usize, String)> = lint_source(name, src, &[])
-            .into_iter()
-            .map(|f| (f.line, f.rule.to_string()))
+    fn check_fixture_files(files: &[(&str, &str)]) {
+        let owned: Vec<(String, String)> = files
+            .iter()
+            .map(|(p, s)| (p.to_string(), s.to_string()))
             .collect();
-        let want = expected(src);
+        let got: BTreeSet<(String, usize, String)> = lint_files(&owned, &[])
+            .into_iter()
+            .map(|f| (f.path.clone(), f.line, f.rule.to_string()))
+            .collect();
+        let mut want = BTreeSet::new();
+        for (p, s) in files {
+            want.extend(expected(p, s));
+        }
         assert!(
             !want.is_empty(),
-            "{name}: fixture has no lint-expect markers"
+            "{}: fixture has no lint-expect markers",
+            files[0].0
         );
         assert_eq!(
             got, want,
-            "{name}: findings (left) diverge from lint-expect markers (right)"
+            "{}: findings (left) diverge from lint-expect markers (right)",
+            files[0].0
         );
+    }
+
+    fn check_fixture(name: &str, src: &str) {
+        check_fixture_files(&[(name, src)]);
     }
 
     #[test]
@@ -308,6 +465,58 @@ mod tests {
     }
 
     #[test]
+    fn fixture_atomic_ordering() {
+        check_fixture(
+            "bad_atomic_ordering.rs",
+            include_str!("fixtures/bad_atomic_ordering.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_condvar_predicate() {
+        check_fixture(
+            "bad_condvar_predicate.rs",
+            include_str!("fixtures/bad_condvar_predicate.rs"),
+        );
+    }
+
+    #[test]
+    fn fixture_spin_loop() {
+        check_fixture("bad_spin_loop.rs", include_str!("fixtures/bad_spin_loop.rs"));
+    }
+
+    const CYCLE_A: &str = include_str!("fixtures/bad_cross_file_lock_cycle/a.rs");
+    const CYCLE_B: &str = include_str!("fixtures/bad_cross_file_lock_cycle/b.rs");
+
+    #[test]
+    fn fixture_cross_file_lock_cycle() {
+        check_fixture_files(&[
+            ("bad_cross_file_lock_cycle/a.rs", CYCLE_A),
+            ("bad_cross_file_lock_cycle/b.rs", CYCLE_B),
+        ]);
+    }
+
+    /// The whole reason `lock-graph` exists: PR 9's intra-function
+    /// `lock-order` rule provably misses the cross-file cycle fixture —
+    /// no single function in it nests two classified acquisitions.
+    #[test]
+    fn old_intra_function_rule_misses_the_cross_file_cycle() {
+        for (name, src) in [
+            ("bad_cross_file_lock_cycle/a.rs", CYCLE_A),
+            ("bad_cross_file_lock_cycle/b.rs", CYCLE_B),
+        ] {
+            let s = sanitize::sanitize(src);
+            let t = tokens::lex(&s);
+            let mut out = Vec::new();
+            rules::lock_order(name, &s, &t, &mut out);
+            assert!(
+                out.is_empty(),
+                "{name}: the per-function rule unexpectedly sees the cycle: {out:?}"
+            );
+        }
+    }
+
+    #[test]
     fn fixture_clean_has_zero_findings() {
         let f = lint_source("clean.rs", include_str!("fixtures/clean.rs"), &[]);
         assert!(f.is_empty(), "clean fixture flagged: {f:?}");
@@ -328,6 +537,8 @@ mod tests {
         assert_eq!(f.len(), 2, "{f:?}");
         assert!(f.iter().any(|x| x.rule == RULE_PRAGMA));
         assert!(f.iter().any(|x| x.rule == RULE_NO_LOCK_UNWRAP));
+        // Both findings carry the nearby pragma as context.
+        assert!(f.iter().all(|x| x.pragma_context.is_some()));
     }
 
     #[test]
@@ -338,9 +549,17 @@ mod tests {
         assert_eq!(f[0].rule, RULE_PRAGMA);
     }
 
+    #[test]
+    fn crate_rule_names_are_valid_in_pragmas() {
+        let src = "// sonic-lint: allow(atomic-ordering): intentional race, see docs\nfn f() {}\n";
+        let f = lint_source("f.rs", src, &[]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
     /// The gate the whole PR exists for: the migrated tree must be
-    /// finding-free.  `cargo test` runs with the package root as cwd, so
-    /// the default roots resolve exactly as in CI.
+    /// finding-free under every rule, per-file and whole-crate alike.
+    /// `cargo test` runs with the package root as cwd, so the default
+    /// roots resolve exactly as in CI.
     #[test]
     fn migrated_tree_is_clean() {
         let findings = lint_paths(&[], &[]).expect("scan repo sources");
@@ -351,6 +570,55 @@ mod tests {
         );
     }
 
+    /// The derived-vs-declared contract (README): the whole-crate lock
+    /// graph must be acyclic and every edge must ascend the declared
+    /// `engine → router-lanes → metrics → health` hierarchy.
+    #[test]
+    fn derived_lock_graph_is_acyclic_and_consistent_with_declared() {
+        let files = read_tree(&[]).expect("scan repo sources");
+        let views: Vec<(String, sanitize::Sanitized, tokens::Tokens)> = files
+            .iter()
+            .map(|(p, src)| {
+                let s = sanitize::sanitize(src);
+                let t = tokens::lex(&s);
+                (p.clone(), s, t)
+            })
+            .collect();
+        let fviews: Vec<graph::FileView> = views
+            .iter()
+            .map(|(p, s, t)| graph::FileView { path: p, s, t })
+            .collect();
+        let g = graph::build_lock_graph(&fviews);
+        assert!(
+            !g.classes.is_empty(),
+            "lock graph saw no acquisitions at all — scan roots broken?"
+        );
+        let order = graph::topo_order(&g).unwrap_or_else(|| {
+            panic!(
+                "derived lock graph is cyclic:\n{}",
+                graph::render_lock_graph(&g)
+            )
+        });
+        for e in &g.edges {
+            assert!(
+                rules::class_level(e.from) <= rules::class_level(e.to),
+                "derived edge {} → {} descends the declared hierarchy (first {}:{})",
+                e.from,
+                e.to,
+                e.path,
+                e.line
+            );
+        }
+        // The derived order must be a sub-order of the declared one.
+        for w in order.windows(2) {
+            assert!(
+                rules::class_level(w[0]) <= rules::class_level(w[1]),
+                "derived order {order:?} disagrees with declared {}",
+                rules::DECLARED_ORDER
+            );
+        }
+    }
+
     #[test]
     fn json_report_shape() {
         let f = vec![Finding::new(RULE_LOCK_ORDER, "a.rs", 3, "msg".into())];
@@ -358,5 +626,38 @@ mod tests {
         assert_eq!(j.req("count").unwrap().as_usize(), Some(1));
         let items = j.req("findings").unwrap().as_arr().unwrap();
         assert_eq!(items[0].req("rule").unwrap().as_str(), Some("lock-order"));
+        assert_eq!(items[0].req("severity").unwrap().as_str(), Some("error"));
+        assert_eq!(items[0].req("pragma_context").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn baseline_absorbs_known_findings_count_aware() {
+        let old = vec![
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 3, "msg".into()),
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 9, "msg".into()),
+        ];
+        let baseline = Json::parse(&render_json(&old)).unwrap();
+        // Same two findings at shifted lines: fully absorbed.
+        let fresh = vec![
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 5, "msg".into()),
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 11, "msg".into()),
+        ];
+        let (kept, absorbed) = apply_baseline(fresh, &baseline);
+        assert!(kept.is_empty());
+        assert_eq!(absorbed, 2);
+        // A third identical finding exceeds the budget and survives.
+        let fresh3 = vec![
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 5, "msg".into()),
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 11, "msg".into()),
+            Finding::new(RULE_LOCK_ORDER, "a.rs", 20, "msg".into()),
+        ];
+        let (kept, absorbed) = apply_baseline(fresh3, &baseline);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(absorbed, 2);
+        // A different message is a new finding.
+        let other = vec![Finding::new(RULE_LOCK_ORDER, "a.rs", 5, "other".into())];
+        let (kept, absorbed) = apply_baseline(other, &baseline);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(absorbed, 0);
     }
 }

@@ -1,124 +1,104 @@
-//! The lint rules.  Each rule is a pure function over a [`Sanitized`]
-//! file view; it appends [`Finding`]s with 1-based line numbers.  See
-//! `README.md` for the catalog and the invariant behind each rule.
+//! The per-file lint rules.  Each rule is a pure function over a
+//! [`Sanitized`] file view plus its [`Tokens`] stream; it appends
+//! [`Finding`]s with 1-based line numbers.  See `README.md` for the
+//! catalog and the invariant behind each rule.  Whole-crate rules
+//! (`lock-graph`, `atomic-ordering`) live in [`super::graph`].
+//!
+//! PR 10 re-pointed every rule at the token stream: the PR 9
+//! implementations matched raw sanitized text (`match_indices` plus
+//! whitespace skipping), which could not see function boundaries, loop
+//! bodies, or receiver chains.  The observable behavior is preserved —
+//! the fixtures pin it — but the matching is now structural: a rule
+//! asks "is this ident a method call with an empty argument list"
+//! instead of "does the string `.lock()` appear".
 
 use super::sanitize::Sanitized;
+use super::tokens::{BlockKind, TokKind, Tokens};
 use super::Finding;
 
-/// Skip ASCII whitespace (incl. newlines) starting at `i`.
-fn skip_ws(text: &str, mut i: usize) -> usize {
-    let b = text.as_bytes();
-    while i < b.len() && (b[i] as char).is_ascii_whitespace() {
-        i += 1;
+/// Does `.unwrap()` or `.expect(` follow token `j` (the token right
+/// after a call's closing paren)?  Whitespace/newlines between tokens
+/// are already gone, so multi-line chains match for free.
+fn followed_by_unwrap(t: &Tokens, j: usize) -> bool {
+    if !t.is_punct(j, ".") {
+        return false;
     }
-    i
+    if t.is_ident(j + 1, "unwrap") && t.is_punct(j + 2, "(") && t.is_punct(j + 3, ")") {
+        return true;
+    }
+    t.is_ident(j + 1, "expect") && t.is_punct(j + 2, "(")
 }
 
-/// Given `text[open]` == `(`, return the offset just past the matching
-/// `)` and the number of top-level commas inside, or `None` if
-/// unbalanced.  Sanitized text has no parens hiding in strings/comments.
-fn match_paren(text: &str, open: usize) -> Option<(usize, usize)> {
-    let b = text.as_bytes();
-    debug_assert_eq!(b[open], b'(');
-    let mut depth = 0usize;
-    let mut commas = 0usize;
-    let mut nonblank = false;
-    for (k, &c) in b.iter().enumerate().skip(open) {
-        match c {
-            b'(' | b'[' | b'{' => depth += 1,
-            b')' | b']' | b'}' => {
-                depth -= 1;
-                if depth == 0 {
-                    return Some((k + 1, if nonblank { commas } else { usize::MAX }));
-                }
-            }
-            b',' if depth == 1 => commas += 1,
-            c if !(c as char).is_ascii_whitespace() => nonblank = true,
-            _ => {}
-        }
+/// Method-call shape at ident token `i`: requires `.name(`.  Returns
+/// `(dot, open)` token indices.
+fn method_call(t: &Tokens, i: usize) -> Option<(usize, usize)> {
+    if i == 0 || !t.is_punct(i - 1, ".") || !t.is_punct(i + 1, "(") {
+        return None;
     }
-    None
-}
-
-/// Does `.unwrap()` or `.expect(` immediately follow offset `i`
-/// (whitespace-tolerant, so multi-line chains match)?
-fn followed_by_unwrap(text: &str, i: usize) -> bool {
-    let j = skip_ws(text, i);
-    text[j..].starts_with(".unwrap()") || text[j..].starts_with(".expect(")
-}
-
-/// The identifier chain segment directly before offset `end` (which
-/// points at the `.` of a method call): for `self.ctx.counters` returns
-/// `counters`; for `cache()` returns `cache`; empty when unresolvable.
-fn receiver_ident(text: &str, end: usize) -> &str {
-    let b = text.as_bytes();
-    let mut i = end;
-    // strip a trailing empty call `()` so `cache().lock…` resolves to cache
-    if i >= 2 && &text[i - 2..i] == "()" {
-        i -= 2;
-    }
-    let stop = i;
-    while i > 0 {
-        let c = b[i - 1] as char;
-        if c.is_ascii_alphanumeric() || c == '_' {
-            i -= 1;
-        } else {
-            break;
-        }
-    }
-    &text[i..stop]
+    Some((i - 1, i + 1))
 }
 
 /// `no-lock-unwrap`: `Mutex`/`RwLock`/`Condvar` acquisition must go
 /// through `util::sync` so a poisoned lock recovers instead of
 /// cascading panics across threads.
-pub fn no_lock_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
-    let text = &s.text;
-    for pat in [".lock()", ".read()", ".write()"] {
-        for (i, _) in text.match_indices(pat) {
-            if followed_by_unwrap(text, i + pat.len()) {
+pub fn no_lock_unwrap(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    for i in 0..t.toks.len() {
+        let Some(tok) = t.tok(i) else { continue };
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let Some((dot, open)) = method_call(t, i) else {
+            continue;
+        };
+        match tok.text.as_str() {
+            // `.lock()` / `.read()` / `.write()` — empty argument list
+            // (so `stream.read(&mut buf)` is untouched).
+            name @ ("lock" | "read" | "write") => {
+                let Some((close, _, nonblank)) = t.call_args(open) else {
+                    continue;
+                };
+                if nonblank || !followed_by_unwrap(t, close + 1) {
+                    continue;
+                }
                 out.push(Finding::new(
                     super::RULE_NO_LOCK_UNWRAP,
                     path,
-                    s.line_of(i),
+                    t.line(dot),
                     format!(
-                        "`{}` acquisition unwraps the poison error; use \
+                        "`{name}` acquisition unwraps the poison error; use \
                          util::sync::{} so a panicking holder cannot cascade",
-                        &pat[1..pat.len() - 2],
-                        match pat {
-                            ".read()" => "read_or_recover()",
-                            ".write()" => "write_or_recover()",
+                        match name {
+                            "read" => "read_or_recover()",
+                            "write" => "write_or_recover()",
                             _ => "lock_or_recover()",
                         }
                     ),
                 ));
             }
-        }
-    }
-    // Condvar::wait(guard) / wait_timeout(guard, dur) re-acquire the
-    // mutex and surface poison the same way.  Ticket::wait() takes no
-    // argument and Ticket::wait_timeout(dur) takes one — the top-level
-    // comma count tells them apart.
-    for (pat, min_commas) in [(".wait(", 0), (".wait_timeout(", 1), (".wait_while(", 1)] {
-        for (i, _) in text.match_indices(pat) {
-            let open = i + pat.len() - 1;
-            let Some((close, commas)) = match_paren(text, open) else {
-                continue;
-            };
-            // usize::MAX marks empty argument lists (Ticket::wait()).
-            if commas == usize::MAX || commas < min_commas {
-                continue;
+            // Condvar::wait(guard) / wait_timeout(guard, dur) re-acquire
+            // the mutex and surface poison the same way.  Ticket::wait()
+            // takes no argument and Ticket::wait_timeout(dur) takes one —
+            // the top-level comma count tells them apart.
+            name @ ("wait" | "wait_timeout" | "wait_while") => {
+                let min_commas = if name == "wait" { 0 } else { 1 };
+                let Some((close, commas, nonblank)) = t.call_args(open) else {
+                    continue;
+                };
+                if !nonblank || commas < min_commas {
+                    continue;
+                }
+                if followed_by_unwrap(t, close + 1) {
+                    out.push(Finding::new(
+                        super::RULE_NO_LOCK_UNWRAP,
+                        path,
+                        t.line(dot),
+                        "condvar wait unwraps the poison error on re-acquire; use \
+                         util::sync::wait_or_recover / wait_timeout_or_recover"
+                            .to_string(),
+                    ));
+                }
             }
-            if followed_by_unwrap(text, close) {
-                out.push(Finding::new(
-                    super::RULE_NO_LOCK_UNWRAP,
-                    path,
-                    s.line_of(i),
-                    "condvar wait unwraps the poison error on re-acquire; use \
-                     util::sync::wait_or_recover / wait_timeout_or_recover"
-                        .to_string(),
-                ));
-            }
+            _ => {}
         }
     }
 }
@@ -126,18 +106,22 @@ pub fn no_lock_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
 /// `no-partial-cmp-unwrap`: `partial_cmp().unwrap()` panics on NaN —
 /// float ordering must use `total_cmp` (regressions: bench stats,
 /// router logits, thermal pivot selection).
-pub fn no_partial_cmp_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
-    let text = &s.text;
-    for (i, _) in text.match_indices(".partial_cmp(") {
-        let open = i + ".partial_cmp(".len() - 1;
-        let Some((close, _)) = match_paren(text, open) else {
+pub fn no_partial_cmp_unwrap(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    for i in 0..t.toks.len() {
+        if !t.is_ident(i, "partial_cmp") {
+            continue;
+        }
+        let Some((dot, open)) = method_call(t, i) else {
             continue;
         };
-        if followed_by_unwrap(text, close) {
+        let Some((close, _, _)) = t.call_args(open) else {
+            continue;
+        };
+        if followed_by_unwrap(t, close + 1) {
             out.push(Finding::new(
                 super::RULE_NO_PARTIAL_CMP_UNWRAP,
                 path,
-                s.line_of(i),
+                t.line(dot),
                 "partial_cmp().unwrap() panics on NaN; use f32::total_cmp / f64::total_cmp"
                     .to_string(),
             ));
@@ -149,52 +133,60 @@ pub fn no_partial_cmp_unwrap(path: &str, s: &Sanitized, out: &mut Vec<Finding>) 
 /// accessor silently truncates (nanos overflow u32 in 4.3 s, millis in
 /// 49.7 days).  Divide in u128 first, clamp with `.min(...)`, or use
 /// `u64::try_from(..).unwrap_or(u64::MAX)`.
-pub fn no_duration_narrowing(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
-    let text = &s.text;
-    for pat in [".as_nanos()", ".as_micros()", ".as_millis()", ".as_secs()"] {
-        for (i, _) in text.match_indices(pat) {
-            let j = skip_ws(text, i + pat.len());
-            let rest = &text[j..];
-            let Some(ty) = rest.strip_prefix("as ") else {
-                continue;
-            };
-            let ty = ty.trim_start();
-            let narrow = ["u8", "u16", "u32", "i8", "i16", "i32", "usize", "isize"]
-                .iter()
-                .any(|t| ty.starts_with(t) && !ty[t.len()..].starts_with(|c: char| c.is_ascii_alphanumeric()));
-            // u128-returning accessors also truncate into u64/i64.
-            let from_u128 = pat != ".as_secs()";
-            let narrow64 = from_u128
-                && ["u64", "i64", "f32"]
-                    .iter()
-                    .any(|t| ty.starts_with(t) && !ty[t.len()..].starts_with(|c: char| c.is_ascii_alphanumeric()));
-            if narrow || narrow64 {
-                out.push(Finding::new(
-                    super::RULE_NO_DURATION_NARROWING,
-                    path,
-                    s.line_of(i),
-                    format!(
-                        "`{} as …` silently truncates; divide in u128, clamp, or \
-                         use try_from with a saturating fallback",
-                        &pat[1..]
-                    ),
-                ));
-            }
+pub fn no_duration_narrowing(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "usize", "isize"];
+    const NARROW64: &[&str] = &["u64", "i64", "f32"];
+    for i in 0..t.toks.len() {
+        let Some(tok) = t.tok(i) else { continue };
+        let accessor = tok.text.as_str();
+        if !matches!(accessor, "as_nanos" | "as_micros" | "as_millis" | "as_secs")
+            || tok.kind != TokKind::Ident
+        {
+            continue;
+        }
+        let Some((dot, open)) = method_call(t, i) else {
+            continue;
+        };
+        let Some((close, _, nonblank)) = t.call_args(open) else {
+            continue;
+        };
+        if nonblank || !t.is_ident(close + 1, "as") {
+            continue;
+        }
+        let ty = t.text(close + 2);
+        // u128-returning accessors also truncate into u64/i64.
+        let from_u128 = accessor != "as_secs";
+        if NARROW.contains(&ty) || (from_u128 && NARROW64.contains(&ty)) {
+            out.push(Finding::new(
+                super::RULE_NO_DURATION_NARROWING,
+                path,
+                t.line(dot),
+                format!(
+                    "`{accessor}() as …` silently truncates; divide in u128, clamp, \
+                     or use try_from with a saturating fallback"
+                ),
+            ));
         }
     }
 }
 
 /// Blocking-call markers for `no-blocking-on-shared-pool`: things that
-/// park the calling worker until *another* task makes progress.
-const BLOCKING: &[(&str, &str)] = &[
-    (".wait()", "Ticket::wait"),
-    (".wait_timeout(", "bounded wait still serializes a shared worker"),
-    (".read_exact(", "socket/stream read"),
-    (".read_to_end(", "socket/stream read"),
-    (".read_to_string(", "socket/stream read"),
-    (".accept()", "listener accept"),
-    (".recv()", "channel recv"),
-    (".join()", "thread join"),
+/// park the calling worker until *another* task makes progress.  The
+/// bool is "only when the argument list is empty" (`.wait()` is
+/// Ticket::wait; `.wait(guard)` is the condvar case handled separately).
+const BLOCKING: &[(&str, &str, bool)] = &[
+    ("wait", "Ticket::wait", true),
+    (
+        "wait_timeout",
+        "bounded wait still serializes a shared worker",
+        false,
+    ),
+    ("read_exact", "socket/stream read", false),
+    ("read_to_end", "socket/stream read", false),
+    ("read_to_string", "socket/stream read", false),
+    ("accept", "listener accept", true),
+    ("recv", "channel recv", true),
+    ("join", "thread join", true),
 ];
 
 /// `no-blocking-on-shared-pool`: closures submitted to the global
@@ -202,50 +194,55 @@ const BLOCKING: &[(&str, &str)] = &[
 /// needs pool capacity to finish — with all workers parked, nothing can
 /// ever wake them (the deadlock class documented in `serve/net`, which
 /// is why the gateway owns a *dedicated* pool).
-pub fn no_blocking_on_shared_pool(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
-    let text = &s.text;
-    for (i, _) in text.match_indices("shared()") {
-        let j = skip_ws(text, i + "shared()".len());
-        let rest = &text[j..];
-        let entry = [".submit(", ".submit_boxed(", ".scoped("]
-            .iter()
-            .find(|p| rest.starts_with(**p));
-        let Some(entry) = entry else {
+pub fn no_blocking_on_shared_pool(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    for i in 0..t.toks.len() {
+        // `shared()` …
+        if !t.is_ident(i, "shared") || !t.is_punct(i + 1, "(") || !t.is_punct(i + 2, ")") {
             continue;
-        };
-        let open = j + entry.len() - 1;
-        let Some((close, _)) = match_paren(text, open) else {
-            continue;
-        };
-        let region = &text[open..close];
-        for (marker, what) in BLOCKING {
-            for (k, _) in region.match_indices(marker) {
-                // `.wait_timeout(` with a guard arg is already flagged by
-                // no-lock-unwrap's condvar check; here any parking call
-                // counts, so no disambiguation is needed.
-                out.push(Finding::new(
-                    super::RULE_NO_BLOCKING_ON_SHARED_POOL,
-                    path,
-                    s.line_of(open + k),
-                    format!(
-                        "blocking call `{}` ({what}) inside a closure on the shared \
-                         kernel pool can park every worker with no one left to wake \
-                         them; use a dedicated pool or resolve before submitting",
-                        marker.trim_end_matches('(')
-                    ),
-                ));
-            }
         }
-        // Ungated condvar wait: `.wait(guard)` — one non-empty argument.
-        for (k, _) in region.match_indices(".wait(") {
-            let Some((_, commas)) = match_paren(region, k + ".wait(".len() - 1) else {
+        // … `.submit(` / `.submit_boxed(` / `.scoped(`
+        if !t.is_punct(i + 3, ".") {
+            continue;
+        }
+        let entry = t.text(i + 4);
+        if !matches!(entry, "submit" | "submit_boxed" | "scoped") || !t.is_punct(i + 5, "(") {
+            continue;
+        }
+        let Some((close, _, _)) = t.call_args(i + 5) else {
+            continue;
+        };
+        // Scan the closure region for parking calls.
+        for j in i + 6..close {
+            let Some(tok) = t.tok(j) else { continue };
+            if tok.kind != TokKind::Ident {
+                continue;
+            }
+            let Some((dot, open)) = method_call(t, j) else {
                 continue;
             };
-            if commas != usize::MAX {
+            let Some((_, _, nonblank)) = t.call_args(open) else {
+                continue;
+            };
+            if let Some(&(name, what, _)) = BLOCKING
+                .iter()
+                .find(|&&(n, _, empty_only)| n == tok.text && (!empty_only || !nonblank))
+            {
                 out.push(Finding::new(
                     super::RULE_NO_BLOCKING_ON_SHARED_POOL,
                     path,
-                    s.line_of(open + k),
+                    t.line(dot),
+                    format!(
+                        "blocking call `.{name}` ({what}) inside a closure on the shared \
+                         kernel pool can park every worker with no one left to wake \
+                         them; use a dedicated pool or resolve before submitting"
+                    ),
+                ));
+            } else if tok.text == "wait" && nonblank {
+                // Ungated condvar wait: `.wait(guard)` — non-empty args.
+                out.push(Finding::new(
+                    super::RULE_NO_BLOCKING_ON_SHARED_POOL,
+                    path,
+                    t.line(dot),
                     "Condvar::wait without a timeout inside a closure on the shared \
                      kernel pool can park every worker forever"
                         .to_string(),
@@ -258,7 +255,9 @@ pub fn no_blocking_on_shared_pool(path: &str, s: &Sanitized, out: &mut Vec<Findi
 /// The declared lock hierarchy: a thread may acquire a lock of a
 /// *higher* level while holding a lower one, never the reverse.
 /// Receivers are classified by field name; unknown names are ignored.
-const HIERARCHY: &[(&str, u8, &str)] = &[
+/// [`super::graph`] *derives* the same order from the whole-crate lock
+/// graph and asserts it against this table.
+pub const HIERARCHY: &[(&str, u8, &str)] = &[
     // level 0 — engine lifecycle (outermost)
     ("shutdown_lock", 0, "engine"),
     ("workers", 0, "engine"),
@@ -279,7 +278,11 @@ const HIERARCHY: &[(&str, u8, &str)] = &[
     ("health", 3, "health"),
 ];
 
-fn classify(ident: &str, path: &str) -> Option<(u8, &'static str)> {
+/// Human-readable rendering of the declared order, used in messages and
+/// by the `--lock-graph` dump.
+pub const DECLARED_ORDER: &str = "engine → router-lanes → metrics → health";
+
+pub fn classify(ident: &str, path: &str) -> Option<(u8, &'static str)> {
     // `state` is the health tracker's field in health.rs; elsewhere the
     // name is too generic to classify.
     if ident == "state" && path.ends_with("health.rs") {
@@ -291,112 +294,279 @@ fn classify(ident: &str, path: &str) -> Option<(u8, &'static str)> {
         .map(|&(_, lvl, class)| (lvl, class))
 }
 
-/// Acquisition patterns `lock-order` tracks (wrapped and raw).
-const ACQUIRE: &[&str] = &[
-    ".lock_or_recover()",
-    ".read_or_recover()",
-    ".write_or_recover()",
-    ".lock()",
-    ".read()",
-    ".write()",
-];
+/// Level of a lock class name from [`HIERARCHY`].
+pub fn class_level(class: &str) -> u8 {
+    HIERARCHY
+        .iter()
+        .find(|(_, _, c)| *c == class)
+        .map(|&(_, l, _)| l)
+        .unwrap_or(u8::MAX)
+}
+
+/// Is this ident one of the acquisition methods `lock-order` tracks
+/// (wrapped and raw)?  All take an empty argument list.
+pub fn is_acquire_ident(name: &str) -> bool {
+    matches!(
+        name,
+        "lock_or_recover" | "read_or_recover" | "write_or_recover" | "lock" | "read" | "write"
+    )
+}
+
+/// If the acquisition whose receiver chain ends at the `.` token `dot`
+/// is the tail of a plain `let <name> = recv.lock…();` statement,
+/// return the guard name token's text.  Type-annotated and tuple
+/// bindings are treated as transient (not held) — same behavior the
+/// text-based PR 9 rule pinned.
+pub fn binds_guard(t: &Tokens, dot: usize, close: usize) -> Option<String> {
+    if !t.is_punct(close + 1, ";") {
+        return None;
+    }
+    let start = t.stmt_start(dot);
+    if !t.is_ident(start, "let") {
+        return None;
+    }
+    let mut j = start + 1;
+    if t.is_ident(j, "mut") {
+        j += 1;
+    }
+    let name = t.tok(j)?;
+    if name.kind != TokKind::Ident || !t.is_punct(j + 1, "=") {
+        return None;
+    }
+    Some(name.text.clone())
+}
 
 /// `lock-order`: intra-function nested acquisitions must follow the
 /// declared hierarchy `engine → router lanes → metrics → health`.
 /// Heuristic guard tracking: `let g = recv.lock…();` holds until
 /// `drop(g)` or the binding's brace scope closes; acquisitions chained
 /// into a longer expression are transient and only *checked*, not held.
-pub fn lock_order(path: &str, s: &Sanitized, out: &mut Vec<Finding>) {
+/// Cross-function and cross-file nesting is the `lock-graph` crate
+/// rule's job ([`super::graph`]).
+pub fn lock_order(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
     let mut depth: i32 = 0;
     // (guard name, level, class, depth at binding)
     let mut held: Vec<(String, u8, &'static str, i32)> = Vec::new();
-    for ln in 1..=s.line_count() {
-        let line = s.line(ln).to_string();
-        // Acquisitions on this line, in textual order.
-        let mut hits: Vec<usize> = Vec::new();
-        for pat in ACQUIRE {
-            for (i, _) in line.match_indices(pat) {
-                hits.push(i);
-            }
-        }
-        hits.sort_unstable();
-        hits.dedup();
-        for &i in &hits {
-            let recv = receiver_ident(&line, i).to_string();
-            let Some((lvl, class)) = classify(&recv, path) else {
-                continue;
-            };
-            for (gname, glvl, gclass, _) in &held {
-                if *glvl > lvl {
-                    out.push(Finding::new(
-                        super::RULE_LOCK_ORDER,
-                        path,
-                        ln,
-                        format!(
-                            "acquires '{recv}' ({class}, level {lvl}) while holding \
-                             '{gname}' ({gclass}, level {glvl}); declared order is \
-                             engine → router-lanes → metrics → health"
-                        ),
-                    ));
-                }
-            }
-            // Held only when the statement binds the guard itself:
-            // `let g = recv.lock…();`
-            if let Some(guard_name) = binds_guard(&line, i) {
-                held.push((guard_name, lvl, class, depth));
-            }
-        }
-        // Explicit early releases.
-        for (i, _) in line.match_indices("drop(") {
-            if let Some((close, _)) = match_paren(&line, i + "drop(".len() - 1) {
-                let name = line[i + "drop(".len()..close - 1].trim();
-                held.retain(|(g, _, _, _)| g != name);
-            }
-        }
-        // Brace tracking: guards die when their binding scope closes.
-        for c in line.chars() {
-            match c {
-                '{' => depth += 1,
-                '}' => {
+    for i in 0..t.toks.len() {
+        let Some(tok) = t.tok(i) else { continue };
+        if tok.kind == TokKind::Punct {
+            match tok.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
                     depth -= 1;
                     held.retain(|&(_, _, _, d)| d <= depth);
                 }
                 _ => {}
             }
+            continue;
+        }
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        // Explicit early release: `drop(name)`.
+        if tok.text == "drop" && t.is_punct(i + 1, "(") && t.is_punct(i + 3, ")") {
+            let name = t.text(i + 2).to_string();
+            held.retain(|(g, _, _, _)| *g != name);
+            continue;
+        }
+        if !is_acquire_ident(&tok.text) {
+            continue;
+        }
+        let Some((dot, open)) = method_call(t, i) else {
+            continue;
+        };
+        let Some((close, _, nonblank)) = t.call_args(open) else {
+            continue;
+        };
+        if nonblank {
+            continue; // `.read(&mut buf)` and friends are not lock acquisitions
+        }
+        let Some(recv) = t.receiver_of(dot).map(str::to_string) else {
+            continue;
+        };
+        let Some((lvl, class)) = classify(&recv, path) else {
+            continue;
+        };
+        for (gname, glvl, gclass, _) in &held {
+            if *glvl > lvl {
+                out.push(Finding::new(
+                    super::RULE_LOCK_ORDER,
+                    path,
+                    t.line(dot),
+                    format!(
+                        "acquires '{recv}' ({class}, level {lvl}) while holding \
+                         '{gname}' ({gclass}, level {glvl}); declared order is \
+                         {DECLARED_ORDER}"
+                    ),
+                ));
+            }
+        }
+        if let Some(guard_name) = binds_guard(t, dot, close) {
+            held.push((guard_name, lvl, class, depth));
         }
     }
 }
 
-/// If the acquisition at offset `i` of `line` is the tail of a plain
-/// `let <name> = recv.lock…();` statement, return the guard name.
-fn binds_guard(line: &str, i: usize) -> Option<String> {
-    let head = line[..i].trim_start();
-    let head = head.strip_prefix("let ")?;
-    let head = head.strip_prefix("mut ").unwrap_or(head);
-    let eq = head.find('=')?;
-    let name = head[..eq].trim();
-    if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
-        return None;
+/// `condvar-predicate`: every poison-recovering condvar wait must sit
+/// inside a `while`/`loop` that re-checks its predicate — condvars are
+/// allowed spurious wakeups, and a bare `if`-gated or straight-line
+/// wait observes them as phantom completions.  (`for` does not count:
+/// its body runs once per item and never re-tests a predicate.)
+pub fn condvar_predicate(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    for i in 0..t.toks.len() {
+        let Some(tok) = t.tok(i) else { continue };
+        if tok.kind != TokKind::Ident
+            || !matches!(tok.text.as_str(), "wait_or_recover" | "wait_timeout_or_recover")
+        {
+            continue;
+        }
+        let Some((dot, _open)) = method_call(t, i) else {
+            continue;
+        };
+        if !t.in_predicate_loop(i) {
+            out.push(Finding::new(
+                super::RULE_CONDVAR_PREDICATE,
+                path,
+                t.line(dot),
+                format!(
+                    "`.{}` outside a while/loop predicate loop: condvars wake \
+                     spuriously, so the caller must re-check its predicate in a \
+                     loop around the wait",
+                    tok.text
+                ),
+            ));
+        }
     }
-    // The guard is only held if the acquisition ends the statement.
-    let after = line[i..].find(')').map(|p| i + p + 1)?;
-    let rest = line[after..].trim_start();
-    if rest.starts_with(';') {
-        Some(name.to_string())
-    } else {
-        None
+}
+
+/// Atomic read-modify-write / access method names, used to tell "pure
+/// atomic traffic" from real work inside a loop body.
+pub fn is_atomic_op(name: &str) -> bool {
+    matches!(
+        name,
+        "load"
+            | "store"
+            | "swap"
+            | "fetch_add"
+            | "fetch_sub"
+            | "fetch_and"
+            | "fetch_or"
+            | "fetch_xor"
+            | "fetch_nand"
+            | "compare_exchange"
+            | "compare_exchange_weak"
+    )
+}
+
+/// Calls that park, yield, or otherwise hand the CPU to someone else —
+/// their presence makes a load-only loop a legitimate backoff loop.
+/// `yield_now` is deliberately on the list: a yielding drain loop is a
+/// scheduling decision, not an accidental busy-wait.
+fn is_parking_call(name: &str) -> bool {
+    matches!(
+        name,
+        "sleep"
+            | "park"
+            | "park_timeout"
+            | "yield_now"
+            | "wait"
+            | "wait_timeout"
+            | "wait_while"
+            | "wait_or_recover"
+            | "wait_timeout_or_recover"
+            | "recv"
+            | "recv_timeout"
+            | "try_recv"
+            | "join"
+    )
+}
+
+/// Keywords that read like calls when followed by `(`.
+fn is_keyword(name: &str) -> bool {
+    matches!(
+        name,
+        "if" | "while"
+            | "match"
+            | "for"
+            | "loop"
+            | "return"
+            | "break"
+            | "continue"
+            | "let"
+            | "in"
+            | "as"
+            | "move"
+            | "mut"
+            | "ref"
+            | "else"
+            | "fn"
+            | "unsafe"
+    )
+}
+
+/// `no-spin-loop`: a `while`/`loop` whose condition and body touch
+/// atomics (at least one `.load(`) and contain *no* parking call and
+/// *no* other function call is a busy-wait — it burns a core and, on a
+/// shared pool, can starve the very thread that would flip the flag.
+/// Park, sleep, yield, or wait on a condvar instead.
+pub fn no_spin_loop(path: &str, _s: &Sanitized, t: &Tokens, out: &mut Vec<Finding>) {
+    for b in &t.blocks {
+        if !matches!(b.kind, BlockKind::While | BlockKind::Loop) {
+            continue;
+        }
+        // Only innermost loops: an outer loop is judged by its inner
+        // loops' behavior, which are scanned on their own.
+        let nested = t.blocks.iter().any(|b2| {
+            matches!(b2.kind, BlockKind::While | BlockKind::Loop | BlockKind::For)
+                && b.open < b2.open
+                && b2.close < b.close
+        });
+        if nested {
+            continue;
+        }
+        let start = b.kw.unwrap_or(b.open);
+        let mut has_load = false;
+        let mut parks = false;
+        let mut other_work = false;
+        for j in start..=b.close {
+            let Some(tok) = t.tok(j) else { continue };
+            if tok.kind != TokKind::Ident || !t.is_punct(j + 1, "(") {
+                continue;
+            }
+            let name = tok.text.as_str();
+            if name == "load" && t.is_punct(j.wrapping_sub(1), ".") {
+                has_load = true;
+            } else if is_parking_call(name) {
+                parks = true;
+            } else if !is_atomic_op(name) && !is_keyword(name) {
+                other_work = true;
+            }
+        }
+        if has_load && !parks && !other_work {
+            out.push(Finding::new(
+                super::RULE_NO_SPIN_LOOP,
+                path,
+                t.line(start),
+                "loop body only polls atomics with no park/sleep/yield/condvar: \
+                 a busy-wait burns a core and can starve the thread that would \
+                 make progress; park or wait on a condvar instead"
+                    .to_string(),
+            ));
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::sanitize::sanitize;
+    use super::super::tokens::lex;
     use super::*;
 
-    fn run(rule: fn(&str, &Sanitized, &mut Vec<Finding>), src: &str) -> Vec<Finding> {
+    fn run(rule: fn(&str, &Sanitized, &Tokens, &mut Vec<Finding>), src: &str) -> Vec<Finding> {
         let s = sanitize(src);
+        let t = lex(&s);
         let mut out = Vec::new();
-        rule("test.rs", &s, &mut out);
+        rule("test.rs", &s, &t, &mut out);
         out
     }
 
@@ -459,6 +629,16 @@ mod tests {
     }
 
     #[test]
+    fn lock_order_sees_multiline_bindings() {
+        // The token stream doesn't care where the line breaks fall —
+        // this was invisible to the PR 9 line-based matcher.
+        let src = "fn f(s: &S) {\n    let h =\n        s.health.lock_or_recover();\n    let c = s.counters.lock_or_recover();\n}\n";
+        let f = run(lock_order, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
     fn shared_pool_blocking_flagged() {
         let src = "shared().submit(move || {\n    let _ = ticket.wait();\n});\n";
         let f = run(no_blocking_on_shared_pool, src);
@@ -466,5 +646,44 @@ mod tests {
         assert_eq!(f[0].line, 2);
         let ok = "shared().submit(move || {\n    counter.fetch_add(1, Ordering::SeqCst);\n});\n";
         assert!(run(no_blocking_on_shared_pool, ok).is_empty());
+    }
+
+    #[test]
+    fn condvar_predicate_requires_a_loop() {
+        let bad = "fn f(cv: &Condvar, m: &Mutex<bool>) {\n    let g = m.lock_or_recover();\n    let g = cv.wait_or_recover(g);\n}\n";
+        let f = run(condvar_predicate, bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        let good = "fn f(cv: &Condvar, m: &Mutex<bool>) {\n    let mut g = m.lock_or_recover();\n    while !*g {\n        g = cv.wait_or_recover(g);\n    }\n}\n";
+        assert!(run(condvar_predicate, good).is_empty());
+        let in_loop = "fn f(cv: &Condvar, m: &Mutex<bool>) {\n    let mut g = m.lock_or_recover();\n    loop {\n        if *g { break; }\n        g = cv.wait_timeout_or_recover(g, d).0;\n    }\n}\n";
+        assert!(run(condvar_predicate, in_loop).is_empty());
+    }
+
+    #[test]
+    fn condvar_predicate_loop_must_be_in_same_fn() {
+        // An fn item defined inside a loop does not inherit the loop.
+        let src = "fn outer() {\n    loop {\n        fn inner(cv: &Condvar, g: G) {\n            cv.wait_or_recover(g);\n        }\n    }\n}\n";
+        assert_eq!(run(condvar_predicate, src).len(), 1);
+    }
+
+    #[test]
+    fn spin_loop_flagged_only_without_parking_or_work() {
+        let bad = "fn f(a: &AtomicBool) {\n    while !a.load(Ordering::Acquire) {\n    }\n}\n";
+        let f = run(no_spin_loop, bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        let sleeps = "fn f(a: &AtomicBool) {\n    while !a.load(Ordering::Acquire) {\n        thread::sleep(POLL);\n    }\n}\n";
+        assert!(run(no_spin_loop, sleeps).is_empty());
+        let works = "fn f(a: &AtomicBool, q: &Q) {\n    while !a.load(Ordering::Acquire) {\n        q.drain_one();\n    }\n}\n";
+        assert!(run(no_spin_loop, works).is_empty());
+        let yields = "fn f(p: &Pool) {\n    while p.pending.load(Ordering::Acquire) > 0 {\n        thread::yield_now();\n    }\n}\n";
+        assert!(run(no_spin_loop, yields).is_empty());
+    }
+
+    #[test]
+    fn spin_loop_skips_outer_loop_with_inner_loops() {
+        let src = "fn f(a: &AtomicBool) {\n    loop {\n        while !a.load(Ordering::Acquire) {\n            thread::sleep(POLL);\n        }\n        step();\n    }\n}\n";
+        assert!(run(no_spin_loop, src).is_empty());
     }
 }

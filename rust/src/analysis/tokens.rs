@@ -1,0 +1,590 @@
+//! Token stream over [`super::sanitize::Sanitized`] text.
+//!
+//! PR 9's rules matched raw text (`match_indices` + whitespace skipping);
+//! that was enough for single-pattern rules but cannot answer the
+//! questions the concurrency rules need: *which function am I in*, *is
+//! this call inside a `while` body*, *what does this `(` match*, *what
+//! chain segment receives this method call*.  This module lexes the
+//! sanitized text once into identifiers / numbers / lifetimes /
+//! punctuation with byte offsets and line numbers, then derives
+//! structure shared by every rule:
+//!
+//! - bracket matching for `(` `[` `{` (tolerant of unbalanced input);
+//! - a block tree: each `{` classified by the construct that opened it
+//!   (`fn` / `while` / `loop` / `for` / `if` / `match` / other), with
+//!   the controlling keyword's token index kept so condition spans
+//!   (`while <here> {`) are addressable;
+//! - function-item boundaries (`fn name … { … }`), nested items
+//!   resolved to the innermost enclosing function.
+//!
+//! The lexer is deliberately not a parser: it only needs to be right
+//! about the token shapes the rules interrogate, and the sanitizer has
+//! already removed every way (comments, strings, char literals) that
+//! non-code bytes could masquerade as tokens.
+
+use super::sanitize::Sanitized;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    /// `'ident` — kept distinct so lifetimes never look like identifiers.
+    Lifetime,
+    /// A single punctuation character.
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// Byte offset into the sanitized text.
+    pub off: usize,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// What construct opened a `{ … }` block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    Fn,
+    While,
+    Loop,
+    For,
+    If,
+    Match,
+    Other,
+}
+
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Token index of the `{`.
+    pub open: usize,
+    /// Token index of the matching `}` (or the last token when unbalanced).
+    pub close: usize,
+    pub kind: BlockKind,
+    /// Token index of the controlling keyword (`while`/`if`/`match`/…),
+    /// when there is one: `kw..open` is the condition/scrutinee span.
+    pub kw: Option<usize>,
+}
+
+/// One `fn name(…) { … }` item.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Token index of the body `{`.
+    pub open: usize,
+    /// Token index of the body `}`.
+    pub close: usize,
+    pub line: usize,
+}
+
+/// Lexed view of one sanitized file.
+pub struct Tokens {
+    pub toks: Vec<Tok>,
+    /// For each token: the matching bracket's token index, or
+    /// `usize::MAX` when the token is not a (matched) bracket.
+    match_of: Vec<usize>,
+    pub blocks: Vec<Block>,
+    pub fns: Vec<FnItem>,
+}
+
+const NOT_MATCHED: usize = usize::MAX;
+
+impl Tokens {
+    pub fn tok(&self, i: usize) -> Option<&Tok> {
+        self.toks.get(i)
+    }
+
+    pub fn text(&self, i: usize) -> &str {
+        self.toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+    }
+
+    pub fn line(&self, i: usize) -> usize {
+        self.toks.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    pub fn is_punct(&self, i: usize, s: &str) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Punct && t.text == s)
+            .unwrap_or(false)
+    }
+
+    pub fn is_ident(&self, i: usize, s: &str) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Ident && t.text == s)
+            .unwrap_or(false)
+    }
+
+    /// The matching bracket of the bracket token at `i`.
+    pub fn match_of(&self, i: usize) -> Option<usize> {
+        match self.match_of.get(i) {
+            Some(&m) if m != NOT_MATCHED => Some(m),
+            _ => None,
+        }
+    }
+
+    /// For a `(` at `open`: `(close, top_level_commas, nonblank)` where
+    /// `top_level_commas` counts `,` at depth 1 and `nonblank` is true
+    /// when the argument list has any token at all.  The PR 9 rules used
+    /// this to tell `Ticket::wait()` (no args) from `Condvar::wait(g)`.
+    pub fn call_args(&self, open: usize) -> Option<(usize, usize, bool)> {
+        let close = self.match_of(open)?;
+        if close <= open {
+            return None;
+        }
+        let mut commas = 0usize;
+        let mut i = open + 1;
+        while i < close {
+            if let Some(m) = self.match_of(i) {
+                if m > i {
+                    i = m + 1;
+                    continue;
+                }
+            }
+            if self.is_punct(i, ",") {
+                commas += 1;
+            }
+            i += 1;
+        }
+        Some((close, commas, close > open + 1))
+    }
+
+    /// Innermost function item whose body contains token `i`.
+    pub fn fn_of(&self, i: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| f.open < i && i < f.close)
+            .max_by_key(|f| f.open)
+    }
+
+    /// Is token `i` inside a `while`/`loop` block that itself sits inside
+    /// the same function as `i`?  (`for` is excluded on purpose: a `for`
+    /// body runs once per item and never re-tests a predicate.)
+    pub fn in_predicate_loop(&self, i: usize) -> bool {
+        let fn_open = self.fn_of(i).map(|f| f.open).unwrap_or(0);
+        self.blocks.iter().any(|b| {
+            matches!(b.kind, BlockKind::While | BlockKind::Loop)
+                && b.open >= fn_open
+                && b.open < i
+                && i < b.close
+        })
+    }
+
+    /// Is token `i` inside the condition/scrutinee span of an
+    /// `if`/`while`/`match` (between the keyword and its `{`)?
+    pub fn in_gating_span(&self, i: usize) -> bool {
+        self.blocks.iter().any(|b| {
+            matches!(b.kind, BlockKind::If | BlockKind::While | BlockKind::Match)
+                && b.kw.map(|k| k < i && i < b.open).unwrap_or(false)
+        })
+    }
+
+    /// The receiver chain segment before the `.` at token `dot`:
+    /// `self.ctx.counters.lock…` → `counters`; `cache().lock…` → `cache`;
+    /// `xs[i].lock…` → the ident before `[`.  `None` when unresolvable.
+    pub fn receiver_of(&self, dot: usize) -> Option<&str> {
+        if dot == 0 {
+            return None;
+        }
+        let mut i = dot - 1;
+        // Strip a trailing `()` or `[…]` group.
+        if self.is_punct(i, ")") || self.is_punct(i, "]") {
+            let open = self.match_of(i)?;
+            if open == 0 {
+                return None;
+            }
+            i = open - 1;
+        }
+        let t = self.toks.get(i)?;
+        if t.kind == TokKind::Ident {
+            Some(&t.text)
+        } else {
+            None
+        }
+    }
+
+    /// Token index of the start of the statement containing `i`: the
+    /// token right after the previous `;` / `{` / `}` at the same
+    /// nesting (closed groups are skipped whole).
+    pub fn stmt_start(&self, i: usize) -> usize {
+        let mut j = i;
+        while j > 0 {
+            let p = j - 1;
+            if let Some(m) = self.match_of(p) {
+                if m < p {
+                    // `p` closes a group: skip over it…
+                    if self.is_punct(p, "}") {
+                        // …unless it is a block end, which is a boundary.
+                        return j;
+                    }
+                    j = m;
+                    continue;
+                }
+            }
+            if self.is_punct(p, ";") || self.is_punct(p, "{") {
+                return j;
+            }
+            j = p;
+        }
+        0
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+/// Lex the sanitized text.  Never fails: unbalanced brackets simply end
+/// up unmatched, unknown bytes become single puncts.
+pub fn lex(s: &Sanitized) -> Tokens {
+    let text = s.text.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    while i < text.len() {
+        let c = text[i];
+        if (c as char).is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let kind = if is_ident_start(c) {
+            i += 1;
+            while i < text.len() && is_ident_cont(text[i]) {
+                i += 1;
+            }
+            TokKind::Ident
+        } else if c.is_ascii_digit() {
+            i += 1;
+            while i < text.len()
+                && (is_ident_cont(text[i])
+                    || (text[i] == b'.'
+                        && text.get(i + 1).map(|d| d.is_ascii_digit()).unwrap_or(false)))
+            {
+                i += 1;
+            }
+            TokKind::Number
+        } else if c == b'\''
+            && text.get(i + 1).map(|&d| is_ident_start(d)).unwrap_or(false)
+        {
+            // Lifetimes survive sanitization; char literals do not.
+            i += 1;
+            while i < text.len() && is_ident_cont(text[i]) {
+                i += 1;
+            }
+            TokKind::Lifetime
+        } else {
+            i += 1;
+            TokKind::Punct
+        };
+        toks.push(Tok {
+            kind,
+            text: String::from_utf8_lossy(&text[start..i]).into_owned(),
+            off: start,
+            line: s.line_of(start),
+        });
+    }
+
+    // Bracket matching.
+    let mut match_of = vec![NOT_MATCHED; toks.len()];
+    let mut stack: Vec<(u8, usize)> = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" => stack.push((b'(', k)),
+            "[" => stack.push((b'[', k)),
+            "{" => stack.push((b'{', k)),
+            ")" | "]" | "}" => {
+                let want = match t.text.as_str() {
+                    ")" => b'(',
+                    "]" => b'[',
+                    _ => b'{',
+                };
+                // Pop until the matching opener kind (tolerates typos in
+                // fixtures; real source is balanced).
+                while let Some((kind, open)) = stack.pop() {
+                    if kind == want {
+                        match_of[open] = k;
+                        match_of[k] = open;
+                        break;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Block classification + fn items.  A pending control keyword claims
+    // the next `{` at its own paren/bracket depth; `;` cancels it.  After
+    // `while let`/`if let`, braces before the `=` belong to the pattern
+    // and must not claim the keyword.
+    struct Pending {
+        kind: BlockKind,
+        kw: usize,
+        depth: usize,
+        saw_let: bool,
+        saw_eq: bool,
+    }
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut pending: Option<Pending> = None;
+    let mut pending_fn: Option<(String, usize)> = None; // (name, fn kw tok)
+    let mut awaiting_fn_name = false;
+    let mut depth = 0usize; // paren + bracket depth (not braces)
+    for (k, t) in toks.iter().enumerate() {
+        match t.kind {
+            TokKind::Ident => {
+                if awaiting_fn_name {
+                    pending_fn = Some((t.text.clone(), k));
+                    awaiting_fn_name = false;
+                    continue;
+                }
+                let ctrl = match t.text.as_str() {
+                    "while" => Some(BlockKind::While),
+                    "loop" => Some(BlockKind::Loop),
+                    "for" => Some(BlockKind::For),
+                    "if" => Some(BlockKind::If),
+                    "match" => Some(BlockKind::Match),
+                    _ => None,
+                };
+                if let Some(kind) = ctrl {
+                    // `for` in generic bounds (`for<'a>`) never reaches a
+                    // `{` at this depth before a `;`/deeper brace — safe.
+                    pending = Some(Pending {
+                        kind,
+                        kw: k,
+                        depth,
+                        saw_let: false,
+                        saw_eq: false,
+                    });
+                } else if t.text == "let" {
+                    if let Some(p) = pending.as_mut() {
+                        if !p.saw_eq {
+                            p.saw_let = true;
+                        }
+                    }
+                } else if t.text == "fn" {
+                    awaiting_fn_name = true;
+                }
+            }
+            TokKind::Punct => match t.text.as_str() {
+                "(" | "[" => {
+                    depth += 1;
+                    // `fn` as a type (`fn(u32) -> u32`) has no name ident.
+                    awaiting_fn_name = false;
+                }
+                ")" | "]" => depth = depth.saturating_sub(1),
+                ";" => {
+                    pending = None;
+                    pending_fn = None;
+                    awaiting_fn_name = false;
+                }
+                "=" => {
+                    if let Some(p) = pending.as_mut() {
+                        if p.depth == depth && !toks_is(&toks, k + 1, "=") {
+                            p.saw_eq = true;
+                        }
+                    }
+                }
+                "{" => {
+                    let close = match_of[k];
+                    let close = if close == NOT_MATCHED {
+                        toks.len().saturating_sub(1)
+                    } else {
+                        close
+                    };
+                    let claimed = match pending.as_ref() {
+                        Some(p) if p.depth == depth && (!p.saw_let || p.saw_eq) => true,
+                        _ => false,
+                    };
+                    if claimed {
+                        let p = pending.take().unwrap_or(Pending {
+                            kind: BlockKind::Other,
+                            kw: k,
+                            depth,
+                            saw_let: false,
+                            saw_eq: false,
+                        });
+                        blocks.push(Block {
+                            open: k,
+                            close,
+                            kind: p.kind,
+                            kw: Some(p.kw),
+                        });
+                    } else if let Some((name, _kw)) = pending_fn.take() {
+                        blocks.push(Block {
+                            open: k,
+                            close,
+                            kind: BlockKind::Fn,
+                            kw: None,
+                        });
+                        fns.push(FnItem {
+                            name,
+                            open: k,
+                            close,
+                            line: t.line,
+                        });
+                    } else {
+                        blocks.push(Block {
+                            open: k,
+                            close,
+                            kind: BlockKind::Other,
+                            kw: None,
+                        });
+                    }
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+
+    Tokens {
+        toks,
+        match_of,
+        blocks,
+        fns,
+    }
+}
+
+fn toks_is(toks: &[Tok], i: usize, s: &str) -> bool {
+    toks.get(i)
+        .map(|t| t.kind == TokKind::Punct && t.text == s)
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sanitize::sanitize;
+    use super::*;
+
+    fn lexed(src: &str) -> Tokens {
+        lex(&sanitize(src))
+    }
+
+    #[test]
+    fn idents_numbers_lifetimes_puncts() {
+        let t = lexed("fn f<'a>(x: &'a u32) -> u32 { x + 1.5 as u32 }\n");
+        let kinds: Vec<(TokKind, &str)> =
+            t.toks.iter().map(|t| (t.kind, t.text.as_str())).collect();
+        assert!(kinds.contains(&(TokKind::Lifetime, "'a")));
+        assert!(kinds.contains(&(TokKind::Number, "1.5")));
+        assert!(kinds.contains(&(TokKind::Ident, "fn")));
+        assert!(!t.toks.iter().any(|x| x.text.is_empty()));
+    }
+
+    #[test]
+    fn bracket_matching_and_call_args() {
+        let t = lexed("f(a, g(b, c), d);\n");
+        let open = t.toks.iter().position(|x| x.text == "(").unwrap();
+        let (close, commas, nonblank) = t.call_args(open).unwrap();
+        assert!(t.is_punct(close, ")"));
+        assert_eq!(commas, 2, "inner commas must not count");
+        assert!(nonblank);
+        let t2 = lexed("t.wait();\n");
+        let open2 = t2.toks.iter().position(|x| x.text == "(").unwrap();
+        let (_, commas2, nonblank2) = t2.call_args(open2).unwrap();
+        assert_eq!(commas2, 0);
+        assert!(!nonblank2);
+    }
+
+    #[test]
+    fn fn_items_and_blocks() {
+        let t = lexed("fn a() { while x { y(); } }\nfn b() { loop { z(); } }\n");
+        assert_eq!(t.fns.len(), 2);
+        assert_eq!(t.fns[0].name, "a");
+        assert_eq!(t.fns[1].name, "b");
+        assert!(t
+            .blocks
+            .iter()
+            .any(|b| b.kind == BlockKind::While && b.kw.is_some()));
+        assert!(t.blocks.iter().any(|b| b.kind == BlockKind::Loop));
+        let y = t.toks.iter().position(|x| x.text == "y").unwrap();
+        assert!(t.in_predicate_loop(y));
+        assert_eq!(t.fn_of(y).unwrap().name, "a");
+    }
+
+    #[test]
+    fn loop_detection_stops_at_fn_boundary() {
+        // An fn item nested inside a loop: its body is NOT "in" the loop.
+        let t = lexed("fn outer() { loop { fn inner() { w(); } } }\n");
+        let w = t.toks.iter().position(|x| x.text == "w").unwrap();
+        assert_eq!(t.fn_of(w).unwrap().name, "inner");
+        assert!(!t.in_predicate_loop(w));
+    }
+
+    #[test]
+    fn closure_brace_in_condition_is_not_the_loop_body() {
+        let t = lexed("fn f() { while xs.iter().any(|v| { v.is_x() }) { body(); } }\n");
+        let body = t.toks.iter().position(|x| x.text == "body").unwrap();
+        assert!(t.in_predicate_loop(body));
+        let isx = t.toks.iter().position(|x| x.text == "is_x").unwrap();
+        // The closure brace must be Other, not While.
+        let w: Vec<&Block> = t
+            .blocks
+            .iter()
+            .filter(|b| b.kind == BlockKind::While)
+            .collect();
+        assert_eq!(w.len(), 1);
+        assert!(t.in_gating_span(isx), "condition span covers the closure");
+    }
+
+    #[test]
+    fn while_let_pattern_braces_do_not_claim_the_loop() {
+        let t = lexed("fn f() { while let St { a } = next() { body(); } }\n");
+        let body = t.toks.iter().position(|x| x.text == "body").unwrap();
+        assert!(t.in_predicate_loop(body));
+    }
+
+    #[test]
+    fn gating_spans() {
+        let t = lexed("fn f() { if x.load(o) { a(); } let y = x.load(o); }\n");
+        let first = t.toks.iter().position(|x| x.text == "load").unwrap();
+        assert!(t.in_gating_span(first));
+        let second = t.toks.iter().rposition(|x| x.text == "load").unwrap();
+        assert!(!t.in_gating_span(second));
+    }
+
+    #[test]
+    fn receiver_resolution() {
+        let t = lexed("self.ctx.counters.lock_or_recover();\ncache().lock();\nxs[i].read();\n");
+        let dots: Vec<usize> = t
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(i, x)| x.text == "." && t.is_ident(i + 1, "lock_or_recover"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(t.receiver_of(dots[0]), Some("counters"));
+        let lock_dot = t
+            .toks
+            .iter()
+            .enumerate()
+            .position(|(i, x)| x.text == "." && t.is_ident(i + 1, "lock"))
+            .unwrap();
+        assert_eq!(t.receiver_of(lock_dot), Some("cache"));
+        let read_dot = t
+            .toks
+            .iter()
+            .enumerate()
+            .position(|(i, x)| x.text == "." && t.is_ident(i + 1, "read"))
+            .unwrap();
+        assert_eq!(t.receiver_of(read_dot), Some("xs"));
+    }
+
+    #[test]
+    fn stmt_start_walks_over_groups() {
+        let t = lexed("fn f() { a(); let g = m.lock(); }\n");
+        let lock = t.toks.iter().position(|x| x.text == "lock").unwrap();
+        let start = t.stmt_start(lock);
+        assert!(t.is_ident(start, "let"), "got {:?}", t.text(start));
+    }
+}

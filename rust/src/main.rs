@@ -105,9 +105,14 @@ USAGE: sonic <subcommand> [options]
                                         --replicas/--chaos the self-serve side
                                         is a cluster under fault injection
   lint      [paths...] [--rules a,b] [--json] [--list-rules]
+            [--baseline findings.json] [--lock-graph]
                                         repo-invariant static analysis (see
                                         src/analysis/README.md); exits non-zero
                                         on any finding — CI gates on it
+                                        (--baseline: subtract a prior --json
+                                        report so a new rule can land warn-first;
+                                        --lock-graph: dump the derived
+                                        whole-crate lock graph and exit)
   compare   [--models a,b,...]          Figs. 8-10 platform comparison
   dse       [--models a,b,...]          (n,m,N,K) design-space exploration
   ablation  [--model <m>]               co-design lever ablation
@@ -433,11 +438,16 @@ fn cmd_lint(argv: &[String]) -> Result<()> {
         OptSpec { name: "rules", takes_value: true, help: "comma-separated rule subset" },
         OptSpec { name: "json", takes_value: false, help: "machine-readable report" },
         OptSpec { name: "list-rules", takes_value: false, help: "print the rule catalog" },
+        OptSpec { name: "baseline", takes_value: true, help: "prior --json report; matching findings are absorbed (warn-first mode for new rules)" },
+        OptSpec { name: "lock-graph", takes_value: false, help: "dump the derived whole-crate lock graph and exit" },
     ];
     let a = Args::parse(argv, &specs)?;
     if a.flag("list-rules") {
         for (name, summary, _) in sonic::analysis::RULES {
             println!("{name:<28} {summary}");
+        }
+        for (name, summary, _) in sonic::analysis::CRATE_RULES {
+            println!("{name:<28} {summary} [whole-crate]");
         }
         return Ok(());
     }
@@ -446,18 +456,50 @@ fn cmd_lint(argv: &[String]) -> Result<()> {
         None => Vec::new(),
     };
     for r in &enabled {
-        if !sonic::analysis::RULES.iter().any(|(n, _, _)| n == r) {
+        if !sonic::analysis::known_rule(r) {
             bail!("unknown rule `{r}` (try --list-rules)");
         }
     }
     let roots: Vec<std::path::PathBuf> =
         a.positional.iter().map(std::path::PathBuf::from).collect();
-    let findings = sonic::analysis::lint_paths(&roots, &enabled)
+    if a.flag("lock-graph") {
+        let files = sonic::analysis::read_tree(&roots)
+            .map_err(|e| sonic::util::err::Error::msg(format!("lint scan failed: {e}")))?;
+        let views: Vec<_> = files
+            .iter()
+            .map(|(p, src)| {
+                let s = sonic::analysis::sanitize::sanitize(src);
+                let t = sonic::analysis::tokens::lex(&s);
+                (p.clone(), s, t)
+            })
+            .collect();
+        let fviews: Vec<sonic::analysis::graph::FileView> = views
+            .iter()
+            .map(|(p, s, t)| sonic::analysis::graph::FileView { path: p, s, t })
+            .collect();
+        let g = sonic::analysis::graph::build_lock_graph(&fviews);
+        print!("{}", sonic::analysis::graph::render_lock_graph(&g));
+        return Ok(());
+    }
+    let mut findings = sonic::analysis::lint_paths(&roots, &enabled)
         .map_err(|e| sonic::util::err::Error::msg(format!("lint scan failed: {e}")))?;
+    let mut absorbed = 0usize;
+    if let Some(baseline_path) = a.get("baseline") {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| sonic::util::err::Error::msg(format!("read {baseline_path}: {e}")))?;
+        let baseline = sonic::util::json::Json::parse(&text)
+            .map_err(|e| sonic::util::err::Error::msg(format!("parse {baseline_path}: {e:?}")))?;
+        let (kept, n) = sonic::analysis::apply_baseline(findings, &baseline);
+        findings = kept;
+        absorbed = n;
+    }
     if a.flag("json") {
         println!("{}", sonic::analysis::render_json(&findings));
     } else {
         print!("{}", sonic::analysis::render_text(&findings));
+        if absorbed > 0 {
+            println!("sonic lint: {absorbed} finding(s) absorbed by baseline");
+        }
     }
     if findings.is_empty() {
         if !a.flag("json") {

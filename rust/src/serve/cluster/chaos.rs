@@ -273,34 +273,36 @@ impl FaultState {
     }
 
     pub fn kill(&self) {
-        self.killed.store(true, Ordering::SeqCst);
+        // Release/Acquire pair with `is_killed`: a replica observing the
+        // kill also observes whatever the chaos driver wrote before it.
+        self.killed.store(true, Ordering::Release);
     }
 
     pub fn revive(&self) {
-        self.killed.store(false, Ordering::SeqCst);
+        self.killed.store(false, Ordering::Release);
     }
 
     pub fn is_killed(&self) -> bool {
-        self.killed.load(Ordering::SeqCst)
+        self.killed.load(Ordering::Acquire)
     }
 
     pub fn stall_for(&self, dur: Duration) {
         let until = self.epoch.elapsed().saturating_add(dur);
         self.stall_until_ns
-            .store(until.as_nanos().min(u64::MAX as u128) as u64, Ordering::SeqCst);
+            .store(until.as_nanos().min(u64::MAX as u128) as u64, Ordering::Release);
     }
 
     pub fn set_slow(&self, mult: f64) {
         self.slow_milli
-            .store((mult.max(1.0) * 1000.0) as u64, Ordering::SeqCst);
+            .store((mult.max(1.0) * 1000.0) as u64, Ordering::Release);
     }
 
     pub fn clear_slow(&self) {
-        self.slow_milli.store(1000, Ordering::SeqCst);
+        self.slow_milli.store(1000, Ordering::Release);
     }
 
     fn slow_mult(&self) -> f64 {
-        self.slow_milli.load(Ordering::SeqCst) as f64 / 1000.0
+        self.slow_milli.load(Ordering::Acquire) as f64 / 1000.0
     }
 
     pub(crate) fn apply(&self, act: Action) {
@@ -321,7 +323,7 @@ impl FaultState {
             if self.is_killed() {
                 bail!("replica killed (chaos)");
             }
-            let until_ns = self.stall_until_ns.load(Ordering::SeqCst);
+            let until_ns = self.stall_until_ns.load(Ordering::Acquire);
             let now_ns = self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             if now_ns >= until_ns {
                 return Ok(());

@@ -371,13 +371,19 @@ impl Ctx {
         if pool.len() == 1 {
             return Some(pool[0]);
         }
-        // power of two choices: two independent picks, lower load wins
+        // Power of two choices: two independent picks, lower in-flight
+        // count wins.  The paired Relaxed loads are deliberately racy —
+        // the gauge is a routing heuristic, and a stale read at worst
+        // sends one request to the busier of two *healthy* replicas.
+        // Health gating above is what keeps Dead replicas out of `pool`
+        // (pinned by the `routing_never_picks_dead_replica` test).
         let (a, b) = {
             let mut rng = self.rng.lock_or_recover();
             (pool[rng.range(0, pool.len())], pool[rng.range(0, pool.len())])
         };
-        let load = |i: usize| self.replicas[i].inflight.load(Ordering::Relaxed);
-        Some(if load(b) < load(a) { b } else { a })
+        // sonic-lint: allow(atomic-ordering): racy power-of-two tie-break; a stale inflight read only misroutes between healthy replicas
+        let b_wins = self.replicas[b].inflight.load(Ordering::Relaxed) < self.replicas[a].inflight.load(Ordering::Relaxed);
+        Some(if b_wins { b } else { a })
     }
 
     fn remaining(&self, deadline: Option<Instant>, now: Instant) -> Option<Duration> {
@@ -593,7 +599,7 @@ impl ClusterEngine {
     }
 
     pub fn is_stopping(&self) -> bool {
-        self.ctx.stopping.load(Ordering::SeqCst)
+        self.ctx.stopping.load(Ordering::Acquire)
     }
 
     /// Current health of every replica, by index.
@@ -826,7 +832,9 @@ impl ClusterEngine {
     /// engine.  Idempotent.
     pub fn shutdown(&self) {
         let _g = self.shutdown_lock.lock_or_recover();
-        if !self.ctx.stopping.swap(true, Ordering::SeqCst) {
+        // AcqRel: the winning caller both publishes shutdown and observes
+        // everything published before any earlier (losing) attempt.
+        if !self.ctx.stopping.swap(true, Ordering::AcqRel) {
             self.ctx.wake.notify_all();
             let threads: Vec<JoinHandle<()>> = self.threads.lock_or_recover().drain(..).collect();
             for h in threads {
@@ -854,7 +862,7 @@ impl Drop for ClusterEngine {
 fn supervisor_loop(ctx: Arc<Ctx>) {
     let mut guard = ctx.state.lock_or_recover();
     loop {
-        let stopping = ctx.stopping.load(Ordering::SeqCst);
+        let stopping = ctx.stopping.load(Ordering::Acquire);
         // chaos timeline: flip the fault switches whose time has come
         // (not while draining — the run is over)
         if !stopping {
@@ -1086,7 +1094,7 @@ fn heartbeat_loop(ctx: Arc<Ctx>) {
         .input_len(&ctx.model)
         .expect("registered model");
     let mut next = Instant::now() + ctx.health.probe_interval;
-    while !ctx.stopping.load(Ordering::SeqCst) {
+    while !ctx.stopping.load(Ordering::Acquire) {
         let now = Instant::now();
         if now < next {
             std::thread::sleep((next - now).min(Duration::from_millis(10)));
@@ -1094,7 +1102,7 @@ fn heartbeat_loop(ctx: Arc<Ctx>) {
         }
         next = now + ctx.health.probe_interval;
         for r in &ctx.replicas {
-            if ctx.stopping.load(Ordering::SeqCst) {
+            if ctx.stopping.load(Ordering::Acquire) {
                 return;
             }
             if r.tracker.health() == Health::Healthy {

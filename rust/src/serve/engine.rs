@@ -304,7 +304,9 @@ impl Engine {
         opts: SubmitOptions,
         block: bool,
     ) -> Result<Option<Ticket>> {
-        if self.stopping.load(Ordering::SeqCst) {
+        // Acquire pairs with shutdown()'s AcqRel swap: once observed
+        // true, everything shutdown published before the swap is visible.
+        if self.stopping.load(Ordering::Acquire) {
             bail!("engine is shut down");
         }
         let entry = self.entry(model)?;
@@ -326,7 +328,13 @@ impl Engine {
                 // could already be gone) — retract it and report the
                 // shutdown.  If a worker already popped it, it will be
                 // executed and the ticket resolves normally.
-                if self.stopping.load(Ordering::SeqCst) && entry.router.retract(id) {
+                // Acquire/Release (not SeqCst) is enough for this
+                // double-check: both sides funnel through the slots
+                // mutex, and single-variable coherence on `stopping`
+                // means a false load here happens-before the AcqRel
+                // swap in shutdown() — so shutdown's sweep cannot have
+                // missed the slot registered above.
+                if self.stopping.load(Ordering::Acquire) && entry.router.retract(id) {
                     entry.shared.slots.lock_or_recover().remove(&id);
                     bail!("engine is shut down");
                 }
@@ -441,7 +449,7 @@ impl Engine {
     /// network edge's drain sequence polls this so connection handlers
     /// stop advertising keep-alive as soon as the engine is going away.
     pub fn is_stopping(&self) -> bool {
-        self.stopping.load(Ordering::SeqCst)
+        self.stopping.load(Ordering::Acquire)
     }
 
     /// Graceful shutdown: stop accepting new requests, drain every queued
@@ -452,7 +460,11 @@ impl Engine {
         // blocks here until shutdown has fully completed, then sees the
         // stopping flag and returns with the metrics frozen.
         let _guard = self.shutdown_lock.lock_or_recover();
-        if self.stopping.swap(true, Ordering::SeqCst) {
+        // AcqRel: Release publishes the pre-shutdown state to submitters
+        // that observe the flag; Acquire makes a losing second caller see
+        // the winner's writes (belt-and-braces — the shutdown_lock above
+        // already serializes callers).
+        if self.stopping.swap(true, Ordering::AcqRel) {
             return; // another caller already completed shutdown
         }
         for entry in self.models.values() {
@@ -508,7 +520,7 @@ fn worker_loop(router: Arc<Router>, shared: Arc<ModelShared>, stopping: Arc<Atom
         }
         let batch = popped.batch;
         if batch.is_empty() {
-            if stopping.load(Ordering::SeqCst) && router.queue_depth() == 0 {
+            if stopping.load(Ordering::Acquire) && router.queue_depth() == 0 {
                 return;
             }
             continue;
@@ -763,7 +775,7 @@ impl EngineBuilder {
             }
         }
         if let Some(e) = spawn_err {
-            stopping.store(true, Ordering::SeqCst);
+            stopping.store(true, Ordering::Release);
             for entry in models.values() {
                 entry.router.close();
             }

@@ -190,7 +190,7 @@ struct Shared {
 
 impl Shared {
     fn draining(&self) -> bool {
-        self.stopping.load(Ordering::SeqCst) || self.engine.is_stopping()
+        self.stopping.load(Ordering::Acquire) || self.engine.is_stopping()
     }
 }
 
@@ -296,7 +296,7 @@ impl NetServer {
     /// this server is expected to poll this and call the blocking
     /// [`NetServer::shutdown`] to finish the drain.
     pub fn drain_requested(&self) -> bool {
-        self.shared.drain_requested.load(Ordering::SeqCst)
+        self.shared.drain_requested.load(Ordering::Acquire)
     }
 
     /// Graceful drain: stop accepting (new connections are refused once
@@ -305,7 +305,8 @@ impl NetServer {
     /// within [`NetConfig::drain_timeout`].  Idempotent; does NOT shut
     /// down the engine.
     pub fn shutdown(&self) -> bool {
-        self.shared.stopping.store(true, Ordering::SeqCst);
+        // Release pairs with the accept-loop's Acquire load.
+        self.shared.stopping.store(true, Ordering::Release);
         // Wake the accept loop: it blocks in accept(), so poke it with a
         // throwaway connection, then join and drop the listener so the OS
         // refuses new connections from here on.
@@ -349,13 +350,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, pool: Arc<Pool>) {
         let stream = match listener.accept() {
             Ok((stream, _)) => stream,
             Err(_) => {
-                if shared.stopping.load(Ordering::SeqCst) {
+                if shared.stopping.load(Ordering::Acquire) {
                     return;
                 }
                 continue;
             }
         };
-        if shared.stopping.load(Ordering::SeqCst) {
+        if shared.stopping.load(Ordering::Acquire) {
             // the shutdown wake-up poke, or a client racing the drain
             drop(stream);
             return;
@@ -861,8 +862,8 @@ fn process_http(shared: &Shared, req: Request) -> Outstanding {
                     obj(vec![("error", s("drain requires an admin-tier api key"))]),
                 );
             }
-            shared.stopping.store(true, Ordering::SeqCst);
-            shared.drain_requested.store(true, Ordering::SeqCst);
+            shared.stopping.store(true, Ordering::Release);
+            shared.drain_requested.store(true, Ordering::Release);
             ready(200, obj(vec![("status", s("draining"))]))
         }
         ("POST", path) => {

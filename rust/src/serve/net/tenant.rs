@@ -181,7 +181,11 @@ impl Tenant {
         if !self.bucket.lock_or_recover().try_take(now) {
             return Err(Refusal::RateLimited);
         }
-        // optimistic increment; back out when over the share
+        // optimistic increment; back out when over the share.  SeqCst is
+        // deliberate: the increment-then-check-then-undo dance is an
+        // admission invariant across concurrent admit/release callers, and
+        // the count itself is the protocol — weaker orderings would let a
+        // racing release reorder past the cap check.
         let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
         if prev >= self.inflight_cap {
             self.inflight.fetch_sub(1, Ordering::SeqCst);

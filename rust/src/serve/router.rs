@@ -598,7 +598,7 @@ impl Router {
             // Re-check on every wake: after close() no worker will ever
             // pop again, so a submitter blocked on a full queue must bail
             // out instead of waiting forever.
-            if self.closed.load(Ordering::SeqCst) {
+            if self.closed.load(Ordering::Acquire) {
                 bail!("engine is shut down");
             }
             if !block {
@@ -641,7 +641,9 @@ impl Router {
     /// blocked on the queue: idle workers return from `pop_batch` and
     /// drain whatever is left without straggler waits.
     pub(crate) fn close(&self) {
-        self.closed.store(true, Ordering::SeqCst);
+        // Release pairs with the Acquire loads in submit/pop paths; the
+        // queue mutex taken right after already orders the wakeups.
+        self.closed.store(true, Ordering::Release);
         let _q = self.queue.lock_or_recover();
         self.notify.notify_all();
     }
@@ -654,7 +656,7 @@ impl Router {
     /// are slower than the window (waiting would buy latency, not
     /// batching).
     fn window_for(&self, q: &LaneQueues) -> Duration {
-        if self.closed.load(Ordering::SeqCst) || q.len >= self.cfg.max_batch {
+        if self.closed.load(Ordering::Acquire) || q.len >= self.cfg.max_batch {
             return Duration::ZERO;
         }
         if !self.cfg.adaptive_window {
@@ -683,7 +685,7 @@ impl Router {
     pub(crate) fn pop_batch(&self) -> Popped {
         let mut out = Popped::default();
         let mut q = self.queue.lock_or_recover();
-        while q.len == 0 && !self.closed.load(Ordering::SeqCst) {
+        while q.len == 0 && !self.closed.load(Ordering::Acquire) {
             q = self.notify.wait_or_recover(q);
         }
         let deadline = Instant::now() + self.window_for(&q);
@@ -708,7 +710,7 @@ impl Router {
             // should resolve now, not after a straggler wait.
             if out.batch.len() >= self.cfg.max_batch
                 || out.batch.is_empty()
-                || self.closed.load(Ordering::SeqCst)
+                || self.closed.load(Ordering::Acquire)
                 || Instant::now() >= deadline
             {
                 break;

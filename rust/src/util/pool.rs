@@ -55,7 +55,10 @@ impl Pool {
                             let _ = std::panic::catch_unwind(
                                 std::panic::AssertUnwindSafe(j),
                             );
-                            inf.fetch_sub(1, Ordering::SeqCst);
+                            // Release publishes the job's side effects to
+                            // whoever observes the count hit zero (drain's
+                            // Acquire load in `pending`).
+                            inf.fetch_sub(1, Ordering::Release);
                         }
                         Err(_) => break, // channel closed
                     }
@@ -77,12 +80,13 @@ impl Pool {
     /// caller's thread.  Jobs already queued still run; `close` does not
     /// join the workers (dropping the pool does).  Idempotent.
     pub fn close(&self) {
-        self.closed.store(true, Ordering::SeqCst);
+        // Release pairs with the Acquire loads in the submit paths.
+        self.closed.store(true, Ordering::Release);
     }
 
     /// `true` after [`Pool::close`].
     pub fn is_closed(&self) -> bool {
-        self.closed.load(Ordering::SeqCst)
+        self.closed.load(Ordering::Acquire)
     }
 
     /// Number of worker threads (the natural shard count for
@@ -97,20 +101,23 @@ impl Pool {
     /// whether to drop it or run it inline ([`Pool::scoped`] does the
     /// latter so its barrier contract holds).
     fn submit_boxed(&self, job: Job) -> Result<(), Job> {
-        if self.closed.load(Ordering::SeqCst) {
+        if self.closed.load(Ordering::Acquire) {
             return Err(job);
         }
         let Some(tx) = self.tx.as_ref() else {
             return Err(job);
         };
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        // Relaxed: the increment races only against its own decrement;
+        // the channel send is what hands the job off.
+        // sonic-lint: allow(atomic-ordering): gauge increment, handoff is the channel send
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
         match tx.send(job) {
             Ok(()) => Ok(()),
             // Workers gone (all exited): hand the job back rather than
             // aborting the process — the old `.expect("workers gone")`
             // turned a shutdown race into an abort.
             Err(e) => {
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
                 Err(e.0)
             }
         }
@@ -129,24 +136,27 @@ impl Pool {
     /// closed — same no-op contract as [`Pool::submit`]).
     #[must_use = "the job is dropped unrun when the pool is closed or saturated"]
     pub fn try_submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
-        if self.closed.load(Ordering::SeqCst) {
+        if self.closed.load(Ordering::Acquire) {
             return false;
         }
         let Some(tx) = self.tx.as_ref() else {
             return false;
         };
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        // sonic-lint: allow(atomic-ordering): gauge increment, handoff is the channel send
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
         match tx.try_send(Box::new(f)) {
             Ok(()) => true,
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
                 false
             }
         }
     }
 
     pub fn pending(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        // Acquire pairs with the workers' Release decrement so that a
+        // drain() seeing zero also sees every job's writes.
+        self.in_flight.load(Ordering::Acquire)
     }
 
     /// Wait until every submitted job has completed.
@@ -186,7 +196,8 @@ impl Pool {
         impl Drop for Guard {
             fn drop(&mut self) {
                 if std::thread::panicking() {
-                    self.0.panicked.store(true, Ordering::SeqCst);
+                    // Release pairs with the post-barrier Acquire check.
+                    self.0.panicked.store(true, Ordering::Release);
                 }
                 let mut left = self.0.left.lock_or_recover();
                 *left -= 1;
@@ -220,7 +231,7 @@ impl Pool {
             left = state.done.wait_or_recover(left);
         }
         drop(left);
-        if state.panicked.load(Ordering::SeqCst) {
+        if state.panicked.load(Ordering::Acquire) {
             panic!("scoped pool job panicked");
         }
     }

@@ -364,6 +364,77 @@ fn kill_one_of_three_mid_load_every_ticket_resolves() {
 }
 
 #[test]
+fn routing_never_picks_dead_replica() {
+    // Regression for the power-of-two-choices tie-break: its paired
+    // Relaxed `inflight` loads are deliberately racy (see the pragma in
+    // `pick_replica`), and this pins the property that makes the race
+    // benign — health gating, not the load comparison, decides which
+    // replicas are routable at all.  Once a replica is Dead it must
+    // receive zero further request tries (probes are counted separately
+    // and keep flowing — they are the path back to life).
+    let cluster = ClusterEngine::build_with(
+        mnist(),
+        ClusterConfig {
+            replicas: 3,
+            serve: fast_serve(),
+            retry: fast_retry(),
+            health: HealthPolicy {
+                degraded_after: 1,
+                dead_after: 2,
+                probe_interval: Duration::from_millis(5),
+                probe_timeout: Duration::from_millis(20),
+                ..HealthPolicy::default()
+            },
+            ..ClusterConfig::default()
+        },
+        null_factory(),
+    )
+    .unwrap();
+    // Replica 2 is dark before any traffic arrives.
+    cluster.fault(2).kill();
+    // Phase 1: drive traffic until health demotes it to Dead (the first
+    // few tries may legitimately land there while it still looks alive).
+    let deadline = Instant::now() + WATCHDOG;
+    while cluster.health()[2] != Health::Dead {
+        assert!(Instant::now() < deadline, "replica 2 never went Dead");
+        let t = cluster.submit("mnist", vec![0.5; 784]).unwrap();
+        let _ = t.wait_timeout(WATCHDOG).unwrap();
+    }
+    // Every phase-1 ticket is resolved, so no request try is still in
+    // flight; give any metrics straggler a beat, then snapshot.
+    std::thread::sleep(Duration::from_millis(10));
+    let tries_when_dead = cluster.metrics().replicas[2].tries;
+    // Phase 2: with the replica Dead, routing must never pick it again.
+    let mut tickets = Vec::with_capacity(80);
+    for _ in 0..80 {
+        tickets.push(cluster.submit("mnist", vec![0.5; 784]).unwrap());
+    }
+    for t in &tickets {
+        let c = t
+            .wait_timeout(WATCHDOG)
+            .unwrap()
+            .unwrap_or_else(|| panic!("hung ticket {} — watchdog fired", t.id()));
+        assert!(c.served(), "healthy majority must serve while r2 is dead");
+    }
+    assert_eq!(
+        cluster.health()[2],
+        Health::Dead,
+        "kill is permanent — r2 must stay Dead under load"
+    );
+    cluster.shutdown();
+    let m = cluster.metrics();
+    assert_eq!(
+        m.replicas[2].tries, tries_when_dead,
+        "routing picked a Dead replica: {} request tries landed on r2 after death",
+        m.replicas[2].tries - tries_when_dead
+    );
+    assert!(
+        m.replicas[2].probes > 0,
+        "probes must keep flowing to a Dead replica (they are the revival path)"
+    );
+}
+
+#[test]
 fn energy_is_charged_only_for_executed_work() {
     // replica 0 is dark from t=0 (permanent chaos kill) and probes are
     // effectively disabled, so any energy on r0 could only come from a
